@@ -1,0 +1,74 @@
+//! Quickstart: generate a small community graph, run Fast-Node2Vec walks
+//! on the Pregel engine, train SGNS embeddings through the AOT PJRT
+//! runtime, and inspect nearest neighbors.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use fastn2v::embed::TrainConfig;
+use fastn2v::exp::pipeline::embeddings_from_walks;
+use fastn2v::gen::{labeled_community_graph, LabeledConfig};
+use fastn2v::graph::partition::Partitioner;
+use fastn2v::node2vec::{run_walks, FnConfig, Variant};
+use fastn2v::pregel::EngineOpts;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A 600-vertex graph with 6 planted communities.
+    let lg = labeled_community_graph(&LabeledConfig::tiny(42));
+    let stats = lg.graph.stats();
+    println!(
+        "graph: |V|={} |E|={} max degree {}",
+        stats.num_vertices, stats.num_edges, stats.max_degree
+    );
+
+    // 2. Node2Vec walks with the FN-Cache variant on 4 workers.
+    let cfg = FnConfig::new(0.5, 2.0, 7)
+        .with_walk_length(40)
+        .with_variant(Variant::Cache)
+        .with_popular_threshold(64);
+    let out = run_walks(
+        &lg.graph,
+        Partitioner::hash(4),
+        &cfg,
+        EngineOpts::default(),
+        1,
+    )?;
+    println!(
+        "walks: {} supersteps, {} messages, peak msg mem {}",
+        out.metrics.num_supersteps(),
+        out.metrics.total_messages(),
+        fastn2v::util::fmt_bytes(out.metrics.peak_msg_bytes()),
+    );
+
+    // 3. SGNS embeddings (PJRT runtime if `make artifacts` has run).
+    let tcfg = TrainConfig {
+        steps: 800,
+        log_every: 200,
+        ..Default::default()
+    };
+    let emb = embeddings_from_walks(&out.walks, lg.graph.num_vertices(), &tcfg)?;
+    println!("embedding backend: {}", emb.backend);
+    for p in &emb.loss_curve {
+        println!("  step {:>5}  loss {:.4}", p.step, p.loss);
+    }
+
+    // 4. Nearest neighbors should share a community with the query vertex.
+    let v = 0usize;
+    println!(
+        "vertex {v} communities {:?}; nearest neighbors:",
+        lg.labels[v]
+    );
+    let mut shared = 0;
+    let nn = fastn2v::embed::nearest(&emb.embeddings, v, 5);
+    for (u, sim) in &nn {
+        let shares = lg.labels[*u].iter().any(|l| lg.labels[v].contains(l));
+        shared += shares as usize;
+        println!(
+            "  vertex {u:>4} cosine {sim:.3} communities {:?} shared={shares}",
+            lg.labels[*u]
+        );
+    }
+    println!("{shared}/5 neighbors share a community with vertex {v}");
+    Ok(())
+}

@@ -1,0 +1,33 @@
+//! Scalability sweep (paper Figures 9–11): FN-Base vs C-Node2Vec on ER-K
+//! and the FN family on WeC-K, with the simulated single-machine memory
+//! budget producing C-Node2Vec's OOM point.
+//!
+//! ```bash
+//! cargo run --release --example scalability [-- --quick]
+//! ```
+
+use fastn2v::exp::common::Scale;
+use fastn2v::exp::figures;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let scale = Scale::from_flag(quick);
+    let er = figures::fig9(scale, 42);
+    // Linearity check: seconds per vertex should be roughly constant for
+    // FN-Base across the sweep (paper: linear scaling on the log-log plot).
+    let fn_base: Vec<(u32, f64)> = er
+        .iter()
+        .filter_map(|(k, name, secs)| match (name, secs) {
+            (&"FN-Base", &Some(s)) => Some((*k, s)),
+            _ => None,
+        })
+        .collect();
+    if fn_base.len() >= 2 {
+        println!("\nFN-Base seconds per million vertices:");
+        for (k, secs) in &fn_base {
+            let per_m = secs / ((1u64 << k) as f64 / 1e6);
+            println!("  ER-{k}: {per_m:.2} s/M vertices");
+        }
+    }
+    figures::fig10(scale, 42);
+}

@@ -1,0 +1,29 @@
+//! Skew analysis (paper §4.6, Figures 12–14): how degree skew drives the
+//! benefit of the popular-vertex optimizations.
+//!
+//! ```bash
+//! cargo run --release --example skew_analysis [-- --quick]
+//! ```
+
+use fastn2v::exp::common::Scale;
+use fastn2v::exp::figures;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let scale = Scale::from_flag(quick);
+    figures::fig12(scale, 42);
+    let rows = figures::fig13(scale, 42);
+    figures::fig14(scale, 42);
+
+    println!("\nSpeedup trend (paper: grows with S):");
+    for r in rows {
+        println!(
+            "  Skew-{} p={} q={}: cache {:.2}x approx {:.2}x",
+            r.s,
+            r.p,
+            r.q,
+            r.base_secs / r.cache_secs,
+            r.base_secs / r.approx_secs
+        );
+    }
+}

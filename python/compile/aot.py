@@ -1,0 +1,76 @@
+"""AOT export: lower the L2 train step to HLO text artifacts.
+
+HLO *text* is the interchange format (NOT `lowered.compile()` /
+`.serialize()`): jax >= 0.5 emits HloModuleProto with 64-bit instruction
+ids, which the xla crate's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts
+
+Produces `sgns_<name>.hlo.txt` per shape variant plus `manifest.txt` with
+lines `name V D B K filename` the Rust runtime reads to pick a variant.
+"""
+
+import argparse
+import os
+
+from jax._src.lib import xla_client as xc
+
+from .model import lower_train_step_fused
+
+# Shape variants: (name, V, D, B, K).
+#   tiny  — quickstart/test-sized graphs (<= 2048 vertices)
+#   base  — BlogCatalog-scale graphs (<= 16384 vertices), paper's D = 128
+VARIANTS = [
+    ("tiny", 2048, 64, 256, 5),
+    ("base", 16384, 128, 1024, 5),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser).
+
+    return_tuple=False keeps the three outputs (w_in', w_out', loss) as
+    separate PJRT output buffers on the Rust side, so the embedding tables
+    can stay device-resident across steps via `execute_b`.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def build_all(out_dir: str, variants=None) -> list:
+    os.makedirs(out_dir, exist_ok=True)
+    rows = []
+    for name, v, d, b, k in variants or VARIANTS:
+        lowered = lower_train_step_fused(v, d, b, k)
+        text = to_hlo_text(lowered)
+        fname = f"sgns_{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        rows.append((name, v, d, b, k, fname))
+        print(f"wrote {fname}: V={v} D={d} B={b} K={k} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("# name V D B K file\n")
+        for row in rows:
+            f.write(" ".join(str(x) for x in row) + "\n")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="(compat) ignored if --out-dir set")
+    args = ap.parse_args()
+    out_dir = args.out_dir
+    if args.out is not None and args.out_dir == "../artifacts":
+        out_dir = os.path.dirname(args.out) or "."
+    build_all(out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the SGNS (skip-gram negative sampling) kernel.
+
+This is the L1 correctness reference: `sgns_grads_ref` computes the exact
+loss and gradients the Pallas kernel must reproduce. Math (Mikolov et al.,
+2013; the optimization stage of Node2Vec):
+
+    loss_b  = -log sigma(c_b . o_b) - sum_k log sigma(-c_b . n_bk)
+    d_c     = (sigma(c.o) - 1) * o + sum_k sigma(c.n_k) * n_k
+    d_o     = (sigma(c.o) - 1) * c
+    d_n_k   = sigma(c.n_k) * c
+
+Shapes: c, o are (B, D); n is (B, K, D). All float32.
+"""
+
+import jax.numpy as jnp
+
+
+def _softplus(x):
+    # Numerically stable log(1 + exp(x)).
+    return jnp.logaddexp(0.0, x)
+
+
+def sgns_grads_ref(c, o, n):
+    """Reference loss + gradients.
+
+    Args:
+      c: (B, D) center embeddings.
+      o: (B, D) positive context embeddings.
+      n: (B, K, D) negative-sample embeddings.
+
+    Returns:
+      (dc, do, dn, loss): gradients matching the input shapes and a (B,)
+      per-sample loss.
+    """
+    pos = jnp.sum(c * o, axis=-1)  # (B,)
+    neg = jnp.einsum("bd,bkd->bk", c, n)  # (B, K)
+    sig_pos = 1.0 / (1.0 + jnp.exp(-pos))
+    sig_neg = 1.0 / (1.0 + jnp.exp(-neg))
+    gp = sig_pos - 1.0  # (B,)
+    dc = gp[:, None] * o + jnp.einsum("bk,bkd->bd", sig_neg, n)
+    do = gp[:, None] * c
+    dn = sig_neg[..., None] * c[:, None, :]
+    loss = _softplus(-pos) + jnp.sum(_softplus(neg), axis=-1)
+    return dc, do, dn, loss

@@ -1,0 +1,101 @@
+"""L1: the SGNS hot-spot as a Pallas kernel.
+
+The kernel fuses, per batch tile: both sets of dot products
+(sigma(c.o), sigma(c.n_k)), the three gradients, and the per-sample loss —
+one pass over VMEM-resident tiles instead of five separate HLO ops over HBM.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles the batch; one
+tile holds (bB, D) center/context blocks and the (bB, K, D) negatives block
+in VMEM. With bB = 128, D = 128, K = 5 the working set is
+(2 + 2 + 2·K)·bB·D·4B ≈ 1.5 MB — comfortably inside a TPU core's ~16 MB
+VMEM with double-buffering headroom. The inner products are batched
+matvecs; on a real TPU they map to MXU passes over a (bB, D) × (D, K+1)
+layout. CPU execution uses interpret=True (Mosaic custom-calls cannot run
+on the CPU PJRT plugin), so correctness — not wallclock — is what the CPU
+path validates.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sgns_kernel(c_ref, o_ref, n_ref, dc_ref, do_ref, dn_ref, loss_ref):
+    """One (bB, D) batch tile of SGNS loss + gradients."""
+    c = c_ref[...]  # (bB, D)
+    o = o_ref[...]  # (bB, D)
+    n = n_ref[...]  # (bB, K, D)
+
+    pos = jnp.sum(c * o, axis=-1)  # (bB,)
+    # Batched matvec c·n_k; contracts D. (On TPU this is the MXU pass.)
+    neg = jax.lax.dot_general(
+        n, c[..., None],
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )[..., 0]  # (bB, K)
+
+    sig_pos = 1.0 / (1.0 + jnp.exp(-pos))
+    sig_neg = 1.0 / (1.0 + jnp.exp(-neg))
+    gp = sig_pos - 1.0
+
+    # dc = gp*o + Σ_k σ(neg_k)·n_k  — second batched matvec, contracting K.
+    dc_neg = jax.lax.dot_general(
+        sig_neg[:, None, :], n,
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )[:, 0, :]  # (bB, D)
+    dc_ref[...] = gp[:, None] * o + dc_neg
+    do_ref[...] = gp[:, None] * c
+    dn_ref[...] = sig_neg[..., None] * c[:, None, :]
+    loss_ref[...] = jnp.logaddexp(0.0, -pos) + jnp.sum(
+        jnp.logaddexp(0.0, neg), axis=-1
+    )
+
+
+def _pick_block(b):
+    """Largest power-of-two divisor of b, capped at 128 (VMEM tile size)."""
+    blk = 1
+    while blk < 128 and b % (blk * 2) == 0:
+        blk *= 2
+    return blk
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sgns_grads_pallas(c, o, n, interpret=True):
+    """Pallas SGNS: same contract as `ref.sgns_grads_ref`.
+
+    Args:
+      c: (B, D) centers; o: (B, D) positives; n: (B, K, D) negatives.
+      interpret: must stay True for CPU PJRT execution.
+
+    Returns:
+      (dc, do, dn, loss) with shapes ((B,D), (B,D), (B,K,D), (B,)).
+    """
+    b, d = c.shape
+    _, k, _ = n.shape
+    bb = _pick_block(b)
+    grid = (b // bb,)
+    bs2 = pl.BlockSpec((bb, d), lambda i: (i, 0))
+    bs3 = pl.BlockSpec((bb, k, d), lambda i: (i, 0, 0))
+    bs1 = pl.BlockSpec((bb,), lambda i: (i,))
+    return pl.pallas_call(
+        _sgns_kernel,
+        grid=grid,
+        in_specs=[bs2, bs2, bs3],
+        out_specs=[bs2, bs2, bs3, bs1],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, k, d), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(c, o, n)
+
+
+def vmem_bytes(bb, d, k):
+    """Estimated VMEM working set per grid step (DESIGN.md §Perf)."""
+    tiles = 2 * (bb * d) + 2 * (bb * d) + 2 * (bb * k * d) + bb
+    return 4 * tiles

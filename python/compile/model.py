@@ -1,0 +1,112 @@
+"""L2: the SGNS training step as a JAX computation.
+
+One fused step: gather the (center, positive, negatives) embedding rows,
+run the L1 Pallas kernel for loss + gradients, scatter-add the SGD updates
+back into the tables, return the new tables and the mean loss.
+
+The whole step is lowered once by `aot.py` per shape variant; the Rust
+runtime then drives it with device-resident tables (`execute_b`), so Python
+never appears on the training path.
+
+Scatter semantics: `.at[idx].add` accumulates duplicate indices — required
+for correctness when a batch contains the same vertex several times (very
+common for popular vertices, which dominate walk visits).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.sgns import sgns_grads_pallas
+
+
+def train_step(w_in, w_out, centers, positives, negatives, lr):
+    """One SGD step of skip-gram negative sampling.
+
+    Args:
+      w_in:  (V, D) center-embedding table.
+      w_out: (V, D) context-embedding table.
+      centers:   (B,)  int32 center vertex ids.
+      positives: (B,)  int32 positive context ids.
+      negatives: (B, K) int32 negative-sample ids.
+      lr: scalar float32 learning rate.
+
+    Returns:
+      (w_in', w_out', mean_loss)
+    """
+    c = w_in[centers]  # (B, D)
+    o = w_out[positives]  # (B, D)
+    n = w_out[negatives]  # (B, K, D)
+    dc, do, dn, loss = sgns_grads_pallas(c, o, n)
+    w_in = w_in.at[centers].add(-lr * dc)
+    w_out = w_out.at[positives].add(-lr * do)
+    w_out = w_out.at[negatives].add(-lr * dn)
+    return w_in, w_out, jnp.mean(loss)
+
+
+def train_step_fused(state, centers, positives, negatives, lr):
+    """The AOT-exported step over a single fused state array.
+
+    PJRT (via the xla crate's C API) returns multi-output computations as
+    one tuple buffer, which cannot be split on-device; a tuple root would
+    force a full (V, D)×2 host round-trip per step. Fusing everything into
+    ONE array keeps the root un-tupled so the state stays device-resident:
+
+        state row 0        = loss row (col 0 holds the mean batch loss)
+        state rows 1..V+1  = w_in
+        state rows V+1..2V+1 = w_out
+
+    The Rust runtime reads the scalar loss with a 4-byte partial host copy
+    at offset 0 (`copy_raw_to_host_sync`).
+    """
+    v = (state.shape[0] - 1) // 2
+    w_in = state[1 : v + 1]
+    w_out = state[v + 1 :]
+    c = w_in[centers]
+    o = w_out[positives]
+    n = w_out[negatives]
+    dc, do, dn, loss = sgns_grads_pallas(c, o, n)
+    state = state.at[centers + 1].add(-lr * dc)
+    state = state.at[positives + v + 1].add(-lr * do)
+    state = state.at[negatives + v + 1].add(-lr * dn)
+    state = state.at[0, 0].set(jnp.mean(loss))
+    return state
+
+
+def make_fused_example_args(v, d, b, k):
+    """ShapeDtypeStructs for AOT lowering of the fused variant."""
+    f32 = jnp.float32
+    i32 = jnp.int32
+    return (
+        jax.ShapeDtypeStruct((2 * v + 1, d), f32),  # state
+        jax.ShapeDtypeStruct((b,), i32),  # centers
+        jax.ShapeDtypeStruct((b,), i32),  # positives
+        jax.ShapeDtypeStruct((b, k), i32),  # negatives
+        jax.ShapeDtypeStruct((), f32),  # lr
+    )
+
+
+def lower_train_step_fused(v, d, b, k):
+    """Lower the fused step; donate the state so XLA updates in place."""
+    jitted = jax.jit(train_step_fused, donate_argnums=(0,))
+    return jitted.lower(*make_fused_example_args(v, d, b, k))
+
+
+def make_example_args(v, d, b, k):
+    """ShapeDtypeStructs for AOT lowering of a (V, D, B, K) variant."""
+    f32 = jnp.float32
+    i32 = jnp.int32
+    return (
+        jax.ShapeDtypeStruct((v, d), f32),  # w_in
+        jax.ShapeDtypeStruct((v, d), f32),  # w_out
+        jax.ShapeDtypeStruct((b,), i32),  # centers
+        jax.ShapeDtypeStruct((b,), i32),  # positives
+        jax.ShapeDtypeStruct((b, k), i32),  # negatives
+        jax.ShapeDtypeStruct((), f32),  # lr
+    )
+
+
+def lower_train_step(v, d, b, k):
+    """Lower `train_step` for a fixed shape variant; donate the tables so
+    XLA updates them in place (no (V, D) copies per step)."""
+    jitted = jax.jit(train_step, donate_argnums=(0, 1))
+    return jitted.lower(*make_example_args(v, d, b, k))

@@ -1,0 +1,100 @@
+"""L1 kernel correctness: Pallas SGNS vs the pure-jnp oracle.
+
+Hypothesis sweeps the (B, K, D) shape space; fixed-seed cases pin the
+numerics. All comparisons are float32 `assert_allclose`.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import sgns_grads_ref
+from compile.kernels.sgns import _pick_block, sgns_grads_pallas, vmem_bytes
+
+
+def _rand(seed, *shape):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0, 0.5, shape).astype(np.float32))
+
+
+def _check(b, k, d, seed):
+    c = _rand(seed, b, d)
+    o = _rand(seed + 1, b, d)
+    n = _rand(seed + 2, b, k, d)
+    dc, do, dn, loss = sgns_grads_pallas(c, o, n)
+    rdc, rdo, rdn, rloss = sgns_grads_ref(c, o, n)
+    np.testing.assert_allclose(dc, rdc, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(do, rdo, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(dn, rdn, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(loss, rloss, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize(
+    "b,k,d",
+    [
+        (8, 1, 4),
+        (32, 5, 16),
+        (128, 5, 64),
+        (256, 5, 128),  # the AOT "base" tile shape
+        (7, 3, 5),  # odd sizes force bb=1
+    ],
+)
+def test_kernel_matches_ref_fixed(b, k, d):
+    _check(b, k, d, seed=42)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 96),
+    k=st.integers(1, 8),
+    d=st.integers(1, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_hypothesis(b, k, d, seed):
+    _check(b, k, d, seed)
+
+
+def test_gradients_match_autodiff():
+    """The hand-derived gradients must equal jax.grad of the loss."""
+    b, k, d = 16, 4, 8
+    c, o, n = _rand(1, b, d), _rand(2, b, d), _rand(3, b, k, d)
+
+    def total_loss(c, o, n):
+        return jnp.sum(sgns_grads_ref(c, o, n)[3])
+
+    gc, go, gn = jax.grad(total_loss, argnums=(0, 1, 2))(c, o, n)
+    dc, do, dn, _ = sgns_grads_pallas(c, o, n)
+    np.testing.assert_allclose(dc, gc, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(do, go, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(dn, gn, rtol=1e-4, atol=1e-5)
+
+
+def test_loss_is_positive_and_finite():
+    b, k, d = 64, 5, 32
+    _, _, _, loss = sgns_grads_pallas(_rand(5, b, d), _rand(6, b, d), _rand(7, b, k, d))
+    assert bool(jnp.all(loss > 0))
+    assert bool(jnp.all(jnp.isfinite(loss)))
+
+
+def test_extreme_logits_are_stable():
+    """Large dot products must not overflow the softplus/sigmoid path."""
+    b, k, d = 4, 2, 8
+    big = jnp.full((b, d), 10.0, jnp.float32)
+    n = jnp.full((b, k, d), -10.0, jnp.float32)
+    dc, do, dn, loss = sgns_grads_pallas(big, big, n)
+    for t in (dc, do, dn, loss):
+        assert bool(jnp.all(jnp.isfinite(t)))
+
+
+def test_pick_block_divides_batch():
+    for b in [1, 2, 3, 7, 64, 96, 128, 256, 1000, 1024]:
+        bb = _pick_block(b)
+        assert b % bb == 0
+        assert bb <= 128
+
+
+def test_vmem_budget_of_base_variant():
+    """DESIGN.md §Hardware-Adaptation: the base tile must fit VMEM."""
+    assert vmem_bytes(128, 128, 5) < 16 * 1024 * 1024

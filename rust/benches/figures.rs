@@ -1,0 +1,35 @@
+//! Figure-regeneration bench: runs every table/figure driver at quick
+//! scale so `cargo bench` exercises the full harness. Full-scale runs
+//! (the numbers recorded in EXPERIMENTS.md) are produced with
+//! `fastn2v fig --id all`.
+
+use fastn2v::exp::common::Scale;
+use fastn2v::exp::figures;
+use fastn2v::util::benchkit::time_once;
+
+fn main() {
+    let scale = if std::env::var("FASTN2V_BENCH_FULL").is_ok() {
+        Scale::Full
+    } else {
+        Scale::Quick
+    };
+    let seed = 42;
+    macro_rules! run {
+        ($name:literal, $e:expr) => {{
+            let (_, secs) = time_once(|| $e);
+            println!("figure driver {:8} {}", $name, fastn2v::util::fmt_secs(secs));
+        }};
+    }
+    run!("table1", figures::table1(scale, seed));
+    run!("fig1", figures::fig1(scale, seed));
+    run!("fig4", figures::fig4(scale, seed));
+    run!("fig5", figures::fig5(scale, seed));
+    run!("fig6", figures::fig6(scale, seed));
+    run!("fig7", figures::fig7(scale, seed));
+    run!("fig8", figures::fig8(scale, seed));
+    run!("fig9", figures::fig9(scale, seed));
+    run!("fig10/11", figures::fig10(scale, seed));
+    run!("fig12", figures::fig12(scale, seed));
+    run!("fig13", figures::fig13(scale, seed));
+    run!("fig14", figures::fig14(scale, seed));
+}

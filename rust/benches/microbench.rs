@@ -1,0 +1,145 @@
+//! Microbenchmarks for the hot paths identified in DESIGN.md §Perf:
+//! 2nd-order transition weight computation (the per-step inner loop),
+//! alias table construction/sampling, RNG stream derivation, and the
+//! Pregel engine's per-superstep overhead.
+//!
+//! Run: `cargo bench --bench microbench` (FASTN2V_BENCH_ITERS to adjust).
+
+use fastn2v::gen::{skew_graph, GenConfig};
+use fastn2v::graph::partition::Partitioner;
+use fastn2v::node2vec::transition::fill_second_order_weights;
+use fastn2v::pregel::{Ctx, Engine, EngineOpts, Message, VertexProgram};
+use fastn2v::util::alias::AliasTable;
+use fastn2v::util::benchkit::{bench, black_box, report, BenchConfig};
+use fastn2v::util::rng::{stream, Xoshiro256pp};
+
+fn bench_transition_weights(cfg: BenchConfig) {
+    let g = skew_graph(&GenConfig::new(1 << 14, 60, 7), 4.0);
+    // Pick a heavy vertex and a light predecessor.
+    let v = g
+        .vertices()
+        .max_by_key(|&v| g.degree(v))
+        .unwrap();
+    let u = *g.neighbors(v).iter().min_by_key(|&&u| g.degree(u)).unwrap();
+    let mut scratch = Vec::new();
+    let m = bench(
+        &format!("fill_second_order_weights d_v={} d_u={}", g.degree(v), g.degree(u)),
+        BenchConfig {
+            warmup_iters: 100,
+            measure_iters: cfg.measure_iters.max(1000),
+        },
+        || {
+            fill_second_order_weights(
+                g.neighbors(v),
+                g.weights(v),
+                u,
+                g.neighbors(u),
+                0.5,
+                2.0,
+                &mut scratch,
+            );
+            black_box(&scratch);
+        },
+    );
+    report(&m);
+    // Reverse asymmetry: popular predecessor (gallop path).
+    let m = bench(
+        &format!("fill_second_order_weights d_v={} d_u={} (gallop)", g.degree(u), g.degree(v)),
+        BenchConfig {
+            warmup_iters: 100,
+            measure_iters: cfg.measure_iters.max(1000),
+        },
+        || {
+            fill_second_order_weights(
+                g.neighbors(u),
+                g.weights(u),
+                v,
+                g.neighbors(v),
+                0.5,
+                2.0,
+                &mut scratch,
+            );
+            black_box(&scratch);
+        },
+    );
+    report(&m);
+}
+
+fn bench_alias(cfg: BenchConfig) {
+    let weights: Vec<f32> = (1..=1000).map(|i| (i % 17) as f32 + 0.5).collect();
+    let m = bench("alias_build_1000", cfg, || {
+        black_box(AliasTable::new(&weights).unwrap());
+    });
+    report(&m);
+    let table = AliasTable::new(&weights).unwrap();
+    let mut rng = Xoshiro256pp::seed_from_u64(3);
+    let m = bench(
+        "alias_sample_x10000",
+        BenchConfig {
+            warmup_iters: 10,
+            measure_iters: cfg.measure_iters.max(100),
+        },
+        || {
+            let mut acc = 0usize;
+            for _ in 0..10_000 {
+                acc += table.sample(&mut rng);
+            }
+            black_box(acc);
+        },
+    );
+    report(&m);
+}
+
+fn bench_rng(cfg: BenchConfig) {
+    let m = bench(
+        "stream_derivation_x10000",
+        BenchConfig {
+            warmup_iters: 10,
+            measure_iters: cfg.measure_iters.max(100),
+        },
+        || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                let mut s = stream(42, i, i ^ 7, 2);
+                acc ^= s.next_u64();
+            }
+            black_box(acc);
+        },
+    );
+    report(&m);
+}
+
+/// Engine overhead: a no-op program over a mid-sized graph.
+struct Noop;
+struct NoopMsg;
+impl Message for NoopMsg {
+    fn wire_bytes(&self) -> u64 {
+        4
+    }
+}
+impl VertexProgram for Noop {
+    type Value = u64;
+    type Msg = NoopMsg;
+    fn compute(&self, ctx: &mut Ctx<'_, Self>, _vid: u32, _v: &mut u64, _m: &mut Vec<NoopMsg>) {
+        if ctx.superstep() >= 10 {
+            ctx.vote_to_halt();
+        }
+    }
+}
+
+fn bench_engine_overhead(cfg: BenchConfig) {
+    let g = skew_graph(&GenConfig::new(1 << 14, 10, 9), 2.0);
+    let m = bench("engine_10_supersteps_16k_vertices", cfg, || {
+        let eng = Engine::new(&g, Partitioner::hash(8), Noop, EngineOpts::default());
+        black_box(eng.run().unwrap().metrics.num_supersteps());
+    });
+    report(&m);
+}
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    bench_transition_weights(cfg);
+    bench_alias(cfg);
+    bench_rng(cfg);
+    bench_engine_overhead(cfg);
+}

@@ -1,0 +1,49 @@
+//! End-to-end walk-engine comparison (the paper's Figure 7/13 axis): all
+//! FN variants plus both baselines on a skewed graph, reported as wall
+//! time and steps/second.
+//!
+//! Run: `cargo bench --bench walk_engines`
+//! (FASTN2V_BENCH_FULL=1 for a larger graph.)
+
+use fastn2v::exp::common::{run_solution, Solution};
+use fastn2v::gen::{skew_graph, GenConfig};
+use fastn2v::node2vec::Variant;
+use fastn2v::util::benchkit::print_table;
+
+fn main() {
+    let full = std::env::var("FASTN2V_BENCH_FULL").is_ok();
+    let (n, deg, walk_len) = if full {
+        (1 << 17, 100, 80u32)
+    } else {
+        (1 << 13, 40, 20u32)
+    };
+    let g = skew_graph(&GenConfig::new(n, deg, 11), 4.0);
+    let stats = g.stats();
+    println!(
+        "graph: |V|={} |E|={} max deg {} | walk length {walk_len}",
+        stats.num_vertices, stats.num_edges, stats.max_degree
+    );
+    let total_steps = (stats.num_vertices * walk_len as u64) as f64;
+
+    let mut rows = Vec::new();
+    for sol in [
+        Solution::CNode2Vec,
+        Solution::Spark,
+        Solution::Fn(Variant::Base),
+        Solution::Fn(Variant::Local),
+        Solution::Fn(Variant::Switch),
+        Solution::Fn(Variant::Cache),
+        Solution::Fn(Variant::Approx),
+    ] {
+        let out = run_solution(sol, &g, 0.5, 2.0, walk_len, 3, false);
+        let cells = match out.secs() {
+            Some(s) => vec![
+                fastn2v::util::fmt_secs(s),
+                format!("{:.2} M steps/s", total_steps / s / 1e6),
+            ],
+            None => vec![out.cell(), "-".into()],
+        };
+        rows.push((sol.name().to_string(), cells));
+    }
+    print_table("walk engines (skew-4 graph)", &["wall", "throughput"], &rows);
+}

@@ -1,0 +1,14 @@
+//! The paper's comparison systems, rebuilt from scratch:
+//!
+//! - [`cnode2vec`] — the single-machine C++ reference implementation's
+//!   algorithmic profile: **precompute one alias table per directed edge**
+//!   (the Eq. 1 `8·Σdᵢ²` memory), then walk fast with O(1) draws. Its OOM
+//!   behaviour on large graphs (paper Figure 9, K ≥ 26) falls out of a
+//!   configurable memory budget.
+//! - [`spark_sim`] — Spark-Node2Vec's profile on a purpose-built mini-RDD
+//!   engine: immutable datasets with per-iteration copy-on-write, hash
+//!   shuffles that spill partitions to disk, and the 30-edge trim that
+//!   destroys walk quality (paper §2.2, Figures 6–7).
+
+pub mod cnode2vec;
+pub mod spark_sim;

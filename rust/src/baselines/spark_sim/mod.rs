@@ -1,0 +1,22 @@
+//! Spark-Node2Vec simulation (paper §2.2).
+//!
+//! Spark/GraphX is reproduced as a purpose-built mini engine that keeps the
+//! three properties the paper blames for Spark-Node2Vec's behaviour:
+//!
+//! 1. **Immutable RDDs with copy-on-write** — every walk extension creates
+//!    a new generation of the walks dataset; old generations stay resident
+//!    (lineage) until explicitly unpersisted, so memory climbs every
+//!    iteration ([`rdd`]).
+//! 2. **Shuffle joins that spill to disk** — the per-step join between
+//!    walks and transition state hash-partitions both sides into bucket
+//!    files on disk and reads them back ([`rdd::Rdd::join_spill`]) —
+//!    real file I/O, the paper's "significant disk I/O overhead".
+//! 3. **The 30-edge trim** — preprocessing keeps only the 30
+//!    highest-weight edges per vertex ([`node2vec::trim_graph`]), the
+//!    quality-destroying simplification Figures 6–7 measure.
+
+pub mod node2vec;
+pub mod rdd;
+
+pub use node2vec::{trim_graph, SparkNode2Vec, SparkReport, TRIM_EDGES};
+pub use rdd::{RddContext, RddError};

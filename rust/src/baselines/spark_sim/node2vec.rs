@@ -1,0 +1,306 @@
+//! Spark-Node2Vec on the mini-RDD engine (paper §2.2).
+//!
+//! Phase structure mirrors the real implementation:
+//!
+//! - **Preprocessing**: trim the graph to the [`TRIM_EDGES`] highest-weight
+//!   edges per vertex, then precompute per-arc alias tables ("every edge
+//!   stores three arrays ... two initialized using the transition
+//!   probabilities for Alias Sampling") and materialize them as an RDD
+//!   keyed by arc id.
+//! - **Walk phase**: one loop iteration per step. The walks RDD (keyed by
+//!   the arc of its last two steps) is `join`ed with the transition RDD
+//!   through a disk-spilling shuffle; each matched row samples its next
+//!   vertex and the whole walk is re-materialized as a new RDD generation
+//!   (copy-on-write).
+//!
+//! Every generation stays resident (the lineage the paper blames), so
+//! memory grows linearly with walk length and OOMs on mid-sized graphs
+//! under a realistic budget.
+
+use crate::graph::{Graph, GraphBuilder, VertexId};
+use crate::node2vec::transition::fill_second_order_weights;
+use crate::node2vec::{FnConfig, WalkSet};
+use crate::util::alias::AliasTable;
+use crate::util::rng::stream;
+
+use super::rdd::{Rdd, RddContext, RddError};
+
+/// The paper's trim constant: at most 30 edges kept per vertex.
+pub const TRIM_EDGES: usize = 30;
+
+const SALT_SPARK: u64 = 0x59A8;
+
+/// Timing and I/O report.
+#[derive(Clone, Debug, Default)]
+pub struct SparkReport {
+    pub preprocess_secs: f64,
+    pub walk_secs: f64,
+    pub peak_bytes: u64,
+    pub shuffle_bytes_written: u64,
+    pub shuffle_bytes_read: u64,
+    pub trimmed_arcs: u64,
+    pub original_arcs: u64,
+    pub joins: u64,
+}
+
+/// Trim to the `TRIM_EDGES` highest-weight out-edges per vertex (ties by
+/// neighbor id, as the reference implementation's sort leaves them). The
+/// result is **directed**: v may drop the edge to u while u keeps v — the
+/// asymmetry the real trimmed graph has.
+pub fn trim_graph(graph: &Graph) -> Graph {
+    let mut b = GraphBuilder::new_directed(graph.num_vertices()).dedup_keep_first();
+    let mut order: Vec<usize> = Vec::new();
+    for v in graph.vertices() {
+        let ns = graph.neighbors(v);
+        let ws = graph.weights(v);
+        if ns.len() <= TRIM_EDGES {
+            for (&n, &w) in ns.iter().zip(ws) {
+                b.add_edge(v, n, w);
+            }
+        } else {
+            order.clear();
+            order.extend(0..ns.len());
+            // Highest weight first; stable on ids for ties.
+            order.sort_by(|&i, &j| ws[j].partial_cmp(&ws[i]).unwrap());
+            for &i in order.iter().take(TRIM_EDGES) {
+                b.add_edge(v, ns[i], ws[i]);
+            }
+        }
+    }
+    b.build()
+}
+
+/// Payload layout of a transition-RDD row for arc `u→v`:
+/// `[d, nbr_0..nbr_{d-1}, prob_bits_0.., alias_0..]` over `N_trim(v)`.
+fn encode_table(neighbors: &[VertexId], table: &AliasTable) -> Vec<u32> {
+    let (prob, alias) = table.parts();
+    let d = neighbors.len();
+    let mut out = Vec::with_capacity(1 + 3 * d);
+    out.push(d as u32);
+    out.extend_from_slice(neighbors);
+    out.extend(prob.iter().map(|p| p.to_bits()));
+    out.extend_from_slice(alias);
+    out
+}
+
+/// Sample from an encoded row with the same draw sequence as
+/// [`AliasTable::sample`].
+fn sample_encoded(payload: &[u32], rng: &mut crate::util::rng::Xoshiro256pp) -> VertexId {
+    let d = payload[0] as usize;
+    let nbrs = &payload[1..1 + d];
+    let prob = &payload[1 + d..1 + 2 * d];
+    let alias = &payload[1 + 2 * d..1 + 3 * d];
+    let i = rng.next_index(d);
+    let p = f32::from_bits(prob[i]) as f64;
+    if rng.next_f64() < p {
+        nbrs[i]
+    } else {
+        nbrs[alias[i] as usize]
+    }
+}
+
+/// The Spark-Node2Vec job.
+pub struct SparkNode2Vec;
+
+impl SparkNode2Vec {
+    /// Run walks for every vertex. `memory_budget` simulates the cluster's
+    /// executor memory; `partitions` the shuffle bucket count.
+    pub fn run(
+        graph: &Graph,
+        cfg: &FnConfig,
+        memory_budget: Option<u64>,
+        partitions: usize,
+    ) -> Result<(WalkSet, SparkReport), RddError> {
+        let mut report = SparkReport {
+            original_arcs: graph.num_arcs() as u64,
+            ..Default::default()
+        };
+        let mut ctx = RddContext::new(memory_budget)?;
+
+        // ---------------- preprocessing phase ----------------
+        let t0 = std::time::Instant::now();
+        let trimmed = trim_graph(graph);
+        report.trimmed_arcs = trimmed.num_arcs() as u64;
+
+        // First-step alias tables, keyed by vertex.
+        let mut first_rows: Vec<(u32, Vec<u32>)> = Vec::with_capacity(trimmed.num_vertices());
+        for v in trimmed.vertices() {
+            if let Some(t) = AliasTable::new(trimmed.weights(v)) {
+                first_rows.push((v, encode_table(trimmed.neighbors(v), &t)));
+            }
+        }
+        let first_rdd = Rdd::materialize(&mut ctx, first_rows)?;
+
+        // Per-arc 2nd-order tables, keyed by arc id of (u→v).
+        let mut trans_rows: Vec<(u32, Vec<u32>)> = Vec::with_capacity(trimmed.num_arcs());
+        let mut scratch: Vec<f32> = Vec::new();
+        for u in trimmed.vertices() {
+            for (pos, &v) in trimmed.neighbors(u).iter().enumerate() {
+                fill_second_order_weights(
+                    trimmed.neighbors(v),
+                    trimmed.weights(v),
+                    u,
+                    trimmed.neighbors(u),
+                    cfg.p,
+                    cfg.q,
+                    &mut scratch,
+                );
+                if let Some(t) = AliasTable::new(&scratch) {
+                    let arc = (trimmed.arc_offset(u) + pos) as u32;
+                    trans_rows.push((arc, encode_table(trimmed.neighbors(v), &t)));
+                }
+            }
+        }
+        let trans_rdd = Rdd::materialize(&mut ctx, trans_rows)?;
+        report.preprocess_secs = t0.elapsed().as_secs_f64();
+
+        // ---------------- walk phase ----------------
+        let t1 = std::time::Instant::now();
+        // Initial walks: step 0 via the first-step tables. Walk rows are
+        // keyed by the arc (prev→cur); payload = [start, steps...].
+        let init_rows: Vec<(u32, Vec<u32>)> = (0..graph.num_vertices() as u32)
+            .map(|v| (v, vec![v]))
+            .collect();
+        let walks0 = Rdd::materialize(&mut ctx, init_rows)?;
+        let mut walks = walks0.join_spill(&first_rdd, &mut ctx, partitions, |v, lp, rp| {
+            let start = lp[0];
+            let mut rng = stream(cfg.seed, start as u64, 0, SALT_SPARK);
+            let x = sample_encoded(rp, &mut rng);
+            // New key: arc id of (v → x) in the trimmed graph.
+            let pos = trimmed.neighbors(v).binary_search(&x).unwrap();
+            let arc = (trimmed.arc_offset(v) + pos) as u32;
+            (arc, vec![start, x])
+        })?;
+        report.joins += 1;
+
+        for idx in 1..cfg.walk_length {
+            walks = walks.join_spill(&trans_rdd, &mut ctx, partitions, |_arc, lp, rp| {
+                let start = lp[0];
+                let mut rng = stream(cfg.seed, start as u64, idx as u64, SALT_SPARK);
+                let x = sample_encoded(rp, &mut rng);
+                let cur = lp[lp.len() - 1];
+                let pos = trimmed.neighbors(cur).binary_search(&x).unwrap();
+                let arc = (trimmed.arc_offset(cur) + pos) as u32;
+                let mut walk = lp.to_vec(); // copy-on-write of the row
+                walk.push(x);
+                (arc, walk)
+            })?;
+            report.joins += 1;
+        }
+
+        // Collect to the driver: align by start vertex.
+        let mut out: WalkSet = (0..graph.num_vertices())
+            .map(|v| vec![v as u32])
+            .collect();
+        for (_, payload) in &walks.rows {
+            let start = payload[0] as usize;
+            out[start] = payload.clone();
+        }
+        report.walk_secs = t1.elapsed().as_secs_f64();
+        report.peak_bytes = ctx.peak_bytes();
+        report.shuffle_bytes_written = ctx.shuffle_bytes_written;
+        report.shuffle_bytes_read = ctx.shuffle_bytes_read;
+        Ok((out, report))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{labeled_community_graph, skew_graph, GenConfig, LabeledConfig};
+    use crate::node2vec::FnConfig;
+
+    #[test]
+    fn trim_caps_out_degree_at_30() {
+        let lg = labeled_community_graph(&LabeledConfig::tiny(3));
+        let t = trim_graph(&lg.graph);
+        assert_eq!(t.num_vertices(), lg.graph.num_vertices());
+        for v in t.vertices() {
+            assert!(t.degree(v) <= TRIM_EDGES);
+            assert_eq!(
+                t.degree(v),
+                lg.graph.degree(v).min(TRIM_EDGES),
+                "vertex {v}"
+            );
+            // Kept edges are a subset of the original adjacency.
+            for &n in t.neighbors(v) {
+                assert!(lg.graph.has_edge(v, n));
+            }
+        }
+    }
+
+    #[test]
+    fn trim_keeps_highest_weights() {
+        let mut b = GraphBuilder::new_directed(40);
+        for i in 1..40u32 {
+            b.add_edge(0, i, i as f32);
+        }
+        let g = b.build();
+        let t = trim_graph(&g);
+        // Highest 30 weights = neighbors 10..=39.
+        assert_eq!(t.degree(0), 30);
+        assert!(t.neighbors(0).iter().all(|&n| n >= 10));
+    }
+
+    #[test]
+    fn spark_walks_stay_on_trimmed_graph() {
+        let g = skew_graph(&GenConfig::new(300, 40, 5), 3.0);
+        let cfg = FnConfig::new(0.5, 2.0, 9).with_walk_length(6);
+        let (walks, report) = SparkNode2Vec::run(&g, &cfg, None, 8).unwrap();
+        let trimmed = trim_graph(&g);
+        assert!(report.trimmed_arcs < report.original_arcs);
+        let mut full_len = 0;
+        for (s, w) in walks.iter().enumerate() {
+            assert_eq!(w[0], s as u32);
+            for pair in w.windows(2) {
+                assert!(trimmed.has_edge(pair[0], pair[1]), "{pair:?} not in trimmed");
+            }
+            if w.len() == 7 {
+                full_len += 1;
+            }
+        }
+        assert!(full_len > 250, "most walks should complete: {full_len}");
+        assert!(report.joins == 6);
+        assert!(report.shuffle_bytes_written > 0);
+    }
+
+    #[test]
+    fn spark_memory_climbs_with_walk_length() {
+        let g = skew_graph(&GenConfig::new(200, 20, 7), 2.0);
+        let peak = |l: u32| {
+            SparkNode2Vec::run(&g, &FnConfig::new(1.0, 1.0, 1).with_walk_length(l), None, 4)
+                .unwrap()
+                .1
+                .peak_bytes
+        };
+        let (p2, p6, p10) = (peak(2), peak(6), peak(10));
+        // Every extra step adds a full new walks generation (≥ n rows of
+        // ≥ 32 bytes each) that stays resident — memory climbs monotonically
+        // and by at least the copied-walk bytes per generation.
+        let n = g.num_vertices() as u64;
+        assert!(p6 >= p2 + 4 * n * 32, "lineage growth missing: {p2} -> {p6}");
+        assert!(p10 >= p6 + 4 * n * 32, "lineage growth missing: {p6} -> {p10}");
+    }
+
+    #[test]
+    fn spark_ooms_under_budget() {
+        let g = skew_graph(&GenConfig::new(400, 30, 3), 3.0);
+        let cfg = FnConfig::new(0.5, 2.0, 2).with_walk_length(20);
+        let budget = 200 * 1024; // 200 KB "cluster"
+        match SparkNode2Vec::run(&g, &cfg, Some(budget), 4) {
+            Err(RddError::OutOfMemory { .. }) => {}
+            other => panic!("expected OOM, got ok={:?}", other.is_ok()),
+        }
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let g = skew_graph(&GenConfig::new(150, 12, 4), 2.0);
+        let cfg = FnConfig::new(2.0, 0.5, 77).with_walk_length(5);
+        let (w1, _) = SparkNode2Vec::run(&g, &cfg, None, 4).unwrap();
+        let (w2, _) = SparkNode2Vec::run(&g, &cfg, None, 4).unwrap();
+        assert_eq!(w1, w2);
+    }
+
+    use crate::graph::GraphBuilder;
+}

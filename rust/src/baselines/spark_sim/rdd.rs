@@ -1,0 +1,351 @@
+//! A miniature RDD engine with the cost model that matters: immutable
+//! partitioned datasets, lineage-held memory, and disk-spilling shuffles.
+//!
+//! This is not a general dataflow system — it implements exactly the
+//! operations Spark-Node2Vec's walk loop uses (`map`, `key_by` + hash
+//! `join_spill`, `collect`) with honest costs:
+//!
+//! - every transformation materializes a **new** dataset generation and
+//!   charges its bytes to the context's memory gauge; nothing is freed
+//!   until [`RddContext::unpersist_before`] (Spark's GC of unreferenced
+//!   RDDs — which the Node2Vec loop defeats by keeping lineage);
+//! - `join_spill` hash-partitions both sides into **real bucket files**
+//!   under a spill directory, then streams them back per bucket — the
+//!   shuffle I/O the paper measures;
+//! - a memory budget turns the gauge into the paper's Figure-7 "x"
+//!   (killed by the OS) behaviour.
+
+use std::fs::{self, File};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::PathBuf;
+
+use crate::util::memstat::ByteGauge;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RddError {
+    /// Aggregate dataset memory exceeded the simulated cluster budget.
+    OutOfMemory { held_bytes: u64, budget: u64 },
+    Io(String),
+}
+
+impl std::fmt::Display for RddError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RddError::OutOfMemory { held_bytes, budget } => write!(
+                f,
+                "Spark-sim OOM: {} resident exceeds budget {}",
+                crate::util::fmt_bytes(*held_bytes),
+                crate::util::fmt_bytes(*budget)
+            ),
+            RddError::Io(e) => write!(f, "spill I/O error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for RddError {}
+
+/// Tracks dataset generations, memory, and shuffle I/O for one "job".
+pub struct RddContext {
+    spill_dir: PathBuf,
+    pub memory: ByteGauge,
+    memory_budget: Option<u64>,
+    /// Bytes of per-generation residency, indexed by generation id.
+    generations: Vec<u64>,
+    pub shuffle_bytes_written: u64,
+    pub shuffle_bytes_read: u64,
+    pub shuffle_files: u64,
+}
+
+impl RddContext {
+    pub fn new(memory_budget: Option<u64>) -> Result<Self, RddError> {
+        let spill_dir = std::env::temp_dir().join(format!(
+            "fn2v-spark-spill-{}-{:x}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos() as u64
+        ));
+        fs::create_dir_all(&spill_dir).map_err(|e| RddError::Io(e.to_string()))?;
+        Ok(RddContext {
+            spill_dir,
+            memory: ByteGauge::new(),
+            memory_budget,
+            generations: Vec::new(),
+            shuffle_bytes_written: 0,
+            shuffle_bytes_read: 0,
+            shuffle_files: 0,
+        })
+    }
+
+    /// Register a new dataset generation of `bytes`; errors if the budget
+    /// is blown (the paper's OOM-kill).
+    pub fn register(&mut self, bytes: u64) -> Result<usize, RddError> {
+        self.memory.add(bytes);
+        self.generations.push(bytes);
+        if let Some(budget) = self.memory_budget {
+            if self.memory.get() > budget {
+                return Err(RddError::OutOfMemory {
+                    held_bytes: self.memory.get(),
+                    budget,
+                });
+            }
+        }
+        Ok(self.generations.len() - 1)
+    }
+
+    /// Drop generations `< keep_from` (Spark unpersist / GC of datasets no
+    /// longer referenced; Spark-Node2Vec's loop can only do this for
+    /// generations older than the current lineage horizon).
+    pub fn unpersist_before(&mut self, keep_from: usize) {
+        let end = keep_from.min(self.generations.len());
+        for gen_bytes in &mut self.generations[..end] {
+            self.memory.sub(*gen_bytes);
+            *gen_bytes = 0;
+        }
+    }
+
+    pub fn peak_bytes(&self) -> u64 {
+        self.memory.peak()
+    }
+
+    /// Hash-partitioned disk shuffle: serialize `rows` of keyed fixed-size
+    /// records into `buckets` files by key hash, then read each bucket
+    /// back. Returns rows grouped per bucket. This is the I/O backbone of
+    /// [`Rdd::join_spill`].
+    fn shuffle_to_disk(
+        &mut self,
+        tag: &str,
+        rows: Vec<(u32, Vec<u32>)>,
+        buckets: usize,
+    ) -> Result<Vec<Vec<(u32, Vec<u32>)>>, RddError> {
+        let io = |e: std::io::Error| RddError::Io(e.to_string());
+        // Write phase.
+        let mut writers: Vec<BufWriter<File>> = (0..buckets)
+            .map(|b| {
+                let path = self.spill_dir.join(format!("{tag}-{b}.spill"));
+                File::create(path).map(BufWriter::new)
+            })
+            .collect::<Result<_, _>>()
+            .map_err(io)?;
+        for (key, payload) in rows {
+            let b = (key as usize).wrapping_mul(0x9E3779B1) % buckets.max(1);
+            let w = &mut writers[b];
+            w.write_all(&key.to_le_bytes()).map_err(io)?;
+            w.write_all(&(payload.len() as u32).to_le_bytes()).map_err(io)?;
+            for x in &payload {
+                w.write_all(&x.to_le_bytes()).map_err(io)?;
+            }
+            self.shuffle_bytes_written += 8 + 4 * payload.len() as u64;
+        }
+        for w in writers.iter_mut() {
+            w.flush().map_err(io)?;
+        }
+        drop(writers);
+        self.shuffle_files += buckets as u64;
+        // Read phase.
+        let mut out = Vec::with_capacity(buckets);
+        for b in 0..buckets {
+            let path = self.spill_dir.join(format!("{tag}-{b}.spill"));
+            let mut r = BufReader::new(File::open(&path).map_err(io)?);
+            let mut rows = Vec::new();
+            let mut hdr = [0u8; 8];
+            loop {
+                match r.read_exact(&mut hdr) {
+                    Ok(()) => {}
+                    Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => break,
+                    Err(e) => return Err(io(e)),
+                }
+                let key = u32::from_le_bytes([hdr[0], hdr[1], hdr[2], hdr[3]]);
+                let len = u32::from_le_bytes([hdr[4], hdr[5], hdr[6], hdr[7]]) as usize;
+                let mut buf = vec![0u8; len * 4];
+                r.read_exact(&mut buf).map_err(io)?;
+                let payload: Vec<u32> = buf
+                    .chunks_exact(4)
+                    .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                self.shuffle_bytes_read += 8 + 4 * len as u64;
+                rows.push((key, payload));
+            }
+            let _ = fs::remove_file(path);
+            out.push(rows);
+        }
+        Ok(out)
+    }
+}
+
+impl Drop for RddContext {
+    fn drop(&mut self) {
+        let _ = fs::remove_dir_all(&self.spill_dir);
+    }
+}
+
+/// An immutable dataset of `(key, payload)` rows (all Spark-Node2Vec state
+/// fits this shape: walks keyed by current vertex, transition rows keyed by
+/// vertex).
+pub struct Rdd {
+    pub rows: Vec<(u32, Vec<u32>)>,
+    pub generation: usize,
+}
+
+impl Rdd {
+    /// Materialize a dataset (charges its bytes to the context).
+    pub fn materialize(
+        ctx: &mut RddContext,
+        rows: Vec<(u32, Vec<u32>)>,
+    ) -> Result<Rdd, RddError> {
+        let bytes: u64 = rows
+            .iter()
+            .map(|(_, p)| 8 + 24 + 4 * p.len() as u64)
+            .sum();
+        let generation = ctx.register(bytes)?;
+        Ok(Rdd { rows, generation })
+    }
+
+    /// Copy-on-write map: produces a brand-new generation (the RDD
+    /// immutability cost the paper highlights — even a one-step walk
+    /// extension re-materializes every row).
+    pub fn map<F>(&self, ctx: &mut RddContext, f: F) -> Result<Rdd, RddError>
+    where
+        F: Fn(&(u32, Vec<u32>)) -> (u32, Vec<u32>),
+    {
+        let rows: Vec<(u32, Vec<u32>)> = self.rows.iter().map(f).collect();
+        Rdd::materialize(ctx, rows)
+    }
+
+    /// Inner hash join by key through a disk-spilling shuffle of **both**
+    /// sides. `f` combines each matching pair into an output row.
+    pub fn join_spill<F>(
+        &self,
+        other: &Rdd,
+        ctx: &mut RddContext,
+        buckets: usize,
+        f: F,
+    ) -> Result<Rdd, RddError>
+    where
+        F: Fn(u32, &[u32], &[u32]) -> (u32, Vec<u32>),
+    {
+        let tag_l = format!("l{}", self.generation);
+        let tag_r = format!("r{}", other.generation);
+        let left = ctx.shuffle_to_disk(&tag_l, self.rows.clone(), buckets)?;
+        let right = ctx.shuffle_to_disk(&tag_r, other.rows.clone(), buckets)?;
+        let mut rows = Vec::new();
+        for (lb, rb) in left.into_iter().zip(right) {
+            // Build a hash map on the (smaller) right side per bucket.
+            let mut table: std::collections::HashMap<u32, Vec<&Vec<u32>>> =
+                std::collections::HashMap::new();
+            for (k, p) in &rb {
+                table.entry(*k).or_default().push(p);
+            }
+            for (k, lp) in &lb {
+                if let Some(matches) = table.get(k) {
+                    for rp in matches {
+                        rows.push(f(*k, lp, rp));
+                    }
+                }
+            }
+        }
+        // Keep output deterministic regardless of bucket iteration order.
+        rows.sort();
+        Rdd::materialize(ctx, rows)
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn materialize_charges_memory() {
+        let mut ctx = RddContext::new(None).unwrap();
+        let r = Rdd::materialize(&mut ctx, vec![(1, vec![1, 2, 3]), (2, vec![])]).unwrap();
+        assert_eq!(r.len(), 2);
+        assert_eq!(ctx.memory.get(), (8 + 24 + 12) + (8 + 24));
+    }
+
+    #[test]
+    fn map_creates_new_generation_and_memory_climbs() {
+        let mut ctx = RddContext::new(None).unwrap();
+        let r0 = Rdd::materialize(&mut ctx, vec![(1, vec![10]), (2, vec![20])]).unwrap();
+        let before = ctx.memory.get();
+        let r1 = r0
+            .map(&mut ctx, |(k, p)| {
+                let mut p = p.clone();
+                p.push(99);
+                (*k, p)
+            })
+            .unwrap();
+        assert_eq!(r1.generation, r0.generation + 1);
+        assert!(ctx.memory.get() > before, "copy-on-write must grow memory");
+        assert_eq!(r1.rows[0].1, vec![10, 99]);
+        // Old generation still resident until unpersisted.
+        ctx.unpersist_before(r1.generation);
+        assert!(ctx.memory.get() < before + ctx.memory.get());
+    }
+
+    #[test]
+    fn budget_exceeded_is_oom() {
+        let mut ctx = RddContext::new(Some(100)).unwrap();
+        let rows: Vec<(u32, Vec<u32>)> = (0..50).map(|i| (i, vec![i; 4])).collect();
+        match Rdd::materialize(&mut ctx, rows) {
+            Err(RddError::OutOfMemory { .. }) => {}
+            _ => panic!("expected OOM"),
+        }
+    }
+
+    #[test]
+    fn join_spill_joins_correctly_and_touches_disk() {
+        let mut ctx = RddContext::new(None).unwrap();
+        let walks =
+            Rdd::materialize(&mut ctx, vec![(5, vec![0, 5]), (7, vec![1, 7]), (5, vec![2, 5])])
+                .unwrap();
+        let trans = Rdd::materialize(&mut ctx, vec![(5, vec![50]), (7, vec![70]), (9, vec![90])])
+            .unwrap();
+        let joined = walks
+            .join_spill(&trans, &mut ctx, 4, |k, l, r| {
+                let mut out = l.to_vec();
+                out.push(r[0]);
+                (k, out)
+            })
+            .unwrap();
+        let mut rows = joined.rows.clone();
+        rows.sort();
+        assert_eq!(
+            rows,
+            vec![(5, vec![0, 5, 50]), (5, vec![2, 5, 50]), (7, vec![1, 7, 70])]
+        );
+        assert!(ctx.shuffle_bytes_written > 0);
+        assert!(ctx.shuffle_bytes_read > 0);
+        assert_eq!(ctx.shuffle_files, 8);
+    }
+
+    #[test]
+    fn unpersist_releases_generations() {
+        let mut ctx = RddContext::new(None).unwrap();
+        let r0 = Rdd::materialize(&mut ctx, vec![(1, vec![1; 100])]).unwrap();
+        let r1 = r0.map(&mut ctx, |(k, p)| (*k, p.clone())).unwrap();
+        let high = ctx.memory.get();
+        ctx.unpersist_before(r1.generation);
+        assert!(ctx.memory.get() < high);
+        assert_eq!(ctx.peak_bytes(), high);
+    }
+
+    #[test]
+    fn spill_dir_cleaned_on_drop() {
+        let dir;
+        {
+            let ctx = RddContext::new(None).unwrap();
+            dir = ctx.spill_dir.clone();
+            assert!(dir.exists());
+        }
+        assert!(!dir.exists());
+    }
+}

@@ -1,0 +1,283 @@
+//! Multi-label node classification: one-vs-rest logistic regression over
+//! embeddings with micro/macro-F1 scoring — the paper's Figure-6 protocol
+//! (which follows DeepWalk/Node2Vec: train on a fraction of labelled
+//! vertices, predict top-kᵥ labels where kᵥ is the vertex's true label
+//! count, report micro-F1 and macro-F1).
+
+use crate::util::rng::{stream, Xoshiro256pp};
+
+/// One-vs-rest logistic regression, trained with full-batch gradient
+/// descent + L2 (embedding dims are ≤ a few hundred; this is exact enough
+/// and dependency-free).
+pub struct OvrLogistic {
+    pub num_labels: usize,
+    pub dim: usize,
+    /// Row-major (num_labels, dim + 1) weights; last column is the bias.
+    pub w: Vec<f32>,
+}
+
+/// Training hyper-parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct ClassifyConfig {
+    pub iters: u32,
+    pub lr: f32,
+    pub l2: f32,
+    pub train_fraction: f64,
+    pub seed: u64,
+}
+
+impl Default for ClassifyConfig {
+    fn default() -> Self {
+        ClassifyConfig {
+            iters: 300,
+            lr: 0.5,
+            l2: 1e-4,
+            train_fraction: 0.5,
+            seed: 1,
+        }
+    }
+}
+
+#[inline]
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+impl OvrLogistic {
+    /// Fit on `(embeddings[i], labels[i])` for `i ∈ train_idx`.
+    pub fn fit(
+        embeddings: &[Vec<f32>],
+        labels: &[Vec<u16>],
+        num_labels: usize,
+        train_idx: &[usize],
+        cfg: &ClassifyConfig,
+    ) -> OvrLogistic {
+        let dim = embeddings[0].len();
+        let mut w = vec![0f32; num_labels * (dim + 1)];
+        let n = train_idx.len() as f32;
+        // Precompute binary targets per label for the training set.
+        let mut y = vec![false; num_labels * train_idx.len()];
+        for (row, &i) in train_idx.iter().enumerate() {
+            for &l in &labels[i] {
+                y[l as usize * train_idx.len() + row] = true;
+            }
+        }
+        let mut grad = vec![0f32; dim + 1];
+        for label in 0..num_labels {
+            let wl = &mut w[label * (dim + 1)..(label + 1) * (dim + 1)];
+            let yl = &y[label * train_idx.len()..(label + 1) * train_idx.len()];
+            for _ in 0..cfg.iters {
+                grad.iter_mut().for_each(|g| *g = 0.0);
+                for (row, &i) in train_idx.iter().enumerate() {
+                    let e = &embeddings[i];
+                    let mut z = wl[dim];
+                    for j in 0..dim {
+                        z += wl[j] * e[j];
+                    }
+                    let err = sigmoid(z) - if yl[row] { 1.0 } else { 0.0 };
+                    for j in 0..dim {
+                        grad[j] += err * e[j];
+                    }
+                    grad[dim] += err;
+                }
+                for j in 0..=dim {
+                    let reg = if j < dim { cfg.l2 * wl[j] } else { 0.0 };
+                    wl[j] -= cfg.lr * (grad[j] / n + reg);
+                }
+            }
+        }
+        OvrLogistic { num_labels, dim, w }
+    }
+
+    /// Per-label scores for one embedding.
+    pub fn scores(&self, e: &[f32]) -> Vec<f32> {
+        (0..self.num_labels)
+            .map(|l| {
+                let wl = &self.w[l * (self.dim + 1)..(l + 1) * (self.dim + 1)];
+                let mut z = wl[self.dim];
+                for j in 0..self.dim {
+                    z += wl[j] * e[j];
+                }
+                z
+            })
+            .collect()
+    }
+
+    /// Predict the top-`k` labels (the BlogCatalog protocol feeds the true
+    /// label count as `k`).
+    pub fn predict_topk(&self, e: &[f32], k: usize) -> Vec<u16> {
+        let scores = self.scores(e);
+        let mut idx: Vec<usize> = (0..self.num_labels).collect();
+        idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+        let mut out: Vec<u16> = idx.into_iter().take(k).map(|l| l as u16).collect();
+        out.sort_unstable();
+        out
+    }
+}
+
+/// Micro/macro F1 over a multi-label test set.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct F1Scores {
+    pub micro: f64,
+    pub macro_: f64,
+}
+
+/// Compute F1s from per-vertex (true, predicted) label sets.
+pub fn f1_scores(truths: &[&[u16]], preds: &[Vec<u16>], num_labels: usize) -> F1Scores {
+    let mut tp = vec![0u64; num_labels];
+    let mut fp = vec![0u64; num_labels];
+    let mut fnn = vec![0u64; num_labels];
+    for (t, p) in truths.iter().zip(preds) {
+        for &l in p.iter() {
+            if t.contains(&l) {
+                tp[l as usize] += 1;
+            } else {
+                fp[l as usize] += 1;
+            }
+        }
+        for &l in t.iter() {
+            if !p.contains(&l) {
+                fnn[l as usize] += 1;
+            }
+        }
+    }
+    let (tp_s, fp_s, fn_s) = (
+        tp.iter().sum::<u64>() as f64,
+        fp.iter().sum::<u64>() as f64,
+        fnn.iter().sum::<u64>() as f64,
+    );
+    let micro = if tp_s == 0.0 {
+        0.0
+    } else {
+        2.0 * tp_s / (2.0 * tp_s + fp_s + fn_s)
+    };
+    let mut macro_sum = 0f64;
+    let mut macro_n = 0u32;
+    for l in 0..num_labels {
+        let denom = 2 * tp[l] + fp[l] + fnn[l];
+        if tp[l] + fnn[l] == 0 {
+            continue; // label absent from the test set
+        }
+        macro_n += 1;
+        if denom > 0 {
+            macro_sum += 2.0 * tp[l] as f64 / denom as f64;
+        }
+    }
+    F1Scores {
+        micro,
+        macro_: if macro_n == 0 { 0.0 } else { macro_sum / macro_n as f64 },
+    }
+}
+
+/// Full evaluation: split, fit, predict top-kᵥ, score.
+pub fn evaluate(
+    embeddings: &[Vec<f32>],
+    labels: &[Vec<u16>],
+    num_labels: usize,
+    cfg: &ClassifyConfig,
+) -> F1Scores {
+    let n = embeddings.len();
+    assert_eq!(labels.len(), n);
+    let mut idx: Vec<usize> = (0..n).collect();
+    let mut rng: Xoshiro256pp = stream(cfg.seed, 0xC1A5, 0, 0);
+    rng.shuffle(&mut idx);
+    let cut = ((n as f64) * cfg.train_fraction).round() as usize;
+    let (train_idx, test_idx) = idx.split_at(cut.clamp(1, n - 1));
+    let model = OvrLogistic::fit(embeddings, labels, num_labels, train_idx, cfg);
+    let truths: Vec<&[u16]> = test_idx.iter().map(|&i| labels[i].as_slice()).collect();
+    let preds: Vec<Vec<u16>> = test_idx
+        .iter()
+        .map(|&i| model.predict_topk(&embeddings[i], labels[i].len()))
+        .collect();
+    f1_scores(&truths, &preds, num_labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f1_on_perfect_and_empty_predictions() {
+        let truths: Vec<&[u16]> = vec![&[0, 1], &[2]];
+        let perfect = vec![vec![0, 1], vec![2]];
+        let s = f1_scores(&truths, &perfect, 3);
+        assert!((s.micro - 1.0).abs() < 1e-12);
+        assert!((s.macro_ - 1.0).abs() < 1e-12);
+        let nothing = vec![vec![], vec![]];
+        let s0 = f1_scores(&truths, &nothing, 3);
+        assert_eq!(s0.micro, 0.0);
+        assert_eq!(s0.macro_, 0.0);
+    }
+
+    #[test]
+    fn f1_partial_credit() {
+        let truths: Vec<&[u16]> = vec![&[0, 1]];
+        let preds = vec![vec![0, 2]];
+        let s = f1_scores(&truths, &preds, 3);
+        // tp=1 fp=1 fn=1 -> micro = 2/(2+1+1) = 0.5
+        assert!((s.micro - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn separable_embeddings_classify_well() {
+        // Two clusters in 2-D with single labels: near-perfect F1 expected.
+        let mut embeddings = Vec::new();
+        let mut labels: Vec<Vec<u16>> = Vec::new();
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        for i in 0..200 {
+            let c = (i % 2) as f32;
+            embeddings.push(vec![
+                c * 2.0 - 1.0 + 0.1 * rng.next_f64() as f32,
+                0.5 * rng.next_f64() as f32,
+            ]);
+            labels.push(vec![(i % 2) as u16]);
+        }
+        let s = evaluate(&embeddings, &labels, 2, &ClassifyConfig::default());
+        assert!(s.micro > 0.95, "micro {}", s.micro);
+        assert!(s.macro_ > 0.95, "macro {}", s.macro_);
+    }
+
+    #[test]
+    fn random_embeddings_score_poorly() {
+        let mut rng = Xoshiro256pp::seed_from_u64(8);
+        let embeddings: Vec<Vec<f32>> = (0..300)
+            .map(|_| (0..8).map(|_| rng.next_f64() as f32).collect())
+            .collect();
+        let labels: Vec<Vec<u16>> = (0..300)
+            .map(|_| vec![rng.next_bounded(10) as u16])
+            .collect();
+        let s = evaluate(&embeddings, &labels, 10, &ClassifyConfig::default());
+        assert!(s.micro < 0.35, "micro {} suspiciously high", s.micro);
+    }
+
+    #[test]
+    fn topk_prediction_is_sorted_and_sized() {
+        let model = OvrLogistic {
+            num_labels: 5,
+            dim: 2,
+            w: vec![
+                1.0, 0.0, 0.0, // label 0 likes x
+                0.0, 1.0, 0.0, // label 1 likes y
+                -1.0, 0.0, 0.0, 0.0, -1.0, 0.0, 0.5, 0.5, 0.0,
+            ],
+        };
+        let p = model.predict_topk(&[1.0, 0.1], 2);
+        assert_eq!(p.len(), 2);
+        assert!(p.contains(&0));
+        assert!(p.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn train_fraction_extremes_are_clamped() {
+        let embeddings = vec![vec![0.0f32; 4]; 10];
+        let labels = vec![vec![0u16]; 10];
+        for frac in [0.01, 0.99] {
+            let cfg = ClassifyConfig {
+                train_fraction: frac,
+                iters: 5,
+                ..Default::default()
+            };
+            let _ = evaluate(&embeddings, &labels, 2, &cfg); // must not panic
+        }
+    }
+}

@@ -1,0 +1,459 @@
+//! SGNS embedding trainer: turns walk sets into vertex embeddings.
+//!
+//! This is the Node2Vec optimization stage (the paper's Figure-1 "SGD"
+//! slice). The batch pipeline lives here in Rust; the per-batch compute is
+//! the AOT-compiled JAX/Pallas step driven through [`crate::runtime`]
+//! (Python never runs at training time). A pure-Rust implementation of the
+//! same math ([`RustSgns`]) serves as the oracle for the runtime path and
+//! as a fallback when artifacts are absent.
+//!
+//! Batch construction follows word2vec/Node2Vec conventions:
+//! - (center, context) pairs are drawn uniformly from walk positions with
+//!   a window offset in `[-window, window] \ {0}`;
+//! - negatives are drawn from the unigram(walk visit counts)^0.75 table;
+//! - the learning rate decays linearly.
+
+use anyhow::Result;
+
+use crate::node2vec::WalkSet;
+use crate::runtime::SgnsRuntime;
+use crate::util::alias::AliasTable;
+use crate::util::rng::{stream, Xoshiro256pp};
+
+/// Trainer configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct TrainConfig {
+    /// Skip-gram window (paper/word2vec default 10).
+    pub window: usize,
+    pub steps: u32,
+    pub lr_start: f32,
+    pub lr_end: f32,
+    pub seed: u64,
+    /// Log the loss every `log_every` steps (0 = never). Each log costs a
+    /// state download on the CPU PJRT plugin — keep sparse.
+    pub log_every: u32,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            window: 10,
+            steps: 1500,
+            lr_start: 0.2,
+            lr_end: 0.02,
+            seed: 42,
+            log_every: 100,
+        }
+    }
+}
+
+/// Walk corpus prepared for batch sampling.
+pub struct Corpus {
+    /// Walks with ≥ 2 vertices (a pair needs two positions).
+    walks: Vec<Vec<u32>>,
+    /// Negative-sampling table over visit counts^0.75.
+    neg_table: AliasTable,
+    /// Map from table index to vertex id (only visited vertices).
+    neg_vertices: Vec<u32>,
+    pub num_vertices: usize,
+}
+
+impl Corpus {
+    pub fn new(walks: &WalkSet, num_vertices: usize) -> Corpus {
+        let mut counts = vec![0u64; num_vertices];
+        for w in walks {
+            for &v in w {
+                counts[v as usize] += 1;
+            }
+        }
+        let mut neg_vertices = Vec::new();
+        let mut weights = Vec::new();
+        for (v, &c) in counts.iter().enumerate() {
+            if c > 0 {
+                neg_vertices.push(v as u32);
+                weights.push((c as f32).powf(0.75));
+            }
+        }
+        let neg_table = AliasTable::new(&weights).expect("non-empty walk corpus");
+        Corpus {
+            walks: walks.iter().filter(|w| w.len() >= 2).cloned().collect(),
+            neg_table,
+            neg_vertices,
+            num_vertices,
+        }
+    }
+
+    /// Total training positions (for sizing step counts).
+    pub fn positions(&self) -> usize {
+        self.walks.iter().map(|w| w.len()).sum()
+    }
+
+    /// Fill one batch of (center, positive, negatives).
+    pub fn fill_batch(
+        &self,
+        rng: &mut Xoshiro256pp,
+        window: usize,
+        centers: &mut [i32],
+        positives: &mut [i32],
+        negatives: &mut [i32],
+    ) {
+        let b = centers.len();
+        let k = negatives.len() / b;
+        for i in 0..b {
+            let w = &self.walks[rng.next_index(self.walks.len())];
+            let ci = rng.next_index(w.len());
+            // Offset in [-window, window], != 0, clamped into the walk.
+            let off_mag = 1 + rng.next_index(window.max(1));
+            let off = if rng.bernoulli(0.5) {
+                off_mag as isize
+            } else {
+                -(off_mag as isize)
+            };
+            let pi = (ci as isize + off).clamp(0, w.len() as isize - 1) as usize;
+            let pi = if pi == ci { (ci + 1) % w.len() } else { pi };
+            centers[i] = w[ci] as i32;
+            positives[i] = w[pi] as i32;
+            for slot in 0..k {
+                let nv = self.neg_vertices[self.neg_table.sample(rng)];
+                negatives[i * k + slot] = nv as i32;
+            }
+        }
+    }
+}
+
+/// Loss-curve entry.
+#[derive(Clone, Copy, Debug)]
+pub struct LossPoint {
+    pub step: u32,
+    pub loss: f32,
+}
+
+/// Train through the PJRT runtime (the production path).
+pub fn train(
+    runtime: &mut SgnsRuntime,
+    corpus: &Corpus,
+    cfg: &TrainConfig,
+) -> Result<Vec<LossPoint>> {
+    let b = runtime.variant.batch;
+    let k = runtime.variant.negatives;
+    let mut centers = vec![0i32; b];
+    let mut positives = vec![0i32; b];
+    let mut negatives = vec![0i32; b * k];
+    let mut curve = Vec::new();
+    let mut rng = stream(cfg.seed, 0xBA7C, 0, 0);
+    for step in 0..cfg.steps {
+        let t = step as f32 / cfg.steps.max(1) as f32;
+        let lr = cfg.lr_start + (cfg.lr_end - cfg.lr_start) * t;
+        corpus.fill_batch(&mut rng, cfg.window, &mut centers, &mut positives, &mut negatives);
+        runtime.step_quiet(&centers, &positives, &negatives, lr)?;
+        if cfg.log_every > 0 && (step % cfg.log_every == 0 || step + 1 == cfg.steps) {
+            curve.push(LossPoint {
+                step,
+                loss: runtime.last_loss()?,
+            });
+        }
+    }
+    Ok(curve)
+}
+
+/// Pure-Rust SGNS with identical math — the oracle for the runtime path
+/// and the fallback when `artifacts/` is absent.
+pub struct RustSgns {
+    pub dim: usize,
+    pub w_in: Vec<f32>,
+    pub w_out: Vec<f32>,
+    pub num_vertices: usize,
+}
+
+impl RustSgns {
+    /// Same init distribution as [`SgnsRuntime::load`] (not bit-identical:
+    /// the runtime packs tables into the fused state in a different RNG
+    /// order; tests compare losses statistically, not exactly).
+    pub fn new(num_vertices: usize, dim: usize, seed: u64) -> RustSgns {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed ^ 0x5635);
+        let scale = 0.5 / dim as f32;
+        let mut init = || -> Vec<f32> {
+            (0..num_vertices * dim)
+                .map(|_| (rng.next_f64() as f32 * 2.0 - 1.0) * scale)
+                .collect()
+        };
+        let w_in = init();
+        let w_out = init();
+        RustSgns {
+            dim,
+            w_in,
+            w_out,
+            num_vertices,
+        }
+    }
+
+    #[inline]
+    fn sigmoid(x: f32) -> f32 {
+        1.0 / (1.0 + (-x).exp())
+    }
+
+    /// One SGD step; returns the mean batch loss.
+    pub fn step(&mut self, centers: &[i32], positives: &[i32], negatives: &[i32], lr: f32) -> f32 {
+        let d = self.dim;
+        let b = centers.len();
+        let k = negatives.len() / b;
+        let mut total = 0f64;
+        let mut dc = vec![0f32; d];
+        for i in 0..b {
+            let c0 = centers[i] as usize * d;
+            let o0 = positives[i] as usize * d;
+            dc.iter_mut().for_each(|x| *x = 0.0);
+            // Positive pair.
+            let mut pos = 0f32;
+            for j in 0..d {
+                pos += self.w_in[c0 + j] * self.w_out[o0 + j];
+            }
+            let gp = Self::sigmoid(pos) - 1.0;
+            total += softplus(-pos) as f64;
+            for j in 0..d {
+                dc[j] += gp * self.w_out[o0 + j];
+                self.w_out[o0 + j] -= lr * gp * self.w_in[c0 + j];
+            }
+            // Negatives.
+            for s in 0..k {
+                let n0 = negatives[i * k + s] as usize * d;
+                let mut neg = 0f32;
+                for j in 0..d {
+                    neg += self.w_in[c0 + j] * self.w_out[n0 + j];
+                }
+                let gn = Self::sigmoid(neg);
+                total += softplus(neg) as f64;
+                for j in 0..d {
+                    dc[j] += gn * self.w_out[n0 + j];
+                    self.w_out[n0 + j] -= lr * gn * self.w_in[c0 + j];
+                }
+            }
+            for j in 0..d {
+                self.w_in[c0 + j] -= lr * dc[j];
+            }
+        }
+        (total / b as f64) as f32
+    }
+
+    /// Train over a corpus with the same schedule as [`train`].
+    pub fn train(
+        &mut self,
+        corpus: &Corpus,
+        cfg: &TrainConfig,
+        batch: usize,
+        k: usize,
+    ) -> Vec<LossPoint> {
+        let mut centers = vec![0i32; batch];
+        let mut positives = vec![0i32; batch];
+        let mut negatives = vec![0i32; batch * k];
+        let mut curve = Vec::new();
+        let mut rng = stream(cfg.seed, 0xBA7C, 0, 0);
+        for step in 0..cfg.steps {
+            let t = step as f32 / cfg.steps.max(1) as f32;
+            let lr = cfg.lr_start + (cfg.lr_end - cfg.lr_start) * t;
+            corpus.fill_batch(&mut rng, cfg.window, &mut centers, &mut positives, &mut negatives);
+            let loss = self.step(&centers, &positives, &negatives, lr);
+            if cfg.log_every > 0 && (step % cfg.log_every == 0 || step + 1 == cfg.steps) {
+                curve.push(LossPoint { step, loss });
+            }
+        }
+        curve
+    }
+
+    pub fn embeddings(&self) -> Vec<Vec<f32>> {
+        self.w_in.chunks_exact(self.dim).map(|r| r.to_vec()).collect()
+    }
+}
+
+#[inline]
+fn softplus(x: f32) -> f32 {
+    if x > 20.0 {
+        x
+    } else {
+        (1.0 + x.exp()).ln()
+    }
+}
+
+/// Cosine similarity between two embedding rows.
+pub fn cosine(a: &[f32], b: &[f32]) -> f32 {
+    let mut dot = 0f32;
+    let mut na = 0f32;
+    let mut nb = 0f32;
+    for (x, y) in a.iter().zip(b) {
+        dot += x * y;
+        na += x * x;
+        nb += y * y;
+    }
+    dot / (na.sqrt() * nb.sqrt()).max(1e-12)
+}
+
+/// Top-`k` nearest vertices to `v` by cosine similarity.
+pub fn nearest(embeddings: &[Vec<f32>], v: usize, k: usize) -> Vec<(usize, f32)> {
+    let mut scored: Vec<(usize, f32)> = embeddings
+        .iter()
+        .enumerate()
+        .filter(|(u, _)| *u != v)
+        .map(|(u, e)| (u, cosine(e, &embeddings[v])))
+        .collect();
+    scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    scored.truncate(k);
+    scored
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{labeled_community_graph, LabeledConfig};
+    use crate::graph::partition::Partitioner;
+    use crate::node2vec::{run_walks, FnConfig};
+    use crate::pregel::EngineOpts;
+
+    fn tiny_walks() -> (crate::graph::Graph, WalkSet) {
+        let lg = labeled_community_graph(&LabeledConfig::tiny(5));
+        let cfg = FnConfig::new(1.0, 1.0, 3).with_walk_length(20);
+        let out = run_walks(&lg.graph, Partitioner::hash(4), &cfg, EngineOpts::default(), 1)
+            .unwrap();
+        (lg.graph, out.walks)
+    }
+
+    #[test]
+    fn corpus_counts_and_tables() {
+        let (g, walks) = tiny_walks();
+        let corpus = Corpus::new(&walks, g.num_vertices());
+        assert!(corpus.positions() > g.num_vertices() * 10);
+        // Negatives come from visited vertices only.
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let mut c = vec![0i32; 8];
+        let mut p = vec![0i32; 8];
+        let mut n = vec![0i32; 8 * 5];
+        corpus.fill_batch(&mut rng, 10, &mut c, &mut p, &mut n);
+        for &x in c.iter().chain(&p).chain(&n) {
+            assert!((x as usize) < g.num_vertices());
+        }
+        // Walks revisit vertices, so (v, v) pairs can occur — but they
+        // must be the exception, not the rule.
+        let degenerate = (0..8).filter(|&i| c[i] == p[i]).count();
+        assert!(degenerate < 4, "{degenerate}/8 degenerate pairs");
+    }
+
+    #[test]
+    fn rust_sgns_loss_decreases() {
+        let (g, walks) = tiny_walks();
+        let corpus = Corpus::new(&walks, g.num_vertices());
+        let mut model = RustSgns::new(g.num_vertices(), 32, 7);
+        let cfg = TrainConfig {
+            steps: 300,
+            log_every: 50,
+            ..Default::default()
+        };
+        let curve = model.train(&corpus, &cfg, 128, 5);
+        assert!(curve.len() >= 3);
+        let first = curve.first().unwrap().loss;
+        let last = curve.last().unwrap().loss;
+        assert!(
+            last < first * 0.8,
+            "loss did not decrease: {first} -> {last}"
+        );
+    }
+
+    #[test]
+    fn embeddings_capture_communities() {
+        // After training, a vertex should be closer to a same-community
+        // vertex than to the average other vertex.
+        let lg = labeled_community_graph(&LabeledConfig::tiny(9));
+        let cfg = FnConfig::new(1.0, 1.0, 3).with_walk_length(20);
+        let out = run_walks(&lg.graph, Partitioner::hash(4), &cfg, EngineOpts::default(), 1)
+            .unwrap();
+        let corpus = Corpus::new(&out.walks, lg.graph.num_vertices());
+        let mut model = RustSgns::new(lg.graph.num_vertices(), 32, 3);
+        let tcfg = TrainConfig {
+            steps: 1200,
+            log_every: 0,
+            ..Default::default()
+        };
+        model.train(&corpus, &tcfg, 128, 5);
+        let emb = model.embeddings();
+        // Average same-community vs cross-community cosine over a sample.
+        let mut rng = Xoshiro256pp::seed_from_u64(11);
+        let (mut same, mut cross) = (0f64, 0f64);
+        let (mut ns, mut nc) = (0u32, 0u32);
+        for _ in 0..4000 {
+            let a = rng.next_index(emb.len());
+            let b = rng.next_index(emb.len());
+            if a == b {
+                continue;
+            }
+            let shared = lg.labels[a].iter().any(|l| lg.labels[b].contains(l));
+            let cs = cosine(&emb[a], &emb[b]) as f64;
+            if shared {
+                same += cs;
+                ns += 1;
+            } else {
+                cross += cs;
+                nc += 1;
+            }
+        }
+        let same = same / ns as f64;
+        let cross = cross / nc as f64;
+        assert!(
+            same > cross + 0.05,
+            "communities not separated: same {same:.3} cross {cross:.3}"
+        );
+    }
+
+    #[test]
+    fn cosine_and_nearest_helpers() {
+        let e = vec![
+            vec![1.0, 0.0],
+            vec![0.9, 0.1],
+            vec![0.0, 1.0],
+            vec![-1.0, 0.0],
+        ];
+        assert!((cosine(&e[0], &e[0]) - 1.0).abs() < 1e-6);
+        assert!(cosine(&e[0], &e[3]) < -0.99);
+        let nn = nearest(&e, 0, 2);
+        assert_eq!(nn[0].0, 1);
+        assert_eq!(nn[1].0, 2);
+    }
+
+    #[test]
+    fn runtime_and_rust_oracle_agree_on_first_step() {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.txt").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let (g, walks) = tiny_walks();
+        let corpus = Corpus::new(&walks, g.num_vertices());
+        let mut rt = crate::runtime::SgnsRuntime::load(&dir, g.num_vertices(), 99).unwrap();
+        let b = rt.variant.batch;
+        let k = rt.variant.negatives;
+        let d = rt.variant.dim;
+        let mut rust = RustSgns::new(g.num_vertices(), d, 99);
+        // Align the initial tables exactly: copy the runtime's init.
+        let emb0 = rt.embeddings().unwrap();
+        for (v, row) in emb0.iter().enumerate() {
+            rust.w_in[v * d..(v + 1) * d].copy_from_slice(row);
+        }
+        // w_out is not exposed; compare losses over a few steps instead of
+        // exact table equality (both must track closely from the same
+        // batches even with different w_out inits).
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        let mut c = vec![0i32; b];
+        let mut p = vec![0i32; b];
+        let mut n = vec![0i32; b * k];
+        let mut rt_losses = Vec::new();
+        let mut rs_losses = Vec::new();
+        for _ in 0..5 {
+            corpus.fill_batch(&mut rng, 10, &mut c, &mut p, &mut n);
+            rt_losses.push(rt.step(&c, &p, &n, 0.1).unwrap());
+            rs_losses.push(rust.step(&c, &p, &n, 0.1));
+        }
+        for (a, b) in rt_losses.iter().zip(&rs_losses) {
+            assert!(
+                (a - b).abs() < 0.15,
+                "runtime and oracle diverge: {rt_losses:?} vs {rs_losses:?}"
+            );
+        }
+    }
+}

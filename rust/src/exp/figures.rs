@@ -1,0 +1,635 @@
+//! Per-figure experiment drivers. Each function regenerates one table or
+//! figure of the paper's evaluation (§4) at the scaled-down substitution
+//! scale and prints the same rows/series the paper reports. Results are
+//! also returned as data for benches/tests and EXPERIMENTS.md.
+
+use crate::baselines::spark_sim::SparkNode2Vec;
+use crate::classify::F1Scores;
+use crate::embed::TrainConfig;
+use crate::gen::{self, LabeledConfig};
+use crate::graph::partition::Partitioner;
+use crate::node2vec::{run_walks, FnConfig, Variant};
+use crate::pregel::EngineOpts;
+use crate::util::benchkit::print_table;
+use crate::util::stats::{EquiWidthHist, Log2Hist};
+use crate::util::{fmt_bytes, fmt_secs};
+
+use super::common::{
+    build_graph, popular_threshold, run_solution, Budgets, RunOutcome, Scale, Solution,
+    PQ_SETTINGS, WORKERS,
+};
+use super::pipeline::{classify_fractions, embeddings_from_walks};
+
+/// Table 1: statistics of the evaluation graphs (ours vs the paper's).
+pub fn table1(scale: Scale, seed: u64) -> Vec<(String, Vec<String>)> {
+    let mut names: Vec<String> = vec![
+        "blogcatalog".into(),
+        "livejournal".into(),
+        "orkut".into(),
+        "friendster".into(),
+    ];
+    let (er_lo, er_hi, wec_lo, wec_hi) = match scale {
+        Scale::Full => (14u32, 20u32, 14u32, 17u32),
+        Scale::Quick => (10, 12, 10, 11),
+    };
+    for k in er_lo..=er_hi {
+        names.push(format!("er-{k}"));
+    }
+    for k in wec_lo..=wec_hi {
+        names.push(format!("wec-{k}"));
+    }
+    for s in 1..=5 {
+        names.push(format!("skew-{s}"));
+    }
+    let mut rows = Vec::new();
+    for name in &names {
+        let ng = build_graph(name, scale, seed);
+        let st = ng.graph.stats();
+        rows.push((
+            ng.name.clone(),
+            vec![
+                st.num_vertices.to_string(),
+                st.num_edges.to_string(),
+                st.max_degree.to_string(),
+                format!("{:.1}", st.avg_degree),
+                ng.paper_ref.to_string(),
+            ],
+        ));
+    }
+    print_table(
+        "Table 1: graphs (scaled analogues; rightmost column = paper's original)",
+        &["|V|", "|E|", "max deg", "avg deg", "paper"],
+        &rows,
+    );
+    rows
+}
+
+/// Figure 1: Node2Vec runtime breakdown for the Spark implementation
+/// (paper: random walk 98.8%, SGD 1.2% on BlogCatalog).
+pub struct Fig1Data {
+    pub walk_secs: f64,
+    pub sgd_secs: f64,
+}
+
+pub fn fig1(scale: Scale, seed: u64) -> Fig1Data {
+    let lg = gen::labeled_community_graph(&LabeledConfig::blogcatalog_like(seed));
+    let cfg = FnConfig::new(0.5, 2.0, seed).with_walk_length(scale.walk_length());
+    let t0 = std::time::Instant::now();
+    let (walks, _) = SparkNode2Vec::run(&lg.graph, &cfg, None, WORKERS).expect("spark run");
+    let walk_secs = t0.elapsed().as_secs_f64();
+    let tcfg = TrainConfig {
+        steps: match scale {
+            Scale::Full => 1000,
+            Scale::Quick => 50,
+        },
+        log_every: 0,
+        ..Default::default()
+    };
+    let emb = embeddings_from_walks(&walks, lg.graph.num_vertices(), &tcfg).expect("embed");
+    let total = walk_secs + emb.train_secs;
+    print_table(
+        "Figure 1: Spark-Node2Vec runtime breakdown (paper: walk 98.8% / SGD 1.2%)",
+        &["secs", "% of total"],
+        &[
+            (
+                "random walk".into(),
+                vec![fmt_secs(walk_secs), format!("{:.1}%", 100.0 * walk_secs / total)],
+            ),
+            (
+                "SGD (SGNS)".into(),
+                vec![
+                    fmt_secs(emb.train_secs),
+                    format!("{:.1}%", 100.0 * emb.train_secs / total),
+                ],
+            ),
+        ],
+    );
+    Fig1Data {
+        walk_secs,
+        sgd_secs: emb.train_secs,
+    }
+}
+
+/// Figures 4 + 14 share this: FN-Base memory series per superstep.
+pub struct MemorySeries {
+    pub base_bytes: u64,
+    /// (superstep, message bytes held).
+    pub per_superstep: Vec<(u32, u64)>,
+}
+
+fn memory_series(graph_name: &str, scale: Scale, seed: u64) -> MemorySeries {
+    let ng = build_graph(graph_name, scale, seed);
+    let cfg = FnConfig::new(0.5, 2.0, seed)
+        .with_walk_length(scale.walk_length())
+        .with_popular_threshold(popular_threshold(&ng.graph));
+    let out = run_walks(
+        &ng.graph,
+        Partitioner::hash(WORKERS),
+        &cfg,
+        EngineOpts::default(),
+        1,
+    )
+    .expect("walk run");
+    MemorySeries {
+        base_bytes: out.metrics.base_bytes,
+        per_superstep: out
+            .metrics
+            .supersteps
+            .iter()
+            .map(|s| (s.superstep, s.msg_mem_bytes))
+            .collect(),
+    }
+}
+
+/// Figure 4: memory rises then flattens (FN-Base, com-Friendster~).
+pub fn fig4(scale: Scale, seed: u64) -> MemorySeries {
+    let series = memory_series("friendster", scale, seed);
+    let rows: Vec<(String, Vec<String>)> = series
+        .per_superstep
+        .iter()
+        .map(|(s, b)| {
+            (
+                format!("superstep {s:>3}"),
+                vec![fmt_bytes(*b), fmt_bytes(series.base_bytes + b)],
+            )
+        })
+        .collect();
+    print_table(
+        "Figure 4: FN-Base memory vs superstep (com-Friendster~; paper: rises then flattens)",
+        &["messages", "total (base+msgs)"],
+        &rows,
+    );
+    series
+}
+
+/// Figure 5: average walk visit frequency per degree bucket.
+pub fn fig5(scale: Scale, seed: u64) -> Vec<(u64, f64)> {
+    let ng = build_graph("friendster", scale, seed);
+    let cfg = FnConfig::new(0.5, 2.0, seed).with_walk_length(scale.walk_length());
+    let out = run_walks(
+        &ng.graph,
+        Partitioner::hash(WORKERS),
+        &cfg,
+        EngineOpts::default(),
+        1,
+    )
+    .expect("walk run");
+    let mut visits = vec![0u64; ng.graph.num_vertices()];
+    for w in &out.walks {
+        for &v in w {
+            visits[v as usize] += 1;
+        }
+    }
+    // Paper buckets width 200 at Friendster scale; scale with avg degree.
+    let width = (2.0 * ng.graph.stats().avg_degree).max(4.0) as u64;
+    let mut hist = EquiWidthHist::new(width, 24);
+    for v in ng.graph.vertices() {
+        hist.push(ng.graph.degree(v) as u64, visits[v as usize] as f64);
+    }
+    let means = hist.means();
+    let data: Vec<(u64, f64)> = means
+        .iter()
+        .enumerate()
+        .filter(|(_, m)| !m.is_nan())
+        .map(|(i, m)| (hist.label(i), *m))
+        .collect();
+    let rows: Vec<(String, Vec<String>)> = data
+        .iter()
+        .map(|(label, m)| (format!("deg ≤{label}"), vec![format!("{m:.2}")]))
+        .collect();
+    print_table(
+        "Figure 5: avg visit frequency vs degree bucket (paper: grows with degree)",
+        &["avg visits/vertex"],
+        &rows,
+    );
+    data
+}
+
+/// Figure 6: node classification accuracy on BlogCatalog~.
+pub struct Fig6Row {
+    pub solution: &'static str,
+    pub p: f32,
+    pub q: f32,
+    pub fraction: f64,
+    pub scores: F1Scores,
+}
+
+pub fn fig6(scale: Scale, seed: u64) -> Vec<Fig6Row> {
+    let lg = gen::labeled_community_graph(&LabeledConfig::blogcatalog_like(seed));
+    let n = lg.graph.num_vertices();
+    let fractions: &[f64] = match scale {
+        Scale::Full => &[0.1, 0.5, 0.9],
+        Scale::Quick => &[0.5],
+    };
+    let steps = match scale {
+        Scale::Full => 3000,
+        Scale::Quick => 200,
+    };
+    let mut out_rows = Vec::new();
+    let mut printed: Vec<(String, Vec<String>)> = Vec::new();
+    for &(p, q) in &PQ_SETTINGS {
+        let solutions: [(&'static str, Solution); 4] = [
+            ("C-Node2Vec", Solution::CNode2Vec),
+            ("Spark-Node2Vec", Solution::Spark),
+            ("FN-Exact", Solution::Fn(Variant::Cache)),
+            ("FN-Approx", Solution::Fn(Variant::Approx)),
+        ];
+        for (label, sol) in solutions {
+            let RunOutcome::Secs(_, Some(walks)) =
+                run_solution(sol, &lg.graph, p, q, scale.walk_length(), seed, true)
+            else {
+                printed.push((format!("{label} p={p} q={q}"), vec!["OOM".into(); 1]));
+                continue;
+            };
+            let tcfg = TrainConfig {
+                steps,
+                log_every: 0,
+                seed,
+                ..Default::default()
+            };
+            let emb = embeddings_from_walks(&walks, n, &tcfg).expect("embed");
+            for (frac, scores) in
+                classify_fractions(&emb.embeddings, &lg.labels, lg.num_labels, fractions, seed)
+            {
+                out_rows.push(Fig6Row {
+                    solution: label,
+                    p,
+                    q,
+                    fraction: frac,
+                    scores,
+                });
+                printed.push((
+                    format!("{label} p={p} q={q} frac={frac}"),
+                    vec![
+                        format!("{:.3}", scores.micro),
+                        format!("{:.3}", scores.macro_),
+                    ],
+                ));
+            }
+        }
+    }
+    print_table(
+        "Figure 6: node classification on BlogCatalog~ (paper: Spark ≪ others)",
+        &["micro-F1", "macro-F1"],
+        &printed,
+    );
+    out_rows
+}
+
+/// Figure 7: execution time of all seven solutions on the real-world
+/// analogues (plus the OOM marks).
+pub fn fig7(scale: Scale, seed: u64) -> Vec<(String, Vec<String>)> {
+    let graphs = ["blogcatalog", "livejournal", "orkut"];
+    let mut rows = Vec::new();
+    for gname in graphs {
+        let ng = build_graph(gname, scale, seed);
+        for &(p, q) in &PQ_SETTINGS {
+            let mut cells = Vec::new();
+            let mut spark_secs: Option<f64> = None;
+            let mut base_secs: Option<f64> = None;
+            for sol in Solution::FIG7 {
+                let out =
+                    run_solution(sol, &ng.graph, p, q, scale.walk_length(), seed, false);
+                if sol == Solution::Spark {
+                    spark_secs = out.secs();
+                }
+                if sol == Solution::Fn(Variant::Base) {
+                    base_secs = out.secs();
+                }
+                cells.push(out.cell());
+            }
+            let speedup = match (spark_secs, base_secs) {
+                (Some(s), Some(b)) if b > 0.0 => format!("{:.1}x", s / b),
+                _ => "-".into(),
+            };
+            cells.push(speedup);
+            rows.push((format!("{} p={p} q={q}", ng.name), cells));
+        }
+    }
+    let mut header: Vec<&str> = Solution::FIG7.iter().map(|s| s.name()).collect();
+    header.push("Spark/FN-Base");
+    print_table(
+        "Figure 7: execution time, all solutions (paper: FN-Base 7.7-22x over Spark; Spark+C-N2V OOM on Orkut)",
+        &header,
+        &rows,
+    );
+    rows
+}
+
+/// Figure 8: com-Friendster~ under a tight cache budget.
+pub fn fig8(scale: Scale, seed: u64) -> Vec<(String, Vec<String>)> {
+    let ng = build_graph("friendster", scale, seed);
+    let mut rows = Vec::new();
+    for &(p, q) in &PQ_SETTINGS {
+        let mut cells = Vec::new();
+        for variant in [Variant::Base, Variant::Cache, Variant::Approx] {
+            let cfg = FnConfig::new(p, q, seed)
+                .with_walk_length(scale.walk_length())
+                .with_popular_threshold(popular_threshold(&ng.graph))
+                .with_variant(variant);
+            // The paper's point: FN-Base already nearly fills memory, so
+            // the cache has little headroom — model with a small
+            // per-worker cache capacity.
+            let opts = EngineOpts {
+                cache_capacity: Some(256 * 1024),
+                ..Default::default()
+            };
+            let t = std::time::Instant::now();
+            let out = run_walks(&ng.graph, Partitioner::hash(WORKERS), &cfg, opts, 1)
+                .expect("walk run");
+            let _ = out;
+            cells.push(fmt_secs(t.elapsed().as_secs_f64()));
+        }
+        rows.push((format!("p={p} q={q}"), cells));
+    }
+    print_table(
+        "Figure 8: com-Friendster~ (paper: cache shows limited benefit when memory is tight)",
+        &["FN-Base", "FN-Cache", "FN-Approx"],
+        &rows,
+    );
+    rows
+}
+
+/// Figures 9/11: scalability sweeps. Returns (K, solution, secs-or-None).
+pub fn scaling_sweep(
+    prefix: &str,
+    ks: std::ops::RangeInclusive<u32>,
+    solutions: &[Solution],
+    scale: Scale,
+    seed: u64,
+) -> Vec<(u32, &'static str, Option<f64>)> {
+    let mut data = Vec::new();
+    let mut rows = Vec::new();
+    for k in ks {
+        let ng = build_graph(&format!("{prefix}-{k}"), scale, seed);
+        let mut cells = Vec::new();
+        for &sol in solutions {
+            let out = run_solution(sol, &ng.graph, 0.5, 2.0, scale.walk_length(), seed, false);
+            data.push((k, sol.name(), out.secs()));
+            cells.push(out.cell());
+        }
+        rows.push((ng.name, cells));
+    }
+    let header: Vec<&str> = solutions.iter().map(|s| s.name()).collect();
+    print_table(
+        &format!("{prefix}-K scaling (paper: linear in |V|; C-N2V OOMs past its memory)"),
+        &header,
+        &rows,
+    );
+    data
+}
+
+/// Figure 9: ER-K scaling of FN-Base vs C-Node2Vec. C-Node2Vec runs under
+/// the sweep-scaled single-machine budget so it OOMs at the top of the
+/// range, as in the paper (K ≥ 26 at paper scale).
+pub fn fig9(scale: Scale, seed: u64) -> Vec<(u32, &'static str, Option<f64>)> {
+    let ks = match scale {
+        Scale::Full => 14..=19,
+        Scale::Quick => 10..=12,
+    };
+    let mut data = Vec::new();
+    let mut rows = Vec::new();
+    for k in ks {
+        let ng = build_graph(&format!("er-{k}"), scale, seed);
+        let fn_cfg = FnConfig::new(0.5, 2.0, seed).with_walk_length(scale.walk_length());
+        // FN-Base.
+        let out = run_solution(
+            Solution::Fn(Variant::Base),
+            &ng.graph,
+            0.5,
+            2.0,
+            scale.walk_length(),
+            seed,
+            false,
+        );
+        let mut cells = vec![out.cell()];
+        data.push((k, "FN-Base", out.secs()));
+        // C-Node2Vec under the sweep-scaled budget.
+        let budget = match scale {
+            Scale::Full => Budgets::SINGLE_MACHINE_SCALED,
+            Scale::Quick => Budgets::SINGLE_MACHINE,
+        };
+        let t = std::time::Instant::now();
+        let c = match crate::baselines::cnode2vec::CNode2Vec::preprocess(
+            &ng.graph,
+            &fn_cfg,
+            Some(budget),
+        ) {
+            Err(_) => {
+                cells.push("x (OOM)".into());
+                data.push((k, "C-Node2Vec", None));
+                rows.push((ng.name, cells));
+                continue;
+            }
+            Ok(c) => c,
+        };
+        let mut c = c;
+        let _ = c.walks(&fn_cfg);
+        let secs = t.elapsed().as_secs_f64();
+        cells.push(fmt_secs(secs));
+        data.push((k, "C-Node2Vec", Some(secs)));
+        rows.push((ng.name, cells));
+    }
+    print_table(
+        "Figure 9: ER-K scaling (paper: both linear; C-N2V OOMs past its memory)",
+        &["FN-Base", "C-Node2Vec"],
+        &rows,
+    );
+    data
+}
+
+/// Figure 10 + 11: WeC-K efficiency and scaling.
+pub fn fig10(scale: Scale, seed: u64) -> Vec<(u32, &'static str, Option<f64>)> {
+    let ks = match scale {
+        Scale::Full => 14..=17,
+        Scale::Quick => 10..=11,
+    };
+    scaling_sweep(
+        "wec",
+        ks,
+        &[
+            Solution::Fn(Variant::Base),
+            Solution::Fn(Variant::Cache),
+            Solution::Fn(Variant::Approx),
+        ],
+        scale,
+        seed,
+    )
+}
+
+/// Figure 12: vertex degree distributions of Skew-S.
+pub fn fig12(scale: Scale, seed: u64) -> Vec<(u32, Vec<(u64, u64)>)> {
+    let mut out = Vec::new();
+    for s in 1..=5u32 {
+        let ng = build_graph(&format!("skew-{s}"), scale, seed);
+        let mut hist = Log2Hist::new();
+        for v in ng.graph.vertices() {
+            hist.push(ng.graph.degree(v) as u64);
+        }
+        let rows: Vec<(String, Vec<String>)> = hist
+            .rows()
+            .iter()
+            .map(|(d, c)| (format!("deg ~{d}"), vec![c.to_string()]))
+            .collect();
+        print_table(
+            &format!("Figure 12: degree distribution, Skew-{s} (paper: gaussian -> power-law)"),
+            &["vertices"],
+            &rows,
+        );
+        out.push((s, hist.rows()));
+    }
+    out
+}
+
+/// Figure 13: Skew-S execution times and speedups.
+pub struct Fig13Row {
+    pub s: u32,
+    pub p: f32,
+    pub q: f32,
+    pub base_secs: f64,
+    pub cache_secs: f64,
+    pub approx_secs: f64,
+}
+
+pub fn fig13(scale: Scale, seed: u64) -> Vec<Fig13Row> {
+    let mut data = Vec::new();
+    let mut rows = Vec::new();
+    for s in 2..=5u32 {
+        let ng = build_graph(&format!("skew-{s}"), scale, seed);
+        for &(p, q) in &PQ_SETTINGS {
+            let mut secs = [0f64; 3];
+            for (i, variant) in [Variant::Base, Variant::Cache, Variant::Approx]
+                .into_iter()
+                .enumerate()
+            {
+                let out = run_solution(
+                    Solution::Fn(variant),
+                    &ng.graph,
+                    p,
+                    q,
+                    scale.walk_length(),
+                    seed,
+                    false,
+                );
+                secs[i] = out.secs().unwrap_or(f64::NAN);
+            }
+            rows.push((
+                format!("Skew-{s} p={p} q={q}"),
+                vec![
+                    fmt_secs(secs[0]),
+                    fmt_secs(secs[1]),
+                    fmt_secs(secs[2]),
+                    format!("{:.2}x", secs[0] / secs[1]),
+                    format!("{:.2}x", secs[0] / secs[2]),
+                ],
+            ));
+            data.push(Fig13Row {
+                s,
+                p,
+                q,
+                base_secs: secs[0],
+                cache_secs: secs[1],
+                approx_secs: secs[2],
+            });
+        }
+    }
+    print_table(
+        "Figure 13: Skew-S times (paper: speedups grow with S, up to 2.68x cache / 17.2x approx)",
+        &["FN-Base", "FN-Cache", "FN-Approx", "cache spd", "approx spd"],
+        &rows,
+    );
+    data
+}
+
+/// Figure 14: FN-Base memory breakdown for Skew-S.
+pub fn fig14(scale: Scale, seed: u64) -> Vec<(u32, u64, u64)> {
+    let mut data = Vec::new();
+    let mut rows = Vec::new();
+    for s in 2..=5u32 {
+        let series = memory_series(&format!("skew-{s}"), scale, seed);
+        let peak_msgs = series
+            .per_superstep
+            .iter()
+            .map(|(_, b)| *b)
+            .max()
+            .unwrap_or(0);
+        rows.push((
+            format!("Skew-{s}"),
+            vec![
+                fmt_bytes(series.base_bytes),
+                fmt_bytes(peak_msgs),
+                format!(
+                    "{:.0}%",
+                    100.0 * peak_msgs as f64 / (series.base_bytes + peak_msgs) as f64
+                ),
+            ],
+        ));
+        data.push((s, series.base_bytes, peak_msgs));
+    }
+    print_table(
+        "Figure 14: FN-Base memory split (paper: message share grows with S)",
+        &["base (graph+values)", "messages (peak)", "msg share"],
+        &rows,
+    );
+    data
+}
+
+/// Budgets sanity: expose for tests.
+pub fn budgets() -> (u64, u64, u64) {
+    (Budgets::SINGLE_MACHINE, Budgets::SPARK, Budgets::CLUSTER)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig5_visits_grow_with_degree_quick() {
+        let data = fig5(Scale::Quick, 3);
+        assert!(data.len() >= 3);
+        let first = data.first().unwrap().1;
+        let last = data.last().unwrap().1;
+        assert!(last > first, "visit freq should grow: {data:?}");
+    }
+
+    #[test]
+    fn fig13_produces_complete_grid_quick() {
+        // The Eq. 2-3 bound needs degrees ≳ 1/ε to fire, which quick-scale
+        // graphs don't reach — the S-vs-speedup *trend* is asserted at full
+        // scale in EXPERIMENTS.md; here we check the grid is complete and
+        // sane.
+        let data = fig13(Scale::Quick, 3);
+        assert_eq!(data.len(), 4 * PQ_SETTINGS.len());
+        for r in &data {
+            assert!(r.base_secs > 0.0 && r.cache_secs > 0.0 && r.approx_secs > 0.0);
+        }
+    }
+
+    #[test]
+    fn fig14_message_share_grows_with_skew_quick() {
+        let data = fig14(Scale::Quick, 3);
+        let share = |i: usize| data[i].2 as f64 / (data[i].1 + data[i].2) as f64;
+        assert!(
+            share(data.len() - 1) > share(0) * 0.9,
+            "message share should grow with S: {data:?}"
+        );
+    }
+
+    #[test]
+    fn fig12_skew_widens_distribution_quick() {
+        let data = fig12(Scale::Quick, 3);
+        let max_bucket = |rows: &Vec<(u64, u64)>| rows.iter().map(|(d, _)| *d).max().unwrap();
+        assert!(max_bucket(&data[4].1) > max_bucket(&data[0].1));
+    }
+
+    #[test]
+    fn fig1_walk_dominates_quick() {
+        let d = fig1(Scale::Quick, 3);
+        assert!(
+            d.walk_secs > d.sgd_secs,
+            "walk {} vs sgd {}",
+            d.walk_secs,
+            d.sgd_secs
+        );
+    }
+}

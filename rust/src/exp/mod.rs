@@ -1,0 +1,263 @@
+//! Experiment drivers and the `fastn2v` CLI.
+//!
+//! `fastn2v fig --id fig7` regenerates a paper figure; `fastn2v pipeline`
+//! runs walks → embeddings → classification end to end. Every driver also
+//! has a library entry point in [`figures`] used by benches and tests.
+
+pub mod common;
+pub mod figures;
+pub mod pipeline;
+
+use crate::util::cli::Args;
+use common::Scale;
+
+const HELP: &str = "\
+fastn2v — Fast-Node2Vec reproduction CLI
+
+USAGE:
+    fastn2v <command> [flags]
+
+COMMANDS:
+    fig --id <table1|fig1|fig4|...|fig14|all>   regenerate a paper figure
+    gen --graph <name> --out <path>             generate a graph (binary)
+    stats --graph <name>                        Table-1 stats for one graph
+    walk --graph <name> --variant <base|local|switch|cache|approx>
+    pipeline --graph blogcatalog                walks -> embeddings -> F1
+    help
+
+COMMON FLAGS:
+    --quick            small scale (tests; default is full scale)
+    --seed <u64>       run seed (default 42)
+    --p <f32> --q <f32>   Node2Vec parameters (default 0.5 / 2.0)
+    --workers <n>      Pregel workers (default 12)
+
+GRAPH NAMES:
+    blogcatalog, livejournal, orkut, friendster (scaled analogues),
+    er-K, wec-K, skew-S (RMAT families, e.g. er-16, skew-3)
+";
+
+/// CLI entry (returns process exit code).
+pub fn cli_main(raw: Vec<String>) -> i32 {
+    match cli_inner(raw) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    }
+}
+
+fn cli_inner(raw: Vec<String>) -> Result<(), String> {
+    let args = Args::parse(raw, &["quick", "verbose"])?;
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    if args.has_switch("verbose") {
+        crate::util::logging::set_level(crate::util::logging::Level::Debug);
+    }
+    let scale = Scale::from_flag(args.has_switch("quick"));
+    let seed: u64 = args.get_parsed("seed", 42)?;
+    match cmd {
+        "help" | "--help" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        "fig" => {
+            let id = args.get("id").ok_or("fig needs --id")?.to_string();
+            run_fig(&id, scale, seed)
+        }
+        "gen" => {
+            let name = args.get("graph").ok_or("gen needs --graph")?;
+            let out = args.get("out").ok_or("gen needs --out")?;
+            let ng = common::build_graph(name, scale, seed);
+            crate::graph::write_binary(&ng.graph, std::path::Path::new(out))
+                .map_err(|e| e.to_string())?;
+            let st = ng.graph.stats();
+            println!(
+                "wrote {} to {out}: |V|={} |E|={} max deg {}",
+                ng.name, st.num_vertices, st.num_edges, st.max_degree
+            );
+            Ok(())
+        }
+        "stats" => {
+            let name = args.get("graph").ok_or("stats needs --graph")?;
+            let ng = common::build_graph(name, scale, seed);
+            let st = ng.graph.stats();
+            println!(
+                "{}: |V|={} |E|={} max_deg={} avg_deg={:.1} isolated={} (paper: {})",
+                ng.name,
+                st.num_vertices,
+                st.num_edges,
+                st.max_degree,
+                st.avg_degree,
+                st.isolated_vertices,
+                ng.paper_ref
+            );
+            println!(
+                "Eq.1 precompute bytes (all transition probs): {}",
+                crate::util::fmt_bytes(ng.graph.transition_precompute_bytes().min(u64::MAX as u128) as u64)
+            );
+            Ok(())
+        }
+        "walk" => {
+            let name = args.get("graph").ok_or("walk needs --graph")?;
+            let variant = match args.get_or("variant", "base") {
+                "base" => crate::node2vec::Variant::Base,
+                "local" => crate::node2vec::Variant::Local,
+                "switch" => crate::node2vec::Variant::Switch,
+                "cache" => crate::node2vec::Variant::Cache,
+                "approx" => crate::node2vec::Variant::Approx,
+                other => return Err(format!("unknown variant {other}")),
+            };
+            let p: f32 = args.get_parsed("p", 0.5)?;
+            let q: f32 = args.get_parsed("q", 2.0)?;
+            let ng = common::build_graph(name, scale, seed);
+            let out = common::run_solution(
+                common::Solution::Fn(variant),
+                &ng.graph,
+                p,
+                q,
+                scale.walk_length(),
+                seed,
+                false,
+            );
+            println!("{} on {}: {}", variant.name(), ng.name, out.cell());
+            Ok(())
+        }
+        "pipeline" => {
+            let frac: f64 = args.get_parsed("train-fraction", 0.5)?;
+            let lg = crate::gen::labeled_community_graph(
+                &crate::gen::LabeledConfig::blogcatalog_like(seed),
+            );
+            let p: f32 = args.get_parsed("p", 0.5)?;
+            let q: f32 = args.get_parsed("q", 2.0)?;
+            let cfg = crate::node2vec::FnConfig::new(p, q, seed)
+                .with_walk_length(scale.walk_length())
+                .with_variant(crate::node2vec::Variant::Cache)
+                .with_popular_threshold(common::popular_threshold(&lg.graph));
+            let t = std::time::Instant::now();
+            let walks = crate::node2vec::run_walks(
+                &lg.graph,
+                crate::graph::partition::Partitioner::hash(common::WORKERS),
+                &cfg,
+                crate::pregel::EngineOpts::default(),
+                1,
+            )
+            .map_err(|e| e.to_string())?
+            .walks;
+            println!("walks: {}", crate::util::fmt_secs(t.elapsed().as_secs_f64()));
+            let tcfg = crate::embed::TrainConfig {
+                steps: if scale == Scale::Quick { 200 } else { 3000 },
+                seed,
+                ..Default::default()
+            };
+            let emb = pipeline::embeddings_from_walks(&walks, lg.graph.num_vertices(), &tcfg)
+                .map_err(|e| e.to_string())?;
+            println!(
+                "embeddings via {} in {}; loss {:.3} -> {:.3}",
+                emb.backend,
+                crate::util::fmt_secs(emb.train_secs),
+                emb.loss_curve.first().map(|l| l.loss).unwrap_or(f32::NAN),
+                emb.loss_curve.last().map(|l| l.loss).unwrap_or(f32::NAN),
+            );
+            let scores = pipeline::classify_fractions(
+                &emb.embeddings,
+                &lg.labels,
+                lg.num_labels,
+                &[frac],
+                seed,
+            );
+            println!(
+                "classification at train fraction {frac}: micro-F1 {:.3} macro-F1 {:.3}",
+                scores[0].1.micro, scores[0].1.macro_
+            );
+            Ok(())
+        }
+        other => Err(format!("unknown command `{other}`; see `fastn2v help`")),
+    }
+}
+
+fn run_fig(id: &str, scale: Scale, seed: u64) -> Result<(), String> {
+    let all = [
+        "table1", "fig1", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11",
+        "fig12", "fig13", "fig14",
+    ];
+    let ids: Vec<&str> = if id == "all" {
+        all.to_vec()
+    } else {
+        vec![id]
+    };
+    for id in ids {
+        match id {
+            "table1" => {
+                figures::table1(scale, seed);
+            }
+            "fig1" => {
+                figures::fig1(scale, seed);
+            }
+            "fig2" | "fig3" => {
+                println!("fig2/fig3 are schematic diagrams (model + architecture); nothing to run")
+            }
+            "fig4" => {
+                figures::fig4(scale, seed);
+            }
+            "fig5" => {
+                figures::fig5(scale, seed);
+            }
+            "fig6" => {
+                figures::fig6(scale, seed);
+            }
+            "fig7" => {
+                figures::fig7(scale, seed);
+            }
+            "fig8" => {
+                figures::fig8(scale, seed);
+            }
+            "fig9" => {
+                figures::fig9(scale, seed);
+            }
+            "fig10" | "fig11" => {
+                figures::fig10(scale, seed);
+            }
+            "fig12" => {
+                figures::fig12(scale, seed);
+            }
+            "fig13" => {
+                figures::fig13(scale, seed);
+            }
+            "fig14" => {
+                figures::fig14(scale, seed);
+            }
+            other => return Err(format!("unknown figure id `{other}`")),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod cli_tests {
+    use super::*;
+
+    fn run(args: &[&str]) -> i32 {
+        cli_main(args.iter().map(|s| s.to_string()).collect())
+    }
+
+    #[test]
+    fn help_and_errors() {
+        assert_eq!(run(&["help"]), 0);
+        assert_eq!(run(&["nope"]), 2);
+        assert_eq!(run(&["fig"]), 2); // missing --id
+        assert_eq!(run(&["fig", "--id", "fig99", "--quick"]), 2);
+    }
+
+    #[test]
+    fn stats_quick_runs() {
+        assert_eq!(run(&["stats", "--graph", "er-10", "--quick"]), 0);
+    }
+
+    #[test]
+    fn walk_quick_runs() {
+        assert_eq!(
+            run(&["walk", "--graph", "skew-2", "--variant", "cache", "--quick"]),
+            0
+        );
+    }
+}

@@ -1,0 +1,130 @@
+//! Walks → embeddings → node-classification pipeline (the full Node2Vec
+//! system; used by Figure 1, Figure 6 and the end-to-end example).
+
+use anyhow::Result;
+use std::path::PathBuf;
+
+use crate::classify::{evaluate, ClassifyConfig, F1Scores};
+use crate::embed::{train, Corpus, LossPoint, RustSgns, TrainConfig};
+use crate::node2vec::WalkSet;
+use crate::runtime::SgnsRuntime;
+
+/// Where the AOT artifacts live (workspace-relative).
+pub fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+pub fn artifacts_present() -> bool {
+    artifacts_dir().join("manifest.txt").exists()
+}
+
+/// Outcome of the embedding stage.
+pub struct EmbedOutcome {
+    pub embeddings: Vec<Vec<f32>>,
+    pub loss_curve: Vec<LossPoint>,
+    pub train_secs: f64,
+    /// "pjrt" (AOT JAX/Pallas via the runtime) or "rust-oracle" fallback.
+    pub backend: &'static str,
+}
+
+/// Train SGNS embeddings from walks. Uses the PJRT runtime when artifacts
+/// exist (the production path: Python never runs here), else the pure-Rust
+/// oracle so examples stay runnable before `make artifacts`.
+pub fn embeddings_from_walks(
+    walks: &WalkSet,
+    num_vertices: usize,
+    cfg: &TrainConfig,
+) -> Result<EmbedOutcome> {
+    let corpus = Corpus::new(walks, num_vertices);
+    let t = std::time::Instant::now();
+    if artifacts_present() {
+        match SgnsRuntime::load(&artifacts_dir(), num_vertices, cfg.seed) {
+            Ok(mut rt) => {
+                let curve = train(&mut rt, &corpus, cfg)?;
+                return Ok(EmbedOutcome {
+                    embeddings: rt.embeddings()?,
+                    loss_curve: curve,
+                    train_secs: t.elapsed().as_secs_f64(),
+                    backend: "pjrt",
+                });
+            }
+            Err(e) => {
+                crate::log_warn!("PJRT runtime unavailable ({e}); falling back to rust oracle");
+            }
+        }
+    }
+    let mut model = RustSgns::new(num_vertices, 64, cfg.seed);
+    let curve = model.train(&corpus, cfg, 256, 5);
+    Ok(EmbedOutcome {
+        embeddings: model.embeddings(),
+        loss_curve: curve,
+        train_secs: t.elapsed().as_secs_f64(),
+        backend: "rust-oracle",
+    })
+}
+
+/// Evaluate classification at several train fractions (Figure 6's X axis).
+pub fn classify_fractions(
+    embeddings: &[Vec<f32>],
+    labels: &[Vec<u16>],
+    num_labels: usize,
+    fractions: &[f64],
+    seed: u64,
+) -> Vec<(f64, F1Scores)> {
+    fractions
+        .iter()
+        .map(|&frac| {
+            let cfg = ClassifyConfig {
+                train_fraction: frac,
+                seed,
+                ..Default::default()
+            };
+            (frac, evaluate(embeddings, labels, num_labels, &cfg))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{labeled_community_graph, LabeledConfig};
+    use crate::graph::partition::Partitioner;
+    use crate::node2vec::{run_walks, FnConfig};
+    use crate::pregel::EngineOpts;
+
+    #[test]
+    fn pipeline_end_to_end_beats_random_embeddings() {
+        let lg = labeled_community_graph(&LabeledConfig::tiny(13));
+        let walks = run_walks(
+            &lg.graph,
+            Partitioner::hash(4),
+            &FnConfig::new(1.0, 1.0, 3).with_walk_length(20),
+            EngineOpts::default(),
+            1,
+        )
+        .unwrap()
+        .walks;
+        let cfg = TrainConfig {
+            steps: 600,
+            log_every: 200,
+            ..Default::default()
+        };
+        let out = embeddings_from_walks(&walks, lg.graph.num_vertices(), &cfg).unwrap();
+        assert!(!out.loss_curve.is_empty());
+        let results = classify_fractions(&out.embeddings, &lg.labels, lg.num_labels, &[0.5], 7);
+        let trained = results[0].1;
+
+        // Random-embedding control.
+        let mut rng = crate::util::rng::Xoshiro256pp::seed_from_u64(5);
+        let rand_emb: Vec<Vec<f32>> = (0..lg.graph.num_vertices())
+            .map(|_| (0..16).map(|_| rng.next_f64() as f32).collect())
+            .collect();
+        let rand = classify_fractions(&rand_emb, &lg.labels, lg.num_labels, &[0.5], 7)[0].1;
+        assert!(
+            trained.micro > rand.micro + 0.1,
+            "trained {:.3} vs random {:.3}",
+            trained.micro,
+            rand.micro
+        );
+    }
+}

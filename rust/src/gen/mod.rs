@@ -1,0 +1,15 @@
+//! Synthetic graph generators.
+//!
+//! The paper evaluates on (a) SNAP real-world graphs and (b) RMAT-generated
+//! synthetic families (ER-K, WeC-K, Skew-S) produced with TrillionG. SNAP
+//! downloads are unavailable in this offline environment, so `realworld`
+//! provides RMAT-parameterized *analogues* scaled down ~40–100× but matched
+//! on the properties that drive the paper's results (average degree and
+//! degree skew). See DESIGN.md §Substitutions.
+
+mod labeled;
+mod rmat;
+pub mod realworld;
+
+pub use labeled::{labeled_community_graph, LabeledConfig, LabeledGraph};
+pub use rmat::{er_graph, rmat_graph, skew_graph, wec_graph, GenConfig, RmatParams};

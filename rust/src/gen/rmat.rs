@@ -1,0 +1,290 @@
+//! RMAT recursive-matrix graph generation (Chakrabarti et al., 2004), in the
+//! recursive-vector style TrillionG uses: each edge is placed by descending
+//! K levels of the 2^K × 2^K adjacency matrix, choosing one of the four
+//! quadrants with probabilities (a, b, c, d) at every level.
+//!
+//! Parameterizations from the paper (§4.1):
+//! - **ER-K**:   (0.25, 0.25, 0.25, 0.25), avg degree 10 — uniform, no skew.
+//! - **WeC-K**:  (0.18, 0.25, 0.25, 0.32), avg degree 100 — WeChat-like.
+//! - **Skew-S**: b = c = 0.25, d = S·a, a + d = 0.5, avg degree 100 —
+//!   skew dial; Skew-1 is uniform, larger S is closer to power-law.
+//!   (WeC-K is Skew-1.78: 0.32/0.18.)
+//!
+//! Edge generation is multi-threaded with per-chunk RNG streams, so output
+//! is deterministic in the seed and independent of thread count.
+
+use crate::graph::{Graph, GraphBuilder, VertexId};
+use crate::util::rng::{stream, Xoshiro256pp};
+
+/// Quadrant probabilities.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RmatParams {
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+    pub d: f64,
+}
+
+impl RmatParams {
+    pub fn new(a: f64, b: f64, c: f64, d: f64) -> Self {
+        let sum = a + b + c + d;
+        assert!((sum - 1.0).abs() < 1e-9, "RMAT params must sum to 1, got {sum}");
+        assert!(a >= 0.0 && b >= 0.0 && c >= 0.0 && d >= 0.0);
+        RmatParams { a, b, c, d }
+    }
+
+    pub fn uniform() -> Self {
+        RmatParams::new(0.25, 0.25, 0.25, 0.25)
+    }
+
+    /// WeC parameters from the paper.
+    pub fn wec() -> Self {
+        RmatParams::new(0.18, 0.25, 0.25, 0.32)
+    }
+
+    /// Skew-S: b = c = 0.25, d = S·a, a + d = 0.5.
+    pub fn skew(s: f64) -> Self {
+        assert!(s >= 1.0, "skew S must be >= 1");
+        let a = 0.5 / (1.0 + s);
+        let d = s * a;
+        RmatParams::new(a, 0.25, 0.25, d)
+    }
+}
+
+/// Common generator configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct GenConfig {
+    /// Number of vertices (need not be a power of two; edges landing
+    /// outside `[0, n)` are re-drawn).
+    pub num_vertices: usize,
+    /// Target *average* degree (undirected): we draw `n * avg_degree / 2`
+    /// edges before dedup.
+    pub avg_degree: usize,
+    pub seed: u64,
+}
+
+impl GenConfig {
+    pub fn new(num_vertices: usize, avg_degree: usize, seed: u64) -> Self {
+        assert!(num_vertices > 1);
+        GenConfig {
+            num_vertices,
+            avg_degree,
+            seed,
+        }
+    }
+}
+
+/// Place one endpoint pair by recursive quadrant descent.
+#[inline]
+fn place_edge(
+    levels: u32,
+    p: &RmatParams,
+    rng: &mut Xoshiro256pp,
+) -> (u64, u64) {
+    let mut row = 0u64;
+    let mut col = 0u64;
+    // Cumulative thresholds.
+    let t_a = p.a;
+    let t_ab = p.a + p.b;
+    let t_abc = p.a + p.b + p.c;
+    for level in (0..levels).rev() {
+        let r = rng.next_f64();
+        let bit = 1u64 << level;
+        if r < t_a {
+            // top-left
+        } else if r < t_ab {
+            col |= bit;
+        } else if r < t_abc {
+            row |= bit;
+        } else {
+            row |= bit;
+            col |= bit;
+        }
+    }
+    (row, col)
+}
+
+/// Generate an undirected RMAT graph with `num_edges` drawn edges (before
+/// dedup/self-loop removal) over `cfg.num_vertices` vertices.
+pub fn rmat_graph_edges(
+    cfg: &GenConfig,
+    params: RmatParams,
+    num_edges: u64,
+) -> Graph {
+    let n = cfg.num_vertices as u64;
+    let levels = (64 - (n - 1).leading_zeros()).max(1);
+    let nthreads = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(4)
+        .min(16)
+        .max(1);
+    // Deterministic chunking: fixed chunk count regardless of nthreads.
+    let chunks: u64 = 64;
+    let per_chunk = num_edges.div_ceil(chunks);
+    let chunk_edges: Vec<Vec<(VertexId, VertexId)>> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for t in 0..nthreads as u64 {
+            let params = params;
+            handles.push(scope.spawn(move || {
+                let mut out: Vec<(u64, Vec<(VertexId, VertexId)>)> = Vec::new();
+                let mut chunk = t;
+                while chunk < chunks {
+                    let todo = per_chunk.min(num_edges.saturating_sub(chunk * per_chunk));
+                    let mut rng = stream(cfg.seed, chunk, 0xE06E, 0x6E4);
+                    let mut edges = Vec::with_capacity(todo as usize);
+                    for _ in 0..todo {
+                        // Rejection-sample until both endpoints are in range
+                        // and the edge is not a self-loop.
+                        loop {
+                            let (r, c) = place_edge(levels, &params, &mut rng);
+                            if r < n && c < n && r != c {
+                                edges.push((r as VertexId, c as VertexId));
+                                break;
+                            }
+                        }
+                    }
+                    out.push((chunk, edges));
+                    chunk += nthreads as u64;
+                }
+                out
+            }));
+        }
+        let mut all: Vec<(u64, Vec<(VertexId, VertexId)>)> = Vec::new();
+        for h in handles {
+            all.extend(h.join().expect("generator thread panicked"));
+        }
+        // Restore deterministic chunk order.
+        all.sort_by_key(|(c, _)| *c);
+        all.into_iter().map(|(_, e)| e).collect()
+    });
+
+    let total: usize = chunk_edges.iter().map(|c| c.len()).sum();
+    let mut b = GraphBuilder::new_undirected(cfg.num_vertices).dedup_keep_first();
+    b.reserve(total);
+    for chunk in chunk_edges {
+        for (u, v) in chunk {
+            b.add_edge(u, v, 1.0);
+        }
+    }
+    b.build()
+}
+
+/// RMAT with edge count derived from the target average degree.
+pub fn rmat_graph(cfg: &GenConfig, params: RmatParams) -> Graph {
+    let num_edges = (cfg.num_vertices as u64 * cfg.avg_degree as u64) / 2;
+    rmat_graph_edges(cfg, params, num_edges)
+}
+
+/// ER-K analogue: uniform RMAT (paper: avg degree 10).
+pub fn er_graph(cfg: &GenConfig) -> Graph {
+    rmat_graph(cfg, RmatParams::uniform())
+}
+
+/// WeC-K analogue (paper: avg degree 100, max-degree cap ~5000 at 2^K
+/// scale; the cap emerges from the parameters rather than being enforced).
+pub fn wec_graph(cfg: &GenConfig) -> Graph {
+    rmat_graph(cfg, RmatParams::wec())
+}
+
+/// Skew-S graph (paper: 2^22 vertices, avg degree 100, S in 1..=5).
+pub fn skew_graph(cfg: &GenConfig, s: f64) -> Graph {
+    rmat_graph(cfg, RmatParams::skew(s))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn skew_params_match_paper_constraints() {
+        for s in [1.0, 1.78, 2.0, 3.0, 4.0, 5.0] {
+            let p = RmatParams::skew(s);
+            assert!((p.b - 0.25).abs() < 1e-12);
+            assert!((p.c - 0.25).abs() < 1e-12);
+            assert!((p.d - s * p.a).abs() < 1e-9, "d != S*a for S={s}");
+            assert!((p.a + p.b + p.c + p.d - 1.0).abs() < 1e-9);
+        }
+        // Skew-1 is uniform.
+        let p1 = RmatParams::skew(1.0);
+        assert!((p1.a - 0.25).abs() < 1e-12 && (p1.d - 0.25).abs() < 1e-12);
+        // WeC is Skew-1.78 (0.32/0.18).
+        let w = RmatParams::wec();
+        assert!((w.d / w.a - 1.7777).abs() < 1e-3);
+    }
+
+    #[test]
+    #[should_panic(expected = "sum to 1")]
+    fn bad_params_rejected() {
+        RmatParams::new(0.5, 0.5, 0.5, 0.5);
+    }
+
+    #[test]
+    fn er_degree_is_concentrated() {
+        let cfg = GenConfig::new(1 << 12, 10, 42);
+        let g = er_graph(&cfg);
+        let s = g.stats();
+        assert_eq!(s.num_vertices, 1 << 12);
+        // avg degree ~10 (slightly less after dedup)
+        assert!(s.avg_degree > 8.0 && s.avg_degree < 10.5, "{}", s.avg_degree);
+        // Uniform graphs have low max degree (paper Table 1: 29-35).
+        assert!(s.max_degree < 40, "max degree {}", s.max_degree);
+    }
+
+    #[test]
+    fn skew_increases_max_degree() {
+        let cfg = GenConfig::new(1 << 12, 20, 7);
+        let g1 = skew_graph(&cfg, 1.0);
+        let g3 = skew_graph(&cfg, 3.0);
+        let g5 = skew_graph(&cfg, 5.0);
+        let (m1, m3, m5) = (
+            g1.stats().max_degree,
+            g3.stats().max_degree,
+            g5.stats().max_degree,
+        );
+        assert!(m1 < m3 && m3 < m5, "skew ordering violated: {m1} {m3} {m5}");
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let cfg = GenConfig::new(1000, 8, 123);
+        let g1 = wec_graph(&cfg);
+        let g2 = wec_graph(&cfg);
+        assert_eq!(g1.num_arcs(), g2.num_arcs());
+        for v in g1.vertices() {
+            assert_eq!(g1.neighbors(v), g2.neighbors(v));
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let g1 = er_graph(&GenConfig::new(1000, 8, 1));
+        let g2 = er_graph(&GenConfig::new(1000, 8, 2));
+        let same = g1
+            .vertices()
+            .all(|v| g1.neighbors(v) == g2.neighbors(v));
+        assert!(!same);
+    }
+
+    #[test]
+    fn no_self_loops_and_symmetric() {
+        let g = skew_graph(&GenConfig::new(512, 16, 99), 4.0);
+        for v in g.vertices() {
+            for &u in g.neighbors(v) {
+                assert_ne!(u, v, "self loop at {v}");
+                assert!(g.has_edge(u, v));
+            }
+        }
+    }
+
+    #[test]
+    fn non_power_of_two_vertex_count() {
+        let g = er_graph(&GenConfig::new(1000, 6, 5));
+        assert_eq!(g.num_vertices(), 1000);
+        let max_id = g
+            .vertices()
+            .flat_map(|v| g.neighbors(v).iter().copied())
+            .max()
+            .unwrap();
+        assert!(max_id < 1000);
+    }
+}

@@ -1,0 +1,236 @@
+//! Edge-list → CSR builder with dedup and self-loop handling.
+
+use super::csr::{Graph, VertexId};
+
+/// Accumulates edges, then produces a CSR [`Graph`].
+///
+/// - Undirected mode inserts both arc directions.
+/// - Duplicate arcs are merged; their weights are **summed** (matching how
+///   multigraph edge lists are usually collapsed; RMAT generators emit
+///   duplicates which the paper's generator collapses too — we keep the max
+///   duplicate policy configurable via [`GraphBuilder::dedup_keep_first`]).
+/// - Self-loops are dropped by default (Node2Vec's dist(u,x)=0 case refers
+///   to *returning* to the previous vertex, and the evaluation graphs are
+///   simple graphs); [`GraphBuilder::keep_self_loops`] overrides.
+#[derive(Clone, Debug)]
+pub struct GraphBuilder {
+    num_vertices: usize,
+    undirected: bool,
+    drop_self_loops: bool,
+    dedup_sum_weights: bool,
+    // Arcs as (src, dst, weight).
+    arcs: Vec<(VertexId, VertexId, f32)>,
+}
+
+impl GraphBuilder {
+    pub fn new_undirected(num_vertices: usize) -> Self {
+        GraphBuilder {
+            num_vertices,
+            undirected: true,
+            drop_self_loops: true,
+            dedup_sum_weights: true,
+            arcs: Vec::new(),
+        }
+    }
+
+    pub fn new_directed(num_vertices: usize) -> Self {
+        GraphBuilder {
+            num_vertices,
+            undirected: false,
+            drop_self_loops: true,
+            dedup_sum_weights: true,
+            arcs: Vec::new(),
+        }
+    }
+
+    /// Keep self-loop edges instead of dropping them.
+    pub fn keep_self_loops(mut self) -> Self {
+        self.drop_self_loops = false;
+        self
+    }
+
+    /// On duplicate arcs keep the first weight instead of summing.
+    pub fn dedup_keep_first(mut self) -> Self {
+        self.dedup_sum_weights = false;
+        self
+    }
+
+    /// Number of arcs currently buffered (before dedup).
+    pub fn pending_arcs(&self) -> usize {
+        self.arcs.len()
+    }
+
+    /// Add an edge. Panics on out-of-range endpoints (generator bug).
+    #[inline]
+    pub fn add_edge(&mut self, u: VertexId, v: VertexId, w: f32) {
+        assert!(
+            (u as usize) < self.num_vertices && (v as usize) < self.num_vertices,
+            "edge ({u},{v}) out of range for n={}",
+            self.num_vertices
+        );
+        assert!(w.is_finite() && w >= 0.0, "bad edge weight {w}");
+        if self.drop_self_loops && u == v {
+            return;
+        }
+        self.arcs.push((u, v, w));
+        if self.undirected && u != v {
+            self.arcs.push((v, u, w));
+        }
+    }
+
+    /// Reserve capacity for `n` more edges.
+    pub fn reserve(&mut self, n: usize) {
+        self.arcs
+            .reserve(if self.undirected { 2 * n } else { n });
+    }
+
+    /// Build the CSR graph (consumes the builder).
+    pub fn build(mut self) -> Graph {
+        let n = self.num_vertices;
+        // Sort arcs by (src, dst) with an O(E) counting-sort pass on src
+        // followed by per-row sorts — faster and lower-memory than a global
+        // comparison sort for the large generated graphs.
+        let mut counts = vec![0u64; n + 1];
+        for &(s, _, _) in &self.arcs {
+            counts[s as usize + 1] += 1;
+        }
+        for i in 0..n {
+            counts[i + 1] += counts[i];
+        }
+        let offsets_raw = counts.clone();
+        let mut slot = counts;
+        let mut adj_raw = vec![0 as VertexId; self.arcs.len()];
+        let mut w_raw = vec![0f32; self.arcs.len()];
+        for &(s, d, w) in &self.arcs {
+            let i = slot[s as usize] as usize;
+            slot[s as usize] += 1;
+            adj_raw[i] = d;
+            w_raw[i] = w;
+        }
+        self.arcs.clear();
+        self.arcs.shrink_to_fit();
+
+        // Per-row: sort by dst, dedup merging weights.
+        let mut offsets = Vec::with_capacity(n + 1);
+        let mut adj = Vec::with_capacity(adj_raw.len());
+        let mut weights = Vec::with_capacity(w_raw.len());
+        offsets.push(0u64);
+        let mut row: Vec<(VertexId, f32)> = Vec::new();
+        for v in 0..n {
+            let s = offsets_raw[v] as usize;
+            let e = offsets_raw[v + 1] as usize;
+            row.clear();
+            row.extend(adj_raw[s..e].iter().copied().zip(w_raw[s..e].iter().copied()));
+            row.sort_unstable_by_key(|&(d, _)| d);
+            let mut i = 0;
+            while i < row.len() {
+                let (d, mut w) = row[i];
+                let mut j = i + 1;
+                while j < row.len() && row[j].0 == d {
+                    if self.dedup_sum_weights {
+                        w += row[j].1;
+                    }
+                    j += 1;
+                }
+                adj.push(d);
+                weights.push(w);
+                i = j;
+            }
+            offsets.push(adj.len() as u64);
+        }
+        Graph::from_parts(offsets, adj, weights, self.undirected)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propkit::{forall, Gen};
+
+    #[test]
+    fn duplicates_merge_and_sum() {
+        let mut b = GraphBuilder::new_undirected(3);
+        b.add_edge(0, 1, 1.0);
+        b.add_edge(0, 1, 2.0);
+        b.add_edge(1, 2, 1.0);
+        let g = b.build();
+        assert_eq!(g.degree(0), 1);
+        assert_eq!(g.weights(0), &[3.0]);
+        assert_eq!(g.neighbors(1), &[0, 2]);
+        assert_eq!(g.weights(1), &[3.0, 1.0]);
+    }
+
+    #[test]
+    fn dedup_keep_first_policy() {
+        let mut b = GraphBuilder::new_directed(2).dedup_keep_first();
+        b.add_edge(0, 1, 5.0);
+        b.add_edge(0, 1, 7.0);
+        let g = b.build();
+        assert_eq!(g.weights(0), &[5.0]);
+    }
+
+    #[test]
+    fn self_loops_dropped_by_default() {
+        let mut b = GraphBuilder::new_undirected(2);
+        b.add_edge(0, 0, 1.0);
+        b.add_edge(0, 1, 1.0);
+        let g = b.build();
+        assert_eq!(g.degree(0), 1);
+        assert_eq!(g.neighbors(0), &[1]);
+    }
+
+    #[test]
+    fn self_loops_kept_when_requested() {
+        let mut b = GraphBuilder::new_undirected(2).keep_self_loops();
+        b.add_edge(0, 0, 1.0);
+        let g = b.build();
+        assert_eq!(g.neighbors(0), &[0]);
+        // A self loop in undirected mode is a single arc.
+        assert_eq!(g.num_arcs(), 1);
+    }
+
+    #[test]
+    fn directed_does_not_mirror() {
+        let mut b = GraphBuilder::new_directed(3);
+        b.add_edge(0, 1, 1.0);
+        b.add_edge(1, 2, 1.0);
+        let g = b.build();
+        assert_eq!(g.degree(0), 1);
+        assert_eq!(g.degree(1), 1);
+        assert_eq!(g.degree(2), 0);
+        assert!(!g.is_undirected());
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn out_of_range_panics() {
+        let mut b = GraphBuilder::new_undirected(2);
+        b.add_edge(0, 5, 1.0);
+    }
+
+    #[test]
+    fn prop_build_is_symmetric_and_sorted() {
+        forall("undirected CSR is symmetric+sorted", 60, |g: &mut Gen| {
+            let n = g.usize_in(1, 40);
+            let mut b = GraphBuilder::new_undirected(n);
+            let edges = g.vec_of(120, |g| {
+                (
+                    g.usize_in(0, n - 1) as u32,
+                    g.usize_in(0, n - 1) as u32,
+                    g.f64_in(0.1, 4.0) as f32,
+                )
+            });
+            for (u, v, w) in &edges {
+                b.add_edge(*u, *v, *w);
+            }
+            let graph = b.build();
+            for v in graph.vertices() {
+                let ns = graph.neighbors(v);
+                assert!(ns.windows(2).all(|w| w[0] < w[1]));
+                for &u in ns {
+                    assert!(graph.has_edge(u, v), "asymmetric {u}<->{v}");
+                }
+            }
+        });
+    }
+}

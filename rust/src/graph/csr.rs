@@ -1,0 +1,254 @@
+//! Immutable CSR graph.
+//!
+//! Vertices are dense `u32` ids (`0..n`). Out-edges of vertex `v` live in
+//! `adj[offsets[v] .. offsets[v+1]]`, **sorted by neighbor id** — the FN-*
+//! transition computation relies on sorted adjacency for merge/gallop
+//! common-neighbor detection instead of per-step hash sets.
+//!
+//! Undirected graphs are stored with both edge directions materialized
+//! (as GraphLite does); `Graph::is_undirected` records the intent.
+
+pub type VertexId = u32;
+
+/// Immutable weighted graph in CSR form.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    /// `offsets.len() == n + 1`; CSR row pointers (u64 so |E| can exceed 4G).
+    offsets: Vec<u64>,
+    /// Neighbor ids, sorted within each row.
+    adj: Vec<VertexId>,
+    /// Edge weights, parallel to `adj`.
+    weights: Vec<f32>,
+    /// Whether the graph was built as undirected (both directions present).
+    undirected: bool,
+    /// True iff every weight is exactly 1.0 (lets samplers skip weight
+    /// lookups — the common case in the paper's graphs).
+    unit_weights: bool,
+}
+
+/// Summary statistics (the paper's Table 1 columns).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GraphStats {
+    pub num_vertices: u64,
+    /// Undirected edge count if undirected (adj pairs / 2), else arcs.
+    pub num_edges: u64,
+    pub max_degree: u64,
+    pub avg_degree: f64,
+    pub isolated_vertices: u64,
+}
+
+impl Graph {
+    pub(crate) fn from_parts(
+        offsets: Vec<u64>,
+        adj: Vec<VertexId>,
+        weights: Vec<f32>,
+        undirected: bool,
+    ) -> Graph {
+        debug_assert!(!offsets.is_empty());
+        debug_assert_eq!(*offsets.last().unwrap() as usize, adj.len());
+        debug_assert_eq!(adj.len(), weights.len());
+        let unit_weights = weights.iter().all(|&w| w == 1.0);
+        Graph {
+            offsets,
+            adj,
+            weights,
+            undirected,
+            unit_weights,
+        }
+    }
+
+    /// Number of vertices.
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Number of stored arcs (directed adjacency entries).
+    #[inline]
+    pub fn num_arcs(&self) -> usize {
+        self.adj.len()
+    }
+
+    /// Number of logical edges (arcs/2 when undirected).
+    #[inline]
+    pub fn num_edges(&self) -> u64 {
+        if self.undirected {
+            self.adj.len() as u64 / 2
+        } else {
+            self.adj.len() as u64
+        }
+    }
+
+    #[inline]
+    pub fn is_undirected(&self) -> bool {
+        self.undirected
+    }
+
+    #[inline]
+    pub fn has_unit_weights(&self) -> bool {
+        self.unit_weights
+    }
+
+    /// Out-degree of `v`.
+    #[inline]
+    pub fn degree(&self, v: VertexId) -> usize {
+        (self.offsets[v as usize + 1] - self.offsets[v as usize]) as usize
+    }
+
+    /// Sorted out-neighbors of `v`.
+    #[inline]
+    pub fn neighbors(&self, v: VertexId) -> &[VertexId] {
+        let s = self.offsets[v as usize] as usize;
+        let e = self.offsets[v as usize + 1] as usize;
+        &self.adj[s..e]
+    }
+
+    /// Edge weights parallel to [`Graph::neighbors`].
+    #[inline]
+    pub fn weights(&self, v: VertexId) -> &[f32] {
+        let s = self.offsets[v as usize] as usize;
+        let e = self.offsets[v as usize + 1] as usize;
+        &self.weights[s..e]
+    }
+
+    /// Binary-search membership test on the sorted adjacency row.
+    #[inline]
+    pub fn has_edge(&self, u: VertexId, v: VertexId) -> bool {
+        self.neighbors(u).binary_search(&v).is_ok()
+    }
+
+    /// CSR position of `v`'s first arc (so arc `u→v` lives at
+    /// `arc_offset(u) + pos(v in neighbors(u))`).
+    #[inline]
+    pub fn arc_offset(&self, v: VertexId) -> usize {
+        self.offsets[v as usize] as usize
+    }
+
+    /// Iterate all vertices.
+    pub fn vertices(&self) -> impl Iterator<Item = VertexId> + '_ {
+        0..self.num_vertices() as VertexId
+    }
+
+    /// Resident bytes of the topology (offsets + adj + weights) — the
+    /// paper's "base usage" component in Figures 4/14.
+    pub fn memory_bytes(&self) -> u64 {
+        (self.offsets.len() * 8 + self.adj.len() * 4 + self.weights.len() * 4) as u64
+    }
+
+    /// Table-1 style statistics.
+    pub fn stats(&self) -> GraphStats {
+        let n = self.num_vertices();
+        let mut max_degree = 0u64;
+        let mut isolated = 0u64;
+        for v in 0..n {
+            let d = (self.offsets[v + 1] - self.offsets[v]) as u64;
+            max_degree = max_degree.max(d);
+            if d == 0 {
+                isolated += 1;
+            }
+        }
+        GraphStats {
+            num_vertices: n as u64,
+            num_edges: self.num_edges(),
+            max_degree,
+            avg_degree: if n == 0 {
+                0.0
+            } else {
+                self.adj.len() as f64 / n as f64
+            },
+            isolated_vertices: isolated,
+        }
+    }
+
+    /// Degree sequence (out-degrees).
+    pub fn degrees(&self) -> Vec<u32> {
+        (0..self.num_vertices())
+            .map(|v| (self.offsets[v + 1] - self.offsets[v]) as u32)
+            .collect()
+    }
+
+    /// The paper's Eq. (1): bytes to precompute all 2nd-order transition
+    /// probabilities at 8 bytes each, `8 * Σ_i d_i²`. Used to reproduce the
+    /// "80 TB for n=1G, d=100" style estimates and to set C-Node2Vec's
+    /// memory budget checks.
+    pub fn transition_precompute_bytes(&self) -> u128 {
+        (0..self.num_vertices())
+            .map(|v| {
+                let d = (self.offsets[v + 1] - self.offsets[v]) as u128;
+                8 * d * d
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::GraphBuilder;
+
+    fn triangle_plus_tail() -> super::Graph {
+        // 0-1, 1-2, 2-0 triangle, 2-3 tail.
+        let mut b = GraphBuilder::new_undirected(4);
+        b.add_edge(0, 1, 1.0);
+        b.add_edge(1, 2, 1.0);
+        b.add_edge(2, 0, 1.0);
+        b.add_edge(2, 3, 1.0);
+        b.build()
+    }
+
+    #[test]
+    fn csr_layout_and_degrees() {
+        let g = triangle_plus_tail();
+        assert_eq!(g.num_vertices(), 4);
+        assert_eq!(g.num_edges(), 4);
+        assert_eq!(g.num_arcs(), 8);
+        assert_eq!(g.degree(0), 2);
+        assert_eq!(g.degree(2), 3);
+        assert_eq!(g.degree(3), 1);
+        assert_eq!(g.neighbors(2), &[0, 1, 3]);
+        assert_eq!(g.neighbors(3), &[2]);
+    }
+
+    #[test]
+    fn adjacency_is_sorted() {
+        let g = triangle_plus_tail();
+        for v in g.vertices() {
+            let ns = g.neighbors(v);
+            assert!(ns.windows(2).all(|w| w[0] < w[1]), "row {v} unsorted");
+        }
+    }
+
+    #[test]
+    fn has_edge_via_binary_search() {
+        let g = triangle_plus_tail();
+        assert!(g.has_edge(0, 1));
+        assert!(g.has_edge(1, 0));
+        assert!(!g.has_edge(0, 3));
+    }
+
+    #[test]
+    fn stats_match() {
+        let g = triangle_plus_tail();
+        let s = g.stats();
+        assert_eq!(s.num_vertices, 4);
+        assert_eq!(s.num_edges, 4);
+        assert_eq!(s.max_degree, 3);
+        assert_eq!(s.isolated_vertices, 0);
+        assert!((s.avg_degree - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq1_precompute_bytes() {
+        let g = triangle_plus_tail();
+        // degrees 2,2,3,1 -> 8*(4+4+9+1) = 144
+        assert_eq!(g.transition_precompute_bytes(), 144);
+    }
+
+    #[test]
+    fn unit_weight_detection() {
+        let g = triangle_plus_tail();
+        assert!(g.has_unit_weights());
+        let mut b = GraphBuilder::new_undirected(2);
+        b.add_edge(0, 1, 2.5);
+        assert!(!b.build().has_unit_weights());
+    }
+}

@@ -1,0 +1,237 @@
+//! Graph persistence: whitespace edge lists (SNAP-compatible) and a compact
+//! little-endian binary format so large generated graphs round-trip fast
+//! between the generator CLI and experiment drivers.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::builder::GraphBuilder;
+use super::csr::{Graph, VertexId};
+
+const MAGIC: &[u8; 8] = b"FN2VGRF1";
+
+/// Load a SNAP-style edge list: `src dst [weight]` per line, `#` comments.
+/// Vertex ids must be `< num_vertices` (pass the count since edge lists
+/// don't carry isolated vertices).
+pub fn load_edge_list(path: &Path, num_vertices: usize, undirected: bool) -> Result<Graph> {
+    let f = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let reader = BufReader::new(f);
+    let mut b = if undirected {
+        GraphBuilder::new_undirected(num_vertices)
+    } else {
+        GraphBuilder::new_directed(num_vertices)
+    };
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let (Some(a), Some(bb)) = (it.next(), it.next()) else {
+            bail!("{}:{}: malformed edge line", path.display(), lineno + 1);
+        };
+        let u: VertexId = a
+            .parse()
+            .with_context(|| format!("{}:{}: bad src", path.display(), lineno + 1))?;
+        let v: VertexId = bb
+            .parse()
+            .with_context(|| format!("{}:{}: bad dst", path.display(), lineno + 1))?;
+        let w: f32 = match it.next() {
+            Some(ws) => ws
+                .parse()
+                .with_context(|| format!("{}:{}: bad weight", path.display(), lineno + 1))?,
+            None => 1.0,
+        };
+        b.add_edge(u, v, w);
+    }
+    Ok(b.build())
+}
+
+/// Write an edge list (each undirected edge once: `u <= v` arcs only).
+pub fn save_edge_list(graph: &Graph, path: &Path) -> Result<()> {
+    let f = File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    writeln!(
+        w,
+        "# fastn2v edge list: n={} undirected={}",
+        graph.num_vertices(),
+        graph.is_undirected()
+    )?;
+    for u in graph.vertices() {
+        for (&v, &wt) in graph.neighbors(u).iter().zip(graph.weights(u)) {
+            if graph.is_undirected() && v < u {
+                continue;
+            }
+            if wt == 1.0 {
+                writeln!(w, "{u} {v}")?;
+            } else {
+                writeln!(w, "{u} {v} {wt}")?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Compact binary format:
+/// magic | undirected u8 | n u64 | arcs u64 | offsets (n+1)·u64 |
+/// adj arcs·u32 | unit_weights u8 | [weights arcs·f32 if not unit].
+pub fn write_binary(graph: &Graph, path: &Path) -> Result<()> {
+    let f = File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    w.write_all(&[graph.is_undirected() as u8])?;
+    let n = graph.num_vertices() as u64;
+    let arcs = graph.num_arcs() as u64;
+    w.write_all(&n.to_le_bytes())?;
+    w.write_all(&arcs.to_le_bytes())?;
+    // offsets
+    let mut off = 0u64;
+    w.write_all(&off.to_le_bytes())?;
+    for v in graph.vertices() {
+        off += graph.degree(v) as u64;
+        w.write_all(&off.to_le_bytes())?;
+    }
+    for v in graph.vertices() {
+        for &d in graph.neighbors(v) {
+            w.write_all(&d.to_le_bytes())?;
+        }
+    }
+    w.write_all(&[graph.has_unit_weights() as u8])?;
+    if !graph.has_unit_weights() {
+        for v in graph.vertices() {
+            for &wt in graph.weights(v) {
+                w.write_all(&wt.to_le_bytes())?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Read the binary format written by [`write_binary`].
+pub fn read_binary(path: &Path) -> Result<Graph> {
+    let f = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{}: not a fastn2v binary graph", path.display());
+    }
+    let mut b1 = [0u8; 1];
+    r.read_exact(&mut b1)?;
+    let undirected = b1[0] != 0;
+    let mut b8 = [0u8; 8];
+    r.read_exact(&mut b8)?;
+    let n = u64::from_le_bytes(b8) as usize;
+    r.read_exact(&mut b8)?;
+    let arcs = u64::from_le_bytes(b8) as usize;
+    let mut offsets = Vec::with_capacity(n + 1);
+    for _ in 0..=n {
+        r.read_exact(&mut b8)?;
+        offsets.push(u64::from_le_bytes(b8));
+    }
+    if *offsets.last().unwrap() as usize != arcs {
+        bail!("{}: corrupt offsets", path.display());
+    }
+    let mut adj = vec![0u32; arcs];
+    {
+        let mut buf = vec![0u8; arcs * 4];
+        r.read_exact(&mut buf)?;
+        for (i, c) in buf.chunks_exact(4).enumerate() {
+            adj[i] = u32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        }
+    }
+    r.read_exact(&mut b1)?;
+    let unit = b1[0] != 0;
+    let weights = if unit {
+        vec![1.0f32; arcs]
+    } else {
+        let mut buf = vec![0u8; arcs * 4];
+        r.read_exact(&mut buf)?;
+        buf.chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    };
+    Ok(Graph::from_parts(offsets, adj, weights, undirected))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{self, GenConfig};
+
+    fn tmpdir() -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("fn2v-io-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn edge_list_round_trip() {
+        let g = gen::er_graph(&GenConfig::new(64, 4, 7));
+        let p = tmpdir().join("er.txt");
+        save_edge_list(&g, &p).unwrap();
+        let g2 = load_edge_list(&p, g.num_vertices(), true).unwrap();
+        assert_eq!(g.num_vertices(), g2.num_vertices());
+        assert_eq!(g.num_arcs(), g2.num_arcs());
+        for v in g.vertices() {
+            assert_eq!(g.neighbors(v), g2.neighbors(v));
+        }
+    }
+
+    #[test]
+    fn binary_round_trip_unit_weights() {
+        let g = gen::er_graph(&GenConfig::new(100, 6, 3));
+        let p = tmpdir().join("er.bin");
+        write_binary(&g, &p).unwrap();
+        let g2 = read_binary(&p).unwrap();
+        assert_eq!(g.num_vertices(), g2.num_vertices());
+        assert_eq!(g.is_undirected(), g2.is_undirected());
+        for v in g.vertices() {
+            assert_eq!(g.neighbors(v), g2.neighbors(v));
+            assert_eq!(g.weights(v), g2.weights(v));
+        }
+    }
+
+    #[test]
+    fn binary_round_trip_weighted() {
+        let mut b = crate::graph::GraphBuilder::new_undirected(5);
+        b.add_edge(0, 1, 2.5);
+        b.add_edge(1, 2, 0.5);
+        b.add_edge(3, 4, 7.0);
+        let g = b.build();
+        let p = tmpdir().join("wt.bin");
+        write_binary(&g, &p).unwrap();
+        let g2 = read_binary(&p).unwrap();
+        for v in g.vertices() {
+            assert_eq!(g.weights(v), g2.weights(v));
+        }
+        assert!(!g2.has_unit_weights());
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let p = tmpdir().join("junk.bin");
+        std::fs::write(&p, b"NOTAGRAPH").unwrap();
+        assert!(read_binary(&p).is_err());
+    }
+
+    #[test]
+    fn comments_and_blank_lines_skipped() {
+        let p = tmpdir().join("cmt.txt");
+        std::fs::write(&p, "# hi\n\n0 1\n1 2 3.5\n").unwrap();
+        let g = load_edge_list(&p, 3, true).unwrap();
+        assert_eq!(g.num_edges(), 2);
+        assert_eq!(g.weights(1), &[1.0, 3.5]);
+    }
+
+    #[test]
+    fn malformed_line_is_error() {
+        let p = tmpdir().join("bad.txt");
+        std::fs::write(&p, "0\n").unwrap();
+        assert!(load_edge_list(&p, 3, true).is_err());
+    }
+}

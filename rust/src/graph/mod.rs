@@ -1,0 +1,15 @@
+//! Graph substrate: compressed-sparse-row adjacency, builders, statistics,
+//! partitioning, and binary/edge-list I/O.
+//!
+//! All engines in this crate (the Pregel workers, the single-machine
+//! C-Node2Vec baseline, the Spark simulation) consume the same immutable
+//! [`Graph`], so cross-engine comparisons are apples-to-apples.
+
+mod builder;
+mod csr;
+mod io;
+pub mod partition;
+
+pub use builder::GraphBuilder;
+pub use csr::{Graph, GraphStats, VertexId};
+pub use io::{load_edge_list, read_binary, save_edge_list, write_binary};

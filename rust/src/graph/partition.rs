@@ -1,0 +1,142 @@
+//! Vertex partitioning across workers.
+//!
+//! GraphLite hash-partitions vertices across workers; FN-Cache additionally
+//! needs a cheap worker-of-vertex lookup from any worker (the paper extends
+//! GraphLite with exactly that API). Partitioners here are pure functions of
+//! the vertex id, so the lookup needs no communication.
+
+use super::csr::VertexId;
+
+/// Assignment of vertices to `num_workers` workers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Partitioner {
+    /// `v % W` — GraphLite's default; spreads consecutive ids.
+    Hash { num_workers: usize },
+    /// Contiguous ranges of `ceil(n/W)` — better locality for RMAT ids,
+    /// used by the partitioning ablation bench.
+    Range { num_workers: usize, num_vertices: usize },
+}
+
+impl Partitioner {
+    pub fn hash(num_workers: usize) -> Self {
+        assert!(num_workers > 0);
+        Partitioner::Hash { num_workers }
+    }
+
+    pub fn range(num_workers: usize, num_vertices: usize) -> Self {
+        assert!(num_workers > 0);
+        Partitioner::Range {
+            num_workers,
+            num_vertices,
+        }
+    }
+
+    #[inline]
+    pub fn num_workers(&self) -> usize {
+        match *self {
+            Partitioner::Hash { num_workers } => num_workers,
+            Partitioner::Range { num_workers, .. } => num_workers,
+        }
+    }
+
+    /// Worker owning vertex `v`. This is the FN-Cache lookup API.
+    #[inline]
+    pub fn worker_of(&self, v: VertexId) -> usize {
+        match *self {
+            Partitioner::Hash { num_workers } => (v as usize) % num_workers,
+            Partitioner::Range {
+                num_workers,
+                num_vertices,
+            } => {
+                let chunk = num_vertices.div_ceil(num_workers).max(1);
+                ((v as usize) / chunk).min(num_workers - 1)
+            }
+        }
+    }
+
+    /// All vertices of `worker` among `0..n`, in id order.
+    pub fn vertices_of(&self, worker: usize, n: usize) -> Vec<VertexId> {
+        (0..n as VertexId)
+            .filter(|&v| self.worker_of(v) == worker)
+            .collect()
+    }
+
+    /// Dense index of `v` within its worker's vertex list (the inverse of
+    /// `vertices_of(worker_of(v), n)[i] == v`). O(1) for both schemes.
+    #[inline]
+    pub fn local_index(&self, v: VertexId) -> usize {
+        match *self {
+            Partitioner::Hash { num_workers } => (v as usize) / num_workers,
+            Partitioner::Range {
+                num_workers,
+                num_vertices,
+            } => {
+                let chunk = num_vertices.div_ceil(num_workers).max(1);
+                (v as usize) % chunk
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propkit::{forall, Gen};
+
+    #[test]
+    fn hash_round_robins() {
+        let p = Partitioner::hash(3);
+        assert_eq!(p.worker_of(0), 0);
+        assert_eq!(p.worker_of(1), 1);
+        assert_eq!(p.worker_of(2), 2);
+        assert_eq!(p.worker_of(3), 0);
+    }
+
+    #[test]
+    fn range_is_contiguous_and_covers() {
+        let p = Partitioner::range(4, 10);
+        let mut seen = vec![];
+        for w in 0..4 {
+            seen.extend(p.vertices_of(w, 10));
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, (0..10).collect::<Vec<_>>());
+        // chunk = ceil(10/4) = 3 -> worker 0 gets 0..3
+        assert_eq!(p.vertices_of(0, 10), vec![0, 1, 2]);
+        assert_eq!(p.vertices_of(3, 10), vec![9]);
+    }
+
+    #[test]
+    fn prop_every_vertex_has_exactly_one_owner() {
+        forall("partition covers exactly once", 50, |g: &mut Gen| {
+            let n = g.usize_in(1, 200);
+            let w = g.usize_in(1, 16);
+            let p = if g.bool() {
+                Partitioner::hash(w)
+            } else {
+                Partitioner::range(w, n)
+            };
+            let mut owners = vec![0usize; n];
+            for worker in 0..w {
+                for v in p.vertices_of(worker, n) {
+                    owners[v as usize] += 1;
+                    assert_eq!(p.worker_of(v), worker);
+                }
+            }
+            assert!(owners.iter().all(|&c| c == 1));
+        });
+    }
+
+    #[test]
+    fn prop_balance_within_one_chunk() {
+        forall("partition is balanced", 50, |g: &mut Gen| {
+            let n = g.usize_in(1, 500);
+            let w = g.usize_in(1, 12);
+            let p = Partitioner::hash(w);
+            let sizes: Vec<usize> = (0..w).map(|i| p.vertices_of(i, n).len()).collect();
+            let min = sizes.iter().min().unwrap();
+            let max = sizes.iter().max().unwrap();
+            assert!(max - min <= 1, "hash imbalance: {sizes:?}");
+        });
+    }
+}

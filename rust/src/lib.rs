@@ -1,0 +1,31 @@
+//! Fast-Node2Vec: efficient Node2Vec graph computation on a Pregel-like engine.
+//!
+//! Reproduction of "Efficient Graph Computation for Node2Vec" (Zhou, Niu,
+//! Chen, 2018). The crate is organized as:
+//!
+//! - [`graph`]   — CSR graph substrate, partitioning, stats, I/O.
+//! - [`gen`]     — RMAT / ER / WeC / Skew / labeled-community generators.
+//! - [`pregel`]  — GraphLite-like BSP engine (master + worker threads,
+//!                 supersteps, messages, vote-to-halt, local-access APIs).
+//! - [`node2vec`]— the Fast-Node2Vec family: FN-Base, FN-Local, FN-Switch,
+//!                 FN-Cache, FN-Multi, FN-Approx.
+//! - [`baselines`]— C-Node2Vec (single machine, precomputed alias tables)
+//!                 and a Spark-Node2Vec simulation (RDD copy-on-write,
+//!                 trim-30, shuffle-spill joins).
+//! - [`runtime`] — PJRT loader for AOT-compiled JAX/Pallas SGNS artifacts.
+//! - [`embed`]   — skip-gram-negative-sampling trainer over walks (HLO hot
+//!                 path with a pure-Rust oracle).
+//! - [`classify`]— one-vs-rest logistic regression + micro/macro F1.
+//! - [`exp`]     — per-figure experiment drivers (Table 1, Figures 1-14).
+//! - [`util`]    — PRNG, alias sampling, CLI, benchkit, propkit, memstat.
+
+pub mod baselines;
+pub mod classify;
+pub mod embed;
+pub mod exp;
+pub mod gen;
+pub mod graph;
+pub mod node2vec;
+pub mod pregel;
+pub mod runtime;
+pub mod util;

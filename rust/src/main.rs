@@ -1,0 +1,15 @@
+//! `fastn2v` CLI — leader entrypoint.
+//!
+//! Subcommands (see `fastn2v help`):
+//! - `gen`    — generate a graph to disk (edge list or binary).
+//! - `stats`  — print Table-1 style statistics for a graph.
+//! - `walk`   — run a walk engine on a graph, write walks.
+//! - `embed`  — train SGNS embeddings from walks via the PJRT runtime.
+//! - `fig`    — regenerate a paper figure/table (fig1..fig14, table1).
+//! - `pipeline` — full walks→embeddings→classification run.
+
+fn main() {
+    fastn2v::util::logging::init_from_env();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(fastn2v::exp::cli_main(args));
+}

@@ -1,0 +1,162 @@
+//! The Fast-Node2Vec family: efficient 2nd-order biased random walks on
+//! the Pregel engine (paper §3).
+//!
+//! All variants compute transition probabilities **on demand** during the
+//! walk (never precomputed — the paper's core idea, avoiding the Eq. 1
+//! `8·Σdᵢ²` memory blow-up) and differ in how the predecessor's adjacency
+//! reaches the current walk vertex:
+//!
+//! | Variant   | NEIG handling |
+//! |-----------|---------------|
+//! | FN-Base   | full adjacency in every NEIG message (Algorithm 1) |
+//! | FN-Local  | same-worker NEIG replaced by a direct partition read |
+//! | FN-Switch | popular sender asks the receiver to ship *its* (small) adjacency back and computes on its behalf (costs an extra superstep per switched hop) |
+//! | FN-Cache  | popular senders' adjacency cached per worker; repeat sends become 12-byte markers |
+//! | FN-Approx | FN-Cache + Eq. 2–3 bounded approximation at popular vertices (samples by static weights when the bound gap < ε) |
+//!
+//! FN-Multi is an orthogonal driver-level technique: run the `n` walks in
+//! `k` rounds of `n/k` to cap message memory ([`run_walks`] with
+//! `rounds > 1`).
+
+pub mod program;
+pub mod reference;
+pub mod transition;
+
+use crate::graph::partition::Partitioner;
+use crate::graph::Graph;
+use crate::pregel::{Engine, EngineError, EngineMetrics, EngineOpts};
+
+pub use program::{FnMsg, FnProgram, WalkStats};
+
+/// Which member of the family to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Variant {
+    Base,
+    Local,
+    Switch,
+    Cache,
+    Approx,
+}
+
+impl Variant {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Variant::Base => "FN-Base",
+            Variant::Local => "FN-Local",
+            Variant::Switch => "FN-Switch",
+            Variant::Cache => "FN-Cache",
+            Variant::Approx => "FN-Approx",
+        }
+    }
+
+    pub const ALL: [Variant; 5] = [
+        Variant::Base,
+        Variant::Local,
+        Variant::Switch,
+        Variant::Cache,
+        Variant::Approx,
+    ];
+}
+
+/// Node2Vec walk configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct FnConfig {
+    /// Return parameter (Figure 2).
+    pub p: f32,
+    /// In-out parameter (Figure 2).
+    pub q: f32,
+    /// Number of sampled steps per walk (paper: l = 80; the stored walk
+    /// has `walk_length + 1` vertices including the start).
+    pub walk_length: u32,
+    pub seed: u64,
+    pub variant: Variant,
+    /// Degree at or above which a vertex counts as "popular"
+    /// (FN-Switch/Cache/Approx).
+    pub popular_threshold: u32,
+    /// FN-Approx bound-gap threshold ε (paper suggests 1e-3).
+    pub approx_eps: f64,
+}
+
+impl FnConfig {
+    /// Paper defaults: l=80, threshold tuned per-graph; ε=1e-3.
+    pub fn new(p: f32, q: f32, seed: u64) -> Self {
+        FnConfig {
+            p,
+            q,
+            walk_length: 80,
+            seed,
+            variant: Variant::Base,
+            popular_threshold: 128,
+            approx_eps: 1e-3,
+        }
+    }
+
+    pub fn with_variant(mut self, v: Variant) -> Self {
+        self.variant = v;
+        self
+    }
+
+    pub fn with_walk_length(mut self, l: u32) -> Self {
+        self.walk_length = l;
+        self
+    }
+
+    pub fn with_popular_threshold(mut self, t: u32) -> Self {
+        self.popular_threshold = t;
+        self
+    }
+}
+
+/// One walk per start vertex: `walks[v]` starts at `v` and holds up to
+/// `walk_length + 1` vertex ids (shorter only if truncated at a dead end).
+pub type WalkSet = Vec<Vec<u32>>;
+
+/// Output of a walk run.
+pub struct WalkOutput {
+    pub walks: WalkSet,
+    pub metrics: EngineMetrics,
+    pub stats: WalkStats,
+}
+
+/// Run Node2Vec walks for every vertex with the configured variant.
+///
+/// `rounds > 1` enables FN-Multi: the walk population is split into
+/// `rounds` disjoint start sets executed sequentially, dividing peak
+/// message memory by ~`rounds` (paper §3.4).
+pub fn run_walks(
+    graph: &Graph,
+    part: Partitioner,
+    cfg: &FnConfig,
+    opts: EngineOpts,
+    rounds: u32,
+) -> Result<WalkOutput, EngineError> {
+    assert!(rounds >= 1);
+    let n = graph.num_vertices();
+    let mut walks: WalkSet = vec![Vec::new(); n];
+    let mut merged = EngineMetrics::default();
+    let mut stats = WalkStats::default();
+    for round in 0..rounds {
+        let program = FnProgram::new(graph, *cfg, round, rounds);
+        let engine = Engine::new(graph, part, program, opts);
+        let out = engine.run()?;
+        stats.merge(&engine.program().stats());
+        for (vid, value) in out.values.into_iter().enumerate() {
+            if !value.walk.is_empty() {
+                walks[vid] = value.walk;
+            }
+        }
+        // Merge metrics: concatenate supersteps (rounds run back-to-back).
+        merged.base_bytes = merged.base_bytes.max(out.metrics.base_bytes);
+        merged.peak_bytes = merged.peak_bytes.max(out.metrics.peak_bytes);
+        merged.wall_secs += out.metrics.wall_secs;
+        merged.supersteps.extend(out.metrics.supersteps);
+    }
+    Ok(WalkOutput {
+        walks,
+        metrics: merged,
+        stats,
+    })
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,524 @@
+//! The vertex program implementing Algorithm 1 (FN-Base) and the FN-Local /
+//! FN-Switch / FN-Cache / FN-Approx optimizations (paper §3.2–3.4).
+//!
+//! Message protocol (all labelled with the walk's starting vertex id, as in
+//! Algorithm 1, plus the step index so delayed hops — FN-Switch round trips
+//! and FN-Cache miss retries — never desynchronize a walk):
+//!
+//! - `Step{start, idx, vertex}` — reports `walk[idx+1] = vertex` to `start`
+//!   (Algorithm 1 line 20).
+//! - `Neig{start, idx, from, neigh}` — `from`'s adjacency, sent to the walk's
+//!   next vertex (line 22). The receiver samples step `idx`.
+//! - `Move{start, idx, from}` — FN-Local/FN-Cache: the destination shares a
+//!   worker with `from`, so it reads `from`'s adjacency through the
+//!   local-partition API instead of the wire.
+//! - `Marker{start, idx, from}` — FN-Cache: `from` already shipped its
+//!   adjacency to this worker; look it up in the worker cache.
+//! - `NeigReq{start, idx, asker}` — FN-Cache miss recovery: the marker
+//!   didn't hit (capacity-bounded cache), ask `from` to retransmit. Costs
+//!   one extra superstep for that hop but preserves exactness.
+//! - `SwitchReq{start, idx, from}` / `SwitchNeig{start, idx, at, ...}` —
+//!   FN-Switch: a popular sender asks the (presumed small) receiver for its
+//!   adjacency and then computes the receiver's step on its behalf.
+//!
+//! Determinism: the RNG for step `idx` of the walk starting at `s` is
+//! `stream(seed, s, idx, SALT)` — a pure function of the run seed, so walks
+//! are bit-identical across worker counts, variants (exact ones), and the
+//! single-threaded reference walker in [`super::reference`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::graph::{Graph, VertexId};
+use crate::pregel::{Ctx, Message, VertexProgram};
+use crate::util::alias::sample_linear;
+use crate::util::rng::stream;
+
+use super::transition::{approx_bounds, sample_second_order};
+use super::{FnConfig, Variant};
+
+/// RNG stream salt for walk-step sampling (shared with the reference
+/// walker so exact variants reproduce its walks bit-for-bit).
+pub const SALT_STEP: u64 = 0x57E9;
+
+/// Messages of the FN protocol.
+pub enum FnMsg {
+    Step {
+        start: VertexId,
+        idx: u16,
+        vertex: VertexId,
+    },
+    Neig {
+        start: VertexId,
+        idx: u16,
+        from: VertexId,
+        neigh: Arc<[VertexId]>,
+    },
+    Move {
+        start: VertexId,
+        idx: u16,
+        from: VertexId,
+    },
+    Marker {
+        start: VertexId,
+        idx: u16,
+        from: VertexId,
+    },
+    NeigReq {
+        start: VertexId,
+        idx: u16,
+        asker: VertexId,
+    },
+    SwitchReq {
+        start: VertexId,
+        idx: u16,
+        from: VertexId,
+    },
+    SwitchNeig {
+        start: VertexId,
+        idx: u16,
+        at: VertexId,
+        neigh: Arc<[VertexId]>,
+        weights: Option<Arc<[f32]>>,
+    },
+}
+
+impl Message for FnMsg {
+    fn wire_bytes(&self) -> u64 {
+        // 12-byte header (type + start + idx padding), 4 bytes per
+        // neighbor id / weight — matching the paper's NEIG accounting.
+        match self {
+            FnMsg::Step { .. }
+            | FnMsg::Move { .. }
+            | FnMsg::Marker { .. }
+            | FnMsg::NeigReq { .. }
+            | FnMsg::SwitchReq { .. } => 12,
+            FnMsg::Neig { neigh, .. } => 12 + 4 * neigh.len() as u64,
+            FnMsg::SwitchNeig { neigh, weights, .. } => {
+                12 + 4 * neigh.len() as u64
+                    + weights.as_ref().map_or(0, |w| 4 * w.len() as u64)
+            }
+        }
+    }
+}
+
+/// Per-vertex state.
+#[derive(Default)]
+pub struct FnValue {
+    /// The walk starting at this vertex: `[start, step0, step1, ...]`.
+    pub walk: Vec<VertexId>,
+    /// FN-Cache: bitmask of workers this (popular) vertex has shipped its
+    /// adjacency to (the paper's `WorkerSent` set; ≤64 workers).
+    worker_sent: u64,
+    /// Lazily-built Arc of this vertex's adjacency for message payloads.
+    own_arc: Option<Arc<[VertexId]>>,
+}
+
+/// Counters describing how the walk steps were computed.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct WalkStats {
+    pub exact_steps: u64,
+    /// Steps sampled by static weights under the Eq. 2–3 bound (FN-Approx).
+    pub approx_steps: u64,
+    pub local_reads: u64,
+    pub cache_stores: u64,
+    pub cache_hits: u64,
+    pub markers_sent: u64,
+    /// Cache-miss retransmissions (capacity-bounded cache).
+    pub cache_retries: u64,
+    pub switched_hops: u64,
+    /// Walks that hit a dead end (directed graphs only).
+    pub truncated_walks: u64,
+}
+
+impl WalkStats {
+    pub fn merge(&mut self, other: &WalkStats) {
+        self.exact_steps += other.exact_steps;
+        self.approx_steps += other.approx_steps;
+        self.local_reads += other.local_reads;
+        self.cache_stores += other.cache_stores;
+        self.cache_hits += other.cache_hits;
+        self.markers_sent += other.markers_sent;
+        self.cache_retries += other.cache_retries;
+        self.switched_hops += other.switched_hops;
+        self.truncated_walks += other.truncated_walks;
+    }
+}
+
+#[derive(Default)]
+struct AtomicStats {
+    exact_steps: AtomicU64,
+    approx_steps: AtomicU64,
+    local_reads: AtomicU64,
+    cache_stores: AtomicU64,
+    cache_hits: AtomicU64,
+    markers_sent: AtomicU64,
+    cache_retries: AtomicU64,
+    switched_hops: AtomicU64,
+    truncated_walks: AtomicU64,
+}
+
+/// The Fast-Node2Vec vertex program. One instance drives one engine run
+/// (one FN-Multi round).
+pub struct FnProgram {
+    cfg: FnConfig,
+    unit_weights: bool,
+    /// FN-Multi: this run only starts walks for `vid % rounds == round`.
+    round: u32,
+    rounds: u32,
+    stats: AtomicStats,
+}
+
+impl FnProgram {
+    pub fn new(graph: &Graph, cfg: FnConfig, round: u32, rounds: u32) -> Self {
+        assert!(rounds >= 1 && round < rounds);
+        FnProgram {
+            cfg,
+            unit_weights: graph.has_unit_weights(),
+            round,
+            rounds,
+            stats: AtomicStats::default(),
+        }
+    }
+
+    pub fn stats(&self) -> WalkStats {
+        WalkStats {
+            exact_steps: self.stats.exact_steps.load(Ordering::Relaxed),
+            approx_steps: self.stats.approx_steps.load(Ordering::Relaxed),
+            local_reads: self.stats.local_reads.load(Ordering::Relaxed),
+            cache_stores: self.stats.cache_stores.load(Ordering::Relaxed),
+            cache_hits: self.stats.cache_hits.load(Ordering::Relaxed),
+            markers_sent: self.stats.markers_sent.load(Ordering::Relaxed),
+            cache_retries: self.stats.cache_retries.load(Ordering::Relaxed),
+            switched_hops: self.stats.switched_hops.load(Ordering::Relaxed),
+            truncated_walks: self.stats.truncated_walks.load(Ordering::Relaxed),
+        }
+    }
+
+    #[inline]
+    fn in_round(&self, vid: VertexId) -> bool {
+        self.rounds == 1 || (vid % self.rounds) == self.round
+    }
+
+    #[inline]
+    fn is_popular(&self, degree: usize) -> bool {
+        degree >= self.cfg.popular_threshold as usize
+    }
+
+    fn own_arc(value: &mut FnValue, neighbors: &[VertexId]) -> Arc<[VertexId]> {
+        value
+            .own_arc
+            .get_or_insert_with(|| Arc::from(neighbors))
+            .clone()
+    }
+
+    /// Superstep 0: start this vertex's walk (Algorithm 1 lines 3–6).
+    fn start_walk(&self, ctx: &mut Ctx<'_, Self>, vid: VertexId, value: &mut FnValue) {
+        value.walk.push(vid);
+        if self.cfg.walk_length == 0 {
+            return;
+        }
+        let weights = ctx.weights();
+        if weights.is_empty() {
+            // Isolated vertex: the walk is just [vid].
+            return;
+        }
+        let mut rng = stream(self.cfg.seed, vid as u64, 0, SALT_STEP);
+        let Some(i) = sample_linear(weights, &mut rng) else {
+            self.stats.truncated_walks.fetch_add(1, Ordering::Relaxed);
+            return;
+        };
+        let x = ctx.neighbors()[i];
+        value.walk.push(x);
+        if self.cfg.walk_length > 1 {
+            self.notify_next(ctx, value, vid, 1, x);
+        }
+    }
+
+    /// Send the continuation for step `idx` (to be sampled at `dst` with
+    /// predecessor = the current vertex) according to the variant rules.
+    fn notify_next(
+        &self,
+        ctx: &mut Ctx<'_, Self>,
+        value: &mut FnValue,
+        start: VertexId,
+        idx: u16,
+        dst: VertexId,
+    ) {
+        let dw = ctx.worker_of(dst); // destination worker
+        let me = ctx.my_worker();
+        let cur = ctx.current_vertex(); // this vertex = the predecessor
+        match self.cfg.variant {
+            Variant::Base => {
+                let arc = Self::own_arc(value, ctx.neighbors());
+                ctx.send(dst, FnMsg::Neig { start, idx, from: cur, neigh: arc });
+            }
+            Variant::Local => {
+                if dw == me {
+                    ctx.send(dst, FnMsg::Move { start, idx, from: cur });
+                } else {
+                    let arc = Self::own_arc(value, ctx.neighbors());
+                    ctx.send(dst, FnMsg::Neig { start, idx, from: cur, neigh: arc });
+                }
+            }
+            Variant::Switch => {
+                if self.is_popular(ctx.degree_of_self()) {
+                    self.stats.switched_hops.fetch_add(1, Ordering::Relaxed);
+                    ctx.send(dst, FnMsg::SwitchReq { start, idx, from: cur });
+                } else {
+                    let arc = Self::own_arc(value, ctx.neighbors());
+                    ctx.send(dst, FnMsg::Neig { start, idx, from: cur, neigh: arc });
+                }
+            }
+            Variant::Cache | Variant::Approx => {
+                if dw == me {
+                    ctx.send(dst, FnMsg::Move { start, idx, from: cur });
+                } else if self.is_popular(ctx.degree_of_self()) {
+                    let bit = 1u64 << (dw as u32 % 64);
+                    if value.worker_sent & bit != 0 {
+                        self.stats.markers_sent.fetch_add(1, Ordering::Relaxed);
+                        ctx.send(dst, FnMsg::Marker { start, idx, from: cur });
+                    } else {
+                        value.worker_sent |= bit;
+                        let arc = Self::own_arc(value, ctx.neighbors());
+                        ctx.send(dst, FnMsg::Neig { start, idx, from: cur, neigh: arc });
+                    }
+                } else {
+                    let arc = Self::own_arc(value, ctx.neighbors());
+                    ctx.send(dst, FnMsg::Neig { start, idx, from: cur, neigh: arc });
+                }
+            }
+        }
+    }
+
+    /// Sample step `idx` at the current vertex given the predecessor's
+    /// adjacency; report it to `start` and forward the walk.
+    #[allow(clippy::too_many_arguments)]
+    fn continue_walk(
+        &self,
+        ctx: &mut Ctx<'_, Self>,
+        value: &mut FnValue,
+        start: VertexId,
+        idx: u16,
+        pred: VertexId,
+        pred_neigh: &[VertexId],
+        scratch: &mut Vec<f32>,
+    ) {
+        let v_neighbors = ctx.neighbors();
+        let v_weights = ctx.weights();
+        let mut rng = stream(self.cfg.seed, start as u64, idx as u64, SALT_STEP);
+
+        // FN-Approx: at a popular vertex with an unpopular predecessor,
+        // skip the 2nd-order computation when the Eq. 2–3 bound gap is
+        // below ε (paper §3.4).
+        let mut sampled: Option<usize> = None;
+        if self.cfg.variant == Variant::Approx
+            && self.is_popular(v_neighbors.len())
+            && !self.is_popular(pred_neigh.len())
+        {
+            let (w_min, w_max) = if self.unit_weights {
+                (1.0, 1.0)
+            } else {
+                let mut lo = f32::INFINITY;
+                let mut hi = 0f32;
+                for &w in v_weights {
+                    lo = lo.min(w);
+                    hi = hi.max(w);
+                }
+                (lo as f64, hi as f64)
+            };
+            let b = approx_bounds(
+                v_neighbors.len() as u64,
+                pred_neigh.len() as u64,
+                w_min,
+                w_max,
+                self.cfg.p as f64,
+                self.cfg.q as f64,
+            );
+            if b.gap() < self.cfg.approx_eps {
+                sampled = sample_linear(v_weights, &mut rng);
+                if sampled.is_some() {
+                    self.stats.approx_steps.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        if sampled.is_none() {
+            sampled = sample_second_order(
+                v_neighbors,
+                v_weights,
+                pred,
+                pred_neigh,
+                self.cfg.p,
+                self.cfg.q,
+                scratch,
+                &mut rng,
+            );
+            if sampled.is_some() {
+                self.stats.exact_steps.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let Some(i) = sampled else {
+            self.stats.truncated_walks.fetch_add(1, Ordering::Relaxed);
+            return;
+        };
+        let x = v_neighbors[i];
+        ctx.send(start, FnMsg::Step { start, idx, vertex: x });
+        if (idx as u32 + 1) < self.cfg.walk_length {
+            self.notify_next(ctx, value, start, idx + 1, x);
+        }
+    }
+}
+
+// Per-worker-thread scratch buffers, reused across compute calls so the
+// hot loop allocates nothing (§Perf: one Vec alloc per walk step removed).
+thread_local! {
+    static SCRATCH: std::cell::RefCell<Vec<f32>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+    static UNIT_WEIGHTS: std::cell::RefCell<Vec<f32>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
+impl VertexProgram for FnProgram {
+    type Value = FnValue;
+    type Msg = FnMsg;
+
+    fn compute(
+        &self,
+        ctx: &mut Ctx<'_, Self>,
+        vid: VertexId,
+        value: &mut FnValue,
+        msgs: &mut Vec<FnMsg>,
+    ) {
+        if ctx.superstep() == 0 {
+            if self.in_round(vid) {
+                self.start_walk(ctx, vid, value);
+            }
+            ctx.vote_to_halt();
+            return;
+        }
+
+        // Messages are processed inline in arrival order: sampling
+        // correctness never depends on order (per-(walk, step) RNG
+        // streams), and the cache protocol tolerates any interleaving
+        // (a Marker that races ahead of its Neig simply retries).
+        SCRATCH.with(|scratch_cell| {
+            let scratch = &mut *scratch_cell.borrow_mut();
+            for m in msgs.drain(..) {
+                match m {
+                    FnMsg::Step { start, idx, vertex } => {
+                        debug_assert_eq!(start, vid, "STEP routed to wrong vertex");
+                        debug_assert_eq!(value.walk.len(), idx as usize + 1);
+                        value.walk.push(vertex);
+                    }
+                    FnMsg::Neig { start, idx, from, neigh } => {
+                        // FN-Cache: cache popular remote adjacency on arrival.
+                        if matches!(self.cfg.variant, Variant::Cache | Variant::Approx)
+                            && self.is_popular(neigh.len())
+                            && ctx.worker_of(from) != ctx.my_worker()
+                            && ctx.cache_get(from).is_none()
+                            && ctx.cache_put(from, neigh.clone())
+                        {
+                            self.stats.cache_stores.fetch_add(1, Ordering::Relaxed);
+                        }
+                        self.continue_walk(ctx, value, start, idx, from, &neigh, scratch);
+                    }
+                    FnMsg::Move { start, idx, from } => {
+                        self.stats.local_reads.fetch_add(1, Ordering::Relaxed);
+                        let (n, _) = ctx
+                            .local_neighbors(from)
+                            .expect("Move message from non-local vertex");
+                        self.continue_walk(ctx, value, start, idx, from, n, scratch);
+                    }
+                    FnMsg::Marker { start, idx, from } => match ctx.cache_get(from) {
+                        Some(neigh) => {
+                            self.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
+                            self.continue_walk(ctx, value, start, idx, from, &neigh, scratch);
+                        }
+                        None => {
+                            // Capacity-bounded cache missed: ask for a resend.
+                            self.stats.cache_retries.fetch_add(1, Ordering::Relaxed);
+                            ctx.send(from, FnMsg::NeigReq { start, idx, asker: vid });
+                        }
+                    },
+                    FnMsg::NeigReq { start, idx, asker } => {
+                        // Clear the WorkerSent bit so the cache protocol can
+                        // re-seed that worker, then retransmit in full.
+                        let bit = 1u64 << (ctx.worker_of(asker) as u32 % 64);
+                        value.worker_sent &= !bit;
+                        let arc = Self::own_arc(value, ctx.neighbors());
+                        ctx.send(asker, FnMsg::Neig { start, idx, from: vid, neigh: arc });
+                    }
+                    FnMsg::SwitchReq { start, idx, from } => {
+                        // We are the walk's current vertex; ship our (small)
+                        // adjacency back to the popular predecessor `from`.
+                        let arc = Self::own_arc(value, ctx.neighbors());
+                        let weights = if self.unit_weights {
+                            None
+                        } else {
+                            Some(Arc::from(ctx.weights()))
+                        };
+                        ctx.send(
+                            from,
+                            FnMsg::SwitchNeig { start, idx, at: vid, neigh: arc, weights },
+                        );
+                    }
+                    FnMsg::SwitchNeig { start, idx, at, neigh, weights } => {
+                        // FN-Switch completion: we (vid) are the predecessor;
+                        // sample `at`'s step idx over `at`'s adjacency.
+                        let mut rng =
+                            stream(self.cfg.seed, start as u64, idx as u64, SALT_STEP);
+                        let sampled = UNIT_WEIGHTS.with(|unit_cell| {
+                            let unit = &mut *unit_cell.borrow_mut();
+                            let w: &[f32] = match &weights {
+                                Some(ws) => ws,
+                                None => {
+                                    unit.resize(neigh.len(), 1.0);
+                                    &unit[..neigh.len()]
+                                }
+                            };
+                            sample_second_order(
+                                &neigh,
+                                w,
+                                vid,
+                                ctx.neighbors(),
+                                self.cfg.p,
+                                self.cfg.q,
+                                scratch,
+                                &mut rng,
+                            )
+                        });
+                        if sampled.is_some() {
+                            self.stats.exact_steps.fetch_add(1, Ordering::Relaxed);
+                        }
+                        let Some(i) = sampled else {
+                            self.stats.truncated_walks.fetch_add(1, Ordering::Relaxed);
+                            continue;
+                        };
+                        let x = neigh[i];
+                        ctx.send(start, FnMsg::Step { start, idx, vertex: x });
+                        if (idx as u32 + 1) < self.cfg.walk_length {
+                            // Forward on `at`'s behalf: x's predecessor is `at`.
+                            ctx.send(
+                                x,
+                                FnMsg::Neig {
+                                    start,
+                                    idx: idx + 1,
+                                    from: at,
+                                    neigh: neigh.clone(),
+                                },
+                            );
+                        }
+                    }
+                }
+            }
+        });
+        ctx.vote_to_halt();
+    }
+
+    fn value_bytes(&self, v: &FnValue) -> u64 {
+        (4 * v.walk.len()
+            + 8
+            + v.own_arc.as_ref().map_or(0, |a| 4 * a.len())
+            + 24) as u64
+    }
+}

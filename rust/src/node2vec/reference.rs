@@ -1,0 +1,134 @@
+//! Single-threaded reference walker — the exactness oracle.
+//!
+//! Produces the *bit-identical* walks the exact FN-* variants must emit:
+//! it consumes the same per-(walk, step) RNG streams
+//! (`stream(seed, start, idx, SALT_STEP)`) and samples with the same
+//! linear scan over the same sorted candidate order. Any divergence in an
+//! exact distributed variant is therefore a bug, not sampling noise — the
+//! cross-engine equality tests in `node2vec::tests` rely on this.
+//!
+//! Also provides a brute-force distribution walker used to validate the
+//! *statistics* of FN-Approx and of the alias-sampled C-Node2Vec baseline.
+
+use crate::graph::{Graph, VertexId};
+use crate::util::alias::sample_linear;
+use crate::util::rng::stream;
+
+use super::program::SALT_STEP;
+use super::transition::fill_second_order_weights;
+use super::{FnConfig, WalkSet};
+
+/// Walk every start vertex once, single-threaded, exactly.
+pub fn reference_walks(graph: &Graph, cfg: &FnConfig) -> WalkSet {
+    let n = graph.num_vertices();
+    let mut walks: WalkSet = Vec::with_capacity(n);
+    let mut scratch: Vec<f32> = Vec::new();
+    for start in 0..n as VertexId {
+        walks.push(reference_walk(graph, cfg, start, &mut scratch));
+    }
+    walks
+}
+
+/// One walk from `start`.
+pub fn reference_walk(
+    graph: &Graph,
+    cfg: &FnConfig,
+    start: VertexId,
+    scratch: &mut Vec<f32>,
+) -> Vec<VertexId> {
+    let mut walk = Vec::with_capacity(cfg.walk_length as usize + 1);
+    walk.push(start);
+    if cfg.walk_length == 0 || graph.degree(start) == 0 {
+        return walk;
+    }
+    // Step 0: static edge weights (Algorithm 1 line 4).
+    let mut rng = stream(cfg.seed, start as u64, 0, SALT_STEP);
+    let Some(i) = sample_linear(graph.weights(start), &mut rng) else {
+        return walk;
+    };
+    let mut prev = start;
+    let mut cur = graph.neighbors(start)[i];
+    walk.push(cur);
+    // Steps 1..walk_length: 2nd-order.
+    for idx in 1..cfg.walk_length {
+        let mut rng = stream(cfg.seed, start as u64, idx as u64, SALT_STEP);
+        fill_second_order_weights(
+            graph.neighbors(cur),
+            graph.weights(cur),
+            prev,
+            graph.neighbors(prev),
+            cfg.p,
+            cfg.q,
+            scratch,
+        );
+        let Some(i) = sample_linear(scratch, &mut rng) else {
+            break; // dead end (directed graphs)
+        };
+        let next = graph.neighbors(cur)[i];
+        prev = cur;
+        cur = next;
+        walk.push(cur);
+    }
+    walk
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{er_graph, GenConfig};
+    use crate::node2vec::FnConfig;
+
+    #[test]
+    fn walks_have_expected_length_and_validity() {
+        let g = er_graph(&GenConfig::new(200, 8, 3));
+        let cfg = FnConfig::new(1.0, 1.0, 42).with_walk_length(10);
+        let walks = reference_walks(&g, &cfg);
+        assert_eq!(walks.len(), 200);
+        for (start, w) in walks.iter().enumerate() {
+            assert_eq!(w[0], start as u32);
+            if g.degree(start as u32) > 0 {
+                assert_eq!(w.len(), 11, "start {start}");
+            } else {
+                assert_eq!(w.len(), 1);
+            }
+            for pair in w.windows(2) {
+                assert!(g.has_edge(pair[0], pair[1]), "non-edge step {pair:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let g = er_graph(&GenConfig::new(100, 6, 9));
+        let cfg = FnConfig::new(0.5, 2.0, 7).with_walk_length(8);
+        assert_eq!(reference_walks(&g, &cfg), reference_walks(&g, &cfg));
+        let cfg2 = FnConfig::new(0.5, 2.0, 8).with_walk_length(8);
+        assert_ne!(reference_walks(&g, &cfg), reference_walks(&g, &cfg2));
+    }
+
+    #[test]
+    fn p_bias_controls_backtracking() {
+        // Small p => strong return bias: count immediate backtracks
+        // (walk[i+1] == walk[i-1]) and compare p=0.1 vs p=10.
+        let g = er_graph(&GenConfig::new(400, 10, 5));
+        let count_backtracks = |p: f32| {
+            let cfg = FnConfig::new(p, 1.0, 11).with_walk_length(20);
+            let walks = reference_walks(&g, &cfg);
+            let mut b = 0usize;
+            for w in &walks {
+                for i in 1..w.len().saturating_sub(1) {
+                    if w[i + 1] == w[i - 1] {
+                        b += 1;
+                    }
+                }
+            }
+            b
+        };
+        let low_p = count_backtracks(0.1);
+        let high_p = count_backtracks(10.0);
+        assert!(
+            low_p > 3 * high_p,
+            "return bias not visible: p=0.1 -> {low_p}, p=10 -> {high_p}"
+        );
+    }
+}

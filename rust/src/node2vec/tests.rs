@@ -1,0 +1,294 @@
+//! Cross-engine tests: every *exact* FN variant must reproduce the
+//! single-threaded reference walker bit-for-bit (identical RNG streams by
+//! construction), across graphs, (p, q) settings, worker counts, FN-Multi
+//! rounds, and cache pressure. FN-Approx is validated structurally and
+//! statistically.
+
+use crate::gen::{er_graph, skew_graph, GenConfig};
+use crate::graph::partition::Partitioner;
+use crate::graph::{Graph, GraphBuilder};
+use crate::pregel::EngineOpts;
+use crate::util::propkit::{forall, Gen};
+
+use super::reference::reference_walks;
+use super::{run_walks, FnConfig, Variant, WalkOutput};
+
+fn walks_of(
+    graph: &Graph,
+    cfg: &FnConfig,
+    workers: usize,
+    rounds: u32,
+    opts: EngineOpts,
+) -> WalkOutput {
+    run_walks(graph, Partitioner::hash(workers), cfg, opts, rounds).expect("walk run failed")
+}
+
+#[test]
+fn all_exact_variants_match_reference() {
+    let g = skew_graph(&GenConfig::new(600, 12, 21), 3.0);
+    for (p, q) in [(1.0f32, 1.0f32), (0.5, 2.0), (2.0, 0.5)] {
+        let cfg = FnConfig::new(p, q, 99)
+            .with_walk_length(12)
+            .with_popular_threshold(24);
+        let expect = reference_walks(&g, &cfg);
+        for variant in [Variant::Base, Variant::Local, Variant::Switch, Variant::Cache] {
+            let out = walks_of(
+                &g,
+                &cfg.with_variant(variant),
+                4,
+                1,
+                EngineOpts::default(),
+            );
+            assert_eq!(
+                out.walks,
+                expect,
+                "{} diverged from reference at p={p} q={q}",
+                variant.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn worker_count_does_not_change_walks() {
+    let g = er_graph(&GenConfig::new(300, 8, 2));
+    let cfg = FnConfig::new(0.5, 2.0, 5).with_walk_length(10);
+    let expect = reference_walks(&g, &cfg);
+    for workers in [1, 2, 7, 12] {
+        for variant in [Variant::Base, Variant::Cache] {
+            let out = walks_of(&g, &cfg.with_variant(variant), workers, 1, EngineOpts::default());
+            assert_eq!(out.walks, expect, "workers={workers} {}", variant.name());
+        }
+    }
+}
+
+#[test]
+fn fn_multi_rounds_produce_identical_walks() {
+    // FN-Multi trades peak memory for rounds; walks must be unchanged.
+    let g = skew_graph(&GenConfig::new(400, 10, 4), 2.0);
+    let cfg = FnConfig::new(2.0, 0.5, 13).with_walk_length(8);
+    let one = walks_of(&g, &cfg, 3, 1, EngineOpts::default());
+    let four = walks_of(&g, &cfg, 3, 4, EngineOpts::default());
+    assert_eq!(one.walks, four.walks);
+    // And peak message memory should drop with rounds.
+    let peak1 = one.metrics.peak_msg_bytes();
+    let peak4 = four.metrics.peak_msg_bytes();
+    assert!(
+        peak4 < peak1,
+        "FN-Multi did not reduce peak message bytes: {peak1} -> {peak4}"
+    );
+}
+
+#[test]
+fn cache_under_pressure_stays_exact_via_retries() {
+    // Tiny cache: most Marker lookups miss and trigger NeigReq retries —
+    // slower, but the walks must still be exactly the reference walks.
+    let g = skew_graph(&GenConfig::new(500, 14, 8), 4.0);
+    let cfg = FnConfig::new(0.5, 2.0, 3)
+        .with_walk_length(10)
+        .with_popular_threshold(16)
+        .with_variant(Variant::Cache);
+    let expect = reference_walks(&g, &cfg);
+    let out = walks_of(
+        &g,
+        &cfg,
+        4,
+        1,
+        EngineOpts {
+            cache_capacity: Some(512), // a handful of entries per worker
+            ..Default::default()
+        },
+    );
+    assert_eq!(out.walks, expect);
+    assert!(
+        out.stats.cache_retries > 0,
+        "expected cache pressure to trigger retries: {:?}",
+        out.stats
+    );
+}
+
+#[test]
+fn approx_with_zero_eps_is_exact() {
+    let g = skew_graph(&GenConfig::new(400, 10, 6), 3.0);
+    let mut cfg = FnConfig::new(0.5, 2.0, 17)
+        .with_walk_length(10)
+        .with_popular_threshold(16)
+        .with_variant(Variant::Approx);
+    cfg.approx_eps = 0.0;
+    let expect = reference_walks(&g, &cfg);
+    let out = walks_of(&g, &cfg, 4, 1, EngineOpts::default());
+    assert_eq!(out.walks, expect);
+    assert_eq!(out.stats.approx_steps, 0);
+}
+
+#[test]
+fn approx_fires_and_yields_valid_walks() {
+    let g = skew_graph(&GenConfig::new(800, 20, 10), 5.0);
+    let mut cfg = FnConfig::new(0.5, 2.0, 23)
+        .with_walk_length(12)
+        .with_popular_threshold(64)
+        .with_variant(Variant::Approx);
+    cfg.approx_eps = 0.05; // generous: popular vertices approximate
+    let out = walks_of(&g, &cfg, 4, 1, EngineOpts::default());
+    assert!(
+        out.stats.approx_steps > 0,
+        "no approximate steps taken: {:?}",
+        out.stats
+    );
+    for (start, w) in out.walks.iter().enumerate() {
+        assert_eq!(w[0], start as u32);
+        for pair in w.windows(2) {
+            assert!(g.has_edge(pair[0], pair[1]), "invalid step {pair:?}");
+        }
+    }
+}
+
+#[test]
+fn variant_stats_reflect_mechanisms() {
+    let g = skew_graph(&GenConfig::new(600, 16, 30), 4.0);
+    let base_cfg = FnConfig::new(0.5, 2.0, 41)
+        .with_walk_length(10)
+        .with_popular_threshold(32);
+
+    let base = walks_of(&g, &base_cfg.with_variant(Variant::Base), 4, 1, EngineOpts::default());
+    assert_eq!(base.stats.local_reads, 0);
+    assert_eq!(base.stats.markers_sent, 0);
+    assert_eq!(base.stats.switched_hops, 0);
+
+    let local = walks_of(&g, &base_cfg.with_variant(Variant::Local), 4, 1, EngineOpts::default());
+    assert!(local.stats.local_reads > 0);
+
+    let cache = walks_of(&g, &base_cfg.with_variant(Variant::Cache), 4, 1, EngineOpts::default());
+    assert!(cache.stats.cache_stores > 0, "{:?}", cache.stats);
+    assert!(cache.stats.cache_hits > 0, "{:?}", cache.stats);
+    assert!(cache.stats.markers_sent > 0, "{:?}", cache.stats);
+    // With unlimited capacity the only retries come from the benign
+    // same-superstep race (a full NEIG and a marker landing on different
+    // vertices of one worker in the same step); they must be rare.
+    assert!(
+        cache.stats.cache_retries < cache.stats.cache_hits / 2,
+        "{:?}",
+        cache.stats
+    );
+
+    let switch = walks_of(&g, &base_cfg.with_variant(Variant::Switch), 4, 1, EngineOpts::default());
+    assert!(switch.stats.switched_hops > 0);
+    // FN-Switch pays extra supersteps (paper: up to 50% more).
+    assert!(
+        switch.metrics.num_supersteps() > base.metrics.num_supersteps(),
+        "switch {} vs base {}",
+        switch.metrics.num_supersteps(),
+        base.metrics.num_supersteps()
+    );
+}
+
+#[test]
+fn cache_reduces_remote_neig_bytes_on_skewed_graphs() {
+    let g = skew_graph(&GenConfig::new(800, 20, 12), 5.0);
+    let cfg = FnConfig::new(0.5, 2.0, 7)
+        .with_walk_length(16)
+        .with_popular_threshold(32);
+    let base = walks_of(&g, &cfg.with_variant(Variant::Base), 6, 1, EngineOpts::default());
+    let cache = walks_of(&g, &cfg.with_variant(Variant::Cache), 6, 1, EngineOpts::default());
+    assert_eq!(base.walks, cache.walks, "cache must stay exact");
+    let b = base.metrics.total_remote_bytes();
+    let c = cache.metrics.total_remote_bytes();
+    assert!(
+        c * 10 < b * 7,
+        "FN-Cache should cut remote bytes sharply on skewed graphs: {b} -> {c}"
+    );
+}
+
+#[test]
+fn walks_visit_high_degree_vertices_more_often() {
+    // The Figure-5 phenomenon: visit frequency grows with degree.
+    let g = skew_graph(&GenConfig::new(1000, 20, 19), 4.0);
+    let cfg = FnConfig::new(1.0, 1.0, 3).with_walk_length(20);
+    let out = walks_of(&g, &cfg, 4, 1, EngineOpts::default());
+    let mut visits = vec![0u64; g.num_vertices()];
+    for w in &out.walks {
+        for &v in w {
+            visits[v as usize] += 1;
+        }
+    }
+    // Mean visits of the top-decile-degree vertices vs the bottom decile.
+    let mut by_degree: Vec<u32> = g.vertices().collect();
+    by_degree.sort_by_key(|&v| g.degree(v));
+    let lo: f64 = by_degree[..100]
+        .iter()
+        .map(|&v| visits[v as usize] as f64)
+        .sum::<f64>()
+        / 100.0;
+    let hi: f64 = by_degree[900..]
+        .iter()
+        .map(|&v| visits[v as usize] as f64)
+        .sum::<f64>()
+        / 100.0;
+    assert!(
+        hi > 3.0 * lo.max(0.1),
+        "degree bias not visible: lo={lo:.2} hi={hi:.2}"
+    );
+}
+
+#[test]
+fn directed_dead_ends_truncate_walks() {
+    // 0 -> 1 -> 2 (sink). Walks must stop at 2 without panicking.
+    let mut b = GraphBuilder::new_directed(3);
+    b.add_edge(0, 1, 1.0);
+    b.add_edge(1, 2, 1.0);
+    let g = b.build();
+    let cfg = FnConfig::new(1.0, 1.0, 1).with_walk_length(10);
+    let out = walks_of(&g, &cfg, 2, 1, EngineOpts::default());
+    assert_eq!(out.walks[0], vec![0, 1, 2]);
+    assert_eq!(out.walks[1], vec![1, 2]);
+    assert_eq!(out.walks[2], vec![2]);
+}
+
+#[test]
+fn zero_and_one_step_walks() {
+    let g = er_graph(&GenConfig::new(50, 4, 2));
+    let cfg0 = FnConfig::new(1.0, 1.0, 1).with_walk_length(0);
+    let out0 = walks_of(&g, &cfg0, 2, 1, EngineOpts::default());
+    assert!(out0.walks.iter().enumerate().all(|(v, w)| w == &[v as u32]));
+
+    let cfg1 = FnConfig::new(1.0, 1.0, 1).with_walk_length(1);
+    let out1 = walks_of(&g, &cfg1, 2, 1, EngineOpts::default());
+    for (v, w) in out1.walks.iter().enumerate() {
+        if g.degree(v as u32) > 0 {
+            assert_eq!(w.len(), 2);
+            assert!(g.has_edge(v as u32, w[1]));
+        }
+    }
+}
+
+#[test]
+fn prop_exact_variants_equal_reference() {
+    forall("FN exact == reference on random graphs", 8, |g: &mut Gen| {
+        let n = g.usize_in(20, 200);
+        let deg = g.usize_in(2, 10);
+        let seed = g.u64_in(0, 1 << 40);
+        let graph = skew_graph(
+            &GenConfig::new(n.max(20), deg, seed),
+            g.f64_in(1.0, 5.0),
+        );
+        let cfg = FnConfig::new(
+            *g.choose(&[0.25f32, 1.0, 4.0]),
+            *g.choose(&[0.25f32, 1.0, 4.0]),
+            g.u64_in(0, 1 << 40),
+        )
+        .with_walk_length(g.usize_in(1, 12) as u32)
+        .with_popular_threshold(g.usize_in(4, 64) as u32);
+        let expect = reference_walks(&graph, &cfg);
+        let variant = *g.choose(&[Variant::Base, Variant::Local, Variant::Switch, Variant::Cache]);
+        let workers = g.usize_in(1, 6);
+        let out = run_walks(
+            &graph,
+            Partitioner::hash(workers),
+            &cfg.with_variant(variant),
+            EngineOpts::default(),
+            1,
+        )
+        .unwrap();
+        assert_eq!(out.walks, expect, "{} w={workers}", variant.name());
+    });
+}

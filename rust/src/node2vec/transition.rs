@@ -1,0 +1,347 @@
+//! Second-order Node2Vec transition probabilities (paper Figure 2) and the
+//! FN-Approx probability bounds (paper Eq. 2–3).
+//!
+//! The unnormalized transition probability from the current vertex `v` to
+//! its neighbor `x`, given the previous walk vertex `u`, is
+//! `π_vx = α_pq(u, v, x) · w_vx` with
+//!
+//! ```text
+//! α = 1/p  if x == u            (dist(u, x) = 0, "return")
+//! α = 1    if x ∈ N(u)          (dist(u, x) = 1, common neighbor)
+//! α = 1/q  otherwise            (dist(u, x) = 2, "explore")
+//! ```
+//!
+//! Common-neighbor detection walks the two **sorted** adjacency lists with
+//! a two-pointer merge (galloping for very asymmetric degrees) — this is
+//! the hot loop of the whole system; see EXPERIMENTS.md §Perf.
+
+use crate::graph::VertexId;
+use crate::util::alias::sample_linear;
+use crate::util::rng::Xoshiro256pp;
+
+/// Fill `scratch` with unnormalized transition weights for every neighbor
+/// of the current vertex, given predecessor `u` with sorted adjacency
+/// `u_neighbors`.
+///
+/// §Perf note: an earlier version fused the weight total into this loop;
+/// the serial f64 accumulation chain made the whole fill ~50% slower than
+/// letting [`sample_linear`] re-sum the contiguous scratch (which the
+/// compiler vectorizes). Measured and reverted — see EXPERIMENTS.md §Perf.
+pub fn fill_second_order_weights(
+    v_neighbors: &[VertexId],
+    v_weights: &[f32],
+    u: VertexId,
+    u_neighbors: &[VertexId],
+    p: f32,
+    q: f32,
+    scratch: &mut Vec<f32>,
+) {
+    debug_assert_eq!(v_neighbors.len(), v_weights.len());
+    let inv_p = 1.0 / p;
+    let inv_q = 1.0 / q;
+    scratch.clear();
+    scratch.reserve(v_neighbors.len());
+    // Two-pointer merge over the sorted lists; gallop on the longer side
+    // when degrees are very asymmetric (popular-vertex case).
+    let mut j = 0usize;
+    let gallop = u_neighbors.len() >= 8 * v_neighbors.len().max(1);
+    for (i, &x) in v_neighbors.iter().enumerate() {
+        let alpha = if x == u {
+            inv_p
+        } else {
+            let is_common = if gallop {
+                // Exponential search from j in u_neighbors.
+                let (found, adv) = gallop_search(&u_neighbors[j..], x);
+                j += adv;
+                found
+            } else {
+                while j < u_neighbors.len() && u_neighbors[j] < x {
+                    j += 1;
+                }
+                j < u_neighbors.len() && u_neighbors[j] == x
+            };
+            if is_common {
+                1.0
+            } else {
+                inv_q
+            }
+        };
+        scratch.push(alpha * v_weights[i]);
+    }
+}
+
+/// Exponential (galloping) search for `x` in sorted `hay`; returns
+/// (found, index-to-advance-past) so the caller can resume the merge.
+#[inline]
+fn gallop_search(hay: &[VertexId], x: VertexId) -> (bool, usize) {
+    if hay.is_empty() || hay[hay.len() - 1] < x {
+        return (false, hay.len());
+    }
+    let mut hi = 1usize;
+    while hi < hay.len() && hay[hi] < x {
+        hi <<= 1;
+    }
+    let lo = hi >> 1;
+    // hay[hi] >= x (or hi is past the end), so include index hi itself.
+    let hi_excl = (hi + 1).min(hay.len());
+    match hay[lo..hi_excl].binary_search(&x) {
+        Ok(off) => (true, lo + off),
+        Err(off) => (false, lo + off),
+    }
+}
+
+/// Sample the next walk step at `v` (2nd-order, exact). Returns the index
+/// into `v_neighbors`, or `None` when the distribution is degenerate
+/// (no neighbors / all-zero weights — a truncated walk).
+#[allow(clippy::too_many_arguments)]
+pub fn sample_second_order(
+    v_neighbors: &[VertexId],
+    v_weights: &[f32],
+    u: VertexId,
+    u_neighbors: &[VertexId],
+    p: f32,
+    q: f32,
+    scratch: &mut Vec<f32>,
+    rng: &mut Xoshiro256pp,
+) -> Option<usize> {
+    fill_second_order_weights(v_neighbors, v_weights, u, u_neighbors, p, q, scratch);
+    sample_linear(scratch, rng)
+}
+
+/// Normalized 2nd-order distribution (for tests and the brute-force oracle).
+pub fn second_order_distribution(
+    v_neighbors: &[VertexId],
+    v_weights: &[f32],
+    u: VertexId,
+    u_neighbors: &[VertexId],
+    p: f32,
+    q: f32,
+) -> Vec<f64> {
+    let mut scratch = Vec::new();
+    fill_second_order_weights(v_neighbors, v_weights, u, u_neighbors, p, q, &mut scratch);
+    let total: f64 = scratch.iter().map(|&w| w as f64).sum();
+    scratch.iter().map(|&w| w as f64 / total).collect()
+}
+
+/// FN-Approx bounds (paper Eq. 2–3, generalized to any p, q ordering).
+///
+/// For a popular vertex `v` (degree `d_v`, edge-weight range
+/// `[w_min, w_max]`) whose walk predecessor `u` is unpopular (degree
+/// `d_u`), every individual transition probability to a non-`u` neighbor
+/// lies in `[lower, upper]`:
+///
+/// - numerator ∈ [min(1, 1/q)·w_min, max(1, 1/q)·w_max]
+///   (α of a non-`u` neighbor is 1 if common with `u`, else 1/q);
+/// - denominator = w_u/p + Σ α_x·w_x over the other d_v−1 neighbors,
+///   where the number of common neighbors is between 0 and
+///   min(d_u, d_v−1).
+///
+/// When `upper − lower < ε`, the 2nd-order effect is negligible and
+/// FN-Approx samples by static edge weights instead (paper §3.4).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ApproxBounds {
+    pub lower: f64,
+    pub upper: f64,
+}
+
+impl ApproxBounds {
+    pub fn gap(&self) -> f64 {
+        self.upper - self.lower
+    }
+}
+
+pub fn approx_bounds(
+    d_v: u64,
+    d_u: u64,
+    w_min: f64,
+    w_max: f64,
+    p: f64,
+    q: f64,
+) -> ApproxBounds {
+    debug_assert!(d_v >= 1);
+    let inv_p = 1.0 / p;
+    let inv_q = 1.0 / q;
+    let others = (d_v - 1) as f64;
+    let cmax = d_u.min(d_v - 1) as f64;
+    let alpha_lo = inv_q.min(1.0);
+    let alpha_hi = inv_q.max(1.0);
+    // Denominator = w_u/p + Σ α_x w_x where, of the `others` terms, some
+    // count `c ∈ [0, cmax]` are common (α = 1) and the rest α = 1/q. The
+    // α mass `f(c) = c + (others − c)/q` is linear in `c`, so its extrema
+    // sit at c = 0 or c = cmax depending on the sign of (1 − 1/q). This is
+    // exactly the paper's Eq. 2–3 case analysis, generalized.
+    let f_at = |c: f64| c + (others - c) * inv_q;
+    let (f_min, f_max) = if inv_q <= 1.0 {
+        (f_at(0.0), f_at(cmax)) // common neighbors increase the sum
+    } else {
+        (f_at(cmax), f_at(0.0)) // common neighbors decrease the sum
+    };
+    let denom_max = w_max * (inv_p + f_max);
+    let denom_min = w_min * (inv_p + f_min);
+    ApproxBounds {
+        lower: (alpha_lo * w_min) / denom_max,
+        upper: (alpha_hi * w_max) / denom_min,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propkit::{forall, Gen};
+    use crate::util::rng::Xoshiro256pp;
+
+    #[test]
+    fn alpha_cases_match_figure2() {
+        // v's neighbors: u itself, a common neighbor c, a distant d.
+        // N(v) = [1(u), 2(c), 3(d)]; N(u) = [2(c), 9].
+        let probs = second_order_distribution(&[1, 2, 3], &[1.0; 3], 1, &[2, 9], 0.5, 2.0);
+        // α = [1/p=2, 1, 1/q=0.5]; normalized by 3.5.
+        assert!((probs[0] - 2.0 / 3.5).abs() < 1e-6);
+        assert!((probs[1] - 1.0 / 3.5).abs() < 1e-6);
+        assert!((probs[2] - 0.5 / 3.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn weights_scale_transitions() {
+        let probs =
+            second_order_distribution(&[1, 2], &[3.0, 1.0], 1, &[], 1.0, 1.0);
+        assert!((probs[0] - 0.75).abs() < 1e-6);
+        assert!((probs[1] - 0.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn p_q_one_reduces_to_static_weights() {
+        // With p=q=1 the 2nd-order walk degenerates to a 1st-order walk.
+        let probs = second_order_distribution(
+            &[1, 2, 3, 4],
+            &[1.0, 2.0, 3.0, 4.0],
+            2,
+            &[1, 3],
+            1.0,
+            1.0,
+        );
+        for (i, &w) in [1.0f64, 2.0, 3.0, 4.0].iter().enumerate() {
+            assert!((probs[i] - w / 10.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn gallop_matches_linear_merge() {
+        forall("gallop == linear common-neighbor", 100, |g: &mut Gen| {
+            let mut u_n: Vec<u32> = g.vec_of(200, |g| g.u64_in(0, 500) as u32);
+            u_n.sort_unstable();
+            u_n.dedup();
+            let mut v_n: Vec<u32> = g.vec_of(12, |g| g.u64_in(0, 500) as u32);
+            v_n.sort_unstable();
+            v_n.dedup();
+            if v_n.is_empty() {
+                return;
+            }
+            let w = vec![1.0f32; v_n.len()];
+            let u = 501; // not in either list
+            let mut fast = Vec::new();
+            fill_second_order_weights(&v_n, &w, u, &u_n, 2.0, 0.5, &mut fast);
+            // Oracle: naive membership.
+            let slow: Vec<f32> = v_n
+                .iter()
+                .map(|x| if u_n.contains(x) { 1.0 } else { 2.0 })
+                .collect();
+            assert_eq!(fast, slow);
+        });
+    }
+
+    #[test]
+    fn sampling_follows_distribution() {
+        let v_n = [1u32, 2, 3];
+        let w = [1.0f32; 3];
+        let u_n = [2u32];
+        let mut rng = Xoshiro256pp::seed_from_u64(7);
+        let mut scratch = Vec::new();
+        let mut counts = [0usize; 3];
+        let draws = 120_000;
+        for _ in 0..draws {
+            let i = sample_second_order(&v_n, &w, 1, &u_n, 0.5, 2.0, &mut scratch, &mut rng)
+                .unwrap();
+            counts[i] += 1;
+        }
+        let expect = second_order_distribution(&v_n, &w, 1, &u_n, 0.5, 2.0);
+        for i in 0..3 {
+            let f = counts[i] as f64 / draws as f64;
+            assert!((f - expect[i]).abs() < 0.01, "i={i}: {f} vs {}", expect[i]);
+        }
+    }
+
+    #[test]
+    fn degenerate_inputs_yield_none() {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let mut scratch = Vec::new();
+        assert!(
+            sample_second_order(&[], &[], 0, &[], 1.0, 1.0, &mut scratch, &mut rng).is_none()
+        );
+        assert!(sample_second_order(
+            &[1, 2],
+            &[0.0, 0.0],
+            0,
+            &[],
+            1.0,
+            1.0,
+            &mut scratch,
+            &mut rng
+        )
+        .is_none());
+    }
+
+    #[test]
+    fn bounds_contain_true_probabilities() {
+        forall("Eq2-3 bounds are sound", 150, |g: &mut Gen| {
+            // Build a random popular-v / unpopular-u configuration with
+            // unit weights and check every non-u transition probability
+            // falls inside the bounds.
+            let d_v = g.usize_in(3, 60);
+            let d_u = g.usize_in(1, 5);
+            // v's neighbors: ids 1..=d_v; u = 1 (a neighbor of v).
+            let v_n: Vec<u32> = (1..=d_v as u32).collect();
+            let w = vec![1.0f32; d_v];
+            // u's neighbors: random subset of v's plus some others.
+            let mut u_n: Vec<u32> = g.vec_of(d_u, |g| g.u64_in(2, 80) as u32);
+            u_n.sort_unstable();
+            u_n.dedup();
+            let (p, q) = (
+                *g.choose(&[0.25, 0.5, 1.0, 2.0, 4.0]),
+                *g.choose(&[0.25, 0.5, 1.0, 2.0, 4.0]),
+            );
+            let probs = second_order_distribution(&v_n, &w, 1, &u_n, p as f32, q as f32);
+            let b = approx_bounds(d_v as u64, u_n.len() as u64, 1.0, 1.0, p, q);
+            for (i, &x) in v_n.iter().enumerate() {
+                if x == 1 {
+                    continue; // bound applies to non-u neighbors
+                }
+                assert!(
+                    probs[i] >= b.lower - 1e-9 && probs[i] <= b.upper + 1e-9,
+                    "prob {} outside [{}, {}] (p={p} q={q} d_v={d_v} d_u={})",
+                    probs[i],
+                    b.lower,
+                    b.upper,
+                    u_n.len()
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn bounds_tighten_with_degree() {
+        // Paper: for large d_v the gap shrinks toward 0 (lower ≈ q/d_v,
+        // upper ≈ 1/d_v for the paper's 1/p ≤ 1 ≤ 1/q case).
+        let g100 = approx_bounds(100, 3, 1.0, 1.0, 2.0, 0.5).gap();
+        let g10k = approx_bounds(10_000, 3, 1.0, 1.0, 2.0, 0.5).gap();
+        assert!(g10k < g100 / 50.0, "gap did not shrink: {g100} -> {g10k}");
+    }
+
+    #[test]
+    fn first_order_case_has_zero_gap_with_unit_alpha() {
+        // p = q = 1 and unit weights: every probability is exactly 1/d_v
+        // apart from the u term; bounds collapse to ~[1/d_v, 1/d_v].
+        let b = approx_bounds(1000, 2, 1.0, 1.0, 1.0, 1.0);
+        assert!(b.gap() < 1e-5, "gap {}", b.gap());
+    }
+}

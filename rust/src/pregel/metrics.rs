@@ -1,0 +1,106 @@
+//! Per-superstep and per-run engine metrics.
+//!
+//! The units mirror the paper's measurements: message counts and wire bytes
+//! split local/remote (a local message never crosses the simulated network,
+//! the distinction FN-Local exploits), cache residency (FN-Cache), and the
+//! logical memory series plotted in Figures 4 and 14.
+
+/// Metrics for one superstep, recorded by the master after the barrier.
+#[derive(Clone, Debug, Default)]
+pub struct SuperstepMetrics {
+    pub superstep: u32,
+    /// Vertices whose `compute` ran this superstep.
+    pub active_vertices: u64,
+    /// Messages sent this superstep, destination on the same worker.
+    pub msgs_local: u64,
+    /// Messages sent this superstep, destination on another worker.
+    pub msgs_remote: u64,
+    pub bytes_local: u64,
+    pub bytes_remote: u64,
+    /// Bytes of messages *held* for delivery next superstep — the
+    /// "messages" component of Figure 4/14's memory plot.
+    pub msg_mem_bytes: u64,
+    /// Bytes resident in per-worker adjacency caches (FN-Cache).
+    pub cache_bytes: u64,
+    pub wall_secs: f64,
+}
+
+/// Whole-run metrics.
+#[derive(Clone, Debug, Default)]
+pub struct EngineMetrics {
+    pub supersteps: Vec<SuperstepMetrics>,
+    /// Graph topology + vertex values: the paper's "base usage".
+    pub base_bytes: u64,
+    pub wall_secs: f64,
+    /// Peak of (base + messages + cache) over the run.
+    pub peak_bytes: u64,
+}
+
+impl EngineMetrics {
+    pub fn total_messages(&self) -> u64 {
+        self.supersteps
+            .iter()
+            .map(|s| s.msgs_local + s.msgs_remote)
+            .sum()
+    }
+
+    pub fn total_remote_bytes(&self) -> u64 {
+        self.supersteps.iter().map(|s| s.bytes_remote).sum()
+    }
+
+    pub fn total_local_bytes(&self) -> u64 {
+        self.supersteps.iter().map(|s| s.bytes_local).sum()
+    }
+
+    /// Peak message memory across supersteps (Figure 4's plateau height).
+    pub fn peak_msg_bytes(&self) -> u64 {
+        self.supersteps
+            .iter()
+            .map(|s| s.msg_mem_bytes)
+            .max()
+            .unwrap_or(0)
+    }
+
+    pub fn num_supersteps(&self) -> u32 {
+        self.supersteps.len() as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregation_sums() {
+        let m = EngineMetrics {
+            supersteps: vec![
+                SuperstepMetrics {
+                    superstep: 0,
+                    msgs_local: 2,
+                    msgs_remote: 3,
+                    bytes_local: 10,
+                    bytes_remote: 20,
+                    msg_mem_bytes: 30,
+                    ..Default::default()
+                },
+                SuperstepMetrics {
+                    superstep: 1,
+                    msgs_local: 1,
+                    msgs_remote: 1,
+                    bytes_local: 5,
+                    bytes_remote: 6,
+                    msg_mem_bytes: 11,
+                    ..Default::default()
+                },
+            ],
+            base_bytes: 100,
+            wall_secs: 0.0,
+            peak_bytes: 141,
+        };
+        assert_eq!(m.total_messages(), 7);
+        assert_eq!(m.total_remote_bytes(), 26);
+        assert_eq!(m.total_local_bytes(), 15);
+        assert_eq!(m.peak_msg_bytes(), 30);
+        assert_eq!(m.num_supersteps(), 2);
+    }
+}

@@ -1,0 +1,33 @@
+//! A GraphLite-like Pregel engine (Malewicz et al., 2010; Niu & Chen, 2015).
+//!
+//! The paper runs Fast-Node2Vec on GraphLite, a C/C++ Pregel: a master plus
+//! workers connected by a data-center network, executing vertex-centric
+//! `compute()` in bulk-synchronous supersteps with in-memory message
+//! passing. This module reproduces that machine *in process*: workers are
+//! OS threads, the "network" is per-worker inboxes, and the worker boundary
+//! is enforced by the API (a vertex may only read adjacency of vertices in
+//! its own partition — remote information must travel in messages), so the
+//! paper's FN-Local / FN-Cache / FN-Switch optimizations exercise the same
+//! code paths they would across real machines. Message volume is accounted
+//! in *wire bytes* per superstep, which is what the paper's Figures 4 and 14
+//! plot. See DESIGN.md §Substitutions.
+//!
+//! Extensions the paper made to GraphLite, reproduced here:
+//! - an API for a vertex to visit another **same-worker** vertex's edges
+//!   ([`Ctx::local_neighbors`], used by FN-Local);
+//! - an API to look up the worker that owns any vertex
+//!   ([`Ctx::worker_of`], used by FN-Cache);
+//! - a per-worker global cache for remote adjacency
+//!   ([`Ctx::cache_get`] / [`Ctx::cache_put`], used by FN-Cache).
+
+mod engine;
+mod metrics;
+
+pub use engine::{Ctx, Engine, EngineError, EngineOpts, RunResult, VertexProgram};
+pub use metrics::{EngineMetrics, SuperstepMetrics};
+
+/// Messages must report their simulated wire size; the engine charges it to
+/// the per-superstep accounting that reproduces the paper's Figures 4/14.
+pub trait Message: Send {
+    fn wire_bytes(&self) -> u64;
+}

@@ -1,0 +1,289 @@
+//! PJRT runtime: load the AOT-compiled SGNS train step and drive it from
+//! Rust with device-resident embedding tables.
+//!
+//! The artifact pipeline (see `python/compile/aot.py` and
+//! /opt/xla-example/README.md):
+//!
+//! ```text
+//! jax.jit(train_step).lower(...) → StableHLO → XlaComputation → HLO TEXT
+//!            (build time, python)                     artifacts/*.hlo.txt
+//! HloModuleProto::from_text_file → XlaComputation → client.compile
+//!            (run time, rust, this module)
+//! ```
+//!
+//! HLO *text* is the interchange format: jax ≥ 0.5 emits protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids.
+//!
+//! After each `execute_b` the returned `w_in` / `w_out` buffers replace the
+//! held ones, so the (V, D) tables never round-trip through the host during
+//! training — only the (B,)-sized batch indices and the scalar loss do.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// One AOT shape variant from `artifacts/manifest.txt`.
+#[derive(Clone, Debug)]
+pub struct SgnsVariant {
+    pub name: String,
+    pub vocab: usize,
+    pub dim: usize,
+    pub batch: usize,
+    pub negatives: usize,
+    pub file: PathBuf,
+}
+
+/// Parse `artifacts/manifest.txt` (`name V D B K file` rows).
+pub fn read_manifest(artifacts_dir: &Path) -> Result<Vec<SgnsVariant>> {
+    let path = artifacts_dir.join("manifest.txt");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("read {} (run `make artifacts`)", path.display()))?;
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let f: Vec<&str> = line.split_whitespace().collect();
+        if f.len() != 6 {
+            bail!("manifest row malformed: {line}");
+        }
+        out.push(SgnsVariant {
+            name: f[0].to_string(),
+            vocab: f[1].parse()?,
+            dim: f[2].parse()?,
+            batch: f[3].parse()?,
+            negatives: f[4].parse()?,
+            file: artifacts_dir.join(f[5]),
+        });
+    }
+    Ok(out)
+}
+
+/// Pick the smallest variant whose vocab covers `n` vertices.
+pub fn pick_variant(variants: &[SgnsVariant], n: usize) -> Result<&SgnsVariant> {
+    variants
+        .iter()
+        .filter(|v| v.vocab >= n)
+        .min_by_key(|v| v.vocab)
+        .ok_or_else(|| {
+            anyhow!(
+                "no AOT variant covers {n} vertices (max {:?})",
+                variants.iter().map(|v| v.vocab).max()
+            )
+        })
+}
+
+/// The compiled train step plus the device-resident fused state.
+///
+/// State layout (see `python/compile/model.py::train_step_fused`):
+/// row 0 = loss row (col 0 = mean batch loss), rows `1..V+1` = w_in,
+/// rows `V+1..2V+1` = w_out. A tuple root would force full-table host
+/// round-trips per step, so the computation is fused into one array.
+pub struct SgnsRuntime {
+    exe: xla::PjRtLoadedExecutable,
+    pub variant: SgnsVariant,
+    state: xla::PjRtBuffer,
+    /// Number of *real* vertices (≤ variant.vocab; the rest is padding).
+    pub num_vertices: usize,
+    pub steps_run: u64,
+}
+
+impl SgnsRuntime {
+    /// Load + compile the variant that covers `num_vertices`, initialize
+    /// tables with uniform(-0.5/D, 0.5/D) entries (word2vec convention)
+    /// from `seed`.
+    pub fn load(artifacts_dir: &Path, num_vertices: usize, seed: u64) -> Result<SgnsRuntime> {
+        let variants = read_manifest(artifacts_dir)?;
+        let variant = pick_variant(&variants, num_vertices)?.clone();
+        let client = xla::PjRtClient::cpu()?;
+        let proto = xla::HloModuleProto::from_text_file(
+            variant
+                .file
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 artifact path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+
+        let (v, d) = (variant.vocab, variant.dim);
+        let mut rng = crate::util::rng::Xoshiro256pp::seed_from_u64(seed ^ 0x5635);
+        let scale = 0.5 / d as f32;
+        // Row 0 = loss row (zeros); then w_in rows, then w_out rows.
+        // Padding rows (vertex id ≥ num_vertices) stay zero; the train
+        // step never gathers or scatters them.
+        let mut host = vec![0f32; (2 * v + 1) * d];
+        for table in 0..2 {
+            for row in 0..num_vertices {
+                let base = (1 + table * v + row) * d;
+                for x in &mut host[base..base + d] {
+                    *x = (rng.next_f64() as f32 * 2.0 - 1.0) * scale;
+                }
+            }
+        }
+        let state = client.buffer_from_host_buffer(&host, &[2 * v + 1, d], None)?;
+        Ok(SgnsRuntime {
+            exe,
+            variant,
+            state,
+            num_vertices,
+            steps_run: 0,
+        })
+    }
+
+    /// One SGD step. Slices must match the variant's (B, K); indices must
+    /// be `< num_vertices`. Returns the mean batch loss (a 4-byte partial
+    /// host read — the tables never leave the device).
+    pub fn step(
+        &mut self,
+        centers: &[i32],
+        positives: &[i32],
+        negatives: &[i32],
+        lr: f32,
+    ) -> Result<f32> {
+        self.step_quiet(centers, positives, negatives, lr)?;
+        self.last_loss()
+    }
+
+    /// [`SgnsRuntime::step`] without the loss read (hot loop).
+    pub fn step_quiet(
+        &mut self,
+        centers: &[i32],
+        positives: &[i32],
+        negatives: &[i32],
+        lr: f32,
+    ) -> Result<()> {
+        let b = self.variant.batch;
+        let k = self.variant.negatives;
+        if centers.len() != b || positives.len() != b || negatives.len() != b * k {
+            bail!(
+                "batch shape mismatch: got ({}, {}, {}), variant needs B={b}, K={k}",
+                centers.len(),
+                positives.len(),
+                negatives.len()
+            );
+        }
+        debug_assert!(centers
+            .iter()
+            .chain(positives)
+            .chain(negatives)
+            .all(|&i| (i as usize) < self.num_vertices));
+        let client = self.exe.client().clone();
+        let c = client.buffer_from_host_buffer(centers, &[b], None)?;
+        let p = client.buffer_from_host_buffer(positives, &[b], None)?;
+        let n = client.buffer_from_host_buffer(negatives, &[b, k], None)?;
+        let lr_b = client.buffer_from_host_buffer(&[lr], &[], None)?;
+        let mut outs = self.exe.execute_b(&[&self.state, &c, &p, &n, &lr_b])?;
+        let mut row = outs.pop().ok_or_else(|| anyhow!("no execution outputs"))?;
+        if row.len() != 1 {
+            bail!("expected 1 fused output buffer, got {}", row.len());
+        }
+        self.state = row.pop().unwrap();
+        self.steps_run += 1;
+        Ok(())
+    }
+
+    /// Mean loss of the most recent step — state[0, 0].
+    ///
+    /// The CPU PJRT plugin does not implement `CopyRawToHost`, so this
+    /// downloads the state literal (≈16 MB for the `base` variant). Call
+    /// it every N steps for the loss curve, not per step; the training hot
+    /// loop is [`SgnsRuntime::step_quiet`].
+    pub fn last_loss(&self) -> Result<f32> {
+        let mut cell = [0f32; 1];
+        if self
+            .state
+            .copy_raw_to_host_sync(&mut cell, 0)
+            .is_ok()
+        {
+            return Ok(cell[0]);
+        }
+        let lit = self.state.to_literal_sync()?;
+        let flat: Vec<f32> = lit.to_vec()?;
+        Ok(flat[0])
+    }
+
+    /// Download the center-embedding table (first `num_vertices` rows).
+    pub fn embeddings(&self) -> Result<Vec<Vec<f32>>> {
+        let lit = self.state.to_literal_sync()?;
+        let flat: Vec<f32> = lit.to_vec()?;
+        let d = self.variant.dim;
+        // Skip the loss row.
+        Ok(flat[d..(1 + self.num_vertices) * d]
+            .chunks_exact(d)
+            .map(|r| r.to_vec())
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.txt").exists()
+    }
+
+    #[test]
+    fn manifest_parses_and_picks() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let vs = read_manifest(&artifacts_dir()).unwrap();
+        assert!(vs.len() >= 2);
+        let tiny = pick_variant(&vs, 100).unwrap();
+        assert_eq!(tiny.name, "tiny");
+        let base = pick_variant(&vs, 10_000).unwrap();
+        assert_eq!(base.name, "base");
+        assert!(pick_variant(&vs, 10_000_000).is_err());
+    }
+
+    #[test]
+    fn runtime_loads_and_loss_decreases() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut rt = SgnsRuntime::load(&artifacts_dir(), 500, 42).unwrap();
+        let b = rt.variant.batch;
+        let k = rt.variant.negatives;
+        // A fixed positive pair per slot + random negatives: loss must drop.
+        let centers: Vec<i32> = (0..b as i32).map(|i| i % 100).collect();
+        let positives: Vec<i32> = centers.iter().map(|c| (c + 100) % 500).collect();
+        let mut rng = crate::util::rng::Xoshiro256pp::seed_from_u64(7);
+        let mut first = None;
+        let mut last = 0f32;
+        for _ in 0..30 {
+            let negs: Vec<i32> = (0..b * k)
+                .map(|_| 200 + rng.next_bounded(300) as i32)
+                .collect();
+            last = rt.step(&centers, &positives, &negs, 0.25).unwrap();
+            first.get_or_insert(last);
+        }
+        let first = first.unwrap();
+        assert!(
+            last < first * 0.8,
+            "loss did not decrease: {first} -> {last}"
+        );
+        let emb = rt.embeddings().unwrap();
+        assert_eq!(emb.len(), 500);
+        assert_eq!(emb[0].len(), rt.variant.dim);
+        assert!(emb.iter().flatten().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn batch_shape_mismatch_rejected() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut rt = SgnsRuntime::load(&artifacts_dir(), 100, 1).unwrap();
+        assert!(rt.step(&[0, 1], &[1, 2], &[1, 2, 3], 0.1).is_err());
+    }
+}

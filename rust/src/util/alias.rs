@@ -1,0 +1,214 @@
+//! Alias-method sampling (Vose's O(n) construction, O(1) draw).
+//!
+//! Node2Vec's reference implementations precompute one alias table per
+//! (predecessor, vertex) pair — the paper's Eq. (1) memory blow-up. We use
+//! alias tables in two places:
+//!
+//! - `C-Node2Vec`: faithful reproduction of the precompute-everything
+//!   baseline (each table costs 8 bytes/entry, as the paper assumes);
+//! - first-step sampling by static edge weights, where the table is shared
+//!   across the whole run.
+//!
+//! For the on-demand FN-* algorithms a table would be built and thrown away
+//! per step, so they use [`sample_linear`] / cumulative scans instead.
+
+use super::rng::Xoshiro256pp;
+
+/// A Vose alias table over `n` outcomes.
+#[derive(Clone, Debug)]
+pub struct AliasTable {
+    /// Acceptance probability for each slot, in [0, 1].
+    prob: Vec<f32>,
+    /// Alias outcome used when the acceptance draw fails.
+    alias: Vec<u32>,
+}
+
+impl AliasTable {
+    /// Build from unnormalized non-negative weights.
+    ///
+    /// Returns `None` for an empty slice or an all-zero/non-finite weight
+    /// vector (there is no valid distribution to sample).
+    pub fn new(weights: &[f32]) -> Option<AliasTable> {
+        let n = weights.len();
+        if n == 0 {
+            return None;
+        }
+        let total: f64 = weights.iter().map(|&w| w as f64).sum();
+        if !(total.is_finite() && total > 0.0) {
+            return None;
+        }
+        // Scaled probabilities p_i * n.
+        let mut scaled: Vec<f64> = weights
+            .iter()
+            .map(|&w| (w as f64) * (n as f64) / total)
+            .collect();
+        let mut small: Vec<u32> = Vec::new();
+        let mut large: Vec<u32> = Vec::new();
+        for (i, &p) in scaled.iter().enumerate() {
+            if p < 1.0 {
+                small.push(i as u32);
+            } else {
+                large.push(i as u32);
+            }
+        }
+        let mut prob = vec![0f32; n];
+        let mut alias = vec![0u32; n];
+        while let (Some(&s), Some(&l)) = (small.last(), large.last()) {
+            small.pop();
+            prob[s as usize] = scaled[s as usize] as f32;
+            alias[s as usize] = l;
+            scaled[l as usize] -= 1.0 - scaled[s as usize];
+            if scaled[l as usize] < 1.0 {
+                large.pop();
+                small.push(l);
+            }
+        }
+        // Leftovers are numerically 1.0.
+        for &i in small.iter().chain(large.iter()) {
+            prob[i as usize] = 1.0;
+            alias[i as usize] = i;
+        }
+        Some(AliasTable { prob, alias })
+    }
+
+    /// Number of outcomes.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.prob.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.prob.is_empty()
+    }
+
+    /// Draw an outcome index.
+    #[inline]
+    pub fn sample(&self, rng: &mut Xoshiro256pp) -> usize {
+        let i = rng.next_index(self.prob.len());
+        if rng.next_f64() < self.prob[i] as f64 {
+            i
+        } else {
+            self.alias[i] as usize
+        }
+    }
+
+    /// Memory footprint of this table in bytes (prob + alias arrays). The
+    /// paper charges 8 bytes per probability; our f32+u32 layout matches.
+    #[inline]
+    pub fn memory_bytes(&self) -> u64 {
+        (self.prob.len() * (4 + 4)) as u64
+    }
+
+    /// The raw (prob, alias) arrays — used by the Spark simulation to
+    /// serialize tables into RDD rows the way the real implementation
+    /// stores "two arrays initialized for alias sampling" per edge.
+    #[inline]
+    pub fn parts(&self) -> (&[f32], &[u32]) {
+        (&self.prob, &self.alias)
+    }
+}
+
+/// Sample an index proportionally to `weights` with a single linear pass
+/// (inverse-CDF on the fly). O(n) per draw, zero allocation — the right
+/// trade for FN-*'s compute-once-then-discard distributions.
+pub fn sample_linear(weights: &[f32], rng: &mut Xoshiro256pp) -> Option<usize> {
+    let total: f64 = weights.iter().map(|&w| w as f64).sum();
+    if !(total.is_finite() && total > 0.0) {
+        return None;
+    }
+    let mut target = rng.next_f64() * total;
+    for (i, &w) in weights.iter().enumerate() {
+        target -= w as f64;
+        if target < 0.0 {
+            return Some(i);
+        }
+    }
+    // Floating-point slack: fall back to the last positive-weight outcome.
+    weights.iter().rposition(|&w| w > 0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn empirical(table: &AliasTable, draws: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let mut counts = vec![0usize; table.len()];
+        for _ in 0..draws {
+            counts[table.sample(&mut rng)] += 1;
+        }
+        counts.iter().map(|&c| c as f64 / draws as f64).collect()
+    }
+
+    #[test]
+    fn empty_and_zero_weights_rejected() {
+        assert!(AliasTable::new(&[]).is_none());
+        assert!(AliasTable::new(&[0.0, 0.0]).is_none());
+        assert!(AliasTable::new(&[f32::NAN, 1.0]).is_none());
+    }
+
+    #[test]
+    fn uniform_weights_sample_uniformly() {
+        let t = AliasTable::new(&[1.0; 8]).unwrap();
+        let freqs = empirical(&t, 80_000, 11);
+        for f in freqs {
+            assert!((f - 0.125).abs() < 0.01, "freq {f}");
+        }
+    }
+
+    #[test]
+    fn skewed_weights_match_distribution() {
+        let w = [1.0f32, 2.0, 3.0, 4.0];
+        let t = AliasTable::new(&w).unwrap();
+        let freqs = empirical(&t, 200_000, 13);
+        for (i, f) in freqs.iter().enumerate() {
+            let expect = w[i] as f64 / 10.0;
+            assert!((f - expect).abs() < 0.01, "i={i} f={f} expect={expect}");
+        }
+    }
+
+    #[test]
+    fn singleton_always_returns_zero() {
+        let t = AliasTable::new(&[3.5]).unwrap();
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        for _ in 0..100 {
+            assert_eq!(t.sample(&mut rng), 0);
+        }
+    }
+
+    #[test]
+    fn zero_weight_outcomes_never_sampled() {
+        let t = AliasTable::new(&[0.0, 1.0, 0.0, 1.0]).unwrap();
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        for _ in 0..10_000 {
+            let s = t.sample(&mut rng);
+            assert!(s == 1 || s == 3);
+        }
+    }
+
+    #[test]
+    fn linear_matches_alias_distribution() {
+        let w = [0.5f32, 0.0, 2.5, 1.0];
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let mut counts = [0usize; 4];
+        let draws = 200_000;
+        for _ in 0..draws {
+            counts[sample_linear(&w, &mut rng).unwrap()] += 1;
+        }
+        let total: f32 = w.iter().sum();
+        for i in 0..4 {
+            let f = counts[i] as f64 / draws as f64;
+            let expect = (w[i] / total) as f64;
+            assert!((f - expect).abs() < 0.01, "i={i} f={f} expect={expect}");
+        }
+    }
+
+    #[test]
+    fn linear_rejects_degenerate() {
+        let mut rng = Xoshiro256pp::seed_from_u64(4);
+        assert!(sample_linear(&[], &mut rng).is_none());
+        assert!(sample_linear(&[0.0, 0.0], &mut rng).is_none());
+    }
+}

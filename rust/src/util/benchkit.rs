@@ -1,0 +1,191 @@
+//! A small benchmarking harness (criterion is unavailable offline).
+//!
+//! Provides: warmup + measured iterations, mean / p50 / p95 / min, a
+//! `black_box` to defeat the optimizer, and aligned table printing so bench
+//! binaries emit the same rows/series the paper's figures report.
+//!
+//! Bench targets are plain binaries with `harness = false`; `cargo bench`
+//! runs them sequentially.
+
+use std::hint::black_box as std_black_box;
+use std::time::Instant;
+
+use super::stats::percentile;
+
+/// Re-export of `std::hint::black_box` under the criterion-familiar name.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// A single measurement series.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub samples_secs: Vec<f64>,
+}
+
+impl Measurement {
+    pub fn mean(&self) -> f64 {
+        self.samples_secs.iter().sum::<f64>() / self.samples_secs.len() as f64
+    }
+
+    pub fn p50(&self) -> f64 {
+        percentile(&self.samples_secs, 0.5)
+    }
+
+    pub fn p95(&self) -> f64 {
+        percentile(&self.samples_secs, 0.95)
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples_secs
+            .iter()
+            .copied()
+            .fold(f64::INFINITY, f64::min)
+    }
+}
+
+/// Harness configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub measure_iters: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup_iters: 1,
+            measure_iters: 5,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Honor `FASTN2V_BENCH_ITERS` / `FASTN2V_BENCH_WARMUP` for quick runs.
+    pub fn from_env() -> Self {
+        let mut c = BenchConfig::default();
+        if let Ok(v) = std::env::var("FASTN2V_BENCH_ITERS") {
+            if let Ok(n) = v.parse() {
+                c.measure_iters = n;
+            }
+        }
+        if let Ok(v) = std::env::var("FASTN2V_BENCH_WARMUP") {
+            if let Ok(n) = v.parse() {
+                c.warmup_iters = n;
+            }
+        }
+        c
+    }
+}
+
+/// Run `f` under the harness and collect a [`Measurement`].
+pub fn bench<F: FnMut()>(name: &str, cfg: BenchConfig, mut f: F) -> Measurement {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let mut samples = Vec::with_capacity(cfg.measure_iters.max(1));
+    for _ in 0..cfg.measure_iters.max(1) {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    Measurement {
+        name: name.to_string(),
+        samples_secs: samples,
+    }
+}
+
+/// Time a single invocation (for end-to-end drivers where one run is the
+/// measurement, as in the paper's figures).
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
+    let t = Instant::now();
+    let out = f();
+    (out, t.elapsed().as_secs_f64())
+}
+
+/// Aligned table printer. `rows` are (label, cells); `header` names cells.
+pub fn print_table(title: &str, header: &[&str], rows: &[(String, Vec<String>)]) {
+    println!("\n== {title} ==");
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    let label_w = rows
+        .iter()
+        .map(|(l, _)| l.len())
+        .chain(std::iter::once(4))
+        .max()
+        .unwrap_or(4);
+    for (_, cells) in rows {
+        for (i, c) in cells.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+    }
+    print!("{:label_w$}", "");
+    for (h, w) in header.iter().zip(&widths) {
+        print!("  {h:>w$}");
+    }
+    println!();
+    for (label, cells) in rows {
+        print!("{label:label_w$}");
+        for (c, w) in cells.iter().zip(&widths) {
+            print!("  {c:>w$}");
+        }
+        println!();
+    }
+}
+
+/// Print a measurement summary line (bench-binary output format).
+pub fn report(m: &Measurement) {
+    println!(
+        "bench {:40} mean {:>12} p50 {:>12} p95 {:>12} min {:>12} (n={})",
+        m.name,
+        super::fmt_secs(m.mean()),
+        super::fmt_secs(m.p50()),
+        super::fmt_secs(m.p95()),
+        super::fmt_secs(m.min()),
+        m.samples_secs.len()
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn harness_collects_requested_samples() {
+        let cfg = BenchConfig {
+            warmup_iters: 2,
+            measure_iters: 7,
+        };
+        let mut calls = 0usize;
+        let m = bench("noop", cfg, || {
+            calls += 1;
+            black_box(calls);
+        });
+        assert_eq!(calls, 9);
+        assert_eq!(m.samples_secs.len(), 7);
+        assert!(m.mean() >= 0.0);
+        assert!(m.min() <= m.p95());
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, dt) = time_once(|| 2 + 2);
+        assert_eq!(v, 4);
+        assert!(dt >= 0.0);
+    }
+
+    #[test]
+    fn stats_are_consistent() {
+        let m = Measurement {
+            name: "x".into(),
+            samples_secs: vec![1.0, 2.0, 3.0, 4.0, 100.0],
+        };
+        assert!((m.mean() - 22.0).abs() < 1e-12);
+        assert_eq!(m.p50(), 3.0);
+        assert_eq!(m.min(), 1.0);
+        assert!(m.p95() > m.p50());
+    }
+}

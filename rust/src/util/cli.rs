@@ -1,0 +1,145 @@
+//! Minimal command-line parsing (clap is unavailable offline).
+//!
+//! Supports the subset the `fastn2v` CLI needs: a positional subcommand,
+//! `--flag value`, `--flag=value`, and boolean `--flag`. Unknown flags are
+//! an error so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// Positional arguments in order (after the subcommand).
+    pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options.
+    pub options: BTreeMap<String, String>,
+    /// Bare `--key` switches.
+    pub switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw arguments. `known_switches` lists flags that take no value;
+    /// everything else starting with `--` consumes the next token (or its
+    /// `=`-suffix) as a value.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        raw: I,
+        known_switches: &[&str],
+    ) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if body.is_empty() {
+                    return Err("bare `--` is not supported".into());
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if known_switches.contains(&body) {
+                    args.switches.push(body.to_string());
+                } else {
+                    match it.next() {
+                        Some(v) if !v.starts_with("--") => {
+                            args.options.insert(body.to_string(), v);
+                        }
+                        Some(v) => {
+                            return Err(format!(
+                                "flag --{body} expects a value, got `{v}`"
+                            ))
+                        }
+                        None => {
+                            return Err(format!("flag --{body} expects a value"))
+                        }
+                    }
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn has_switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    /// Typed fetch with a default; errors mention the flag name.
+    pub fn get_parsed<T: std::str::FromStr>(
+        &self,
+        name: &str,
+        default: T,
+    ) -> Result<T, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| format!("could not parse --{name}={s}")),
+        }
+    }
+
+    /// Validate that every provided option is in the accepted set.
+    pub fn reject_unknown(&self, accepted: &[&str]) -> Result<(), String> {
+        for k in self.options.keys() {
+            if !accepted.contains(&k.as_str()) {
+                return Err(format!(
+                    "unknown flag --{k}; accepted: {}",
+                    accepted.join(", ")
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(tokens: &[&str]) -> Result<Args, String> {
+        Args::parse(tokens.iter().map(|s| s.to_string()), &["verbose", "dry-run"])
+    }
+
+    #[test]
+    fn mixed_forms() {
+        let a = parse(&["fig7", "--graph=orkut", "--workers", "12", "--verbose"]).unwrap();
+        assert_eq!(a.positional, vec!["fig7"]);
+        assert_eq!(a.get("graph"), Some("orkut"));
+        assert_eq!(a.get_parsed::<usize>("workers", 1).unwrap(), 12);
+        assert!(a.has_switch("verbose"));
+        assert!(!a.has_switch("dry-run"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["bench"]).unwrap();
+        assert_eq!(a.get_or("seed", "42"), "42");
+        assert_eq!(a.get_parsed::<u64>("seed", 42).unwrap(), 42);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(parse(&["run", "--graph"]).is_err());
+        assert!(parse(&["run", "--graph", "--workers", "2"]).is_err());
+    }
+
+    #[test]
+    fn parse_error_names_flag() {
+        let a = parse(&["run", "--workers", "many"]).unwrap();
+        let e = a.get_parsed::<usize>("workers", 1).unwrap_err();
+        assert!(e.contains("--workers"), "{e}");
+    }
+
+    #[test]
+    fn unknown_flags_rejected() {
+        let a = parse(&["run", "--grpah", "x"]).unwrap();
+        assert!(a.reject_unknown(&["graph"]).is_err());
+        let a = parse(&["run", "--graph", "x"]).unwrap();
+        assert!(a.reject_unknown(&["graph"]).is_ok());
+    }
+}

@@ -1,0 +1,138 @@
+//! Leveled stderr logging with wall-clock offsets.
+//!
+//! Kept deliberately tiny: a global level, `info!`/`debug!`-style macros,
+//! and elapsed-time prefixes so experiment logs read like the paper's
+//! superstep traces.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+use once_cell_lite::Lazy;
+
+/// Log verbosity, ordered.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+static START: Lazy<Instant> = Lazy::new(Instant::now);
+
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn level_enabled(level: Level) -> bool {
+    (level as u8) <= LEVEL.load(Ordering::Relaxed)
+}
+
+/// Initialize from env (`FASTN2V_LOG=debug`) — call once from main.
+pub fn init_from_env() {
+    if let Ok(v) = std::env::var("FASTN2V_LOG") {
+        let lvl = match v.to_ascii_lowercase().as_str() {
+            "error" => Level::Error,
+            "warn" => Level::Warn,
+            "info" => Level::Info,
+            "debug" => Level::Debug,
+            "trace" => Level::Trace,
+            _ => Level::Info,
+        };
+        set_level(lvl);
+    }
+    Lazy::force(&START);
+}
+
+#[doc(hidden)]
+pub fn log_at(level: Level, tag: &str, msg: std::fmt::Arguments<'_>) {
+    if level_enabled(level) {
+        let t = START.elapsed().as_secs_f64();
+        eprintln!("[{t:9.3}s {tag}] {msg}");
+    }
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log_at(
+            $crate::util::logging::Level::Info, "INFO", format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log_at(
+            $crate::util::logging::Level::Warn, "WARN", format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log_at(
+            $crate::util::logging::Level::Debug, "DBG ", format_args!($($arg)*))
+    };
+}
+
+/// A tiny `Lazy` (once_cell is in the vendor set, but keeping the util layer
+/// dependency-free makes it reusable in build scripts; this mirrors
+/// `once_cell::sync::Lazy` for the `fn() -> T` case).
+mod once_cell_lite {
+    use std::sync::Once;
+
+    pub struct Lazy<T> {
+        once: Once,
+        init: fn() -> T,
+        value: std::cell::UnsafeCell<Option<T>>,
+    }
+
+    // SAFETY: `value` is written exactly once under `Once`, then only read.
+    unsafe impl<T: Sync> Sync for Lazy<T> {}
+
+    impl<T> Lazy<T> {
+        pub const fn new(init: fn() -> T) -> Self {
+            Lazy {
+                once: Once::new(),
+                init,
+                value: std::cell::UnsafeCell::new(None),
+            }
+        }
+
+        pub fn force(this: &Self) -> &T {
+            this.once.call_once(|| {
+                let v = (this.init)();
+                // SAFETY: only executed once; no other reference exists yet.
+                unsafe { *this.value.get() = Some(v) };
+            });
+            // SAFETY: initialized above; never mutated again.
+            unsafe { (*this.value.get()).as_ref().unwrap() }
+        }
+    }
+
+    impl<T> std::ops::Deref for Lazy<T> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            Lazy::force(self)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering_gates_output() {
+        set_level(Level::Warn);
+        assert!(level_enabled(Level::Error));
+        assert!(level_enabled(Level::Warn));
+        assert!(!level_enabled(Level::Info));
+        set_level(Level::Trace);
+        assert!(level_enabled(Level::Debug));
+        set_level(Level::Info);
+    }
+}

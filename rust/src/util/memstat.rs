@@ -1,0 +1,154 @@
+//! Process and logical memory accounting.
+//!
+//! Two views of memory are used when reproducing the paper's Figures 4/14:
+//!
+//! 1. **Logical accounting** — the engine counts the bytes of every message,
+//!    cache entry, and vertex value it holds, exactly the way the paper's
+//!    breakdown separates "base usage" from "messages". This is what the
+//!    figures report, because it is deterministic and matches the paper's
+//!    units regardless of allocator slack.
+//! 2. **Process RSS** (`/proc/self/status` VmRSS) — read for sanity checks
+//!    and the §Perf logs.
+
+use std::fs;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Current process resident set size in bytes, or `None` off-Linux.
+pub fn process_rss_bytes() -> Option<u64> {
+    let status = fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmRSS:") {
+            let kb: u64 = rest
+                .trim()
+                .trim_end_matches("kB")
+                .trim()
+                .parse()
+                .ok()?;
+            return Some(kb * 1024);
+        }
+    }
+    None
+}
+
+/// Peak process RSS in bytes (VmHWM). Sandboxed kernels (e.g. gVisor) omit
+/// VmHWM from `/proc/self/status`; fall back to the current VmRSS so
+/// callers always get a usable lower bound.
+pub fn process_peak_rss_bytes() -> Option<u64> {
+    let status = fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest
+                .trim()
+                .trim_end_matches("kB")
+                .trim()
+                .parse()
+                .ok()?;
+            return Some(kb * 1024);
+        }
+    }
+    process_rss_bytes()
+}
+
+/// A thread-safe logical byte counter with a high-water mark.
+///
+/// Engines charge message payloads / caches here; experiment drivers read
+/// both the current value and the peak per superstep.
+#[derive(Debug, Default)]
+pub struct ByteGauge {
+    current: AtomicU64,
+    peak: AtomicU64,
+}
+
+impl ByteGauge {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&self, bytes: u64) {
+        let now = self.current.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        self.peak.fetch_max(now, Ordering::Relaxed);
+    }
+
+    pub fn sub(&self, bytes: u64) {
+        // Saturating: a release of more than held indicates an accounting
+        // bug; clamp rather than wrap so metrics stay sane, and debug-assert.
+        let mut cur = self.current.load(Ordering::Relaxed);
+        loop {
+            let next = cur.saturating_sub(bytes);
+            debug_assert!(cur >= bytes, "ByteGauge underflow: {cur} - {bytes}");
+            match self.current.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(observed) => cur = observed,
+            }
+        }
+    }
+
+    pub fn set(&self, bytes: u64) {
+        self.current.store(bytes, Ordering::Relaxed);
+        self.peak.fetch_max(bytes, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.current.load(Ordering::Relaxed)
+    }
+
+    pub fn peak(&self) -> u64 {
+        self.peak.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.current.store(0, Ordering::Relaxed);
+        self.peak.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rss_is_readable_on_linux() {
+        let rss = process_rss_bytes().expect("VmRSS readable");
+        assert!(rss > 1024 * 1024, "rss {rss} suspiciously small");
+        let peak = process_peak_rss_bytes().expect("peak RSS readable");
+        assert!(peak > 0);
+    }
+
+    #[test]
+    fn gauge_tracks_peak() {
+        let g = ByteGauge::new();
+        g.add(100);
+        g.add(200);
+        g.sub(250);
+        assert_eq!(g.get(), 50);
+        assert_eq!(g.peak(), 300);
+        g.reset();
+        assert_eq!(g.get(), 0);
+        assert_eq!(g.peak(), 0);
+    }
+
+    #[test]
+    fn gauge_concurrent_adds() {
+        use std::sync::Arc;
+        let g = Arc::new(ByteGauge::new());
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let g = g.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    g.add(3);
+                    g.sub(1);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(g.get(), 8 * 1000 * 2);
+    }
+}

@@ -1,0 +1,74 @@
+//! Shared infrastructure: PRNG streams, alias sampling, CLI parsing, a
+//! timing/bench harness, a property-testing kit, memory statistics, and
+//! small numeric helpers.
+//!
+//! The offline crate cache for this environment only contains the `xla`
+//! crate's dependency closure, so the usual ecosystem crates (rand,
+//! criterion, proptest, clap, serde) are replaced by the small, purpose-built
+//! modules here. Each module documents the subset of behaviour it provides.
+
+pub mod alias;
+pub mod benchkit;
+pub mod cli;
+pub mod logging;
+pub mod memstat;
+pub mod propkit;
+pub mod rng;
+pub mod stats;
+
+/// Format a byte count for human consumption (`12.3 GB`, `481 KB`, ...).
+pub fn fmt_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KB", "MB", "GB", "TB", "PB"];
+    let mut v = bytes as f64;
+    let mut unit = 0;
+    while v >= 1024.0 && unit + 1 < UNITS.len() {
+        v /= 1024.0;
+        unit += 1;
+    }
+    if unit == 0 {
+        format!("{} {}", bytes, UNITS[0])
+    } else {
+        format!("{:.1} {}", v, UNITS[unit])
+    }
+}
+
+/// Format a duration in seconds adaptively (`1.2 ms`, `3.4 s`, `2.1 h`).
+pub fn fmt_secs(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.1} us", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.1} ms", secs * 1e3)
+    } else if secs < 120.0 {
+        format!("{:.2} s", secs)
+    } else if secs < 7200.0 {
+        format!("{:.1} min", secs / 60.0)
+    } else {
+        format!("{:.2} h", secs / 3600.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting_covers_units() {
+        assert_eq!(fmt_bytes(0), "0 B");
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.0 KB");
+        assert_eq!(fmt_bytes(5 * 1024 * 1024), "5.0 MB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024 * 1024), "3.0 GB");
+    }
+
+    #[test]
+    fn secs_formatting_is_adaptive() {
+        assert_eq!(fmt_secs(0.5e-9), "0.5 ns");
+        assert_eq!(fmt_secs(2.5e-6), "2.5 us");
+        assert_eq!(fmt_secs(0.25), "250.0 ms");
+        assert_eq!(fmt_secs(42.0), "42.00 s");
+        assert_eq!(fmt_secs(600.0), "10.0 min");
+        assert_eq!(fmt_secs(9000.0), "2.50 h");
+    }
+}

@@ -1,0 +1,219 @@
+//! A minimal property-based testing kit (proptest is unavailable offline).
+//!
+//! Provides the proptest workflow we rely on for coordinator invariants:
+//! seeded random case generation, a `forall` runner that reports the failing
+//! case and its seed, and greedy input shrinking for the common generator
+//! shapes (sized vectors, integer ranges).
+//!
+//! Usage (`no_run`: doctest binaries can't resolve the xla rpath in this
+//! offline image; the same flow is exercised by the unit tests below):
+//! ```no_run
+//! use fastn2v::util::propkit::{forall, Gen};
+//! forall("sum is commutative", 200, |g: &mut Gen| {
+//!     let a = g.u64_in(0, 1000);
+//!     let b = g.u64_in(0, 1000);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use super::rng::Xoshiro256pp;
+
+/// Random-input generator handed to property bodies.
+pub struct Gen {
+    rng: Xoshiro256pp,
+    /// When `Some(k)`, size-bounded generators clamp to at most `k` — used
+    /// by the shrinking pass to retry the property on smaller inputs.
+    size_cap: Option<usize>,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen {
+            rng: Xoshiro256pp::seed_from_u64(seed),
+            size_cap: None,
+        }
+    }
+
+    #[inline]
+    pub fn rng(&mut self) -> &mut Xoshiro256pp {
+        &mut self.rng
+    }
+
+    /// Uniform `u64` in `[lo, hi]` (inclusive).
+    pub fn u64_in(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi);
+        lo + self.rng.next_bounded(hi - lo + 1)
+    }
+
+    /// Uniform `usize` in `[lo, hi]`, respecting the shrink size cap.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        let hi = match self.size_cap {
+            Some(cap) => hi.min(lo.max(cap)),
+            None => hi,
+        };
+        self.u64_in(lo as u64, hi as u64) as usize
+    }
+
+    /// Uniform `f64` in `[lo, hi)`.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// A vector of `len in [0, max_len]` filled by `f`.
+    pub fn vec_of<T>(&mut self, max_len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let len = self.usize_in(0, max_len);
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    /// Pick one element of a non-empty slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        assert!(!xs.is_empty());
+        &xs[self.rng.next_index(xs.len())]
+    }
+}
+
+/// Outcome of a single property case, captured via unwind.
+fn run_case<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(
+    f: &F,
+    seed: u64,
+    size_cap: Option<usize>,
+) -> Result<(), String> {
+    let result = std::panic::catch_unwind(|| {
+        let mut g = Gen::new(seed);
+        g.size_cap = size_cap;
+        f(&mut g);
+    });
+    match result {
+        Ok(()) => Ok(()),
+        Err(payload) => {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            Err(msg)
+        }
+    }
+}
+
+/// Run `cases` random cases of property `f`. On failure, attempt a greedy
+/// size-shrink (retry the same seed with smaller generator size caps) and
+/// panic with the seed + smallest failing cap for reproduction.
+pub fn forall<F>(name: &str, cases: u64, f: F)
+where
+    F: Fn(&mut Gen) + std::panic::RefUnwindSafe,
+{
+    forall_seeded(name, BASE_SEED ^ hash_name(name), cases, f)
+}
+
+const BASE_SEED: u64 = 0xF457_0000_0000_0001;
+
+fn hash_name(name: &str) -> u64 {
+    // FNV-1a.
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// [`forall`] with an explicit base seed (tests can pin it for stability).
+pub fn forall_seeded<F>(name: &str, base_seed: u64, cases: u64, f: F)
+where
+    F: Fn(&mut Gen) + std::panic::RefUnwindSafe,
+{
+    // Allow a global multiplier for soak runs: FASTN2V_PROP_CASES=10x.
+    let cases = match std::env::var("FASTN2V_PROP_CASES") {
+        Ok(v) => match v.strip_suffix('x').and_then(|m| m.parse::<u64>().ok()) {
+            Some(mult) => cases * mult,
+            None => v.parse().unwrap_or(cases),
+        },
+        Err(_) => cases,
+    };
+    // Suppress the default panic backtrace spam inside the search loop.
+    let prev_hook = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {}));
+    let mut failure: Option<(u64, String)> = None;
+    for i in 0..cases {
+        let seed = base_seed.wrapping_add(i).wrapping_mul(0x9E3779B97F4A7C15);
+        if let Err(msg) = run_case(&f, seed, None) {
+            failure = Some((seed, msg));
+            break;
+        }
+    }
+    let shrunk = failure.as_ref().map(|(seed, _)| {
+        // Greedy size shrink: find the smallest cap that still fails.
+        let mut best: Option<(usize, String)> = None;
+        for cap in [0usize, 1, 2, 4, 8, 16, 32, 64] {
+            if let Err(msg) = run_case(&f, *seed, Some(cap)) {
+                best = Some((cap, msg));
+                break;
+            }
+        }
+        best
+    });
+    std::panic::set_hook(prev_hook);
+    if let Some((seed, msg)) = failure {
+        match shrunk.flatten() {
+            Some((cap, smsg)) => panic!(
+                "property `{name}` failed (seed={seed:#x}): {msg}\n  \
+                 shrunk: fails with size cap {cap}: {smsg}\n  \
+                 reproduce: forall_seeded(\"{name}\", {seed:#x}, 1, ...)"
+            ),
+            None => panic!(
+                "property `{name}` failed (seed={seed:#x}): {msg}\n  \
+                 reproduce: forall_seeded(\"{name}\", {seed:#x}, 1, ...)"
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall("add commutes", 100, |g| {
+            let a = g.u64_in(0, 1_000_000);
+            let b = g.u64_in(0, 1_000_000);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            forall("always fails", 5, |g| {
+                let v = g.vec_of(100, |g| g.u64_in(0, 9));
+                assert!(v.len() > 1000, "len only {}", v.len());
+            });
+        });
+        let msg = match r {
+            Err(p) => p
+                .downcast_ref::<String>()
+                .cloned()
+                .unwrap_or_default(),
+            Ok(()) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("seed="), "{msg}");
+        assert!(msg.contains("shrunk"), "{msg}");
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        forall("bounds", 200, |g| {
+            let x = g.u64_in(5, 10);
+            assert!((5..=10).contains(&x));
+            let f = g.f64_in(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+            let v = g.vec_of(17, |g| g.bool());
+            assert!(v.len() <= 17);
+        });
+    }
+}

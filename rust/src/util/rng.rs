@@ -1,0 +1,206 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! Two generators are provided:
+//!
+//! - [`SplitMix64`]: a tiny, fast generator used for seeding and for
+//!   derivation of independent streams (its output is equidistributed and
+//!   passes BigCrush when used as a stream).
+//! - [`Xoshiro256pp`]: the workhorse generator for sampling during walks,
+//!   seeded from `SplitMix64` as its authors recommend.
+//!
+//! Determinism contract: every run of an engine is keyed by a single `u64`
+//! seed. Per-vertex/per-superstep streams are derived with
+//! [`stream`] so that results do **not** depend on worker count or thread
+//! schedule — a property the test suite checks.
+
+/// SplitMix64 (Steele, Lea, Flood; JDK 8 `SplittableRandom`).
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        SplitMix64 { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// Xoshiro256++ (Blackman & Vigna, 2018). 2^256-1 period, jumpable.
+#[derive(Clone, Debug)]
+pub struct Xoshiro256pp {
+    s: [u64; 4],
+}
+
+impl Xoshiro256pp {
+    /// Seed via SplitMix64 as recommended by the xoshiro authors (avoids
+    /// the all-zero state and decorrelates similar seeds).
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Xoshiro256pp {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+        }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform `f64` in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform `u64` in `[0, bound)` via Lemire's multiply-shift with
+    /// rejection (unbiased).
+    #[inline]
+    pub fn next_bounded(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128) * (bound as u128);
+            let lo = m as u64;
+            if lo >= bound || lo >= (bound.wrapping_neg() % bound) {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Uniform index into a slice of length `len` (`len > 0`).
+    #[inline]
+    pub fn next_index(&mut self, len: usize) -> usize {
+        self.next_bounded(len as u64) as usize
+    }
+
+    /// Bernoulli draw with probability `p`.
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_index(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// Derive an independent RNG stream from `(seed, a, b, c)`.
+///
+/// Used as `stream(run_seed, vertex_id, superstep, salt)` so that the draw a
+/// vertex makes at a superstep is a pure function of the run seed — not of
+/// worker assignment or timing.
+#[inline]
+pub fn stream(seed: u64, a: u64, b: u64, c: u64) -> Xoshiro256pp {
+    // Mix the coordinates through distinct odd constants, then let the
+    // SplitMix64 finalizer inside seed_from_u64 scramble the rest.
+    let mixed = seed
+        ^ a.wrapping_mul(0x9E3779B97F4A7C15)
+        ^ b.wrapping_mul(0xC2B2AE3D27D4EB4F)
+        ^ c.wrapping_mul(0x165667B19E3779F9);
+    Xoshiro256pp::seed_from_u64(mixed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_reference_vector() {
+        // Reference values for seed=1234567 from the public-domain C impl.
+        let mut sm = SplitMix64::new(1234567);
+        let a = sm.next_u64();
+        let b = sm.next_u64();
+        assert_eq!(a, 6457827717110365317);
+        assert_eq!(b, 3203168211198807973);
+    }
+
+    #[test]
+    fn xoshiro_is_deterministic_and_nontrivial() {
+        let mut r1 = Xoshiro256pp::seed_from_u64(42);
+        let mut r2 = Xoshiro256pp::seed_from_u64(42);
+        let xs: Vec<u64> = (0..16).map(|_| r1.next_u64()).collect();
+        let ys: Vec<u64> = (0..16).map(|_| r2.next_u64()).collect();
+        assert_eq!(xs, ys);
+        // Not all equal / not obviously broken.
+        assert!(xs.windows(2).any(|w| w[0] != w[1]));
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Xoshiro256pp::seed_from_u64(7);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn bounded_is_unbiased_enough() {
+        let mut r = Xoshiro256pp::seed_from_u64(99);
+        let mut counts = [0u32; 10];
+        let n = 100_000;
+        for _ in 0..n {
+            counts[r.next_bounded(10) as usize] += 1;
+        }
+        let expect = n as f64 / 10.0;
+        for &c in &counts {
+            assert!(
+                (c as f64 - expect).abs() < 5.0 * expect.sqrt(),
+                "bucket count {c} too far from {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn streams_differ_by_coordinate() {
+        let a: Vec<u64> = {
+            let mut s = stream(1, 2, 3, 4);
+            (0..4).map(|_| s.next_u64()).collect()
+        };
+        let b: Vec<u64> = {
+            let mut s = stream(1, 2, 3, 5);
+            (0..4).map(|_| s.next_u64()).collect()
+        };
+        let a2: Vec<u64> = {
+            let mut s = stream(1, 2, 3, 4);
+            (0..4).map(|_| s.next_u64()).collect()
+        };
+        assert_ne!(a, b);
+        assert_eq!(a, a2);
+    }
+
+    #[test]
+    fn shuffle_is_a_permutation() {
+        let mut r = Xoshiro256pp::seed_from_u64(5);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,224 @@
+//! Small statistics helpers: online moments, percentiles, log-scale and
+//! equi-width histograms (used for the paper's Figure 5 and Figure 12).
+
+/// Online mean/variance accumulator (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Moments {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Moments {
+    pub fn new() -> Self {
+        Moments {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.mean
+        }
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Percentile of a sample (linear interpolation, `q` in [0,1]).
+/// Sorts a copy; fine for bench-sized samples.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty(), "percentile of empty sample");
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (v[hi] - v[lo]) * (pos - lo as f64)
+    }
+}
+
+/// Equi-width histogram over `[0, bucket_width * nbuckets)`; the last bucket
+/// absorbs overflow. Paper Figure 5 buckets degrees this way ("the bucket
+/// 600 contains all vertices with degrees between 400 and 600").
+#[derive(Clone, Debug)]
+pub struct EquiWidthHist {
+    pub bucket_width: u64,
+    pub counts: Vec<u64>,
+    pub sums: Vec<f64>,
+}
+
+impl EquiWidthHist {
+    pub fn new(bucket_width: u64, nbuckets: usize) -> Self {
+        assert!(bucket_width > 0 && nbuckets > 0);
+        EquiWidthHist {
+            bucket_width,
+            counts: vec![0; nbuckets],
+            sums: vec![0.0; nbuckets],
+        }
+    }
+
+    #[inline]
+    fn bucket_of(&self, key: u64) -> usize {
+        (((key.saturating_sub(1)) / self.bucket_width) as usize).min(self.counts.len() - 1)
+    }
+
+    /// Record an observation `value` under `key` (e.g. key=degree,
+    /// value=visit count).
+    pub fn push(&mut self, key: u64, value: f64) {
+        let b = self.bucket_of(key);
+        self.counts[b] += 1;
+        self.sums[b] += value;
+    }
+
+    /// Mean value per bucket; `NaN` for empty buckets.
+    pub fn means(&self) -> Vec<f64> {
+        self.counts
+            .iter()
+            .zip(&self.sums)
+            .map(|(&c, &s)| if c == 0 { f64::NAN } else { s / c as f64 })
+            .collect()
+    }
+
+    /// Upper edge label of bucket `i` (paper-style: bucket "600" = (400,600]).
+    pub fn label(&self, i: usize) -> u64 {
+        (i as u64 + 1) * self.bucket_width
+    }
+}
+
+/// Log2-scale degree histogram (for Figure 12's log-log degree plots).
+#[derive(Clone, Debug, Default)]
+pub struct Log2Hist {
+    pub counts: Vec<u64>,
+}
+
+impl Log2Hist {
+    pub fn new() -> Self {
+        Log2Hist { counts: Vec::new() }
+    }
+
+    pub fn push(&mut self, key: u64) {
+        let b = if key == 0 {
+            0
+        } else {
+            64 - key.leading_zeros() as usize
+        };
+        if self.counts.len() <= b {
+            self.counts.resize(b + 1, 0);
+        }
+        self.counts[b] += 1;
+    }
+
+    /// (bucket upper bound, count) pairs for non-empty buckets.
+    pub fn rows(&self) -> Vec<(u64, u64)> {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(b, &c)| (if b == 0 { 0 } else { 1u64 << (b - 1) }, c))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn moments_match_closed_form() {
+        let mut m = Moments::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            m.push(x);
+        }
+        assert_eq!(m.count(), 8);
+        assert!((m.mean() - 5.0).abs() < 1e-12);
+        // Sample variance of that classic set is 32/7.
+        assert!((m.variance() - 32.0 / 7.0).abs() < 1e-12);
+        assert_eq!(m.min(), 2.0);
+        assert_eq!(m.max(), 9.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 4.0);
+        assert!((percentile(&xs, 0.5) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn equiwidth_buckets_follow_paper_convention() {
+        let mut h = EquiWidthHist::new(200, 5);
+        // Degree 400 goes to bucket "400" (=(200,400]), 401 to bucket "600".
+        h.push(400, 1.0);
+        h.push(401, 3.0);
+        h.push(1, 5.0);
+        assert_eq!(h.label(0), 200);
+        assert_eq!(h.counts[0], 1); // degree 1
+        assert_eq!(h.counts[1], 1); // degree 400
+        assert_eq!(h.counts[2], 1); // degree 401
+        let means = h.means();
+        assert_eq!(means[2], 3.0);
+        assert!(means[3].is_nan());
+    }
+
+    #[test]
+    fn equiwidth_overflow_clamps_to_last() {
+        let mut h = EquiWidthHist::new(10, 3);
+        h.push(1_000_000, 1.0);
+        assert_eq!(h.counts[2], 1);
+    }
+
+    #[test]
+    fn log2_hist_rows() {
+        let mut h = Log2Hist::new();
+        for k in [1u64, 1, 2, 3, 4, 7, 8, 1024] {
+            h.push(k);
+        }
+        let rows = h.rows();
+        // buckets: 1 -> [1], {2,3} -> [2], {4..7} -> [4], {8} -> [8], 1024 -> [1024]
+        assert_eq!(rows, vec![(1, 2), (2, 2), (4, 2), (8, 1), (1024, 1)]);
+    }
+}

@@ -1,0 +1,169 @@
+//! Cross-module integration tests: the full system composed the way the
+//! examples and figure drivers use it. (Unit tests live next to each
+//! module; these exercise whole pipelines.)
+
+use fastn2v::baselines::spark_sim::{trim_graph, SparkNode2Vec};
+use fastn2v::classify::ClassifyConfig;
+use fastn2v::embed::{Corpus, RustSgns, TrainConfig};
+use fastn2v::exp::common::{run_solution, RunOutcome, Scale, Solution};
+use fastn2v::exp::pipeline::{classify_fractions, embeddings_from_walks};
+use fastn2v::gen::{labeled_community_graph, skew_graph, GenConfig, LabeledConfig};
+use fastn2v::graph::partition::Partitioner;
+use fastn2v::node2vec::{reference::reference_walks, run_walks, FnConfig, Variant};
+use fastn2v::pregel::EngineOpts;
+
+/// The paper's central quality claim (Figure 6): embeddings from exact
+/// walks classify much better than embeddings from trim-30 walks.
+#[test]
+fn exact_walks_beat_trimmed_walks_downstream() {
+    let lg = labeled_community_graph(&LabeledConfig {
+        num_vertices: 1500,
+        num_communities: 8,
+        avg_degree: 80, // well above the 30-edge trim so trimming bites
+        p_in: 0.8,
+        seed: 21,
+    });
+    let n = lg.graph.num_vertices();
+    let cfg = FnConfig::new(0.5, 2.0, 5).with_walk_length(30);
+
+    let exact = run_walks(
+        &lg.graph,
+        Partitioner::hash(6),
+        &cfg.with_variant(Variant::Cache),
+        EngineOpts::default(),
+        1,
+    )
+    .unwrap()
+    .walks;
+    let (trimmed, _) = SparkNode2Vec::run(&lg.graph, &cfg, None, 6).unwrap();
+
+    let score = |walks: &fastn2v::node2vec::WalkSet| {
+        let corpus = Corpus::new(walks, n);
+        let mut model = RustSgns::new(n, 48, 3);
+        let tcfg = TrainConfig {
+            steps: 1500,
+            log_every: 0,
+            ..Default::default()
+        };
+        model.train(&corpus, &tcfg, 256, 5);
+        let emb = model.embeddings();
+        classify_fractions(&emb, &lg.labels, lg.num_labels, &[0.5], 9)[0].1
+    };
+    let exact_f1 = score(&exact);
+    let trimmed_f1 = score(&trimmed);
+    assert!(
+        exact_f1.micro > trimmed_f1.micro + 0.03,
+        "exact {:.3} should beat trimmed {:.3} (paper Fig. 6)",
+        exact_f1.micro,
+        trimmed_f1.micro
+    );
+}
+
+/// Trim really removes most arcs of a dense graph (quality-loss mechanism).
+#[test]
+fn trim_drops_most_arcs_on_dense_graphs() {
+    let g = skew_graph(&GenConfig::new(2000, 80, 3), 3.0);
+    let t = trim_graph(&g);
+    assert!(
+        (t.num_arcs() as f64) < 0.55 * g.num_arcs() as f64,
+        "trim kept {}/{} arcs",
+        t.num_arcs(),
+        g.num_arcs()
+    );
+}
+
+/// All seven Figure-7 solutions run at quick scale and the FN family is
+/// never slower than Spark (the paper's headline efficiency ordering).
+#[test]
+fn fig7_ordering_holds_at_quick_scale() {
+    let g = skew_graph(&GenConfig::new(4000, 40, 9), 3.0);
+    let secs = |sol| match run_solution(sol, &g, 0.5, 2.0, 10, 3, false) {
+        RunOutcome::Secs(s, _) => s,
+        RunOutcome::Oom(w) => panic!("unexpected OOM: {w}"),
+    };
+    let spark = secs(Solution::Spark);
+    let base = secs(Solution::Fn(Variant::Base));
+    assert!(
+        base < spark,
+        "FN-Base ({base:.3}s) should beat Spark ({spark:.3}s)"
+    );
+}
+
+/// FN-Multi + varying workers + cache pressure still reproduce the
+/// reference walks (system-level determinism).
+#[test]
+fn distributed_walks_reproducible_under_stress() {
+    let g = skew_graph(&GenConfig::new(900, 20, 31), 4.0);
+    let cfg = FnConfig::new(2.0, 0.5, 17)
+        .with_walk_length(15)
+        .with_popular_threshold(40)
+        .with_variant(Variant::Cache);
+    let expect = reference_walks(&g, &cfg);
+    for (workers, rounds, cache_cap) in [(3, 1, None), (8, 4, Some(2048)), (12, 2, Some(512))] {
+        let out = run_walks(
+            &g,
+            Partitioner::hash(workers),
+            &cfg,
+            EngineOpts {
+                cache_capacity: cache_cap,
+                ..Default::default()
+            },
+            rounds,
+        )
+        .unwrap();
+        assert_eq!(
+            out.walks, expect,
+            "diverged at workers={workers} rounds={rounds} cap={cache_cap:?}"
+        );
+    }
+}
+
+/// The embedding pipeline (PJRT if artifacts exist, oracle otherwise)
+/// plus classification beats chance on a labeled graph.
+#[test]
+fn pipeline_produces_useful_embeddings() {
+    let lg = labeled_community_graph(&LabeledConfig::tiny(77));
+    let walks = run_walks(
+        &lg.graph,
+        Partitioner::hash(4),
+        &FnConfig::new(1.0, 1.0, 5).with_walk_length(20),
+        EngineOpts::default(),
+        1,
+    )
+    .unwrap()
+    .walks;
+    let out = embeddings_from_walks(
+        &walks,
+        lg.graph.num_vertices(),
+        &TrainConfig {
+            steps: 500,
+            log_every: 0,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let f1 = classify_fractions(&out.embeddings, &lg.labels, lg.num_labels, &[0.6], 3)[0].1;
+    // 6 communities, multi-label: chance micro-F1 is far below 0.4.
+    assert!(f1.micro > 0.4, "micro-F1 {:.3} too low ({})", f1.micro, out.backend);
+}
+
+/// Classifier config edge cases at the integration level.
+#[test]
+fn classification_handles_small_and_skewed_inputs() {
+    let lg = labeled_community_graph(&LabeledConfig {
+        num_vertices: 120,
+        num_communities: 3,
+        avg_degree: 10,
+        p_in: 0.9,
+        seed: 5,
+    });
+    let emb: Vec<Vec<f32>> = (0..120)
+        .map(|v| lg.label_row(v as u32))
+        .collect(); // perfect features
+    let cfg = ClassifyConfig {
+        train_fraction: 0.7,
+        ..Default::default()
+    };
+    let f1 = fastn2v::classify::evaluate(&emb, &lg.labels, lg.num_labels, &cfg);
+    assert!(f1.micro > 0.9, "perfect features should classify: {f1:?}");
+}
