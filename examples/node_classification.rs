@@ -19,7 +19,7 @@ use fastn2v::gen::{labeled_community_graph, LabeledConfig};
 use fastn2v::node2vec::Variant;
 use fastn2v::util::benchkit::print_table;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> fastn2v::util::error::Result<()> {
     let quick = std::env::args().any(|a| a == "--quick");
     let scale = Scale::from_flag(quick);
     let seed = 42;

@@ -13,7 +13,7 @@ use fastn2v::graph::partition::Partitioner;
 use fastn2v::node2vec::{run_walks, FnConfig, Variant};
 use fastn2v::pregel::EngineOpts;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> fastn2v::util::error::Result<()> {
     // 1. A 600-vertex graph with 6 planted communities.
     let lg = labeled_community_graph(&LabeledConfig::tiny(42));
     let stats = lg.graph.stats();

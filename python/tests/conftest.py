@@ -1,0 +1,14 @@
+"""Make the `compile` package importable when pytest runs from the repo root.
+
+The seed tests import `compile.model` / `compile.kernels.*`, which live in
+`python/compile/`; without an installed package or a configured PYTHONPATH
+the whole suite failed at collection (part of the ROADMAP "seed tests
+failing" note — see EXPERIMENTS.md §Environment).
+"""
+
+import sys
+from pathlib import Path
+
+PYTHON_DIR = Path(__file__).resolve().parent.parent
+if str(PYTHON_DIR) not in sys.path:
+    sys.path.insert(0, str(PYTHON_DIR))

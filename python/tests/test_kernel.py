@@ -8,7 +8,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+# `hypothesis` is absent from some offline images (and nothing may be
+# pip-installed there), which used to abort collection of this whole
+# module — part of the ROADMAP "seed tests failing" note. The sweep test
+# is quarantined behind the import instead; the fixed-seed suites below
+# always run. See EXPERIMENTS.md §Environment.
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from compile.kernels.ref import sgns_grads_ref
 from compile.kernels.sgns import _pick_block, sgns_grads_pallas, vmem_bytes
@@ -45,15 +56,23 @@ def test_kernel_matches_ref_fixed(b, k, d):
     _check(b, k, d, seed=42)
 
 
-@settings(max_examples=25, deadline=None)
-@given(
-    b=st.integers(1, 96),
-    k=st.integers(1, 8),
-    d=st.integers(1, 96),
-    seed=st.integers(0, 2**31 - 1),
-)
-def test_kernel_matches_ref_hypothesis(b, k, d, seed):
-    _check(b, k, d, seed)
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        b=st.integers(1, 96),
+        k=st.integers(1, 8),
+        d=st.integers(1, 96),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_kernel_matches_ref_hypothesis(b, k, d, seed):
+        _check(b, k, d, seed)
+
+else:
+
+    @pytest.mark.skip(reason="hypothesis unavailable in this offline image")
+    def test_kernel_matches_ref_hypothesis():
+        pass
 
 
 def test_gradients_match_autodiff():

@@ -1,0 +1,146 @@
+"""Executable specification of the FN-Reject sampler (rust/src/node2vec/sampler.rs).
+
+The Rust rejection sampler cannot be exercised in environments without a
+Rust toolchain, so this mirror implements the identical algorithm —
+propose from a per-vertex static alias table, accept with probability
+alpha_pq(u, x) / alpha_max, bounded-rejection fallback to the exact scan —
+and chi-square-checks it against the closed-form second-order transition
+distribution across the same (p, q) grid the Rust tests use.
+
+Run: python -m pytest python/tests/test_reject_sampler.py
+"""
+
+import numpy as np
+import pytest
+
+MAX_PROPOSALS = 64  # keep in sync with sampler.rs::MAX_PROPOSALS
+
+
+def build_alias(weights):
+    """Vose alias table; mirrors rust/src/util/alias.rs::AliasTable."""
+    w = np.asarray(weights, dtype=np.float64)
+    n = len(w)
+    total = w.sum()
+    if n == 0 or not np.isfinite(total) or total <= 0.0:
+        return None
+    scaled = w * n / total
+    prob = np.zeros(n)
+    alias = np.zeros(n, dtype=np.int64)
+    small = [i for i in range(n) if scaled[i] < 1.0]
+    large = [i for i in range(n) if scaled[i] >= 1.0]
+    while small and large:
+        s, l = small.pop(), large[-1]
+        prob[s] = scaled[s]
+        alias[s] = l
+        scaled[l] -= 1.0 - scaled[s]
+        if scaled[l] < 1.0:
+            large.pop()
+            small.append(l)
+    for i in small + large:
+        prob[i] = 1.0
+        alias[i] = i
+    return prob, alias
+
+
+def alias_draw(table, rng):
+    prob, alias = table
+    i = rng.integers(len(prob))
+    return i if rng.random() < prob[i] else int(alias[i])
+
+
+def second_order_distribution(v_neighbors, v_weights, u, u_neighbors, p, q):
+    """Closed-form pi_vx ~ alpha_pq(u, x) * w_vx (Figure 2 of the paper)."""
+    u_set = set(u_neighbors)
+    alphas = np.array(
+        [
+            1.0 / p if x == u else (1.0 if x in u_set else 1.0 / q)
+            for x in v_neighbors
+        ]
+    )
+    un = alphas * np.asarray(v_weights, dtype=np.float64)
+    return un / un.sum()
+
+
+def reject_sample(table, v_neighbors, v_weights, u, u_neighbors_sorted, p, q, rng):
+    """One hop via rejection sampling with exact-scan fallback."""
+    alpha_max = max(1.0 / p, 1.0, 1.0 / q)
+    u_arr = np.asarray(u_neighbors_sorted)
+    for _ in range(MAX_PROPOSALS):
+        i = alias_draw(table, rng)
+        x = v_neighbors[i]
+        if x == u:
+            alpha = 1.0 / p
+        else:
+            j = np.searchsorted(u_arr, x)
+            alpha = 1.0 if j < len(u_arr) and u_arr[j] == x else 1.0 / q
+        if alpha >= alpha_max or rng.random() * alpha_max < alpha:
+            return i
+    # Exact fallback (inverse CDF over the full unnormalized distribution).
+    probs = second_order_distribution(v_neighbors, v_weights, u, u_neighbors_sorted, p, q)
+    return int(rng.choice(len(v_neighbors), p=probs))
+
+
+def chi_square_stat(counts, probs):
+    n = counts.sum()
+    e = probs * n
+    return float(((counts - e) ** 2 / e).sum())
+
+
+def chi_square_critical(df, z):
+    """Wilson-Hilferty approximation (mirrors util/stats.rs)."""
+    t = 2.0 / (9.0 * df)
+    return df * (1.0 - t + z * np.sqrt(t)) ** 3
+
+
+# The probe configuration from sampler.rs: v's neighborhood reaches all
+# three alpha cases (u itself, common neighbors, distant neighbors).
+V_NEIGHBORS = [1, 2, 3, 4, 5]
+V_WEIGHTS = [1.0, 2.0, 0.5, 1.5, 1.0]
+U = 1
+U_NEIGHBORS = [0, 2, 3, 6]  # sorted
+
+
+@pytest.mark.parametrize("p,q", [(0.25, 4.0), (1.0, 1.0), (4.0, 0.25)])
+def test_reject_matches_exact_distribution(p, q):
+    rng = np.random.default_rng(42)
+    table = build_alias(V_WEIGHTS)
+    expect = second_order_distribution(V_NEIGHBORS, V_WEIGHTS, U, U_NEIGHBORS, p, q)
+    draws = 200_000
+    counts = np.zeros(len(V_NEIGHBORS))
+    for _ in range(draws):
+        counts[reject_sample(table, V_NEIGHBORS, V_WEIGHTS, U, U_NEIGHBORS, p, q, rng)] += 1
+    stat = chi_square_stat(counts, expect)
+    crit = chi_square_critical(len(V_NEIGHBORS) - 1, 3.29)
+    assert stat < crit, f"chi2 {stat:.2f} >= {crit:.2f} at p={p} q={q}: {counts} vs {expect * draws}"
+
+
+def test_pathological_pq_uses_fallback_and_stays_correct():
+    # Every neighbor of v is u or common with u while 1/q is huge: the
+    # acceptance rate collapses and nearly every hop takes the fallback.
+    v_neighbors, v_weights = [1, 2, 3], [1.0, 3.0, 1.0]
+    u, u_neighbors = 1, [0, 2, 3]
+    p, q = 1.0, 1e-4
+    rng = np.random.default_rng(7)
+    table = build_alias(v_weights)
+    expect = second_order_distribution(v_neighbors, v_weights, u, u_neighbors, p, q)
+    draws = 30_000
+    counts = np.zeros(3)
+    for _ in range(draws):
+        counts[reject_sample(table, v_neighbors, v_weights, u, u_neighbors, p, q, rng)] += 1
+    stat = chi_square_stat(counts, expect)
+    assert stat < chi_square_critical(2, 3.29), f"chi2 {stat:.2f}: {counts} vs {expect * draws}"
+
+
+def test_alias_table_matches_weights():
+    rng = np.random.default_rng(3)
+    table = build_alias([1.0, 2.0, 3.0, 4.0])
+    counts = np.zeros(4)
+    for _ in range(100_000):
+        counts[alias_draw(table, rng)] += 1
+    freqs = counts / counts.sum()
+    np.testing.assert_allclose(freqs, [0.1, 0.2, 0.3, 0.4], atol=0.01)
+
+
+def test_wilson_hilferty_matches_tables():
+    assert abs(chi_square_critical(3, 3.09) - 16.27) < 0.8
+    assert abs(chi_square_critical(10, 3.09) - 29.59) < 1.0

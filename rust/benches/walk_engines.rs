@@ -1,14 +1,23 @@
 //! End-to-end walk-engine comparison (the paper's Figure 7/13 axis): all
-//! FN variants plus both baselines on a skewed graph, reported as wall
-//! time and steps/second.
+//! FN variants plus both baselines on a skewed R-MAT graph, reported as
+//! wall time and steps/second — and a linear-vs-rejection sampler
+//! head-to-head that records a machine-readable baseline in
+//! `BENCH_walks.json` for future PRs (see EXPERIMENTS.md §Perf).
 //!
 //! Run: `cargo bench --bench walk_engines`
-//! (FASTN2V_BENCH_FULL=1 for a larger graph.)
+//! (FASTN2V_BENCH_FULL=1 for a larger graph; FASTN2V_BENCH_OUT to move the
+//! JSON baseline, default `../BENCH_walks.json` next to EXPERIMENTS.md.)
 
-use fastn2v::exp::common::{run_solution, Solution};
+use fastn2v::exp::common::{popular_threshold, run_fn_with_cfg, run_solution, Solution};
 use fastn2v::gen::{skew_graph, GenConfig};
-use fastn2v::node2vec::Variant;
+use fastn2v::node2vec::{FnConfig, SamplerKind, Variant};
 use fastn2v::util::benchkit::print_table;
+
+struct Row {
+    name: String,
+    secs: Option<f64>,
+    msteps: Option<f64>,
+}
 
 fn main() {
     let full = std::env::var("FASTN2V_BENCH_FULL").is_ok();
@@ -17,6 +26,8 @@ fn main() {
     } else {
         (1 << 13, 40, 20u32)
     };
+    // R-MAT Skew-4: heavy-tailed degrees well past `popular_threshold`, the
+    // regime where per-hop cost at popular vertices dominates wall time.
     let g = skew_graph(&GenConfig::new(n, deg, 11), 4.0);
     let stats = g.stats();
     println!(
@@ -24,8 +35,11 @@ fn main() {
         stats.num_vertices, stats.num_edges, stats.max_degree
     );
     let total_steps = (stats.num_vertices * walk_len as u64) as f64;
+    // FN-Reject's proposal tables are built at graph load, not inside the
+    // timed region (they are shared state, not per-run work).
+    let _ = g.first_order_tables();
 
-    let mut rows = Vec::new();
+    let mut rows: Vec<Row> = Vec::new();
     for sol in [
         Solution::CNode2Vec,
         Solution::Spark,
@@ -34,16 +48,116 @@ fn main() {
         Solution::Fn(Variant::Switch),
         Solution::Fn(Variant::Cache),
         Solution::Fn(Variant::Approx),
+        Solution::Fn(Variant::Reject),
     ] {
         let out = run_solution(sol, &g, 0.5, 2.0, walk_len, 3, false);
-        let cells = match out.secs() {
-            Some(s) => vec![
-                fastn2v::util::fmt_secs(s),
-                format!("{:.2} M steps/s", total_steps / s / 1e6),
-            ],
-            None => vec![out.cell(), "-".into()],
-        };
-        rows.push((sol.name().to_string(), cells));
+        rows.push(Row {
+            name: sol.name().to_string(),
+            secs: out.secs(),
+            msteps: out.secs().map(|s| total_steps / s / 1e6),
+        });
     }
-    print_table("walk engines (skew-4 graph)", &["wall", "throughput"], &rows);
+
+    // Sampler head-to-head under identical (FN-Cache) message handling, so
+    // the only difference is the per-hop sampling strategy.
+    for kind in [SamplerKind::Linear, SamplerKind::Reject] {
+        let cfg = FnConfig::new(0.5, 2.0, 3)
+            .with_walk_length(walk_len)
+            .with_popular_threshold(popular_threshold(&g))
+            .with_variant(Variant::Cache)
+            .with_sampler(kind);
+        let out = run_fn_with_cfg(&g, &cfg, false);
+        rows.push(Row {
+            name: format!("FN-Cache/{}", kind.name()),
+            secs: out.secs(),
+            msteps: out.secs().map(|s| total_steps / s / 1e6),
+        });
+    }
+
+    let table: Vec<(String, Vec<String>)> = rows
+        .iter()
+        .map(|r| {
+            let cells = match r.secs {
+                Some(s) => vec![
+                    fastn2v::util::fmt_secs(s),
+                    format!("{:.2} M steps/s", r.msteps.unwrap()),
+                ],
+                None => vec!["x (OOM)".into(), "-".into()],
+            };
+            (r.name.clone(), cells)
+        })
+        .collect();
+    print_table("walk engines (R-MAT skew-4 graph)", &["wall", "throughput"], &table);
+
+    let secs_of = |name: &str| rows.iter().find(|r| r.name == name).and_then(|r| r.secs);
+    let speedup = |a: Option<f64>, b: Option<f64>| match (a, b) {
+        (Some(a), Some(b)) if b > 0.0 => Some(a / b),
+        _ => None,
+    };
+    let reject_vs_base = speedup(secs_of("FN-Base"), secs_of("FN-Reject"));
+    let reject_vs_cache = speedup(secs_of("FN-Cache/linear"), secs_of("FN-Cache/reject"));
+    if let Some(s) = reject_vs_base {
+        println!("\nFN-Reject speedup vs FN-Base: {s:.2}x");
+    }
+    if let Some(s) = reject_vs_cache {
+        println!("reject vs linear sampler (same messaging): {s:.2}x");
+    }
+
+    let out_path = std::env::var("FASTN2V_BENCH_OUT")
+        .unwrap_or_else(|_| "../BENCH_walks.json".to_string());
+    let json = render_json(&g, walk_len, full, &rows, reject_vs_base, reject_vs_cache);
+    match std::fs::write(&out_path, &json) {
+        Ok(()) => println!("baseline written to {out_path}"),
+        Err(e) => eprintln!("could not write {out_path}: {e}"),
+    }
+}
+
+/// Hand-rolled JSON (serde is unavailable offline); schema documented in
+/// EXPERIMENTS.md §Perf.
+fn render_json(
+    g: &fastn2v::graph::Graph,
+    walk_len: u32,
+    full: bool,
+    rows: &[Row],
+    reject_vs_base: Option<f64>,
+    reject_vs_cache: Option<f64>,
+) -> String {
+    let stats = g.stats();
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"walk_engines\",\n");
+    s.push_str("  \"status\": \"measured\",\n");
+    s.push_str(&format!("  \"full_scale\": {full},\n"));
+    s.push_str(&format!(
+        "  \"graph\": {{\"family\": \"rmat-skew-4\", \"vertices\": {}, \"edges\": {}, \"max_degree\": {}, \"walk_length\": {walk_len}}},\n",
+        stats.num_vertices, stats.num_edges, stats.max_degree
+    ));
+    s.push_str("  \"engines\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let secs = r
+            .secs
+            .map(|v| format!("{v:.6}"))
+            .unwrap_or_else(|| "null".into());
+        let msteps = r
+            .msteps
+            .map(|v| format!("{v:.4}"))
+            .unwrap_or_else(|| "null".into());
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"wall_secs\": {secs}, \"msteps_per_sec\": {msteps}}}{}\n",
+            r.name,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n");
+    let fmt_opt = |o: Option<f64>| o.map(|v| format!("{v:.3}")).unwrap_or_else(|| "null".into());
+    s.push_str(&format!(
+        "  \"speedup_reject_vs_base\": {},\n",
+        fmt_opt(reject_vs_base)
+    ));
+    s.push_str(&format!(
+        "  \"speedup_reject_vs_linear_same_messaging\": {}\n",
+        fmt_opt(reject_vs_cache)
+    ));
+    s.push_str("}\n");
+    s
 }

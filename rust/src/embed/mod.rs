@@ -13,9 +13,8 @@
 //! - negatives are drawn from the unigram(walk visit counts)^0.75 table;
 //! - the learning rate decays linearly.
 
-use anyhow::Result;
-
 use crate::node2vec::WalkSet;
+use crate::util::error::Result;
 use crate::runtime::SgnsRuntime;
 use crate::util::alias::AliasTable;
 use crate::util::rng::{stream, Xoshiro256pp};
@@ -416,6 +415,7 @@ mod tests {
         assert_eq!(nn[1].0, 2);
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn runtime_and_rust_oracle_agree_on_first_step() {
         let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");

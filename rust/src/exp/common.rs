@@ -233,25 +233,25 @@ pub fn run_solution(
             }
         }
         Solution::Fn(variant) => {
-            let t = std::time::Instant::now();
-            let opts = EngineOpts {
-                memory_budget: Some(Budgets::CLUSTER),
-                ..Default::default()
-            };
-            match run_walks(
-                graph,
-                Partitioner::hash(WORKERS),
-                &fn_cfg.with_variant(variant),
-                opts,
-                1,
-            ) {
-                Err(e) => RunOutcome::Oom(e.to_string()),
-                Ok(out) => RunOutcome::Secs(
-                    t.elapsed().as_secs_f64(),
-                    keep_walks.then_some(out.walks),
-                ),
-            }
+            run_fn_with_cfg(graph, &fn_cfg.with_variant(variant), keep_walks)
         }
+    }
+}
+
+/// Run an FN engine from an explicit [`FnConfig`] (the `walk` subcommand's
+/// entry point, where `--variant` and `--sampler` are both in play).
+pub fn run_fn_with_cfg(graph: &Graph, cfg: &FnConfig, keep_walks: bool) -> RunOutcome {
+    let t = std::time::Instant::now();
+    let opts = EngineOpts {
+        memory_budget: Some(Budgets::CLUSTER),
+        ..Default::default()
+    };
+    match run_walks(graph, Partitioner::hash(WORKERS), cfg, opts, 1) {
+        Err(e) => RunOutcome::Oom(e.to_string()),
+        Ok(out) => RunOutcome::Secs(
+            t.elapsed().as_secs_f64(),
+            keep_walks.then_some(out.walks),
+        ),
     }
 }
 
@@ -288,6 +288,7 @@ mod tests {
             Solution::Spark,
             Solution::Fn(Variant::Base),
             Solution::Fn(Variant::Approx),
+            Solution::Fn(Variant::Reject),
         ] {
             let out = run_solution(sol, &g.graph, 0.5, 2.0, 5, 3, true);
             match out {

@@ -21,7 +21,8 @@ COMMANDS:
     fig --id <table1|fig1|fig4|...|fig14|all>   regenerate a paper figure
     gen --graph <name> --out <path>             generate a graph (binary)
     stats --graph <name>                        Table-1 stats for one graph
-    walk --graph <name> --variant <base|local|switch|cache|approx>
+    walk --graph <name> --variant <base|local|switch|cache|approx|reject>
+                 [--sampler <linear|reject>]
     pipeline --graph blogcatalog                walks -> embeddings -> F1
     help
 
@@ -30,6 +31,9 @@ COMMON FLAGS:
     --seed <u64>       run seed (default 42)
     --p <f32> --q <f32>   Node2Vec parameters (default 0.5 / 2.0)
     --workers <n>      Pregel workers (default 12)
+    --sampler <s>      2nd-order hop sampling: `linear` (exact scan) or
+                       `reject` (O(1) alias-proposal rejection sampling);
+                       the `reject` variant implies `--sampler reject`
 
 GRAPH NAMES:
     blogcatalog, livejournal, orkut, friendster (scaled analogues),
@@ -99,27 +103,41 @@ fn cli_inner(raw: Vec<String>) -> Result<(), String> {
         }
         "walk" => {
             let name = args.get("graph").ok_or("walk needs --graph")?;
-            let variant = match args.get_or("variant", "base") {
+            let variant = match args.get_choice(
+                "variant",
+                "base",
+                &["base", "local", "switch", "cache", "approx", "reject"],
+            )? {
                 "base" => crate::node2vec::Variant::Base,
                 "local" => crate::node2vec::Variant::Local,
                 "switch" => crate::node2vec::Variant::Switch,
                 "cache" => crate::node2vec::Variant::Cache,
                 "approx" => crate::node2vec::Variant::Approx,
-                other => return Err(format!("unknown variant {other}")),
+                "reject" => crate::node2vec::Variant::Reject,
+                _ => unreachable!("get_choice validated"),
             };
+            let sampler = crate::node2vec::SamplerKind::parse(args.get_choice(
+                "sampler",
+                "linear",
+                &["linear", "reject"],
+            )?)
+            .expect("get_choice validated");
             let p: f32 = args.get_parsed("p", 0.5)?;
             let q: f32 = args.get_parsed("q", 2.0)?;
             let ng = common::build_graph(name, scale, seed);
-            let out = common::run_solution(
-                common::Solution::Fn(variant),
-                &ng.graph,
-                p,
-                q,
-                scale.walk_length(),
-                seed,
-                false,
+            let cfg = crate::node2vec::FnConfig::new(p, q, seed)
+                .with_walk_length(scale.walk_length())
+                .with_popular_threshold(common::popular_threshold(&ng.graph))
+                .with_variant(variant)
+                .with_sampler(sampler);
+            let out = common::run_fn_with_cfg(&ng.graph, &cfg, false);
+            println!(
+                "{} ({} sampler) on {}: {}",
+                variant.name(),
+                cfg.effective_sampler().name(),
+                ng.name,
+                out.cell()
             );
-            println!("{} on {}: {}", variant.name(), ng.name, out.cell());
             Ok(())
         }
         "pipeline" => {
@@ -258,6 +276,26 @@ mod cli_tests {
         assert_eq!(
             run(&["walk", "--graph", "skew-2", "--variant", "cache", "--quick"]),
             0
+        );
+    }
+
+    #[test]
+    fn walk_reject_sampler_runs() {
+        assert_eq!(
+            run(&["walk", "--graph", "skew-2", "--variant", "reject", "--quick"]),
+            0
+        );
+        assert_eq!(
+            run(&[
+                "walk", "--graph", "skew-2", "--variant", "local", "--sampler", "reject",
+                "--quick",
+            ]),
+            0
+        );
+        // Bad sampler value fails loudly.
+        assert_eq!(
+            run(&["walk", "--graph", "skew-2", "--sampler", "alias", "--quick"]),
+            2
         );
     }
 }

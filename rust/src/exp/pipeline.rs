@@ -1,8 +1,9 @@
 //! Walks → embeddings → node-classification pipeline (the full Node2Vec
 //! system; used by Figure 1, Figure 6 and the end-to-end example).
 
-use anyhow::Result;
 use std::path::PathBuf;
+
+use crate::util::error::Result;
 
 use crate::classify::{evaluate, ClassifyConfig, F1Scores};
 use crate::embed::{train, Corpus, LossPoint, RustSgns, TrainConfig};

@@ -84,6 +84,16 @@ impl GraphBuilder {
             .reserve(if self.undirected { 2 * n } else { n });
     }
 
+    /// [`GraphBuilder::build`], plus eagerly constructing the per-vertex
+    /// first-order alias tables (FN-Reject proposals) so walk engines pay
+    /// the O(Σd) build at graph load rather than inside the first timed
+    /// superstep.
+    pub fn build_with_sampler_tables(self) -> Graph {
+        let g = self.build();
+        let _ = g.first_order_tables();
+        g
+    }
+
     /// Build the CSR graph (consumes the builder).
     pub fn build(mut self) -> Graph {
         let n = self.num_vertices;

@@ -7,6 +7,16 @@
 //!
 //! Undirected graphs are stored with both edge directions materialized
 //! (as GraphLite does); `Graph::is_undirected` records the intent.
+//!
+//! The graph also owns the per-vertex **first-order alias tables** used by
+//! the FN-Reject sampler ([`FirstOrderTables`]): one Vose table per CSR row
+//! over the static edge weights, O(Σd) total memory, built once and shared
+//! (lazily, behind an `Arc<OnceLock>`) across engines, rounds and clones.
+
+use std::sync::{Arc, OnceLock};
+
+use crate::util::alias::AliasTable;
+use crate::util::rng::Xoshiro256pp;
 
 pub type VertexId = u32;
 
@@ -24,6 +34,115 @@ pub struct Graph {
     /// True iff every weight is exactly 1.0 (lets samplers skip weight
     /// lookups — the common case in the paper's graphs).
     unit_weights: bool,
+    /// Per-vertex first-order alias tables (FN-Reject proposals), built on
+    /// first use and shared by all clones of this graph.
+    sampler_tables: Arc<OnceLock<Arc<FirstOrderTables>>>,
+}
+
+/// Per-vertex alias tables over the static edge weights, flattened to the
+/// CSR layout: row `v` occupies `starts[v] .. starts[v+1]` of the `prob` /
+/// `alias` arrays, and alias entries are *local* neighbor offsets.
+///
+/// This is the O(Σd) structure that makes O(1)-per-hop rejection sampling
+/// possible (KnightKing-style; see EXPERIMENTS.md §Perf): proposing a
+/// neighbor ∝ static weight is one alias draw instead of an O(d) scan.
+/// Unit-weight graphs (the common case in the paper's evaluation) store no
+/// tables at all — the proposal is a single uniform index draw.
+#[derive(Debug)]
+pub enum FirstOrderTables {
+    /// Every edge weight is 1.0: proposals are uniform over the row.
+    Uniform,
+    Weighted {
+        /// Copy of the CSR row pointers (self-contained so samplers can
+        /// hold the tables without borrowing the graph).
+        starts: Vec<u64>,
+        /// Vose acceptance probabilities, parallel to the CSR `adj` array.
+        prob: Vec<f32>,
+        /// Vose alias outcomes as local row offsets.
+        alias: Vec<u32>,
+        /// Bitset over vertices whose row has no positive finite weight
+        /// (no valid distribution — sampling must return `None`).
+        degenerate: Vec<u64>,
+    },
+}
+
+impl FirstOrderTables {
+    fn build(graph: &Graph) -> FirstOrderTables {
+        if graph.has_unit_weights() {
+            return FirstOrderTables::Uniform;
+        }
+        let n = graph.num_vertices();
+        let arcs = graph.num_arcs();
+        let mut prob = vec![0f32; arcs];
+        let mut alias = vec![0u32; arcs];
+        let mut degenerate = vec![0u64; n.div_ceil(64)];
+        for v in 0..n {
+            let s = graph.offsets[v] as usize;
+            let e = graph.offsets[v + 1] as usize;
+            match AliasTable::new(&graph.weights[s..e]) {
+                Some(t) => {
+                    let (p, a) = t.parts();
+                    prob[s..e].copy_from_slice(p);
+                    alias[s..e].copy_from_slice(a);
+                }
+                None => degenerate[v / 64] |= 1u64 << (v % 64),
+            }
+        }
+        FirstOrderTables::Weighted {
+            starts: graph.offsets.clone(),
+            prob,
+            alias,
+            degenerate,
+        }
+    }
+
+    /// Propose a neighbor offset of `v` proportionally to static edge
+    /// weight in O(1). `degree` must be `v`'s degree and positive. Returns
+    /// `None` when `v`'s weight row is degenerate (all-zero weights).
+    #[inline]
+    pub fn propose(
+        &self,
+        v: VertexId,
+        degree: usize,
+        rng: &mut Xoshiro256pp,
+    ) -> Option<usize> {
+        debug_assert!(degree > 0);
+        match self {
+            FirstOrderTables::Uniform => Some(rng.next_index(degree)),
+            FirstOrderTables::Weighted {
+                starts,
+                prob,
+                alias,
+                degenerate,
+            } => {
+                let vi = v as usize;
+                if degenerate[vi / 64] & (1u64 << (vi % 64)) != 0 {
+                    return None;
+                }
+                let s = starts[vi] as usize;
+                let i = rng.next_index(degree);
+                if rng.next_f64() < prob[s + i] as f64 {
+                    Some(i)
+                } else {
+                    Some(alias[s + i] as usize)
+                }
+            }
+        }
+    }
+
+    /// Resident bytes of the tables (memory-accounting hook).
+    pub fn memory_bytes(&self) -> u64 {
+        match self {
+            FirstOrderTables::Uniform => 0,
+            FirstOrderTables::Weighted {
+                starts,
+                prob,
+                alias,
+                degenerate,
+            } => (starts.len() * 8 + prob.len() * 4 + alias.len() * 4 + degenerate.len() * 8)
+                as u64,
+        }
+    }
 }
 
 /// Summary statistics (the paper's Table 1 columns).
@@ -54,7 +173,18 @@ impl Graph {
             weights,
             undirected,
             unit_weights,
+            sampler_tables: Arc::new(OnceLock::new()),
         }
+    }
+
+    /// The per-vertex first-order alias tables (FN-Reject proposals),
+    /// building them on first call. Subsequent calls — including from
+    /// clones of this graph and from later FN-Multi rounds — return the
+    /// same shared tables ("built once at graph load").
+    pub fn first_order_tables(&self) -> Arc<FirstOrderTables> {
+        self.sampler_tables
+            .get_or_init(|| Arc::new(FirstOrderTables::build(self)))
+            .clone()
     }
 
     /// Number of vertices.
@@ -250,5 +380,49 @@ mod tests {
         let mut b = GraphBuilder::new_undirected(2);
         b.add_edge(0, 1, 2.5);
         assert!(!b.build().has_unit_weights());
+    }
+
+    #[test]
+    fn first_order_tables_uniform_for_unit_weights() {
+        let g = triangle_plus_tail();
+        let t = g.first_order_tables();
+        assert!(matches!(*t, super::FirstOrderTables::Uniform));
+        assert_eq!(t.memory_bytes(), 0);
+        // Shared across clones and repeat calls.
+        let t2 = g.clone().first_order_tables();
+        assert!(std::sync::Arc::ptr_eq(&t, &t2));
+    }
+
+    #[test]
+    fn first_order_tables_match_weight_distribution() {
+        use crate::util::rng::Xoshiro256pp;
+        let mut b = GraphBuilder::new_undirected(3);
+        b.add_edge(0, 1, 1.0);
+        b.add_edge(0, 2, 3.0);
+        let g = b.build();
+        let t = g.first_order_tables();
+        assert!(t.memory_bytes() > 0);
+        let mut rng = Xoshiro256pp::seed_from_u64(9);
+        let mut counts = [0usize; 2];
+        let draws = 80_000;
+        for _ in 0..draws {
+            counts[t.propose(0, g.degree(0), &mut rng).unwrap()] += 1;
+        }
+        // neighbors(0) = [1, 2] with weights [1.0, 3.0] -> 25% / 75%.
+        let f0 = counts[0] as f64 / draws as f64;
+        assert!((f0 - 0.25).abs() < 0.01, "freq {f0}");
+    }
+
+    #[test]
+    fn first_order_tables_flag_degenerate_rows() {
+        use crate::util::rng::Xoshiro256pp;
+        let mut b = GraphBuilder::new_directed(3);
+        b.add_edge(0, 1, 0.0); // all-zero weight row at 0
+        b.add_edge(1, 2, 2.0);
+        let g = b.build();
+        let t = g.first_order_tables();
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        assert_eq!(t.propose(0, g.degree(0), &mut rng), None);
+        assert_eq!(t.propose(1, g.degree(1), &mut rng), Some(0));
     }
 }

@@ -11,5 +11,5 @@ mod io;
 pub mod partition;
 
 pub use builder::GraphBuilder;
-pub use csr::{Graph, GraphStats, VertexId};
+pub use csr::{FirstOrderTables, Graph, GraphStats, VertexId};
 pub use io::{load_edge_list, read_binary, save_edge_list, write_binary};

@@ -13,6 +13,13 @@
 //! | FN-Switch | popular sender asks the receiver to ship *its* (small) adjacency back and computes on its behalf (costs an extra superstep per switched hop) |
 //! | FN-Cache  | popular senders' adjacency cached per worker; repeat sends become 12-byte markers |
 //! | FN-Approx | FN-Cache + Eq. 2–3 bounded approximation at popular vertices (samples by static weights when the bound gap < ε) |
+//! | FN-Reject | FN-Cache message handling + O(1)-per-hop rejection sampling from per-vertex static alias tables ([`sampler`]) |
+//!
+//! How a hop is *sampled* (given the predecessor's adjacency) is orthogonal
+//! to how the adjacency *travels*, so it is factored into a pluggable
+//! [`sampler::SecondOrderSampler`] layer selected by [`FnConfig::sampler`]:
+//! any message variant can run with either the exact linear scan or the
+//! statistically-equivalent rejection sampler.
 //!
 //! FN-Multi is an orthogonal driver-level technique: run the `n` walks in
 //! `k` rounds of `n/k` to cap message memory ([`run_walks`] with
@@ -20,6 +27,7 @@
 
 pub mod program;
 pub mod reference;
+pub mod sampler;
 pub mod transition;
 
 use crate::graph::partition::Partitioner;
@@ -27,6 +35,7 @@ use crate::graph::Graph;
 use crate::pregel::{Engine, EngineError, EngineMetrics, EngineOpts};
 
 pub use program::{FnMsg, FnProgram, WalkStats};
+pub use sampler::{SamplerStats, SecondOrderSampler};
 
 /// Which member of the family to run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -36,6 +45,9 @@ pub enum Variant {
     Switch,
     Cache,
     Approx,
+    /// FN-Cache message handling with the rejection sampler forced on
+    /// (statistically exact, not bit-identical to the reference walker).
+    Reject,
 }
 
 impl Variant {
@@ -46,16 +58,55 @@ impl Variant {
             Variant::Switch => "FN-Switch",
             Variant::Cache => "FN-Cache",
             Variant::Approx => "FN-Approx",
+            Variant::Reject => "FN-Reject",
         }
     }
 
-    pub const ALL: [Variant; 5] = [
+    /// The variant whose *message protocol* this variant runs. FN-Reject
+    /// changes only the sampling strategy; its NEIG/marker handling is
+    /// FN-Cache's.
+    pub fn message_variant(&self) -> Variant {
+        match self {
+            Variant::Reject => Variant::Cache,
+            v => *v,
+        }
+    }
+
+    pub const ALL: [Variant; 6] = [
         Variant::Base,
         Variant::Local,
         Variant::Switch,
         Variant::Cache,
         Variant::Approx,
+        Variant::Reject,
     ];
+}
+
+/// Which second-order sampling strategy a run uses (the `--sampler` knob).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum SamplerKind {
+    /// Exact scratch-fill + linear scan (bit-identical to the reference).
+    #[default]
+    Linear,
+    /// Alias-proposal rejection sampling, O(1) expected per hop.
+    Reject,
+}
+
+impl SamplerKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SamplerKind::Linear => "linear",
+            SamplerKind::Reject => "reject",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SamplerKind> {
+        match s {
+            "linear" => Some(SamplerKind::Linear),
+            "reject" => Some(SamplerKind::Reject),
+            _ => None,
+        }
+    }
 }
 
 /// Node2Vec walk configuration.
@@ -75,6 +126,9 @@ pub struct FnConfig {
     pub popular_threshold: u32,
     /// FN-Approx bound-gap threshold ε (paper suggests 1e-3).
     pub approx_eps: f64,
+    /// Second-order sampling strategy (`--sampler`). [`Variant::Reject`]
+    /// forces [`SamplerKind::Reject`] regardless of this field.
+    pub sampler: SamplerKind,
 }
 
 impl FnConfig {
@@ -88,12 +142,28 @@ impl FnConfig {
             variant: Variant::Base,
             popular_threshold: 128,
             approx_eps: 1e-3,
+            sampler: SamplerKind::Linear,
         }
     }
 
     pub fn with_variant(mut self, v: Variant) -> Self {
         self.variant = v;
         self
+    }
+
+    pub fn with_sampler(mut self, s: SamplerKind) -> Self {
+        self.sampler = s;
+        self
+    }
+
+    /// The sampling strategy this config actually runs:
+    /// [`Variant::Reject`] implies the rejection sampler.
+    pub fn effective_sampler(&self) -> SamplerKind {
+        if self.variant == Variant::Reject {
+            SamplerKind::Reject
+        } else {
+            self.sampler
+        }
     }
 
     pub fn with_walk_length(mut self, l: u32) -> Self {
@@ -131,6 +201,12 @@ pub fn run_walks(
     rounds: u32,
 ) -> Result<WalkOutput, EngineError> {
     assert!(rounds >= 1);
+    if cfg.effective_sampler() == SamplerKind::Reject {
+        // Build the proposal tables once up front so every round (and every
+        // engine clone) shares them instead of racing the lazy init inside
+        // the first superstep.
+        let _ = graph.first_order_tables();
+    }
     let n = graph.num_vertices();
     let mut walks: WalkSet = vec![Vec::new(); n];
     let mut merged = EngineMetrics::default();

@@ -34,7 +34,8 @@ use crate::pregel::{Ctx, Message, VertexProgram};
 use crate::util::alias::sample_linear;
 use crate::util::rng::stream;
 
-use super::transition::{approx_bounds, sample_second_order};
+use super::sampler::{make_sampler, SecondOrderSampler};
+use super::transition::approx_bounds;
 use super::{FnConfig, Variant};
 
 /// RNG stream salt for walk-step sampling (shared with the reference
@@ -129,6 +130,12 @@ pub struct WalkStats {
     pub switched_hops: u64,
     /// Walks that hit a dead end (directed graphs only).
     pub truncated_walks: u64,
+    /// Rejection-sampler alias proposals drawn (FN-Reject / `--sampler
+    /// reject` only; `exact_steps` still counts the hops themselves).
+    pub reject_proposals: u64,
+    /// Hops where the rejection sampler exhausted its proposal budget and
+    /// fell back to the exact linear scan.
+    pub reject_fallbacks: u64,
 }
 
 impl WalkStats {
@@ -142,6 +149,8 @@ impl WalkStats {
         self.cache_retries += other.cache_retries;
         self.switched_hops += other.switched_hops;
         self.truncated_walks += other.truncated_walks;
+        self.reject_proposals += other.reject_proposals;
+        self.reject_fallbacks += other.reject_fallbacks;
     }
 }
 
@@ -162,6 +171,10 @@ struct AtomicStats {
 /// (one FN-Multi round).
 pub struct FnProgram {
     cfg: FnConfig,
+    /// The variant whose *message protocol* runs (FN-Reject => FN-Cache).
+    msg_variant: Variant,
+    /// Strategy for drawing second-order hops (linear scan vs rejection).
+    sampler: Box<dyn SecondOrderSampler>,
     unit_weights: bool,
     /// FN-Multi: this run only starts walks for `vid % rounds == round`.
     round: u32,
@@ -174,6 +187,8 @@ impl FnProgram {
         assert!(rounds >= 1 && round < rounds);
         FnProgram {
             cfg,
+            msg_variant: cfg.variant.message_variant(),
+            sampler: make_sampler(graph, &cfg),
             unit_weights: graph.has_unit_weights(),
             round,
             rounds,
@@ -182,6 +197,7 @@ impl FnProgram {
     }
 
     pub fn stats(&self) -> WalkStats {
+        let sampler = self.sampler.stats();
         WalkStats {
             exact_steps: self.stats.exact_steps.load(Ordering::Relaxed),
             approx_steps: self.stats.approx_steps.load(Ordering::Relaxed),
@@ -192,6 +208,8 @@ impl FnProgram {
             cache_retries: self.stats.cache_retries.load(Ordering::Relaxed),
             switched_hops: self.stats.switched_hops.load(Ordering::Relaxed),
             truncated_walks: self.stats.truncated_walks.load(Ordering::Relaxed),
+            reject_proposals: sampler.proposals,
+            reject_fallbacks: sampler.fallbacks,
         }
     }
 
@@ -248,7 +266,7 @@ impl FnProgram {
         let dw = ctx.worker_of(dst); // destination worker
         let me = ctx.my_worker();
         let cur = ctx.current_vertex(); // this vertex = the predecessor
-        match self.cfg.variant {
+        match self.msg_variant {
             Variant::Base => {
                 let arc = Self::own_arc(value, ctx.neighbors());
                 ctx.send(dst, FnMsg::Neig { start, idx, from: cur, neigh: arc });
@@ -270,7 +288,7 @@ impl FnProgram {
                     ctx.send(dst, FnMsg::Neig { start, idx, from: cur, neigh: arc });
                 }
             }
-            Variant::Cache | Variant::Approx => {
+            Variant::Cache | Variant::Approx | Variant::Reject => {
                 if dw == me {
                     ctx.send(dst, FnMsg::Move { start, idx, from: cur });
                 } else if self.is_popular(ctx.degree_of_self()) {
@@ -343,13 +361,12 @@ impl FnProgram {
             }
         }
         if sampled.is_none() {
-            sampled = sample_second_order(
+            sampled = self.sampler.sample(
+                ctx.current_vertex(),
                 v_neighbors,
                 v_weights,
                 pred,
                 pred_neigh,
-                self.cfg.p,
-                self.cfg.q,
                 scratch,
                 &mut rng,
             );
@@ -412,7 +429,7 @@ impl VertexProgram for FnProgram {
                     }
                     FnMsg::Neig { start, idx, from, neigh } => {
                         // FN-Cache: cache popular remote adjacency on arrival.
-                        if matches!(self.cfg.variant, Variant::Cache | Variant::Approx)
+                        if matches!(self.msg_variant, Variant::Cache | Variant::Approx)
                             && self.is_popular(neigh.len())
                             && ctx.worker_of(from) != ctx.my_worker()
                             && ctx.cache_get(from).is_none()
@@ -476,13 +493,13 @@ impl VertexProgram for FnProgram {
                                     &unit[..neigh.len()]
                                 }
                             };
-                            sample_second_order(
+                            // We sample on `at`'s behalf: v = at, u = vid.
+                            self.sampler.sample(
+                                at,
                                 &neigh,
                                 w,
                                 vid,
                                 ctx.neighbors(),
-                                self.cfg.p,
-                                self.cfg.q,
                                 scratch,
                                 &mut rng,
                             )

@@ -1,0 +1,521 @@
+//! Pluggable second-order samplers: how a walk step at vertex `v` with
+//! predecessor `u` is drawn from `π_vx ∝ α_pq(u, x) · w_vx` (Figure 2).
+//!
+//! Two strategies implement [`SecondOrderSampler`]:
+//!
+//! - [`LinearSampler`] — the paper's on-demand computation: fill every
+//!   neighbor's unnormalized weight (O(d(v) + d(u)) merge over the sorted
+//!   adjacencies) and inverse-CDF scan it (O(d(v))). Exact and
+//!   bit-identical to [`super::reference`].
+//! - [`RejectSampler`] — KnightKing-style rejection sampling (see
+//!   PAPERS.md: *Distributed Graph Embedding with Information-Oriented
+//!   Random Walks*): propose a candidate `x` from `v`'s **static** alias
+//!   table ([`FirstOrderTables`], built once at graph load, O(Σd) memory),
+//!   then accept with probability `α_pq(u, x) / α_max` where
+//!   `α_max = max(1/p, 1, 1/q)`. Evaluating `α` for one candidate is a
+//!   single membership probe into the sorted `N(u)` (galloping binary
+//!   search), so the expected cost per hop is O(α_max / ᾱ) ≈ O(1) — no
+//!   per-step scratch fill, no O(d) scan. After [`MAX_PROPOSALS`]
+//!   consecutive rejections (pathological p/q make the acceptance rate
+//!   ~α_min/α_max) it falls back to the exact linear path, so the sampler
+//!   is always correct and never loops unboundedly.
+//!
+//! Determinism: samplers only draw from the RNG stream the caller derives
+//! from `(seed, walk, step)`, so walks are identical across worker counts
+//! and FN-Multi round splits — the same contract the linear path obeys.
+//! The two samplers consume the stream differently, so FN-Reject produces
+//! *statistically* identical walks (chi-square-tested against
+//! [`super::transition::second_order_distribution`]), not bit-identical
+//! ones.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::graph::{FirstOrderTables, Graph, VertexId};
+use crate::util::rng::Xoshiro256pp;
+
+use super::transition::sample_second_order;
+use super::{FnConfig, SamplerKind};
+
+/// Consecutive rejected proposals before falling back to the exact linear
+/// scan. With the paper's p, q ∈ [0.25, 4] the acceptance rate is ≥ 1/16,
+/// so 64 proposals leave a fallback probability below 2% even in the worst
+/// typical case; extreme p/q degrade gracefully to the exact path.
+pub const MAX_PROPOSALS: u32 = 64;
+
+/// Counters a sampler may expose (merged into [`super::WalkStats`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SamplerStats {
+    /// Alias-table proposals drawn (rejection sampler only).
+    pub proposals: u64,
+    /// Hops that exhausted [`MAX_PROPOSALS`] and used the exact fallback.
+    pub fallbacks: u64,
+}
+
+/// Strategy interface for drawing the next-step neighbor index at `v`.
+pub trait SecondOrderSampler: Send + Sync {
+    /// Sample an index into `v_neighbors` from the second-order transition
+    /// distribution at `v` given predecessor `u` (sorted adjacency
+    /// `u_neighbors`), or `None` when the distribution is degenerate.
+    ///
+    /// `scratch` is a reusable per-thread buffer for strategies that fill
+    /// per-neighbor weights; `rng` is the caller's `(seed, walk, step)`
+    /// stream.
+    #[allow(clippy::too_many_arguments)]
+    fn sample(
+        &self,
+        v: VertexId,
+        v_neighbors: &[VertexId],
+        v_weights: &[f32],
+        u: VertexId,
+        u_neighbors: &[VertexId],
+        scratch: &mut Vec<f32>,
+        rng: &mut Xoshiro256pp,
+    ) -> Option<usize>;
+
+    fn stats(&self) -> SamplerStats {
+        SamplerStats::default()
+    }
+}
+
+/// The paper's exact on-demand path, behind the strategy trait.
+pub struct LinearSampler {
+    p: f32,
+    q: f32,
+}
+
+impl LinearSampler {
+    pub fn new(p: f32, q: f32) -> LinearSampler {
+        LinearSampler { p, q }
+    }
+}
+
+impl SecondOrderSampler for LinearSampler {
+    #[inline]
+    fn sample(
+        &self,
+        _v: VertexId,
+        v_neighbors: &[VertexId],
+        v_weights: &[f32],
+        u: VertexId,
+        u_neighbors: &[VertexId],
+        scratch: &mut Vec<f32>,
+        rng: &mut Xoshiro256pp,
+    ) -> Option<usize> {
+        sample_second_order(
+            v_neighbors,
+            v_weights,
+            u,
+            u_neighbors,
+            self.p,
+            self.q,
+            scratch,
+            rng,
+        )
+    }
+}
+
+/// O(1)-expected-per-hop rejection sampler over static alias proposals.
+pub struct RejectSampler {
+    p: f32,
+    q: f32,
+    inv_p: f32,
+    inv_q: f32,
+    /// `max(1/p, 1, 1/q)` — a correct envelope for every `α_pq` value.
+    alpha_max: f64,
+    tables: Arc<FirstOrderTables>,
+    proposals: AtomicU64,
+    fallbacks: AtomicU64,
+}
+
+impl RejectSampler {
+    pub fn new(p: f32, q: f32, tables: Arc<FirstOrderTables>) -> RejectSampler {
+        assert!(p > 0.0 && q > 0.0, "p and q must be positive, got ({p}, {q})");
+        let inv_p = 1.0 / p;
+        let inv_q = 1.0 / q;
+        RejectSampler {
+            p,
+            q,
+            inv_p,
+            inv_q,
+            alpha_max: f64::from(inv_p).max(1.0).max(f64::from(inv_q)),
+            tables,
+            proposals: AtomicU64::new(0),
+            fallbacks: AtomicU64::new(0),
+        }
+    }
+}
+
+impl SecondOrderSampler for RejectSampler {
+    fn sample(
+        &self,
+        v: VertexId,
+        v_neighbors: &[VertexId],
+        v_weights: &[f32],
+        u: VertexId,
+        u_neighbors: &[VertexId],
+        scratch: &mut Vec<f32>,
+        rng: &mut Xoshiro256pp,
+    ) -> Option<usize> {
+        let d = v_neighbors.len();
+        if d == 0 {
+            return None;
+        }
+        let mut drawn = 0u64;
+        for _ in 0..MAX_PROPOSALS {
+            // Propose x ∝ w_vx (one alias draw); `None` means v's static
+            // distribution is degenerate — let the exact path decide.
+            let Some(i) = self.tables.propose(v, d, rng) else {
+                break;
+            };
+            drawn += 1;
+            let x = v_neighbors[i];
+            // α of the candidate: one probe instead of a full merge.
+            let alpha = if x == u {
+                self.inv_p
+            } else if contains_sorted(u_neighbors, x) {
+                1.0
+            } else {
+                self.inv_q
+            };
+            let alpha = f64::from(alpha);
+            // Accept with probability α/α_max (short-circuit when the
+            // envelope is tight so p = q = 1 costs no extra draw).
+            if alpha >= self.alpha_max || rng.next_f64() * self.alpha_max < alpha {
+                self.proposals.fetch_add(drawn, Ordering::Relaxed);
+                return Some(i);
+            }
+        }
+        self.proposals.fetch_add(drawn, Ordering::Relaxed);
+        self.fallbacks.fetch_add(1, Ordering::Relaxed);
+        sample_second_order(
+            v_neighbors,
+            v_weights,
+            u,
+            u_neighbors,
+            self.p,
+            self.q,
+            scratch,
+            rng,
+        )
+    }
+
+    fn stats(&self) -> SamplerStats {
+        SamplerStats {
+            proposals: self.proposals.load(Ordering::Relaxed),
+            fallbacks: self.fallbacks.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Membership probe into a sorted adjacency row. Small rows scan linearly
+/// (branch-predictable, no setup); large rows reuse the exponential
+/// (galloping) search from [`super::transition`] so probes into very
+/// high-degree rows touch O(log rank) cache lines instead of O(log d)
+/// spread across the whole row.
+#[inline]
+pub fn contains_sorted(hay: &[VertexId], x: VertexId) -> bool {
+    if hay.len() < 16 {
+        for &y in hay {
+            if y >= x {
+                return y == x;
+            }
+        }
+        return false;
+    }
+    super::transition::gallop_search(hay, x).0
+}
+
+/// Build the sampler the config asks for ([`FnConfig::effective_sampler`]).
+pub fn make_sampler(graph: &Graph, cfg: &FnConfig) -> Box<dyn SecondOrderSampler> {
+    match cfg.effective_sampler() {
+        SamplerKind::Linear => Box::new(LinearSampler::new(cfg.p, cfg.q)),
+        SamplerKind::Reject => Box::new(RejectSampler::new(
+            cfg.p,
+            cfg.q,
+            graph.first_order_tables(),
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+    use crate::node2vec::transition::second_order_distribution;
+    use crate::util::propkit::{forall, Gen};
+    use crate::util::rng::stream;
+    use crate::util::stats::{chi_square_critical, chi_square_stat};
+
+    #[test]
+    fn contains_sorted_matches_binary_search() {
+        forall("contains_sorted == binary_search", 200, |g: &mut Gen| {
+            let mut hay: Vec<u32> = g.vec_of(g.usize_in(0, 80), |g| g.u64_in(0, 200) as u32);
+            hay.sort_unstable();
+            hay.dedup();
+            let x = g.u64_in(0, 200) as u32;
+            assert_eq!(
+                contains_sorted(&hay, x),
+                hay.binary_search(&x).is_ok(),
+                "hay={hay:?} x={x}"
+            );
+        });
+    }
+
+    /// A small weighted graph with all three α cases reachable from (v, u):
+    /// u itself (return), common neighbors, and distant neighbors.
+    fn probe_graph() -> crate::graph::Graph {
+        let mut b = GraphBuilder::new_undirected(8);
+        // v = 0 with neighbors {1(u), 2, 3, 4, 5}; u = 1 with {0, 2, 3, 6}.
+        b.add_edge(0, 1, 1.0);
+        b.add_edge(0, 2, 2.0);
+        b.add_edge(0, 3, 0.5);
+        b.add_edge(0, 4, 1.5);
+        b.add_edge(0, 5, 1.0);
+        b.add_edge(1, 2, 1.0);
+        b.add_edge(1, 3, 1.0);
+        b.add_edge(1, 6, 1.0);
+        b.build()
+    }
+
+    /// The satellite acceptance test: rejection-sampled hops are
+    /// statistically indistinguishable from the exact second-order
+    /// distribution across the paper's (p, q) extremes.
+    #[test]
+    fn reject_chi_square_matches_exact_distribution() {
+        let g = probe_graph();
+        let (v, u) = (0u32, 1u32);
+        for (p, q) in [(0.25f32, 4.0f32), (1.0, 1.0), (4.0, 0.25)] {
+            let sampler = RejectSampler::new(p, q, g.first_order_tables());
+            let expect = second_order_distribution(
+                g.neighbors(v),
+                g.weights(v),
+                u,
+                g.neighbors(u),
+                p,
+                q,
+            );
+            let mut counts = vec![0u64; g.degree(v)];
+            let mut scratch = Vec::new();
+            let draws = 200_000u64;
+            for k in 0..draws {
+                let mut rng = stream(k, v as u64, u as u64, 0xC41);
+                let i = sampler
+                    .sample(
+                        v,
+                        g.neighbors(v),
+                        g.weights(v),
+                        u,
+                        g.neighbors(u),
+                        &mut scratch,
+                        &mut rng,
+                    )
+                    .unwrap();
+                counts[i] += 1;
+            }
+            let stat = chi_square_stat(&counts, &expect);
+            let crit = chi_square_critical(counts.len() - 1, 3.29); // p ≈ 1e-3
+            assert!(
+                stat < crit,
+                "chi-square {stat:.2} >= {crit:.2} at p={p} q={q}: {counts:?} vs {expect:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn reject_agrees_with_linear_on_random_graphs() {
+        forall("reject ~ exact distribution", 6, |g: &mut Gen| {
+            let n = g.usize_in(8, 40);
+            let mut b = GraphBuilder::new_undirected(n);
+            for _ in 0..(4 * n) {
+                let u = g.usize_in(0, n - 1) as u32;
+                let v = g.usize_in(0, n - 1) as u32;
+                b.add_edge(u, v, g.f64_in(0.25, 4.0) as f32);
+            }
+            let graph = b.build();
+            let v = (0..n as u32).max_by_key(|&v| graph.degree(v)).unwrap();
+            if graph.degree(v) < 2 {
+                return;
+            }
+            let u = graph.neighbors(v)[0];
+            let (p, q) = (
+                *g.choose(&[0.25f32, 1.0, 4.0]),
+                *g.choose(&[0.25f32, 1.0, 4.0]),
+            );
+            let sampler = RejectSampler::new(p, q, graph.first_order_tables());
+            let expect = second_order_distribution(
+                graph.neighbors(v),
+                graph.weights(v),
+                u,
+                graph.neighbors(u),
+                p,
+                q,
+            );
+            let mut counts = vec![0u64; graph.degree(v)];
+            let mut scratch = Vec::new();
+            let draws = 60_000u64;
+            for k in 0..draws {
+                let mut rng = stream(k, v as u64, 1, 0xD17);
+                let i = sampler
+                    .sample(
+                        v,
+                        graph.neighbors(v),
+                        graph.weights(v),
+                        u,
+                        graph.neighbors(u),
+                        &mut scratch,
+                        &mut rng,
+                    )
+                    .unwrap();
+                counts[i] += 1;
+            }
+            let stat = chi_square_stat(&counts, &expect);
+            // Generous critical value: 6 independent configurations are
+            // tested per run, so use z ≈ 4 (p ≈ 3e-5 each).
+            let crit = chi_square_critical(counts.len() - 1, 4.0);
+            assert!(stat < crit, "chi² {stat:.2} >= {crit:.2} (p={p} q={q})");
+        });
+    }
+
+    #[test]
+    fn reject_is_deterministic_in_the_stream() {
+        let g = probe_graph();
+        let sampler = RejectSampler::new(0.5, 2.0, g.first_order_tables());
+        let mut scratch = Vec::new();
+        let draw = |scratch: &mut Vec<f32>| {
+            let mut rng = stream(42, 0, 7, 0xFEE);
+            sampler.sample(
+                0,
+                g.neighbors(0),
+                g.weights(0),
+                1,
+                g.neighbors(1),
+                scratch,
+                &mut rng,
+            )
+        };
+        let a = draw(&mut scratch);
+        let b = draw(&mut scratch);
+        assert_eq!(a, b);
+        assert!(a.is_some());
+    }
+
+    #[test]
+    fn pathological_pq_falls_back_but_stays_correct() {
+        // Every neighbor of v is u or common with u, so every reachable α
+        // is 1 while α_max = 1/q = 1e4: acceptance ≈ 1e-4 and nearly every
+        // hop exhausts MAX_PROPOSALS and takes the exact fallback — which
+        // must still sample the right distribution.
+        let mut b = GraphBuilder::new_undirected(4);
+        b.add_edge(0, 1, 1.0); // u
+        b.add_edge(0, 2, 3.0); // common
+        b.add_edge(0, 3, 1.0); // common
+        b.add_edge(1, 2, 1.0);
+        b.add_edge(1, 3, 1.0);
+        let g = b.build();
+        let (p, q) = (1.0f32, 1e-4f32);
+        let sampler = RejectSampler::new(p, q, g.first_order_tables());
+        let expect = second_order_distribution(
+            g.neighbors(0),
+            g.weights(0),
+            1,
+            g.neighbors(1),
+            p,
+            q,
+        );
+        let mut counts = vec![0u64; g.degree(0)];
+        let mut scratch = Vec::new();
+        let draws = 30_000u64;
+        for k in 0..draws {
+            let mut rng = stream(k, 3, 5, 0xAB);
+            let i = sampler
+                .sample(
+                    0,
+                    g.neighbors(0),
+                    g.weights(0),
+                    1,
+                    g.neighbors(1),
+                    &mut scratch,
+                    &mut rng,
+                )
+                .unwrap();
+            counts[i] += 1;
+        }
+        let st = sampler.stats();
+        assert!(
+            st.fallbacks > draws / 2,
+            "expected mostly fallbacks, got {st:?}"
+        );
+        let stat = chi_square_stat(&counts, &expect);
+        let crit = chi_square_critical(counts.len() - 1, 3.29);
+        assert!(stat < crit, "chi² {stat:.2} >= {crit:.2}: {counts:?} vs {expect:?}");
+    }
+
+    #[test]
+    fn degenerate_inputs_yield_none() {
+        let mut b = GraphBuilder::new_directed(3);
+        b.add_edge(0, 1, 0.0);
+        b.add_edge(1, 2, 1.0);
+        let g = b.build();
+        let sampler = RejectSampler::new(1.0, 1.0, g.first_order_tables());
+        let mut scratch = Vec::new();
+        let mut rng = stream(1, 2, 3, 4);
+        // All-zero weight row.
+        assert_eq!(
+            sampler.sample(
+                0,
+                g.neighbors(0),
+                g.weights(0),
+                1,
+                g.neighbors(1),
+                &mut scratch,
+                &mut rng
+            ),
+            None
+        );
+        // Empty row (vertex 2 is a sink).
+        assert_eq!(
+            sampler.sample(
+                2,
+                g.neighbors(2),
+                g.weights(2),
+                1,
+                g.neighbors(1),
+                &mut scratch,
+                &mut rng
+            ),
+            None
+        );
+    }
+
+    #[test]
+    fn typical_pq_rarely_falls_back() {
+        let g = probe_graph();
+        let sampler = RejectSampler::new(0.25, 4.0, g.first_order_tables());
+        let mut scratch = Vec::new();
+        for k in 0..20_000u64 {
+            let mut rng = stream(k, 0, 1, 0xE0);
+            sampler
+                .sample(
+                    0,
+                    g.neighbors(0),
+                    g.weights(0),
+                    1,
+                    g.neighbors(1),
+                    &mut scratch,
+                    &mut rng,
+                )
+                .unwrap();
+        }
+        let st = sampler.stats();
+        assert!(
+            st.fallbacks * 50 < 20_000,
+            "fallback rate too high for typical p/q: {st:?}"
+        );
+        // Expected proposals per accepted hop stays O(1) (≤ α_max/ᾱ).
+        assert!(
+            st.proposals < 20_000 * 16,
+            "proposal count not O(1) per hop: {st:?}"
+        );
+    }
+}

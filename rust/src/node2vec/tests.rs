@@ -11,7 +11,7 @@ use crate::pregel::EngineOpts;
 use crate::util::propkit::{forall, Gen};
 
 use super::reference::reference_walks;
-use super::{run_walks, FnConfig, Variant, WalkOutput};
+use super::{run_walks, FnConfig, SamplerKind, Variant, WalkOutput};
 
 fn walks_of(
     graph: &Graph,
@@ -141,6 +141,116 @@ fn approx_fires_and_yields_valid_walks() {
             assert!(g.has_edge(pair[0], pair[1]), "invalid step {pair:?}");
         }
     }
+}
+
+#[test]
+fn reject_walks_are_valid_and_deterministic_across_workers() {
+    // FN-Reject is statistically (not bit-) exact, so it cannot be compared
+    // to the reference walker directly; what must hold exactly is
+    // worker-count independence: the (seed, walk, step) RNG streams make
+    // the sampled walks a pure function of the seed.
+    let g = skew_graph(&GenConfig::new(500, 12, 77), 3.0);
+    let cfg = FnConfig::new(0.5, 2.0, 19)
+        .with_walk_length(12)
+        .with_popular_threshold(24)
+        .with_variant(Variant::Reject);
+    let mut reference: Option<WalkOutput> = None;
+    for workers in [1usize, 2, 5, 9] {
+        let out = walks_of(&g, &cfg, workers, 1, EngineOpts::default());
+        for (start, w) in out.walks.iter().enumerate() {
+            assert_eq!(w[0], start as u32);
+            for pair in w.windows(2) {
+                assert!(g.has_edge(pair[0], pair[1]), "non-edge step {pair:?}");
+            }
+        }
+        match &reference {
+            None => reference = Some(out),
+            Some(r) => assert_eq!(out.walks, r.walks, "workers={workers} diverged"),
+        }
+    }
+    let stats = reference.unwrap().stats;
+    assert!(stats.reject_proposals > 0, "rejection sampler never ran: {stats:?}");
+}
+
+#[test]
+fn reject_fn_multi_rounds_produce_identical_walks() {
+    let g = skew_graph(&GenConfig::new(400, 10, 41), 2.0);
+    let cfg = FnConfig::new(2.0, 0.5, 23)
+        .with_walk_length(8)
+        .with_variant(Variant::Reject);
+    let one = walks_of(&g, &cfg, 3, 1, EngineOpts::default());
+    let four = walks_of(&g, &cfg, 3, 4, EngineOpts::default());
+    assert_eq!(one.walks, four.walks);
+}
+
+#[test]
+fn sampler_knob_composes_with_any_message_variant() {
+    // --sampler reject under FN-Base/Local/Switch messaging must produce
+    // the same walks as FN-Reject (same streams, same sampling strategy):
+    // hop transport and hop sampling are orthogonal layers.
+    let g = skew_graph(&GenConfig::new(300, 10, 55), 3.0);
+    let base_cfg = FnConfig::new(0.5, 2.0, 31)
+        .with_walk_length(10)
+        .with_popular_threshold(24);
+    let expect = walks_of(
+        &g,
+        &base_cfg.with_variant(Variant::Reject),
+        4,
+        1,
+        EngineOpts::default(),
+    );
+    for variant in [Variant::Base, Variant::Local, Variant::Switch, Variant::Cache] {
+        let cfg = base_cfg
+            .with_variant(variant)
+            .with_sampler(SamplerKind::Reject);
+        let out = walks_of(&g, &cfg, 4, 1, EngineOpts::default());
+        assert_eq!(
+            out.walks,
+            expect.walks,
+            "{} + reject sampler diverged from FN-Reject",
+            variant.name()
+        );
+    }
+}
+
+#[test]
+fn reject_first_step_matches_reference_exactly() {
+    // Step 0 samples by static weights through the same linear path in
+    // every variant, so the first hop is still bit-identical.
+    let g = er_graph(&GenConfig::new(200, 8, 13));
+    let cfg = FnConfig::new(0.5, 2.0, 7).with_walk_length(1);
+    let expect = reference_walks(&g, &cfg);
+    let out = walks_of(&g, &cfg.with_variant(Variant::Reject), 3, 1, EngineOpts::default());
+    assert_eq!(out.walks, expect);
+}
+
+#[test]
+fn reject_visit_statistics_track_exact_walks() {
+    // Aggregate behaviour check at the walk level: degree-visit bias of
+    // FN-Reject matches the exact engine's within a few percent.
+    let g = skew_graph(&GenConfig::new(800, 16, 3), 4.0);
+    let cfg = FnConfig::new(1.0, 1.0, 11).with_walk_length(16);
+    let visits = |variant: Variant| -> Vec<f64> {
+        let out = walks_of(&g, &cfg.with_variant(variant), 4, 1, EngineOpts::default());
+        let mut v = vec![0u64; g.num_vertices()];
+        for w in &out.walks {
+            for &x in w {
+                v[x as usize] += 1;
+            }
+        }
+        v.into_iter().map(|c| c as f64).collect()
+    };
+    let exact = visits(Variant::Base);
+    let reject = visits(Variant::Reject);
+    let n: f64 = exact.iter().sum();
+    let m: f64 = reject.iter().sum();
+    assert!((n - m).abs() < 1e-9, "visit totals differ: {n} vs {m}");
+    // Cosine similarity of the two visit-count vectors ≈ 1.
+    let dot: f64 = exact.iter().zip(&reject).map(|(a, b)| a * b).sum();
+    let na: f64 = exact.iter().map(|a| a * a).sum::<f64>().sqrt();
+    let nb: f64 = reject.iter().map(|b| b * b).sum::<f64>().sqrt();
+    let cos = dot / (na * nb);
+    assert!(cos > 0.99, "visit distributions diverged: cosine {cos:.4}");
 }
 
 #[test]

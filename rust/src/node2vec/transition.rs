@@ -72,8 +72,10 @@ pub fn fill_second_order_weights(
 
 /// Exponential (galloping) search for `x` in sorted `hay`; returns
 /// (found, index-to-advance-past) so the caller can resume the merge.
+/// Also the membership probe of the FN-Reject sampler
+/// ([`super::sampler::contains_sorted`]).
 #[inline]
-fn gallop_search(hay: &[VertexId], x: VertexId) -> (bool, usize) {
+pub(crate) fn gallop_search(hay: &[VertexId], x: VertexId) -> (bool, usize) {
     if hay.is_empty() || hay[hay.len() - 1] < x {
         return (false, hay.len());
     }

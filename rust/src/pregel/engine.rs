@@ -15,13 +15,13 @@
 //! streams from `(seed, walk, superstep)`), so results are independent of
 //! worker count — a property the test suite checks.
 
-use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Barrier, Mutex};
 use std::time::Instant;
 
 use crate::graph::partition::Partitioner;
 use crate::graph::{Graph, VertexId};
+use crate::util::fxhash::FxHashMap;
 
 use super::metrics::{EngineMetrics, SuperstepMetrics};
 use super::Message;
@@ -114,8 +114,12 @@ pub struct RunResult<V> {
 }
 
 /// Per-worker adjacency cache (FN-Cache's global per-worker structure).
+/// Keyed by vertex id with FxHash: the keys are graph-derived (not
+/// adversarial), and every Marker hop costs one lookup here, so the
+/// SipHash hardening of std's default hasher is wasted work
+/// (see EXPERIMENTS.md §Perf).
 struct WorkerCache {
-    map: HashMap<VertexId, Arc<[VertexId]>>,
+    map: FxHashMap<VertexId, Arc<[VertexId]>>,
     bytes: u64,
     capacity: Option<u64>,
 }
@@ -123,7 +127,7 @@ struct WorkerCache {
 impl WorkerCache {
     fn new(capacity: Option<u64>) -> Self {
         WorkerCache {
-            map: HashMap::new(),
+            map: FxHashMap::default(),
             bytes: 0,
             capacity,
         }
@@ -418,34 +422,46 @@ fn worker_loop<P: VertexProgram>(
     let mut out: Vec<Vec<(VertexId, P::Msg)>> = (0..part.num_workers())
         .map(|_| Vec::new())
         .collect();
+    // Per-vertex delivery buckets, indexed by the partitioner's dense local
+    // index. Allocated once and reused across supersteps (each bucket keeps
+    // its capacity), so steady-state delivery allocates nothing.
+    let mut vertex_msgs: Vec<Vec<P::Msg>> = Vec::new();
+    vertex_msgs.resize_with(my_vertices.len(), Vec::new);
     let mut superstep: u32 = 0;
     let mut step_start = Instant::now();
 
     loop {
-        // ---- message delivery: drain my inbox, sort by destination. ----
+        // ---- message delivery: bucket my inbox by local dense index. ----
+        // A single O(msgs) counting/bucket pass replaces the former global
+        // `sort_unstable_by_key` over the whole inbox (O(msgs log msgs)
+        // with a comparison sort's branch misses); per-destination order is
+        // unspecified either way and programs are required to be
+        // order-independent (per-(walk, step) RNG streams).
+        // See EXPERIMENTS.md §Perf.
         let parity = (superstep % 2) as usize;
         let mut inbox =
             std::mem::take(&mut *shared.inboxes[parity][me].lock().unwrap());
-        // Unstable sort: per-destination message order is already
-        // unspecified (it depends on worker scheduling), and programs are
-        // required to be order-independent (per-(walk, step) RNG streams),
-        // so the cheaper sort is safe. §Perf: ~7% on message-heavy steps.
-        inbox.sort_unstable_by_key(|(vid, _)| *vid);
-        let mut inbox_it = inbox.into_iter().peekable();
+        for (vid, msg) in inbox.drain(..) {
+            let li = part.local_index(vid);
+            debug_assert!(
+                li < my_vertices.len() && my_vertices[li] == vid,
+                "message for {vid} routed to worker {me} (local index {li})"
+            );
+            vertex_msgs[li].push(msg);
+        }
+        // Hand the drained (empty) buffer back to the now-idle current-
+        // parity slot so the allocation is reused two supersteps from now.
+        {
+            let mut slot = shared.inboxes[parity][me].lock().unwrap();
+            if slot.capacity() < inbox.capacity() {
+                *slot = inbox;
+            }
+        }
 
         // ---- compute phase ----
         let mut counters = LocalCounters::default();
-        let mut msgs: Vec<P::Msg> = Vec::new();
         for (li, &vid) in my_vertices.iter().enumerate() {
-            msgs.clear();
-            while let Some((dst, _)) = inbox_it.peek() {
-                debug_assert!(*dst >= vid, "inbox vid {dst} not owned or out of order");
-                if *dst == vid {
-                    msgs.push(inbox_it.next().unwrap().1);
-                } else {
-                    break;
-                }
-            }
+            let msgs = &mut vertex_msgs[li];
             let active = !halted[li] || !msgs.is_empty();
             if !active {
                 continue;
@@ -463,7 +479,8 @@ fn worker_loop<P: VertexProgram>(
                 counters: &mut counters,
                 cache: &mut cache,
             };
-            program.compute(&mut ctx, vid, &mut values[li], &mut msgs);
+            program.compute(&mut ctx, vid, &mut values[li], msgs);
+            msgs.clear(); // compute may only iterate; keep capacity for reuse
             halted[li] = ctx.halt;
         }
 
@@ -659,6 +676,24 @@ mod tests {
             }
         }
         assert_eq!(reference.unwrap(), expected_sum_ids(&g, 3));
+    }
+
+    #[test]
+    fn results_identical_under_range_partitioning() {
+        // The bucket delivery keys on Partitioner::local_index; both
+        // schemes must deliver every message to the right vertex.
+        let g = er_graph(&GenConfig::new(250, 7, 23));
+        let expect = expected_sum_ids(&g, 3);
+        for workers in [1usize, 3, 7] {
+            for part in [
+                Partitioner::hash(workers),
+                Partitioner::range(workers, g.num_vertices()),
+            ] {
+                let eng = Engine::new(&g, part, SumIds { rounds: 3 }, EngineOpts::default());
+                let out = eng.run().unwrap();
+                assert_eq!(out.values, expect, "workers={workers} part={part:?}");
+            }
+        }
     }
 
     #[test]

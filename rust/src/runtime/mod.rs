@@ -18,10 +18,17 @@
 //! After each `execute_b` the returned `w_in` / `w_out` buffers replace the
 //! held ones, so the (V, D) tables never round-trip through the host during
 //! training — only the (B,)-sized batch indices and the scalar loss do.
+//!
+//! The `xla` crate is only present in the offline vendor set, so the whole
+//! PJRT path is gated behind the **`pjrt` cargo feature**. Without it this
+//! module still compiles: manifest handling is pure Rust, and
+//! [`SgnsRuntime::load`] returns an error that [`crate::exp::pipeline`]
+//! catches to fall back to the pure-Rust SGNS oracle.
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::bail;
+use crate::util::error::{Context, Result};
 
 /// One AOT shape variant from `artifacts/manifest.txt`.
 #[derive(Clone, Debug)]
@@ -51,10 +58,10 @@ pub fn read_manifest(artifacts_dir: &Path) -> Result<Vec<SgnsVariant>> {
         }
         out.push(SgnsVariant {
             name: f[0].to_string(),
-            vocab: f[1].parse()?,
-            dim: f[2].parse()?,
-            batch: f[3].parse()?,
-            negatives: f[4].parse()?,
+            vocab: f[1].parse().context("manifest vocab")?,
+            dim: f[2].parse().context("manifest dim")?,
+            batch: f[3].parse().context("manifest batch")?,
+            negatives: f[4].parse().context("manifest negatives")?,
             file: artifacts_dir.join(f[5]),
         });
     }
@@ -68,154 +75,228 @@ pub fn pick_variant(variants: &[SgnsVariant], n: usize) -> Result<&SgnsVariant> 
         .filter(|v| v.vocab >= n)
         .min_by_key(|v| v.vocab)
         .ok_or_else(|| {
-            anyhow!(
+            crate::anyhow!(
                 "no AOT variant covers {n} vertices (max {:?})",
                 variants.iter().map(|v| v.vocab).max()
             )
         })
 }
 
-/// The compiled train step plus the device-resident fused state.
-///
-/// State layout (see `python/compile/model.py::train_step_fused`):
-/// row 0 = loss row (col 0 = mean batch loss), rows `1..V+1` = w_in,
-/// rows `V+1..2V+1` = w_out. A tuple root would force full-table host
-/// round-trips per step, so the computation is fused into one array.
-pub struct SgnsRuntime {
-    exe: xla::PjRtLoadedExecutable,
-    pub variant: SgnsVariant,
-    state: xla::PjRtBuffer,
-    /// Number of *real* vertices (≤ variant.vocab; the rest is padding).
-    pub num_vertices: usize,
-    pub steps_run: u64,
-}
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use super::*;
+    use crate::bail;
+    use crate::util::error::Result;
 
-impl SgnsRuntime {
-    /// Load + compile the variant that covers `num_vertices`, initialize
-    /// tables with uniform(-0.5/D, 0.5/D) entries (word2vec convention)
-    /// from `seed`.
-    pub fn load(artifacts_dir: &Path, num_vertices: usize, seed: u64) -> Result<SgnsRuntime> {
-        let variants = read_manifest(artifacts_dir)?;
-        let variant = pick_variant(&variants, num_vertices)?.clone();
-        let client = xla::PjRtClient::cpu()?;
-        let proto = xla::HloModuleProto::from_text_file(
-            variant
-                .file
-                .to_str()
-                .ok_or_else(|| anyhow!("non-utf8 artifact path"))?,
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client.compile(&comp)?;
+    /// The compiled train step plus the device-resident fused state.
+    ///
+    /// State layout (see `python/compile/model.py::train_step_fused`):
+    /// row 0 = loss row (col 0 = mean batch loss), rows `1..V+1` = w_in,
+    /// rows `V+1..2V+1` = w_out. A tuple root would force full-table host
+    /// round-trips per step, so the computation is fused into one array.
+    pub struct SgnsRuntime {
+        exe: xla::PjRtLoadedExecutable,
+        pub variant: SgnsVariant,
+        state: xla::PjRtBuffer,
+        /// Number of *real* vertices (≤ variant.vocab; the rest is padding).
+        pub num_vertices: usize,
+        pub steps_run: u64,
+    }
 
-        let (v, d) = (variant.vocab, variant.dim);
-        let mut rng = crate::util::rng::Xoshiro256pp::seed_from_u64(seed ^ 0x5635);
-        let scale = 0.5 / d as f32;
-        // Row 0 = loss row (zeros); then w_in rows, then w_out rows.
-        // Padding rows (vertex id ≥ num_vertices) stay zero; the train
-        // step never gathers or scatters them.
-        let mut host = vec![0f32; (2 * v + 1) * d];
-        for table in 0..2 {
-            for row in 0..num_vertices {
-                let base = (1 + table * v + row) * d;
-                for x in &mut host[base..base + d] {
-                    *x = (rng.next_f64() as f32 * 2.0 - 1.0) * scale;
+    impl SgnsRuntime {
+        /// Load + compile the variant that covers `num_vertices`, initialize
+        /// tables with uniform(-0.5/D, 0.5/D) entries (word2vec convention)
+        /// from `seed`.
+        pub fn load(
+            artifacts_dir: &Path,
+            num_vertices: usize,
+            seed: u64,
+        ) -> Result<SgnsRuntime> {
+            let variants = read_manifest(artifacts_dir)?;
+            let variant = pick_variant(&variants, num_vertices)?.clone();
+            let client = xla::PjRtClient::cpu()?;
+            let proto = xla::HloModuleProto::from_text_file(
+                variant
+                    .file
+                    .to_str()
+                    .ok_or_else(|| crate::anyhow!("non-utf8 artifact path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+
+            let (v, d) = (variant.vocab, variant.dim);
+            let mut rng = crate::util::rng::Xoshiro256pp::seed_from_u64(seed ^ 0x5635);
+            let scale = 0.5 / d as f32;
+            // Row 0 = loss row (zeros); then w_in rows, then w_out rows.
+            // Padding rows (vertex id ≥ num_vertices) stay zero; the train
+            // step never gathers or scatters them.
+            let mut host = vec![0f32; (2 * v + 1) * d];
+            for table in 0..2 {
+                for row in 0..num_vertices {
+                    let base = (1 + table * v + row) * d;
+                    for x in &mut host[base..base + d] {
+                        *x = (rng.next_f64() as f32 * 2.0 - 1.0) * scale;
+                    }
                 }
             }
+            let state = client.buffer_from_host_buffer(&host, &[2 * v + 1, d], None)?;
+            Ok(SgnsRuntime {
+                exe,
+                variant,
+                state,
+                num_vertices,
+                steps_run: 0,
+            })
         }
-        let state = client.buffer_from_host_buffer(&host, &[2 * v + 1, d], None)?;
-        Ok(SgnsRuntime {
-            exe,
-            variant,
-            state,
-            num_vertices,
-            steps_run: 0,
-        })
-    }
 
-    /// One SGD step. Slices must match the variant's (B, K); indices must
-    /// be `< num_vertices`. Returns the mean batch loss (a 4-byte partial
-    /// host read — the tables never leave the device).
-    pub fn step(
-        &mut self,
-        centers: &[i32],
-        positives: &[i32],
-        negatives: &[i32],
-        lr: f32,
-    ) -> Result<f32> {
-        self.step_quiet(centers, positives, negatives, lr)?;
-        self.last_loss()
-    }
-
-    /// [`SgnsRuntime::step`] without the loss read (hot loop).
-    pub fn step_quiet(
-        &mut self,
-        centers: &[i32],
-        positives: &[i32],
-        negatives: &[i32],
-        lr: f32,
-    ) -> Result<()> {
-        let b = self.variant.batch;
-        let k = self.variant.negatives;
-        if centers.len() != b || positives.len() != b || negatives.len() != b * k {
-            bail!(
-                "batch shape mismatch: got ({}, {}, {}), variant needs B={b}, K={k}",
-                centers.len(),
-                positives.len(),
-                negatives.len()
-            );
+        /// One SGD step. Slices must match the variant's (B, K); indices must
+        /// be `< num_vertices`. Returns the mean batch loss (a 4-byte partial
+        /// host read — the tables never leave the device).
+        pub fn step(
+            &mut self,
+            centers: &[i32],
+            positives: &[i32],
+            negatives: &[i32],
+            lr: f32,
+        ) -> Result<f32> {
+            self.step_quiet(centers, positives, negatives, lr)?;
+            self.last_loss()
         }
-        debug_assert!(centers
-            .iter()
-            .chain(positives)
-            .chain(negatives)
-            .all(|&i| (i as usize) < self.num_vertices));
-        let client = self.exe.client().clone();
-        let c = client.buffer_from_host_buffer(centers, &[b], None)?;
-        let p = client.buffer_from_host_buffer(positives, &[b], None)?;
-        let n = client.buffer_from_host_buffer(negatives, &[b, k], None)?;
-        let lr_b = client.buffer_from_host_buffer(&[lr], &[], None)?;
-        let mut outs = self.exe.execute_b(&[&self.state, &c, &p, &n, &lr_b])?;
-        let mut row = outs.pop().ok_or_else(|| anyhow!("no execution outputs"))?;
-        if row.len() != 1 {
-            bail!("expected 1 fused output buffer, got {}", row.len());
-        }
-        self.state = row.pop().unwrap();
-        self.steps_run += 1;
-        Ok(())
-    }
 
-    /// Mean loss of the most recent step — state[0, 0].
-    ///
-    /// The CPU PJRT plugin does not implement `CopyRawToHost`, so this
-    /// downloads the state literal (≈16 MB for the `base` variant). Call
-    /// it every N steps for the loss curve, not per step; the training hot
-    /// loop is [`SgnsRuntime::step_quiet`].
-    pub fn last_loss(&self) -> Result<f32> {
-        let mut cell = [0f32; 1];
-        if self
-            .state
-            .copy_raw_to_host_sync(&mut cell, 0)
-            .is_ok()
-        {
-            return Ok(cell[0]);
+        /// [`SgnsRuntime::step`] without the loss read (hot loop).
+        pub fn step_quiet(
+            &mut self,
+            centers: &[i32],
+            positives: &[i32],
+            negatives: &[i32],
+            lr: f32,
+        ) -> Result<()> {
+            let b = self.variant.batch;
+            let k = self.variant.negatives;
+            if centers.len() != b || positives.len() != b || negatives.len() != b * k {
+                bail!(
+                    "batch shape mismatch: got ({}, {}, {}), variant needs B={b}, K={k}",
+                    centers.len(),
+                    positives.len(),
+                    negatives.len()
+                );
+            }
+            debug_assert!(centers
+                .iter()
+                .chain(positives)
+                .chain(negatives)
+                .all(|&i| (i as usize) < self.num_vertices));
+            let client = self.exe.client().clone();
+            let c = client.buffer_from_host_buffer(centers, &[b], None)?;
+            let p = client.buffer_from_host_buffer(positives, &[b], None)?;
+            let n = client.buffer_from_host_buffer(negatives, &[b, k], None)?;
+            let lr_b = client.buffer_from_host_buffer(&[lr], &[], None)?;
+            let mut outs = self.exe.execute_b(&[&self.state, &c, &p, &n, &lr_b])?;
+            let mut row = outs
+                .pop()
+                .ok_or_else(|| crate::anyhow!("no execution outputs"))?;
+            if row.len() != 1 {
+                bail!("expected 1 fused output buffer, got {}", row.len());
+            }
+            self.state = row.pop().unwrap();
+            self.steps_run += 1;
+            Ok(())
         }
-        let lit = self.state.to_literal_sync()?;
-        let flat: Vec<f32> = lit.to_vec()?;
-        Ok(flat[0])
-    }
 
-    /// Download the center-embedding table (first `num_vertices` rows).
-    pub fn embeddings(&self) -> Result<Vec<Vec<f32>>> {
-        let lit = self.state.to_literal_sync()?;
-        let flat: Vec<f32> = lit.to_vec()?;
-        let d = self.variant.dim;
-        // Skip the loss row.
-        Ok(flat[d..(1 + self.num_vertices) * d]
-            .chunks_exact(d)
-            .map(|r| r.to_vec())
-            .collect())
+        /// Mean loss of the most recent step — state[0, 0].
+        ///
+        /// The CPU PJRT plugin does not implement `CopyRawToHost`, so this
+        /// downloads the state literal (≈16 MB for the `base` variant). Call
+        /// it every N steps for the loss curve, not per step; the training hot
+        /// loop is [`SgnsRuntime::step_quiet`].
+        pub fn last_loss(&self) -> Result<f32> {
+            let mut cell = [0f32; 1];
+            if self.state.copy_raw_to_host_sync(&mut cell, 0).is_ok() {
+                return Ok(cell[0]);
+            }
+            let lit = self.state.to_literal_sync()?;
+            let flat: Vec<f32> = lit.to_vec()?;
+            Ok(flat[0])
+        }
+
+        /// Download the center-embedding table (first `num_vertices` rows).
+        pub fn embeddings(&self) -> Result<Vec<Vec<f32>>> {
+            let lit = self.state.to_literal_sync()?;
+            let flat: Vec<f32> = lit.to_vec()?;
+            let d = self.variant.dim;
+            // Skip the loss row.
+            Ok(flat[d..(1 + self.num_vertices) * d]
+                .chunks_exact(d)
+                .map(|r| r.to_vec())
+                .collect())
+        }
     }
 }
+
+#[cfg(feature = "pjrt")]
+pub use pjrt::SgnsRuntime;
+
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use super::*;
+    use crate::bail;
+    use crate::util::error::Result;
+
+    /// API-compatible stand-in when built without the `pjrt` feature.
+    /// [`SgnsRuntime::load`] always errors, which the embedding pipeline
+    /// treats as "fall back to the pure-Rust SGNS oracle"; the remaining
+    /// methods exist so callers type-check and are unreachable in practice.
+    pub struct SgnsRuntime {
+        pub variant: SgnsVariant,
+        pub num_vertices: usize,
+        pub steps_run: u64,
+    }
+
+    impl SgnsRuntime {
+        pub fn load(
+            _artifacts_dir: &Path,
+            _num_vertices: usize,
+            _seed: u64,
+        ) -> Result<SgnsRuntime> {
+            bail!(
+                "fastn2v was built without the `pjrt` feature; \
+                 rebuild with `--features pjrt` (requires the offline `xla` \
+                 crate) or use the pure-Rust SGNS fallback"
+            )
+        }
+
+        pub fn step(
+            &mut self,
+            _centers: &[i32],
+            _positives: &[i32],
+            _negatives: &[i32],
+            _lr: f32,
+        ) -> Result<f32> {
+            bail!("PJRT runtime unavailable (built without the `pjrt` feature)")
+        }
+
+        pub fn step_quiet(
+            &mut self,
+            _centers: &[i32],
+            _positives: &[i32],
+            _negatives: &[i32],
+            _lr: f32,
+        ) -> Result<()> {
+            bail!("PJRT runtime unavailable (built without the `pjrt` feature)")
+        }
+
+        pub fn last_loss(&self) -> Result<f32> {
+            bail!("PJRT runtime unavailable (built without the `pjrt` feature)")
+        }
+
+        pub fn embeddings(&self) -> Result<Vec<Vec<f32>>> {
+            bail!("PJRT runtime unavailable (built without the `pjrt` feature)")
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::SgnsRuntime;
 
 #[cfg(test)]
 mod tests {
@@ -244,6 +325,32 @@ mod tests {
         assert!(pick_variant(&vs, 10_000_000).is_err());
     }
 
+    #[test]
+    fn manifest_rows_validated() {
+        let dir = std::env::temp_dir().join(format!("fn2v-rt-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "# comment\ntiny 1000 64 128 5 tiny.hlo.txt\nbad row\n",
+        )
+        .unwrap();
+        assert!(read_manifest(&dir).is_err());
+        std::fs::write(dir.join("manifest.txt"), "tiny 1000 64 128 5 tiny.hlo.txt\n")
+            .unwrap();
+        let vs = read_manifest(&dir).unwrap();
+        assert_eq!(vs.len(), 1);
+        assert_eq!(vs[0].vocab, 1000);
+        assert_eq!(vs[0].negatives, 5);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_load_reports_missing_feature() {
+        let e = SgnsRuntime::load(&artifacts_dir(), 10, 1).unwrap_err();
+        assert!(e.to_string().contains("pjrt"), "{e}");
+    }
+
+    #[cfg(feature = "pjrt")]
     #[test]
     fn runtime_loads_and_loss_decreases() {
         if !have_artifacts() {
@@ -277,6 +384,7 @@ mod tests {
         assert!(emb.iter().flatten().all(|x| x.is_finite()));
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn batch_shape_mismatch_rejected() {
         if !have_artifacts() {

@@ -83,6 +83,25 @@ impl Args {
         }
     }
 
+    /// Fetch an option restricted to an accepted set of values (e.g.
+    /// `--sampler <linear|reject>`); errors name the flag and the choices.
+    pub fn get_choice<'a>(
+        &'a self,
+        name: &str,
+        default: &'a str,
+        accepted: &[&str],
+    ) -> Result<&'a str, String> {
+        let v = self.get_or(name, default);
+        if accepted.contains(&v) {
+            Ok(v)
+        } else {
+            Err(format!(
+                "invalid --{name}={v}; accepted: {}",
+                accepted.join(", ")
+            ))
+        }
+    }
+
     /// Validate that every provided option is in the accepted set.
     pub fn reject_unknown(&self, accepted: &[&str]) -> Result<(), String> {
         for k in self.options.keys() {
@@ -133,6 +152,23 @@ mod tests {
         let a = parse(&["run", "--workers", "many"]).unwrap();
         let e = a.get_parsed::<usize>("workers", 1).unwrap_err();
         assert!(e.contains("--workers"), "{e}");
+    }
+
+    #[test]
+    fn get_choice_validates_values() {
+        let a = parse(&["walk", "--sampler", "reject"]).unwrap();
+        assert_eq!(
+            a.get_choice("sampler", "linear", &["linear", "reject"]).unwrap(),
+            "reject"
+        );
+        let b = parse(&["walk"]).unwrap();
+        assert_eq!(
+            b.get_choice("sampler", "linear", &["linear", "reject"]).unwrap(),
+            "linear"
+        );
+        let c = parse(&["walk", "--sampler", "alias"]).unwrap();
+        let e = c.get_choice("sampler", "linear", &["linear", "reject"]).unwrap_err();
+        assert!(e.contains("--sampler") && e.contains("reject"), "{e}");
     }
 
     #[test]

@@ -1,0 +1,86 @@
+//! Minimal error plumbing (the `anyhow` crate is not in the offline vendor
+//! set): a boxed dyn-error alias plus the `anyhow!` / `bail!` macros and
+//! the `Context` extension trait covering exactly the subset this crate
+//! uses. Keeping the signatures anyhow-shaped means the code can swap back
+//! to the real crate by changing imports only.
+
+/// Boxed error, `Send + Sync` so it crosses worker threads.
+pub type Error = Box<dyn std::error::Error + Send + Sync + 'static>;
+
+/// `Result` defaulting to the boxed error (anyhow-style).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::from(format!($($arg)*))
+    };
+}
+
+/// Early-return an `Err` built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Attach context to an error, anyhow-style: the resulting message is
+/// `"{context}: {source}"`.
+pub trait Context<T> {
+    fn context<C: std::fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: std::fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: std::fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: std::fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::from(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: std::fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(format!("{}: {e}", f())))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<u32> {
+        let n: u32 = s.parse().context("parse count")?;
+        if n == 0 {
+            bail!("count must be positive");
+        }
+        Ok(n)
+    }
+
+    #[test]
+    fn question_mark_and_context_compose() {
+        assert_eq!(parse("7").unwrap(), 7);
+        let e = parse("x").unwrap_err().to_string();
+        assert!(e.starts_with("parse count:"), "{e}");
+        assert_eq!(parse("0").unwrap_err().to_string(), "count must be positive");
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        let mut called = false;
+        let ok: std::result::Result<u32, std::num::ParseIntError> = "3".parse();
+        let out = ok.with_context(|| {
+            called = true;
+            "never"
+        });
+        assert_eq!(out.unwrap(), 3);
+        assert!(!called);
+    }
+
+    #[test]
+    fn io_errors_box_transparently() {
+        fn read_missing() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/here")?;
+            Ok(s)
+        }
+        assert!(read_missing().is_err());
+    }
+}

@@ -1,0 +1,126 @@
+//! FxHash — the multiply-rotate hash rustc and Firefox use for internal
+//! hash maps (the `fxhash`/`rustc-hash` crates are unavailable offline).
+//!
+//! SipHash (std's default) pays ~2ns/int of HashDoS hardening that worker-
+//! local maps keyed by dense `u32` vertex ids do not need: the keys come
+//! from the graph, not the network. FxHash is a single wrapping multiply
+//! per word, which is what the FN-Cache hot path wants — see
+//! EXPERIMENTS.md §Perf.
+
+use std::collections::{HashMap, HashSet};
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// Knuth-style odd multiplier (2^64 / φ), as used by rustc-hash.
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+/// One-word-at-a-time multiplicative hasher. Not DoS-resistant — use only
+/// for keys an adversary cannot choose (vertex ids, dense indices).
+#[derive(Clone, Debug, Default)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+impl FxHasher {
+    #[inline]
+    fn add_to_hash(&mut self, i: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ i).wrapping_mul(SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        for chunk in bytes.chunks(8) {
+            let mut buf = [0u8; 8];
+            buf[..chunk.len()].copy_from_slice(chunk);
+            self.add_to_hash(u64::from_le_bytes(buf));
+        }
+    }
+
+    #[inline]
+    fn write_u8(&mut self, i: u8) {
+        self.add_to_hash(u64::from(i));
+    }
+
+    #[inline]
+    fn write_u16(&mut self, i: u16) {
+        self.add_to_hash(u64::from(i));
+    }
+
+    #[inline]
+    fn write_u32(&mut self, i: u32) {
+        self.add_to_hash(u64::from(i));
+    }
+
+    #[inline]
+    fn write_u64(&mut self, i: u64) {
+        self.add_to_hash(i);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, i: usize) {
+        self.add_to_hash(i as u64);
+    }
+
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+}
+
+pub type FxBuildHasher = BuildHasherDefault<FxHasher>;
+pub type FxHashMap<K, V> = HashMap<K, V, FxBuildHasher>;
+pub type FxHashSet<K> = HashSet<K, FxBuildHasher>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_roundtrip_with_u32_keys() {
+        let mut m: FxHashMap<u32, u64> = FxHashMap::default();
+        for k in 0..10_000u32 {
+            m.insert(k, u64::from(k) * 3);
+        }
+        assert_eq!(m.len(), 10_000);
+        for k in 0..10_000u32 {
+            assert_eq!(m.get(&k), Some(&(u64::from(k) * 3)));
+        }
+        assert_eq!(m.get(&10_001), None);
+    }
+
+    #[test]
+    fn hash_is_deterministic_and_spreads() {
+        let h = |x: u32| {
+            let mut f = FxHasher::default();
+            f.write_u32(x);
+            f.finish()
+        };
+        assert_eq!(h(42), h(42));
+        // Consecutive keys should land in distinct buckets of a small
+        // power-of-two table (the dense-id case the cache sees).
+        let mut buckets = std::collections::HashSet::new();
+        for k in 0..64u32 {
+            buckets.insert(h(k) % 64);
+        }
+        assert!(buckets.len() > 32, "only {} distinct buckets", buckets.len());
+    }
+
+    #[test]
+    fn write_bytes_matches_chunked_words() {
+        let mut a = FxHasher::default();
+        a.write(&1234567890123456789u64.to_le_bytes());
+        let mut b = FxHasher::default();
+        b.write_u64(1234567890123456789);
+        assert_eq!(a.finish(), b.finish());
+    }
+
+    #[test]
+    fn set_alias_works() {
+        let mut s: FxHashSet<u32> = FxHashSet::default();
+        s.insert(7);
+        s.insert(7);
+        assert_eq!(s.len(), 1);
+        assert!(s.contains(&7));
+    }
+}

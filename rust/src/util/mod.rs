@@ -10,6 +10,8 @@
 pub mod alias;
 pub mod benchkit;
 pub mod cli;
+pub mod error;
+pub mod fxhash;
 pub mod logging;
 pub mod memstat;
 pub mod propkit;

@@ -64,6 +64,38 @@ impl Moments {
     }
 }
 
+/// Pearson chi-square goodness-of-fit statistic of observed counts against
+/// expected probabilities. Zero-probability outcomes with observations
+/// make the fit impossible (`+inf`); zero-probability outcomes without
+/// observations contribute nothing.
+pub fn chi_square_stat(observed: &[u64], expected_probs: &[f64]) -> f64 {
+    assert_eq!(observed.len(), expected_probs.len());
+    let n: u64 = observed.iter().sum();
+    let mut stat = 0.0f64;
+    for (&o, &p) in observed.iter().zip(expected_probs) {
+        if p <= 0.0 {
+            if o > 0 {
+                return f64::INFINITY;
+            }
+            continue;
+        }
+        let e = p * n as f64;
+        stat += (o as f64 - e).powi(2) / e;
+    }
+    stat
+}
+
+/// Approximate upper critical value of the χ²(df) distribution via the
+/// Wilson–Hilferty cube transform; `z` is the standard-normal quantile of
+/// the desired significance (z = 3.29 ≈ p < 5e-4, z = 4 ≈ p < 3.2e-5).
+/// Accurate to a few percent for df ≥ 2 — plenty for test thresholds.
+pub fn chi_square_critical(df: usize, z: f64) -> f64 {
+    assert!(df >= 1);
+    let k = df as f64;
+    let t = 2.0 / (9.0 * k);
+    k * (1.0 - t + z * t.sqrt()).powi(3)
+}
+
 /// Percentile of a sample (linear interpolation, `q` in [0,1]).
 /// Sorts a copy; fine for bench-sized samples.
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
@@ -178,6 +210,45 @@ mod tests {
         assert!((m.variance() - 32.0 / 7.0).abs() < 1e-12);
         assert_eq!(m.min(), 2.0);
         assert_eq!(m.max(), 9.0);
+    }
+
+    #[test]
+    fn chi_square_accepts_matching_counts() {
+        // 10_000 draws split close to a fair 4-way distribution.
+        let obs = [2510u64, 2480, 2505, 2505];
+        let p = [0.25f64; 4];
+        let stat = chi_square_stat(&obs, &p);
+        assert!(stat < chi_square_critical(3, 3.29), "stat {stat}");
+    }
+
+    #[test]
+    fn chi_square_rejects_wrong_distribution() {
+        let obs = [4000u64, 2000, 2000, 2000];
+        let p = [0.25f64; 4];
+        let stat = chi_square_stat(&obs, &p);
+        assert!(stat > chi_square_critical(3, 3.29), "stat {stat}");
+    }
+
+    #[test]
+    fn chi_square_handles_zero_probability_outcomes() {
+        assert_eq!(
+            chi_square_stat(&[10, 0], &[1.0, 0.0]),
+            0.0
+        );
+        assert_eq!(
+            chi_square_stat(&[10, 1], &[1.0, 0.0]),
+            f64::INFINITY
+        );
+    }
+
+    #[test]
+    fn chi_square_critical_matches_tables() {
+        // χ²(df=3, p=0.001) ≈ 16.27; Wilson–Hilferty with z=3.09.
+        let c = chi_square_critical(3, 3.09);
+        assert!((c - 16.27).abs() < 0.8, "critical {c}");
+        // χ²(df=10, p=0.001) ≈ 29.59.
+        let c10 = chi_square_critical(10, 3.09);
+        assert!((c10 - 29.59).abs() < 1.0, "critical {c10}");
     }
 
     #[test]
