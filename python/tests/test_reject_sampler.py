@@ -144,3 +144,44 @@ def test_alias_table_matches_weights():
 def test_wilson_hilferty_matches_tables():
     assert abs(chi_square_critical(3, 3.09) - 16.27) < 0.8
     assert abs(chi_square_critical(10, 3.09) - 29.59) < 1.0
+
+
+def test_hub_scale_class_distribution():
+    """Mirror of rust/tests/conformance.rs::reject_walks_chi_square_at_hub_under_degree_aware.
+
+    Star-with-pairs hub: vertex 0 is adjacent to 1200 leaves, and leaves
+    (2i+1, 2i+2) are paired. For any leaf predecessor u the hub's neighbors
+    fall into the same three alpha classes — {u (1/p), u's partner (1),
+    other leaves (1/q)} — so pooled hub draws form one multinomial. The
+    rejection sampler at degree >= 1024 must match it (the Rust side
+    additionally runs this through the walk engine under the degree-aware
+    partitioner; here we drive the sampler directly at hub scale).
+    """
+    pairs = 600
+    leaves = 2 * pairs
+    hub_neighbors = list(range(1, leaves + 1))
+    hub_weights = [1.0] * leaves
+    table = build_alias(hub_weights)
+    p, q = 0.5, 2.0
+    rng = np.random.default_rng(23)
+    counts = np.zeros(3)  # return / common (partner) / distant
+    draws = 6_000
+    for k in range(draws):
+        u = int(rng.integers(1, leaves + 1))
+        partner = u + 1 if u % 2 == 1 else u - 1
+        u_neighbors = sorted([0, partner])
+        i = reject_sample(
+            table, hub_neighbors, hub_weights, u, u_neighbors, p, q, rng
+        )
+        x = hub_neighbors[i]
+        if x == u:
+            counts[0] += 1
+        elif x == partner:
+            counts[1] += 1
+        else:
+            counts[2] += 1
+    masses = np.array([1.0 / p, 1.0, (leaves - 2) / q])
+    expect = masses / masses.sum()
+    stat = chi_square_stat(counts, expect)
+    crit = chi_square_critical(2, 4.0)
+    assert stat < crit, f"hub chi2 {stat:.2f} >= {crit:.2f}: {counts} vs {expect * draws}"

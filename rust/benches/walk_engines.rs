@@ -1,14 +1,18 @@
 //! End-to-end walk-engine comparison (the paper's Figure 7/13 axis): all
 //! FN variants plus both baselines on a skewed R-MAT graph, reported as
-//! wall time and steps/second — and a linear-vs-rejection sampler
-//! head-to-head that records a machine-readable baseline in
-//! `BENCH_walks.json` for future PRs (see EXPERIMENTS.md §Perf).
+//! wall time and steps/second — plus a linear-vs-rejection sampler
+//! head-to-head and a partitioning ablation (hash / range / degree-aware ×
+//! hot-vertex splitting, EXPERIMENTS.md §Partitioning) that records a
+//! machine-readable baseline in `BENCH_walks.json` for future PRs.
 //!
 //! Run: `cargo bench --bench walk_engines`
 //! (FASTN2V_BENCH_FULL=1 for a larger graph; FASTN2V_BENCH_OUT to move the
-//! JSON baseline, default `../BENCH_walks.json` next to EXPERIMENTS.md.)
+//! JSON baseline, default `../BENCH_walks.json` next to EXPERIMENTS.md;
+//! `-- --quick` for the CI smoke run: tiny graph, JSON write skipped
+//! unless FASTN2V_BENCH_OUT is set.)
 
 use fastn2v::exp::common::{popular_threshold, run_fn_with_cfg, run_solution, Solution};
+use fastn2v::exp::pipeline::{partition_ablation, PartitionAblationRow};
 use fastn2v::gen::{skew_graph, GenConfig};
 use fastn2v::node2vec::{FnConfig, SamplerKind, Variant};
 use fastn2v::util::benchkit::print_table;
@@ -19,10 +23,17 @@ struct Row {
     msteps: Option<f64>,
 }
 
+/// Workers for the partitioning ablation — the tentpole acceptance
+/// criterion is stated at 8 workers on rmat-skew-4.
+const ABLATION_WORKERS: usize = 8;
+
 fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
     let full = std::env::var("FASTN2V_BENCH_FULL").is_ok();
     let (n, deg, walk_len) = if full {
         (1 << 17, 100, 80u32)
+    } else if quick {
+        (1 << 10, 16, 6u32)
     } else {
         (1 << 13, 40, 20u32)
     };
@@ -89,6 +100,52 @@ fn main() {
         .collect();
     print_table("walk engines (R-MAT skew-4 graph)", &["wall", "throughput"], &table);
 
+    // ---- partitioning ablation: hash / range / degree × hot splitting ----
+    // Hot threshold: well into the heavy tail but low enough to shard the
+    // top hubs (half the max degree, floored at twice the popular cutoff).
+    let hot_threshold = (g.max_degree() / 2).max(2 * popular_threshold(&g));
+    let ablation_cfg = FnConfig::new(0.5, 2.0, 3)
+        .with_walk_length(walk_len)
+        .with_popular_threshold(popular_threshold(&g))
+        .with_variant(Variant::Cache);
+    let ablation = partition_ablation(&g, ABLATION_WORKERS, &ablation_cfg, hot_threshold);
+    let ablation_table: Vec<(String, Vec<String>)> = ablation
+        .iter()
+        .map(|r| {
+            (
+                format!("{}{}", r.scheme, if r.hot_split { "+hot" } else { "" }),
+                vec![
+                    fastn2v::util::fmt_secs(r.wall_secs),
+                    format!("{:.3}", r.aggregate_imbalance),
+                    format!("{:.3}", r.worst_imbalance),
+                    r.hot_tasks.to_string(),
+                ],
+            )
+        })
+        .collect();
+    print_table(
+        &format!("partitioning ablation ({ABLATION_WORKERS} workers, hot deg >= {hot_threshold})"),
+        &["wall", "imbalance", "worst step", "hot tasks"],
+        &ablation_table,
+    );
+    let imbalance_of = |scheme: &str, hot: bool| {
+        ablation
+            .iter()
+            .find(|r| r.scheme == scheme && r.hot_split == hot)
+            .map(|r| r.aggregate_imbalance)
+    };
+    // The acceptance criterion is stated on the max/mean compute-time
+    // imbalance *ratio*: hash / (degree + hot split) >= 2x. The per-row
+    // imbalance values are all in the JSON, so any derived form can be
+    // recomputed; only the acceptance-aligned ratio gets a headline key.
+    let ratio_reduction = match (imbalance_of("hash", false), imbalance_of("degree", true)) {
+        (Some(h), Some(d)) if d > 0.0 => Some(h / d),
+        _ => None,
+    };
+    if let Some(r) = ratio_reduction {
+        println!("\nimbalance-ratio reduction, degree+hot vs hash: {r:.2}x");
+    }
+
     let secs_of = |name: &str| rows.iter().find(|r| r.name == name).and_then(|r| r.secs);
     let speedup = |a: Option<f64>, b: Option<f64>| match (a, b) {
         (Some(a), Some(b)) if b > 0.0 => Some(a / b),
@@ -97,15 +154,29 @@ fn main() {
     let reject_vs_base = speedup(secs_of("FN-Base"), secs_of("FN-Reject"));
     let reject_vs_cache = speedup(secs_of("FN-Cache/linear"), secs_of("FN-Cache/reject"));
     if let Some(s) = reject_vs_base {
-        println!("\nFN-Reject speedup vs FN-Base: {s:.2}x");
+        println!("FN-Reject speedup vs FN-Base: {s:.2}x");
     }
     if let Some(s) = reject_vs_cache {
         println!("reject vs linear sampler (same messaging): {s:.2}x");
     }
 
-    let out_path = std::env::var("FASTN2V_BENCH_OUT")
-        .unwrap_or_else(|_| "../BENCH_walks.json".to_string());
-    let json = render_json(&g, walk_len, full, &rows, reject_vs_base, reject_vs_cache);
+    let out_path = std::env::var("FASTN2V_BENCH_OUT").ok();
+    if quick && out_path.is_none() {
+        println!("--quick: JSON baseline not written (set FASTN2V_BENCH_OUT to force)");
+        return;
+    }
+    let out_path = out_path.unwrap_or_else(|| "../BENCH_walks.json".to_string());
+    let json = render_json(
+        &g,
+        walk_len,
+        full,
+        &rows,
+        reject_vs_base,
+        reject_vs_cache,
+        hot_threshold,
+        &ablation,
+        ratio_reduction,
+    );
     match std::fs::write(&out_path, &json) {
         Ok(()) => println!("baseline written to {out_path}"),
         Err(e) => eprintln!("could not write {out_path}: {e}"),
@@ -113,7 +184,8 @@ fn main() {
 }
 
 /// Hand-rolled JSON (serde is unavailable offline); schema documented in
-/// EXPERIMENTS.md §Perf.
+/// EXPERIMENTS.md §Perf and §Partitioning.
+#[allow(clippy::too_many_arguments)]
 fn render_json(
     g: &fastn2v::graph::Graph,
     walk_len: u32,
@@ -121,8 +193,12 @@ fn render_json(
     rows: &[Row],
     reject_vs_base: Option<f64>,
     reject_vs_cache: Option<f64>,
+    hot_threshold: u32,
+    ablation: &[PartitionAblationRow],
+    ratio_reduction: Option<f64>,
 ) -> String {
     let stats = g.stats();
+    let fmt_opt = |o: Option<f64>| o.map(|v| format!("{v:.3}")).unwrap_or_else(|| "null".into());
     let mut s = String::new();
     s.push_str("{\n");
     s.push_str("  \"bench\": \"walk_engines\",\n");
@@ -149,7 +225,26 @@ fn render_json(
         ));
     }
     s.push_str("  ],\n");
-    let fmt_opt = |o: Option<f64>| o.map(|v| format!("{v:.3}")).unwrap_or_else(|| "null".into());
+    s.push_str(&format!(
+        "  \"partitioning\": {{\"workers\": {ABLATION_WORKERS}, \"hot_degree_threshold\": {hot_threshold}, \"rows\": [\n"
+    ));
+    for (i, r) in ablation.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"scheme\": \"{}\", \"hot_split\": {}, \"wall_secs\": {:.6}, \"aggregate_imbalance\": {:.4}, \"worst_imbalance\": {:.4}, \"hot_tasks\": {}}}{}\n",
+            r.scheme,
+            r.hot_split,
+            r.wall_secs,
+            r.aggregate_imbalance,
+            r.worst_imbalance,
+            r.hot_tasks,
+            if i + 1 < ablation.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]},\n");
+    s.push_str(&format!(
+        "  \"imbalance_reduction_degree_hot_vs_hash\": {},\n",
+        fmt_opt(ratio_reduction)
+    ));
     s.push_str(&format!(
         "  \"speedup_reject_vs_base\": {},\n",
         fmt_opt(reject_vs_base)

@@ -3,7 +3,6 @@
 use crate::baselines::cnode2vec::{CNode2Vec, CNode2VecError};
 use crate::baselines::spark_sim::{RddError, SparkNode2Vec};
 use crate::gen::{self, GenConfig};
-use crate::graph::partition::Partitioner;
 use crate::graph::Graph;
 use crate::node2vec::{run_walks, FnConfig, Variant, WalkSet};
 use crate::pregel::EngineOpts;
@@ -239,14 +238,17 @@ pub fn run_solution(
 }
 
 /// Run an FN engine from an explicit [`FnConfig`] (the `walk` subcommand's
-/// entry point, where `--variant` and `--sampler` are both in play).
+/// entry point, where `--variant`, `--sampler`, `--partitioner` and
+/// `--hot-threshold` are all in play). The partitioner is materialized
+/// from `cfg.partitioner` over [`WORKERS`] workers.
 pub fn run_fn_with_cfg(graph: &Graph, cfg: &FnConfig, keep_walks: bool) -> RunOutcome {
     let t = std::time::Instant::now();
     let opts = EngineOpts {
         memory_budget: Some(Budgets::CLUSTER),
         ..Default::default()
     };
-    match run_walks(graph, Partitioner::hash(WORKERS), cfg, opts, 1) {
+    let part = cfg.partitioner.build(graph, WORKERS);
+    match run_walks(graph, part, cfg, opts, 1) {
         Err(e) => RunOutcome::Oom(e.to_string()),
         Ok(out) => RunOutcome::Secs(
             t.elapsed().as_secs_f64(),
@@ -278,6 +280,25 @@ mod tests {
         let sparse = gen::er_graph(&GenConfig::new(2000, 4, 1));
         let dense = gen::er_graph(&GenConfig::new(2000, 64, 1));
         assert!(popular_threshold(&dense) > popular_threshold(&sparse));
+    }
+
+    #[test]
+    fn run_fn_with_cfg_honors_partitioner_and_hot_knobs() {
+        let g = build_graph("skew-2", Scale::Quick, 11);
+        let base = FnConfig::new(0.5, 2.0, 3).with_walk_length(5);
+        let hash = match run_fn_with_cfg(&g.graph, &base, true) {
+            RunOutcome::Secs(_, Some(w)) => w,
+            other => panic!("hash run failed: {}", other.cell()),
+        };
+        let tuned = base
+            .with_partitioner(crate::node2vec::PartitionerKind::DegreeAware)
+            .with_hot_threshold(Some(64));
+        match run_fn_with_cfg(&g.graph, &tuned, true) {
+            RunOutcome::Secs(_, Some(w)) => {
+                assert_eq!(w, hash, "partitioner/hot-split changed walks")
+            }
+            other => panic!("tuned run failed: {}", other.cell()),
+        }
     }
 
     #[test]

@@ -22,7 +22,8 @@ COMMANDS:
     gen --graph <name> --out <path>             generate a graph (binary)
     stats --graph <name>                        Table-1 stats for one graph
     walk --graph <name> --variant <base|local|switch|cache|approx|reject>
-                 [--sampler <linear|reject>]
+                 [--sampler <linear|reject>] [--partitioner <hash|range|degree>]
+                 [--hot-threshold <deg>]
     pipeline --graph blogcatalog                walks -> embeddings -> F1
     help
 
@@ -34,6 +35,11 @@ COMMON FLAGS:
     --sampler <s>      2nd-order hop sampling: `linear` (exact scan) or
                        `reject` (O(1) alias-proposal rejection sampling);
                        the `reject` variant implies `--sampler reject`
+    --partitioner <p>  vertex placement: `hash` (v mod W), `range`
+                       (contiguous ids) or `degree` (greedy edge-balanced;
+                       see EXPERIMENTS.md §Partitioning)
+    --hot-threshold <d> shard compute of vertices with degree >= d across
+                       workers within a superstep (off when omitted)
 
 GRAPH NAMES:
     blogcatalog, livejournal, orkut, friendster (scaled analogues),
@@ -122,6 +128,13 @@ fn cli_inner(raw: Vec<String>) -> Result<(), String> {
                 &["linear", "reject"],
             )?)
             .expect("get_choice validated");
+            let partitioner = crate::node2vec::PartitionerKind::parse(args.get_choice(
+                "partitioner",
+                "hash",
+                &["hash", "range", "degree"],
+            )?)
+            .expect("get_choice validated");
+            let hot_threshold: Option<u32> = args.get_opt_parsed("hot-threshold")?;
             let p: f32 = args.get_parsed("p", 0.5)?;
             let q: f32 = args.get_parsed("q", 2.0)?;
             let ng = common::build_graph(name, scale, seed);
@@ -129,12 +142,18 @@ fn cli_inner(raw: Vec<String>) -> Result<(), String> {
                 .with_walk_length(scale.walk_length())
                 .with_popular_threshold(common::popular_threshold(&ng.graph))
                 .with_variant(variant)
-                .with_sampler(sampler);
+                .with_sampler(sampler)
+                .with_partitioner(partitioner)
+                .with_hot_threshold(hot_threshold);
             let out = common::run_fn_with_cfg(&ng.graph, &cfg, false);
             println!(
-                "{} ({} sampler) on {}: {}",
+                "{} ({} sampler, {} partitioner{}) on {}: {}",
                 variant.name(),
                 cfg.effective_sampler().name(),
+                partitioner.name(),
+                hot_threshold
+                    .map(|t| format!(", hot>={t}"))
+                    .unwrap_or_default(),
                 ng.name,
                 out.cell()
             );
@@ -276,6 +295,22 @@ mod cli_tests {
         assert_eq!(
             run(&["walk", "--graph", "skew-2", "--variant", "cache", "--quick"]),
             0
+        );
+    }
+
+    #[test]
+    fn walk_partitioner_knob_runs() {
+        assert_eq!(
+            run(&[
+                "walk", "--graph", "skew-2", "--variant", "cache", "--partitioner",
+                "degree", "--hot-threshold", "64", "--quick",
+            ]),
+            0
+        );
+        // Bad partitioner value fails loudly.
+        assert_eq!(
+            run(&["walk", "--graph", "skew-2", "--partitioner", "random", "--quick"]),
+            2
         );
     }
 

@@ -1,5 +1,6 @@
 //! Walks → embeddings → node-classification pipeline (the full Node2Vec
-//! system; used by Figure 1, Figure 6 and the end-to-end example).
+//! system; used by Figure 1, Figure 6 and the end-to-end example), plus
+//! the partitioning ablation driver (EXPERIMENTS.md §Partitioning).
 
 use std::path::PathBuf;
 
@@ -7,7 +8,10 @@ use crate::util::error::Result;
 
 use crate::classify::{evaluate, ClassifyConfig, F1Scores};
 use crate::embed::{train, Corpus, LossPoint, RustSgns, TrainConfig};
-use crate::node2vec::WalkSet;
+use crate::graph::partition::PartitionerKind;
+use crate::graph::Graph;
+use crate::node2vec::{run_walks, FnConfig, WalkSet};
+use crate::pregel::EngineOpts;
 use crate::runtime::SgnsRuntime;
 
 /// Where the AOT artifacts live (workspace-relative).
@@ -64,6 +68,78 @@ pub fn embeddings_from_walks(
     })
 }
 
+/// One measurement of the partitioning ablation.
+pub struct PartitionAblationRow {
+    pub scheme: &'static str,
+    pub hot_split: bool,
+    pub wall_secs: f64,
+    /// Σ_s max-worker compute / Σ_s mean-worker compute (1.0 = balanced).
+    pub aggregate_imbalance: f64,
+    /// Worst single-superstep max/mean ratio.
+    pub worst_imbalance: f64,
+    /// Hot-vertex chunks sharded over the run.
+    pub hot_tasks: u64,
+    /// Arc load of the most loaded worker (degree-aware plans only).
+    pub max_worker_arcs: Option<u64>,
+}
+
+/// Run the partitioning ablation: Hash / Range / DegreeAware, each with
+/// hot-vertex splitting off, plus Hash and DegreeAware with it on. Walks
+/// are asserted identical across all rows (the conformance invariant), so
+/// the rows differ only in load placement. Used by the `walk_engines`
+/// bench and EXPERIMENTS.md §Partitioning.
+pub fn partition_ablation(
+    graph: &Graph,
+    workers: usize,
+    cfg: &FnConfig,
+    hot_threshold: u32,
+) -> Vec<PartitionAblationRow> {
+    let grid = [
+        (PartitionerKind::Hash, false),
+        (PartitionerKind::Range, false),
+        (PartitionerKind::DegreeAware, false),
+        (PartitionerKind::Hash, true),
+        (PartitionerKind::DegreeAware, true),
+    ];
+    let mut rows = Vec::with_capacity(grid.len());
+    let mut reference: Option<WalkSet> = None;
+    for (kind, hot) in grid {
+        let part = kind.build(graph, workers);
+        let opts = EngineOpts {
+            hot_degree_threshold: hot.then_some(hot_threshold),
+            ..Default::default()
+        };
+        // Reset the config's own hot knob: engine_opts() would otherwise
+        // let a caller-supplied cfg.hot_threshold override this row's
+        // explicit opts. (cfg.partitioner is irrelevant here — run_walks
+        // takes the materialized partitioner directly.)
+        let cfg = cfg.with_hot_threshold(None);
+        let out = run_walks(graph, part.clone(), &cfg, opts, 1)
+            .expect("ablation run failed");
+        match &reference {
+            None => reference = Some(out.walks),
+            Some(r) => assert_eq!(
+                &out.walks,
+                r,
+                "partitioning changed walks ({} hot={hot})",
+                kind.name()
+            ),
+        }
+        rows.push(PartitionAblationRow {
+            scheme: kind.name(),
+            hot_split: hot,
+            wall_secs: out.metrics.wall_secs,
+            aggregate_imbalance: out.metrics.aggregate_imbalance_ratio(),
+            worst_imbalance: out.metrics.worst_imbalance_ratio(),
+            hot_tasks: out.metrics.total_hot_tasks(),
+            max_worker_arcs: part
+                .plan()
+                .map(|p| p.arcs_per_worker().iter().copied().max().unwrap_or(0)),
+        });
+    }
+    rows
+}
+
 /// Evaluate classification at several train fractions (Figure 6's X axis).
 pub fn classify_fractions(
     embeddings: &[Vec<f32>],
@@ -92,6 +168,26 @@ mod tests {
     use crate::graph::partition::Partitioner;
     use crate::node2vec::{run_walks, FnConfig};
     use crate::pregel::EngineOpts;
+
+    #[test]
+    fn partition_ablation_rows_are_consistent() {
+        let g = crate::gen::skew_graph(&crate::gen::GenConfig::new(1 << 10, 12, 5), 3.0);
+        let cfg = FnConfig::new(0.5, 2.0, 3)
+            .with_walk_length(6)
+            .with_popular_threshold(32);
+        // partition_ablation itself asserts walks identical across rows.
+        let rows = partition_ablation(&g, 4, &cfg, 64);
+        assert_eq!(rows.len(), 5);
+        for r in &rows {
+            assert!(r.wall_secs >= 0.0);
+            assert!(r.aggregate_imbalance >= 1.0 - 1e-9, "{}", r.scheme);
+            assert!(r.worst_imbalance >= r.aggregate_imbalance - 1e-9);
+            assert_eq!(r.max_worker_arcs.is_some(), r.scheme == "degree");
+            if !r.hot_split {
+                assert_eq!(r.hot_tasks, 0, "{}", r.scheme);
+            }
+        }
+    }
 
     #[test]
     fn pipeline_end_to_end_beats_random_embeddings() {

@@ -94,6 +94,20 @@ impl GraphBuilder {
         g
     }
 
+    /// [`GraphBuilder::build`], plus a degree-aware partitioner over the
+    /// built graph ("computed from the CSR at load time"): the greedy
+    /// edge-balance plan needs the final degree sequence, which only
+    /// exists after dedup, so this is the natural single entry point for
+    /// engines that want load-balanced placement.
+    pub fn build_partitioned(
+        self,
+        num_workers: usize,
+    ) -> (Graph, super::partition::Partitioner) {
+        let g = self.build();
+        let p = super::partition::Partitioner::degree_aware(num_workers, &g);
+        (g, p)
+    }
+
     /// Build the CSR graph (consumes the builder).
     pub fn build(mut self) -> Graph {
         let n = self.num_vertices;
@@ -216,6 +230,30 @@ mod tests {
     fn out_of_range_panics() {
         let mut b = GraphBuilder::new_undirected(2);
         b.add_edge(0, 5, 1.0);
+    }
+
+    #[test]
+    fn build_partitioned_balances_final_degrees() {
+        let mut b = GraphBuilder::new_undirected(7);
+        // Vertex 0 is a hub (degree 6); the rest are degree-1 leaves.
+        for v in 1..7 {
+            b.add_edge(0, v, 1.0);
+        }
+        let (g, p) = b.build_partitioned(2);
+        assert_eq!(p.num_workers(), 2);
+        let arcs = p.plan().unwrap().arcs_per_worker();
+        assert_eq!(arcs.iter().sum::<u64>() as usize, g.num_arcs());
+        // Hash puts the hub plus half the leaves on one worker (9 arcs);
+        // the greedy plan isolates the hub with at most one leaf (<= 7).
+        let hash = super::super::partition::Partitioner::hash(2);
+        let mut hash_arcs = [0u64; 2];
+        for v in g.vertices() {
+            hash_arcs[hash.worker_of(v)] += g.degree(v) as u64;
+        }
+        assert!(
+            arcs.iter().max() < hash_arcs.iter().max(),
+            "greedy {arcs:?} not better than hash {hash_arcs:?}"
+        );
     }
 
     #[test]

@@ -297,6 +297,13 @@ impl Graph {
             .collect()
     }
 
+    /// Maximum out-degree (0 for an empty graph): a convenience over
+    /// [`Graph::stats`] (the single source of the computation) for
+    /// hot-split threshold selection in `pregel/engine.rs` callers.
+    pub fn max_degree(&self) -> u32 {
+        self.stats().max_degree as u32
+    }
+
     /// The paper's Eq. (1): bytes to precompute all 2nd-order transition
     /// probabilities at 8 bytes each, `8 * Σ_i d_i²`. Used to reproduce the
     /// "80 TB for n=1G, d=100" style estimates and to set C-Node2Vec's

@@ -37,6 +37,10 @@ use crate::pregel::{Engine, EngineError, EngineMetrics, EngineOpts};
 pub use program::{FnMsg, FnProgram, WalkStats};
 pub use sampler::{SamplerStats, SecondOrderSampler};
 
+/// Re-export so walk configs can name placement schemes without reaching
+/// into the graph layer.
+pub use crate::graph::partition::PartitionerKind;
+
 /// Which member of the family to run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Variant {
@@ -129,6 +133,15 @@ pub struct FnConfig {
     /// Second-order sampling strategy (`--sampler`). [`Variant::Reject`]
     /// forces [`SamplerKind::Reject`] regardless of this field.
     pub sampler: SamplerKind,
+    /// Partitioning scheme (`--partitioner`); materialized per graph and
+    /// worker count by [`PartitionerKind::build`]. Walks are bit-identical
+    /// across schemes (per-(walk, step) RNG streams); only load balance
+    /// changes.
+    pub partitioner: PartitionerKind,
+    /// Engine hot-vertex splitting threshold (`--hot-threshold`): degrees
+    /// at or above this get their walk compute sharded across workers
+    /// within a superstep. `None` disables splitting.
+    pub hot_threshold: Option<u32>,
 }
 
 impl FnConfig {
@@ -143,6 +156,8 @@ impl FnConfig {
             popular_threshold: 128,
             approx_eps: 1e-3,
             sampler: SamplerKind::Linear,
+            partitioner: PartitionerKind::Hash,
+            hot_threshold: None,
         }
     }
 
@@ -174,6 +189,25 @@ impl FnConfig {
     pub fn with_popular_threshold(mut self, t: u32) -> Self {
         self.popular_threshold = t;
         self
+    }
+
+    pub fn with_partitioner(mut self, k: PartitionerKind) -> Self {
+        self.partitioner = k;
+        self
+    }
+
+    pub fn with_hot_threshold(mut self, t: Option<u32>) -> Self {
+        self.hot_threshold = t;
+        self
+    }
+
+    /// Engine options derived from this config layered over `base`
+    /// (the hot-split threshold travels with the walk config).
+    pub fn engine_opts(&self, base: EngineOpts) -> EngineOpts {
+        EngineOpts {
+            hot_degree_threshold: self.hot_threshold.or(base.hot_degree_threshold),
+            ..base
+        }
     }
 }
 
@@ -211,9 +245,10 @@ pub fn run_walks(
     let mut walks: WalkSet = vec![Vec::new(); n];
     let mut merged = EngineMetrics::default();
     let mut stats = WalkStats::default();
+    let opts = cfg.engine_opts(opts);
     for round in 0..rounds {
         let program = FnProgram::new(graph, *cfg, round, rounds);
-        let engine = Engine::new(graph, part, program, opts);
+        let engine = Engine::new(graph, part.clone(), program, opts);
         let out = engine.run()?;
         stats.merge(&engine.program().stats());
         for (vid, value) in out.values.into_iter().enumerate() {

@@ -292,6 +292,20 @@ impl FnProgram {
                 if dw == me {
                     ctx.send(dst, FnMsg::Move { start, idx, from: cur });
                 } else if self.is_popular(ctx.degree_of_self()) {
+                    if ctx.is_hot_chunk() {
+                        // Stolen chunk: `value` is ephemeral, so the real
+                        // `worker_sent` set is unknown here. A marker is
+                        // always safe — an unseeded receiver recovers
+                        // through the NeigReq retry, whose full NEIG seeds
+                        // the cache that processes it, so misses die out
+                        // per hub (see EXPERIMENTS.md §Partitioning) —
+                        // and beats re-shipping the full adjacency from
+                        // every chunk, which would defeat FN-Cache exactly
+                        // at the hubs splitting targets.
+                        self.stats.markers_sent.fetch_add(1, Ordering::Relaxed);
+                        ctx.send(dst, FnMsg::Marker { start, idx, from: cur });
+                        return;
+                    }
                     let bit = 1u64 << (dw as u32 % 64);
                     if value.worker_sent & bit != 0 {
                         self.stats.markers_sent.fetch_add(1, Ordering::Relaxed);
@@ -428,10 +442,16 @@ impl VertexProgram for FnProgram {
                         value.walk.push(vertex);
                     }
                     FnMsg::Neig { start, idx, from, neigh } => {
-                        // FN-Cache: cache popular remote adjacency on arrival.
+                        // FN-Cache: cache popular remote adjacency on
+                        // arrival. Locality is judged against the worker
+                        // whose cache we physically touch (`cache_worker`,
+                        // != `my_worker` in a stolen chunk): caching a
+                        // vertex local to that worker would plant a dead
+                        // entry (its worker never receives markers for it)
+                        // in a no-eviction cache.
                         if matches!(self.msg_variant, Variant::Cache | Variant::Approx)
                             && self.is_popular(neigh.len())
-                            && ctx.worker_of(from) != ctx.my_worker()
+                            && ctx.worker_of(from) != ctx.cache_worker()
                             && ctx.cache_get(from).is_none()
                             && ctx.cache_put(from, neigh.clone())
                         {
@@ -530,6 +550,34 @@ impl VertexProgram for FnProgram {
             }
         });
         ctx.vote_to_halt();
+    }
+
+    /// The FN protocol's walk hops are value-free (see `splittable`), so
+    /// the program opts into hot-vertex splitting.
+    fn supports_hot_split(&self) -> bool {
+        true
+    }
+
+    /// Hot-vertex splitting classification (engine load balancing):
+    ///
+    /// - `Step` appends to the walk — it *must* run at the owner with the
+    ///   walk's persistent value.
+    /// - `NeigReq` clears a `worker_sent` bit so the cache protocol can
+    ///   re-seed a worker; losing that update would leave the protocol
+    ///   correct (markers keep retrying) but permanently slow, so it stays
+    ///   with the owner. It is also rare and cheap.
+    /// - Everything else (`Neig`/`Move`/`Marker`/`SwitchReq`/`SwitchNeig`)
+    ///   samples a hop and forwards the walk: the sampled value depends
+    ///   only on the per-(walk, step) RNG stream and the graph, never on
+    ///   `FnValue`, so any worker can compute it with a fresh value. The
+    ///   only value interactions are best-effort caches (`own_arc` is
+    ///   rebuilt; a split hop at a popular vertex forwards with a marker
+    ///   unconditionally — see `notify_next` — and a stolen `Marker` may
+    ///   miss the executing worker's cache and fall back to the `NeigReq`
+    ///   retry) — all paths the protocol already tolerates, so walks stay
+    ///   bit-identical.
+    fn splittable(&self, msg: &FnMsg) -> bool {
+        !matches!(msg, FnMsg::Step { .. } | FnMsg::NeigReq { .. })
     }
 
     fn value_bytes(&self, v: &FnValue) -> u64 {

@@ -14,6 +14,27 @@
 //! All sampling determinism is the program's responsibility (derive RNG
 //! streams from `(seed, walk, superstep)`), so results are independent of
 //! worker count — a property the test suite checks.
+//!
+//! # Hot-vertex splitting
+//!
+//! On power-law graphs one hub can receive more messages than the rest of
+//! its worker's partition combined; the barrier then makes every superstep
+//! as slow as that worker. When [`EngineOpts::hot_degree_threshold`] is
+//! set, messages delivered to a vertex whose degree reaches the threshold
+//! are sharded: the owner keeps the messages that need the vertex's
+//! persistent value (the program classifies them via
+//! [`VertexProgram::splittable`]) and pushes the rest to a shared hot
+//! queue in fixed-size chunks; after a barrier, *all* workers drain the
+//! queue work-stealing style, executing each chunk with the program's
+//! `compute` under a context that impersonates the owner (`my_worker()`
+//! reports the owner, so partition-relative decisions are unchanged) and a
+//! fresh default value. Programs opting in must therefore tolerate
+//! (a) `compute` seeing any subset of a hot vertex's messages and
+//! (b) split chunks running with a default value on another worker's
+//! cache — the FN protocol does (worst case a cache miss retries).
+//! Results stay bit-identical because sampling draws only from
+//! per-(walk, step) RNG streams; only *where* a message is processed
+//! changes, which the per-worker compute-time metrics make visible.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Barrier, Mutex};
@@ -49,6 +70,28 @@ pub trait VertexProgram: Sync {
         msgs: &mut Vec<Self::Msg>,
     );
 
+    /// Hot-vertex splitting capability probe: programs that never return
+    /// `true` from [`VertexProgram::splittable`] keep the default `false`
+    /// here, and the engine skips the whole splitting machinery for them
+    /// (including its extra per-superstep barrier and the per-message
+    /// classification scan at hot vertices).
+    fn supports_hot_split(&self) -> bool {
+        false
+    }
+
+    /// Hot-vertex splitting opt-in (see the module doc). Return `true`
+    /// when `msg` can be processed for its destination vertex by *any*
+    /// worker via a `compute` call that receives a fresh
+    /// `Self::Value::default()` — i.e. handling the message must not
+    /// depend on, or durably mutate, the vertex's persistent value, and
+    /// must be independent of which other messages accompany it.
+    ///
+    /// Only consulted when [`VertexProgram::supports_hot_split`] is
+    /// `true`; override both together.
+    fn splittable(&self, _msg: &Self::Msg) -> bool {
+        false
+    }
+
     /// Approximate resident bytes of a value (base-usage accounting).
     fn value_bytes(&self, _v: &Self::Value) -> u64 {
         8
@@ -68,6 +111,13 @@ pub struct EngineOpts {
     /// Per-worker adjacency cache capacity in bytes (FN-Cache). `None`
     /// disables capacity checks.
     pub cache_capacity: Option<u64>,
+    /// Hot-vertex splitting: vertices whose degree is at least this get
+    /// their splittable incoming messages sharded across workers within a
+    /// superstep (work stealing over a shared hot queue; see the module
+    /// doc). `None` disables splitting. Programs that don't opt in via
+    /// [`VertexProgram::supports_hot_split`] are entirely unaffected —
+    /// the engine doesn't even take the extra barrier for them.
+    pub hot_degree_threshold: Option<u32>,
 }
 
 impl Default for EngineOpts {
@@ -76,8 +126,24 @@ impl Default for EngineOpts {
             max_supersteps: 10_000,
             memory_budget: None,
             cache_capacity: None,
+            hot_degree_threshold: None,
         }
     }
+}
+
+/// Don't bother splitting a hot vertex with fewer delivered messages than
+/// this: the queue round-trip would cost more than the compute.
+const HOT_MIN_SPLIT_MSGS: usize = 32;
+
+/// Lower bound on chunk size handed to the hot queue.
+const HOT_MIN_CHUNK: usize = 16;
+
+/// A chunk of one hot vertex's messages, executable by any worker on the
+/// owner's behalf.
+struct HotTask<M> {
+    vid: VertexId,
+    owner: usize,
+    msgs: Vec<M>,
 }
 
 /// Run failure modes.
@@ -160,14 +226,23 @@ struct LocalCounters {
     bytes_local: u64,
     bytes_remote: u64,
     active: u64,
+    /// Messages this worker processed (own vertices + stolen hot chunks).
+    msgs_handled: u64,
 }
 
 /// The compute context handed to [`VertexProgram::compute`].
 pub struct Ctx<'a, P: VertexProgram + ?Sized> {
     superstep: u32,
     graph: &'a Graph,
-    part: Partitioner,
+    part: &'a Partitioner,
+    /// Worker the current compute runs *as*: for stolen hot chunks this is
+    /// the vertex's owner, not the executing thread (see the module doc).
     me: usize,
+    /// The physical executing worker (whose cache and out-buffers this
+    /// context touches); equals `me` outside stolen hot chunks.
+    executor: usize,
+    /// True while processing a stolen hot-vertex chunk (ephemeral value).
+    hot_chunk: bool,
     cur_vid: VertexId,
     halt: bool,
     out: &'a mut [Vec<(VertexId, P::Msg)>],
@@ -226,6 +301,23 @@ impl<'a, P: VertexProgram + ?Sized> Ctx<'a, P> {
         self.part.worker_of(v)
     }
 
+    /// True while compute is processing a stolen hot-vertex chunk (see the
+    /// module doc): the value is ephemeral, so programs should make
+    /// state-free protocol choices on this path.
+    #[inline]
+    pub fn is_hot_chunk(&self) -> bool {
+        self.hot_chunk
+    }
+
+    /// The physical worker whose cache [`Ctx::cache_get`] /
+    /// [`Ctx::cache_put`] touch. Equals [`Ctx::my_worker`] except inside a
+    /// stolen hot chunk, where `my_worker` impersonates the vertex's
+    /// owner; cache-locality decisions must use this id.
+    #[inline]
+    pub fn cache_worker(&self) -> usize {
+        self.executor
+    }
+
     /// FN-Local's API: adjacency of another vertex **iff it lives in this
     /// worker's partition**; `None` for remote vertices (which must send
     /// their adjacency in a NEIG message instead).
@@ -239,6 +331,13 @@ impl<'a, P: VertexProgram + ?Sized> Ctx<'a, P> {
     }
 
     /// Send `msg` to `dst`, delivered next superstep.
+    ///
+    /// Local/remote classification is relative to [`Ctx::my_worker`] —
+    /// inside a stolen hot chunk that is the vertex's *owner*, i.e. the
+    /// simulation models hot splitting as offloaded compute whose results
+    /// are wired back through the owner (chunk shipment itself is charged
+    /// zero bytes). Communication metrics measured with hot splitting
+    /// enabled reflect that modeling choice.
     #[inline]
     pub fn send(&mut self, dst: VertexId, msg: P::Msg) {
         let w = self.part.worker_of(dst);
@@ -287,6 +386,9 @@ struct Shared<P: VertexProgram> {
     /// while receivers drain `inboxes[s % 2]`, so a fast worker can never
     /// race its sends into an inbox that is still being drained.
     inboxes: [Vec<Mutex<Vec<(VertexId, P::Msg)>>>; 2],
+    /// Hot-vertex chunks awaiting a worker (filled during the compute
+    /// phase, drained work-stealing style after the hot barrier).
+    hot_queue: Mutex<Vec<HotTask<P::Msg>>>,
     stop: AtomicBool,
     // Per-superstep accumulators (reset by the leader each step).
     msgs_local: AtomicU64,
@@ -297,6 +399,11 @@ struct Shared<P: VertexProgram> {
     not_halted: AtomicU64,
     cache_bytes: AtomicU64,
     value_bytes: AtomicU64,
+    hot_tasks: AtomicU64,
+    /// Per-worker compute-phase nanoseconds / messages handled this
+    /// superstep (each worker stores its own slot; leader reads all).
+    worker_compute_nanos: Vec<AtomicU64>,
+    worker_msgs: Vec<AtomicU64>,
     /// Leader-written, all-read after barrier.
     error: Mutex<Option<EngineError>>,
     metrics: Mutex<Vec<SuperstepMetrics>>,
@@ -337,6 +444,7 @@ impl<'g, P: VertexProgram> Engine<'g, P> {
                 (0..w).map(|_| Mutex::new(Vec::new())).collect(),
                 (0..w).map(|_| Mutex::new(Vec::new())).collect(),
             ],
+            hot_queue: Mutex::new(Vec::new()),
             stop: AtomicBool::new(false),
             msgs_local: AtomicU64::new(0),
             msgs_remote: AtomicU64::new(0),
@@ -346,6 +454,9 @@ impl<'g, P: VertexProgram> Engine<'g, P> {
             not_halted: AtomicU64::new(0),
             cache_bytes: AtomicU64::new(0),
             value_bytes: AtomicU64::new(0),
+            hot_tasks: AtomicU64::new(0),
+            worker_compute_nanos: (0..w).map(|_| AtomicU64::new(0)).collect(),
+            worker_msgs: (0..w).map(|_| AtomicU64::new(0)).collect(),
             error: Mutex::new(None),
             metrics: Mutex::new(Vec::new()),
             peak_bytes: AtomicU64::new(0),
@@ -360,7 +471,7 @@ impl<'g, P: VertexProgram> Engine<'g, P> {
             for me in 0..w {
                 let program = &self.program;
                 let graph = self.graph;
-                let part = self.part;
+                let part = &self.part;
                 handles.push(scope.spawn(move || {
                     worker_loop::<P>(me, graph, part, program, shared, opts, graph_bytes)
                 }));
@@ -401,11 +512,53 @@ impl<'g, P: VertexProgram> Engine<'g, P> {
     }
 }
 
+/// Move the splittable messages of hot vertex `vid` out of `msgs` and into
+/// the shared hot queue as chunks sized so every worker can get a share
+/// (messages the program marks non-splittable stay with the owner).
+fn offload_hot_messages<P: VertexProgram>(
+    program: &P,
+    owner: usize,
+    vid: VertexId,
+    msgs: &mut Vec<P::Msg>,
+    num_workers: usize,
+    shared: &Shared<P>,
+) {
+    let all = std::mem::take(msgs);
+    let mut split = Vec::with_capacity(all.len());
+    for m in all {
+        if program.splittable(&m) {
+            split.push(m);
+        } else {
+            msgs.push(m);
+        }
+    }
+    if split.len() < HOT_MIN_SPLIT_MSGS {
+        // Too few splittable messages to be worth the queue round-trip.
+        msgs.extend(split);
+        return;
+    }
+    // ~2 chunks per worker so the steal loop can rebalance stragglers.
+    let chunk = (split.len().div_ceil(2 * num_workers)).max(HOT_MIN_CHUNK);
+    let mut tasks = 0u64;
+    let mut queue = shared.hot_queue.lock().unwrap();
+    while !split.is_empty() {
+        let at = split.len().saturating_sub(chunk);
+        queue.push(HotTask {
+            vid,
+            owner,
+            msgs: split.split_off(at),
+        });
+        tasks += 1;
+    }
+    drop(queue);
+    shared.hot_tasks.fetch_add(tasks, Ordering::Relaxed);
+}
+
 /// Body of one worker thread.
 fn worker_loop<P: VertexProgram>(
     me: usize,
     graph: &Graph,
-    part: Partitioner,
+    part: &Partitioner,
     program: &P,
     shared: &Shared<P>,
     opts: EngineOpts,
@@ -413,6 +566,14 @@ fn worker_loop<P: VertexProgram>(
 ) -> (Vec<VertexId>, Vec<P::Value>) {
     let n = graph.num_vertices();
     let my_vertices = part.vertices_of(me, n);
+    // Hot splitting is pointless on a single worker or for a program that
+    // never opts in; the decision must be uniform across workers (it adds
+    // a barrier) and it is: every worker sees the same opts, partitioner
+    // and program instance.
+    let hot_threshold = match opts.hot_degree_threshold {
+        Some(t) if part.num_workers() > 1 && program.supports_hot_split() => Some(t),
+        _ => None,
+    };
     let mut values: Vec<P::Value> = my_vertices
         .iter()
         .map(|&v| program.init_value(v))
@@ -460,19 +621,29 @@ fn worker_loop<P: VertexProgram>(
 
         // ---- compute phase ----
         let mut counters = LocalCounters::default();
+        let t_compute = Instant::now();
         for (li, &vid) in my_vertices.iter().enumerate() {
             let msgs = &mut vertex_msgs[li];
             let active = !halted[li] || !msgs.is_empty();
             if !active {
                 continue;
             }
+            if let Some(threshold) = hot_threshold {
+                if msgs.len() >= HOT_MIN_SPLIT_MSGS && graph.degree(vid) >= threshold as usize
+                {
+                    offload_hot_messages::<P>(program, me, vid, msgs, part.num_workers(), shared);
+                }
+            }
             halted[li] = false;
             counters.active += 1;
+            counters.msgs_handled += msgs.len() as u64;
             let mut ctx = Ctx::<P> {
                 superstep,
                 graph,
                 part,
                 me,
+                executor: me,
+                hot_chunk: false,
                 cur_vid: vid,
                 halt: false,
                 out: &mut out,
@@ -483,6 +654,40 @@ fn worker_loop<P: VertexProgram>(
             msgs.clear(); // compute may only iterate; keep capacity for reuse
             halted[li] = ctx.halt;
         }
+        let mut compute_nanos = t_compute.elapsed().as_nanos() as u64;
+
+        // ---- hot-vertex work stealing ----
+        if hot_threshold.is_some() {
+            // Barrier: every worker has finished enqueueing before anyone
+            // steals, so the queue length only decreases from here on.
+            shared.barrier.wait();
+            let t_steal = Instant::now();
+            loop {
+                let task = shared.hot_queue.lock().unwrap().pop();
+                let Some(mut task) = task else { break };
+                counters.msgs_handled += task.msgs.len() as u64;
+                // Ephemeral value; `me` impersonates the owner so every
+                // partition-relative decision matches owner-side compute.
+                let mut value = P::Value::default();
+                let mut ctx = Ctx::<P> {
+                    superstep,
+                    graph,
+                    part,
+                    me: task.owner,
+                    executor: me,
+                    hot_chunk: true,
+                    cur_vid: task.vid,
+                    halt: false,
+                    out: &mut out,
+                    counters: &mut counters,
+                    cache: &mut cache,
+                };
+                program.compute(&mut ctx, task.vid, &mut value, &mut task.msgs);
+            }
+            compute_nanos += t_steal.elapsed().as_nanos() as u64;
+        }
+        shared.worker_compute_nanos[me].store(compute_nanos, Ordering::Relaxed);
+        shared.worker_msgs[me].store(counters.msgs_handled, Ordering::Relaxed);
 
         // ---- flush outgoing messages into destination inboxes ----
         for (dst_worker, buf) in out.iter_mut().enumerate() {
@@ -529,6 +734,17 @@ fn worker_loop<P: VertexProgram>(
                 msg_mem_bytes: msg_mem,
                 cache_bytes: cache_total,
                 wall_secs: step_start.elapsed().as_secs_f64(),
+                worker_compute_secs: shared
+                    .worker_compute_nanos
+                    .iter()
+                    .map(|c| c.load(Ordering::Relaxed) as f64 * 1e-9)
+                    .collect(),
+                worker_msgs_handled: shared
+                    .worker_msgs
+                    .iter()
+                    .map(|c| c.load(Ordering::Relaxed))
+                    .collect(),
+                hot_split_tasks: shared.hot_tasks.load(Ordering::Relaxed),
             };
             let total_msgs = sm.msgs_local + sm.msgs_remote;
             let not_halted = shared.not_halted.load(Ordering::Relaxed);
@@ -565,6 +781,7 @@ fn worker_loop<P: VertexProgram>(
             shared.not_halted.store(0, Ordering::Relaxed);
             shared.cache_bytes.store(0, Ordering::Relaxed);
             shared.value_bytes.store(0, Ordering::Relaxed);
+            shared.hot_tasks.store(0, Ordering::Relaxed);
         }
         // Second barrier: everyone observes the leader's decision.
         shared.barrier.wait();
@@ -688,10 +905,12 @@ mod tests {
             for part in [
                 Partitioner::hash(workers),
                 Partitioner::range(workers, g.num_vertices()),
+                Partitioner::degree_aware(workers, &g),
             ] {
+                let scheme = part.scheme_name();
                 let eng = Engine::new(&g, part, SumIds { rounds: 3 }, EngineOpts::default());
                 let out = eng.run().unwrap();
-                assert_eq!(out.values, expect, "workers={workers} part={part:?}");
+                assert_eq!(out.values, expect, "workers={workers} part={scheme}");
             }
         }
     }
@@ -885,6 +1104,157 @@ mod tests {
         );
         let out = eng.run().unwrap();
         assert_eq!(out.values[0], 1);
+    }
+
+    /// Star hub load generator: every leaf sends `PINGS` pings to the hub
+    /// (vertex 0) at superstep 0; the hub answers one pong per ping; the
+    /// leaves count pongs. Ping handling needs no persistent value, so it
+    /// is declared splittable; pong counting mutates the leaf's value and
+    /// is not.
+    const PINGS: u32 = 8;
+
+    enum PingMsg {
+        Ping(VertexId),
+        Pong,
+    }
+    impl Message for PingMsg {
+        fn wire_bytes(&self) -> u64 {
+            8
+        }
+    }
+
+    struct PingHub;
+    impl VertexProgram for PingHub {
+        type Value = u64;
+        type Msg = PingMsg;
+
+        fn compute(
+            &self,
+            ctx: &mut Ctx<'_, Self>,
+            vid: VertexId,
+            value: &mut u64,
+            msgs: &mut Vec<PingMsg>,
+        ) {
+            if ctx.superstep() == 0 {
+                if vid != 0 {
+                    for _ in 0..PINGS {
+                        ctx.send(0, PingMsg::Ping(vid));
+                    }
+                }
+            } else {
+                for m in msgs.iter() {
+                    match m {
+                        PingMsg::Ping(src) => ctx.send(*src, PingMsg::Pong),
+                        PingMsg::Pong => *value += 1,
+                    }
+                }
+            }
+            ctx.vote_to_halt();
+        }
+
+        fn supports_hot_split(&self) -> bool {
+            true
+        }
+
+        fn splittable(&self, msg: &PingMsg) -> bool {
+            matches!(msg, PingMsg::Ping(_))
+        }
+    }
+
+    fn star_graph(leaves: usize) -> crate::graph::Graph {
+        let mut b = GraphBuilder::new_undirected(leaves + 1);
+        for v in 1..=leaves {
+            b.add_edge(0, v as u32, 1.0);
+        }
+        b.build()
+    }
+
+    #[test]
+    fn hot_split_shards_hub_messages_and_preserves_results() {
+        let g = star_graph(63);
+        let run = |part: Partitioner, hot: Option<u32>| {
+            Engine::new(
+                &g,
+                part,
+                PingHub,
+                EngineOpts {
+                    hot_degree_threshold: hot,
+                    ..Default::default()
+                },
+            )
+            .run()
+            .unwrap()
+        };
+        let expect: Vec<u64> = (0..64u64).map(|v| if v == 0 { 0 } else { PINGS as u64 }).collect();
+
+        let plain = run(Partitioner::hash(4), None);
+        assert_eq!(plain.values, expect);
+        assert_eq!(plain.metrics.total_hot_tasks(), 0);
+
+        for part in [
+            Partitioner::hash(4),
+            Partitioner::range(4, g.num_vertices()),
+            Partitioner::degree_aware(4, &g),
+        ] {
+            let hot = run(part, Some(32));
+            assert_eq!(hot.values, expect, "hot split changed results");
+            // 63 leaves * 8 pings = 504 splittable messages at the hub.
+            assert!(
+                hot.metrics.total_hot_tasks() >= 2,
+                "hub messages were not sharded: {} tasks",
+                hot.metrics.total_hot_tasks()
+            );
+        }
+    }
+
+    #[test]
+    fn hot_split_disabled_on_single_worker() {
+        let g = star_graph(63);
+        let out = Engine::new(
+            &g,
+            Partitioner::hash(1),
+            PingHub,
+            EngineOpts {
+                hot_degree_threshold: Some(1),
+                ..Default::default()
+            },
+        )
+        .run()
+        .unwrap();
+        assert_eq!(out.metrics.total_hot_tasks(), 0);
+        assert_eq!(out.values[1], PINGS as u64);
+    }
+
+    #[test]
+    fn per_worker_metrics_account_all_messages() {
+        let g = star_graph(63);
+        let out = Engine::new(
+            &g,
+            Partitioner::hash(4),
+            PingHub,
+            EngineOpts {
+                hot_degree_threshold: Some(32),
+                ..Default::default()
+            },
+        )
+        .run()
+        .unwrap();
+        for s in &out.metrics.supersteps {
+            assert_eq!(s.worker_compute_secs.len(), 4);
+            assert_eq!(s.worker_msgs_handled.len(), 4);
+            assert!(s.imbalance_ratio() >= 1.0 - 1e-9);
+        }
+        // Every delivered message is handled by exactly one worker:
+        // 504 pings (superstep 1) + 504 pongs (superstep 2).
+        let handled: u64 = out
+            .metrics
+            .supersteps
+            .iter()
+            .map(|s| s.worker_msgs_handled.iter().sum::<u64>())
+            .sum();
+        assert_eq!(handled, 1008);
+        assert!(out.metrics.aggregate_imbalance_ratio() >= 1.0 - 1e-9);
+        assert!(out.metrics.critical_path_secs() >= 0.0);
     }
 
     #[test]

@@ -4,6 +4,14 @@
 //! split local/remote (a local message never crosses the simulated network,
 //! the distinction FN-Local exploits), cache residency (FN-Cache), and the
 //! logical memory series plotted in Figures 4 and 14.
+//!
+//! Load-balance metrics: a BSP superstep is as slow as its slowest worker,
+//! so besides totals each superstep records the per-worker compute time and
+//! message throughput. The max/mean ratio of per-worker compute time is the
+//! *imbalance ratio* — 1.0 is a perfectly balanced step; a ratio of `W`
+//! means one worker did everything while `W−1` idled at the barrier. The
+//! partitioning ablation (EXPERIMENTS.md §Partitioning) and the
+//! `walk_engines` bench report these.
 
 /// Metrics for one superstep, recorded by the master after the barrier.
 #[derive(Clone, Debug, Default)]
@@ -23,6 +31,33 @@ pub struct SuperstepMetrics {
     /// Bytes resident in per-worker adjacency caches (FN-Cache).
     pub cache_bytes: u64,
     pub wall_secs: f64,
+    /// Compute-phase wall time per worker (indexed by worker id),
+    /// including stolen hot-vertex chunks the worker executed.
+    pub worker_compute_secs: Vec<f64>,
+    /// Messages processed per worker; a stolen hot-vertex chunk counts
+    /// for the worker that executed it, not the vertex's owner.
+    pub worker_msgs_handled: Vec<u64>,
+    /// Hot-vertex message chunks pushed to the shared work-stealing queue
+    /// this superstep (0 when splitting is disabled or never triggered).
+    pub hot_split_tasks: u64,
+}
+
+impl SuperstepMetrics {
+    /// Max/mean ratio of per-worker compute time: 1.0 = perfectly
+    /// balanced. Returns 1.0 when per-worker times are missing or zero.
+    pub fn imbalance_ratio(&self) -> f64 {
+        let w = self.worker_compute_secs.len();
+        if w == 0 {
+            return 1.0;
+        }
+        let max = self.worker_compute_secs.iter().cloned().fold(0.0, f64::max);
+        let mean = self.worker_compute_secs.iter().sum::<f64>() / w as f64;
+        if mean > 0.0 {
+            max / mean
+        } else {
+            1.0
+        }
+    }
 }
 
 /// Whole-run metrics.
@@ -64,6 +99,51 @@ impl EngineMetrics {
     pub fn num_supersteps(&self) -> u32 {
         self.supersteps.len() as u32
     }
+
+    /// Total hot-vertex chunks sharded over the run.
+    pub fn total_hot_tasks(&self) -> u64 {
+        self.supersteps.iter().map(|s| s.hot_split_tasks).sum()
+    }
+
+    /// Sum over supersteps of the *slowest* worker's compute time — the
+    /// actual compute critical path a BSP run pays (each barrier waits for
+    /// the straggler).
+    pub fn critical_path_secs(&self) -> f64 {
+        self.supersteps
+            .iter()
+            .map(|s| s.worker_compute_secs.iter().cloned().fold(0.0, f64::max))
+            .sum()
+    }
+
+    /// Whole-run imbalance: Σ_s max_w(compute) / Σ_s mean_w(compute).
+    /// This weights each superstep by its actual compute so tiny start-up
+    /// and drain steps don't swamp the signal; 1.0 = perfectly balanced,
+    /// and the value is exactly "critical path / ideal balanced time".
+    pub fn aggregate_imbalance_ratio(&self) -> f64 {
+        let mut sum_max = 0.0f64;
+        let mut sum_mean = 0.0f64;
+        for s in &self.supersteps {
+            let w = s.worker_compute_secs.len();
+            if w == 0 {
+                continue;
+            }
+            sum_max += s.worker_compute_secs.iter().cloned().fold(0.0, f64::max);
+            sum_mean += s.worker_compute_secs.iter().sum::<f64>() / w as f64;
+        }
+        if sum_mean > 0.0 {
+            sum_max / sum_mean
+        } else {
+            1.0
+        }
+    }
+
+    /// Worst single-superstep imbalance ratio over the run.
+    pub fn worst_imbalance_ratio(&self) -> f64 {
+        self.supersteps
+            .iter()
+            .map(|s| s.imbalance_ratio())
+            .fold(1.0, f64::max)
+    }
 }
 
 #[cfg(test)]
@@ -102,5 +182,47 @@ mod tests {
         assert_eq!(m.total_local_bytes(), 15);
         assert_eq!(m.peak_msg_bytes(), 30);
         assert_eq!(m.num_supersteps(), 2);
+        assert_eq!(m.total_hot_tasks(), 0);
+    }
+
+    #[test]
+    fn imbalance_ratio_closed_form() {
+        let s = SuperstepMetrics {
+            worker_compute_secs: vec![3.0, 1.0, 1.0, 1.0],
+            ..Default::default()
+        };
+        // max 3.0 / mean 1.5 = 2.0
+        assert!((s.imbalance_ratio() - 2.0).abs() < 1e-12);
+
+        let empty = SuperstepMetrics::default();
+        assert_eq!(empty.imbalance_ratio(), 1.0);
+        let idle = SuperstepMetrics {
+            worker_compute_secs: vec![0.0, 0.0],
+            ..Default::default()
+        };
+        assert_eq!(idle.imbalance_ratio(), 1.0);
+    }
+
+    #[test]
+    fn aggregate_imbalance_weights_by_compute() {
+        let m = EngineMetrics {
+            supersteps: vec![
+                // Heavy, imbalanced step: max 4, mean 1.
+                SuperstepMetrics {
+                    worker_compute_secs: vec![4.0, 0.0, 0.0, 0.0],
+                    ..Default::default()
+                },
+                // Light, balanced step: max 0.1, mean 0.1.
+                SuperstepMetrics {
+                    worker_compute_secs: vec![0.1, 0.1, 0.1, 0.1],
+                    ..Default::default()
+                },
+            ],
+            ..Default::default()
+        };
+        // (4 + 0.1) / (1 + 0.1) ≈ 3.727 — dominated by the heavy step.
+        assert!((m.aggregate_imbalance_ratio() - 4.1 / 1.1).abs() < 1e-9);
+        assert!((m.worst_imbalance_ratio() - 4.0).abs() < 1e-9);
+        assert!((m.critical_path_secs() - 4.1).abs() < 1e-9);
     }
 }

@@ -83,6 +83,22 @@ impl Args {
         }
     }
 
+    /// Typed fetch of an *optional* flag: `Ok(None)` when absent (for
+    /// knobs like `--hot-threshold` whose absence means "disabled" rather
+    /// than a default value).
+    pub fn get_opt_parsed<T: std::str::FromStr>(
+        &self,
+        name: &str,
+    ) -> Result<Option<T>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("could not parse --{name}={s}")),
+        }
+    }
+
     /// Fetch an option restricted to an accepted set of values (e.g.
     /// `--sampler <linear|reject>`); errors name the flag and the choices.
     pub fn get_choice<'a>(
@@ -152,6 +168,17 @@ mod tests {
         let a = parse(&["run", "--workers", "many"]).unwrap();
         let e = a.get_parsed::<usize>("workers", 1).unwrap_err();
         assert!(e.contains("--workers"), "{e}");
+    }
+
+    #[test]
+    fn optional_flags_parse_or_stay_none() {
+        let a = parse(&["walk", "--hot-threshold", "256"]).unwrap();
+        assert_eq!(a.get_opt_parsed::<u32>("hot-threshold").unwrap(), Some(256));
+        let b = parse(&["walk"]).unwrap();
+        assert_eq!(b.get_opt_parsed::<u32>("hot-threshold").unwrap(), None);
+        let c = parse(&["walk", "--hot-threshold", "lots"]).unwrap();
+        let e = c.get_opt_parsed::<u32>("hot-threshold").unwrap_err();
+        assert!(e.contains("--hot-threshold"), "{e}");
     }
 
     #[test]

@@ -1,0 +1,358 @@
+//! Cross-variant conformance matrix: the determinism invariant, enforced
+//! on every axis we ship.
+//!
+//! All sampling draws from per-`(seed, walk, step)` RNG streams, so the
+//! walks of a run are a pure function of the seed and the graph — never of
+//! *where* a vertex lives or *who* computes a hop. This file pins that
+//! contract across the full matrix:
+//!
+//!   6 `Variant`s × {hash, range, degree} partitioners × worker counts
+//!   {1, 2, 4, 8} × samplers {linear, reject} × hot-vertex splitting
+//!
+//! Exact variants additionally reproduce the single-threaded reference
+//! walker bit-for-bit; FN-Approx and FN-Reject (statistically exact by
+//! design) are pinned by chi-square goodness-of-fit at a degree-1200 hub
+//! under degree-aware partitioning, and must still be bit-identical to
+//! *themselves* across every placement axis.
+//!
+//! CI runs this file with `--test-threads` pinned (each case spawns its
+//! own worker threads; see .github/workflows/ci.yml).
+
+use fastn2v::gen::{skew_graph, GenConfig};
+use fastn2v::graph::partition::PartitionerKind;
+use fastn2v::graph::{Graph, GraphBuilder};
+use fastn2v::node2vec::{
+    reference::reference_walks, run_walks, FnConfig, SamplerKind, Variant, WalkSet,
+};
+use fastn2v::pregel::{EngineError, EngineOpts};
+use fastn2v::util::stats::{chi_square_critical, chi_square_stat};
+
+const WORKER_COUNTS: [usize; 4] = [1, 2, 4, 8];
+
+fn conformance_graph() -> Graph {
+    skew_graph(&GenConfig::new(512, 12, 29), 3.0)
+}
+
+fn assert_walks_valid(g: &Graph, walks: &WalkSet) {
+    assert_eq!(walks.len(), g.num_vertices());
+    for (start, w) in walks.iter().enumerate() {
+        assert_eq!(w[0], start as u32, "walk must start at its start vertex");
+        for pair in w.windows(2) {
+            assert!(g.has_edge(pair[0], pair[1]), "non-edge step {pair:?}");
+        }
+    }
+}
+
+/// The full matrix: for a fixed (variant, sampler) the walks must be
+/// bit-identical across every partitioner and worker count; exact variants
+/// with the linear sampler must equal the reference walker.
+#[test]
+fn matrix_walks_identical_across_partitioners_workers_samplers() {
+    let g = conformance_graph();
+    let base = FnConfig::new(0.5, 2.0, 71)
+        .with_walk_length(8)
+        .with_popular_threshold(24);
+    for variant in Variant::ALL {
+        for sampler in [SamplerKind::Linear, SamplerKind::Reject] {
+            let cfg = base.with_variant(variant).with_sampler(sampler);
+            let mut reference: Option<WalkSet> = None;
+            for kind in PartitionerKind::ALL {
+                for &workers in &WORKER_COUNTS {
+                    let part = kind.build(&g, workers);
+                    let out = run_walks(&g, part, &cfg, EngineOpts::default(), 1)
+                        .expect("conformance run failed");
+                    match &reference {
+                        None => {
+                            assert_walks_valid(&g, &out.walks);
+                            reference = Some(out.walks);
+                        }
+                        Some(r) => assert_eq!(
+                            &out.walks,
+                            r,
+                            "{} sampler={} partitioner={} workers={workers} diverged",
+                            variant.name(),
+                            sampler.name(),
+                            kind.name()
+                        ),
+                    }
+                }
+            }
+            // Exact variants with exact sampling == the reference walker.
+            let exact = matches!(
+                variant,
+                Variant::Base | Variant::Local | Variant::Switch | Variant::Cache
+            );
+            if exact && sampler == SamplerKind::Linear {
+                assert_eq!(
+                    reference.unwrap(),
+                    reference_walks(&g, &cfg),
+                    "{} diverged from the reference walker",
+                    variant.name()
+                );
+            }
+        }
+    }
+}
+
+/// Hot-vertex splitting moves *where* hops are computed, never *what* they
+/// sample: walks with splitting on must be bit-identical to walks with it
+/// off, for every variant and for both placement-sensitive partitioners.
+#[test]
+fn matrix_hot_split_preserves_walks() {
+    let g = conformance_graph();
+    let base = FnConfig::new(2.0, 0.5, 19)
+        .with_walk_length(8)
+        .with_popular_threshold(24);
+    for variant in Variant::ALL {
+        let cfg = base.with_variant(variant);
+        let plain = run_walks(
+            &g,
+            PartitionerKind::Hash.build(&g, 4),
+            &cfg,
+            EngineOpts::default(),
+            1,
+        )
+        .expect("plain run failed");
+        for kind in [PartitionerKind::Hash, PartitionerKind::DegreeAware] {
+            let opts = EngineOpts {
+                hot_degree_threshold: Some(32),
+                ..Default::default()
+            };
+            let out = run_walks(&g, kind.build(&g, 4), &cfg, opts, 1)
+                .expect("hot-split run failed");
+            assert_eq!(
+                out.walks,
+                plain.walks,
+                "{} hot-split under {} changed walks",
+                variant.name(),
+                kind.name()
+            );
+        }
+    }
+}
+
+/// FN-Multi round splitting composes with the new partitioners: any round
+/// count yields the same walks.
+#[test]
+fn matrix_fn_multi_rounds_identical_under_all_partitioners() {
+    let g = conformance_graph();
+    let cfg = FnConfig::new(0.5, 2.0, 43).with_walk_length(6);
+    for kind in PartitionerKind::ALL {
+        let one = run_walks(&g, kind.build(&g, 4), &cfg, EngineOpts::default(), 1)
+            .expect("rounds=1 failed");
+        let four = run_walks(&g, kind.build(&g, 4), &cfg, EngineOpts::default(), 4)
+            .expect("rounds=4 failed");
+        assert_eq!(one.walks, four.walks, "FN-Multi diverged under {}", kind.name());
+    }
+}
+
+/// Star-with-pairs hub graph: hub 0 adjacent to `2 * pairs` leaves, and
+/// leaves (2i+1, 2i+2) adjacent to each other. Every second-order hop at
+/// the hub sees the same three alpha classes regardless of which leaf the
+/// walk came from — {return to pred (alpha=1/p), pred's partner (alpha=1,
+/// the one common neighbor), any other leaf (alpha=1/q)} — which makes the
+/// pooled hub transitions a single multinomial we can chi-square.
+fn hub_graph(pairs: usize) -> Graph {
+    let leaves = 2 * pairs;
+    let mut b = GraphBuilder::new_undirected(leaves + 1);
+    for v in 1..=leaves {
+        b.add_edge(0, v as u32, 1.0);
+    }
+    for i in 0..pairs {
+        b.add_edge((2 * i + 1) as u32, (2 * i + 2) as u32, 1.0);
+    }
+    b.build()
+}
+
+fn partner_of(leaf: u32) -> u32 {
+    if leaf % 2 == 1 {
+        leaf + 1
+    } else {
+        leaf - 1
+    }
+}
+
+/// Chi-square GOF for the rejection sampler at a degree-1200 hub under
+/// degree-aware partitioning (mirrored in
+/// python/tests/test_reject_sampler.py::test_hub_scale_class_distribution).
+#[test]
+fn reject_walks_chi_square_at_hub_under_degree_aware() {
+    let g = hub_graph(600);
+    let hub_degree = g.degree(0);
+    assert!(hub_degree >= 1024, "hub degree {hub_degree} below satellite spec");
+    let (p, q) = (0.5f32, 2.0f32);
+    let cfg = FnConfig::new(p, q, 23)
+        .with_walk_length(16)
+        .with_popular_threshold(256)
+        .with_variant(Variant::Reject);
+    let out = run_walks(
+        &g,
+        PartitionerKind::DegreeAware.build(&g, 8),
+        &cfg,
+        EngineOpts::default(),
+        1,
+    )
+    .expect("hub run failed");
+    assert!(
+        out.stats.reject_proposals > 0,
+        "rejection sampler never ran: {:?}",
+        out.stats
+    );
+
+    // Pool every (pred, hub, next) transition into the three alpha classes.
+    let mut counts = [0u64; 3];
+    for w in &out.walks {
+        for i in 1..w.len().saturating_sub(1) {
+            if w[i] == 0 {
+                let (u, x) = (w[i - 1], w[i + 1]);
+                if x == u {
+                    counts[0] += 1;
+                } else if x == partner_of(u) {
+                    counts[1] += 1;
+                } else {
+                    counts[2] += 1;
+                }
+            }
+        }
+    }
+    let n: u64 = counts.iter().sum();
+    assert!(n > 3000, "too few hub transitions to test: {n}");
+    let d = hub_degree as f64;
+    let masses = [1.0 / p as f64, 1.0, (d - 2.0) / q as f64];
+    let total: f64 = masses.iter().sum();
+    let probs: Vec<f64> = masses.iter().map(|m| m / total).collect();
+    let stat = chi_square_stat(&counts, &probs);
+    let crit = chi_square_critical(2, 4.0); // p ~ 3e-5: deterministic seeds
+    assert!(
+        stat < crit,
+        "hub chi-square {stat:.2} >= {crit:.2}: {counts:?} vs probs {probs:?} (n={n})"
+    );
+}
+
+/// FN-Approx at the hub with p = q = 1: every alpha is 1, the Eq. 2-3
+/// bound gap is 0 < eps, so the approx path samples by static weights —
+/// exactly uniform over the hub's neighbors. Chi-square against uniform
+/// over 8 id-range buckets.
+#[test]
+fn approx_walks_chi_square_uniform_at_hub() {
+    let g = hub_graph(600);
+    let cfg = FnConfig::new(1.0, 1.0, 31)
+        .with_walk_length(16)
+        .with_popular_threshold(256)
+        .with_variant(Variant::Approx);
+    let out = run_walks(
+        &g,
+        PartitionerKind::DegreeAware.build(&g, 8),
+        &cfg,
+        EngineOpts::default(),
+        1,
+    )
+    .expect("approx hub run failed");
+    assert!(
+        out.stats.approx_steps > 0,
+        "approx path never fired: {:?}",
+        out.stats
+    );
+
+    let leaves = g.degree(0) as u64;
+    let mut counts = [0u64; 8];
+    for w in &out.walks {
+        for i in 1..w.len().saturating_sub(1) {
+            if w[i] == 0 {
+                let x = w[i + 1] as u64;
+                counts[((x - 1) * 8 / leaves) as usize] += 1;
+            }
+        }
+    }
+    let n: u64 = counts.iter().sum();
+    assert!(n > 3000, "too few hub transitions to test: {n}");
+    let probs = [1.0 / 8.0; 8];
+    let stat = chi_square_stat(&counts, &probs);
+    let crit = chi_square_critical(7, 4.0);
+    assert!(
+        stat < crit,
+        "uniformity chi-square {stat:.2} >= {crit:.2}: {counts:?} (n={n})"
+    );
+}
+
+/// The hub graph is also where hot-vertex splitting must demonstrably
+/// engage: the hub receives a message per in-flight walk per superstep.
+#[test]
+fn hub_graph_hot_split_engages_and_preserves_walks() {
+    let g = hub_graph(600);
+    let cfg = FnConfig::new(0.5, 2.0, 7)
+        .with_walk_length(10)
+        .with_popular_threshold(256)
+        .with_variant(Variant::Cache);
+    let plain = run_walks(
+        &g,
+        PartitionerKind::DegreeAware.build(&g, 8),
+        &cfg,
+        EngineOpts::default(),
+        1,
+    )
+    .expect("plain hub run failed");
+    assert_eq!(plain.metrics.total_hot_tasks(), 0);
+    let hot = run_walks(
+        &g,
+        PartitionerKind::DegreeAware.build(&g, 8),
+        &cfg,
+        EngineOpts {
+            hot_degree_threshold: Some(1024),
+            ..Default::default()
+        },
+        1,
+    )
+    .expect("hot hub run failed");
+    assert_eq!(hot.walks, plain.walks, "hot split changed hub walks");
+    assert!(
+        hot.metrics.total_hot_tasks() > 0,
+        "hub never sharded despite ~1200 walkers"
+    );
+    assert_eq!(
+        hot.walks,
+        reference_walks(&g, &cfg),
+        "FN-Cache on the hub graph must stay exact"
+    );
+}
+
+/// Regression test for the engine's `memory_budget` abort path
+/// (`EngineError::OutOfMemory`): a skewed RMAT run under a tight budget
+/// must abort cleanly, and FN-Multi (`rounds > 1`) — whose whole point is
+/// dividing peak message memory — must complete under the same budget and
+/// produce the same walks.
+#[test]
+fn memory_budget_aborts_cleanly_and_fn_multi_completes() {
+    let g = skew_graph(&GenConfig::new(1200, 20, 9), 4.0);
+    let cfg = FnConfig::new(0.5, 2.0, 7)
+        .with_walk_length(12)
+        .with_variant(Variant::Base);
+    let part = || PartitionerKind::Hash.build(&g, 4);
+
+    // Probe the deterministic byte accounting to place the budget between
+    // the rounds=8 peak (must fit) and the rounds=1 peak (must not).
+    let full = run_walks(&g, part(), &cfg, EngineOpts::default(), 1).expect("probe failed");
+    let multi = run_walks(&g, part(), &cfg, EngineOpts::default(), 8).expect("probe failed");
+    let (peak1, peak8) = (full.metrics.peak_bytes, multi.metrics.peak_bytes);
+    assert!(
+        peak8 + 4096 < peak1,
+        "FN-Multi did not reduce peak bytes: {peak1} -> {peak8}"
+    );
+    let budget = peak8 + (peak1 - peak8) / 2;
+    let opts = EngineOpts {
+        memory_budget: Some(budget),
+        ..Default::default()
+    };
+
+    match run_walks(&g, part(), &cfg, opts, 1) {
+        Err(EngineError::OutOfMemory { bytes, .. }) => {
+            assert!(bytes > budget, "OOM reported {bytes} <= budget {budget}")
+        }
+        Err(other) => panic!("expected OutOfMemory, got {other}"),
+        Ok(_) => panic!("rounds=1 run must exceed the {budget}-byte budget"),
+    }
+
+    let survived = run_walks(&g, part(), &cfg, opts, 8)
+        .expect("FN-Multi must complete under the same budget");
+    assert_eq!(survived.walks, full.walks, "budgeted FN-Multi changed walks");
+}
