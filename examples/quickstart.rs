@@ -9,9 +9,7 @@
 use fastn2v::embed::TrainConfig;
 use fastn2v::exp::pipeline::embeddings_from_walks;
 use fastn2v::gen::{labeled_community_graph, LabeledConfig};
-use fastn2v::graph::partition::Partitioner;
-use fastn2v::node2vec::{run_walks, FnConfig, Variant};
-use fastn2v::pregel::EngineOpts;
+use fastn2v::node2vec::{FnConfig, SeedSet, Variant, WalkRequest, WalkSession};
 
 fn main() -> fastn2v::util::error::Result<()> {
     // 1. A 600-vertex graph with 6 planted communities.
@@ -22,23 +20,31 @@ fn main() -> fastn2v::util::error::Result<()> {
         stats.num_vertices, stats.num_edges, stats.max_degree
     );
 
-    // 2. Node2Vec walks with the FN-Cache variant on 4 workers.
+    // 2. A walk session: FN-Cache variant, 4 workers. Built once — the
+    //    partition plan and engine scaffolding are reused by every query.
     let cfg = FnConfig::new(0.5, 2.0, 7)
         .with_walk_length(40)
         .with_variant(Variant::Cache)
         .with_popular_threshold(64);
-    let out = run_walks(
-        &lg.graph,
-        Partitioner::hash(4),
-        &cfg,
-        EngineOpts::default(),
-        1,
-    )?;
+    let session = WalkSession::builder(lg.graph.clone(), cfg)
+        .workers(4)
+        .build();
+    let out = session.collect(&WalkRequest::all())?;
     println!(
         "walks: {} supersteps, {} messages, peak msg mem {}",
         out.metrics.num_supersteps(),
         out.metrics.total_messages(),
         fastn2v::util::fmt_bytes(out.metrics.peak_msg_bytes()),
+    );
+
+    // The same session serves targeted queries — e.g. fresh walks for a
+    // handful of "query" vertices, without touching the other 595.
+    let batch = session.collect(
+        &WalkRequest::all().with_seeds(SeedSet::Explicit(vec![0, 17, 42, 99, 123])),
+    )?;
+    println!(
+        "query batch: {} walks for 5 seed vertices",
+        batch.walks.iter().filter(|w| !w.is_empty()).count()
     );
 
     // 3. SGNS embeddings (PJRT runtime if `make artifacts` has run).

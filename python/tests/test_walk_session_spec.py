@@ -1,0 +1,103 @@
+"""Executable spec for the WalkSession scheduling logic.
+
+Mirrors rust/src/node2vec/session.rs + embed::TrainerSink (which cannot be
+compiled in this container — see EXPERIMENTS.md §Environment):
+
+- FN-Multi round membership: the walk for seed `s` runs in round
+  `s % rounds`; every seed runs in exactly one round.
+- TrainerSink's cumulative step schedule `target_steps_after`: rounds that
+  deliver no walks defer their share to the next non-empty round, so the
+  full step budget runs whenever any later round carries walks.
+- pass-seed derivation: pass 0 is the configured seed verbatim (legacy
+  bit-compat); later passes are distinct.
+
+Keep the constants in sync with the Rust: the pass-seed mix constant is
+0x9E3779B97F4A7C15 and the schedule is floor(steps * (round+1) / rounds).
+"""
+
+import itertools
+
+MASK64 = (1 << 64) - 1
+PASS_MIX = 0x9E37_79B9_7F4A_7C15
+
+
+def pass_seed(seed: int, pass_: int) -> int:
+    # Mirrors session.rs::pass_seed.
+    if pass_ == 0:
+        return seed
+    return seed ^ ((pass_ * PASS_MIX) & MASK64)
+
+
+def target_steps_after(steps: int, rounds: int, round_: int) -> int:
+    # Mirrors embed::TrainerSink::target_steps_after.
+    r = min(round_ + 1, rounds)
+    return steps * r // rounds
+
+
+def simulate_trainer(steps: int, rounds: int, nonempty: list[bool]) -> list[int]:
+    """Steps run per on_round_end, per the TrainerSink bookkeeping."""
+    global_step = 0
+    ran = []
+    for round_, has_walks in enumerate(nonempty):
+        if not has_walks or global_step >= steps:
+            ran.append(0)
+            continue
+        share = max(target_steps_after(steps, rounds, round_) - global_step, 0)
+        global_step += share
+        ran.append(share)
+    return ran
+
+
+def test_round_membership_partitions_seeds():
+    for n, rounds in [(1, 1), (7, 1), (512, 4), (100, 7), (5, 8)]:
+        per_round = [[s for s in range(n) if s % rounds == r] for r in range(rounds)]
+        flat = sorted(itertools.chain.from_iterable(per_round))
+        assert flat == list(range(n)), (n, rounds)
+        # Round sizes differ by at most one (balanced memory split).
+        sizes = [len(p) for p in per_round]
+        assert max(sizes) - min(sizes) <= 1
+
+
+def test_step_schedule_is_monotone_and_exact():
+    for steps, rounds in [(300, 3), (240, 3), (100, 7), (5, 8), (0, 4), (1, 1)]:
+        targets = [target_steps_after(steps, rounds, r) for r in range(rounds)]
+        assert targets == sorted(targets)
+        assert targets[-1] == steps
+        shares = [b - a for a, b in zip([0] + targets, targets)]
+        assert sum(shares) == steps
+        # Fair split: per-round shares differ by at most one.
+        assert max(shares) - min(shares) <= 1
+
+
+def test_empty_rounds_defer_steps_instead_of_dropping_them():
+    # The code-review regression: seeds clustered into one round must not
+    # silently lose the other rounds' training budget.
+    for steps, rounds in [(300, 4), (90, 3), (101, 7)]:
+        for pattern in itertools.product([False, True], repeat=rounds):
+            ran = simulate_trainer(steps, rounds, list(pattern))
+            if not any(pattern):
+                assert sum(ran) == 0
+                continue
+            last = max(i for i, p in enumerate(pattern) if p)
+            # Everything scheduled up to the last non-empty round runs.
+            assert sum(ran) == target_steps_after(steps, rounds, last)
+            if last == rounds - 1:
+                assert sum(ran) == steps, (steps, rounds, pattern)
+
+
+def test_late_delivery_drains_remaining_budget():
+    # A second pass delivering walks for an already-finished round index
+    # still drains the rest (round index clamps to the final share).
+    steps, rounds = 90, 3
+    ran = simulate_trainer(steps, rounds, [False, True])
+    assert ran == [0, 60]
+    # A later on_round_end(2) with walks runs the remaining 30.
+    remaining = max(target_steps_after(steps, rounds, 2) - sum(ran), 0)
+    assert remaining == 30
+
+
+def test_pass_seeds_distinct_and_legacy_compatible():
+    for seed in [0, 42, MASK64]:
+        assert pass_seed(seed, 0) == seed  # bit-compat with run_walks
+        seen = {pass_seed(seed, p) for p in range(16)}
+        assert len(seen) == 16, "pass seeds must not collide"

@@ -12,7 +12,9 @@
 //! unless FASTN2V_BENCH_OUT is set.)
 
 use fastn2v::exp::common::{popular_threshold, run_fn_with_cfg, run_solution, Solution};
-use fastn2v::exp::pipeline::{partition_ablation, PartitionAblationRow};
+use fastn2v::exp::pipeline::{
+    partition_ablation, session_amortization, PartitionAblationRow, SessionAmortization,
+};
 use fastn2v::gen::{skew_graph, GenConfig};
 use fastn2v::node2vec::{FnConfig, SamplerKind, Variant};
 use fastn2v::util::benchkit::print_table;
@@ -39,7 +41,7 @@ fn main() {
     };
     // R-MAT Skew-4: heavy-tailed degrees well past `popular_threshold`, the
     // regime where per-hop cost at popular vertices dominates wall time.
-    let g = skew_graph(&GenConfig::new(n, deg, 11), 4.0);
+    let g = std::sync::Arc::new(skew_graph(&GenConfig::new(n, deg, 11), 4.0));
     let stats = g.stats();
     println!(
         "graph: |V|={} |E|={} max deg {} | walk length {walk_len}",
@@ -146,6 +148,25 @@ fn main() {
         println!("\nimbalance-ratio reduction, degree+hot vs hash: {r:.2}x");
     }
 
+    // ---- session amortization: prepared WalkSession vs rebuild/query ----
+    // N short seed-slice queries, the serving pattern the session API
+    // exists for (EXPERIMENTS.md §API): the rebuild path pays the
+    // partition plan + worker-list derivation on every query.
+    let queries = if quick { 10 } else { 100 };
+    let amort_cfg = FnConfig::new(0.5, 2.0, 3)
+        .with_walk_length(walk_len.min(10))
+        .with_popular_threshold(popular_threshold(&g))
+        .with_variant(Variant::Cache);
+    let amort = session_amortization(&g, ABLATION_WORKERS, &amort_cfg, queries, 64);
+    println!(
+        "\nsession amortization ({} queries x {} seeds): reuse {} vs rebuild {} ({:.2}x)",
+        amort.queries,
+        amort.seeds_per_query,
+        fastn2v::util::fmt_secs(amort.reuse_secs),
+        fastn2v::util::fmt_secs(amort.rebuild_secs),
+        amort.speedup()
+    );
+
     let secs_of = |name: &str| rows.iter().find(|r| r.name == name).and_then(|r| r.secs);
     let speedup = |a: Option<f64>, b: Option<f64>| match (a, b) {
         (Some(a), Some(b)) if b > 0.0 => Some(a / b),
@@ -176,6 +197,7 @@ fn main() {
         hot_threshold,
         &ablation,
         ratio_reduction,
+        &amort,
     );
     match std::fs::write(&out_path, &json) {
         Ok(()) => println!("baseline written to {out_path}"),
@@ -196,6 +218,7 @@ fn render_json(
     hot_threshold: u32,
     ablation: &[PartitionAblationRow],
     ratio_reduction: Option<f64>,
+    amort: &SessionAmortization,
 ) -> String {
     let stats = g.stats();
     let fmt_opt = |o: Option<f64>| o.map(|v| format!("{v:.3}")).unwrap_or_else(|| "null".into());
@@ -250,8 +273,16 @@ fn render_json(
         fmt_opt(reject_vs_base)
     ));
     s.push_str(&format!(
-        "  \"speedup_reject_vs_linear_same_messaging\": {}\n",
+        "  \"speedup_reject_vs_linear_same_messaging\": {},\n",
         fmt_opt(reject_vs_cache)
+    ));
+    s.push_str(&format!(
+        "  \"session_amortization\": {{\"queries\": {}, \"seeds_per_query\": {}, \"reuse_secs\": {:.6}, \"rebuild_secs\": {:.6}, \"speedup\": {:.3}}}\n",
+        amort.queries,
+        amort.seeds_per_query,
+        amort.reuse_secs,
+        amort.rebuild_secs,
+        amort.speedup()
     ));
     s.push_str("}\n");
     s

@@ -12,11 +12,20 @@
 //!   a window offset in `[-window, window] \ {0}`;
 //! - negatives are drawn from the unigram(walk visit counts)^0.75 table;
 //! - the learning rate decays linearly.
+//!
+//! Two ways in:
+//! - **staged** — [`train`] / [`RustSgns::train`] over a complete
+//!   [`Corpus`] (walks fully materialized first);
+//! - **pipelined** — [`TrainerSink`] plugs into the walk engine's
+//!   [`WalkSink`](crate::node2vec::WalkSink) interface and trains on each
+//!   FN-Multi round's walks as the round completes, so SGNS no longer
+//!   waits for the last walk and at most one round of walks is resident.
 
-use crate::node2vec::WalkSet;
-use crate::util::error::Result;
+use crate::graph::VertexId;
+use crate::node2vec::{RoundStats, WalkSet, WalkSink};
 use crate::runtime::SgnsRuntime;
 use crate::util::alias::AliasTable;
+use crate::util::error::Result;
 use crate::util::rng::{stream, Xoshiro256pp};
 
 /// Trainer configuration.
@@ -264,6 +273,207 @@ impl RustSgns {
     }
 }
 
+/// The SGD surface shared by the two training backends, so the pipelined
+/// sink path ([`TrainerSink`]) is backend-agnostic: the pure-Rust oracle
+/// and the PJRT runtime both take one (centers, positives, negatives, lr)
+/// batch per call and report the mean batch loss.
+pub trait SgnsBackend {
+    fn sgd_step(
+        &mut self,
+        centers: &[i32],
+        positives: &[i32],
+        negatives: &[i32],
+        lr: f32,
+    ) -> Result<f32>;
+
+    fn final_embeddings(&self) -> Result<Vec<Vec<f32>>>;
+}
+
+impl SgnsBackend for RustSgns {
+    fn sgd_step(
+        &mut self,
+        centers: &[i32],
+        positives: &[i32],
+        negatives: &[i32],
+        lr: f32,
+    ) -> Result<f32> {
+        Ok(self.step(centers, positives, negatives, lr))
+    }
+
+    fn final_embeddings(&self) -> Result<Vec<Vec<f32>>> {
+        Ok(self.embeddings())
+    }
+}
+
+impl SgnsBackend for SgnsRuntime {
+    fn sgd_step(
+        &mut self,
+        centers: &[i32],
+        positives: &[i32],
+        negatives: &[i32],
+        lr: f32,
+    ) -> Result<f32> {
+        self.step(centers, positives, negatives, lr)
+    }
+
+    fn final_embeddings(&self) -> Result<Vec<Vec<f32>>> {
+        self.embeddings()
+    }
+}
+
+/// [`WalkSink`] that pipelines walk rounds straight into SGNS training:
+/// each completed FN-Multi round becomes a [`Corpus`] and is trained up to
+/// its cumulative share of [`TrainConfig::steps`]
+/// (`floor(steps·(round+1)/rounds)`) while the next round's walks are
+/// still being computed — embedding no longer waits for the last walk, and
+/// only one round of walks is ever resident here. A round that delivers no
+/// trainable walks (e.g. a seed-scoped query whose seeds all land in other
+/// rounds) defers its steps to the next non-empty round, so the full step
+/// budget runs as long as *any* round carries walks.
+///
+/// Determinism: batches draw from one RNG stream that persists across
+/// rounds, and the learning rate decays over the *global* step count, so
+/// the loss trajectory is a pure function of (walks, `TrainConfig`, round
+/// grouping) — feeding the same walks in the same round order staged or
+/// pipelined produces bit-identical curves (pinned in
+/// `tests/session.rs`).
+///
+/// Backend errors (PJRT only; the Rust oracle is infallible) are deferred
+/// and surfaced by [`TrainerSink::finish`].
+pub struct TrainerSink<B: SgnsBackend> {
+    backend: B,
+    cfg: TrainConfig,
+    batch: usize,
+    negatives: usize,
+    rounds: u32,
+    num_vertices: usize,
+    /// Walks of the in-flight round; freed after the round trains.
+    round_walks: Vec<Vec<u32>>,
+    rng: Xoshiro256pp,
+    global_step: u32,
+    curve: Vec<LossPoint>,
+    error: Option<crate::util::error::Error>,
+}
+
+impl<B: SgnsBackend> TrainerSink<B> {
+    /// `rounds` must match the walk request's round count — it fixes the
+    /// per-round training schedule up front.
+    pub fn new(
+        backend: B,
+        num_vertices: usize,
+        cfg: TrainConfig,
+        batch: usize,
+        negatives: usize,
+        rounds: u32,
+    ) -> TrainerSink<B> {
+        assert!(rounds >= 1 && batch > 0 && negatives > 0);
+        TrainerSink {
+            backend,
+            cfg,
+            batch,
+            negatives,
+            rounds,
+            num_vertices,
+            round_walks: Vec::new(),
+            // Distinct stream index from the staged trainer's batch RNG:
+            // the pipelined schedule is its own reproducible trajectory.
+            rng: stream(cfg.seed, 0xBA7C, 1, 0),
+            global_step: 0,
+            curve: Vec::new(),
+            error: None,
+        }
+    }
+
+    /// Steps that should have run once `round` finishes: a cumulative
+    /// schedule, so rounds that couldn't train (no walks) roll their share
+    /// forward instead of silently dropping it.
+    fn target_steps_after(&self, round: u32) -> u32 {
+        let r = u64::from((round + 1).min(self.rounds));
+        (u64::from(self.cfg.steps) * r / u64::from(self.rounds)) as u32
+    }
+
+    pub fn loss_curve(&self) -> &[LossPoint] {
+        &self.curve
+    }
+
+    pub fn steps_run(&self) -> u32 {
+        self.global_step
+    }
+
+    pub fn backend(&self) -> &B {
+        &self.backend
+    }
+
+    /// Surface any deferred backend error; on success hand back the
+    /// trained backend and the loss curve.
+    pub fn finish(self) -> Result<(B, Vec<LossPoint>)> {
+        match self.error {
+            Some(e) => Err(e),
+            None => Ok((self.backend, self.curve)),
+        }
+    }
+}
+
+impl<B: SgnsBackend> WalkSink for TrainerSink<B> {
+    fn on_walk(&mut self, _seed: VertexId, _round: u32, walk: &[VertexId]) {
+        // A pair needs two positions; shorter walks carry no signal.
+        if walk.len() >= 2 {
+            self.round_walks.push(walk.to_vec());
+        }
+    }
+
+    fn on_round_end(&mut self, round: u32, _stats: &RoundStats) {
+        let walks = std::mem::take(&mut self.round_walks);
+        if self.error.is_some() || self.global_step >= self.cfg.steps {
+            return;
+        }
+        if walks.is_empty() {
+            // Nothing to train on; this round's share stays in the
+            // cumulative target and runs with the next non-empty round.
+            return;
+        }
+        let steps = self.target_steps_after(round).saturating_sub(self.global_step);
+        if steps == 0 {
+            return;
+        }
+        let corpus = Corpus::new(&walks, self.num_vertices);
+        let (b, k) = (self.batch, self.negatives);
+        let mut centers = vec![0i32; b];
+        let mut positives = vec![0i32; b];
+        let mut negatives = vec![0i32; b * k];
+        let total = self.cfg.steps.max(1);
+        for _ in 0..steps {
+            let t = self.global_step as f32 / total as f32;
+            let lr = self.cfg.lr_start + (self.cfg.lr_end - self.cfg.lr_start) * t;
+            corpus.fill_batch(
+                &mut self.rng,
+                self.cfg.window,
+                &mut centers,
+                &mut positives,
+                &mut negatives,
+            );
+            match self.backend.sgd_step(&centers, &positives, &negatives, lr) {
+                Ok(loss) => {
+                    if self.cfg.log_every > 0
+                        && (self.global_step % self.cfg.log_every == 0
+                            || self.global_step + 1 == self.cfg.steps)
+                    {
+                        self.curve.push(LossPoint {
+                            step: self.global_step,
+                            loss,
+                        });
+                    }
+                }
+                Err(e) => {
+                    self.error = Some(e);
+                    return;
+                }
+            }
+            self.global_step += 1;
+        }
+    }
+}
+
 #[inline]
 fn softplus(x: f32) -> f32 {
     if x > 20.0 {
@@ -303,15 +513,13 @@ pub fn nearest(embeddings: &[Vec<f32>], v: usize, k: usize) -> Vec<(usize, f32)>
 mod tests {
     use super::*;
     use crate::gen::{labeled_community_graph, LabeledConfig};
-    use crate::graph::partition::Partitioner;
-    use crate::node2vec::{run_walks, FnConfig};
-    use crate::pregel::EngineOpts;
+    use crate::node2vec::{FnConfig, WalkRequest, WalkSession};
 
-    fn tiny_walks() -> (crate::graph::Graph, WalkSet) {
+    fn tiny_walks() -> (std::sync::Arc<crate::graph::Graph>, WalkSet) {
         let lg = labeled_community_graph(&LabeledConfig::tiny(5));
         let cfg = FnConfig::new(1.0, 1.0, 3).with_walk_length(20);
-        let out = run_walks(&lg.graph, Partitioner::hash(4), &cfg, EngineOpts::default(), 1)
-            .unwrap();
+        let session = WalkSession::builder(lg.graph.clone(), cfg).workers(4).build();
+        let out = session.collect(&WalkRequest::all()).unwrap();
         (lg.graph, out.walks)
     }
 
@@ -356,13 +564,81 @@ mod tests {
     }
 
     #[test]
+    fn trainer_sink_trains_per_round_and_is_deterministic() {
+        let (g, walks) = tiny_walks();
+        let n = g.num_vertices();
+        let cfg = TrainConfig {
+            steps: 300,
+            log_every: 50,
+            ..Default::default()
+        };
+        let run = || {
+            let mut sink = TrainerSink::new(RustSgns::new(n, 16, 7), n, cfg, 64, 5, 3);
+            for round in 0..3u32 {
+                for (seed, w) in walks.iter().enumerate() {
+                    if seed as u32 % 3 == round {
+                        sink.on_walk(seed as u32, round, w);
+                    }
+                }
+                sink.on_round_end(round, &RoundStats::default());
+            }
+            assert_eq!(sink.steps_run(), 300);
+            sink.finish().unwrap()
+        };
+        let (m1, c1) = run();
+        let (m2, c2) = run();
+        assert!(!c1.is_empty());
+        assert_eq!(c1.len(), c2.len());
+        for (a, b) in c1.iter().zip(&c2) {
+            assert_eq!(a.step, b.step);
+            assert_eq!(a.loss, b.loss, "pipelined training not deterministic");
+        }
+        assert_eq!(m1.w_in, m2.w_in);
+        let (first, last) = (c1.first().unwrap().loss, c1.last().unwrap().loss);
+        assert!(last < first, "pipelined loss did not decrease: {first} -> {last}");
+    }
+
+    #[test]
+    fn trainer_sink_defers_steps_past_empty_rounds() {
+        // Seed-scoped queries can leave whole rounds without walks; their
+        // step share must roll forward, not vanish.
+        let (g, walks) = tiny_walks();
+        let n = g.num_vertices();
+        let cfg = TrainConfig {
+            steps: 90,
+            log_every: 0,
+            ..Default::default()
+        };
+        let mut sink = TrainerSink::new(RustSgns::new(n, 8, 3), n, cfg, 32, 5, 3);
+        sink.on_round_end(0, &RoundStats::default()); // empty round
+        assert_eq!(sink.steps_run(), 0);
+        for (seed, w) in walks.iter().enumerate() {
+            if seed % 3 == 1 {
+                sink.on_walk(seed as u32, 1, w);
+            }
+        }
+        sink.on_round_end(1, &RoundStats::default());
+        assert_eq!(sink.steps_run(), 60, "round 0's share must defer to round 1");
+        sink.on_round_end(2, &RoundStats::default()); // empty again: 30 deferred...
+        for (seed, w) in walks.iter().enumerate() {
+            if seed % 3 == 2 {
+                sink.on_walk(seed as u32, 2, w);
+            }
+        }
+        // ...but a later delivery (e.g. a second pass) still drains it.
+        sink.on_round_end(2, &RoundStats::default());
+        assert_eq!(sink.steps_run(), cfg.steps, "full budget must run");
+        assert!(sink.finish().is_ok());
+    }
+
+    #[test]
     fn embeddings_capture_communities() {
         // After training, a vertex should be closer to a same-community
         // vertex than to the average other vertex.
         let lg = labeled_community_graph(&LabeledConfig::tiny(9));
         let cfg = FnConfig::new(1.0, 1.0, 3).with_walk_length(20);
-        let out = run_walks(&lg.graph, Partitioner::hash(4), &cfg, EngineOpts::default(), 1)
-            .unwrap();
+        let session = WalkSession::builder(lg.graph.clone(), cfg).workers(4).build();
+        let out = session.collect(&WalkRequest::all()).unwrap();
         let corpus = Corpus::new(&out.walks, lg.graph.num_vertices());
         let mut model = RustSgns::new(lg.graph.num_vertices(), 32, 3);
         let tcfg = TrainConfig {

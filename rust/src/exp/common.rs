@@ -1,10 +1,12 @@
 //! Shared experiment plumbing: named graphs, engine runners, scale modes.
 
+use std::sync::Arc;
+
 use crate::baselines::cnode2vec::{CNode2Vec, CNode2VecError};
 use crate::baselines::spark_sim::{RddError, SparkNode2Vec};
 use crate::gen::{self, GenConfig};
 use crate::graph::Graph;
-use crate::node2vec::{run_walks, FnConfig, Variant, WalkSet};
+use crate::node2vec::{run_query_collect, FnConfig, Variant, WalkRequest, WalkSet};
 use crate::pregel::EngineOpts;
 
 /// The paper's two Node2Vec parameter settings (Figures 6–13).
@@ -69,10 +71,12 @@ impl Budgets {
     pub const CLUSTER: u64 = 15_000_000_000;
 }
 
-/// A named graph with provenance for table printing.
+/// A named graph with provenance for table printing. `Arc`-shared so the
+/// CLI can hand it straight to a [`crate::node2vec::WalkSession`];
+/// `&ng.graph` callers keep working through deref coercion.
 pub struct NamedGraph {
     pub name: String,
-    pub graph: Graph,
+    pub graph: Arc<Graph>,
     /// Paper-side description for the printed tables.
     pub paper_ref: &'static str,
 }
@@ -83,22 +87,22 @@ pub fn build_graph(name: &str, scale: Scale, seed: u64) -> NamedGraph {
     match name {
         "blogcatalog" => NamedGraph {
             name: "BlogCatalog~".into(),
-            graph: gen::realworld::blogcatalog_like(seed).graph,
+            graph: Arc::new(gen::realworld::blogcatalog_like(seed).graph),
             paper_ref: "10.3K/334K, max deg 3854",
         },
         "livejournal" => NamedGraph {
             name: "com-LiveJournal~".into(),
-            graph: gen::realworld::livejournal_like(seed, s(100)).graph,
+            graph: Arc::new(gen::realworld::livejournal_like(seed, s(100)).graph),
             paper_ref: "4.0M/34.7M, max deg 14815",
         },
         "orkut" => NamedGraph {
             name: "com-Orkut~".into(),
-            graph: gen::realworld::orkut_like(seed, s(50)).graph,
+            graph: Arc::new(gen::realworld::orkut_like(seed, s(50)).graph),
             paper_ref: "3.1M/117.2M, max deg 58999",
         },
         "friendster" => NamedGraph {
             name: "com-Friendster~".into(),
-            graph: gen::realworld::friendster_like(seed, s(200)).graph,
+            graph: Arc::new(gen::realworld::friendster_like(seed, s(200)).graph),
             paper_ref: "65.6M/1.8G, max deg 8447",
         },
         _ => {
@@ -106,14 +110,14 @@ pub fn build_graph(name: &str, scale: Scale, seed: u64) -> NamedGraph {
                 let k: u32 = k.parse().expect("er-K");
                 NamedGraph {
                     name: format!("ER-{k}"),
-                    graph: gen::er_graph(&GenConfig::new(1 << k, 10, seed)),
+                    graph: Arc::new(gen::er_graph(&GenConfig::new(1 << k, 10, seed))),
                     paper_ref: "uniform, avg deg 10",
                 }
             } else if let Some(k) = name.strip_prefix("wec-") {
                 let k: u32 = k.parse().expect("wec-K");
                 NamedGraph {
                     name: format!("WeC-{k}"),
-                    graph: gen::wec_graph(&GenConfig::new(1 << k, 100, seed)),
+                    graph: Arc::new(gen::wec_graph(&GenConfig::new(1 << k, 100, seed))),
                     paper_ref: "WeChat-like, avg deg 100",
                 }
             } else if let Some(s_str) = name.strip_prefix("skew-") {
@@ -124,7 +128,7 @@ pub fn build_graph(name: &str, scale: Scale, seed: u64) -> NamedGraph {
                 };
                 NamedGraph {
                     name: format!("Skew-{s_str}"),
-                    graph: gen::skew_graph(&GenConfig::new(1 << k, 100, seed), s_val),
+                    graph: Arc::new(gen::skew_graph(&GenConfig::new(1 << k, 100, seed), s_val)),
                     paper_ref: "2^22 vertices at paper scale",
                 }
             } else {
@@ -248,7 +252,7 @@ pub fn run_fn_with_cfg(graph: &Graph, cfg: &FnConfig, keep_walks: bool) -> RunOu
         ..Default::default()
     };
     let part = cfg.partitioner.build(graph, WORKERS);
-    match run_walks(graph, part, cfg, opts, 1) {
+    match run_query_collect(graph, &part, cfg, opts, &WalkRequest::all()) {
         Err(e) => RunOutcome::Oom(e.to_string()),
         Ok(out) => RunOutcome::Secs(
             t.elapsed().as_secs_f64(),

@@ -7,8 +7,7 @@ use crate::baselines::spark_sim::SparkNode2Vec;
 use crate::classify::F1Scores;
 use crate::embed::TrainConfig;
 use crate::gen::{self, LabeledConfig};
-use crate::graph::partition::Partitioner;
-use crate::node2vec::{run_walks, FnConfig, Variant};
+use crate::node2vec::{FnConfig, Variant, WalkRequest, WalkSession};
 use crate::pregel::EngineOpts;
 use crate::util::benchkit::print_table;
 use crate::util::stats::{EquiWidthHist, Log2Hist};
@@ -122,14 +121,8 @@ fn memory_series(graph_name: &str, scale: Scale, seed: u64) -> MemorySeries {
     let cfg = FnConfig::new(0.5, 2.0, seed)
         .with_walk_length(scale.walk_length())
         .with_popular_threshold(popular_threshold(&ng.graph));
-    let out = run_walks(
-        &ng.graph,
-        Partitioner::hash(WORKERS),
-        &cfg,
-        EngineOpts::default(),
-        1,
-    )
-    .expect("walk run");
+    let session = WalkSession::builder(ng.graph.clone(), cfg).workers(WORKERS).build();
+    let out = session.collect(&WalkRequest::all()).expect("walk run");
     MemorySeries {
         base_bytes: out.metrics.base_bytes,
         per_superstep: out
@@ -166,14 +159,8 @@ pub fn fig4(scale: Scale, seed: u64) -> MemorySeries {
 pub fn fig5(scale: Scale, seed: u64) -> Vec<(u64, f64)> {
     let ng = build_graph("friendster", scale, seed);
     let cfg = FnConfig::new(0.5, 2.0, seed).with_walk_length(scale.walk_length());
-    let out = run_walks(
-        &ng.graph,
-        Partitioner::hash(WORKERS),
-        &cfg,
-        EngineOpts::default(),
-        1,
-    )
-    .expect("walk run");
+    let session = WalkSession::builder(ng.graph.clone(), cfg).workers(WORKERS).build();
+    let out = session.collect(&WalkRequest::all()).expect("walk run");
     let mut visits = vec![0u64; ng.graph.num_vertices()];
     for w in &out.walks {
         for &v in w {
@@ -335,8 +322,11 @@ pub fn fig8(scale: Scale, seed: u64) -> Vec<(String, Vec<String>)> {
                 ..Default::default()
             };
             let t = std::time::Instant::now();
-            let out = run_walks(&ng.graph, Partitioner::hash(WORKERS), &cfg, opts, 1)
-                .expect("walk run");
+            let session = WalkSession::builder(ng.graph.clone(), cfg)
+                .workers(WORKERS)
+                .engine_opts(opts)
+                .build();
+            let out = session.collect(&WalkRequest::all()).expect("walk run");
             let _ = out;
             cells.push(fmt_secs(t.elapsed().as_secs_f64()));
         }

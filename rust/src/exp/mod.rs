@@ -23,9 +23,14 @@ COMMANDS:
     stats --graph <name>                        Table-1 stats for one graph
     walk --graph <name> --variant <base|local|switch|cache|approx|reject>
                  [--sampler <linear|reject>] [--partitioner <hash|range|degree>]
-                 [--hot-threshold <deg>]
-    pipeline --graph blogcatalog                walks -> embeddings -> F1
+                 [--hot-threshold <deg>] [--seeds <spec>] [--rounds <k>]
+                 [--stream-walks <path>]
+    embed --graph <name> [--rounds <k>]         walks pipelined into SGNS
+    pipeline --graph blogcatalog [--rounds <k>] walks -> embeddings -> F1
     help
+
+All three walk-running commands build a WalkSession (one-time partition
+plan + sampler tables) and serve queries from it; see EXPERIMENTS.md §API.
 
 COMMON FLAGS:
     --quick            small scale (tests; default is full scale)
@@ -40,6 +45,15 @@ COMMON FLAGS:
                        see EXPERIMENTS.md §Partitioning)
     --hot-threshold <d> shard compute of vertices with degree >= d across
                        workers within a superstep (off when omitted)
+    --seeds <spec>     which vertices to walk from: `all` (default), a
+                       half-open id range `A..B`, or an explicit list
+                       `3,17,99` — serve walks for query vertices only
+    --rounds <k>       FN-Multi: run the seed population in k rounds,
+                       capping peak message memory (and, with a streaming
+                       sink, resident walks) at ~1/k (default 1)
+    --stream-walks <p> stream each round's walks to file <p> (one line per
+                       walk: `seed<TAB>v0 v1 ...`) instead of collecting
+                       them in memory
 
 GRAPH NAMES:
     blogcatalog, livejournal, orkut, friendster (scaled analogues),
@@ -137,7 +151,11 @@ fn cli_inner(raw: Vec<String>) -> Result<(), String> {
             let hot_threshold: Option<u32> = args.get_opt_parsed("hot-threshold")?;
             let p: f32 = args.get_parsed("p", 0.5)?;
             let q: f32 = args.get_parsed("q", 2.0)?;
+            let workers: usize = args.get_parsed("workers", common::WORKERS)?;
+            let rounds: u32 = args.get_parsed("rounds", 1)?;
+            let seeds = crate::node2vec::SeedSet::parse(args.get_or("seeds", "all"))?;
             let ng = common::build_graph(name, scale, seed);
+            seeds.validate(ng.graph.num_vertices())?;
             let cfg = crate::node2vec::FnConfig::new(p, q, seed)
                 .with_walk_length(scale.walk_length())
                 .with_popular_threshold(common::popular_threshold(&ng.graph))
@@ -145,9 +163,40 @@ fn cli_inner(raw: Vec<String>) -> Result<(), String> {
                 .with_sampler(sampler)
                 .with_partitioner(partitioner)
                 .with_hot_threshold(hot_threshold);
-            let out = common::run_fn_with_cfg(&ng.graph, &cfg, false);
+            let session = crate::node2vec::WalkSession::builder(ng.graph.clone(), cfg)
+                .workers(workers)
+                .engine_opts(crate::pregel::EngineOpts {
+                    memory_budget: Some(common::Budgets::CLUSTER),
+                    ..Default::default()
+                })
+                .build();
+            let num_seeds = seeds.count(ng.graph.num_vertices());
+            let req = crate::node2vec::WalkRequest::all()
+                .with_seeds(seeds)
+                .with_rounds(rounds);
+            let t = std::time::Instant::now();
+            let cell = match args.get("stream-walks") {
+                Some(path) => {
+                    let mut sink = crate::node2vec::StreamingFileSink::create(path)
+                        .map_err(|e| format!("--stream-walks {path}: {e}"))?;
+                    match session.run(&req, &mut sink) {
+                        Err(e) => format!("x ({e})"),
+                        Ok(_) => {
+                            let written = sink.finish().map_err(|e| format!("{path}: {e}"))?;
+                            format!(
+                                "{} ({written} walks -> {path})",
+                                crate::util::fmt_secs(t.elapsed().as_secs_f64())
+                            )
+                        }
+                    }
+                }
+                None => match session.collect(&req) {
+                    Err(e) => format!("x ({e})"),
+                    Ok(_) => crate::util::fmt_secs(t.elapsed().as_secs_f64()),
+                },
+            };
             println!(
-                "{} ({} sampler, {} partitioner{}) on {}: {}",
+                "{} ({} sampler, {} partitioner{}) on {}, {num_seeds} seeds x {rounds} round(s): {cell}",
                 variant.name(),
                 cfg.effective_sampler().name(),
                 partitioner.name(),
@@ -155,48 +204,115 @@ fn cli_inner(raw: Vec<String>) -> Result<(), String> {
                     .map(|t| format!(", hot>={t}"))
                     .unwrap_or_default(),
                 ng.name,
-                out.cell()
+            );
+            Ok(())
+        }
+        "embed" => {
+            let name = args.get("graph").ok_or("embed needs --graph")?;
+            let p: f32 = args.get_parsed("p", 0.5)?;
+            let q: f32 = args.get_parsed("q", 2.0)?;
+            let workers: usize = args.get_parsed("workers", common::WORKERS)?;
+            let rounds: u32 = args.get_parsed("rounds", 4)?;
+            let ng = common::build_graph(name, scale, seed);
+            let n = ng.graph.num_vertices();
+            let cfg = crate::node2vec::FnConfig::new(p, q, seed)
+                .with_walk_length(scale.walk_length())
+                .with_variant(crate::node2vec::Variant::Cache)
+                .with_popular_threshold(common::popular_threshold(&ng.graph));
+            let session = crate::node2vec::WalkSession::builder(ng.graph.clone(), cfg)
+                .workers(workers)
+                .build();
+            let tcfg = crate::embed::TrainConfig {
+                steps: if scale == Scale::Quick { 200 } else { 3000 },
+                seed,
+                ..Default::default()
+            };
+            // Pipelined: each round of walks trains as soon as it lands.
+            let mut sink = crate::embed::TrainerSink::new(
+                crate::embed::RustSgns::new(n, 64, seed),
+                n,
+                tcfg,
+                256,
+                5,
+                rounds,
+            );
+            let t = std::time::Instant::now();
+            let req = crate::node2vec::WalkRequest::all().with_rounds(rounds);
+            session.run(&req, &mut sink).map_err(|e| e.to_string())?;
+            let steps = sink.steps_run();
+            let (_, curve) = sink.finish().map_err(|e| e.to_string())?;
+            println!(
+                "pipelined walks+SGNS on {} ({rounds} rounds, {steps} steps) in {}; loss {:.3} -> {:.3}",
+                ng.name,
+                crate::util::fmt_secs(t.elapsed().as_secs_f64()),
+                curve.first().map(|l| l.loss).unwrap_or(f32::NAN),
+                curve.last().map(|l| l.loss).unwrap_or(f32::NAN),
             );
             Ok(())
         }
         "pipeline" => {
             let frac: f64 = args.get_parsed("train-fraction", 0.5)?;
+            let rounds: u32 = args.get_parsed("rounds", 1)?;
+            let workers: usize = args.get_parsed("workers", common::WORKERS)?;
             let lg = crate::gen::labeled_community_graph(
                 &crate::gen::LabeledConfig::blogcatalog_like(seed),
             );
+            let n = lg.graph.num_vertices();
             let p: f32 = args.get_parsed("p", 0.5)?;
             let q: f32 = args.get_parsed("q", 2.0)?;
             let cfg = crate::node2vec::FnConfig::new(p, q, seed)
                 .with_walk_length(scale.walk_length())
                 .with_variant(crate::node2vec::Variant::Cache)
                 .with_popular_threshold(common::popular_threshold(&lg.graph));
-            let t = std::time::Instant::now();
-            let walks = crate::node2vec::run_walks(
-                &lg.graph,
-                crate::graph::partition::Partitioner::hash(common::WORKERS),
-                &cfg,
-                crate::pregel::EngineOpts::default(),
-                1,
-            )
-            .map_err(|e| e.to_string())?
-            .walks;
-            println!("walks: {}", crate::util::fmt_secs(t.elapsed().as_secs_f64()));
+            let session = crate::node2vec::WalkSession::builder(lg.graph.clone(), cfg)
+                .workers(workers)
+                .build();
             let tcfg = crate::embed::TrainConfig {
                 steps: if scale == Scale::Quick { 200 } else { 3000 },
                 seed,
                 ..Default::default()
             };
-            let emb = pipeline::embeddings_from_walks(&walks, lg.graph.num_vertices(), &tcfg)
-                .map_err(|e| e.to_string())?;
-            println!(
-                "embeddings via {} in {}; loss {:.3} -> {:.3}",
-                emb.backend,
-                crate::util::fmt_secs(emb.train_secs),
-                emb.loss_curve.first().map(|l| l.loss).unwrap_or(f32::NAN),
-                emb.loss_curve.last().map(|l| l.loss).unwrap_or(f32::NAN),
-            );
+            let embeddings = if rounds > 1 {
+                // Pipelined: rounds stream into SGNS as they finish.
+                let mut sink = crate::embed::TrainerSink::new(
+                    crate::embed::RustSgns::new(n, 64, seed),
+                    n,
+                    tcfg,
+                    256,
+                    5,
+                    rounds,
+                );
+                let t = std::time::Instant::now();
+                let req = crate::node2vec::WalkRequest::all().with_rounds(rounds);
+                session.run(&req, &mut sink).map_err(|e| e.to_string())?;
+                let (model, curve) = sink.finish().map_err(|e| e.to_string())?;
+                println!(
+                    "pipelined walks+SGNS ({rounds} rounds) in {}; loss {:.3} -> {:.3}",
+                    crate::util::fmt_secs(t.elapsed().as_secs_f64()),
+                    curve.first().map(|l| l.loss).unwrap_or(f32::NAN),
+                    curve.last().map(|l| l.loss).unwrap_or(f32::NAN),
+                );
+                model.embeddings()
+            } else {
+                let t = std::time::Instant::now();
+                let walks = session
+                    .collect(&crate::node2vec::WalkRequest::all())
+                    .map_err(|e| e.to_string())?
+                    .walks;
+                println!("walks: {}", crate::util::fmt_secs(t.elapsed().as_secs_f64()));
+                let emb = pipeline::embeddings_from_walks(&walks, n, &tcfg)
+                    .map_err(|e| e.to_string())?;
+                println!(
+                    "embeddings via {} in {}; loss {:.3} -> {:.3}",
+                    emb.backend,
+                    crate::util::fmt_secs(emb.train_secs),
+                    emb.loss_curve.first().map(|l| l.loss).unwrap_or(f32::NAN),
+                    emb.loss_curve.last().map(|l| l.loss).unwrap_or(f32::NAN),
+                );
+                emb.embeddings
+            };
             let scores = pipeline::classify_fractions(
-                &emb.embeddings,
+                &embeddings,
                 &lg.labels,
                 lg.num_labels,
                 &[frac],
@@ -312,6 +428,57 @@ mod cli_tests {
             run(&["walk", "--graph", "skew-2", "--partitioner", "random", "--quick"]),
             2
         );
+    }
+
+    #[test]
+    fn walk_seed_set_and_rounds_knobs() {
+        assert_eq!(
+            run(&[
+                "walk", "--graph", "skew-2", "--variant", "cache", "--seeds", "0..64",
+                "--rounds", "2", "--quick",
+            ]),
+            0
+        );
+        assert_eq!(
+            run(&["walk", "--graph", "skew-2", "--seeds", "1,5,9", "--quick"]),
+            0
+        );
+        // Malformed seed specs fail loudly.
+        assert_eq!(
+            run(&["walk", "--graph", "skew-2", "--seeds", "9..1", "--quick"]),
+            2
+        );
+        assert_eq!(
+            run(&["walk", "--graph", "skew-2", "--seeds", "a,b", "--quick"]),
+            2
+        );
+        // In-range validation happens before the engine runs.
+        assert_eq!(
+            run(&["walk", "--graph", "skew-2", "--seeds", "999999999", "--quick"]),
+            2
+        );
+    }
+
+    #[test]
+    fn walk_stream_walks_writes_file() {
+        let path = std::env::temp_dir().join("fastn2v_cli_stream_walks.txt");
+        let path_s = path.to_str().unwrap().to_string();
+        assert_eq!(
+            run(&[
+                "walk", "--graph", "skew-2", "--seeds", "0..32", "--rounds", "2",
+                "--stream-walks", &path_s, "--quick",
+            ]),
+            0
+        );
+        let walks = crate::node2vec::read_walk_file(&path).unwrap();
+        assert_eq!(walks.len(), 32, "one streamed line per seed");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn embed_subcommand_pipelines_quick() {
+        assert_eq!(run(&["embed", "--graph", "skew-2", "--rounds", "2", "--quick"]), 0);
+        assert_eq!(run(&["embed", "--quick"]), 2); // missing --graph
     }
 
     #[test]

@@ -10,7 +10,9 @@ use crate::classify::{evaluate, ClassifyConfig, F1Scores};
 use crate::embed::{train, Corpus, LossPoint, RustSgns, TrainConfig};
 use crate::graph::partition::PartitionerKind;
 use crate::graph::Graph;
-use crate::node2vec::{run_walks, FnConfig, WalkSet};
+use crate::node2vec::{
+    run_query_collect, FnConfig, SeedSet, WalkRequest, WalkSession, WalkSet,
+};
 use crate::pregel::EngineOpts;
 use crate::runtime::SgnsRuntime;
 
@@ -111,10 +113,10 @@ pub fn partition_ablation(
         };
         // Reset the config's own hot knob: engine_opts() would otherwise
         // let a caller-supplied cfg.hot_threshold override this row's
-        // explicit opts. (cfg.partitioner is irrelevant here — run_walks
+        // explicit opts. (cfg.partitioner is irrelevant here — run_query
         // takes the materialized partitioner directly.)
         let cfg = cfg.with_hot_threshold(None);
-        let out = run_walks(graph, part.clone(), &cfg, opts, 1)
+        let out = run_query_collect(graph, &part, &cfg, opts, &WalkRequest::all())
             .expect("ablation run failed");
         match &reference {
             None => reference = Some(out.walks),
@@ -138,6 +140,77 @@ pub fn partition_ablation(
         });
     }
     rows
+}
+
+/// Result of the session-amortization microbench (EXPERIMENTS.md §API).
+#[derive(Clone, Copy, Debug)]
+pub struct SessionAmortization {
+    pub queries: usize,
+    pub seeds_per_query: usize,
+    /// Total seconds serving all queries from one prepared [`WalkSession`].
+    pub reuse_secs: f64,
+    /// Total seconds when every query rebuilds its session (partition
+    /// plan + worker lists + sampler-table warm-up) from scratch.
+    pub rebuild_secs: f64,
+}
+
+impl SessionAmortization {
+    pub fn speedup(&self) -> f64 {
+        if self.reuse_secs > 0.0 {
+            self.rebuild_secs / self.reuse_secs
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// Serve `queries` seed-slice walk queries twice — once from a single
+/// prepared session, once rebuilding the session per query — and time
+/// both. Walks are asserted identical between the two paths (preparation
+/// must never change results), so the delta is pure amortized setup.
+pub fn session_amortization(
+    graph: &std::sync::Arc<Graph>,
+    workers: usize,
+    cfg: &FnConfig,
+    queries: usize,
+    seeds_per_query: usize,
+) -> SessionAmortization {
+    assert!(queries > 0 && seeds_per_query > 0);
+    let n = graph.num_vertices();
+    let request = |i: usize| {
+        let start = ((i * seeds_per_query) % n.max(1)) as u32;
+        let end = (start as usize + seeds_per_query).min(n) as u32;
+        WalkRequest::all().with_seeds(SeedSet::Slice { start, end })
+    };
+
+    let t = std::time::Instant::now();
+    let session = WalkSession::builder(graph.clone(), *cfg).workers(workers).build();
+    let mut reuse_walks = Vec::with_capacity(queries);
+    for i in 0..queries {
+        let out = session.collect(&request(i)).expect("session query failed");
+        reuse_walks.push(out.walks);
+    }
+    let reuse_secs = t.elapsed().as_secs_f64();
+
+    let t = std::time::Instant::now();
+    let mut rebuild_walks = Vec::with_capacity(queries);
+    for i in 0..queries {
+        let fresh = WalkSession::builder(graph.clone(), *cfg).workers(workers).build();
+        rebuild_walks.push(fresh.collect(&request(i)).expect("rebuild query failed").walks);
+    }
+    let rebuild_secs = t.elapsed().as_secs_f64();
+    // Equality check outside the timed region so the comparison cost
+    // doesn't inflate rebuild_secs (and thus the reported speedup).
+    for (i, (a, b)) in reuse_walks.iter().zip(&rebuild_walks).enumerate() {
+        assert_eq!(a, b, "session reuse changed walks (query {i})");
+    }
+
+    SessionAmortization {
+        queries,
+        seeds_per_query,
+        reuse_secs,
+        rebuild_secs,
+    }
 }
 
 /// Evaluate classification at several train fractions (Figure 6's X axis).
@@ -165,9 +238,7 @@ pub fn classify_fractions(
 mod tests {
     use super::*;
     use crate::gen::{labeled_community_graph, LabeledConfig};
-    use crate::graph::partition::Partitioner;
-    use crate::node2vec::{run_walks, FnConfig};
-    use crate::pregel::EngineOpts;
+    use crate::node2vec::FnConfig;
 
     #[test]
     fn partition_ablation_rows_are_consistent() {
@@ -190,17 +261,29 @@ mod tests {
     }
 
     #[test]
+    fn session_amortization_paths_agree() {
+        let g = std::sync::Arc::new(crate::gen::skew_graph(
+            &crate::gen::GenConfig::new(1 << 9, 8, 3),
+            2.0,
+        ));
+        let cfg = FnConfig::new(0.5, 2.0, 7).with_walk_length(4);
+        // session_amortization itself asserts reuse == rebuild walks.
+        let a = session_amortization(&g, 4, &cfg, 5, 32);
+        assert_eq!(a.queries, 5);
+        assert!(a.reuse_secs >= 0.0 && a.rebuild_secs >= 0.0);
+        assert!(a.speedup() > 0.0);
+    }
+
+    #[test]
     fn pipeline_end_to_end_beats_random_embeddings() {
         let lg = labeled_community_graph(&LabeledConfig::tiny(13));
-        let walks = run_walks(
-            &lg.graph,
-            Partitioner::hash(4),
-            &FnConfig::new(1.0, 1.0, 3).with_walk_length(20),
-            EngineOpts::default(),
-            1,
+        let session = WalkSession::builder(
+            lg.graph.clone(),
+            FnConfig::new(1.0, 1.0, 3).with_walk_length(20),
         )
-        .unwrap()
-        .walks;
+        .workers(4)
+        .build();
+        let walks = session.collect(&WalkRequest::all()).unwrap().walks;
         let cfg = TrainConfig {
             steps: 600,
             log_every: 200,

@@ -57,10 +57,12 @@ impl LabeledConfig {
     }
 }
 
-/// A graph plus multi-label ground truth.
+/// A graph plus multi-label ground truth. The graph is `Arc`-shared so a
+/// [`WalkSession`](crate::node2vec::WalkSession) can own it directly
+/// (plain `&lg.graph` callers keep working through deref coercion).
 #[derive(Clone, Debug)]
 pub struct LabeledGraph {
-    pub graph: Graph,
+    pub graph: std::sync::Arc<Graph>,
     /// `labels[v]` = sorted community ids of vertex `v` (non-empty).
     pub labels: Vec<Vec<u16>>,
     pub num_labels: usize,
@@ -168,7 +170,7 @@ pub fn labeled_community_graph(cfg: &LabeledConfig) -> LabeledGraph {
         placed += 1;
     }
     LabeledGraph {
-        graph: b.build(),
+        graph: b.build_shared(),
         labels,
         num_labels: c,
     }

@@ -94,6 +94,13 @@ impl GraphBuilder {
         g
     }
 
+    /// [`GraphBuilder::build`] into an `Arc<Graph>` — the ownership shape
+    /// a [`WalkSession`](crate::node2vec::WalkSession) takes, so a loaded
+    /// graph can back many concurrent sessions/queries without copies.
+    pub fn build_shared(self) -> std::sync::Arc<Graph> {
+        std::sync::Arc::new(self.build())
+    }
+
     /// [`GraphBuilder::build`], plus a degree-aware partitioner over the
     /// built graph ("computed from the CSR at load time"): the greedy
     /// edge-balance plan needs the final degree sequence, which only

@@ -13,29 +13,43 @@
 //! | FN-Switch | popular sender asks the receiver to ship *its* (small) adjacency back and computes on its behalf (costs an extra superstep per switched hop) |
 //! | FN-Cache  | popular senders' adjacency cached per worker; repeat sends become 12-byte markers |
 //! | FN-Approx | FN-Cache + Eq. 2–3 bounded approximation at popular vertices (samples by static weights when the bound gap < ε) |
-//! | FN-Reject | FN-Cache message handling + O(1)-per-hop rejection sampling from per-vertex static alias tables ([`sampler`]) |
+//! | FN-Reject | FN-Cache message handling + O(1)-per-hop rejection sampling from per-vertex static alias tables ([`sampler`]); forces the rejection sampler — see [`FnConfig::effective_sampler`] for the precedence rule |
 //!
 //! How a hop is *sampled* (given the predecessor's adjacency) is orthogonal
 //! to how the adjacency *travels*, so it is factored into a pluggable
-//! [`sampler::SecondOrderSampler`] layer selected by [`FnConfig::sampler`]:
-//! any message variant can run with either the exact linear scan or the
-//! statistically-equivalent rejection sampler.
+//! [`sampler::SecondOrderSampler`] layer selected by [`FnConfig::sampler`]
+//! (precedence: [`FnConfig::effective_sampler`]): any message variant can
+//! run with either the exact linear scan or the statistically-equivalent
+//! rejection sampler.
 //!
 //! FN-Multi is an orthogonal driver-level technique: run the `n` walks in
-//! `k` rounds of `n/k` to cap message memory ([`run_walks`] with
-//! `rounds > 1`).
+//! `k` rounds of `n/k` to cap message memory ([`WalkRequest::rounds`]).
+//!
+//! # Running walks
+//!
+//! The public walk API is query-oriented ([`session`]): build a
+//! [`WalkSession`] once per graph (it owns the partition plan, worker
+//! vertex lists, and sampler tables), then serve [`WalkRequest`]s whose
+//! walks stream into a [`WalkSink`] round by round. [`run_query`] is the
+//! one-shot form for single queries; the legacy [`run_walks`] survives as
+//! a deprecated shim over the same driver.
 
 pub mod program;
 pub mod reference;
 pub mod sampler;
+pub mod session;
 pub mod transition;
 
 use crate::graph::partition::Partitioner;
 use crate::graph::Graph;
-use crate::pregel::{Engine, EngineError, EngineMetrics, EngineOpts};
+use crate::pregel::{EngineError, EngineMetrics, EngineOpts};
 
-pub use program::{FnMsg, FnProgram, WalkStats};
+pub use program::{FnMsg, FnProgram, RoundStats, WalkStats};
 pub use sampler::{SamplerStats, SecondOrderSampler};
+pub use session::{
+    read_walk_file, run_query, run_query_collect, CollectSink, QueryOutput, SeedMask, SeedSet,
+    StreamingFileSink, WalkRequest, WalkSession, WalkSessionBuilder, WalkSink,
+};
 
 /// Re-export so walk configs can name placement schemes without reaching
 /// into the graph layer.
@@ -130,8 +144,9 @@ pub struct FnConfig {
     pub popular_threshold: u32,
     /// FN-Approx bound-gap threshold ε (paper suggests 1e-3).
     pub approx_eps: f64,
-    /// Second-order sampling strategy (`--sampler`). [`Variant::Reject`]
-    /// forces [`SamplerKind::Reject`] regardless of this field.
+    /// Second-order sampling strategy (`--sampler`). The strategy a run
+    /// *actually* uses is [`FnConfig::effective_sampler`], which documents
+    /// the one precedence rule between this field and [`Variant::Reject`].
     pub sampler: SamplerKind,
     /// Partitioning scheme (`--partitioner`); materialized per graph and
     /// worker count by [`PartitionerKind::build`]. Walks are bit-identical
@@ -171,8 +186,10 @@ impl FnConfig {
         self
     }
 
-    /// The sampling strategy this config actually runs:
-    /// [`Variant::Reject`] implies the rejection sampler.
+    /// The sampling strategy this config actually runs — the single place
+    /// the sampler precedence rule is defined: [`Variant::Reject`] forces
+    /// [`SamplerKind::Reject`] regardless of [`FnConfig::sampler`]; every
+    /// other variant uses [`FnConfig::sampler`] as set.
     pub fn effective_sampler(&self) -> SamplerKind {
         if self.variant == Variant::Reject {
             SamplerKind::Reject
@@ -227,6 +244,16 @@ pub struct WalkOutput {
 /// `rounds > 1` enables FN-Multi: the walk population is split into
 /// `rounds` disjoint start sets executed sequentially, dividing peak
 /// message memory by ~`rounds` (paper §3.4).
+///
+/// Deprecated shim: delegates to [`run_query`] with [`SeedSet::All`] and a
+/// [`CollectSink`], which reproduces the historical output bit-for-bit but
+/// re-derives the worker plan on every call and stages all n walks in
+/// memory. Build a [`WalkSession`] instead (amortized preparation,
+/// streaming sinks, seed-scoped queries).
+#[deprecated(
+    since = "0.2.0",
+    note = "build a WalkSession (or call run_query) and stream walks into a WalkSink"
+)]
 pub fn run_walks(
     graph: &Graph,
     part: Partitioner,
@@ -234,39 +261,7 @@ pub fn run_walks(
     opts: EngineOpts,
     rounds: u32,
 ) -> Result<WalkOutput, EngineError> {
-    assert!(rounds >= 1);
-    if cfg.effective_sampler() == SamplerKind::Reject {
-        // Build the proposal tables once up front so every round (and every
-        // engine clone) shares them instead of racing the lazy init inside
-        // the first superstep.
-        let _ = graph.first_order_tables();
-    }
-    let n = graph.num_vertices();
-    let mut walks: WalkSet = vec![Vec::new(); n];
-    let mut merged = EngineMetrics::default();
-    let mut stats = WalkStats::default();
-    let opts = cfg.engine_opts(opts);
-    for round in 0..rounds {
-        let program = FnProgram::new(graph, *cfg, round, rounds);
-        let engine = Engine::new(graph, part.clone(), program, opts);
-        let out = engine.run()?;
-        stats.merge(&engine.program().stats());
-        for (vid, value) in out.values.into_iter().enumerate() {
-            if !value.walk.is_empty() {
-                walks[vid] = value.walk;
-            }
-        }
-        // Merge metrics: concatenate supersteps (rounds run back-to-back).
-        merged.base_bytes = merged.base_bytes.max(out.metrics.base_bytes);
-        merged.peak_bytes = merged.peak_bytes.max(out.metrics.peak_bytes);
-        merged.wall_secs += out.metrics.wall_secs;
-        merged.supersteps.extend(out.metrics.supersteps);
-    }
-    Ok(WalkOutput {
-        walks,
-        metrics: merged,
-        stats,
-    })
+    run_query_collect(graph, &part, cfg, opts, &WalkRequest::all().with_rounds(rounds))
 }
 
 #[cfg(test)]

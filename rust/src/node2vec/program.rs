@@ -35,6 +35,7 @@ use crate::util::alias::sample_linear;
 use crate::util::rng::stream;
 
 use super::sampler::{make_sampler, SecondOrderSampler};
+use super::session::SeedMask;
 use super::transition::approx_bounds;
 use super::{FnConfig, Variant};
 
@@ -115,6 +116,25 @@ pub struct FnValue {
     own_arc: Option<Arc<[VertexId]>>,
 }
 
+/// Per-round execution record: one entry per engine run of a query, so
+/// FN-Multi's memory claim ("peak message memory divides by ~rounds",
+/// §3.4) is measurable from a single run instead of re-running per round
+/// count — EXPERIMENTS.md §API reads these off [`WalkStats::per_round`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RoundStats {
+    /// Walk pass (a multi-walk request runs `walks_per_seed` passes).
+    pub pass: u32,
+    /// FN-Multi round index within the pass.
+    pub round: u32,
+    /// Walks completed (delivered to the sink) this round.
+    pub walks: u64,
+    /// Peak message bytes held in any superstep of this round.
+    pub peak_msg_bytes: u64,
+    /// Peak simulated resident bytes (base + messages + cache).
+    pub peak_bytes: u64,
+    pub supersteps: u32,
+}
+
 /// Counters describing how the walk steps were computed.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct WalkStats {
@@ -136,6 +156,9 @@ pub struct WalkStats {
     /// Hops where the rejection sampler exhausted its proposal budget and
     /// fell back to the exact linear scan.
     pub reject_fallbacks: u64,
+    /// Round boundaries of the run (appended by the query driver, one
+    /// entry per engine run; empty inside a single program's counters).
+    pub per_round: Vec<RoundStats>,
 }
 
 impl WalkStats {
@@ -151,6 +174,7 @@ impl WalkStats {
         self.truncated_walks += other.truncated_walks;
         self.reject_proposals += other.reject_proposals;
         self.reject_fallbacks += other.reject_fallbacks;
+        self.per_round.extend(other.per_round.iter().copied());
     }
 }
 
@@ -179,6 +203,10 @@ pub struct FnProgram {
     /// FN-Multi: this run only starts walks for `vid % rounds == round`.
     round: u32,
     rounds: u32,
+    /// Seed-set gate: when present, only masked vertices start walks
+    /// (non-seeds never touch their walk state — they only relay protocol
+    /// messages for walks passing through them).
+    seeds: Option<Arc<SeedMask>>,
     stats: AtomicStats,
 }
 
@@ -192,8 +220,16 @@ impl FnProgram {
             unit_weights: graph.has_unit_weights(),
             round,
             rounds,
+            seeds: None,
             stats: AtomicStats::default(),
         }
+    }
+
+    /// Restrict walk starts to a seed mask (`None` = every vertex). Set by
+    /// the query driver for [`SeedSet`](super::SeedSet)-scoped requests.
+    pub fn with_seed_mask(mut self, seeds: Option<Arc<SeedMask>>) -> Self {
+        self.seeds = seeds;
+        self
     }
 
     pub fn stats(&self) -> WalkStats {
@@ -210,11 +246,17 @@ impl FnProgram {
             truncated_walks: self.stats.truncated_walks.load(Ordering::Relaxed),
             reject_proposals: sampler.proposals,
             reject_fallbacks: sampler.fallbacks,
+            per_round: Vec::new(),
         }
     }
 
     #[inline]
     fn in_round(&self, vid: VertexId) -> bool {
+        if let Some(mask) = &self.seeds {
+            if !mask.contains(vid) {
+                return false;
+            }
+        }
         self.rounds == 1 || (vid % self.rounds) == self.round
     }
 

@@ -15,6 +15,7 @@ use crate::util::alias::sample_linear;
 use crate::util::rng::stream;
 
 use super::program::SALT_STEP;
+use super::session::SeedSet;
 use super::transition::fill_second_order_weights;
 use super::{FnConfig, WalkSet};
 
@@ -27,6 +28,23 @@ pub fn reference_walks(graph: &Graph, cfg: &FnConfig) -> WalkSet {
         walks.push(reference_walk(graph, cfg, start, &mut scratch));
     }
     walks
+}
+
+/// Seed-set-scoped reference walks — the oracle counterpart of a
+/// [`SeedSet`] query, so conformance against explicit/sliced requests
+/// stays apples-to-apples. Returns `(seed, walk)` pairs in
+/// [`SeedSet::iter`] order; walks are bit-identical to the corresponding
+/// rows of [`reference_walks`] (streams depend only on the seed vertex).
+pub fn reference_walks_for_seeds(
+    graph: &Graph,
+    cfg: &FnConfig,
+    seeds: &SeedSet,
+) -> Vec<(VertexId, Vec<VertexId>)> {
+    let mut scratch: Vec<f32> = Vec::new();
+    seeds
+        .iter(graph.num_vertices())
+        .map(|s| (s, reference_walk(graph, cfg, s, &mut scratch)))
+        .collect()
 }
 
 /// One walk from `start`.
@@ -94,6 +112,19 @@ mod tests {
             for pair in w.windows(2) {
                 assert!(g.has_edge(pair[0], pair[1]), "non-edge step {pair:?}");
             }
+        }
+    }
+
+    #[test]
+    fn seed_set_walks_match_full_rows() {
+        let g = er_graph(&GenConfig::new(120, 6, 5));
+        let cfg = FnConfig::new(0.5, 2.0, 11).with_walk_length(8);
+        let full = reference_walks(&g, &cfg);
+        let scoped =
+            reference_walks_for_seeds(&g, &cfg, &SeedSet::Slice { start: 10, end: 20 });
+        assert_eq!(scoped.len(), 10);
+        for (s, w) in scoped {
+            assert_eq!(w, full[s as usize], "seed {s}");
         }
     }
 

@@ -1,0 +1,751 @@
+//! The prepared, streaming walk API: [`WalkSession`] + [`WalkSink`].
+//!
+//! The one-shot [`run_walks`](super::run_walks) entry point had two
+//! structural costs the paper's own design argues against:
+//!
+//! 1. **Re-preparation per call.** Every call re-derived the partition
+//!    plan, the per-worker vertex lists, and (for the rejection sampler)
+//!    the first-order alias tables — one-time graph state, rebuilt per
+//!    query. A [`WalkSession`] is built once from an `Arc<`[`Graph`]`>`
+//!    via [`WalkSessionBuilder`] and then serves many [`WalkRequest`]s,
+//!    amortizing all of it (EXPERIMENTS.md §API).
+//! 2. **Full materialization.** The complete `WalkSet` (`Vec<Vec<u32>>`
+//!    over all n vertices) was staged in memory before a single walk could
+//!    be consumed, wasting FN-Multi's whole point (§3.4: run walks in
+//!    rounds to cap memory). A [`WalkSink`] instead receives each walk as
+//!    its round completes: [`CollectSink`] reproduces the legacy `WalkSet`
+//!    bit-identically, [`StreamingFileSink`] writes walks through to disk
+//!    as they arrive (nothing staged; flushed per round), and
+//!    [`TrainerSink`](crate::embed::TrainerSink) pipelines rounds straight
+//!    into SGNS training so embedding no longer waits for the last walk.
+//!
+//! Queries are first-class: a [`WalkRequest`] selects its seed vertices
+//! ([`SeedSet::All`], an id [`SeedSet::Slice`], or a
+//! [`SeedSet::Explicit`] list), the number of walks per seed, an optional
+//! walk-length override, and the FN-Multi round count. An explicit query
+//! touches no walk state on non-seed vertices — non-seeds only ever relay
+//! protocol messages — so serving a small batch of query vertices costs
+//! the engine sweep but not n walks.
+//!
+//! Determinism: walks depend only on `(cfg.seed, start vertex, step)` RNG
+//! streams, so a query's walks are identical whether they run through a
+//! session, the legacy shim, [`run_query`], or alongside other seeds in a
+//! bigger request — the conformance suite (`tests/session.rs`) pins this.
+
+use std::io::{BufRead, Write};
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::graph::partition::Partitioner;
+use crate::graph::{Graph, VertexId};
+use crate::pregel::{Engine, EngineError, EngineMetrics, EngineOpts, WorkerPlan};
+
+use super::program::{FnProgram, RoundStats};
+use super::{FnConfig, SamplerKind, WalkOutput, WalkSet, WalkStats};
+
+/// Which vertices a [`WalkRequest`] starts walks from.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SeedSet {
+    /// Every vertex of the graph (the legacy `run_walks` behavior).
+    All,
+    /// The half-open vertex-id range `start..end` (clamped to the graph).
+    Slice { start: VertexId, end: VertexId },
+    /// An explicit list of seed vertices, served in list order. Duplicate
+    /// entries yield the same walk once per occurrence.
+    Explicit(Vec<VertexId>),
+}
+
+impl SeedSet {
+    /// Number of seeds this set selects on a graph of `n` vertices.
+    pub fn count(&self, n: usize) -> usize {
+        match self {
+            SeedSet::All => n,
+            SeedSet::Slice { start, end } => {
+                let end = (*end as usize).min(n);
+                end.saturating_sub(*start as usize)
+            }
+            SeedSet::Explicit(v) => v.len(),
+        }
+    }
+
+    /// Iterate the seeds (ascending for `All`/`Slice`, list order for
+    /// `Explicit`).
+    pub fn iter(&self, n: usize) -> Box<dyn Iterator<Item = VertexId> + '_> {
+        match self {
+            SeedSet::All => Box::new(0..n as VertexId),
+            SeedSet::Slice { start, end } => {
+                let end = (*end).min(n as VertexId);
+                Box::new(*start..end.max(*start))
+            }
+            SeedSet::Explicit(v) => Box::new(v.iter().copied()),
+        }
+    }
+
+    /// Membership bitset for the program's superstep-0 gate; `None` for
+    /// [`SeedSet::All`] (no per-vertex test needed).
+    pub fn mask(&self, n: usize) -> Option<Arc<SeedMask>> {
+        match self {
+            SeedSet::All => None,
+            _ => {
+                let mut m = SeedMask::new(n);
+                for v in self.iter(n) {
+                    m.insert(v);
+                }
+                Some(Arc::new(m))
+            }
+        }
+    }
+
+    /// Parse the CLI `--seeds` grammar: `all`, a half-open range `A..B`,
+    /// or a comma-separated id list `3,17,99`.
+    pub fn parse(s: &str) -> Result<SeedSet, String> {
+        if s == "all" {
+            return Ok(SeedSet::All);
+        }
+        if let Some((a, b)) = s.split_once("..") {
+            let start: VertexId = a
+                .parse()
+                .map_err(|_| format!("bad seed range start `{a}`"))?;
+            let end: VertexId = b
+                .parse()
+                .map_err(|_| format!("bad seed range end `{b}`"))?;
+            if end < start {
+                return Err(format!("empty seed range {start}..{end}"));
+            }
+            return Ok(SeedSet::Slice { start, end });
+        }
+        let ids = s
+            .split(',')
+            .map(|t| {
+                t.trim()
+                    .parse::<VertexId>()
+                    .map_err(|_| format!("bad seed id `{t}`"))
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+        if ids.is_empty() {
+            return Err("empty seed list".into());
+        }
+        Ok(SeedSet::Explicit(ids))
+    }
+
+    /// CLI-friendly validation: every selected seed must exist in a graph
+    /// of `n` vertices (the driver itself enforces this with a panic; call
+    /// this first to surface a readable error instead).
+    pub fn validate(&self, n: usize) -> Result<(), String> {
+        match self {
+            SeedSet::All => Ok(()),
+            SeedSet::Slice { start, end } => {
+                if (*start as usize) > n {
+                    Err(format!("seed range start {start} beyond graph size {n}"))
+                } else if start > end {
+                    Err(format!("empty seed range {start}..{end}"))
+                } else {
+                    Ok(())
+                }
+            }
+            SeedSet::Explicit(v) => match v.iter().find(|&&s| (s as usize) >= n) {
+                Some(s) => Err(format!("seed {s} out of range for a graph of {n} vertices")),
+                None => Ok(()),
+            },
+        }
+    }
+
+    /// Panic if any selected seed is out of range for a graph of `n`
+    /// vertices (programmer/CLI error, caught before the engine runs).
+    fn assert_in_range(&self, n: usize) {
+        match self {
+            SeedSet::All => {}
+            SeedSet::Slice { start, end } => {
+                assert!(
+                    (*start as usize) <= n && *start <= *end,
+                    "seed slice {start}..{end} invalid for n={n}"
+                );
+            }
+            SeedSet::Explicit(v) => {
+                for &s in v {
+                    assert!((s as usize) < n, "seed {s} out of range for n={n}");
+                }
+            }
+        }
+    }
+}
+
+/// Dense membership bitset over vertex ids (the seed gate consulted once
+/// per vertex at superstep 0).
+#[derive(Clone, Debug)]
+pub struct SeedMask {
+    bits: Vec<u64>,
+}
+
+impl SeedMask {
+    pub fn new(n: usize) -> SeedMask {
+        SeedMask {
+            bits: vec![0u64; n.div_ceil(64)],
+        }
+    }
+
+    #[inline]
+    pub fn insert(&mut self, v: VertexId) {
+        self.bits[v as usize / 64] |= 1u64 << (v % 64);
+    }
+
+    #[inline]
+    pub fn contains(&self, v: VertexId) -> bool {
+        self.bits
+            .get(v as usize / 64)
+            .is_some_and(|w| (w >> (v % 64)) & 1 == 1)
+    }
+}
+
+/// One walk query against a [`WalkSession`].
+#[derive(Clone, Debug)]
+pub struct WalkRequest {
+    pub seeds: SeedSet,
+    /// Independent walks per seed. Pass 0 uses the session seed verbatim
+    /// (bit-identical to the legacy API); later passes derive per-pass
+    /// seeds, so every walk is deterministic in (session seed, pass).
+    pub walks_per_seed: u32,
+    /// Override of [`FnConfig::walk_length`] for this query only.
+    pub length: Option<u32>,
+    /// FN-Multi round count (§3.4): the seed population is split into
+    /// `rounds` disjoint sets executed sequentially, dividing peak message
+    /// memory by ~`rounds`. The sink observes each round as it completes.
+    pub rounds: u32,
+}
+
+impl Default for WalkRequest {
+    fn default() -> Self {
+        WalkRequest {
+            seeds: SeedSet::All,
+            walks_per_seed: 1,
+            length: None,
+            rounds: 1,
+        }
+    }
+}
+
+impl WalkRequest {
+    /// The legacy shape: one walk from every vertex, single round.
+    pub fn all() -> WalkRequest {
+        WalkRequest::default()
+    }
+
+    pub fn with_seeds(mut self, seeds: SeedSet) -> Self {
+        self.seeds = seeds;
+        self
+    }
+
+    pub fn with_rounds(mut self, rounds: u32) -> Self {
+        self.rounds = rounds;
+        self
+    }
+
+    pub fn with_length(mut self, length: u32) -> Self {
+        self.length = Some(length);
+        self
+    }
+
+    pub fn with_walks_per_seed(mut self, k: u32) -> Self {
+        self.walks_per_seed = k;
+        self
+    }
+}
+
+/// Receiver of completed walks, called per round as the engine finishes
+/// them (never after the whole query like the legacy `WalkSet` staging).
+///
+/// Delivery order within a round follows [`SeedSet::iter`]; rounds are
+/// delivered in order, each terminated by one
+/// [`on_round_end`](WalkSink::on_round_end) carrying that round's
+/// [`RoundStats`].
+pub trait WalkSink {
+    /// One completed walk: `walk[0] == seed`, up to `walk_length + 1`
+    /// vertices (shorter only at dead ends). `round` is the FN-Multi
+    /// round index within the current pass.
+    fn on_walk(&mut self, seed: VertexId, round: u32, walk: &[VertexId]);
+
+    /// All walks of `round` have been delivered. Streaming sinks flush
+    /// here; the default does nothing.
+    fn on_round_end(&mut self, round: u32, stats: &RoundStats) {
+        let _ = (round, stats);
+    }
+}
+
+/// Sink that reassembles the legacy [`WalkSet`]: `walks[v]` is the walk
+/// seeded at `v` (empty for non-seeds). Bit-identical to what
+/// `run_walks` returned, which the conformance matrix pins.
+pub struct CollectSink {
+    walks: WalkSet,
+}
+
+impl CollectSink {
+    pub fn new(num_vertices: usize) -> CollectSink {
+        CollectSink {
+            walks: vec![Vec::new(); num_vertices],
+        }
+    }
+
+    pub fn walks(&self) -> &WalkSet {
+        &self.walks
+    }
+
+    pub fn into_walks(self) -> WalkSet {
+        self.walks
+    }
+}
+
+impl WalkSink for CollectSink {
+    fn on_walk(&mut self, seed: VertexId, _round: u32, walk: &[VertexId]) {
+        // Later passes of a multi-walk request overwrite: this sink models
+        // the legacy one-walk-per-seed output shape.
+        self.walks[seed as usize] = walk.to_vec();
+    }
+}
+
+/// Sink that streams every walk straight to disk as it completes: no walk
+/// is ever staged in memory (resident state is just the `BufWriter`
+/// buffer), which is the FN-Multi memory story end to end — engine message
+/// memory scales with `n / rounds` and the output never accumulates. The
+/// per-round byte counters record how the corpus split across rounds.
+///
+/// File format: one line per walk, `seed<TAB>v0 v1 v2 ...` — see
+/// [`read_walk_file`].
+pub struct StreamingFileSink {
+    writer: std::io::BufWriter<std::fs::File>,
+    /// Reusable line buffer (the only per-walk scratch).
+    line: String,
+    round_bytes: u64,
+    peak_round_bytes: u64,
+    total_walk_bytes: u64,
+    walks_written: u64,
+    error: Option<std::io::Error>,
+}
+
+impl StreamingFileSink {
+    pub fn create(path: impl AsRef<Path>) -> std::io::Result<StreamingFileSink> {
+        Ok(StreamingFileSink {
+            writer: std::io::BufWriter::new(std::fs::File::create(path)?),
+            line: String::new(),
+            round_bytes: 0,
+            peak_round_bytes: 0,
+            total_walk_bytes: 0,
+            walks_written: 0,
+            error: None,
+        })
+    }
+
+    /// Largest walk-byte volume (4 per vertex id) of any single round —
+    /// the per-round split the memory-budget tests assert on (walks are
+    /// written through immediately, so none of this is resident).
+    pub fn peak_round_bytes(&self) -> u64 {
+        self.peak_round_bytes
+    }
+
+    /// Total walk bytes streamed through the sink over all rounds.
+    pub fn total_walk_bytes(&self) -> u64 {
+        self.total_walk_bytes
+    }
+
+    pub fn walks_written(&self) -> u64 {
+        self.walks_written
+    }
+
+    /// Flush and surface any deferred I/O error.
+    pub fn finish(mut self) -> std::io::Result<u64> {
+        if let Some(e) = self.error.take() {
+            return Err(e);
+        }
+        self.writer.flush()?;
+        Ok(self.walks_written)
+    }
+}
+
+impl WalkSink for StreamingFileSink {
+    fn on_walk(&mut self, seed: VertexId, _round: u32, walk: &[VertexId]) {
+        self.round_bytes += 4 * walk.len() as u64;
+        self.total_walk_bytes += 4 * walk.len() as u64;
+        self.peak_round_bytes = self.peak_round_bytes.max(self.round_bytes);
+        if self.error.is_some() {
+            return;
+        }
+        self.line.clear();
+        self.line.push_str(&seed.to_string());
+        self.line.push('\t');
+        for (i, v) in walk.iter().enumerate() {
+            if i > 0 {
+                self.line.push(' ');
+            }
+            self.line.push_str(&v.to_string());
+        }
+        self.line.push('\n');
+        if let Err(e) = self.writer.write_all(self.line.as_bytes()) {
+            self.error = Some(e);
+        } else {
+            self.walks_written += 1;
+        }
+    }
+
+    fn on_round_end(&mut self, _round: u32, _stats: &RoundStats) {
+        self.round_bytes = 0;
+        // Walks were written through on arrival; push the round's bytes
+        // down to the OS so a crash mid-query loses at most one round.
+        if self.error.is_none() {
+            if let Err(e) = self.writer.flush() {
+                self.error = Some(e);
+            }
+        }
+    }
+}
+
+/// Read a [`StreamingFileSink`] file back as `(seed, walk)` pairs in file
+/// order.
+pub fn read_walk_file(path: impl AsRef<Path>) -> std::io::Result<Vec<(VertexId, Vec<VertexId>)>> {
+    let bad = |line: &str| {
+        std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("malformed walk line: {line:?}"),
+        )
+    };
+    let reader = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut out = Vec::new();
+    for line in reader.lines() {
+        let line = line?;
+        if line.is_empty() {
+            continue;
+        }
+        let (seed, rest) = line.split_once('\t').ok_or_else(|| bad(&line))?;
+        let seed: VertexId = seed.parse().map_err(|_| bad(&line))?;
+        let walk = rest
+            .split(' ')
+            .filter(|t| !t.is_empty())
+            .map(|t| t.parse::<VertexId>().map_err(|_| bad(&line)))
+            .collect::<Result<Vec<_>, _>>()?;
+        out.push((seed, walk));
+    }
+    Ok(out)
+}
+
+/// Engine + sampler counters for one query (what [`WalkSession::run`]
+/// returns when the walks themselves went to a sink).
+pub struct QueryOutput {
+    pub metrics: EngineMetrics,
+    pub stats: WalkStats,
+}
+
+/// Builds a [`WalkSession`]: one-time graph preparation, separated from
+/// per-query execution (the HuGE+/Pregel+ serving split).
+pub struct WalkSessionBuilder {
+    graph: Arc<Graph>,
+    cfg: FnConfig,
+    workers: usize,
+    opts: EngineOpts,
+}
+
+impl WalkSessionBuilder {
+    /// Start from a shared graph and a walk configuration. Defaults:
+    /// 4 workers, [`EngineOpts::default`].
+    pub fn new(graph: Arc<Graph>, cfg: FnConfig) -> WalkSessionBuilder {
+        WalkSessionBuilder {
+            graph,
+            cfg,
+            workers: 4,
+            opts: EngineOpts::default(),
+        }
+    }
+
+    pub fn workers(mut self, workers: usize) -> Self {
+        assert!(workers > 0, "need at least one worker");
+        self.workers = workers;
+        self
+    }
+
+    pub fn engine_opts(mut self, opts: EngineOpts) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    /// Materialize the session: build the partitioner plan
+    /// ([`FnConfig::partitioner`] over the worker count), the per-worker
+    /// vertex lists, and — when the effective sampler is
+    /// [`SamplerKind::Reject`] — the first-order alias tables, all once.
+    pub fn build(self) -> WalkSession {
+        let part = self.cfg.partitioner.build(&self.graph, self.workers);
+        let plan = WorkerPlan::new(&part, self.graph.num_vertices());
+        if self.cfg.effective_sampler() == SamplerKind::Reject {
+            let _ = self.graph.first_order_tables();
+        }
+        WalkSession {
+            graph: self.graph,
+            cfg: self.cfg,
+            opts: self.opts,
+            part,
+            plan,
+        }
+    }
+}
+
+/// A prepared walk-serving handle: owns the graph (`Arc<Graph>`), the
+/// materialized partition plan, the per-worker vertex lists, and the
+/// sampler tables; executes many [`WalkRequest`]s without re-deriving any
+/// of them. See the module docs for the full rationale.
+pub struct WalkSession {
+    graph: Arc<Graph>,
+    cfg: FnConfig,
+    opts: EngineOpts,
+    part: Partitioner,
+    plan: WorkerPlan,
+}
+
+impl WalkSession {
+    pub fn builder(graph: Arc<Graph>, cfg: FnConfig) -> WalkSessionBuilder {
+        WalkSessionBuilder::new(graph, cfg)
+    }
+
+    pub fn graph(&self) -> &Arc<Graph> {
+        &self.graph
+    }
+
+    pub fn config(&self) -> &FnConfig {
+        &self.cfg
+    }
+
+    pub fn partitioner(&self) -> &Partitioner {
+        &self.part
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.part.num_workers()
+    }
+
+    /// Execute one query, streaming walks into `sink` round by round.
+    pub fn run(
+        &self,
+        req: &WalkRequest,
+        sink: &mut dyn WalkSink,
+    ) -> Result<QueryOutput, EngineError> {
+        drive(&self.graph, &self.part, &self.plan, &self.cfg, self.opts, req, sink)
+    }
+
+    /// Convenience: execute one query through a [`CollectSink`] and return
+    /// the assembled [`WalkOutput`] (rows of non-seed vertices stay empty).
+    pub fn collect(&self, req: &WalkRequest) -> Result<WalkOutput, EngineError> {
+        let mut sink = CollectSink::new(self.graph.num_vertices());
+        let q = self.run(req, &mut sink)?;
+        Ok(WalkOutput {
+            walks: sink.into_walks(),
+            metrics: q.metrics,
+            stats: q.stats,
+        })
+    }
+}
+
+/// One-shot query execution without a prepared session: derives the
+/// partition plan and worker lists for this call only. This is what the
+/// deprecated [`run_walks`](super::run_walks) shim delegates to; prefer a
+/// [`WalkSession`] anywhere more than one query runs against a graph.
+pub fn run_query(
+    graph: &Graph,
+    part: &Partitioner,
+    cfg: &FnConfig,
+    opts: EngineOpts,
+    req: &WalkRequest,
+    sink: &mut dyn WalkSink,
+) -> Result<QueryOutput, EngineError> {
+    let plan = WorkerPlan::new(part, graph.num_vertices());
+    drive(graph, part, &plan, cfg, opts, req, sink)
+}
+
+/// [`run_query`] through a [`CollectSink`], assembled into the legacy
+/// [`WalkOutput`] shape — the one collect-and-return path shared by the
+/// deprecated shim, the experiment drivers, and the conformance tests.
+pub fn run_query_collect(
+    graph: &Graph,
+    part: &Partitioner,
+    cfg: &FnConfig,
+    opts: EngineOpts,
+    req: &WalkRequest,
+) -> Result<WalkOutput, EngineError> {
+    let mut sink = CollectSink::new(graph.num_vertices());
+    let q = run_query(graph, part, cfg, opts, req, &mut sink)?;
+    Ok(WalkOutput {
+        walks: sink.into_walks(),
+        metrics: q.metrics,
+        stats: q.stats,
+    })
+}
+
+/// Seed for pass `pass` of a multi-walk request: pass 0 is the configured
+/// seed verbatim (legacy bit-compat); later passes mix in the pass index.
+fn pass_seed(seed: u64, pass: u32) -> u64 {
+    if pass == 0 {
+        seed
+    } else {
+        seed ^ (pass as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+    }
+}
+
+/// The shared query executor behind [`WalkSession::run`] and
+/// [`run_query`]: one engine run per (pass, round), flushing each round
+/// into the sink as it completes.
+fn drive(
+    graph: &Graph,
+    part: &Partitioner,
+    plan: &WorkerPlan,
+    cfg: &FnConfig,
+    opts: EngineOpts,
+    req: &WalkRequest,
+    sink: &mut dyn WalkSink,
+) -> Result<QueryOutput, EngineError> {
+    assert!(req.rounds >= 1, "need at least one round");
+    assert!(req.walks_per_seed >= 1, "need at least one walk per seed");
+    let n = graph.num_vertices();
+    req.seeds.assert_in_range(n);
+
+    let mut cfg = *cfg;
+    if let Some(l) = req.length {
+        cfg.walk_length = l;
+    }
+    let opts = cfg.engine_opts(opts);
+    if cfg.effective_sampler() == SamplerKind::Reject {
+        // Shared proposal tables: built before the first superstep so
+        // every round and worker reuses them (no lazy-init race).
+        let _ = graph.first_order_tables();
+    }
+    let mask = req.seeds.mask(n);
+
+    let mut merged = EngineMetrics::default();
+    let mut stats = WalkStats::default();
+    for pass in 0..req.walks_per_seed {
+        let mut pass_cfg = cfg;
+        pass_cfg.seed = pass_seed(cfg.seed, pass);
+        for round in 0..req.rounds {
+            let program =
+                FnProgram::new(graph, pass_cfg, round, req.rounds).with_seed_mask(mask.clone());
+            let engine = Engine::new(graph, part.clone(), program, opts);
+            let out = engine.run_on(plan)?;
+            stats.merge(&engine.program().stats());
+
+            // Flush this round's walks to the sink: only the round's
+            // seeds are visited, so an explicit query never reads (or
+            // allocates for) non-seed walk state.
+            let mut walks_in_round = 0u64;
+            for seed in req.seeds.iter(n) {
+                if req.rounds > 1 && seed % req.rounds != round {
+                    continue;
+                }
+                let walk = &out.values[seed as usize].walk;
+                if !walk.is_empty() {
+                    walks_in_round += 1;
+                    sink.on_walk(seed, round, walk);
+                }
+            }
+            let rs = RoundStats {
+                pass,
+                round,
+                walks: walks_in_round,
+                peak_msg_bytes: out.metrics.peak_msg_bytes(),
+                peak_bytes: out.metrics.peak_bytes,
+                supersteps: out.metrics.num_supersteps(),
+            };
+            sink.on_round_end(round, &rs);
+            stats.per_round.push(rs);
+
+            // Merge metrics exactly as the legacy API did: rounds run
+            // back-to-back, so supersteps concatenate and peaks max.
+            merged.base_bytes = merged.base_bytes.max(out.metrics.base_bytes);
+            merged.peak_bytes = merged.peak_bytes.max(out.metrics.peak_bytes);
+            merged.wall_secs += out.metrics.wall_secs;
+            merged.supersteps.extend(out.metrics.supersteps);
+        }
+    }
+    Ok(QueryOutput {
+        metrics: merged,
+        stats,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seed_set_parse_grammar() {
+        assert_eq!(SeedSet::parse("all").unwrap(), SeedSet::All);
+        assert_eq!(
+            SeedSet::parse("3..10").unwrap(),
+            SeedSet::Slice { start: 3, end: 10 }
+        );
+        assert_eq!(
+            SeedSet::parse("1,5,9").unwrap(),
+            SeedSet::Explicit(vec![1, 5, 9])
+        );
+        assert_eq!(SeedSet::parse("7").unwrap(), SeedSet::Explicit(vec![7]));
+        assert!(SeedSet::parse("10..3").is_err());
+        assert!(SeedSet::parse("a,b").is_err());
+        assert!(SeedSet::parse("").is_err());
+    }
+
+    #[test]
+    fn seed_set_iteration_and_counts() {
+        let n = 10;
+        assert_eq!(SeedSet::All.count(n), 10);
+        assert_eq!(SeedSet::All.iter(n).count(), 10);
+        let slice = SeedSet::Slice { start: 4, end: 99 };
+        assert_eq!(slice.count(n), 6); // clamped to the graph
+        assert_eq!(slice.iter(n).collect::<Vec<_>>(), vec![4, 5, 6, 7, 8, 9]);
+        let ex = SeedSet::Explicit(vec![9, 2, 2]);
+        assert_eq!(ex.count(n), 3);
+        assert_eq!(ex.iter(n).collect::<Vec<_>>(), vec![9, 2, 2]);
+    }
+
+    #[test]
+    fn seed_set_validate_bounds() {
+        assert!(SeedSet::All.validate(5).is_ok());
+        assert!(SeedSet::Slice { start: 0, end: 99 }.validate(5).is_ok()); // end clamps
+        assert!(SeedSet::Slice { start: 9, end: 12 }.validate(5).is_err());
+        assert!(SeedSet::Explicit(vec![4]).validate(5).is_ok());
+        assert!(SeedSet::Explicit(vec![5]).validate(5).is_err());
+    }
+
+    #[test]
+    fn seed_mask_membership() {
+        let n = 200;
+        let mask = SeedSet::Explicit(vec![0, 63, 64, 199]).mask(n).unwrap();
+        for v in 0..n as VertexId {
+            assert_eq!(
+                mask.contains(v),
+                matches!(v, 0 | 63 | 64 | 199),
+                "vertex {v}"
+            );
+        }
+        assert!(SeedSet::All.mask(n).is_none());
+    }
+
+    #[test]
+    fn pass_seed_zero_is_identity() {
+        assert_eq!(pass_seed(42, 0), 42);
+        assert_ne!(pass_seed(42, 1), 42);
+        assert_ne!(pass_seed(42, 1), pass_seed(42, 2));
+    }
+
+    #[test]
+    fn walk_file_roundtrip() {
+        let dir = std::env::temp_dir().join("fastn2v_session_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("walks_roundtrip.txt");
+        let mut sink = StreamingFileSink::create(&path).unwrap();
+        sink.on_walk(3, 0, &[3, 1, 2]);
+        sink.on_walk(7, 0, &[7]);
+        sink.on_round_end(0, &RoundStats::default());
+        sink.on_walk(4, 1, &[4, 0]);
+        sink.on_round_end(1, &RoundStats::default());
+        assert_eq!(sink.peak_round_bytes(), 16); // round 0: (3 + 1) ids
+        assert_eq!(sink.finish().unwrap(), 3);
+        let back = read_walk_file(&path).unwrap();
+        assert_eq!(
+            back,
+            vec![(3, vec![3, 1, 2]), (7, vec![7]), (4, vec![4, 0])]
+        );
+        std::fs::remove_file(&path).ok();
+    }
+}

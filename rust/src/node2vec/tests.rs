@@ -11,7 +11,7 @@ use crate::pregel::EngineOpts;
 use crate::util::propkit::{forall, Gen};
 
 use super::reference::reference_walks;
-use super::{run_walks, FnConfig, SamplerKind, Variant, WalkOutput};
+use super::{run_query_collect, FnConfig, SamplerKind, Variant, WalkOutput, WalkRequest};
 
 fn walks_of(
     graph: &Graph,
@@ -20,7 +20,9 @@ fn walks_of(
     rounds: u32,
     opts: EngineOpts,
 ) -> WalkOutput {
-    run_walks(graph, Partitioner::hash(workers), cfg, opts, rounds).expect("walk run failed")
+    let part = Partitioner::hash(workers);
+    let req = WalkRequest::all().with_rounds(rounds);
+    run_query_collect(graph, &part, cfg, opts, &req).expect("walk run failed")
 }
 
 #[test]
@@ -391,14 +393,13 @@ fn prop_exact_variants_equal_reference() {
         let expect = reference_walks(&graph, &cfg);
         let variant = *g.choose(&[Variant::Base, Variant::Local, Variant::Switch, Variant::Cache]);
         let workers = g.usize_in(1, 6);
-        let out = run_walks(
+        let out = walks_of(
             &graph,
-            Partitioner::hash(workers),
             &cfg.with_variant(variant),
-            EngineOpts::default(),
+            workers,
             1,
-        )
-        .unwrap();
+            EngineOpts::default(),
+        );
         assert_eq!(out.walks, expect, "{} w={workers}", variant.name());
     });
 }

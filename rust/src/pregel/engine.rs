@@ -179,6 +179,43 @@ pub struct RunResult<V> {
     pub metrics: EngineMetrics,
 }
 
+/// Precomputed per-worker vertex lists for one (partitioner, graph) pair —
+/// the engine state worth keeping between runs.
+///
+/// [`Engine::run`] derives this from the partitioner on every call (an
+/// O(n) scan); a prepared caller (e.g. a
+/// [`WalkSession`](crate::node2vec::WalkSession)) builds the plan once and
+/// replays many runs through [`Engine::run_on`], so per-query engine setup
+/// is just value/inbox allocation instead of a full re-partition scan.
+pub struct WorkerPlan {
+    per_worker: Vec<Vec<VertexId>>,
+}
+
+impl WorkerPlan {
+    /// Bucket `0..num_vertices` by owning worker in one pass (each bucket
+    /// stays in ascending id order, matching `Partitioner::vertices_of`).
+    pub fn new(part: &Partitioner, num_vertices: usize) -> WorkerPlan {
+        let mut per_worker: Vec<Vec<VertexId>> = (0..part.num_workers())
+            .map(|_| Vec::new())
+            .collect();
+        for v in 0..num_vertices as VertexId {
+            per_worker[part.worker_of(v)].push(v);
+        }
+        WorkerPlan { per_worker }
+    }
+
+    #[inline]
+    pub fn num_workers(&self) -> usize {
+        self.per_worker.len()
+    }
+
+    /// Vertices owned by `worker`, in ascending id order.
+    #[inline]
+    pub fn vertices(&self, worker: usize) -> &[VertexId] {
+        &self.per_worker[worker]
+    }
+}
+
 /// Per-worker adjacency cache (FN-Cache's global per-worker structure).
 /// Keyed by vertex id with FxHash: the keys are graph-derived (not
 /// adversarial), and every Marker hop costs one lookup here, so the
@@ -433,9 +470,30 @@ impl<'g, P: VertexProgram> Engine<'g, P> {
     }
 
     /// Execute to quiescence. Returns final vertex values and metrics.
+    ///
+    /// Derives the per-worker vertex lists from the partitioner first; a
+    /// caller running many programs over the same (graph, partitioner)
+    /// should build a [`WorkerPlan`] once and use [`Engine::run_on`].
     pub fn run(&self) -> Result<RunResult<P::Value>, EngineError> {
+        let plan = WorkerPlan::new(&self.part, self.graph.num_vertices());
+        self.run_on(&plan)
+    }
+
+    /// [`Engine::run`] against a prebuilt [`WorkerPlan`] (must have been
+    /// built from this engine's partitioner over this graph's vertices).
+    pub fn run_on(&self, plan: &WorkerPlan) -> Result<RunResult<P::Value>, EngineError> {
         let w = self.part.num_workers();
         let n = self.graph.num_vertices();
+        assert_eq!(
+            plan.num_workers(),
+            w,
+            "worker plan built for a different worker count"
+        );
+        debug_assert_eq!(
+            plan.per_worker.iter().map(Vec::len).sum::<usize>(),
+            n,
+            "worker plan built for a different graph"
+        );
         let t_run = Instant::now();
 
         let shared: Shared<P> = Shared {
@@ -465,15 +523,25 @@ impl<'g, P: VertexProgram> Engine<'g, P> {
         let graph_bytes = self.graph.memory_bytes();
         let opts = self.opts;
 
-        let worker_outputs: Vec<(Vec<VertexId>, Vec<P::Value>)> = std::thread::scope(|scope| {
+        let worker_outputs: Vec<Vec<P::Value>> = std::thread::scope(|scope| {
             let shared = &shared;
             let mut handles = Vec::with_capacity(w);
             for me in 0..w {
                 let program = &self.program;
                 let graph = self.graph;
                 let part = &self.part;
+                let my_vertices = plan.vertices(me);
                 handles.push(scope.spawn(move || {
-                    worker_loop::<P>(me, graph, part, program, shared, opts, graph_bytes)
+                    worker_loop::<P>(
+                        me,
+                        graph,
+                        part,
+                        my_vertices,
+                        program,
+                        shared,
+                        opts,
+                        graph_bytes,
+                    )
                 }));
             }
             handles
@@ -489,8 +557,8 @@ impl<'g, P: VertexProgram> Engine<'g, P> {
         // Scatter worker-local values back to a dense vid-indexed vec.
         let mut values: Vec<P::Value> = Vec::with_capacity(n);
         values.resize_with(n, Default::default);
-        for (vids, vals) in worker_outputs {
-            for (vid, val) in vids.into_iter().zip(vals) {
+        for (me, vals) in worker_outputs.into_iter().enumerate() {
+            for (&vid, val) in plan.vertices(me).iter().zip(vals) {
                 values[vid as usize] = val;
             }
         }
@@ -555,17 +623,17 @@ fn offload_hot_messages<P: VertexProgram>(
 }
 
 /// Body of one worker thread.
+#[allow(clippy::too_many_arguments)]
 fn worker_loop<P: VertexProgram>(
     me: usize,
     graph: &Graph,
     part: &Partitioner,
+    my_vertices: &[VertexId],
     program: &P,
     shared: &Shared<P>,
     opts: EngineOpts,
     graph_bytes: u64,
-) -> (Vec<VertexId>, Vec<P::Value>) {
-    let n = graph.num_vertices();
-    let my_vertices = part.vertices_of(me, n);
+) -> Vec<P::Value> {
     // Hot splitting is pointless on a single worker or for a program that
     // never opts in; the decision must be uniform across workers (it adds
     // a barrier) and it is: every worker sees the same opts, partitioner
@@ -791,7 +859,7 @@ fn worker_loop<P: VertexProgram>(
         superstep += 1;
         step_start = Instant::now();
     }
-    (my_vertices, values)
+    values
 }
 
 #[cfg(test)]
@@ -912,6 +980,32 @@ mod tests {
                 let out = eng.run().unwrap();
                 assert_eq!(out.values, expect, "workers={workers} part={scheme}");
             }
+        }
+    }
+
+    #[test]
+    fn worker_plan_matches_partitioner_and_supports_reuse() {
+        let g = er_graph(&GenConfig::new(100, 5, 3));
+        for part in [
+            Partitioner::hash(3),
+            Partitioner::range(3, 100),
+            Partitioner::degree_aware(3, &g),
+        ] {
+            let plan = WorkerPlan::new(&part, 100);
+            for w in 0..3 {
+                assert_eq!(
+                    plan.vertices(w),
+                    part.vertices_of(w, 100).as_slice(),
+                    "scheme {}",
+                    part.scheme_name()
+                );
+            }
+            // One engine, one plan, many runs: the prepared-session path.
+            let eng = Engine::new(&g, part, SumIds { rounds: 2 }, EngineOpts::default());
+            let a = eng.run_on(&plan).unwrap();
+            let b = eng.run_on(&plan).unwrap();
+            assert_eq!(a.values, b.values);
+            assert_eq!(a.values, expected_sum_ids(&g, 2));
         }
     }
 

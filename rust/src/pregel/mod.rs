@@ -23,7 +23,7 @@
 mod engine;
 mod metrics;
 
-pub use engine::{Ctx, Engine, EngineError, EngineOpts, RunResult, VertexProgram};
+pub use engine::{Ctx, Engine, EngineError, EngineOpts, RunResult, VertexProgram, WorkerPlan};
 pub use metrics::{EngineMetrics, SuperstepMetrics};
 
 /// Messages must report their simulated wire size; the engine charges it to

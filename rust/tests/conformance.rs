@@ -19,15 +19,29 @@
 //! own worker threads; see .github/workflows/ci.yml).
 
 use fastn2v::gen::{skew_graph, GenConfig};
-use fastn2v::graph::partition::PartitionerKind;
+use fastn2v::graph::partition::{Partitioner, PartitionerKind};
 use fastn2v::graph::{Graph, GraphBuilder};
 use fastn2v::node2vec::{
-    reference::reference_walks, run_walks, FnConfig, SamplerKind, Variant, WalkSet,
+    reference::reference_walks, run_query_collect, FnConfig, SamplerKind, Variant, WalkOutput,
+    WalkRequest, WalkSet,
 };
 use fastn2v::pregel::{EngineError, EngineOpts};
 use fastn2v::util::stats::{chi_square_critical, chi_square_stat};
 
 const WORKER_COUNTS: [usize; 4] = [1, 2, 4, 8];
+
+/// The legacy call shape over the new query driver, so the matrix below
+/// reads unchanged (session-vs-shim equivalence itself is pinned in
+/// tests/session.rs).
+fn run_walks(
+    graph: &Graph,
+    part: Partitioner,
+    cfg: &FnConfig,
+    opts: EngineOpts,
+    rounds: u32,
+) -> Result<WalkOutput, EngineError> {
+    run_query_collect(graph, &part, cfg, opts, &WalkRequest::all().with_rounds(rounds))
+}
 
 fn conformance_graph() -> Graph {
     skew_graph(&GenConfig::new(512, 12, 29), 3.0)

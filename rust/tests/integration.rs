@@ -9,7 +9,9 @@ use fastn2v::exp::common::{run_solution, RunOutcome, Scale, Solution};
 use fastn2v::exp::pipeline::{classify_fractions, embeddings_from_walks};
 use fastn2v::gen::{labeled_community_graph, skew_graph, GenConfig, LabeledConfig};
 use fastn2v::graph::partition::Partitioner;
-use fastn2v::node2vec::{reference::reference_walks, run_walks, FnConfig, Variant};
+use fastn2v::node2vec::{
+    reference::reference_walks, run_query_collect, FnConfig, Variant, WalkRequest, WalkSession,
+};
 use fastn2v::pregel::EngineOpts;
 
 /// The paper's central quality claim (Figure 6): embeddings from exact
@@ -26,15 +28,12 @@ fn exact_walks_beat_trimmed_walks_downstream() {
     let n = lg.graph.num_vertices();
     let cfg = FnConfig::new(0.5, 2.0, 5).with_walk_length(30);
 
-    let exact = run_walks(
-        &lg.graph,
-        Partitioner::hash(6),
-        &cfg.with_variant(Variant::Cache),
-        EngineOpts::default(),
-        1,
-    )
-    .unwrap()
-    .walks;
+    let exact = WalkSession::builder(lg.graph.clone(), cfg.with_variant(Variant::Cache))
+        .workers(6)
+        .build()
+        .collect(&WalkRequest::all())
+        .unwrap()
+        .walks;
     let (trimmed, _) = SparkNode2Vec::run(&lg.graph, &cfg, None, 6).unwrap();
 
     let score = |walks: &fastn2v::node2vec::WalkSet| {
@@ -100,15 +99,15 @@ fn distributed_walks_reproducible_under_stress() {
         .with_variant(Variant::Cache);
     let expect = reference_walks(&g, &cfg);
     for (workers, rounds, cache_cap) in [(3, 1, None), (8, 4, Some(2048)), (12, 2, Some(512))] {
-        let out = run_walks(
+        let out = run_query_collect(
             &g,
-            Partitioner::hash(workers),
+            &Partitioner::hash(workers),
             &cfg,
             EngineOpts {
                 cache_capacity: cache_cap,
                 ..Default::default()
             },
-            rounds,
+            &WalkRequest::all().with_rounds(rounds),
         )
         .unwrap();
         assert_eq!(
@@ -123,13 +122,13 @@ fn distributed_walks_reproducible_under_stress() {
 #[test]
 fn pipeline_produces_useful_embeddings() {
     let lg = labeled_community_graph(&LabeledConfig::tiny(77));
-    let walks = run_walks(
-        &lg.graph,
-        Partitioner::hash(4),
-        &FnConfig::new(1.0, 1.0, 5).with_walk_length(20),
-        EngineOpts::default(),
-        1,
+    let walks = WalkSession::builder(
+        lg.graph.clone(),
+        FnConfig::new(1.0, 1.0, 5).with_walk_length(20),
     )
+    .workers(4)
+    .build()
+    .collect(&WalkRequest::all())
     .unwrap()
     .walks;
     let out = embeddings_from_walks(

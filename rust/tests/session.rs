@@ -1,0 +1,374 @@
+//! Conformance for the WalkSession/WalkSink query API:
+//!
+//! - `CollectSink` through a session is bit-identical to the legacy
+//!   `run_walks` shim across all 6 variants × {hash, degree} partitioners;
+//! - `SeedSet::Explicit`/`Slice` queries equal the corresponding rows of a
+//!   full `SeedSet::All` run and leave non-seed walk state untouched;
+//! - `TrainerSink` pipelined training matches a staged walks→train feed
+//!   bit-for-bit on a fixed seed;
+//! - `StreamingFileSink` holds at most one round of walks resident and
+//!   completes under a memory budget that the single-round run exceeds;
+//! - per-round stats record FN-Multi round boundaries;
+//! - session reuse, length overrides, and multi-walk passes are
+//!   deterministic.
+
+use std::sync::Arc;
+
+use fastn2v::embed::{RustSgns, TrainConfig, TrainerSink};
+use fastn2v::gen::{labeled_community_graph, skew_graph, GenConfig, LabeledConfig};
+use fastn2v::graph::partition::{Partitioner, PartitionerKind};
+use fastn2v::graph::{Graph, VertexId};
+use fastn2v::node2vec::{
+    read_walk_file, reference::reference_walks_for_seeds, FnConfig, RoundStats, SeedSet,
+    StreamingFileSink, Variant, WalkRequest, WalkSession, WalkSink,
+};
+use fastn2v::pregel::{EngineError, EngineOpts};
+
+fn conformance_graph() -> Arc<Graph> {
+    Arc::new(skew_graph(&GenConfig::new(512, 12, 29), 3.0))
+}
+
+/// Satellite (a): `WalkSession` + `CollectSink` reproduces the legacy
+/// one-shot API bit-identically for every variant and both placement-
+/// sensitive partitioners. Doubles as the deprecation-shim compile test:
+/// `run_walks` callers must still build.
+#[test]
+#[allow(deprecated)]
+fn collect_sink_matches_legacy_run_walks_across_variants_and_partitioners() {
+    let g = conformance_graph();
+    let base = FnConfig::new(0.5, 2.0, 71)
+        .with_walk_length(8)
+        .with_popular_threshold(24);
+    for variant in Variant::ALL {
+        for kind in [PartitionerKind::Hash, PartitionerKind::DegreeAware] {
+            let cfg = base.with_variant(variant).with_partitioner(kind);
+            let session = WalkSession::builder(g.clone(), cfg).workers(4).build();
+            let via_session = session.collect(&WalkRequest::all()).unwrap();
+            let legacy = fastn2v::node2vec::run_walks(
+                &g,
+                kind.build(&g, 4),
+                &cfg,
+                EngineOpts::default(),
+                1,
+            )
+            .unwrap();
+            assert_eq!(
+                via_session.walks,
+                legacy.walks,
+                "{} under {} diverged from legacy run_walks",
+                variant.name(),
+                kind.name()
+            );
+        }
+    }
+}
+
+#[test]
+#[allow(deprecated)]
+fn deprecated_shim_rounds_match_session_rounds() {
+    let g = conformance_graph();
+    let cfg = FnConfig::new(0.5, 2.0, 43).with_walk_length(6);
+    let session = WalkSession::builder(g.clone(), cfg).workers(4).build();
+    let via_session = session.collect(&WalkRequest::all().with_rounds(4)).unwrap();
+    let legacy =
+        fastn2v::node2vec::run_walks(&g, Partitioner::hash(4), &cfg, EngineOpts::default(), 4)
+            .unwrap();
+    assert_eq!(via_session.walks, legacy.walks);
+    assert_eq!(via_session.stats.per_round, legacy.stats.per_round);
+    assert_eq!(
+        via_session.metrics.num_supersteps(),
+        legacy.metrics.num_supersteps()
+    );
+}
+
+/// Satellite (b): an explicit query equals the corresponding rows of the
+/// full run — and non-seed vertices end with *empty* walk state, i.e. the
+/// query never started walks for them.
+#[test]
+fn explicit_seed_query_matches_rows_of_full_run() {
+    let g = conformance_graph();
+    let n = g.num_vertices();
+    let cfg = FnConfig::new(0.5, 2.0, 7)
+        .with_walk_length(8)
+        .with_variant(Variant::Cache)
+        .with_popular_threshold(24);
+    let session = WalkSession::builder(g.clone(), cfg).workers(4).build();
+    let all = session.collect(&WalkRequest::all()).unwrap().walks;
+
+    let seeds = vec![3u32, 77, 200, 201, 450];
+    let req = WalkRequest::all().with_seeds(SeedSet::Explicit(seeds.clone()));
+    let out = session.collect(&req).unwrap();
+    for v in 0..n as VertexId {
+        if seeds.contains(&v) {
+            assert_eq!(out.walks[v as usize], all[v as usize], "seed {v}");
+        } else {
+            assert!(
+                out.walks[v as usize].is_empty(),
+                "non-seed {v} grew walk state"
+            );
+        }
+    }
+    assert_eq!(out.stats.per_round.len(), 1);
+    assert_eq!(out.stats.per_round[0].walks, seeds.len() as u64);
+
+    // Against the seed-scoped reference oracle (exact variant + linear
+    // sampler, so walks are bit-identical to the single-threaded walker).
+    for (s, w) in reference_walks_for_seeds(&g, &cfg, &SeedSet::Explicit(seeds)) {
+        assert_eq!(out.walks[s as usize], w, "oracle diverged at seed {s}");
+    }
+
+    // Slice queries: the contiguous-range form of the same contract.
+    let slice_req = WalkRequest::all().with_seeds(SeedSet::Slice { start: 100, end: 164 });
+    let sliced = session.collect(&slice_req).unwrap();
+    for v in 0..n {
+        if (100..164).contains(&v) {
+            assert_eq!(sliced.walks[v], all[v], "slice seed {v}");
+        } else {
+            assert!(sliced.walks[v].is_empty());
+        }
+    }
+    assert_eq!(sliced.stats.per_round[0].walks, 64);
+}
+
+/// Explicit seed sets compose with FN-Multi rounds.
+#[test]
+fn explicit_seeds_with_rounds_match_full_rows() {
+    let g = conformance_graph();
+    let cfg = FnConfig::new(2.0, 0.5, 19).with_walk_length(6);
+    let session = WalkSession::builder(g.clone(), cfg).workers(4).build();
+    let all = session.collect(&WalkRequest::all()).unwrap().walks;
+    let seeds = vec![0u32, 1, 2, 3, 255, 256, 511];
+    let req = WalkRequest::all()
+        .with_seeds(SeedSet::Explicit(seeds.clone()))
+        .with_rounds(3);
+    let out = session.collect(&req).unwrap();
+    for &s in &seeds {
+        assert_eq!(out.walks[s as usize], all[s as usize], "seed {s}");
+    }
+    assert_eq!(out.stats.per_round.len(), 3);
+    let total: u64 = out.stats.per_round.iter().map(|r| r.walks).sum();
+    assert_eq!(total, seeds.len() as u64);
+}
+
+/// Satellite (c): pipelined training through `TrainerSink` matches the
+/// staged walks→train trajectory bit-for-bit on a fixed seed — streaming
+/// delivery changes *when* training happens, never *what* it computes.
+#[test]
+fn trainer_sink_pipelined_matches_staged_feed() {
+    let lg = labeled_community_graph(&LabeledConfig::tiny(5));
+    let n = lg.graph.num_vertices();
+    let rounds = 3u32;
+    let wcfg = FnConfig::new(1.0, 1.0, 3).with_walk_length(20);
+    let tcfg = TrainConfig {
+        steps: 240,
+        log_every: 40,
+        ..Default::default()
+    };
+    let session = WalkSession::builder(lg.graph.clone(), wcfg).workers(4).build();
+
+    // Pipelined: walks stream into SGNS round by round.
+    let mut pipelined = TrainerSink::new(RustSgns::new(n, 24, 11), n, tcfg, 128, 5, rounds);
+    session.run(&WalkRequest::all().with_rounds(rounds), &mut pipelined).unwrap();
+    assert_eq!(pipelined.steps_run(), tcfg.steps);
+    let (pipe_model, pipe_curve) = pipelined.finish().unwrap();
+
+    // Staged: materialize the full walk set first (the legacy shape),
+    // then feed the trainer the same rounds after the fact.
+    let walks = session.collect(&WalkRequest::all().with_rounds(rounds)).unwrap().walks;
+    let mut staged = TrainerSink::new(RustSgns::new(n, 24, 11), n, tcfg, 128, 5, rounds);
+    for round in 0..rounds {
+        for (seed, w) in walks.iter().enumerate() {
+            if (seed as u32) % rounds == round && !w.is_empty() {
+                staged.on_walk(seed as u32, round, w);
+            }
+        }
+        staged.on_round_end(round, &RoundStats::default());
+    }
+    let (staged_model, staged_curve) = staged.finish().unwrap();
+
+    assert_eq!(pipe_curve.len(), staged_curve.len());
+    for (a, b) in pipe_curve.iter().zip(&staged_curve) {
+        assert_eq!(a.step, b.step);
+        assert_eq!(
+            a.loss, b.loss,
+            "pipelined vs staged loss diverged at step {}",
+            a.step
+        );
+    }
+    assert_eq!(pipe_model.w_in, staged_model.w_in, "embeddings diverged");
+    assert_eq!(pipe_model.w_out, staged_model.w_out);
+}
+
+/// Acceptance: `StreamingFileSink` holds at most one round of walks
+/// resident, and the session (FN-Multi + streaming) completes under a
+/// memory budget that the single-round run exceeds.
+#[test]
+fn streaming_sink_bounds_resident_walks_under_memory_budget() {
+    let g = Arc::new(skew_graph(&GenConfig::new(1200, 20, 9), 4.0));
+    let cfg = FnConfig::new(0.5, 2.0, 7)
+        .with_walk_length(12)
+        .with_variant(Variant::Base);
+
+    // Probe the deterministic byte accounting to place the budget between
+    // the rounds=8 peak (must fit) and the rounds=1 peak (must not).
+    let probe = WalkSession::builder(g.clone(), cfg).workers(4).build();
+    let full = probe.collect(&WalkRequest::all()).unwrap();
+    let multi = probe.collect(&WalkRequest::all().with_rounds(8)).unwrap();
+    let (peak1, peak8) = (full.metrics.peak_bytes, multi.metrics.peak_bytes);
+    assert!(peak8 + 4096 < peak1, "FN-Multi did not reduce peak: {peak1} -> {peak8}");
+    let budget = peak8 + (peak1 - peak8) / 2;
+
+    let session = WalkSession::builder(g.clone(), cfg)
+        .workers(4)
+        .engine_opts(EngineOpts {
+            memory_budget: Some(budget),
+            ..Default::default()
+        })
+        .build();
+
+    // rounds=1 must abort on the budget...
+    match session.collect(&WalkRequest::all()) {
+        Err(EngineError::OutOfMemory { bytes, .. }) => assert!(bytes > budget),
+        other => panic!(
+            "single-round run must exceed the budget, got {:?}",
+            other.err()
+        ),
+    }
+
+    // ...while rounds=8 streams to disk under the same budget; the
+    // per-round byte counters must show the corpus actually split.
+    let dir = std::env::temp_dir().join("fastn2v_session_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("streamed_walks.txt");
+    let mut sink = StreamingFileSink::create(&path).unwrap();
+    let q = session.run(&WalkRequest::all().with_rounds(8), &mut sink).unwrap();
+    assert_eq!(q.stats.per_round.len(), 8);
+    let peak_round = sink.peak_round_bytes();
+    let total = sink.total_walk_bytes();
+    assert!(
+        peak_round * 4 < total,
+        "sink held {peak_round} of {total} walk bytes — more than one round"
+    );
+    assert_eq!(sink.finish().unwrap(), g.num_vertices() as u64);
+
+    // The streamed file holds exactly the walks of the in-memory run.
+    let streamed = read_walk_file(&path).unwrap();
+    assert_eq!(streamed.len(), g.num_vertices());
+    for (seed, walk) in streamed {
+        assert_eq!(walk, full.walks[seed as usize], "file diverged at seed {seed}");
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+/// Satellite: per-round stats expose FN-Multi's message-peak reduction
+/// from one run.
+#[test]
+fn per_round_stats_record_boundaries_and_memory_reduction() {
+    let g = Arc::new(skew_graph(&GenConfig::new(1200, 20, 9), 4.0));
+    let cfg = FnConfig::new(0.5, 2.0, 7).with_walk_length(12);
+    let session = WalkSession::builder(g.clone(), cfg).workers(4).build();
+
+    let one = session.collect(&WalkRequest::all()).unwrap();
+    assert_eq!(one.stats.per_round.len(), 1);
+    assert_eq!(one.stats.per_round[0].walks, g.num_vertices() as u64);
+
+    let four = session.collect(&WalkRequest::all().with_rounds(4)).unwrap();
+    assert_eq!(four.stats.per_round.len(), 4);
+    let total: u64 = four.stats.per_round.iter().map(|r| r.walks).sum();
+    assert_eq!(total, g.num_vertices() as u64);
+    for (i, r) in four.stats.per_round.iter().enumerate() {
+        assert_eq!(r.round, i as u32);
+        assert_eq!(r.pass, 0);
+        assert!(r.supersteps > 0);
+        assert!(r.walks > 0);
+        assert!(
+            r.peak_msg_bytes < one.stats.per_round[0].peak_msg_bytes,
+            "round {i} peak {} not below single-round peak {}",
+            r.peak_msg_bytes,
+            one.stats.per_round[0].peak_msg_bytes
+        );
+    }
+}
+
+/// Session reuse: repeated and interleaved queries are deterministic, and
+/// a length override yields exact prefixes (per-(walk, step) streams).
+#[test]
+fn session_reuse_is_deterministic_and_length_override_is_a_prefix() {
+    let g = conformance_graph();
+    let cfg = FnConfig::new(0.5, 2.0, 99)
+        .with_walk_length(10)
+        .with_variant(Variant::Local);
+    let session = WalkSession::builder(g.clone(), cfg).workers(4).build();
+
+    let a = session.collect(&WalkRequest::all()).unwrap().walks;
+    let req = WalkRequest::all().with_seeds(SeedSet::Slice { start: 0, end: 9 });
+    let sliced = session.collect(&req).unwrap();
+    let b = session.collect(&WalkRequest::all()).unwrap().walks;
+    assert_eq!(a, b, "session state leaked between queries");
+    for v in 0..9 {
+        assert_eq!(sliced.walks[v], a[v]);
+    }
+
+    let short = session.collect(&WalkRequest::all().with_length(3)).unwrap().walks;
+    for (v, w) in short.iter().enumerate() {
+        assert!(w.len() <= 4);
+        assert_eq!(
+            w.as_slice(),
+            &a[v][..w.len()],
+            "length-override walk is not a prefix at {v}"
+        );
+    }
+}
+
+/// Multi-walk requests: pass 0 is bit-identical to a single-walk request;
+/// later passes are deterministic but independent draws.
+#[test]
+fn walks_per_seed_passes_are_deterministic_and_independent() {
+    #[derive(Default)]
+    struct GroupSink {
+        groups: Vec<Vec<(VertexId, Vec<VertexId>)>>,
+        cur: Vec<(VertexId, Vec<VertexId>)>,
+    }
+    impl WalkSink for GroupSink {
+        fn on_walk(&mut self, seed: VertexId, _round: u32, walk: &[VertexId]) {
+            self.cur.push((seed, walk.to_vec()));
+        }
+        fn on_round_end(&mut self, _round: u32, _stats: &RoundStats) {
+            self.groups.push(std::mem::take(&mut self.cur));
+        }
+    }
+
+    let g = conformance_graph();
+    let cfg = FnConfig::new(0.5, 2.0, 31).with_walk_length(8);
+    let session = WalkSession::builder(g.clone(), cfg).workers(4).build();
+    let req = WalkRequest::all()
+        .with_seeds(SeedSet::Slice { start: 0, end: 64 })
+        .with_walks_per_seed(2);
+
+    let mut sink = GroupSink::default();
+    session.run(&req, &mut sink).unwrap();
+    assert_eq!(sink.groups.len(), 2, "one round group per pass");
+
+    let single_req = WalkRequest::all().with_seeds(SeedSet::Slice { start: 0, end: 64 });
+    let single = session.collect(&single_req).unwrap().walks;
+    for (seed, walk) in &sink.groups[0] {
+        assert_eq!(walk, &single[*seed as usize], "pass 0 diverged at {seed}");
+    }
+    // Pass 1: same seeds, valid edges, but an independent draw.
+    let mut any_different = false;
+    for (seed, walk) in &sink.groups[1] {
+        assert_eq!(walk[0], *seed);
+        for pair in walk.windows(2) {
+            assert!(g.has_edge(pair[0], pair[1]), "non-edge step {pair:?}");
+        }
+        if walk != &single[*seed as usize] {
+            any_different = true;
+        }
+    }
+    assert!(any_different, "pass 1 reproduced pass 0 — seeds not mixed");
+
+    // And the whole request is reproducible.
+    let mut again = GroupSink::default();
+    session.run(&req, &mut again).unwrap();
+    assert_eq!(sink.groups, again.groups);
+}
