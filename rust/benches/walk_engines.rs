@@ -16,8 +16,10 @@ use fastn2v::exp::pipeline::{
     partition_ablation, session_amortization, PartitionAblationRow, SessionAmortization,
 };
 use fastn2v::gen::{skew_graph, GenConfig};
-use fastn2v::node2vec::{FnConfig, SamplerKind, Variant};
+use fastn2v::graph::{open_graph, write_v2, OpenOptions};
+use fastn2v::node2vec::{FnConfig, SamplerKind, SeedSet, Variant, WalkRequest, WalkSession};
 use fastn2v::util::benchkit::print_table;
+use fastn2v::util::mmap::Mmap;
 
 struct Row {
     name: String,
@@ -167,6 +169,38 @@ fn main() {
         amort.speedup()
     );
 
+    // ---- graph store: open-time + first-walk latency, mmap vs owned ----
+    // The serving scenario EXPERIMENTS.md §Scale measures: how long from
+    // a cold graph *file* to an open Graph, and to the first walk out of
+    // a one-seed query (open + session build + query).
+    let store = graph_store_bench(&g, walk_len.min(10));
+    let store_table: Vec<(String, Vec<String>)> = store
+        .rows
+        .iter()
+        .map(|r| {
+            (
+                r.name.to_string(),
+                vec![
+                    fastn2v::util::fmt_secs(r.open_secs),
+                    fastn2v::util::fmt_secs(r.first_walk_secs),
+                ],
+            )
+        })
+        .collect();
+    print_table(
+        &format!(
+            "graph store ({} FN2VGRF2 on disk{})",
+            fastn2v::util::fmt_bytes(store.file_bytes),
+            if store.mmap_supported {
+                ""
+            } else {
+                "; mmap unsupported here"
+            }
+        ),
+        &["open", "first walk"],
+        &store_table,
+    );
+
     let secs_of = |name: &str| rows.iter().find(|r| r.name == name).and_then(|r| r.secs);
     let speedup = |a: Option<f64>, b: Option<f64>| match (a, b) {
         (Some(a), Some(b)) if b > 0.0 => Some(a / b),
@@ -198,6 +232,7 @@ fn main() {
         &ablation,
         ratio_reduction,
         &amort,
+        &store,
     );
     match std::fs::write(&out_path, &json) {
         Ok(()) => println!("baseline written to {out_path}"),
@@ -205,8 +240,73 @@ fn main() {
     }
 }
 
+struct StoreModeRow {
+    name: &'static str,
+    open_secs: f64,
+    first_walk_secs: f64,
+}
+
+struct GraphStoreBench {
+    file_bytes: u64,
+    write_secs: f64,
+    mmap_supported: bool,
+    rows: Vec<StoreModeRow>,
+}
+
+/// Write the bench graph as FN2VGRF2 once, then measure per open mode:
+/// time-to-open (decode vs map vs map-trusted) and time from open to the
+/// first walk of a one-seed query through a fresh `WalkSession`.
+fn graph_store_bench(g: &fastn2v::graph::Graph, walk_len: u32) -> GraphStoreBench {
+    let dir = std::env::temp_dir().join("fastn2v-bench-store");
+    std::fs::create_dir_all(&dir).ok();
+    let path = dir.join(format!("walk_engines-{}.fn2v", std::process::id()));
+    let t = std::time::Instant::now();
+    write_v2(g, &path).expect("write FN2VGRF2");
+    let write_secs = t.elapsed().as_secs_f64();
+    let file_bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+    let mmap_supported = Mmap::supported();
+
+    let modes: [(&'static str, OpenOptions); 3] = [
+        ("owned", OpenOptions::owned()),
+        ("mmap", OpenOptions::mapped()),
+        ("mmap-trusted", OpenOptions::mapped().trusted(true)),
+    ];
+    let mut rows = Vec::new();
+    for (name, opts) in modes {
+        if name != "owned" && !mmap_supported {
+            continue;
+        }
+        let t = std::time::Instant::now();
+        let graph = open_graph(&path, &opts).expect("open FN2VGRF2");
+        let open_secs = t.elapsed().as_secs_f64();
+        let t = std::time::Instant::now();
+        let cfg = FnConfig::new(0.5, 2.0, 3)
+            .with_walk_length(walk_len)
+            .with_popular_threshold(popular_threshold(&graph))
+            .with_variant(Variant::Cache);
+        let session = WalkSession::builder(std::sync::Arc::new(graph), cfg)
+            .workers(4)
+            .build();
+        let req = WalkRequest::all().with_seeds(SeedSet::Explicit(vec![0]));
+        let _ = session.collect(&req).expect("one-seed query");
+        let first_walk_secs = t.elapsed().as_secs_f64();
+        rows.push(StoreModeRow {
+            name,
+            open_secs,
+            first_walk_secs,
+        });
+    }
+    std::fs::remove_file(&path).ok();
+    GraphStoreBench {
+        file_bytes,
+        write_secs,
+        mmap_supported,
+        rows,
+    }
+}
+
 /// Hand-rolled JSON (serde is unavailable offline); schema documented in
-/// EXPERIMENTS.md §Perf and §Partitioning.
+/// EXPERIMENTS.md §Perf, §Partitioning and §Scale.
 #[allow(clippy::too_many_arguments)]
 fn render_json(
     g: &fastn2v::graph::Graph,
@@ -219,6 +319,7 @@ fn render_json(
     ablation: &[PartitionAblationRow],
     ratio_reduction: Option<f64>,
     amort: &SessionAmortization,
+    store: &GraphStoreBench,
 ) -> String {
     let stats = g.stats();
     let fmt_opt = |o: Option<f64>| o.map(|v| format!("{v:.3}")).unwrap_or_else(|| "null".into());
@@ -276,6 +377,20 @@ fn render_json(
         "  \"speedup_reject_vs_linear_same_messaging\": {},\n",
         fmt_opt(reject_vs_cache)
     ));
+    s.push_str(&format!(
+        "  \"graph_store\": {{\"format\": \"FN2VGRF2\", \"file_bytes\": {}, \"write_secs\": {:.6}, \"mmap_supported\": {}, \"modes\": [\n",
+        store.file_bytes, store.write_secs, store.mmap_supported
+    ));
+    for (i, r) in store.rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"open_secs\": {:.6}, \"first_walk_secs\": {:.6}}}{}\n",
+            r.name,
+            r.open_secs,
+            r.first_walk_secs,
+            if i + 1 < store.rows.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]},\n");
     s.push_str(&format!(
         "  \"session_amortization\": {{\"queries\": {}, \"seeds_per_query\": {}, \"reuse_secs\": {:.6}, \"rebuild_secs\": {:.6}, \"speedup\": {:.3}}}\n",
         amort.queries,

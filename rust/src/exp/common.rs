@@ -81,6 +81,81 @@ pub struct NamedGraph {
     pub paper_ref: &'static str,
 }
 
+/// Spill `graph` to a process-private FN2VGRF2 file under the temp dir
+/// and reopen it memory-mapped: how generated (in-memory) graphs serve
+/// the `--mmap` flag, and a store round-trip in its own right — walks
+/// over the remapped graph are bit-identical to the original (pinned in
+/// tests/storage.rs). On targets without mmap the reopen silently
+/// downgrades to an owned decode (`graph::store` documents this).
+pub fn remap_through_store(graph: &Graph) -> Result<Graph, crate::graph::StoreError> {
+    use crate::graph::{open_graph, write_v2, OpenOptions, StoreError};
+    // Unique per spill (not just per process): two live graphs must never
+    // share a path, or `File::create` would truncate an inode a still-live
+    // mapping points at.
+    static SPILL_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let dir = std::env::temp_dir().join("fastn2v-store");
+    std::fs::create_dir_all(&dir)
+        .map_err(|e| StoreError::io(format!("create {}", dir.display()), e))?;
+    let path = dir.join(format!(
+        "spill-{}-{}.fn2v",
+        std::process::id(),
+        SPILL_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+    ));
+    write_v2(graph, &path)?;
+    let g = open_graph(&path, &OpenOptions::mapped());
+    // The mapping (or the owned fallback's decoded copy) keeps the data
+    // alive without the name: unlink immediately so the graph-sized spill
+    // never leaks and the path can never be reused over a live mapping.
+    std::fs::remove_file(&path).ok();
+    g
+}
+
+/// Resolve the graph a walk-running subcommand operates on:
+/// `--graph-file` loads from disk (v1 or v2; `--mmap` maps instead of
+/// decoding), a `--graph` name generates, and a name plus `--mmap`
+/// round-trips the generated graph through [`remap_through_store`] so the
+/// serving path is store-backed end to end.
+pub fn resolve_graph(
+    name: Option<&str>,
+    file: Option<&str>,
+    mmap: bool,
+    scale: Scale,
+    seed: u64,
+) -> Result<NamedGraph, String> {
+    use crate::graph::{open_graph, OpenOptions, StorageKind};
+    if let Some(path) = file {
+        let opts = if mmap {
+            OpenOptions::mapped()
+        } else {
+            OpenOptions::owned()
+        };
+        let g = open_graph(std::path::Path::new(path), &opts).map_err(|e| e.to_string())?;
+        let suffix = if g.storage() == StorageKind::Mapped {
+            " (mmap)"
+        } else {
+            ""
+        };
+        return Ok(NamedGraph {
+            name: format!("{path}{suffix}"),
+            graph: Arc::new(g),
+            paper_ref: "loaded from file",
+        });
+    }
+    let Some(name) = name else {
+        return Err("need --graph <name> or --graph-file <path>".into());
+    };
+    let ng = build_graph(name, scale, seed);
+    if !mmap {
+        return Ok(ng);
+    }
+    let g = remap_through_store(&ng.graph).map_err(|e| e.to_string())?;
+    Ok(NamedGraph {
+        name: format!("{} (mmap)", ng.name),
+        graph: Arc::new(g),
+        paper_ref: ng.paper_ref,
+    })
+}
+
 /// Build one of the evaluation graphs by name.
 pub fn build_graph(name: &str, scale: Scale, seed: u64) -> NamedGraph {
     let s = |d| scale.shrink(d);
@@ -284,6 +359,39 @@ mod tests {
         let sparse = gen::er_graph(&GenConfig::new(2000, 4, 1));
         let dense = gen::er_graph(&GenConfig::new(2000, 64, 1));
         assert!(popular_threshold(&dense) > popular_threshold(&sparse));
+    }
+
+    #[test]
+    fn resolve_graph_covers_name_file_and_mmap() {
+        use crate::graph::StorageKind;
+        use crate::util::mmap::Mmap;
+        // Plain name: generated, owned.
+        let ng = resolve_graph(Some("er-10"), None, false, Scale::Quick, 3).unwrap();
+        assert_eq!(ng.graph.storage(), StorageKind::Owned);
+        // Name + mmap: spilled through the store and remapped.
+        let remapped = resolve_graph(Some("er-10"), None, true, Scale::Quick, 3).unwrap();
+        assert!(remapped.name.ends_with("(mmap)"));
+        if Mmap::supported() {
+            assert_eq!(remapped.graph.storage(), StorageKind::Mapped);
+        }
+        for v in ng.graph.vertices() {
+            assert_eq!(ng.graph.neighbors(v), remapped.graph.neighbors(v));
+        }
+        // Explicit file (v2, owned open).
+        let p = std::env::temp_dir().join(format!(
+            "fn2v-resolve-{}.fn2v",
+            std::process::id()
+        ));
+        crate::graph::write_v2(&ng.graph, &p).unwrap();
+        let from_file =
+            resolve_graph(None, Some(p.to_str().unwrap()), false, Scale::Quick, 3).unwrap();
+        assert_eq!(
+            from_file.graph.num_arcs(),
+            ng.graph.num_arcs()
+        );
+        // Neither name nor file is a readable error.
+        assert!(resolve_graph(None, None, false, Scale::Quick, 3).is_err());
+        std::fs::remove_file(&p).ok();
     }
 
     #[test]

@@ -19,18 +19,25 @@ USAGE:
 
 COMMANDS:
     fig --id <table1|fig1|fig4|...|fig14|all>   regenerate a paper figure
-    gen --graph <name> --out <path>             generate a graph (binary)
+    gen --graph <name> --out <path> [--format <v1|v2>]
+                                                generate a graph to disk
+    graph convert --in <path> --out <path>      migrate v1 -> FN2VGRF2 (v2)
+    graph info --file <path>                    print a v2 file's header
     stats --graph <name>                        Table-1 stats for one graph
     walk --graph <name> --variant <base|local|switch|cache|approx|reject>
                  [--sampler <linear|reject>] [--partitioner <hash|range|degree>]
                  [--hot-threshold <deg>] [--seeds <spec>] [--rounds <k>]
-                 [--stream-walks <path>]
+                 [--stream-walks <path>] [--graph-file <path>] [--mmap]
     embed --graph <name> [--rounds <k>]         walks pipelined into SGNS
     pipeline --graph blogcatalog [--rounds <k>] walks -> embeddings -> F1
     help
 
 All three walk-running commands build a WalkSession (one-time partition
 plan + sampler tables) and serve queries from it; see EXPERIMENTS.md §API.
+They all accept `--graph-file <path>` to serve a graph file (v1 or v2)
+instead of generating one, and `--mmap` to back it zero-copy by the
+FN2VGRF2 store (EXPERIMENTS.md §Scale); `pipeline` keeps its generated
+labels and round-trips the topology through the store under `--mmap`.
 
 COMMON FLAGS:
     --quick            small scale (tests; default is full scale)
@@ -54,6 +61,12 @@ COMMON FLAGS:
     --stream-walks <p> stream each round's walks to file <p> (one line per
                        walk: `seed<TAB>v0 v1 ...`) instead of collecting
                        them in memory
+    --graph-file <p>   serve a graph file (v1 or FN2VGRF2) instead of a
+                       generated `--graph` name
+    --mmap             open the graph zero-copy via the FN2VGRF2 store
+                       (O(1) open, pages shared across processes); a
+                       generated graph is spilled to a temp v2 file first,
+                       a v1 file downgrades to an owned decode
 
 GRAPH NAMES:
     blogcatalog, livejournal, orkut, friendster (scaled analogues),
@@ -72,7 +85,7 @@ pub fn cli_main(raw: Vec<String>) -> i32 {
 }
 
 fn cli_inner(raw: Vec<String>) -> Result<(), String> {
-    let args = Args::parse(raw, &["quick", "verbose"])?;
+    let args = Args::parse(raw, &["quick", "verbose", "mmap"])?;
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     if args.has_switch("verbose") {
         crate::util::logging::set_level(crate::util::logging::Level::Debug);
@@ -91,15 +104,68 @@ fn cli_inner(raw: Vec<String>) -> Result<(), String> {
         "gen" => {
             let name = args.get("graph").ok_or("gen needs --graph")?;
             let out = args.get("out").ok_or("gen needs --out")?;
+            let format = args.get_choice("format", "v1", &["v1", "v2"])?;
             let ng = common::build_graph(name, scale, seed);
-            crate::graph::write_binary(&ng.graph, std::path::Path::new(out))
-                .map_err(|e| e.to_string())?;
+            match format {
+                "v2" => crate::graph::write_v2(&ng.graph, std::path::Path::new(out))
+                    .map_err(|e| e.to_string())?,
+                _ => crate::graph::write_binary(&ng.graph, std::path::Path::new(out))
+                    .map_err(|e| e.to_string())?,
+            }
             let st = ng.graph.stats();
             println!(
-                "wrote {} to {out}: |V|={} |E|={} max deg {}",
+                "wrote {} to {out} ({format}): |V|={} |E|={} max deg {}",
                 ng.name, st.num_vertices, st.num_edges, st.max_degree
             );
             Ok(())
+        }
+        "graph" => {
+            let sub = args
+                .positional
+                .get(1)
+                .map(String::as_str)
+                .ok_or("graph needs a subcommand: convert | info")?;
+            match sub {
+                "convert" => {
+                    let src = args.get("in").ok_or("graph convert needs --in <path>")?;
+                    let dst = args.get("out").ok_or("graph convert needs --out <path>")?;
+                    let t = std::time::Instant::now();
+                    let rep = crate::graph::convert(
+                        std::path::Path::new(src),
+                        std::path::Path::new(dst),
+                    )
+                    .map_err(|e| e.to_string())?;
+                    println!(
+                        "converted {src} -> {dst} (FN2VGRF2): |V|={} arcs={} {} in {}",
+                        rep.vertices,
+                        rep.arcs,
+                        crate::util::fmt_bytes(rep.bytes_written),
+                        crate::util::fmt_secs(t.elapsed().as_secs_f64()),
+                    );
+                    Ok(())
+                }
+                "info" => {
+                    let path = args.get("file").ok_or("graph info needs --file <path>")?;
+                    let h = crate::graph::read_header(std::path::Path::new(path))
+                        .map_err(|e| e.to_string())?;
+                    println!(
+                        "{path}: FN2VGRF2 |V|={} arcs={} undirected={} unit_weights={} \
+                         sections offsets@{} adj@{} weights@{} ({} expected)",
+                        h.n,
+                        h.arcs,
+                        h.undirected,
+                        h.unit_weights,
+                        h.offsets_start,
+                        h.adj_start,
+                        h.weights_start,
+                        crate::util::fmt_bytes(h.expected_file_bytes()),
+                    );
+                    Ok(())
+                }
+                other => Err(format!(
+                    "unknown graph subcommand `{other}`; expected convert | info"
+                )),
+            }
         }
         "stats" => {
             let name = args.get("graph").ok_or("stats needs --graph")?;
@@ -122,7 +188,6 @@ fn cli_inner(raw: Vec<String>) -> Result<(), String> {
             Ok(())
         }
         "walk" => {
-            let name = args.get("graph").ok_or("walk needs --graph")?;
             let variant = match args.get_choice(
                 "variant",
                 "base",
@@ -154,7 +219,13 @@ fn cli_inner(raw: Vec<String>) -> Result<(), String> {
             let workers: usize = args.get_parsed("workers", common::WORKERS)?;
             let rounds: u32 = args.get_parsed("rounds", 1)?;
             let seeds = crate::node2vec::SeedSet::parse(args.get_or("seeds", "all"))?;
-            let ng = common::build_graph(name, scale, seed);
+            let ng = common::resolve_graph(
+                args.get("graph"),
+                args.get("graph-file"),
+                args.has_switch("mmap"),
+                scale,
+                seed,
+            )?;
             seeds.validate(ng.graph.num_vertices())?;
             let cfg = crate::node2vec::FnConfig::new(p, q, seed)
                 .with_walk_length(scale.walk_length())
@@ -208,12 +279,17 @@ fn cli_inner(raw: Vec<String>) -> Result<(), String> {
             Ok(())
         }
         "embed" => {
-            let name = args.get("graph").ok_or("embed needs --graph")?;
             let p: f32 = args.get_parsed("p", 0.5)?;
             let q: f32 = args.get_parsed("q", 2.0)?;
             let workers: usize = args.get_parsed("workers", common::WORKERS)?;
             let rounds: u32 = args.get_parsed("rounds", 4)?;
-            let ng = common::build_graph(name, scale, seed);
+            let ng = common::resolve_graph(
+                args.get("graph"),
+                args.get("graph-file"),
+                args.has_switch("mmap"),
+                scale,
+                seed,
+            )?;
             let n = ng.graph.num_vertices();
             let cfg = crate::node2vec::FnConfig::new(p, q, seed)
                 .with_walk_length(scale.walk_length())
@@ -257,14 +333,23 @@ fn cli_inner(raw: Vec<String>) -> Result<(), String> {
             let lg = crate::gen::labeled_community_graph(
                 &crate::gen::LabeledConfig::blogcatalog_like(seed),
             );
-            let n = lg.graph.num_vertices();
+            // --mmap: labels stay with the generator, the topology is
+            // round-tripped through the FN2VGRF2 store and served mapped.
+            let graph = if args.has_switch("mmap") {
+                std::sync::Arc::new(
+                    common::remap_through_store(&lg.graph).map_err(|e| e.to_string())?,
+                )
+            } else {
+                lg.graph.clone()
+            };
+            let n = graph.num_vertices();
             let p: f32 = args.get_parsed("p", 0.5)?;
             let q: f32 = args.get_parsed("q", 2.0)?;
             let cfg = crate::node2vec::FnConfig::new(p, q, seed)
                 .with_walk_length(scale.walk_length())
                 .with_variant(crate::node2vec::Variant::Cache)
-                .with_popular_threshold(common::popular_threshold(&lg.graph));
-            let session = crate::node2vec::WalkSession::builder(lg.graph.clone(), cfg)
+                .with_popular_threshold(common::popular_threshold(&graph));
+            let session = crate::node2vec::WalkSession::builder(graph.clone(), cfg)
                 .workers(workers)
                 .build();
             let tcfg = crate::embed::TrainConfig {
@@ -473,6 +558,60 @@ mod cli_tests {
         let walks = crate::node2vec::read_walk_file(&path).unwrap();
         assert_eq!(walks.len(), 32, "one streamed line per seed");
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn gen_convert_info_walk_mmap_round_trip() {
+        let dir = std::env::temp_dir().join(format!("fn2v-cli-store-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let v1 = dir.join("g.bin");
+        let v2 = dir.join("g.fn2v");
+        let v1s = v1.to_str().unwrap().to_string();
+        let v2s = v2.to_str().unwrap().to_string();
+        assert_eq!(run(&["gen", "--graph", "er-10", "--out", &v1s, "--quick"]), 0);
+        assert_eq!(run(&["graph", "convert", "--in", &v1s, "--out", &v2s]), 0);
+        assert_eq!(run(&["graph", "info", "--file", &v2s]), 0);
+        // Serve walks straight off the converted file, mapped.
+        assert_eq!(
+            run(&[
+                "walk", "--graph-file", &v2s, "--variant", "cache", "--mmap", "--quick",
+            ]),
+            0
+        );
+        // Missing pieces fail loudly.
+        assert_eq!(run(&["graph"]), 2);
+        assert_eq!(run(&["graph", "convert", "--in", &v1s]), 2);
+        assert_eq!(run(&["graph", "shrink", "--in", &v1s]), 2);
+        let junk = dir.join("junk.bin");
+        std::fs::write(&junk, b"NOTAGRAPHATALL!!").unwrap();
+        assert_eq!(
+            run(&["walk", "--graph-file", junk.to_str().unwrap(), "--quick"]),
+            2
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn gen_v2_format_and_mmap_on_generated_graph() {
+        let dir = std::env::temp_dir().join(format!("fn2v-cli-genv2-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let v2 = dir.join("direct.fn2v");
+        let v2s = v2.to_str().unwrap().to_string();
+        assert_eq!(
+            run(&["gen", "--graph", "er-10", "--out", &v2s, "--format", "v2", "--quick"]),
+            0
+        );
+        assert_eq!(run(&["graph", "info", "--file", &v2s]), 0);
+        // --mmap on a generated (named) graph spills through the store.
+        assert_eq!(
+            run(&["walk", "--graph", "skew-2", "--variant", "cache", "--mmap", "--quick"]),
+            0
+        );
+        assert_eq!(
+            run(&["gen", "--graph", "er-10", "--out", &v2s, "--format", "v3", "--quick"]),
+            2
+        );
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

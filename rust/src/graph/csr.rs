@@ -18,17 +18,34 @@ use std::sync::{Arc, OnceLock};
 use crate::util::alias::AliasTable;
 use crate::util::rng::Xoshiro256pp;
 
+use super::store::Section;
+
 pub type VertexId = u32;
 
+/// How a [`Graph`]'s CSR arrays are backed (see [`Graph::storage`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StorageKind {
+    /// All sections live in owned heap memory (built or decoded graphs).
+    Owned,
+    /// At least one section is a zero-copy view into a memory-mapped
+    /// FN2VGRF2 file (pages shared through the OS page cache).
+    Mapped,
+}
+
 /// Immutable weighted graph in CSR form.
+///
+/// Each array is a [`Section`]: owned heap memory, or a zero-copy view
+/// into an mmap'd FN2VGRF2 file (`graph::store`). Accessors deref to
+/// plain `&[u64]`/`&[u32]`/`&[f32]` slices either way, so every consumer
+/// — samplers, partitioners, engine, sessions — is backing-agnostic.
 #[derive(Clone, Debug)]
 pub struct Graph {
     /// `offsets.len() == n + 1`; CSR row pointers (u64 so |E| can exceed 4G).
-    offsets: Vec<u64>,
+    offsets: Section<u64>,
     /// Neighbor ids, sorted within each row.
-    adj: Vec<VertexId>,
+    adj: Section<VertexId>,
     /// Edge weights, parallel to `adj`.
-    weights: Vec<f32>,
+    weights: Section<f32>,
     /// Whether the graph was built as undirected (both directions present).
     undirected: bool,
     /// True iff every weight is exactly 1.0 (lets samplers skip weight
@@ -89,7 +106,7 @@ impl FirstOrderTables {
             }
         }
         FirstOrderTables::Weighted {
-            starts: graph.offsets.clone(),
+            starts: graph.offsets.to_vec(),
             prob,
             alias,
             degenerate,
@@ -163,10 +180,29 @@ impl Graph {
         weights: Vec<f32>,
         undirected: bool,
     ) -> Graph {
+        let unit_weights = weights.iter().all(|&w| w == 1.0);
+        Graph::from_sections(
+            Section::owned(offsets),
+            Section::owned(adj),
+            Section::owned(weights),
+            undirected,
+            unit_weights,
+        )
+    }
+
+    /// Assemble a graph over already-backed sections (the `graph::store`
+    /// open path; `unit_weights` comes from the file header so a mapped
+    /// open never has to fault in the weight pages just to detect it).
+    pub(crate) fn from_sections(
+        offsets: Section<u64>,
+        adj: Section<VertexId>,
+        weights: Section<f32>,
+        undirected: bool,
+        unit_weights: bool,
+    ) -> Graph {
         debug_assert!(!offsets.is_empty());
         debug_assert_eq!(*offsets.last().unwrap() as usize, adj.len());
         debug_assert_eq!(adj.len(), weights.len());
-        let unit_weights = weights.iter().all(|&w| w == 1.0);
         Graph {
             offsets,
             adj,
@@ -175,6 +211,33 @@ impl Graph {
             unit_weights,
             sampler_tables: Arc::new(OnceLock::new()),
         }
+    }
+
+    /// How the CSR arrays are backed: [`StorageKind::Mapped`] when any
+    /// section is a zero-copy mmap view.
+    pub fn storage(&self) -> StorageKind {
+        if self.offsets.is_mapped() || self.adj.is_mapped() || self.weights.is_mapped() {
+            StorageKind::Mapped
+        } else {
+            StorageKind::Owned
+        }
+    }
+
+    /// Bytes of topology backed by a memory-mapped file (0 for owned
+    /// graphs): file-backed page cache, faulted lazily and evictable,
+    /// rather than committed heap.
+    pub fn mapped_bytes(&self) -> u64 {
+        let mut total = 0;
+        if self.offsets.is_mapped() {
+            total += self.offsets.byte_len();
+        }
+        if self.adj.is_mapped() {
+            total += self.adj.byte_len();
+        }
+        if self.weights.is_mapped() {
+            total += self.weights.byte_len();
+        }
+        total
     }
 
     /// The per-vertex first-order alias tables (FN-Reject proposals),
@@ -259,10 +322,32 @@ impl Graph {
         0..self.num_vertices() as VertexId
     }
 
-    /// Resident bytes of the topology (offsets + adj + weights) — the
-    /// paper's "base usage" component in Figures 4/14.
+    /// Logical bytes of the topology (offsets + adj + weights) — the
+    /// paper's "base usage" component in Figures 4/14. For mapped graphs
+    /// this is address-space / page-cache footprint, not committed heap
+    /// (see [`Graph::mapped_bytes`]); the simulated memory budget charges
+    /// it either way, which is the conservative choice.
     pub fn memory_bytes(&self) -> u64 {
         (self.offsets.len() * 8 + self.adj.len() * 4 + self.weights.len() * 4) as u64
+    }
+
+    /// Bytes of the first-order sampler tables, if they have been built
+    /// (0 before the first [`Graph::first_order_tables`] call and for
+    /// unit-weight graphs, whose tables are the empty `Uniform` marker).
+    pub fn sampler_table_bytes(&self) -> u64 {
+        self.sampler_tables
+            .get()
+            .map(|t| t.memory_bytes())
+            .unwrap_or(0)
+    }
+
+    /// Everything this graph keeps resident: topology plus any sampler
+    /// tables built on it. This is what the engine's simulated memory
+    /// budget charges — FN-Reject's alias tables are real per-run state,
+    /// and omitting them let runs survive budgets they should OOM under
+    /// (EXPERIMENTS.md §Scale).
+    pub fn resident_bytes(&self) -> u64 {
+        self.memory_bytes() + self.sampler_table_bytes()
     }
 
     /// Table-1 style statistics.
@@ -418,6 +503,28 @@ mod tests {
         // neighbors(0) = [1, 2] with weights [1.0, 3.0] -> 25% / 75%.
         let f0 = counts[0] as f64 / draws as f64;
         assert!((f0 - 0.25).abs() < 0.01, "freq {f0}");
+    }
+
+    #[test]
+    fn built_graphs_are_owned_with_no_mapped_bytes() {
+        let g = triangle_plus_tail();
+        assert_eq!(g.storage(), super::StorageKind::Owned);
+        assert_eq!(g.mapped_bytes(), 0);
+    }
+
+    #[test]
+    fn resident_bytes_counts_tables_once_built() {
+        let mut b = GraphBuilder::new_undirected(3);
+        b.add_edge(0, 1, 1.0);
+        b.add_edge(0, 2, 3.0);
+        let g = b.build();
+        // Before the tables exist, resident == topology.
+        assert_eq!(g.sampler_table_bytes(), 0);
+        assert_eq!(g.resident_bytes(), g.memory_bytes());
+        let t = g.first_order_tables();
+        assert!(t.memory_bytes() > 0);
+        assert_eq!(g.sampler_table_bytes(), t.memory_bytes());
+        assert_eq!(g.resident_bytes(), g.memory_bytes() + t.memory_bytes());
     }
 
     #[test]

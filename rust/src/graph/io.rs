@@ -1,6 +1,17 @@
-//! Graph persistence: whitespace edge lists (SNAP-compatible) and a compact
-//! little-endian binary format so large generated graphs round-trip fast
-//! between the generator CLI and experiment drivers.
+//! Graph persistence: whitespace edge lists (SNAP-compatible) and the
+//! compact little-endian v1 binary format so large generated graphs
+//! round-trip fast between the generator CLI and experiment drivers.
+//!
+//! v1 is the *interchange* format (no padding, weights elided for unit
+//! graphs); the mappable, 64-byte-aligned FN2VGRF2 *storage* format lives
+//! in [`super::store`], which also owns the shared decode/validation
+//! helpers this reader uses. The v1 reader trusts nothing: header counts
+//! are bounded against the file size before any allocation, offsets must
+//! be monotone, neighbor ids in range, weights finite — each failure a
+//! typed [`StoreError`](super::store::StoreError) naming the field — and
+//! the decode streams through a fixed chunk so peak load memory matches
+//! [`Graph::memory_bytes`] instead of the ~2× a transient `|E|`-sized
+//! byte buffer used to cost.
 
 use std::fs::File;
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
@@ -11,8 +22,12 @@ use crate::util::error::{Context, Result};
 
 use super::builder::GraphBuilder;
 use super::csr::{Graph, VertexId};
+use super::store::{decode_le_items, validate_adj, validate_offsets, validate_weights, StoreError};
 
 const MAGIC: &[u8; 8] = b"FN2VGRF1";
+
+/// Fixed v1 header: magic + undirected byte + n + arcs.
+const V1_HEADER_BYTES: u64 = 8 + 1 + 8 + 8;
 
 /// Load a SNAP-style edge list: `src dst [weight]` per line, `#` comments.
 /// Vertex ids must be `< num_vertices` (pass the count since edge lists
@@ -113,48 +128,120 @@ pub fn write_binary(graph: &Graph, path: &Path) -> Result<()> {
 }
 
 /// Read the binary format written by [`write_binary`].
+///
+/// Every structural failure is a typed [`StoreError`] naming the field at
+/// fault (downcast the boxed error to inspect it); a corrupt or truncated
+/// file can never abort the process or panic deep inside walk code.
 pub fn read_binary(path: &Path) -> Result<Graph> {
-    let f = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    read_binary_store(path).map_err(Into::into)
+}
+
+/// [`read_binary`] with the concrete error type (what
+/// [`super::store::open_graph`] dispatches to for v1 files).
+pub(crate) fn read_binary_store(path: &Path) -> std::result::Result<Graph, StoreError> {
+    let rctx = |e: std::io::Error| StoreError::io(format!("read {}", path.display()), e);
+    let f = File::open(path).map_err(|e| StoreError::io(format!("open {}", path.display()), e))?;
+    let file_len = f
+        .metadata()
+        .map_err(|e| StoreError::io(format!("stat {}", path.display()), e))?
+        .len();
+    if file_len < V1_HEADER_BYTES {
+        return Err(StoreError::format(
+            path,
+            "size",
+            format!("file has {file_len} bytes, v1 header alone is {V1_HEADER_BYTES}"),
+        ));
+    }
     let mut r = BufReader::new(f);
     let mut magic = [0u8; 8];
-    r.read_exact(&mut magic)?;
+    r.read_exact(&mut magic).map_err(&rctx)?;
     if &magic != MAGIC {
-        bail!("{}: not a fastn2v binary graph", path.display());
+        return Err(StoreError::format(
+            path,
+            "magic",
+            "not a fastn2v v1 binary graph",
+        ));
     }
     let mut b1 = [0u8; 1];
-    r.read_exact(&mut b1)?;
+    r.read_exact(&mut b1).map_err(&rctx)?;
     let undirected = b1[0] != 0;
     let mut b8 = [0u8; 8];
-    r.read_exact(&mut b8)?;
-    let n = u64::from_le_bytes(b8) as usize;
-    r.read_exact(&mut b8)?;
-    let arcs = u64::from_le_bytes(b8) as usize;
+    r.read_exact(&mut b8).map_err(&rctx)?;
+    let n64 = u64::from_le_bytes(b8);
+    r.read_exact(&mut b8).map_err(&rctx)?;
+    let arcs64 = u64::from_le_bytes(b8);
+
+    // Bound both counts against the file size *before* any allocation is
+    // sized from them: a corrupt header used to drive Vec::with_capacity
+    // straight into an abort.
+    if n64 > u32::MAX as u64 {
+        return Err(StoreError::format(
+            path,
+            "n",
+            format!("{n64} vertices, but vertex ids are u32"),
+        ));
+    }
+    let body = file_len - V1_HEADER_BYTES;
+    let offsets_bytes = (n64 + 1) * 8;
+    if offsets_bytes > body {
+        return Err(StoreError::format(
+            path,
+            "n",
+            format!("{n64} vertices need {offsets_bytes} offset bytes, file body has {body}"),
+        ));
+    }
+    // Body = offsets + adj + unit flag byte [+ weights]. All checked: a
+    // crafted arcs count near 2^62 must become a typed error here, not a
+    // wrapped-around size check that lets the allocation panic below.
+    let arcs_overflow = || StoreError::format(path, "arcs", format!("{arcs64} arcs overflows"));
+    let arcs_bytes = arcs64.checked_mul(4).ok_or_else(arcs_overflow)?;
+    let min_body = offsets_bytes
+        .checked_add(arcs_bytes)
+        .and_then(|x| x.checked_add(1))
+        .ok_or_else(arcs_overflow)?;
+    if min_body > body {
+        return Err(StoreError::format(
+            path,
+            "arcs",
+            format!("{arcs64} arcs need {min_body} body bytes, file body has {body}"),
+        ));
+    }
+    let n = n64 as usize;
+    let arcs = arcs64 as usize;
+
     let mut offsets = Vec::with_capacity(n + 1);
-    for _ in 0..=n {
-        r.read_exact(&mut b8)?;
-        offsets.push(u64::from_le_bytes(b8));
-    }
-    if *offsets.last().unwrap() as usize != arcs {
-        bail!("{}: corrupt offsets", path.display());
-    }
-    let mut adj = vec![0u32; arcs];
-    {
-        let mut buf = vec![0u8; arcs * 4];
-        r.read_exact(&mut buf)?;
-        for (i, c) in buf.chunks_exact(4).enumerate() {
-            adj[i] = u32::from_le_bytes([c[0], c[1], c[2], c[3]]);
-        }
-    }
-    r.read_exact(&mut b1)?;
+    decode_le_items::<_, 8>(&mut r, n + 1, &rctx, |_, b| {
+        offsets.push(u64::from_le_bytes(b))
+    })?;
+    validate_offsets(path, &offsets, arcs64)?;
+
+    let mut adj = Vec::with_capacity(arcs);
+    decode_le_items::<_, 4>(&mut r, arcs, &rctx, |_, b| adj.push(u32::from_le_bytes(b)))?;
+    validate_adj(path, &adj, n64)?;
+
+    r.read_exact(&mut b1).map_err(&rctx)?;
     let unit = b1[0] != 0;
     let weights = if unit {
         vec![1.0f32; arcs]
     } else {
-        let mut buf = vec![0u8; arcs * 4];
-        r.read_exact(&mut buf)?;
-        buf.chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect()
+        // min_body <= body <= file_len, so this cannot overflow; checked
+        // anyway to keep every size computation in this reader total.
+        let weighted_body = min_body
+            .checked_add(arcs_bytes)
+            .ok_or_else(arcs_overflow)?;
+        if weighted_body > body {
+            return Err(StoreError::format(
+                path,
+                "weights",
+                format!("weighted file missing its {arcs_bytes}-byte weights section"),
+            ));
+        }
+        let mut weights = Vec::with_capacity(arcs);
+        decode_le_items::<_, 4>(&mut r, arcs, &rctx, |_, b| {
+            weights.push(f32::from_le_bytes(b))
+        })?;
+        validate_weights(path, &weights)?;
+        weights
     };
     Ok(Graph::from_parts(offsets, adj, weights, undirected))
 }

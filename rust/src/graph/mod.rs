@@ -1,15 +1,23 @@
 //! Graph substrate: compressed-sparse-row adjacency, builders, statistics,
-//! partitioning, and binary/edge-list I/O.
+//! partitioning, binary/edge-list I/O, and the zero-copy storage layer.
 //!
 //! All engines in this crate (the Pregel workers, the single-machine
 //! C-Node2Vec baseline, the Spark simulation) consume the same immutable
-//! [`Graph`], so cross-engine comparisons are apples-to-apples.
+//! [`Graph`], so cross-engine comparisons are apples-to-apples. The graph
+//! itself is backed by [`store::Section`]s — owned heap memory or mmap
+//! views into an FN2VGRF2 file ([`store`]) — without any consumer seeing
+//! the difference.
 
 mod builder;
 mod csr;
 mod io;
 pub mod partition;
+pub mod store;
 
 pub use builder::GraphBuilder;
-pub use csr::{FirstOrderTables, Graph, GraphStats, VertexId};
+pub use csr::{FirstOrderTables, Graph, GraphStats, StorageKind, VertexId};
 pub use io::{load_edge_list, read_binary, save_edge_list, write_binary};
+pub use store::{
+    convert, open_graph, open_v2, read_header, write_v2, ConvertReport, HeaderV2, OpenOptions,
+    Section, StoreError, StoreMode,
+};

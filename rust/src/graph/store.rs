@@ -1,0 +1,944 @@
+//! Graph storage layer: the versioned **FN2VGRF2** on-disk format and the
+//! [`Section`] abstraction that lets a [`Graph`]'s CSR arrays be either
+//! owned heap memory or zero-copy views into a memory-mapped file.
+//!
+//! # Why
+//!
+//! The paper's point is billion-edge Node2Vec on mid-sized machines, but
+//! the v1 load path (`graph/io.rs`) eagerly decodes every array through a
+//! `BufReader` — graph *loading* was the memory and latency wall in front
+//! of the `WalkSession` serving story. DistGER and Tencent's Spark
+//! embedding system both lean on memory-efficient storage to reach
+//! web-scale graphs; FN2VGRF2 is that lever here: open is header-read +
+//! `mmap(2)`, pages fault in lazily, and the page cache shares them across
+//! every session and process serving the same graph file.
+//!
+//! # Format (FN2VGRF2)
+//!
+//! All integers little-endian. One 64-byte checksummed header, then
+//! 64-byte-aligned sections in file order:
+//!
+//! ```text
+//! byte  0..8    magic  "FN2VGRF2"
+//! byte  8..12   version u32 (= 2)
+//! byte 12..16   flags   u32 (bit0 undirected, bit1 unit_weights)
+//! byte 16..24   n       u64 (vertex count; ids are u32, so n <= u32::MAX)
+//! byte 24..32   arcs    u64 (stored adjacency entries)
+//! byte 32..40   offsets section start (= 64)
+//! byte 40..48   adj     section start
+//! byte 48..56   weights section start
+//! byte 56..64   fxhash64 of bytes 0..56
+//! ```
+//!
+//! Sections: `offsets` is `(n+1)·u64`, `adj` is `arcs·u32`, `weights` is
+//! `arcs·f32`. The weights section is written even for unit-weight graphs
+//! (all `1.0`, flagged in the header so samplers still skip lookups):
+//! +4 bytes/arc of disk buys a layout whose three sections can *always* be
+//! mapped in place, keeping [`Graph`]'s accessors (`&[u32]`/`&[f32]`)
+//! backing-agnostic. v1 stays the compact interchange format; `fastn2v
+//! graph convert` migrates between them.
+//!
+//! # Opening
+//!
+//! [`open_graph`] sniffs the magic and dispatches: v2 files honor the
+//! requested [`StoreMode`]; v1 files always decode into owned memory
+//! (their unaligned, optionally-weightless layout has nothing to map).
+//! A mapped open is a header read plus `mmap` — O(1) — followed by a
+//! zero-allocation verification scan of the offsets/adj sections (monotone
+//! offsets, in-range neighbor ids) unless [`OpenOptions::trusted`]
+//! disables it; `trusted` makes open literally O(1) for files this
+//! process (or a trusted pipeline) wrote. On targets without mmap support
+//! ([`Mmap::supported`]), a mapped request silently downgrades to the
+//! owned read-and-decode fallback, which is also what v1 files use.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::util::mmap::Mmap;
+
+use super::csr::Graph;
+
+/// v2 magic (v1 is `FN2VGRF1`, handled by `graph/io.rs`).
+pub const MAGIC_V2: &[u8; 8] = b"FN2VGRF2";
+pub(crate) const MAGIC_V1: &[u8; 8] = b"FN2VGRF1";
+
+const VERSION: u32 = 2;
+const HEADER_BYTES: usize = 64;
+const SECTION_ALIGN: u64 = 64;
+const FLAG_UNDIRECTED: u32 = 1;
+const FLAG_UNIT_WEIGHTS: u32 = 2;
+
+/// Decode-chunk size for the owned read path: the fixed transient buffer
+/// that replaced the v1 reader's second `|E|`-sized copy, so load peak
+/// matches [`Graph::memory_bytes`] plus one of these.
+pub(crate) const DECODE_CHUNK_BYTES: usize = 1 << 20;
+
+/// Marker for element types that can be reinterpreted in place from the
+/// little-endian on-disk bytes of a mapped section.
+///
+/// # Safety
+///
+/// Implementors must be valid for every bit pattern of their size and
+/// contain no padding, pointers, or interior mutability.
+pub unsafe trait Pod: Copy + std::fmt::Debug + 'static {}
+unsafe impl Pod for u32 {}
+unsafe impl Pod for u64 {}
+unsafe impl Pod for f32 {}
+
+/// One CSR array of a [`Graph`]: `Owned` heap memory (built graphs, v1
+/// loads, owned v2 opens) or a `Mapped` typed view into a shared
+/// [`Mmap`] (zero-copy v2 opens). Derefs to `&[T]`, so every accessor on
+/// [`Graph`] keeps returning plain slices and the samplers, partitioners,
+/// engine and session layers never see the difference.
+#[derive(Clone, Debug)]
+pub enum Section<T: Pod> {
+    Owned(Vec<T>),
+    Mapped {
+        map: Arc<Mmap>,
+        byte_offset: usize,
+        len: usize,
+    },
+}
+
+impl<T: Pod> Section<T> {
+    pub fn owned(v: Vec<T>) -> Section<T> {
+        Section::Owned(v)
+    }
+
+    /// Typed view of `len` elements at `byte_offset` into `map`. Errors
+    /// (never panics) on out-of-bounds or misaligned ranges so a corrupt
+    /// section table surfaces as a typed open failure.
+    pub(crate) fn mapped(
+        map: Arc<Mmap>,
+        byte_offset: usize,
+        len: usize,
+    ) -> Result<Section<T>, String> {
+        let width = std::mem::size_of::<T>();
+        let bytes = len
+            .checked_mul(width)
+            .ok_or_else(|| "section length overflows".to_string())?;
+        let end = byte_offset
+            .checked_add(bytes)
+            .ok_or_else(|| "section end overflows".to_string())?;
+        if end > map.len() {
+            return Err(format!(
+                "section [{byte_offset}..{end}) out of bounds for a {}-byte map",
+                map.len()
+            ));
+        }
+        if (map.as_ptr() as usize + byte_offset) % std::mem::align_of::<T>() != 0 {
+            return Err(format!(
+                "section at byte {byte_offset} misaligned for {}",
+                std::any::type_name::<T>()
+            ));
+        }
+        Ok(Section::Mapped {
+            map,
+            byte_offset,
+            len,
+        })
+    }
+
+    #[inline]
+    pub fn is_mapped(&self) -> bool {
+        matches!(self, Section::Mapped { .. })
+    }
+
+    /// The elements, regardless of backing.
+    #[inline]
+    pub fn as_slice(&self) -> &[T] {
+        match self {
+            Section::Owned(v) => v.as_slice(),
+            Section::Mapped {
+                map,
+                byte_offset,
+                len,
+            } => {
+                // SAFETY: construction checked bounds and alignment; the
+                // map is immutable (PROT_READ) and outlives the borrow via
+                // the Arc held by self; T: Pod accepts any bit pattern.
+                unsafe {
+                    std::slice::from_raw_parts(
+                        map.as_ptr().add(*byte_offset) as *const T,
+                        *len,
+                    )
+                }
+            }
+        }
+    }
+
+    /// Logical size in bytes (heap for `Owned`, file-backed page cache
+    /// for `Mapped`).
+    pub fn byte_len(&self) -> u64 {
+        (self.as_slice().len() * std::mem::size_of::<T>()) as u64
+    }
+}
+
+impl<T: Pod> std::ops::Deref for Section<T> {
+    type Target = [T];
+
+    #[inline]
+    fn deref(&self) -> &[T] {
+        self.as_slice()
+    }
+}
+
+/// How to back a v2 open: decode into owned heap memory, or map the file.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StoreMode {
+    Owned,
+    Mapped,
+}
+
+/// Options for [`open_graph`] / [`open_v2`].
+#[derive(Clone, Copy, Debug)]
+pub struct OpenOptions {
+    pub mode: StoreMode,
+    /// Skip the O(n+E) structural verification scan (monotone offsets,
+    /// in-range neighbor ids, finite weights) after the O(1) header
+    /// checks, making a mapped open literally O(1). Only for files from a
+    /// trusted pipeline: a corrupt trusted file can panic later, deep
+    /// inside walk code — exactly what default opens exist to prevent.
+    pub trusted: bool,
+}
+
+impl Default for OpenOptions {
+    fn default() -> Self {
+        OpenOptions {
+            mode: StoreMode::Owned,
+            trusted: false,
+        }
+    }
+}
+
+impl OpenOptions {
+    pub fn owned() -> OpenOptions {
+        OpenOptions::default()
+    }
+
+    pub fn mapped() -> OpenOptions {
+        OpenOptions {
+            mode: StoreMode::Mapped,
+            trusted: false,
+        }
+    }
+
+    pub fn trusted(mut self, yes: bool) -> OpenOptions {
+        self.trusted = yes;
+        self
+    }
+}
+
+/// Typed failure of any storage operation. `Format` names the exact
+/// header field or section at fault — the per-field contract the
+/// corrupt-file matrix (tests/storage.rs) pins.
+#[derive(Debug)]
+pub enum StoreError {
+    /// Underlying I/O failure (open/read/write/mmap).
+    Io {
+        context: String,
+        source: std::io::Error,
+    },
+    /// Structurally invalid file.
+    Format {
+        path: PathBuf,
+        field: &'static str,
+        detail: String,
+    },
+    /// Valid request this build cannot serve.
+    Unsupported { detail: String },
+}
+
+impl StoreError {
+    pub(crate) fn io(context: impl Into<String>, source: std::io::Error) -> StoreError {
+        StoreError::Io {
+            context: context.into(),
+            source,
+        }
+    }
+
+    pub(crate) fn format(
+        path: &Path,
+        field: &'static str,
+        detail: impl Into<String>,
+    ) -> StoreError {
+        StoreError::Format {
+            path: path.to_path_buf(),
+            field,
+            detail: detail.into(),
+        }
+    }
+
+    /// The header field / section a `Format` error blames (test hook).
+    pub fn field(&self) -> Option<&'static str> {
+        match self {
+            StoreError::Format { field, .. } => Some(field),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for StoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StoreError::Io { context, source } => write!(f, "{context}: {source}"),
+            StoreError::Format {
+                path,
+                field,
+                detail,
+            } => write!(f, "{}: invalid {field}: {detail}", path.display()),
+            StoreError::Unsupported { detail } => write!(f, "{detail}"),
+        }
+    }
+}
+
+impl std::error::Error for StoreError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            StoreError::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed, validated FN2VGRF2 header.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HeaderV2 {
+    pub undirected: bool,
+    pub unit_weights: bool,
+    pub n: u64,
+    pub arcs: u64,
+    pub offsets_start: u64,
+    pub adj_start: u64,
+    pub weights_start: u64,
+}
+
+impl HeaderV2 {
+    /// Minimum file size the section table implies.
+    pub fn expected_file_bytes(&self) -> u64 {
+        self.weights_start + self.arcs * 4
+    }
+}
+
+pub(crate) fn fxhash64(bytes: &[u8]) -> u64 {
+    use std::hash::Hasher;
+    let mut h = crate::util::fxhash::FxHasher::default();
+    h.write(bytes);
+    h.finish()
+}
+
+fn align_up(x: u64) -> u64 {
+    x.div_ceil(SECTION_ALIGN) * SECTION_ALIGN
+}
+
+fn le_u32(b: &[u8]) -> u32 {
+    u32::from_le_bytes(b.try_into().unwrap())
+}
+
+fn le_u64(b: &[u8]) -> u64 {
+    u64::from_le_bytes(b.try_into().unwrap())
+}
+
+/// O(1) header validation: every field bounded before a single byte of
+/// section data is read or a single allocation sized from the file.
+fn parse_header(
+    path: &Path,
+    h: &[u8; HEADER_BYTES],
+    file_len: u64,
+) -> Result<HeaderV2, StoreError> {
+    if &h[0..8] != MAGIC_V2 {
+        if &h[0..8] == MAGIC_V1 {
+            return Err(StoreError::format(
+                path,
+                "magic",
+                "version-1 file; open via open_graph (owned) or migrate with `fastn2v graph convert`",
+            ));
+        }
+        return Err(StoreError::format(path, "magic", "not an FN2VGRF2 graph file"));
+    }
+    let version = le_u32(&h[8..12]);
+    if version != VERSION {
+        return Err(StoreError::format(
+            path,
+            "version",
+            format!("unsupported version {version} (expected {VERSION})"),
+        ));
+    }
+    let stored_sum = le_u64(&h[56..64]);
+    let computed = fxhash64(&h[..56]);
+    if stored_sum != computed {
+        return Err(StoreError::format(
+            path,
+            "checksum",
+            format!("header checksum mismatch (stored {stored_sum:#x}, computed {computed:#x})"),
+        ));
+    }
+    let flags = le_u32(&h[12..16]);
+    if flags & !(FLAG_UNDIRECTED | FLAG_UNIT_WEIGHTS) != 0 {
+        return Err(StoreError::format(
+            path,
+            "flags",
+            format!("unknown flag bits {flags:#x}"),
+        ));
+    }
+    let n = le_u64(&h[16..24]);
+    if n > u32::MAX as u64 {
+        return Err(StoreError::format(
+            path,
+            "n",
+            format!("{n} vertices, but vertex ids are u32"),
+        ));
+    }
+    let arcs = le_u64(&h[24..32]);
+    let offsets_start = le_u64(&h[32..40]);
+    let adj_start = le_u64(&h[40..48]);
+    let weights_start = le_u64(&h[48..56]);
+    if offsets_start != HEADER_BYTES as u64 {
+        return Err(StoreError::format(
+            path,
+            "sections",
+            format!("offsets section must start at {HEADER_BYTES}, got {offsets_start}"),
+        ));
+    }
+    for (name, start) in [
+        ("offsets", offsets_start),
+        ("adj", adj_start),
+        ("weights", weights_start),
+    ] {
+        if start % SECTION_ALIGN != 0 {
+            return Err(StoreError::format(
+                path,
+                "sections",
+                format!("{name} section start {start} not {SECTION_ALIGN}-byte aligned"),
+            ));
+        }
+    }
+    // n <= u32::MAX, so (n + 1) * 8 cannot overflow u64.
+    let offsets_bytes = (n + 1) * 8;
+    let adj_bytes = arcs
+        .checked_mul(4)
+        .ok_or_else(|| StoreError::format(path, "arcs", format!("{arcs} arcs overflows")))?;
+    let adj_min = offsets_start
+        .checked_add(offsets_bytes)
+        .ok_or_else(|| StoreError::format(path, "n", format!("{n} vertices overflows")))?;
+    if adj_start < adj_min {
+        return Err(StoreError::format(
+            path,
+            "sections",
+            format!("adj section at {adj_start} overlaps offsets (need >= {adj_min})"),
+        ));
+    }
+    let weights_min = adj_start.checked_add(adj_bytes).ok_or_else(|| {
+        StoreError::format(path, "arcs", format!("{arcs} arcs overflows the section table"))
+    })?;
+    if weights_start < weights_min {
+        return Err(StoreError::format(
+            path,
+            "sections",
+            format!("weights section at {weights_start} overlaps adj (need >= {weights_min})"),
+        ));
+    }
+    let expected = weights_start.checked_add(adj_bytes).ok_or_else(|| {
+        StoreError::format(path, "arcs", format!("{arcs} arcs overflows the file size"))
+    })?;
+    if file_len < expected {
+        return Err(StoreError::format(
+            path,
+            "size",
+            format!("file truncated: section table needs {expected} bytes, file has {file_len}"),
+        ));
+    }
+    Ok(HeaderV2 {
+        undirected: flags & FLAG_UNDIRECTED != 0,
+        unit_weights: flags & FLAG_UNIT_WEIGHTS != 0,
+        n,
+        arcs,
+        offsets_start,
+        adj_start,
+        weights_start,
+    })
+}
+
+/// Read and validate just the 64-byte header of a v2 file (O(1); what
+/// `fastn2v graph info` prints).
+pub fn read_header(path: &Path) -> Result<HeaderV2, StoreError> {
+    let mut f =
+        File::open(path).map_err(|e| StoreError::io(format!("open {}", path.display()), e))?;
+    let file_len = f
+        .metadata()
+        .map_err(|e| StoreError::io(format!("stat {}", path.display()), e))?
+        .len();
+    if file_len < HEADER_BYTES as u64 {
+        return Err(StoreError::format(
+            path,
+            "size",
+            format!("file has {file_len} bytes, header alone is {HEADER_BYTES}"),
+        ));
+    }
+    let mut h = [0u8; HEADER_BYTES];
+    f.read_exact(&mut h)
+        .map_err(|e| StoreError::io(format!("read header of {}", path.display()), e))?;
+    parse_header(path, &h, file_len)
+}
+
+// ---- structural validation shared by the mapped and owned open paths ----
+
+pub(crate) fn validate_offsets(path: &Path, offsets: &[u64], arcs: u64) -> Result<(), StoreError> {
+    if offsets.first() != Some(&0) {
+        return Err(StoreError::format(
+            path,
+            "offsets",
+            "first offset must be 0",
+        ));
+    }
+    let mut prev = 0u64;
+    for (i, &o) in offsets.iter().enumerate() {
+        if o < prev {
+            return Err(StoreError::format(
+                path,
+                "offsets",
+                format!("non-monotone at index {i}: {o} < {prev}"),
+            ));
+        }
+        if o > arcs {
+            return Err(StoreError::format(
+                path,
+                "offsets",
+                format!("offset {o} at index {i} exceeds arc count {arcs}"),
+            ));
+        }
+        prev = o;
+    }
+    if prev != arcs {
+        return Err(StoreError::format(
+            path,
+            "offsets",
+            format!("last offset {prev} must equal arc count {arcs}"),
+        ));
+    }
+    Ok(())
+}
+
+pub(crate) fn validate_adj(path: &Path, adj: &[u32], n: u64) -> Result<(), StoreError> {
+    for (i, &v) in adj.iter().enumerate() {
+        if v as u64 >= n {
+            return Err(StoreError::format(
+                path,
+                "adj",
+                format!("neighbor id {v} at arc {i} out of range for {n} vertices"),
+            ));
+        }
+    }
+    Ok(())
+}
+
+pub(crate) fn validate_weights(path: &Path, weights: &[f32]) -> Result<(), StoreError> {
+    for (i, &w) in weights.iter().enumerate() {
+        if !w.is_finite() || w < 0.0 {
+            return Err(StoreError::format(
+                path,
+                "weights",
+                format!("weight {w} at arc {i} is not finite and non-negative"),
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Stream `count` little-endian `W`-byte items from `r` through `emit`
+/// using one fixed [`DECODE_CHUNK_BYTES`] buffer — the owned decode path
+/// whose peak matches the destination array plus one chunk (the v1 reader
+/// used to stage a second `|E|`-sized copy).
+pub(crate) fn decode_le_items<R: Read, const W: usize>(
+    r: &mut R,
+    count: usize,
+    on_io: impl Fn(std::io::Error) -> StoreError,
+    mut emit: impl FnMut(usize, [u8; W]),
+) -> Result<(), StoreError> {
+    let cap = DECODE_CHUNK_BYTES / W * W;
+    let mut buf = vec![0u8; cap.min(count.max(1) * W)];
+    let mut done = 0usize;
+    while done < count {
+        let take = ((count - done) * W).min(buf.len());
+        r.read_exact(&mut buf[..take]).map_err(&on_io)?;
+        for (j, c) in buf[..take].chunks_exact(W).enumerate() {
+            let mut a = [0u8; W];
+            a.copy_from_slice(c);
+            emit(done + j, a);
+        }
+        done += take / W;
+    }
+    Ok(())
+}
+
+fn skip_bytes<R: Read>(
+    r: &mut R,
+    mut count: u64,
+    on_io: impl Fn(std::io::Error) -> StoreError,
+) -> Result<(), StoreError> {
+    let mut buf = [0u8; 64];
+    while count > 0 {
+        let take = count.min(64) as usize;
+        r.read_exact(&mut buf[..take]).map_err(&on_io)?;
+        count -= take as u64;
+    }
+    Ok(())
+}
+
+/// Write `graph` as FN2VGRF2 (see the module docs for the layout).
+pub fn write_v2(graph: &Graph, path: &Path) -> Result<(), StoreError> {
+    let wctx = |e: std::io::Error| StoreError::io(format!("write {}", path.display()), e);
+    let f =
+        File::create(path).map_err(|e| StoreError::io(format!("create {}", path.display()), e))?;
+    let mut w = BufWriter::new(f);
+    let n = graph.num_vertices() as u64;
+    let arcs = graph.num_arcs() as u64;
+    let offsets_start = HEADER_BYTES as u64;
+    let adj_start = align_up(offsets_start + (n + 1) * 8);
+    let weights_start = align_up(adj_start + arcs * 4);
+
+    let mut header = [0u8; HEADER_BYTES];
+    header[0..8].copy_from_slice(MAGIC_V2);
+    header[8..12].copy_from_slice(&VERSION.to_le_bytes());
+    let mut flags = 0u32;
+    if graph.is_undirected() {
+        flags |= FLAG_UNDIRECTED;
+    }
+    if graph.has_unit_weights() {
+        flags |= FLAG_UNIT_WEIGHTS;
+    }
+    header[12..16].copy_from_slice(&flags.to_le_bytes());
+    header[16..24].copy_from_slice(&n.to_le_bytes());
+    header[24..32].copy_from_slice(&arcs.to_le_bytes());
+    header[32..40].copy_from_slice(&offsets_start.to_le_bytes());
+    header[40..48].copy_from_slice(&adj_start.to_le_bytes());
+    header[48..56].copy_from_slice(&weights_start.to_le_bytes());
+    let sum = fxhash64(&header[..56]);
+    header[56..64].copy_from_slice(&sum.to_le_bytes());
+    w.write_all(&header).map_err(&wctx)?;
+
+    let pad = [0u8; SECTION_ALIGN as usize];
+    let mut off = 0u64;
+    w.write_all(&off.to_le_bytes()).map_err(&wctx)?;
+    for v in graph.vertices() {
+        off += graph.degree(v) as u64;
+        w.write_all(&off.to_le_bytes()).map_err(&wctx)?;
+    }
+    let offsets_end = offsets_start + (n + 1) * 8;
+    w.write_all(&pad[..(adj_start - offsets_end) as usize])
+        .map_err(&wctx)?;
+    for v in graph.vertices() {
+        for &d in graph.neighbors(v) {
+            w.write_all(&d.to_le_bytes()).map_err(&wctx)?;
+        }
+    }
+    let adj_end = adj_start + arcs * 4;
+    w.write_all(&pad[..(weights_start - adj_end) as usize])
+        .map_err(&wctx)?;
+    for v in graph.vertices() {
+        for &wt in graph.weights(v) {
+            w.write_all(&wt.to_le_bytes()).map_err(&wctx)?;
+        }
+    }
+    w.flush().map_err(&wctx)
+}
+
+/// Open an FN2VGRF2 file. Mapped mode is zero-copy (and downgrades to
+/// owned where [`Mmap::supported`] is false); see [`OpenOptions`] for the
+/// trusted/verified distinction.
+pub fn open_v2(path: &Path, opts: &OpenOptions) -> Result<Graph, StoreError> {
+    let rctx = |e: std::io::Error| StoreError::io(format!("read {}", path.display()), e);
+    let mut f =
+        File::open(path).map_err(|e| StoreError::io(format!("open {}", path.display()), e))?;
+    let file_len = f
+        .metadata()
+        .map_err(|e| StoreError::io(format!("stat {}", path.display()), e))?
+        .len();
+    if file_len < HEADER_BYTES as u64 {
+        return Err(StoreError::format(
+            path,
+            "size",
+            format!("file has {file_len} bytes, header alone is {HEADER_BYTES}"),
+        ));
+    }
+    let mut hbytes = [0u8; HEADER_BYTES];
+    f.read_exact(&mut hbytes).map_err(&rctx)?;
+    let h = parse_header(path, &hbytes, file_len)?;
+
+    let mapped = opts.mode == StoreMode::Mapped && Mmap::supported();
+    if opts.mode == StoreMode::Mapped && !mapped {
+        crate::log_debug!(
+            "mmap unsupported on this target; reading {} into owned memory",
+            path.display()
+        );
+    }
+
+    if mapped {
+        let map = Arc::new(
+            Mmap::map(&f).map_err(|e| StoreError::io(format!("mmap {}", path.display()), e))?,
+        );
+        let sect = |d: String| StoreError::format(path, "sections", d);
+        let offsets =
+            Section::<u64>::mapped(map.clone(), h.offsets_start as usize, (h.n + 1) as usize)
+                .map_err(sect)?;
+        let adj = Section::<u32>::mapped(map.clone(), h.adj_start as usize, h.arcs as usize)
+            .map_err(sect)?;
+        let weights = Section::<f32>::mapped(map, h.weights_start as usize, h.arcs as usize)
+            .map_err(sect)?;
+        if !opts.trusted {
+            validate_offsets(path, &offsets, h.arcs)?;
+            validate_adj(path, &adj, h.n)?;
+            // Unit-weight graphs never read their (all-1.0) weights, so
+            // skip faulting those pages in; weighted rows are load-bearing.
+            if !h.unit_weights {
+                validate_weights(path, &weights)?;
+            }
+        }
+        Ok(Graph::from_sections(
+            offsets,
+            adj,
+            weights,
+            h.undirected,
+            h.unit_weights,
+        ))
+    } else {
+        let mut r = BufReader::new(f);
+        let n = h.n as usize;
+        let arcs = h.arcs as usize;
+        let mut offsets = Vec::with_capacity(n + 1);
+        decode_le_items::<_, 8>(&mut r, n + 1, &rctx, |_, b| {
+            offsets.push(u64::from_le_bytes(b))
+        })?;
+        skip_bytes(&mut r, h.adj_start - (h.offsets_start + (h.n + 1) * 8), &rctx)?;
+        let mut adj = Vec::with_capacity(arcs);
+        decode_le_items::<_, 4>(&mut r, arcs, &rctx, |_, b| adj.push(u32::from_le_bytes(b)))?;
+        skip_bytes(&mut r, h.weights_start - (h.adj_start + h.arcs * 4), &rctx)?;
+        let mut weights = Vec::with_capacity(arcs);
+        decode_le_items::<_, 4>(&mut r, arcs, &rctx, |_, b| {
+            weights.push(f32::from_le_bytes(b))
+        })?;
+        if !opts.trusted {
+            validate_offsets(path, &offsets, h.arcs)?;
+            validate_adj(path, &adj, h.n)?;
+            if !h.unit_weights {
+                validate_weights(path, &weights)?;
+            }
+        }
+        Ok(Graph::from_sections(
+            Section::owned(offsets),
+            Section::owned(adj),
+            Section::owned(weights),
+            h.undirected,
+            h.unit_weights,
+        ))
+    }
+}
+
+/// Open a graph file of either format, sniffing the magic: FN2VGRF2
+/// honors `opts`; v1 always decodes into owned memory (nothing mappable
+/// in its layout — convert it first for zero-copy opens).
+pub fn open_graph(path: &Path, opts: &OpenOptions) -> Result<Graph, StoreError> {
+    let mut f =
+        File::open(path).map_err(|e| StoreError::io(format!("open {}", path.display()), e))?;
+    let mut magic = [0u8; 8];
+    if let Err(e) = f.read_exact(&mut magic) {
+        return Err(StoreError::format(
+            path,
+            "magic",
+            format!("file too short for a graph magic: {e}"),
+        ));
+    }
+    drop(f);
+    if &magic == MAGIC_V2 {
+        open_v2(path, opts)
+    } else if &magic == MAGIC_V1 {
+        if opts.mode == StoreMode::Mapped {
+            crate::log_debug!(
+                "{} is a v1 file with no mappable layout; decoding into owned memory \
+                 (run `fastn2v graph convert` for zero-copy opens)",
+                path.display()
+            );
+        }
+        super::io::read_binary_store(path)
+    } else {
+        Err(StoreError::format(
+            path,
+            "magic",
+            "not a fastn2v graph file (v1 or FN2VGRF2)",
+        ))
+    }
+}
+
+/// What [`convert`] produced.
+#[derive(Clone, Copy, Debug)]
+pub struct ConvertReport {
+    pub vertices: u64,
+    pub arcs: u64,
+    pub bytes_written: u64,
+}
+
+/// Migrate a graph file (v1 or v2) to FN2VGRF2 at `dst` — the `fastn2v
+/// graph convert` entry point.
+pub fn convert(src: &Path, dst: &Path) -> Result<ConvertReport, StoreError> {
+    let g = open_graph(src, &OpenOptions::owned())?;
+    write_v2(&g, dst)?;
+    let bytes_written = std::fs::metadata(dst)
+        .map_err(|e| StoreError::io(format!("stat {}", dst.display()), e))?
+        .len();
+    Ok(ConvertReport {
+        vertices: g.num_vertices() as u64,
+        arcs: g.num_arcs() as u64,
+        bytes_written,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{self, GenConfig};
+    use crate::graph::GraphBuilder;
+
+    fn tmp(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("fn2v-store-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d.join(name)
+    }
+
+    fn assert_same_graph(a: &Graph, b: &Graph) {
+        assert_eq!(a.num_vertices(), b.num_vertices());
+        assert_eq!(a.num_arcs(), b.num_arcs());
+        assert_eq!(a.is_undirected(), b.is_undirected());
+        assert_eq!(a.has_unit_weights(), b.has_unit_weights());
+        for v in a.vertices() {
+            assert_eq!(a.neighbors(v), b.neighbors(v), "row {v}");
+            assert_eq!(a.weights(v), b.weights(v), "weights {v}");
+        }
+    }
+
+    #[test]
+    fn v2_round_trip_owned() {
+        let g = gen::er_graph(&GenConfig::new(128, 6, 5));
+        let p = tmp("rt_owned.fn2v");
+        write_v2(&g, &p).unwrap();
+        let g2 = open_v2(&p, &OpenOptions::owned()).unwrap();
+        assert_same_graph(&g, &g2);
+        assert_eq!(g2.storage(), crate::graph::StorageKind::Owned);
+    }
+
+    #[test]
+    fn v2_round_trip_mapped() {
+        if !Mmap::supported() {
+            eprintln!("skipping: mmap unsupported on this target");
+            return;
+        }
+        let g = gen::er_graph(&GenConfig::new(128, 6, 5));
+        let p = tmp("rt_mapped.fn2v");
+        write_v2(&g, &p).unwrap();
+        let g2 = open_v2(&p, &OpenOptions::mapped()).unwrap();
+        assert_same_graph(&g, &g2);
+        assert_eq!(g2.storage(), crate::graph::StorageKind::Mapped);
+    }
+
+    #[test]
+    fn v2_weighted_round_trip_preserves_flag_and_weights() {
+        let mut b = GraphBuilder::new_undirected(6);
+        b.add_edge(0, 1, 2.5);
+        b.add_edge(1, 2, 0.5);
+        b.add_edge(4, 5, 7.0);
+        let g = b.build();
+        let p = tmp("rt_weighted.fn2v");
+        write_v2(&g, &p).unwrap();
+        let g2 = open_v2(&p, &OpenOptions::owned()).unwrap();
+        assert!(!g2.has_unit_weights());
+        assert_same_graph(&g, &g2);
+    }
+
+    #[test]
+    fn header_reports_aligned_sections() {
+        let g = gen::er_graph(&GenConfig::new(100, 5, 9));
+        let p = tmp("aligned.fn2v");
+        write_v2(&g, &p).unwrap();
+        let h = read_header(&p).unwrap();
+        assert_eq!(h.offsets_start, 64);
+        assert_eq!(h.adj_start % 64, 0);
+        assert_eq!(h.weights_start % 64, 0);
+        assert_eq!(h.n, 100);
+        assert!(h.unit_weights && h.undirected);
+        assert!(std::fs::metadata(&p).unwrap().len() >= h.expected_file_bytes());
+    }
+
+    #[test]
+    fn tampered_header_fails_checksum() {
+        let g = gen::er_graph(&GenConfig::new(64, 4, 1));
+        let p = tmp("tamper.fn2v");
+        write_v2(&g, &p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[20] ^= 0x40; // flip a bit inside the n field
+        std::fs::write(&p, &bytes).unwrap();
+        let err = open_v2(&p, &OpenOptions::owned()).unwrap_err();
+        assert_eq!(err.field(), Some("checksum"), "{err}");
+    }
+
+    #[test]
+    fn open_graph_dispatches_v1() {
+        let g = gen::er_graph(&GenConfig::new(64, 4, 2));
+        let p = tmp("dispatch_v1.bin");
+        crate::graph::write_binary(&g, &p).unwrap();
+        // A mapped request on v1 downgrades to owned instead of failing.
+        let g2 = open_graph(&p, &OpenOptions::mapped()).unwrap();
+        assert_same_graph(&g, &g2);
+        assert_eq!(g2.storage(), crate::graph::StorageKind::Owned);
+    }
+
+    #[test]
+    fn open_graph_rejects_junk() {
+        let p = tmp("junk.any");
+        std::fs::write(&p, b"JUNKJUNKJUNKJUNK").unwrap();
+        let err = open_graph(&p, &OpenOptions::owned()).unwrap_err();
+        assert_eq!(err.field(), Some("magic"));
+        std::fs::write(&p, b"1234").unwrap();
+        let err = open_graph(&p, &OpenOptions::owned()).unwrap_err();
+        assert_eq!(err.field(), Some("magic"));
+    }
+
+    #[test]
+    fn convert_v1_to_v2() {
+        let g = gen::er_graph(&GenConfig::new(200, 8, 3));
+        let v1 = tmp("conv.bin");
+        let v2 = tmp("conv.fn2v");
+        crate::graph::write_binary(&g, &v1).unwrap();
+        let rep = convert(&v1, &v2).unwrap();
+        assert_eq!(rep.vertices, 200);
+        assert_eq!(rep.arcs, g.num_arcs() as u64);
+        let g2 = open_v2(&v2, &OpenOptions::owned()).unwrap();
+        assert_same_graph(&g, &g2);
+    }
+
+    #[test]
+    fn empty_graph_round_trips() {
+        let g = GraphBuilder::new_undirected(3).build();
+        let p = tmp("empty.fn2v");
+        write_v2(&g, &p).unwrap();
+        let g2 = open_v2(&p, &OpenOptions::owned()).unwrap();
+        assert_eq!(g2.num_vertices(), 3);
+        assert_eq!(g2.num_arcs(), 0);
+    }
+
+    #[test]
+    fn section_misalignment_is_typed_error() {
+        if !Mmap::supported() {
+            eprintln!("skipping: mmap unsupported on this target");
+            return;
+        }
+        // A 12-byte-offset u64 view can never be 8-byte aligned relative
+        // to the (page-aligned) map base.
+        let p = tmp("misalign.raw");
+        std::fs::write(&p, vec![0u8; 4096]).unwrap();
+        let map = Arc::new(Mmap::map(&File::open(&p).unwrap()).unwrap());
+        assert!(Section::<u64>::mapped(map.clone(), 12, 4).is_err());
+        assert!(Section::<u64>::mapped(map.clone(), 16, 4).is_ok());
+        assert!(Section::<u32>::mapped(map, 4000, 100).is_err()); // out of bounds
+    }
+}

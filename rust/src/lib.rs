@@ -3,7 +3,8 @@
 //! Reproduction of "Efficient Graph Computation for Node2Vec" (Zhou, Niu,
 //! Chen, 2018). The crate is organized as:
 //!
-//! - [`graph`]   — CSR graph substrate, partitioning, stats, I/O.
+//! - [`graph`]   — CSR graph substrate, partitioning, stats, I/O, and the
+//!                 zero-copy FN2VGRF2 storage layer (mmap-backed graphs).
 //! - [`gen`]     — RMAT / ER / WeC / Skew / labeled-community generators.
 //! - [`pregel`]  — GraphLite-like BSP engine (master + worker threads,
 //!                 supersteps, messages, vote-to-halt, local-access APIs).

@@ -37,6 +37,7 @@ use std::path::Path;
 use std::sync::Arc;
 
 use crate::graph::partition::Partitioner;
+use crate::graph::store::{open_graph, OpenOptions, StoreError};
 use crate::graph::{Graph, VertexId};
 use crate::pregel::{Engine, EngineError, EngineMetrics, EngineOpts, WorkerPlan};
 
@@ -451,6 +452,21 @@ impl WalkSessionBuilder {
             workers: 4,
             opts: EngineOpts::default(),
         }
+    }
+
+    /// Start from a graph *file* (v1 or FN2VGRF2) instead of an already
+    /// loaded `Arc<Graph>` — the serving entry point for graphs that live
+    /// on disk. With [`OpenOptions::mapped`] a v2 file is opened zero-copy
+    /// (O(1) plus a verification scan; pages shared across every session
+    /// and process mapping the same file), so "load a graph bigger than
+    /// RAM headroom and serve walks from it" is one call.
+    pub fn open(
+        path: impl AsRef<Path>,
+        cfg: FnConfig,
+        store: &OpenOptions,
+    ) -> Result<WalkSessionBuilder, StoreError> {
+        let graph = Arc::new(open_graph(path.as_ref(), store)?);
+        Ok(WalkSessionBuilder::new(graph, cfg))
     }
 
     pub fn workers(mut self, workers: usize) -> Self {

@@ -520,7 +520,11 @@ impl<'g, P: VertexProgram> Engine<'g, P> {
             peak_bytes: AtomicU64::new(0),
         };
 
-        let graph_bytes = self.graph.memory_bytes();
+        // Charge the graph as served, not just its topology: FN-Reject's
+        // first-order alias tables are real resident state built before
+        // the run, and a budget that ignored them let runs survive limits
+        // they should OOM under (skewing the §Perf memory claims).
+        let graph_bytes = self.graph.resident_bytes();
         let opts = self.opts;
 
         let worker_outputs: Vec<Vec<P::Value>> = std::thread::scope(|scope| {
@@ -1057,6 +1061,50 @@ mod tests {
             Err(EngineError::OutOfMemory { .. }) => {}
             other => panic!("expected OOM, got {:?}", other.err()),
         }
+    }
+
+    #[test]
+    fn memory_budget_counts_sampler_tables_on_weighted_graphs() {
+        // A *weighted* graph so the FN-Reject alias tables are non-empty
+        // (unit-weight graphs store the free Uniform marker): once built,
+        // a budget that clears the topology but not the tables must OOM.
+        let mut b = GraphBuilder::new_undirected(2000);
+        for v in 0..2000u32 {
+            b.add_edge(v, (v * 7 + 1) % 2000, 1.5);
+            b.add_edge(v, (v * 13 + 3) % 2000, 0.5);
+        }
+        let g = b.build();
+        let tables = g.first_order_tables();
+        assert!(tables.memory_bytes() > 0, "weighted graph must have tables");
+        assert_eq!(g.resident_bytes(), g.memory_bytes() + tables.memory_bytes());
+
+        // Budget below resident graph state: OOMs at the first barrier
+        // (this exact run survived when only memory_bytes() was charged).
+        let eng = Engine::new(
+            &g,
+            Partitioner::hash(2),
+            SumIds { rounds: 1 },
+            EngineOpts {
+                memory_budget: Some(g.memory_bytes() + tables.memory_bytes() / 2),
+                ..Default::default()
+            },
+        );
+        match eng.run() {
+            Err(EngineError::OutOfMemory { .. }) => {}
+            other => panic!("expected OOM, got {:?}", other.err()),
+        }
+
+        // Same run with honest headroom over resident state completes.
+        let eng = Engine::new(
+            &g,
+            Partitioner::hash(2),
+            SumIds { rounds: 1 },
+            EngineOpts {
+                memory_budget: Some(g.resident_bytes() + 10_000_000),
+                ..Default::default()
+            },
+        );
+        assert!(eng.run().is_ok());
     }
 
     #[test]

@@ -1,0 +1,227 @@
+//! Thin read-only `mmap` wrapper (the `memmap2` crate is unavailable
+//! offline, and the crate is dependency-free by policy — see Cargo.toml).
+//!
+//! On 64-bit unix this maps a file `MAP_SHARED | PROT_READ` straight over
+//! the raw `mmap(2)`/`munmap(2)` syscalls (std already links libc, so a
+//! two-function `extern "C"` block is all the FFI needed). Everywhere else
+//! — non-unix targets, or 32-bit unix where `off_t`'s width makes the
+//! declared ABI unsound — [`Mmap::supported`] reports `false` and callers
+//! fall back to reading the file into owned memory
+//! (`graph::store::OpenOptions` documents the downgrade).
+//!
+//! The mapping is immutable and file-backed: pages are shared through the
+//! OS page cache across every process mapping the same file, faulted in
+//! lazily on first touch, and evictable under memory pressure — the
+//! property that lets a [`Graph`](crate::graph::Graph) bigger than RAM
+//! headroom serve walks (ROADMAP: billion-edge graphs on mid-sized
+//! machines).
+
+use std::fs::File;
+use std::io;
+
+/// A read-only memory mapping of an entire file. `Send + Sync`: the pages
+/// are immutable (`PROT_READ`) for the lifetime of the map.
+pub struct Mmap {
+    ptr: *const u8,
+    len: usize,
+}
+
+// SAFETY: the mapping is PROT_READ for its whole lifetime; concurrent
+// reads of immutable memory are safe, and munmap happens exactly once in
+// Drop (Mmap is not Clone — sharing goes through Arc<Mmap>).
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+impl std::fmt::Debug for Mmap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Mmap")
+            .field("ptr", &self.ptr)
+            .field("len", &self.len)
+            .finish()
+    }
+}
+
+impl Mmap {
+    /// Whether this build can memory-map at all. `false` means
+    /// [`Mmap::map`] always errors and callers should read into owned
+    /// memory instead. Little-endian is required because mapped sections
+    /// are reinterpreted in place from the little-endian on-disk layout.
+    pub fn supported() -> bool {
+        cfg!(all(unix, target_pointer_width = "64", target_endian = "little"))
+    }
+
+    /// Map the whole of `file` read-only. Fails on unsupported targets
+    /// (see [`Mmap::supported`]), on zero-length files (`mmap` rejects
+    /// empty ranges), or when the syscall itself fails.
+    pub fn map(file: &File) -> io::Result<Mmap> {
+        let len = file.metadata()?.len();
+        if len == 0 {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                "cannot mmap an empty file",
+            ));
+        }
+        if len > usize::MAX as u64 {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                "file too large for the address space",
+            ));
+        }
+        sys::map(file, len as usize)
+    }
+
+    /// Base pointer of the mapping.
+    #[inline]
+    pub fn as_ptr(&self) -> *const u8 {
+        self.ptr
+    }
+
+    /// Length of the mapping in bytes.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The mapped bytes.
+    #[inline]
+    pub fn as_slice(&self) -> &[u8] {
+        // SAFETY: ptr/len describe a live PROT_READ mapping owned by self.
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        sys::unmap(self.ptr, self.len);
+    }
+}
+
+#[cfg(all(unix, target_pointer_width = "64", target_endian = "little"))]
+mod sys {
+    use std::fs::File;
+    use std::io;
+    use std::os::raw::{c_int, c_void};
+    use std::os::unix::io::AsRawFd;
+
+    // POSIX-universal values (Linux, macOS, BSDs agree on these three).
+    const PROT_READ: c_int = 1;
+    const MAP_SHARED: c_int = 1;
+
+    extern "C" {
+        // 64-bit targets only: off_t is 64-bit there, so the declared
+        // signature matches the platform ABI (the module cfg guarantees it).
+        fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+
+    pub(super) fn map(file: &File, len: usize) -> io::Result<super::Mmap> {
+        // SAFETY: fd is a live descriptor borrowed from `file`; a SHARED +
+        // READ mapping of [0, len) of a regular file has no aliasing
+        // requirements on our side. MAP_FAILED is (void*)-1.
+        let ptr = unsafe {
+            mmap(
+                std::ptr::null_mut(),
+                len,
+                PROT_READ,
+                MAP_SHARED,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr as isize == -1 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(super::Mmap {
+            ptr: ptr as *const u8,
+            len,
+        })
+    }
+
+    pub(super) fn unmap(ptr: *const u8, len: usize) {
+        // SAFETY: exactly the (ptr, len) returned by map(); called once.
+        unsafe {
+            munmap(ptr as *mut c_void, len);
+        }
+    }
+}
+
+#[cfg(not(all(unix, target_pointer_width = "64", target_endian = "little")))]
+mod sys {
+    use std::fs::File;
+    use std::io;
+
+    pub(super) fn map(_file: &File, _len: usize) -> io::Result<super::Mmap> {
+        Err(io::Error::new(
+            io::ErrorKind::Unsupported,
+            "mmap is only wired up on 64-bit little-endian unix; \
+             open the graph in owned mode instead",
+        ))
+    }
+
+    pub(super) fn unmap(_ptr: *const u8, _len: usize) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn tmp_file(name: &str, bytes: &[u8]) -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(format!("fn2v-mmap-{}-{name}", std::process::id()));
+        let mut f = File::create(&p).unwrap();
+        f.write_all(bytes).unwrap();
+        p
+    }
+
+    #[test]
+    fn maps_file_contents_when_supported() {
+        if !Mmap::supported() {
+            eprintln!("skipping: mmap unsupported on this target");
+            return;
+        }
+        let p = tmp_file("basic", b"hello graph store");
+        let m = Mmap::map(&File::open(&p).unwrap()).unwrap();
+        assert_eq!(m.len(), 17);
+        assert_eq!(m.as_slice(), b"hello graph store");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn empty_file_is_rejected() {
+        let p = tmp_file("empty", b"");
+        assert!(Mmap::map(&File::open(&p).unwrap()).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn mapping_is_shareable_across_threads() {
+        if !Mmap::supported() {
+            eprintln!("skipping: mmap unsupported on this target");
+            return;
+        }
+        let p = tmp_file("shared", &[7u8; 4096]);
+        let m = std::sync::Arc::new(Mmap::map(&File::open(&p).unwrap()).unwrap());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let m = m.clone();
+                std::thread::spawn(move || m.as_slice().iter().map(|&b| b as u64).sum::<u64>())
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 7 * 4096);
+        }
+        std::fs::remove_file(&p).ok();
+    }
+}

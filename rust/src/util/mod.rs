@@ -14,6 +14,7 @@ pub mod error;
 pub mod fxhash;
 pub mod logging;
 pub mod memstat;
+pub mod mmap;
 pub mod propkit;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,416 @@
+//! Storage-layer contract tests: the corrupt-file matrix for both binary
+//! formats (every failure a typed `StoreError` naming the field — never a
+//! panic or abort) and the conformance guarantee that a session served
+//! from an mmap-backed FN2VGRF2 graph yields walks bit-identical to the
+//! owned in-memory path, across all 6 variants × {hash, degree}
+//! partitioners.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use fastn2v::gen::{skew_graph, GenConfig};
+use fastn2v::graph::{
+    convert, open_graph, open_v2, read_binary, read_header, write_binary, write_v2, Graph,
+    GraphBuilder, OpenOptions, StorageKind, StoreError,
+};
+use fastn2v::node2vec::{
+    FnConfig, PartitionerKind, Variant, WalkRequest, WalkSession, WalkSessionBuilder,
+};
+use fastn2v::util::mmap::Mmap;
+
+fn tmp(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("fn2v-storage-tests-{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d.join(name)
+}
+
+fn test_graph() -> Graph {
+    skew_graph(&GenConfig::new(512, 12, 29), 3.0)
+}
+
+fn weighted_graph() -> Graph {
+    let mut b = GraphBuilder::new_undirected(64);
+    for v in 0..64u32 {
+        b.add_edge(v, (v + 1) % 64, 1.0 + (v % 5) as f32);
+        b.add_edge(v, (v * 3 + 7) % 64, 0.5);
+    }
+    b.build()
+}
+
+fn assert_same_graph(a: &Graph, b: &Graph) {
+    assert_eq!(a.num_vertices(), b.num_vertices());
+    assert_eq!(a.num_arcs(), b.num_arcs());
+    assert_eq!(a.is_undirected(), b.is_undirected());
+    assert_eq!(a.has_unit_weights(), b.has_unit_weights());
+    for v in a.vertices() {
+        assert_eq!(a.neighbors(v), b.neighbors(v), "row {v}");
+        assert_eq!(a.weights(v), b.weights(v), "weights {v}");
+    }
+}
+
+fn fxhash64(bytes: &[u8]) -> u64 {
+    use std::hash::Hasher;
+    let mut h = fastn2v::util::fxhash::FxHasher::default();
+    h.write(bytes);
+    h.finish()
+}
+
+/// Patch raw bytes of a file on disk.
+fn patch(path: &Path, offset: usize, bytes: &[u8]) {
+    let mut all = std::fs::read(path).unwrap();
+    all[offset..offset + bytes.len()].copy_from_slice(bytes);
+    std::fs::write(path, &all).unwrap();
+}
+
+/// Patch a v2 *header* field and rewrite the checksum so the corruption
+/// under test is the field itself, not the checksum covering it.
+fn patch_v2_header(path: &Path, offset: usize, bytes: &[u8]) {
+    let mut all = std::fs::read(path).unwrap();
+    all[offset..offset + bytes.len()].copy_from_slice(bytes);
+    let sum = fxhash64(&all[..56]);
+    all[56..64].copy_from_slice(&sum.to_le_bytes());
+    std::fs::write(path, &all).unwrap();
+}
+
+fn truncate(path: &Path, len: u64) {
+    let all = std::fs::read(path).unwrap();
+    std::fs::write(path, &all[..len as usize]).unwrap();
+}
+
+/// Every open mode a corrupt v2 file must fail typed under.
+fn open_v2_all_modes(path: &Path) -> Vec<Result<Graph, StoreError>> {
+    let mut outs = vec![open_v2(path, &OpenOptions::owned())];
+    if Mmap::supported() {
+        outs.push(open_v2(path, &OpenOptions::mapped()));
+    }
+    outs
+}
+
+fn assert_field(results: Vec<Result<Graph, StoreError>>, field: &str, case: &str) {
+    for r in results {
+        match r {
+            Err(e) => assert_eq!(e.field(), Some(field), "{case}: {e}"),
+            Ok(_) => panic!("{case}: corrupt file opened successfully"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------- v2 matrix
+
+#[test]
+fn v2_corrupt_bad_magic() {
+    let p = tmp("v2_magic.fn2v");
+    write_v2(&test_graph(), &p).unwrap();
+    patch(&p, 0, b"XX");
+    assert_field(open_v2_all_modes(&p), "magic", "bad magic");
+}
+
+#[test]
+fn v2_corrupt_bad_version() {
+    let p = tmp("v2_version.fn2v");
+    write_v2(&test_graph(), &p).unwrap();
+    patch_v2_header(&p, 8, &9u32.to_le_bytes());
+    assert_field(open_v2_all_modes(&p), "version", "bad version");
+}
+
+#[test]
+fn v2_corrupt_checksum() {
+    let p = tmp("v2_checksum.fn2v");
+    write_v2(&test_graph(), &p).unwrap();
+    // Patch the arcs field *without* re-checksumming.
+    patch(&p, 24, &7u64.to_le_bytes());
+    assert_field(open_v2_all_modes(&p), "checksum", "stale checksum");
+}
+
+#[test]
+fn v2_corrupt_huge_n() {
+    let p = tmp("v2_huge_n.fn2v");
+    write_v2(&test_graph(), &p).unwrap();
+    // n beyond u32: rejected before any allocation is sized from it.
+    patch_v2_header(&p, 16, &(u64::MAX / 2).to_le_bytes());
+    assert_field(open_v2_all_modes(&p), "n", "huge n");
+    // n large but plausible-as-u32: the section table no longer fits the
+    // file, so the size check rejects it, still O(1).
+    patch_v2_header(&p, 16, &4_000_000_000u64.to_le_bytes());
+    for r in open_v2_all_modes(&p) {
+        let e = r.err().expect("huge-n file opened");
+        assert!(
+            matches!(e.field(), Some("size") | Some("sections") | Some("n")),
+            "unexpected field: {e}"
+        );
+    }
+}
+
+#[test]
+fn v2_corrupt_truncated_sections() {
+    let g = test_graph();
+    let p = tmp("v2_trunc.fn2v");
+    write_v2(&g, &p).unwrap();
+    let h = read_header(&p).unwrap();
+    truncate(&p, h.expected_file_bytes() - 10);
+    assert_field(open_v2_all_modes(&p), "size", "truncated weights");
+    truncate(&p, h.adj_start + 4);
+    assert_field(open_v2_all_modes(&p), "size", "truncated adj");
+    truncate(&p, 40);
+    for r in open_v2_all_modes(&p) {
+        assert!(r.is_err(), "truncated header opened");
+    }
+}
+
+#[test]
+fn v2_corrupt_non_monotone_offsets() {
+    let g = test_graph();
+    let p = tmp("v2_offsets.fn2v");
+    write_v2(&g, &p).unwrap();
+    // offsets[2] smaller than offsets[1]: section starts at byte 64.
+    let off1 = g.degree(0) as u64 + 1;
+    patch(&p, 64 + 8, &off1.to_le_bytes());
+    patch(&p, 64 + 16, &0u64.to_le_bytes());
+    assert_field(open_v2_all_modes(&p), "offsets", "non-monotone offsets");
+}
+
+#[test]
+fn v2_corrupt_out_of_range_neighbor() {
+    let g = test_graph();
+    let p = tmp("v2_adj.fn2v");
+    write_v2(&g, &p).unwrap();
+    let h = read_header(&p).unwrap();
+    let bad = (g.num_vertices() as u32) + 5;
+    patch(&p, h.adj_start as usize, &bad.to_le_bytes());
+    assert_field(open_v2_all_modes(&p), "adj", "out-of-range neighbor");
+}
+
+#[test]
+fn v2_corrupt_weights() {
+    let g = weighted_graph();
+    let p = tmp("v2_weights.fn2v");
+    write_v2(&g, &p).unwrap();
+    let h = read_header(&p).unwrap();
+    assert!(!h.unit_weights);
+    patch(&p, h.weights_start as usize, &f32::NAN.to_le_bytes());
+    assert_field(open_v2_all_modes(&p), "weights", "NaN weight");
+}
+
+#[test]
+fn v2_trusted_open_skips_structural_scan() {
+    // `trusted` documents its contract: the O(n+E) verification is the
+    // only thing standing between a corrupt body and later panics, and
+    // skipping it really does skip it (the O(1) header checks remain).
+    let g = test_graph();
+    let p = tmp("v2_trusted.fn2v");
+    write_v2(&g, &p).unwrap();
+    let off1 = g.degree(0) as u64 + 1;
+    patch(&p, 64 + 8, &off1.to_le_bytes());
+    patch(&p, 64 + 16, &0u64.to_le_bytes());
+    assert!(open_v2(&p, &OpenOptions::owned()).is_err());
+    assert!(open_v2(&p, &OpenOptions::owned().trusted(true)).is_ok());
+}
+
+// ---------------------------------------------------------------- v1 matrix
+//
+// v1 layout: magic 0..8 | undirected 8 | n 9..17 | arcs 17..25 |
+// offsets 25.. | adj | unit flag | [weights].
+
+#[test]
+fn v1_corrupt_bad_magic() {
+    let p = tmp("v1_magic.bin");
+    write_binary(&test_graph(), &p).unwrap();
+    patch(&p, 0, b"ZZ");
+    let e = read_binary(&p).unwrap_err();
+    let e = e.downcast_ref::<StoreError>().expect("typed error");
+    assert_eq!(e.field(), Some("magic"));
+}
+
+#[test]
+fn v1_corrupt_huge_n_rejected_before_allocation() {
+    let p = tmp("v1_huge_n.bin");
+    write_binary(&test_graph(), &p).unwrap();
+    // This used to drive Vec::with_capacity straight into an abort.
+    patch(&p, 9, &(u64::MAX / 2).to_le_bytes());
+    let e = read_binary(&p).unwrap_err();
+    let e = e.downcast_ref::<StoreError>().expect("typed error");
+    assert_eq!(e.field(), Some("n"), "{e}");
+    patch(&p, 9, &1_000_000_000u64.to_le_bytes());
+    let e = read_binary(&p).unwrap_err();
+    let e = e.downcast_ref::<StoreError>().expect("typed error");
+    assert_eq!(e.field(), Some("n"), "{e}");
+}
+
+#[test]
+fn v1_corrupt_huge_arcs() {
+    let p = tmp("v1_huge_arcs.bin");
+    write_binary(&test_graph(), &p).unwrap();
+    patch(&p, 17, &(u64::MAX / 8).to_le_bytes());
+    let e = read_binary(&p).unwrap_err();
+    let e = e.downcast_ref::<StoreError>().expect("typed error");
+    assert_eq!(e.field(), Some("arcs"), "{e}");
+    // arcs near 2^62: arcs*4 survives checked_mul but the body-size sum
+    // would wrap without checked_add, sailing past the guard into a
+    // capacity-overflow panic. Must stay a typed error.
+    patch(&p, 17, &(u64::MAX / 4 - 1).to_le_bytes());
+    let e = read_binary(&p).unwrap_err();
+    let e = e.downcast_ref::<StoreError>().expect("typed error");
+    assert_eq!(e.field(), Some("arcs"), "{e}");
+}
+
+#[test]
+fn v1_corrupt_truncated() {
+    let g = test_graph();
+    let p = tmp("v1_trunc.bin");
+    write_binary(&g, &p).unwrap();
+    let len = std::fs::metadata(&p).unwrap().len();
+    truncate(&p, len - 10);
+    // Dropping 10 tail bytes makes the declared arcs overrun the body.
+    assert!(read_binary(&p).is_err());
+    truncate(&p, 12);
+    let e = read_binary(&p).unwrap_err();
+    let e = e.downcast_ref::<StoreError>().expect("typed error");
+    assert_eq!(e.field(), Some("size"), "{e}");
+}
+
+#[test]
+fn v1_corrupt_non_monotone_offsets() {
+    let g = test_graph();
+    let p = tmp("v1_offsets.bin");
+    write_binary(&g, &p).unwrap();
+    let off1 = g.degree(0) as u64 + 1;
+    patch(&p, 25 + 8, &off1.to_le_bytes());
+    patch(&p, 25 + 16, &0u64.to_le_bytes());
+    let e = read_binary(&p).unwrap_err();
+    let e = e.downcast_ref::<StoreError>().expect("typed error");
+    assert_eq!(e.field(), Some("offsets"), "{e}");
+}
+
+#[test]
+fn v1_corrupt_out_of_range_neighbor() {
+    let g = test_graph();
+    let p = tmp("v1_adj.bin");
+    write_binary(&g, &p).unwrap();
+    let adj_start = 25 + (g.num_vertices() + 1) * 8;
+    let bad = (g.num_vertices() as u32) + 1;
+    patch(&p, adj_start, &bad.to_le_bytes());
+    let e = read_binary(&p).unwrap_err();
+    let e = e.downcast_ref::<StoreError>().expect("typed error");
+    assert_eq!(e.field(), Some("adj"), "{e}");
+}
+
+#[test]
+fn v1_corrupt_weights() {
+    let g = weighted_graph();
+    let p = tmp("v1_weights.bin");
+    write_binary(&g, &p).unwrap();
+    let weights_start = 25 + (g.num_vertices() + 1) * 8 + g.num_arcs() * 4 + 1;
+    patch(&p, weights_start, &(-3.0f32).to_le_bytes());
+    let e = read_binary(&p).unwrap_err();
+    let e = e.downcast_ref::<StoreError>().expect("typed error");
+    assert_eq!(e.field(), Some("weights"), "{e}");
+}
+
+#[test]
+fn v1_still_loads_and_matches_v2_after_convert() {
+    let g = test_graph();
+    let v1 = tmp("rt.bin");
+    let v2 = tmp("rt.fn2v");
+    write_binary(&g, &v1).unwrap();
+    let g1 = read_binary(&v1).unwrap();
+    assert_same_graph(&g, &g1);
+    let rep = convert(&v1, &v2).unwrap();
+    assert_eq!(rep.vertices, g.num_vertices() as u64);
+    assert_eq!(rep.arcs, g.num_arcs() as u64);
+    let g2 = open_graph(&v2, &OpenOptions::mapped()).unwrap();
+    assert_same_graph(&g, &g2);
+    if Mmap::supported() {
+        assert_eq!(g2.storage(), StorageKind::Mapped);
+        assert!(g2.mapped_bytes() > 0);
+    }
+}
+
+// ------------------------------------------------------------- conformance
+
+fn collect_walks(
+    graph: Arc<Graph>,
+    variant: Variant,
+    partitioner: PartitionerKind,
+) -> Vec<Vec<u32>> {
+    let cfg = FnConfig::new(0.5, 2.0, 71)
+        .with_walk_length(8)
+        .with_popular_threshold(24)
+        .with_variant(variant)
+        .with_partitioner(partitioner);
+    let session = WalkSession::builder(graph, cfg).workers(4).build();
+    session
+        .collect(&WalkRequest::all())
+        .expect("conformance run failed")
+        .walks
+}
+
+/// The acceptance criterion: a `WalkSession` over an mmap-opened v2 graph
+/// yields walks bit-identical to the owned in-memory path, for all 6
+/// variants × {hash, degree} partitioners.
+#[test]
+fn mmap_and_owned_sessions_walk_identically() {
+    let g = test_graph();
+    let p = tmp("conformance.fn2v");
+    write_v2(&g, &p).unwrap();
+    let in_memory = Arc::new(g);
+    let owned = Arc::new(open_graph(&p, &OpenOptions::owned()).unwrap());
+    let mapped = Arc::new(open_graph(&p, &OpenOptions::mapped()).unwrap());
+    if Mmap::supported() {
+        assert_eq!(mapped.storage(), StorageKind::Mapped);
+    }
+    for variant in Variant::ALL {
+        for partitioner in [PartitionerKind::Hash, PartitionerKind::DegreeAware] {
+            let reference = collect_walks(in_memory.clone(), variant, partitioner);
+            let from_owned = collect_walks(owned.clone(), variant, partitioner);
+            let from_mapped = collect_walks(mapped.clone(), variant, partitioner);
+            assert_eq!(
+                reference,
+                from_owned,
+                "{} / {:?}: owned-from-file diverged",
+                variant.name(),
+                partitioner
+            );
+            assert_eq!(
+                reference,
+                from_mapped,
+                "{} / {:?}: mmap-backed diverged",
+                variant.name(),
+                partitioner
+            );
+        }
+    }
+}
+
+#[test]
+fn session_builder_opens_a_path_directly() {
+    let g = weighted_graph();
+    let p = tmp("builder_open.fn2v");
+    write_v2(&g, &p).unwrap();
+    let cfg = FnConfig::new(0.5, 2.0, 7)
+        .with_walk_length(6)
+        .with_variant(Variant::Reject);
+    let from_path = WalkSessionBuilder::open(&p, cfg, &OpenOptions::mapped())
+        .unwrap()
+        .workers(2)
+        .build();
+    let in_memory = WalkSession::builder(Arc::new(g), cfg).workers(2).build();
+    let a = from_path.collect(&WalkRequest::all()).unwrap().walks;
+    let b = in_memory.collect(&WalkRequest::all()).unwrap().walks;
+    assert_eq!(a, b, "path-opened session diverged from in-memory session");
+    // FN-Reject on a weighted graph: the alias tables exist and are now
+    // charged by the engine budget (resident > topology).
+    let served = from_path.graph();
+    assert!(served.resident_bytes() > served.memory_bytes());
+}
+
+#[test]
+fn session_builder_open_propagates_typed_errors() {
+    let p = tmp("builder_open_bad.fn2v");
+    std::fs::write(&p, b"JUNKJUNKJUNK").unwrap();
+    let cfg = FnConfig::new(0.5, 2.0, 7);
+    let err = match WalkSessionBuilder::open(&p, cfg, &OpenOptions::owned()) {
+        Err(e) => e,
+        Ok(_) => panic!("junk file opened"),
+    };
+    assert_eq!(err.field(), Some("magic"));
+}
