@@ -1,9 +1,11 @@
 //! End-to-end walk-engine comparison (the paper's Figure 7/13 axis): all
 //! FN variants plus both baselines on a skewed R-MAT graph, reported as
 //! wall time and steps/second — plus a linear-vs-rejection sampler
-//! head-to-head and a partitioning ablation (hash / range / degree-aware ×
-//! hot-vertex splitting, EXPERIMENTS.md §Partitioning) that records a
-//! machine-readable baseline in `BENCH_walks.json` for future PRs.
+//! head-to-head, a partitioning ablation (hash / range / degree-aware ×
+//! hot-vertex splitting, EXPERIMENTS.md §Partitioning) and the SGNS
+//! trainer throughput grid (threads × {hogwild, sharded},
+//! EXPERIMENTS.md §Train), all recorded as a machine-readable baseline in
+//! `BENCH_walks.json` for future PRs.
 //!
 //! Run: `cargo bench --bench walk_engines`
 //! (FASTN2V_BENCH_FULL=1 for a larger graph; FASTN2V_BENCH_OUT to move the
@@ -11,6 +13,7 @@
 //! `-- --quick` for the CI smoke run: tiny graph, JSON write skipped
 //! unless FASTN2V_BENCH_OUT is set.)
 
+use fastn2v::embed::{Corpus, ParallelSgns, TrainConfig, TrainMode};
 use fastn2v::exp::common::{popular_threshold, run_fn_with_cfg, run_solution, Solution};
 use fastn2v::exp::pipeline::{
     partition_ablation, session_amortization, PartitionAblationRow, SessionAmortization,
@@ -201,6 +204,44 @@ fn main() {
         &store_table,
     );
 
+    // ---- sgns_train: parallel trainer throughput, threads × mode ----
+    // The walk engine's consumer: steps/sec of the SGNS stage for both
+    // update disciplines at 1/2/4/8 workers (EXPERIMENTS.md §Train).
+    let sgns = sgns_train_bench(&g, walk_len.min(20), quick);
+    let sgns_table: Vec<(String, Vec<String>)> = sgns
+        .rows
+        .iter()
+        .map(|r| {
+            (
+                format!("{}/t{}", r.mode, r.threads),
+                vec![
+                    fastn2v::util::fmt_secs(r.wall_secs),
+                    format!("{:.0} steps/s", r.steps_per_sec),
+                    format!("{:.3}", r.final_loss),
+                ],
+            )
+        })
+        .collect();
+    print_table(
+        &format!(
+            "sgns train ({} steps, batch {} x {} negs, dim {})",
+            sgns.steps, sgns.batch, sgns.negatives, sgns.dim
+        ),
+        &["wall", "throughput", "final loss"],
+        &sgns_table,
+    );
+    let sgns_of = |mode: &str, threads: usize| {
+        sgns.rows
+            .iter()
+            .find(|r| r.mode == mode && r.threads == threads)
+            .map(|r| r.steps_per_sec)
+    };
+    if let (Some(serial), Some(par)) = (sgns_of("hogwild", 1), sgns_of("hogwild", 8)) {
+        if serial > 0.0 {
+            println!("hogwild train speedup, 8 threads vs serial: {:.2}x", par / serial);
+        }
+    }
+
     let secs_of = |name: &str| rows.iter().find(|r| r.name == name).and_then(|r| r.secs);
     let speedup = |a: Option<f64>, b: Option<f64>| match (a, b) {
         (Some(a), Some(b)) if b > 0.0 => Some(a / b),
@@ -233,10 +274,82 @@ fn main() {
         ratio_reduction,
         &amort,
         &store,
+        &sgns,
     );
     match std::fs::write(&out_path, &json) {
         Ok(()) => println!("baseline written to {out_path}"),
         Err(e) => eprintln!("could not write {out_path}: {e}"),
+    }
+}
+
+struct SgnsTrainRow {
+    mode: &'static str,
+    threads: usize,
+    wall_secs: f64,
+    steps_per_sec: f64,
+    final_loss: f32,
+}
+
+struct SgnsTrainBench {
+    dim: usize,
+    batch: usize,
+    negatives: usize,
+    steps: u32,
+    rows: Vec<SgnsTrainRow>,
+}
+
+/// Walk the bench graph once (FN-Cache), then train SGNS over the corpus
+/// for every (mode, threads) cell, reporting steps/sec. Each cell gets a
+/// fresh model so the work per cell is identical.
+fn sgns_train_bench(
+    g: &std::sync::Arc<fastn2v::graph::Graph>,
+    walk_len: u32,
+    quick: bool,
+) -> SgnsTrainBench {
+    let cfg = FnConfig::new(0.5, 2.0, 3)
+        .with_walk_length(walk_len)
+        .with_popular_threshold(popular_threshold(g))
+        .with_variant(Variant::Cache);
+    let session = WalkSession::builder(g.clone(), cfg).workers(4).build();
+    let walks = session.collect(&WalkRequest::all()).expect("bench walks").walks;
+    let n = g.num_vertices();
+    let corpus = Corpus::new(&walks, n);
+    let (dim, batch, negatives) = (64usize, 256usize, 5usize);
+    let steps: u32 = if quick { 60 } else { 600 };
+    let mut rows = Vec::new();
+    for mode in [TrainMode::Hogwild, TrainMode::Sharded] {
+        for threads in [1usize, 2, 4, 8] {
+            let tcfg = TrainConfig {
+                steps,
+                log_every: steps, // first + last point only
+                seed: 7,
+                threads,
+                mode,
+                ..Default::default()
+            };
+            let mut model = ParallelSgns::from_config(n, dim, &tcfg);
+            let t = std::time::Instant::now();
+            let curve = model.train(&corpus, &tcfg, batch, negatives);
+            let wall_secs = t.elapsed().as_secs_f64();
+            rows.push(SgnsTrainRow {
+                mode: mode.name(),
+                threads,
+                wall_secs,
+                steps_per_sec: if wall_secs > 0.0 {
+                    f64::from(steps) / wall_secs
+                } else {
+                    0.0
+                },
+                final_loss: curve.last().map(|l| l.loss).unwrap_or(f32::NAN),
+            });
+        }
+    }
+    SgnsTrainBench {
+        dim,
+        batch,
+        negatives,
+        steps,
+        rows,
     }
 }
 
@@ -320,6 +433,7 @@ fn render_json(
     ratio_reduction: Option<f64>,
     amort: &SessionAmortization,
     store: &GraphStoreBench,
+    sgns: &SgnsTrainBench,
 ) -> String {
     let stats = g.stats();
     let fmt_opt = |o: Option<f64>| o.map(|v| format!("{v:.3}")).unwrap_or_else(|| "null".into());
@@ -388,6 +502,22 @@ fn render_json(
             r.open_secs,
             r.first_walk_secs,
             if i + 1 < store.rows.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]},\n");
+    s.push_str(&format!(
+        "  \"sgns_train\": {{\"dim\": {}, \"batch\": {}, \"negatives\": {}, \"steps\": {}, \"rows\": [\n",
+        sgns.dim, sgns.batch, sgns.negatives, sgns.steps
+    ));
+    for (i, r) in sgns.rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"mode\": \"{}\", \"threads\": {}, \"wall_secs\": {:.6}, \"steps_per_sec\": {:.2}, \"final_loss\": {:.4}}}{}\n",
+            r.mode,
+            r.threads,
+            r.wall_secs,
+            r.steps_per_sec,
+            r.final_loss,
+            if i + 1 < sgns.rows.len() { "," } else { "" }
         ));
     }
     s.push_str("  ]},\n");

@@ -14,12 +14,22 @@
 //! - the learning rate decays linearly.
 //!
 //! Two ways in:
-//! - **staged** — [`train`] / [`RustSgns::train`] over a complete
-//!   [`Corpus`] (walks fully materialized first);
+//! - **staged** — [`train`] / [`RustSgns::train`] /
+//!   [`ParallelSgns::train`] over a complete [`Corpus`] (walks fully
+//!   materialized first);
 //! - **pipelined** — [`TrainerSink`] plugs into the walk engine's
 //!   [`WalkSink`](crate::node2vec::WalkSink) interface and trains on each
 //!   FN-Multi round's walks as the round completes, so SGNS no longer
 //!   waits for the last walk and at most one round of walks is resident.
+//!
+//! Three backends sit behind [`SgnsBackend`]: the PJRT runtime, the
+//! serial pure-Rust oracle ([`RustSgns`]), and the multi-threaded
+//! [`ParallelSgns`] ([`parallel`]) that trains with all cores in
+//! `hogwild` or `sharded` mode (`--train-threads` / `--train-mode`).
+
+pub mod parallel;
+
+pub use parallel::{EmbeddingMatrix, ParallelSgns, TrainMode};
 
 use crate::graph::VertexId;
 use crate::node2vec::{RoundStats, WalkSet, WalkSink};
@@ -27,6 +37,12 @@ use crate::runtime::SgnsRuntime;
 use crate::util::alias::AliasTable;
 use crate::util::error::Result;
 use crate::util::rng::{stream, Xoshiro256pp};
+
+/// Stream tag of all staged/pipelined batch-sampling RNGs: the staged
+/// trainers draw from `stream(seed, BATCH_STREAM_TAG, 0, 0)`,
+/// [`TrainerSink`] from index 1, hogwild workers `t >= 1` from `t + 1`
+/// (see [`parallel::worker_stream_index`]).
+pub(crate) const BATCH_STREAM_TAG: u64 = 0xBA7C;
 
 /// Trainer configuration.
 #[derive(Clone, Copy, Debug)]
@@ -40,6 +56,16 @@ pub struct TrainConfig {
     /// Log the loss every `log_every` steps (0 = never). Each log costs a
     /// state download on the CPU PJRT plugin — keep sparse.
     pub log_every: u32,
+    /// SGD worker threads. 1 trains on the serial path (bit-identical to
+    /// the historical oracle); above 1 the [`ParallelSgns`] subsystem
+    /// fans the step budget across a persistent worker pool fed by a
+    /// batch-sampling pipeline.
+    pub threads: usize,
+    /// Parallel update discipline — `hogwild` (max throughput, not
+    /// bit-reproducible above one thread) or `sharded` (bit-deterministic
+    /// for, and identical across, any thread count). Ignored by the
+    /// serial backends.
+    pub mode: TrainMode,
 }
 
 impl Default for TrainConfig {
@@ -51,6 +77,8 @@ impl Default for TrainConfig {
             lr_end: 0.02,
             seed: 42,
             log_every: 100,
+            threads: 1,
+            mode: TrainMode::Hogwild,
         }
     }
 }
@@ -96,6 +124,50 @@ impl Corpus {
         self.walks.iter().map(|w| w.len()).sum()
     }
 
+    /// Bounded retries before [`Corpus::sample_pair`] accepts a
+    /// degenerate draw on a pathological corpus (e.g. every walk orbiting
+    /// one self-loop vertex).
+    const MAX_PAIR_RESAMPLES: usize = 16;
+
+    /// Draw one (center, positive) training pair.
+    ///
+    /// Degenerate `positive == center` draws (a walk revisiting the
+    /// center inside the window — self-loops, backtracks — or, should a
+    /// length-1 walk ever slip past the constructor's `len >= 2` filter,
+    /// the positional `(ci + 1) % w.len()` fallback collapsing to `ci`)
+    /// train a vertex on its own embedding and are resampled instead of
+    /// emitted. After [`Corpus::MAX_PAIR_RESAMPLES`] failed draws the
+    /// last non-positional candidate is accepted so a pathological
+    /// corpus still terminates.
+    fn sample_pair(&self, rng: &mut Xoshiro256pp, window: usize) -> (i32, i32) {
+        debug_assert!(!self.walks.is_empty(), "corpus has no trainable walks");
+        let mut last = (0i32, 0i32);
+        for _ in 0..Self::MAX_PAIR_RESAMPLES {
+            let w = &self.walks[rng.next_index(self.walks.len())];
+            let ci = rng.next_index(w.len());
+            // Offset in [-window, window], != 0, clamped into the walk.
+            let off_mag = 1 + rng.next_index(window.max(1));
+            let off = if rng.bernoulli(0.5) {
+                off_mag as isize
+            } else {
+                -(off_mag as isize)
+            };
+            let pi = (ci as isize + off).clamp(0, w.len() as isize - 1) as usize;
+            let pi = if pi == ci { (ci + 1) % w.len() } else { pi };
+            if pi == ci {
+                // Defense in depth: unreachable while the constructor
+                // filters length-1 walks, but a future loosening of that
+                // filter must not reintroduce self-position pairs.
+                continue;
+            }
+            if w[pi] != w[ci] {
+                return (w[ci] as i32, w[pi] as i32);
+            }
+            last = (w[ci] as i32, w[pi] as i32);
+        }
+        last
+    }
+
     /// Fill one batch of (center, positive, negatives).
     pub fn fill_batch(
         &self,
@@ -108,19 +180,9 @@ impl Corpus {
         let b = centers.len();
         let k = negatives.len() / b;
         for i in 0..b {
-            let w = &self.walks[rng.next_index(self.walks.len())];
-            let ci = rng.next_index(w.len());
-            // Offset in [-window, window], != 0, clamped into the walk.
-            let off_mag = 1 + rng.next_index(window.max(1));
-            let off = if rng.bernoulli(0.5) {
-                off_mag as isize
-            } else {
-                -(off_mag as isize)
-            };
-            let pi = (ci as isize + off).clamp(0, w.len() as isize - 1) as usize;
-            let pi = if pi == ci { (ci + 1) % w.len() } else { pi };
-            centers[i] = w[ci] as i32;
-            positives[i] = w[pi] as i32;
+            let (c, p) = self.sample_pair(rng, window);
+            centers[i] = c;
+            positives[i] = p;
             for slot in 0..k {
                 let nv = self.neg_vertices[self.neg_table.sample(rng)];
                 negatives[i * k + slot] = nv as i32;
@@ -148,7 +210,7 @@ pub fn train(
     let mut positives = vec![0i32; b];
     let mut negatives = vec![0i32; b * k];
     let mut curve = Vec::new();
-    let mut rng = stream(cfg.seed, 0xBA7C, 0, 0);
+    let mut rng = stream(cfg.seed, BATCH_STREAM_TAG, 0, 0);
     for step in 0..cfg.steps {
         let t = step as f32 / cfg.steps.max(1) as f32;
         let lr = cfg.lr_start + (cfg.lr_end - cfg.lr_start) * t;
@@ -162,6 +224,28 @@ pub fn train(
         }
     }
     Ok(curve)
+}
+
+/// Shared initializer of both embedding tables — the single source of the
+/// init bit pattern, used by [`RustSgns::new`] and
+/// [`EmbeddingMatrix::new`] so the parallel backend starts byte-identical
+/// to the oracle.
+pub(crate) fn init_tables(num_vertices: usize, dim: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed ^ 0x5635);
+    let scale = 0.5 / dim as f32;
+    let mut init = || -> Vec<f32> {
+        (0..num_vertices * dim)
+            .map(|_| (rng.next_f64() as f32 * 2.0 - 1.0) * scale)
+            .collect()
+    };
+    let w_in = init();
+    let w_out = init();
+    (w_in, w_out)
+}
+
+#[inline]
+pub(crate) fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
 }
 
 /// Pure-Rust SGNS with identical math — the oracle for the runtime path
@@ -178,15 +262,7 @@ impl RustSgns {
     /// the runtime packs tables into the fused state in a different RNG
     /// order; tests compare losses statistically, not exactly).
     pub fn new(num_vertices: usize, dim: usize, seed: u64) -> RustSgns {
-        let mut rng = Xoshiro256pp::seed_from_u64(seed ^ 0x5635);
-        let scale = 0.5 / dim as f32;
-        let mut init = || -> Vec<f32> {
-            (0..num_vertices * dim)
-                .map(|_| (rng.next_f64() as f32 * 2.0 - 1.0) * scale)
-                .collect()
-        };
-        let w_in = init();
-        let w_out = init();
+        let (w_in, w_out) = init_tables(num_vertices, dim, seed);
         RustSgns {
             dim,
             w_in,
@@ -195,51 +271,32 @@ impl RustSgns {
         }
     }
 
-    #[inline]
-    fn sigmoid(x: f32) -> f32 {
-        1.0 / (1.0 + (-x).exp())
-    }
-
-    /// One SGD step; returns the mean batch loss.
+    /// One SGD step; returns the mean batch loss. Runs the same
+    /// `parallel::sgd_step_range` kernel as every [`ParallelSgns`]
+    /// worker, so single-thread parity between the two backends is
+    /// structural.
     pub fn step(&mut self, centers: &[i32], positives: &[i32], negatives: &[i32], lr: f32) -> f32 {
-        let d = self.dim;
         let b = centers.len();
-        let k = negatives.len() / b;
-        let mut total = 0f64;
-        let mut dc = vec![0f32; d];
-        for i in 0..b {
-            let c0 = centers[i] as usize * d;
-            let o0 = positives[i] as usize * d;
-            dc.iter_mut().for_each(|x| *x = 0.0);
-            // Positive pair.
-            let mut pos = 0f32;
-            for j in 0..d {
-                pos += self.w_in[c0 + j] * self.w_out[o0 + j];
-            }
-            let gp = Self::sigmoid(pos) - 1.0;
-            total += softplus(-pos) as f64;
-            for j in 0..d {
-                dc[j] += gp * self.w_out[o0 + j];
-                self.w_out[o0 + j] -= lr * gp * self.w_in[c0 + j];
-            }
-            // Negatives.
-            for s in 0..k {
-                let n0 = negatives[i * k + s] as usize * d;
-                let mut neg = 0f32;
-                for j in 0..d {
-                    neg += self.w_in[c0 + j] * self.w_out[n0 + j];
-                }
-                let gn = Self::sigmoid(neg);
-                total += softplus(neg) as f64;
-                for j in 0..d {
-                    dc[j] += gn * self.w_out[n0 + j];
-                    self.w_out[n0 + j] -= lr * gn * self.w_in[c0 + j];
-                }
-            }
-            for j in 0..d {
-                self.w_in[c0 + j] -= lr * dc[j];
-            }
+        if b == 0 {
+            return 0.0;
         }
+        let mut dc = vec![0f32; self.dim];
+        // Safety: the tables are exclusively borrowed (`&mut self`) and
+        // every id in a batch is bounded by `num_vertices` (Corpus draws
+        // from walk-visited vertices only).
+        let total = unsafe {
+            parallel::sgd_step_range(
+                self.w_in.as_mut_ptr(),
+                self.w_out.as_mut_ptr(),
+                self.dim,
+                centers,
+                positives,
+                negatives,
+                lr,
+                0..b,
+                &mut dc,
+            )
+        };
         (total / b as f64) as f32
     }
 
@@ -255,7 +312,7 @@ impl RustSgns {
         let mut positives = vec![0i32; batch];
         let mut negatives = vec![0i32; batch * k];
         let mut curve = Vec::new();
-        let mut rng = stream(cfg.seed, 0xBA7C, 0, 0);
+        let mut rng = stream(cfg.seed, BATCH_STREAM_TAG, 0, 0);
         for step in 0..cfg.steps {
             let t = step as f32 / cfg.steps.max(1) as f32;
             let lr = cfg.lr_start + (cfg.lr_end - cfg.lr_start) * t;
@@ -270,6 +327,13 @@ impl RustSgns {
 
     pub fn embeddings(&self) -> Vec<Vec<f32>> {
         self.w_in.chunks_exact(self.dim).map(|r| r.to_vec()).collect()
+    }
+
+    /// Flat row-major view of the input embeddings — the zero-copy hot
+    /// read path ([`nearest_flat`], [`cosine`] over `dim`-sized row
+    /// slices) that [`RustSgns::embeddings`]'s row-by-row clone is not.
+    pub fn embeddings_flat(&self) -> &[f32] {
+        &self.w_in
     }
 }
 
@@ -287,6 +351,37 @@ pub trait SgnsBackend {
     ) -> Result<f32>;
 
     fn final_embeddings(&self) -> Result<Vec<Vec<f32>>>;
+
+    /// Zero-copy flat view of the input embeddings plus the row width,
+    /// for the hot read path ([`nearest_flat`]). `None` for backends that
+    /// only materialize embeddings on demand (the PJRT runtime); callers
+    /// fall back to [`SgnsBackend::final_embeddings`].
+    fn embeddings_flat(&self) -> Option<(&[f32], usize)> {
+        None
+    }
+}
+
+/// Boxed backends forward, so callers can pick a backend at runtime
+/// (e.g. the CLI's `--train-threads`) and still drive one
+/// [`TrainerSink`] type.
+impl<B: SgnsBackend + ?Sized> SgnsBackend for Box<B> {
+    fn sgd_step(
+        &mut self,
+        centers: &[i32],
+        positives: &[i32],
+        negatives: &[i32],
+        lr: f32,
+    ) -> Result<f32> {
+        (**self).sgd_step(centers, positives, negatives, lr)
+    }
+
+    fn final_embeddings(&self) -> Result<Vec<Vec<f32>>> {
+        (**self).final_embeddings()
+    }
+
+    fn embeddings_flat(&self) -> Option<(&[f32], usize)> {
+        (**self).embeddings_flat()
+    }
 }
 
 impl SgnsBackend for RustSgns {
@@ -302,6 +397,10 @@ impl SgnsBackend for RustSgns {
 
     fn final_embeddings(&self) -> Result<Vec<Vec<f32>>> {
         Ok(self.embeddings())
+    }
+
+    fn embeddings_flat(&self) -> Option<(&[f32], usize)> {
+        Some((&self.w_in, self.dim))
     }
 }
 
@@ -377,7 +476,7 @@ impl<B: SgnsBackend> TrainerSink<B> {
             round_walks: Vec::new(),
             // Distinct stream index from the staged trainer's batch RNG:
             // the pipelined schedule is its own reproducible trajectory.
-            rng: stream(cfg.seed, 0xBA7C, 1, 0),
+            rng: stream(cfg.seed, BATCH_STREAM_TAG, 1, 0),
             global_step: 0,
             curve: Vec::new(),
             error: None,
@@ -475,7 +574,7 @@ impl<B: SgnsBackend> WalkSink for TrainerSink<B> {
 }
 
 #[inline]
-fn softplus(x: f32) -> f32 {
+pub(crate) fn softplus(x: f32) -> f32 {
     if x > 20.0 {
         x
     } else {
@@ -503,6 +602,24 @@ pub fn nearest(embeddings: &[Vec<f32>], v: usize, k: usize) -> Vec<(usize, f32)>
         .enumerate()
         .filter(|(u, _)| *u != v)
         .map(|(u, e)| (u, cosine(e, &embeddings[v])))
+        .collect();
+    scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    scored.truncate(k);
+    scored
+}
+
+/// Top-`k` nearest vertices to `v` over a flat row-major embedding matrix
+/// (`dim` floats per vertex) — the zero-copy counterpart of [`nearest`]
+/// for [`SgnsBackend::embeddings_flat`] views: the scan touches one
+/// contiguous allocation instead of a `Vec<Vec<f32>>` clone.
+pub fn nearest_flat(embeddings: &[f32], dim: usize, v: usize, k: usize) -> Vec<(usize, f32)> {
+    assert!(dim > 0 && embeddings.len() % dim == 0);
+    let target = &embeddings[v * dim..(v + 1) * dim];
+    let mut scored: Vec<(usize, f32)> = embeddings
+        .chunks_exact(dim)
+        .enumerate()
+        .filter(|(u, _)| *u != v)
+        .map(|(u, row)| (u, cosine(row, target)))
         .collect();
     scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
     scored.truncate(k);
@@ -537,10 +654,46 @@ mod tests {
         for &x in c.iter().chain(&p).chain(&n) {
             assert!((x as usize) < g.num_vertices());
         }
-        // Walks revisit vertices, so (v, v) pairs can occur — but they
-        // must be the exception, not the rule.
+        // Degenerate (v, v) pairs are resampled away (sample_pair); a
+        // walk corpus with non-trivial structure never emits them.
         let degenerate = (0..8).filter(|&i| c[i] == p[i]).count();
-        assert!(degenerate < 4, "{degenerate}/8 degenerate pairs");
+        assert_eq!(degenerate, 0, "{degenerate}/8 degenerate pairs");
+    }
+
+    #[test]
+    fn fill_batch_never_emits_degenerate_pairs() {
+        // Regression: length-1 walks must never surface as (self, self)
+        // pairs — the constructor excludes them and sample_pair guards
+        // the positional fallback — and window-clamped draws on walks
+        // that revisit a vertex (self-loops, backtracks) must resample
+        // instead of training a vertex on its own embedding.
+        let walks: WalkSet = vec![
+            vec![7],                // length-1: excluded from sampling
+            vec![9],                // length-1: excluded from sampling
+            vec![1, 2, 3, 1, 4, 5], // revisits 1: degenerate-prone draws
+            vec![3, 4, 3, 4, 3],    // two-cycle: every other draw clamps onto a revisit
+        ];
+        let corpus = Corpus::new(&walks, 16);
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let mut c = vec![0i32; 64];
+        let mut p = vec![0i32; 64];
+        let mut n = vec![0i32; 64 * 2];
+        for _ in 0..50 {
+            corpus.fill_batch(&mut rng, 10, &mut c, &mut p, &mut n);
+            for i in 0..c.len() {
+                assert_ne!(c[i], p[i], "degenerate pair ({}, {})", c[i], p[i]);
+                assert!(c[i] != 7 && c[i] != 9, "length-1 walk sampled as center");
+                assert!(p[i] != 7 && p[i] != 9, "length-1 walk sampled as positive");
+            }
+        }
+        // Negatives still cover *visited* vertices, including those only
+        // seen on length-1 walks (visit counts are walk-length agnostic).
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..200 {
+            corpus.fill_batch(&mut rng, 10, &mut c, &mut p, &mut n);
+            seen.extend(n.iter().copied());
+        }
+        assert!(seen.contains(&7) && seen.contains(&9));
     }
 
     #[test]
@@ -647,19 +800,21 @@ mod tests {
             ..Default::default()
         };
         model.train(&corpus, &tcfg, 128, 5);
-        let emb = model.embeddings();
+        // The hot read path: flat view, no row-by-row clone.
+        let (emb, d) = (model.embeddings_flat(), model.dim);
+        let n = emb.len() / d;
         // Average same-community vs cross-community cosine over a sample.
         let mut rng = Xoshiro256pp::seed_from_u64(11);
         let (mut same, mut cross) = (0f64, 0f64);
         let (mut ns, mut nc) = (0u32, 0u32);
         for _ in 0..4000 {
-            let a = rng.next_index(emb.len());
-            let b = rng.next_index(emb.len());
+            let a = rng.next_index(n);
+            let b = rng.next_index(n);
             if a == b {
                 continue;
             }
             let shared = lg.labels[a].iter().any(|l| lg.labels[b].contains(l));
-            let cs = cosine(&emb[a], &emb[b]) as f64;
+            let cs = cosine(&emb[a * d..(a + 1) * d], &emb[b * d..(b + 1) * d]) as f64;
             if shared {
                 same += cs;
                 ns += 1;
@@ -689,6 +844,11 @@ mod tests {
         let nn = nearest(&e, 0, 2);
         assert_eq!(nn[0].0, 1);
         assert_eq!(nn[1].0, 2);
+        // The flat path ranks identically without materializing rows.
+        let flat: Vec<f32> = e.iter().flatten().copied().collect();
+        for v in 0..e.len() {
+            assert_eq!(nearest_flat(&flat, 2, v, 3), nearest(&e, v, 3));
+        }
     }
 
     #[cfg(feature = "pjrt")]

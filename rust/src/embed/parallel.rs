@@ -1,0 +1,1429 @@
+//! Parallel SGNS: the lock-free multi-threaded training subsystem.
+//!
+//! PRs 1–4 made walk generation scale across cores; this module does the
+//! same for the SGNS optimization stage so embedding keeps pace with the
+//! walk engine (the async multi-threaded SGD node2vec and DistGER train
+//! with — see EXPERIMENTS.md §Train). Three layers:
+//!
+//! - [`EmbeddingMatrix`] — both embedding tables (`w_in` rows `[0, n)`,
+//!   `w_out` rows `[n, 2n)`) in **one contiguous allocation** behind
+//!   `UnsafeCell`, so worker threads share it without locks and the row
+//!   kernels see exact `dim`-length slices (bounds checks elided,
+//!   update loops auto-vectorizable).
+//! - a persistent fork-join worker pool (spawned once per trainer, parked
+//!   on a condvar between steps) plus a producer/consumer **batch pipeline**:
+//!   dedicated sampler threads pre-draw `(centers, positives, negatives)`
+//!   batches from the [`Corpus`] so the SGD inner loop never stalls on
+//!   alias-table sampling.
+//! - [`ParallelSgns`] — an [`SgnsBackend`] running SGD across
+//!   `TrainConfig::threads` workers in one of two disciplines
+//!   ([`TrainMode`]):
+//!
+//! **`hogwild`** (default): workers update the shared matrix with no
+//! synchronization at all, the Hogwild recipe (Recht et al., 2011) that
+//! word2vec and node2vec train with. Sparse gradients make write
+//! collisions rare, so the loss trajectory is statistically equivalent to
+//! serial SGD, but concurrent unsynchronized float updates mean runs are
+//! **not bit-reproducible** for `threads > 1`. With `threads == 1` the
+//! whole path degenerates to exactly the serial oracle: bit-identical
+//! loss curves and embeddings to [`RustSgns`](super::RustSgns) (pinned in
+//! `tests/parallel_train.rs`).
+//!
+//! **`sharded`**: bit-deterministic for *any* thread count — and
+//! identical *across* thread counts. Each step is synchronous and
+//! two-phase: phase 1 computes every pair's gradient coefficients (and
+//! snapshots the center rows) against the frozen start-of-step matrix;
+//! phase 2 applies updates where each thread writes only the rows it owns
+//! (`owner(v) = v % threads`), scanning pairs in batch order. A row's
+//! update sequence is therefore a pure function of the batch, never of
+//! the schedule. The price is mini-batch-style (frozen-gradient)
+//! semantics within a step instead of the serial loop's
+//! pair-by-pair updates, so `sharded` at `threads == 1` is deterministic
+//! but intentionally *not* the oracle bit pattern.
+//!
+//! Determinism of batch content (independent of the worker schedule):
+//! - hogwild worker `t` draws from the persistent stream
+//!   `stream(seed, 0xBA7C, worker_stream_index(t), 0)`, where index 0 is
+//!   the staged oracle stream (bit-parity for one thread) and index 1 is
+//!   reserved for [`TrainerSink`](super::TrainerSink)'s stream, so
+//!   workers `t >= 1` use `t + 1`;
+//! - sharded step `s` draws from `stream(seed, 0x50A8, 0, s)` — keyed by
+//!   the global step only, which is what makes the whole trajectory
+//!   thread-count-invariant.
+//!
+//! Both schedules are mirrored by the toolchain-free executable spec
+//! `python/tests/test_sgns_parallel_spec.py`.
+
+use std::cell::UnsafeCell;
+use std::collections::{BTreeMap, VecDeque};
+use std::ops::Range;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use super::{sigmoid, softplus, Corpus, LossPoint, SgnsBackend, TrainConfig};
+use crate::util::error::Result;
+use crate::util::rng::stream;
+
+/// Parallel update discipline — see the module docs for the trade-off.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TrainMode {
+    /// Lock-free asynchronous updates: max throughput, loss-equivalent,
+    /// not bit-reproducible above one thread.
+    Hogwild,
+    /// Two-phase owned-row updates: bit-deterministic for any thread
+    /// count and identical across thread counts.
+    Sharded,
+}
+
+impl TrainMode {
+    pub const ALL: [TrainMode; 2] = [TrainMode::Hogwild, TrainMode::Sharded];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TrainMode::Hogwild => "hogwild",
+            TrainMode::Sharded => "sharded",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<TrainMode> {
+        match s {
+            "hogwild" => Some(TrainMode::Hogwild),
+            "sharded" => Some(TrainMode::Sharded),
+            _ => None,
+        }
+    }
+}
+
+/// Batch-stream tag for sharded-mode per-step RNG streams (the hogwild /
+/// staged tag is [`super::BATCH_STREAM_TAG`]). Mirrored in
+/// `python/tests/test_sgns_parallel_spec.py`.
+pub(crate) const SHARDED_BATCH_TAG: u64 = 0x50A8;
+
+/// Bounded lookahead of the sharded batch pipeline: producers may run at
+/// most this many steps ahead of the consumer.
+pub(crate) const PIPELINE_DEPTH: u32 = 8;
+
+/// Per-worker batch queue depth of the hogwild pipeline.
+pub(crate) const HOGWILD_QUEUE_DEPTH: usize = 4;
+
+/// Dedicated sampler (producer) threads for a given SGD worker count.
+/// Sampling is a fraction of step cost, so one producer feeds ~4 workers.
+pub(crate) fn producer_count(threads: usize) -> usize {
+    (threads / 4).max(1)
+}
+
+/// RNG stream index of hogwild worker `t`: index 0 *is* the staged oracle
+/// stream (single-thread bit-parity); index 1 belongs to `TrainerSink`,
+/// so workers `t >= 1` shift past it.
+pub(crate) fn worker_stream_index(t: usize) -> u64 {
+    if t == 0 {
+        0
+    } else {
+        t as u64 + 1
+    }
+}
+
+/// Which thread owns vertex `v`'s rows in sharded mode.
+#[inline]
+pub(crate) fn shard_owner(v: usize, threads: usize) -> usize {
+    v % threads
+}
+
+// ---------------------------------------------------------------------------
+// Kernels: exact-`dim` slices over the flat tables. The slices are produced
+// by `from_raw_parts(_mut)` with a compile-time-opaque but loop-constant
+// length, so the zipped loops compile without bounds checks and the update
+// (axpy) loops auto-vectorize; the dot reduction stays a serial chain, which
+// is what keeps it bit-identical to the historical scalar loop.
+// ---------------------------------------------------------------------------
+
+#[inline(always)]
+pub(crate) fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        acc += x * y;
+    }
+    acc
+}
+
+/// `y[j] += alpha * x[j]`.
+#[inline(always)]
+pub(crate) fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yj, xj) in y.iter_mut().zip(x) {
+        *yj += alpha * xj;
+    }
+}
+
+/// `y[j] = alpha * x[j]` (fresh write — avoids a zeroing pass).
+#[inline(always)]
+pub(crate) fn scale_into(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yj, xj) in y.iter_mut().zip(x) {
+        *yj = alpha * xj;
+    }
+}
+
+/// One serial SGNS pass over `range` of the batch against flat tables.
+/// Returns the raw (not batch-normalized) f64 loss total.
+///
+/// This is *the* update kernel: `RustSgns::step` runs it over its own
+/// `Vec`s and every `ParallelSgns` worker runs it over the shared
+/// [`EmbeddingMatrix`], so single-thread bit-parity with the oracle is
+/// structural, not coincidental. Op order matches the historical scalar
+/// loop exactly (`dc` accumulates against pre-update `w_out`; `a - b*c`
+/// is computed as `a + (-b)*c`, which is IEEE-bitwise identical).
+///
+/// # Safety
+/// `w_in`/`w_out` must point to `>= max_id * dim` valid f32s each, and all
+/// ids in the batch slices must be in range. Exclusive access is the
+/// caller's contract — hogwild callers intentionally run this concurrently
+/// over overlapping rows and accept the benign data races.
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn sgd_step_range(
+    w_in: *mut f32,
+    w_out: *mut f32,
+    dim: usize,
+    centers: &[i32],
+    positives: &[i32],
+    negatives: &[i32],
+    lr: f32,
+    range: Range<usize>,
+    dc: &mut [f32],
+) -> f64 {
+    debug_assert_eq!(dc.len(), dim);
+    let b = centers.len();
+    let k = if b == 0 { 0 } else { negatives.len() / b };
+    let mut total = 0f64;
+    for i in range {
+        let c = centers[i] as usize;
+        let o = positives[i] as usize;
+        let wc = std::slice::from_raw_parts_mut(w_in.add(c * dim), dim);
+        // Positive pair.
+        {
+            let wo = std::slice::from_raw_parts_mut(w_out.add(o * dim), dim);
+            let pos = dot(wc, wo);
+            let gp = sigmoid(pos) - 1.0;
+            total += softplus(-pos) as f64;
+            scale_into(gp, wo, dc);
+            axpy(-lr * gp, wc, wo);
+        }
+        // Negatives.
+        for s in 0..k {
+            let nv = negatives[i * k + s] as usize;
+            let wn = std::slice::from_raw_parts_mut(w_out.add(nv * dim), dim);
+            let neg = dot(wc, wn);
+            let gn = sigmoid(neg);
+            total += softplus(neg) as f64;
+            axpy(gn, wn, dc);
+            axpy(-lr * gn, wc, wn);
+        }
+        axpy(-lr, dc, wc);
+    }
+    total
+}
+
+// ---------------------------------------------------------------------------
+// EmbeddingMatrix
+// ---------------------------------------------------------------------------
+
+/// Both SGNS tables in a single contiguous `UnsafeCell` allocation:
+/// `w_in` occupies rows `[0, n)`, `w_out` rows `[n, 2n)` of a
+/// `2 * n * dim` float block. Shared by value-less reference across the
+/// worker pool; the mode discipline (hogwild races vs sharded ownership)
+/// governs write access.
+pub struct EmbeddingMatrix {
+    num_vertices: usize,
+    dim: usize,
+    data: Box<[UnsafeCell<f32>]>,
+}
+
+// Safety: all mutation goes through raw pointers derived from the
+// UnsafeCells under the mode disciplines documented on the module.
+unsafe impl Sync for EmbeddingMatrix {}
+
+impl EmbeddingMatrix {
+    /// Same init distribution *and bit pattern* as
+    /// [`RustSgns::new`](super::RustSgns::new) (both call the shared
+    /// `init_tables`).
+    pub fn new(num_vertices: usize, dim: usize, seed: u64) -> EmbeddingMatrix {
+        let (w_in, w_out) = super::init_tables(num_vertices, dim, seed);
+        let data: Vec<UnsafeCell<f32>> =
+            w_in.into_iter().chain(w_out).map(UnsafeCell::new).collect();
+        EmbeddingMatrix {
+            num_vertices,
+            dim,
+            data: data.into_boxed_slice(),
+        }
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        self.num_vertices
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    #[inline]
+    fn base(&self) -> *mut f32 {
+        UnsafeCell::raw_get(self.data.as_ptr())
+    }
+
+    #[inline]
+    pub(crate) fn w_in_ptr(&self) -> *mut f32 {
+        self.base()
+    }
+
+    #[inline]
+    pub(crate) fn w_out_ptr(&self) -> *mut f32 {
+        // Safety: the allocation holds 2 * n * dim floats.
+        unsafe { self.base().add(self.num_vertices * self.dim) }
+    }
+
+    /// Flat row-major view of the input embeddings (the hot read path —
+    /// no per-row cloning). Only call between training steps: the view
+    /// aliases the cells workers write through.
+    pub fn w_in(&self) -> &[f32] {
+        unsafe { std::slice::from_raw_parts(self.w_in_ptr(), self.num_vertices * self.dim) }
+    }
+
+    /// Flat row-major view of the output (context) embeddings.
+    pub fn w_out(&self) -> &[f32] {
+        unsafe { std::slice::from_raw_parts(self.w_out_ptr(), self.num_vertices * self.dim) }
+    }
+
+    /// Row-per-vertex copy of `w_in` (the legacy
+    /// [`SgnsBackend::final_embeddings`] shape).
+    pub fn embeddings(&self) -> Vec<Vec<f32>> {
+        self.w_in().chunks_exact(self.dim).map(|r| r.to_vec()).collect()
+    }
+
+    /// Read a row of `w_in` for sharded phase 1 (frozen-matrix reads).
+    ///
+    /// # Safety
+    /// No thread may be writing the row (true in phase 1 by construction).
+    #[inline]
+    unsafe fn row_in_ref(&self, v: usize) -> &[f32] {
+        std::slice::from_raw_parts(self.w_in_ptr().add(v * self.dim), self.dim)
+    }
+
+    /// Read a row of `w_out` for sharded phase 1.
+    ///
+    /// # Safety
+    /// No thread may be writing the row.
+    #[inline]
+    unsafe fn row_out_ref(&self, v: usize) -> &[f32] {
+        std::slice::from_raw_parts(self.w_out_ptr().add(v * self.dim), self.dim)
+    }
+
+    /// Mutable row of `w_in` for sharded phase 2.
+    ///
+    /// # Safety
+    /// Caller must hold exclusive write ownership of the row (sharded
+    /// phase 2 guarantees it via `owner(v) = v % threads`).
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn row_in_mut(&self, v: usize) -> &mut [f32] {
+        std::slice::from_raw_parts_mut(self.w_in_ptr().add(v * self.dim), self.dim)
+    }
+
+    /// Mutable row of `w_out` for sharded phase 2.
+    ///
+    /// # Safety
+    /// As [`EmbeddingMatrix::row_in_mut`].
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn row_out_mut(&self, v: usize) -> &mut [f32] {
+        std::slice::from_raw_parts_mut(self.w_out_ptr().add(v * self.dim), self.dim)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// A &mut [T] that can cross into pool workers writing disjoint regions.
+// ---------------------------------------------------------------------------
+
+struct RawSlice<T> {
+    ptr: *mut T,
+    len: usize,
+}
+
+impl<T> Clone for RawSlice<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for RawSlice<T> {}
+
+// Safety: workers write *disjoint* index ranges (the caller's contract on
+// `slice`), and the borrow the RawSlice was built from outlives the pool
+// dispatch (the submitting thread blocks in `Pool::run`).
+unsafe impl<T: Send> Send for RawSlice<T> {}
+unsafe impl<T: Send> Sync for RawSlice<T> {}
+
+impl<T> RawSlice<T> {
+    fn new(s: &mut [T]) -> RawSlice<T> {
+        RawSlice {
+            ptr: s.as_mut_ptr(),
+            len: s.len(),
+        }
+    }
+
+    /// # Safety
+    /// Ranges handed to concurrently running workers must not overlap.
+    #[inline]
+    unsafe fn slice(&self, range: Range<usize>) -> &mut [T] {
+        debug_assert!(range.start <= range.end && range.end <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(range.start), range.end - range.start)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Persistent fork-join pool
+// ---------------------------------------------------------------------------
+
+/// Raw pointer to the current fork-join task; valid for exactly one epoch
+/// because the submitter blocks in [`Pool::run`] until every worker is
+/// done.
+#[derive(Clone, Copy)]
+struct TaskPtr(*const (dyn Fn(usize) + Sync));
+// Safety: see the validity argument above; the pointee is Sync.
+unsafe impl Send for TaskPtr {}
+
+struct PoolCtl {
+    epoch: u64,
+    task: Option<TaskPtr>,
+    remaining: usize,
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    ctl: Mutex<PoolCtl>,
+    go: Condvar,
+    done: Condvar,
+}
+
+/// `threads` parked workers; `run(f)` executes `f(worker_index)` on every
+/// worker and returns when all have finished — one fork-join barrier,
+/// reused thousands of times per training run without respawning.
+struct Pool {
+    shared: Arc<PoolShared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Pool {
+    fn new(threads: usize) -> Pool {
+        let shared = Arc::new(PoolShared {
+            ctl: Mutex::new(PoolCtl {
+                epoch: 0,
+                task: None,
+                remaining: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            go: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (0..threads)
+            .map(|idx| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("sgns-worker-{idx}"))
+                    .spawn(move || Pool::worker_loop(&shared, idx))
+                    .expect("spawn sgns worker")
+            })
+            .collect();
+        Pool { shared, handles }
+    }
+
+    fn worker_loop(shared: &PoolShared, idx: usize) {
+        let mut seen = 0u64;
+        loop {
+            let task = {
+                let mut ctl = shared.ctl.lock().unwrap();
+                loop {
+                    if ctl.shutdown {
+                        return;
+                    }
+                    if ctl.epoch != seen {
+                        seen = ctl.epoch;
+                        break ctl.task.expect("task published with epoch");
+                    }
+                    ctl = shared.go.wait(ctl).unwrap();
+                }
+            };
+            // Safety: the task pointer stays valid until `remaining` hits
+            // zero, which cannot happen before this call returns.
+            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
+                (*task.0)(idx)
+            }));
+            let mut ctl = shared.ctl.lock().unwrap();
+            if outcome.is_err() {
+                ctl.panicked = true;
+            }
+            ctl.remaining -= 1;
+            if ctl.remaining == 0 {
+                shared.done.notify_all();
+            }
+        }
+    }
+
+    /// Run `task(worker)` on every worker; blocks until all finish.
+    /// Panics (on the caller) if any worker panicked.
+    fn run(&self, task: &(dyn Fn(usize) + Sync)) {
+        let mut ctl = self.shared.ctl.lock().unwrap();
+        debug_assert_eq!(ctl.remaining, 0, "Pool::run reentered");
+        ctl.task = Some(TaskPtr(task as *const _));
+        ctl.remaining = self.handles.len();
+        ctl.epoch += 1;
+        self.shared.go.notify_all();
+        while ctl.remaining > 0 {
+            ctl = self.shared.done.wait(ctl).unwrap();
+        }
+        ctl.task = None;
+        if ctl.panicked {
+            ctl.panicked = false;
+            drop(ctl);
+            panic!("ParallelSgns worker panicked");
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        {
+            let mut ctl = self.shared.ctl.lock().unwrap();
+            ctl.shutdown = true;
+            self.shared.go.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Batch pipeline plumbing
+// ---------------------------------------------------------------------------
+
+/// One pre-sampled SGNS batch.
+struct Batch {
+    centers: Vec<i32>,
+    positives: Vec<i32>,
+    negatives: Vec<i32>,
+}
+
+impl Batch {
+    fn new(b: usize, k: usize) -> Batch {
+        Batch {
+            centers: vec![0i32; b],
+            positives: vec![0i32; b],
+            negatives: vec![0i32; b * k],
+        }
+    }
+}
+
+/// Bounded SPSC queue for the hogwild pipeline: one producer fills it (a
+/// worker's private batch sequence), one SGD worker drains it. Push and
+/// pop counts match exactly on the happy path; `close` exists purely for
+/// panic unwinding — it wakes both sides so a dead peer cannot leave the
+/// other blocked forever (pop panics, push becomes a no-op).
+struct BoundedQueue<T> {
+    q: Mutex<QueueState<T>>,
+    cap: usize,
+    space: Condvar,
+    item: Condvar,
+}
+
+struct QueueState<T> {
+    q: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> BoundedQueue<T> {
+    fn new(cap: usize) -> BoundedQueue<T> {
+        BoundedQueue {
+            q: Mutex::new(QueueState {
+                q: VecDeque::with_capacity(cap),
+                closed: false,
+            }),
+            cap,
+            space: Condvar::new(),
+            item: Condvar::new(),
+        }
+    }
+
+    fn push(&self, x: T) {
+        let mut g = self.q.lock().unwrap();
+        while g.q.len() >= self.cap && !g.closed {
+            g = self.space.wait(g).unwrap();
+        }
+        if g.closed {
+            return;
+        }
+        g.q.push_back(x);
+        self.item.notify_one();
+    }
+
+    fn pop(&self) -> T {
+        let mut g = self.q.lock().unwrap();
+        loop {
+            if let Some(x) = g.q.pop_front() {
+                self.space.notify_one();
+                return x;
+            }
+            if g.closed {
+                panic!("hogwild batch queue closed by a failed peer");
+            }
+            g = self.item.wait(g).unwrap();
+        }
+    }
+
+    fn close(&self) {
+        let mut g = self.q.lock().unwrap();
+        g.closed = true;
+        self.space.notify_all();
+        self.item.notify_all();
+    }
+}
+
+/// In-order step delivery for the sharded pipeline: producers claim step
+/// tickets, sample out of order, and insert; the consumer takes steps
+/// strictly in sequence. `await_window` bounds the lookahead so at most
+/// [`PIPELINE_DEPTH`] batches are ever resident.
+struct StepPipeline {
+    state: Mutex<StepState>,
+    cv: Condvar,
+    depth: u32,
+}
+
+struct StepState {
+    ready: BTreeMap<u32, Batch>,
+    consumed: u32,
+    /// Set on unwind (either side) so the other side never blocks on a
+    /// dead peer: `await_window` returns `false`, `take` panics.
+    closed: bool,
+}
+
+impl StepPipeline {
+    fn new(depth: u32) -> StepPipeline {
+        StepPipeline {
+            state: Mutex::new(StepState {
+                ready: BTreeMap::new(),
+                consumed: 0,
+                closed: false,
+            }),
+            cv: Condvar::new(),
+            depth,
+        }
+    }
+
+    /// Block until step `s` is within the lookahead window. Returns
+    /// `false` if the pipeline closed (consumer gone) — stop producing.
+    fn await_window(&self, s: u32) -> bool {
+        let mut g = self.state.lock().unwrap();
+        while s >= g.consumed.saturating_add(self.depth) && !g.closed {
+            g = self.cv.wait(g).unwrap();
+        }
+        !g.closed
+    }
+
+    fn insert(&self, s: u32, batch: Batch) {
+        let mut g = self.state.lock().unwrap();
+        if !g.closed {
+            g.ready.insert(s, batch);
+        }
+        self.cv.notify_all();
+    }
+
+    /// Take step `s` (the consumer calls with s = 0, 1, 2, ... in order).
+    fn take(&self, s: u32) -> Batch {
+        let mut g = self.state.lock().unwrap();
+        loop {
+            if let Some(b) = g.ready.remove(&s) {
+                g.consumed = s + 1;
+                self.cv.notify_all();
+                return b;
+            }
+            if g.closed {
+                panic!("sharded batch pipeline closed by a failed producer");
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    fn close(&self) {
+        let mut g = self.state.lock().unwrap();
+        g.closed = true;
+        self.cv.notify_all();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ParallelSgns
+// ---------------------------------------------------------------------------
+
+/// Reusable sharded-mode scratch: per-pair gradient coefficients and
+/// frozen center rows, sized `O(batch * (dim + negatives))`.
+#[derive(Default)]
+struct ShardScratch {
+    /// Positive-pair gradient coefficient per pair (`b`).
+    gp: Vec<f32>,
+    /// Negative gradient coefficients (`b * k`).
+    gn: Vec<f32>,
+    /// Frozen start-of-step center rows (`b * dim`).
+    cin: Vec<f32>,
+    /// Center gradients against the frozen matrix (`b * dim`).
+    dc: Vec<f32>,
+    /// Per-pair loss terms, summed sequentially by the master so the
+    /// reported loss is identical for every thread count (`b`).
+    loss: Vec<f64>,
+}
+
+impl ShardScratch {
+    fn ensure(&mut self, b: usize, k: usize, d: usize) {
+        self.gp.resize(b, 0.0);
+        self.gn.resize(b * k, 0.0);
+        self.cin.resize(b * d, 0.0);
+        self.dc.resize(b * d, 0.0);
+        self.loss.resize(b, 0.0);
+    }
+}
+
+/// Multi-threaded SGNS trainer over a shared flat [`EmbeddingMatrix`].
+///
+/// Implements [`SgnsBackend`], so [`TrainerSink`](super::TrainerSink)
+/// pipelines walk rounds into it unchanged; [`ParallelSgns::train`] is the
+/// staged entry point with the producer/consumer batch pipeline. See the
+/// module docs for the `hogwild` / `sharded` trade-off.
+pub struct ParallelSgns {
+    matrix: EmbeddingMatrix,
+    mode: TrainMode,
+    threads: usize,
+    pool: Option<Pool>,
+    shard: ShardScratch,
+    /// Serial-path center-gradient scratch (threads == 1).
+    dc: Vec<f32>,
+}
+
+impl ParallelSgns {
+    pub fn new(
+        num_vertices: usize,
+        dim: usize,
+        seed: u64,
+        threads: usize,
+        mode: TrainMode,
+    ) -> ParallelSgns {
+        let threads = threads.max(1);
+        ParallelSgns {
+            matrix: EmbeddingMatrix::new(num_vertices, dim, seed),
+            mode,
+            threads,
+            pool: (threads > 1).then(|| Pool::new(threads)),
+            shard: ShardScratch::default(),
+            dc: vec![0f32; dim],
+        }
+    }
+
+    /// Construct from a [`TrainConfig`]'s `seed`/`threads`/`mode`.
+    pub fn from_config(num_vertices: usize, dim: usize, cfg: &TrainConfig) -> ParallelSgns {
+        ParallelSgns::new(num_vertices, dim, cfg.seed, cfg.threads, cfg.mode)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn mode(&self) -> TrainMode {
+        self.mode
+    }
+
+    pub fn dim(&self) -> usize {
+        self.matrix.dim()
+    }
+
+    pub fn matrix(&self) -> &EmbeddingMatrix {
+        &self.matrix
+    }
+
+    /// Flat row-major `w_in` view — the zero-copy hot read path.
+    pub fn embeddings_flat(&self) -> &[f32] {
+        self.matrix.w_in()
+    }
+
+    /// Legacy row-per-vertex copy.
+    pub fn embeddings(&self) -> Vec<Vec<f32>> {
+        self.matrix.embeddings()
+    }
+
+    /// One SGD step over a caller-supplied batch (the [`SgnsBackend`]
+    /// surface). Mean batch loss back.
+    pub fn step(&mut self, centers: &[i32], positives: &[i32], negatives: &[i32], lr: f32) -> f32 {
+        match self.mode {
+            TrainMode::Hogwild => self.step_hogwild(centers, positives, negatives, lr),
+            TrainMode::Sharded => self.step_sharded(centers, positives, negatives, lr),
+        }
+    }
+
+    fn step_hogwild(
+        &mut self,
+        centers: &[i32],
+        positives: &[i32],
+        negatives: &[i32],
+        lr: f32,
+    ) -> f32 {
+        let b = centers.len();
+        if b == 0 {
+            return 0.0;
+        }
+        let t_count = self.threads;
+        if t_count <= 1 {
+            // Exactly the serial oracle step (bit-parity with RustSgns).
+            let (w_in, w_out, d) = (
+                self.matrix.w_in_ptr(),
+                self.matrix.w_out_ptr(),
+                self.matrix.dim(),
+            );
+            let total = unsafe {
+                sgd_step_range(
+                    w_in,
+                    w_out,
+                    d,
+                    centers,
+                    positives,
+                    negatives,
+                    lr,
+                    0..b,
+                    &mut self.dc,
+                )
+            };
+            return (total / b as f64) as f32;
+        }
+        let mut partials = vec![0f64; t_count];
+        let partials = RawSlice::new(&mut partials);
+        // Raw table pointers are derived inside each worker (the closure
+        // must be Sync, and the matrix reference is).
+        let matrix = &self.matrix;
+        let pool = self.pool.as_ref().expect("pool exists for threads > 1");
+        pool.run(&|t: usize| {
+            let lo = t * b / t_count;
+            let hi = (t + 1) * b / t_count;
+            let d = matrix.dim();
+            let mut dc = vec![0f32; d];
+            // Safety: contiguous pair chunks are disjoint; row updates race
+            // across threads by design (hogwild).
+            let total = unsafe {
+                sgd_step_range(
+                    matrix.w_in_ptr(),
+                    matrix.w_out_ptr(),
+                    d,
+                    centers,
+                    positives,
+                    negatives,
+                    lr,
+                    lo..hi,
+                    &mut dc,
+                )
+            };
+            unsafe { partials.slice(t..t + 1)[0] = total };
+        });
+        // Safety: pool.run returned, workers are parked again.
+        let total: f64 = unsafe { partials.slice(0..t_count) }.iter().sum();
+        (total / b as f64) as f32
+    }
+
+    fn step_sharded(
+        &mut self,
+        centers: &[i32],
+        positives: &[i32],
+        negatives: &[i32],
+        lr: f32,
+    ) -> f32 {
+        let b = centers.len();
+        if b == 0 {
+            return 0.0;
+        }
+        let k = negatives.len() / b;
+        let d = self.matrix.dim();
+        self.shard.ensure(b, k, d);
+        let matrix = &self.matrix;
+        let t_count = self.threads;
+        {
+            let gp = RawSlice::new(&mut self.shard.gp);
+            let gn = RawSlice::new(&mut self.shard.gn);
+            let cin = RawSlice::new(&mut self.shard.cin);
+            let dcs = RawSlice::new(&mut self.shard.dc);
+            let loss = RawSlice::new(&mut self.shard.loss);
+            let phase1 = |t: usize| {
+                let lo = t * b / t_count;
+                let hi = (t + 1) * b / t_count;
+                // Safety: per-pair scratch regions are disjoint across the
+                // contiguous chunks; the matrix is only *read* in phase 1.
+                unsafe {
+                    sharded_grad_range(
+                        matrix, centers, positives, negatives, k, lo..hi, gp, gn, cin, dcs, loss,
+                    )
+                };
+            };
+            match &self.pool {
+                Some(pool) => pool.run(&phase1),
+                None => phase1(0),
+            }
+        }
+        // Barrier passed: scratch is fully written; apply owned rows.
+        let (gp, gn, cin, dcs) = (
+            &self.shard.gp[..b],
+            &self.shard.gn[..b * k],
+            &self.shard.cin[..b * d],
+            &self.shard.dc[..b * d],
+        );
+        let phase2 = |t: usize| {
+            // Safety: each row is written by exactly one thread
+            // (`owner(v) = v % t_count`), in global pair order.
+            unsafe {
+                sharded_apply_owned(
+                    matrix, centers, positives, negatives, k, lr, t_count, t, gp, gn, cin, dcs,
+                )
+            };
+        };
+        match &self.pool {
+            Some(pool) => pool.run(&phase2),
+            None => phase2(0),
+        }
+        // Sequential per-pair sum: the loss is bit-identical for every
+        // thread count, not just every run.
+        let total: f64 = self.shard.loss[..b].iter().sum();
+        (total / b as f64) as f32
+    }
+
+    /// Staged training over a corpus, mirroring
+    /// [`RustSgns::train`](super::RustSgns::train)'s schedule (linear lr
+    /// decay over `cfg.steps`, same logging cadence).
+    ///
+    /// - `hogwild`, one thread: byte-for-byte the oracle trajectory (same
+    ///   batch stream, same kernel).
+    /// - `hogwild`, N threads: the step budget splits across workers,
+    ///   each draining its own pre-sampled batch queue; worker 0 records
+    ///   the loss curve at its share of the global schedule.
+    /// - `sharded`: synchronous global steps fed by producer threads
+    ///   through an in-order pipeline; bit-identical for any thread
+    ///   count.
+    pub fn train(
+        &mut self,
+        corpus: &Corpus,
+        cfg: &TrainConfig,
+        batch: usize,
+        k: usize,
+    ) -> Vec<LossPoint> {
+        match self.mode {
+            TrainMode::Hogwild if self.threads <= 1 => self.train_serial(corpus, cfg, batch, k),
+            TrainMode::Hogwild => self.train_hogwild(corpus, cfg, batch, k),
+            TrainMode::Sharded => self.train_sharded(corpus, cfg, batch, k),
+        }
+    }
+
+    /// The oracle loop verbatim (shared stream, serial kernel).
+    fn train_serial(
+        &mut self,
+        corpus: &Corpus,
+        cfg: &TrainConfig,
+        batch: usize,
+        k: usize,
+    ) -> Vec<LossPoint> {
+        let mut bt = Batch::new(batch, k);
+        let mut curve = Vec::new();
+        let mut rng = stream(cfg.seed, super::BATCH_STREAM_TAG, 0, 0);
+        for step in 0..cfg.steps {
+            let t = step as f32 / cfg.steps.max(1) as f32;
+            let lr = cfg.lr_start + (cfg.lr_end - cfg.lr_start) * t;
+            corpus.fill_batch(
+                &mut rng,
+                cfg.window,
+                &mut bt.centers,
+                &mut bt.positives,
+                &mut bt.negatives,
+            );
+            let loss = self.step(&bt.centers, &bt.positives, &bt.negatives, lr);
+            if cfg.log_every > 0 && (step % cfg.log_every == 0 || step + 1 == cfg.steps) {
+                curve.push(LossPoint { step, loss });
+            }
+        }
+        curve
+    }
+
+    fn train_hogwild(
+        &mut self,
+        corpus: &Corpus,
+        cfg: &TrainConfig,
+        batch: usize,
+        k: usize,
+    ) -> Vec<LossPoint> {
+        let t_count = self.threads;
+        let steps = cfg.steps;
+        // Worker t's share; the union of global indices j * T + t over all
+        // workers is exactly 0..steps, so the lr schedule visits the
+        // oracle's values once each (spec-mirrored).
+        let share: Vec<u32> = (0..t_count as u32)
+            .map(|t| steps / t_count as u32 + u32::from(t < steps % t_count as u32))
+            .collect();
+        let queues: Vec<BoundedQueue<Batch>> = (0..t_count)
+            .map(|_| BoundedQueue::new(HOGWILD_QUEUE_DEPTH))
+            .collect();
+        let producers = producer_count(t_count);
+        let curve = Mutex::new(Vec::new());
+        let matrix = &self.matrix;
+        let pool = self.pool.as_ref().expect("pool exists for threads > 1");
+        let (queues, share) = (&queues, &share);
+        std::thread::scope(|sc| {
+            for p in 0..producers {
+                sc.spawn(move || {
+                    // Producer p owns workers t ≡ p (mod producers) and
+                    // drains each owned worker's persistent stream in
+                    // order, round-robin so no queue starves. A sampling
+                    // panic closes every queue first so no worker blocks
+                    // on a dead producer.
+                    let produce = || {
+                        let mut jobs: Vec<(usize, crate::util::rng::Xoshiro256pp, u32)> =
+                            (0..t_count)
+                                .filter(|t| t % producers == p)
+                                .map(|t| {
+                                    let idx = worker_stream_index(t);
+                                    (t, stream(cfg.seed, super::BATCH_STREAM_TAG, idx, 0), share[t])
+                                })
+                                .collect();
+                        while !jobs.is_empty() {
+                            jobs.retain_mut(|(t, rng, left)| {
+                                if *left == 0 {
+                                    return false;
+                                }
+                                let mut bt = Batch::new(batch, k);
+                                corpus.fill_batch(
+                                    rng,
+                                    cfg.window,
+                                    &mut bt.centers,
+                                    &mut bt.positives,
+                                    &mut bt.negatives,
+                                );
+                                queues[*t].push(bt);
+                                *left -= 1;
+                                *left > 0
+                            });
+                        }
+                    };
+                    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(produce));
+                    if let Err(panic) = outcome {
+                        for q in queues.iter() {
+                            q.close();
+                        }
+                        std::panic::resume_unwind(panic);
+                    }
+                });
+            }
+            let body = |t: usize| {
+                let (w_in, w_out, d) = (matrix.w_in_ptr(), matrix.w_out_ptr(), matrix.dim());
+                let my_steps = share[t];
+                let mut dc = vec![0f32; d];
+                for j in 0..my_steps {
+                    // Global lr index of this worker's j-th step.
+                    let g = u64::from(j) * t_count as u64 + t as u64;
+                    let frac = g as f32 / steps.max(1) as f32;
+                    let lr = cfg.lr_start + (cfg.lr_end - cfg.lr_start) * frac;
+                    let bt = queues[t].pop();
+                    // Safety: hogwild — racy row updates by design.
+                    let total = unsafe {
+                        sgd_step_range(
+                            w_in, w_out, d, &bt.centers, &bt.positives, &bt.negatives, lr,
+                            0..batch, &mut dc,
+                        )
+                    };
+                    if t == 0
+                        && cfg.log_every > 0
+                        && (g % u64::from(cfg.log_every) == 0 || j + 1 == my_steps)
+                    {
+                        let loss = (total / batch as f64) as f32;
+                        curve.lock().unwrap().push(LossPoint {
+                            step: g as u32,
+                            loss,
+                        });
+                    }
+                }
+            };
+            // A worker panic re-raises out of `run`; close the queues
+            // before unwinding so blocked producers exit instead of
+            // hanging the scope join.
+            let outcome =
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| pool.run(&body)));
+            for q in queues.iter() {
+                q.close();
+            }
+            if let Err(panic) = outcome {
+                std::panic::resume_unwind(panic);
+            }
+        });
+        curve.into_inner().unwrap()
+    }
+
+    fn train_sharded(
+        &mut self,
+        corpus: &Corpus,
+        cfg: &TrainConfig,
+        batch: usize,
+        k: usize,
+    ) -> Vec<LossPoint> {
+        let steps = cfg.steps;
+        let pipeline = StepPipeline::new(PIPELINE_DEPTH);
+        let producers = producer_count(self.threads);
+        let next = AtomicU32::new(0);
+        let mut curve = Vec::new();
+        let (pipeline_ref, next_ref) = (&pipeline, &next);
+        std::thread::scope(|sc| {
+            for _ in 0..producers {
+                sc.spawn(move || {
+                    let produce = || loop {
+                        let s = next_ref.fetch_add(1, Ordering::Relaxed);
+                        if s >= steps || !pipeline_ref.await_window(s) {
+                            break;
+                        }
+                        // Keyed by the global step only: batch content is
+                        // invariant to thread and producer counts.
+                        let mut rng = stream(cfg.seed, SHARDED_BATCH_TAG, 0, u64::from(s));
+                        let mut bt = Batch::new(batch, k);
+                        corpus.fill_batch(
+                            &mut rng,
+                            cfg.window,
+                            &mut bt.centers,
+                            &mut bt.positives,
+                            &mut bt.negatives,
+                        );
+                        pipeline_ref.insert(s, bt);
+                    };
+                    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(produce));
+                    if let Err(panic) = outcome {
+                        // Wake the consumer (its take(s) panics) instead
+                        // of leaving it blocked on a dead producer.
+                        pipeline_ref.close();
+                        std::panic::resume_unwind(panic);
+                    }
+                });
+            }
+            let consume = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                for s in 0..steps {
+                    let bt = pipeline_ref.take(s);
+                    let t = s as f32 / steps.max(1) as f32;
+                    let lr = cfg.lr_start + (cfg.lr_end - cfg.lr_start) * t;
+                    let loss = self.step_sharded(&bt.centers, &bt.positives, &bt.negatives, lr);
+                    if cfg.log_every > 0 && (s % cfg.log_every == 0 || s + 1 == steps) {
+                        curve.push(LossPoint { step: s, loss });
+                    }
+                }
+            }));
+            // Normal end or consumer panic: release producers parked in
+            // await_window before the scope joins them.
+            pipeline_ref.close();
+            if let Err(panic) = consume {
+                std::panic::resume_unwind(panic);
+            }
+        });
+        curve
+    }
+}
+
+impl SgnsBackend for ParallelSgns {
+    fn sgd_step(
+        &mut self,
+        centers: &[i32],
+        positives: &[i32],
+        negatives: &[i32],
+        lr: f32,
+    ) -> Result<f32> {
+        Ok(self.step(centers, positives, negatives, lr))
+    }
+
+    fn final_embeddings(&self) -> Result<Vec<Vec<f32>>> {
+        Ok(self.embeddings())
+    }
+
+    fn embeddings_flat(&self) -> Option<(&[f32], usize)> {
+        Some((self.matrix.w_in(), self.matrix.dim()))
+    }
+}
+
+/// Sharded phase 1: for each pair in `range`, compute the gradient
+/// coefficients, per-pair loss, the frozen center row snapshot, and the
+/// center gradient — all against the start-of-step matrix.
+///
+/// # Safety
+/// `range`s of concurrent callers must be disjoint; no thread may write
+/// the matrix while any phase-1 call runs.
+#[allow(clippy::too_many_arguments)]
+unsafe fn sharded_grad_range(
+    m: &EmbeddingMatrix,
+    centers: &[i32],
+    positives: &[i32],
+    negatives: &[i32],
+    k: usize,
+    range: Range<usize>,
+    gp: RawSlice<f32>,
+    gn: RawSlice<f32>,
+    cin: RawSlice<f32>,
+    dcs: RawSlice<f32>,
+    loss: RawSlice<f64>,
+) {
+    let d = m.dim();
+    for i in range {
+        let c = centers[i] as usize;
+        let o = positives[i] as usize;
+        let wc = m.row_in_ref(c);
+        let ci = cin.slice(i * d..(i + 1) * d);
+        ci.copy_from_slice(wc);
+        let dc = dcs.slice(i * d..(i + 1) * d);
+        let wo = m.row_out_ref(o);
+        let pos = dot(wc, wo);
+        let g = sigmoid(pos) - 1.0;
+        gp.slice(i..i + 1)[0] = g;
+        let mut l = softplus(-pos) as f64;
+        scale_into(g, wo, dc);
+        for s in 0..k {
+            let nv = negatives[i * k + s] as usize;
+            let wn = m.row_out_ref(nv);
+            let neg = dot(wc, wn);
+            let g = sigmoid(neg);
+            gn.slice(i * k + s..i * k + s + 1)[0] = g;
+            l += softplus(neg) as f64;
+            axpy(g, wn, dc);
+        }
+        loss.slice(i..i + 1)[0] = l;
+    }
+}
+
+/// Sharded phase 2: thread `t` scans every pair in batch order and
+/// applies the updates whose destination rows it owns. All operands come
+/// from phase-1 scratch, so the write sequence per row is a pure function
+/// of the batch — independent of thread count and schedule.
+///
+/// # Safety
+/// Caller must run phase 1 to completion first (full barrier) and give
+/// each thread a distinct `t < t_count`.
+#[allow(clippy::too_many_arguments)]
+unsafe fn sharded_apply_owned(
+    m: &EmbeddingMatrix,
+    centers: &[i32],
+    positives: &[i32],
+    negatives: &[i32],
+    k: usize,
+    lr: f32,
+    t_count: usize,
+    t: usize,
+    gp: &[f32],
+    gn: &[f32],
+    cin: &[f32],
+    dcs: &[f32],
+) {
+    let d = m.dim();
+    let b = centers.len();
+    for i in 0..b {
+        let c = centers[i] as usize;
+        let o = positives[i] as usize;
+        let ci = &cin[i * d..(i + 1) * d];
+        if shard_owner(o, t_count) == t {
+            axpy(-lr * gp[i], ci, m.row_out_mut(o));
+        }
+        for s in 0..k {
+            let nv = negatives[i * k + s] as usize;
+            if shard_owner(nv, t_count) == t {
+                axpy(-lr * gn[i * k + s], ci, m.row_out_mut(nv));
+            }
+        }
+        if shard_owner(c, t_count) == t {
+            axpy(-lr, &dcs[i * d..(i + 1) * d], m.row_in_mut(c));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::RustSgns;
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn matrix_init_matches_oracle_bitwise() {
+        let oracle = RustSgns::new(37, 8, 99);
+        let m = EmbeddingMatrix::new(37, 8, 99);
+        assert_eq!(m.w_in(), &oracle.w_in[..]);
+        assert_eq!(m.w_out(), &oracle.w_out[..]);
+    }
+
+    #[test]
+    fn pool_runs_every_worker_every_epoch() {
+        let pool = Pool::new(4);
+        let hits = AtomicUsize::new(0);
+        for _ in 0..50 {
+            pool.run(&|_t| {
+                hits.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(hits.load(Ordering::SeqCst), 200);
+    }
+
+    #[test]
+    fn pool_propagates_worker_panics() {
+        let pool = Pool::new(2);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(&|t| {
+                if t == 1 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(caught.is_err());
+        // The pool stays usable afterwards.
+        let hits = AtomicUsize::new(0);
+        pool.run(&|_t| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn bounded_queue_fifo_within_capacity() {
+        let q = BoundedQueue::new(4);
+        for i in 0..4 {
+            q.push(i);
+        }
+        for i in 0..4 {
+            assert_eq!(q.pop(), i);
+        }
+    }
+
+    #[test]
+    fn step_pipeline_delivers_in_order_despite_insert_order() {
+        let p = StepPipeline::new(8);
+        for s in [3u32, 1, 0, 2] {
+            assert!(p.await_window(s), "open pipeline must admit in-window steps");
+            p.insert(s, Batch::new(1, 1));
+        }
+        for s in 0..4 {
+            let _ = p.take(s);
+        }
+        assert_eq!(p.state.lock().unwrap().consumed, 4);
+        // Closing releases producers: an out-of-window await returns
+        // immediately with `false` instead of blocking.
+        p.close();
+        assert!(!p.await_window(1_000_000));
+    }
+
+    #[test]
+    fn closed_queue_unblocks_both_sides() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(2);
+        q.push(1);
+        q.close();
+        // Push after close is a no-op; the buffered item still drains.
+        q.push(2);
+        assert_eq!(q.pop(), 1);
+        // A further pop must fail loudly, not block forever.
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| q.pop()));
+        assert!(res.is_err());
+    }
+
+    fn toy_batch(n: usize, b: usize, k: usize, seed: u64) -> (Vec<i32>, Vec<i32>, Vec<i32>) {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let draw = |rng: &mut Xoshiro256pp| rng.next_index(n) as i32;
+        let centers: Vec<i32> = (0..b).map(|_| draw(&mut rng)).collect();
+        let positives: Vec<i32> = (0..b)
+            .map(|i| {
+                // Avoid degenerate self-pairs so loss terms stay generic.
+                let mut p = draw(&mut rng);
+                while p == centers[i] {
+                    p = draw(&mut rng);
+                }
+                p
+            })
+            .collect();
+        let negatives: Vec<i32> = (0..b * k).map(|_| draw(&mut rng)).collect();
+        (centers, positives, negatives)
+    }
+
+    #[test]
+    fn single_thread_step_bit_identical_to_oracle() {
+        let n = 50;
+        let mut oracle = RustSgns::new(n, 16, 7);
+        let mut par = ParallelSgns::new(n, 16, 7, 1, TrainMode::Hogwild);
+        for round in 0..5u64 {
+            let (c, p, neg) = toy_batch(n, 32, 5, 100 + round);
+            let a = oracle.step(&c, &p, &neg, 0.1);
+            let b = par.step(&c, &p, &neg, 0.1);
+            assert_eq!(a, b, "loss diverged at round {round}");
+        }
+        assert_eq!(par.embeddings_flat(), &oracle.w_in[..]);
+        assert_eq!(par.matrix.w_out(), &oracle.w_out[..]);
+    }
+
+    #[test]
+    fn sharded_step_identical_across_thread_counts() {
+        let n = 60;
+        let mut models: Vec<ParallelSgns> = [1usize, 2, 3, 4]
+            .iter()
+            .map(|&t| ParallelSgns::new(n, 12, 13, t, TrainMode::Sharded))
+            .collect();
+        for round in 0..6u64 {
+            let (c, p, neg) = toy_batch(n, 24, 4, 500 + round);
+            let losses: Vec<f32> = models.iter_mut().map(|m| m.step(&c, &p, &neg, 0.15)).collect();
+            for l in &losses[1..] {
+                assert_eq!(*l, losses[0], "sharded loss depends on thread count");
+            }
+        }
+        let reference = models[0].embeddings_flat().to_vec();
+        for m in &models[1..] {
+            assert_eq!(m.embeddings_flat(), &reference[..]);
+            assert_eq!(m.matrix.w_out(), models[0].matrix.w_out());
+        }
+    }
+
+    #[test]
+    fn hogwild_multithread_step_trains_without_corruption() {
+        let n = 40;
+        let mut par = ParallelSgns::new(n, 16, 3, 4, TrainMode::Hogwild);
+        let mut first = f32::NAN;
+        let mut last = f32::NAN;
+        for round in 0..150u64 {
+            let (c, p, neg) = toy_batch(n, 64, 5, round);
+            last = par.step(&c, &p, &neg, 0.2);
+            assert!(last.is_finite(), "loss diverged at round {round}");
+            if round == 0 {
+                first = last;
+            }
+        }
+        // Unstructured pairs still admit loss reduction (the 1:k pos/neg
+        // imbalance pushes dots negative); racy updates must not stop it.
+        assert!(last < first * 0.9, "no progress: {first} -> {last}");
+        for x in par.embeddings_flat() {
+            assert!(x.is_finite());
+        }
+    }
+
+    #[test]
+    fn shard_owner_partitions_vertices() {
+        for threads in [1usize, 2, 3, 8] {
+            let mut counts = vec![0usize; threads];
+            for v in 0..1000 {
+                counts[shard_owner(v, threads)] += 1;
+            }
+            assert_eq!(counts.iter().sum::<usize>(), 1000);
+            let (mn, mx) = (counts.iter().min().unwrap(), counts.iter().max().unwrap());
+            assert!(mx - mn <= 1, "unbalanced ownership at {threads} threads");
+        }
+    }
+
+    #[test]
+    fn stream_plumbing_constants() {
+        assert_eq!(worker_stream_index(0), 0, "worker 0 must be the oracle stream");
+        assert_eq!(worker_stream_index(1), 2, "index 1 is reserved for TrainerSink");
+        assert_eq!(producer_count(1), 1);
+        assert_eq!(producer_count(4), 1);
+        assert_eq!(producer_count(8), 2);
+    }
+}

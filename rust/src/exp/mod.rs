@@ -28,7 +28,9 @@ COMMANDS:
                  [--sampler <linear|reject>] [--partitioner <hash|range|degree>]
                  [--hot-threshold <deg>] [--seeds <spec>] [--rounds <k>]
                  [--stream-walks <path>] [--graph-file <path>] [--mmap]
-    embed --graph <name> [--rounds <k>]         walks pipelined into SGNS
+    embed --graph <name> [--rounds <k>] [--train-threads <n>]
+                 [--train-mode <hogwild|sharded>]
+                                                walks pipelined into SGNS
     pipeline --graph blogcatalog [--rounds <k>] walks -> embeddings -> F1
     help
 
@@ -61,6 +63,14 @@ COMMON FLAGS:
     --stream-walks <p> stream each round's walks to file <p> (one line per
                        walk: `seed<TAB>v0 v1 ...`) instead of collecting
                        them in memory
+    --train-threads <n> SGNS worker threads for embed/pipeline (default 1
+                       = the serial oracle; >1 runs the parallel trainer
+                       with a pre-sampling batch pipeline)
+    --train-mode <m>   parallel update discipline: `hogwild` (lock-free,
+                       max throughput, not bit-reproducible above one
+                       thread) or `sharded` (owned-row updates,
+                       bit-deterministic for any thread count); see
+                       EXPERIMENTS.md §Train
     --graph-file <p>   serve a graph file (v1 or FN2VGRF2) instead of a
                        generated `--graph` name
     --mmap             open the graph zero-copy via the FN2VGRF2 store
@@ -283,6 +293,7 @@ fn cli_inner(raw: Vec<String>) -> Result<(), String> {
             let q: f32 = args.get_parsed("q", 2.0)?;
             let workers: usize = args.get_parsed("workers", common::WORKERS)?;
             let rounds: u32 = args.get_parsed("rounds", 4)?;
+            let (train_threads, train_mode) = parse_train_knobs(&args)?;
             let ng = common::resolve_graph(
                 args.get("graph"),
                 args.get("graph-file"),
@@ -301,11 +312,14 @@ fn cli_inner(raw: Vec<String>) -> Result<(), String> {
             let tcfg = crate::embed::TrainConfig {
                 steps: if scale == Scale::Quick { 200 } else { 3000 },
                 seed,
+                threads: train_threads,
+                mode: train_mode,
                 ..Default::default()
             };
-            // Pipelined: each round of walks trains as soon as it lands.
+            // Pipelined: each round of walks trains as soon as it lands,
+            // with all requested cores (TrainerSink is backend-agnostic).
             let mut sink = crate::embed::TrainerSink::new(
-                crate::embed::RustSgns::new(n, 64, seed),
+                train_backend(n, 64, &tcfg),
                 n,
                 tcfg,
                 256,
@@ -316,20 +330,31 @@ fn cli_inner(raw: Vec<String>) -> Result<(), String> {
             let req = crate::node2vec::WalkRequest::all().with_rounds(rounds);
             session.run(&req, &mut sink).map_err(|e| e.to_string())?;
             let steps = sink.steps_run();
-            let (_, curve) = sink.finish().map_err(|e| e.to_string())?;
+            let (model, curve) = sink.finish().map_err(|e| e.to_string())?;
             println!(
-                "pipelined walks+SGNS on {} ({rounds} rounds, {steps} steps) in {}; loss {:.3} -> {:.3}",
+                "pipelined walks+SGNS on {} ({rounds} rounds, {steps} steps, {} \
+                 x{train_threads}) in {}; loss {:.3} -> {:.3}",
                 ng.name,
+                train_mode.name(),
                 crate::util::fmt_secs(t.elapsed().as_secs_f64()),
                 curve.first().map(|l| l.loss).unwrap_or(f32::NAN),
                 curve.last().map(|l| l.loss).unwrap_or(f32::NAN),
             );
+            // Hot read path: rank neighbors off the flat view, no
+            // row-by-row clone of the matrix.
+            if let Some((flat, dim)) = crate::embed::SgnsBackend::embeddings_flat(&model) {
+                let nn = crate::embed::nearest_flat(flat, dim, 0, 3);
+                let nn: Vec<String> =
+                    nn.iter().map(|(v, c)| format!("{v} ({c:.2})")).collect();
+                println!("nearest to v0: {}", nn.join(", "));
+            }
             Ok(())
         }
         "pipeline" => {
             let frac: f64 = args.get_parsed("train-fraction", 0.5)?;
             let rounds: u32 = args.get_parsed("rounds", 1)?;
             let workers: usize = args.get_parsed("workers", common::WORKERS)?;
+            let (train_threads, train_mode) = parse_train_knobs(&args)?;
             let lg = crate::gen::labeled_community_graph(
                 &crate::gen::LabeledConfig::blogcatalog_like(seed),
             );
@@ -355,12 +380,14 @@ fn cli_inner(raw: Vec<String>) -> Result<(), String> {
             let tcfg = crate::embed::TrainConfig {
                 steps: if scale == Scale::Quick { 200 } else { 3000 },
                 seed,
+                threads: train_threads,
+                mode: train_mode,
                 ..Default::default()
             };
             let embeddings = if rounds > 1 {
                 // Pipelined: rounds stream into SGNS as they finish.
                 let mut sink = crate::embed::TrainerSink::new(
-                    crate::embed::RustSgns::new(n, 64, seed),
+                    train_backend(n, 64, &tcfg),
                     n,
                     tcfg,
                     256,
@@ -372,12 +399,13 @@ fn cli_inner(raw: Vec<String>) -> Result<(), String> {
                 session.run(&req, &mut sink).map_err(|e| e.to_string())?;
                 let (model, curve) = sink.finish().map_err(|e| e.to_string())?;
                 println!(
-                    "pipelined walks+SGNS ({rounds} rounds) in {}; loss {:.3} -> {:.3}",
+                    "pipelined walks+SGNS ({rounds} rounds, {} x{train_threads}) in {}; loss {:.3} -> {:.3}",
+                    train_mode.name(),
                     crate::util::fmt_secs(t.elapsed().as_secs_f64()),
                     curve.first().map(|l| l.loss).unwrap_or(f32::NAN),
                     curve.last().map(|l| l.loss).unwrap_or(f32::NAN),
                 );
-                model.embeddings()
+                crate::embed::SgnsBackend::final_embeddings(&model).map_err(|e| e.to_string())?
             } else {
                 let t = std::time::Instant::now();
                 let walks = session
@@ -410,6 +438,38 @@ fn cli_inner(raw: Vec<String>) -> Result<(), String> {
             Ok(())
         }
         other => Err(format!("unknown command `{other}`; see `fastn2v help`")),
+    }
+}
+
+/// Parse the shared SGNS training knobs of `embed` / `pipeline`.
+fn parse_train_knobs(args: &Args) -> Result<(usize, crate::embed::TrainMode), String> {
+    let threads: usize = args.get_parsed("train-threads", 1)?;
+    if threads == 0 {
+        return Err("--train-threads must be >= 1".into());
+    }
+    let mode = crate::embed::TrainMode::parse(args.get_choice(
+        "train-mode",
+        "hogwild",
+        &["hogwild", "sharded"],
+    )?)
+    .expect("get_choice validated");
+    Ok((threads, mode))
+}
+
+/// Pick the SGNS backend for a `TrainConfig`: the parallel subsystem when
+/// more than one thread is requested — or whenever `sharded` mode is,
+/// even at one thread, so a sharded run is the *same trajectory* at every
+/// `--train-threads` value (its invariance promise); the serial oracle
+/// otherwise. Boxed so one `TrainerSink` type drives either.
+fn train_backend(
+    num_vertices: usize,
+    dim: usize,
+    tcfg: &crate::embed::TrainConfig,
+) -> Box<dyn crate::embed::SgnsBackend> {
+    if tcfg.threads > 1 || tcfg.mode == crate::embed::TrainMode::Sharded {
+        Box::new(crate::embed::ParallelSgns::from_config(num_vertices, dim, tcfg))
+    } else {
+        Box::new(crate::embed::RustSgns::new(num_vertices, dim, tcfg.seed))
     }
 }
 
@@ -618,6 +678,28 @@ mod cli_tests {
     fn embed_subcommand_pipelines_quick() {
         assert_eq!(run(&["embed", "--graph", "skew-2", "--rounds", "2", "--quick"]), 0);
         assert_eq!(run(&["embed", "--quick"]), 2); // missing --graph
+    }
+
+    #[test]
+    fn embed_train_threads_and_mode_knobs() {
+        for mode in ["hogwild", "sharded"] {
+            assert_eq!(
+                run(&[
+                    "embed", "--graph", "skew-2", "--rounds", "2", "--train-threads", "2",
+                    "--train-mode", mode, "--quick",
+                ]),
+                0
+            );
+        }
+        // Bad values fail loudly.
+        assert_eq!(
+            run(&["embed", "--graph", "skew-2", "--train-mode", "lockstep", "--quick"]),
+            2
+        );
+        assert_eq!(
+            run(&["embed", "--graph", "skew-2", "--train-threads", "0", "--quick"]),
+            2
+        );
     }
 
     #[test]

@@ -7,7 +7,7 @@ use std::path::PathBuf;
 use crate::util::error::Result;
 
 use crate::classify::{evaluate, ClassifyConfig, F1Scores};
-use crate::embed::{train, Corpus, LossPoint, RustSgns, TrainConfig};
+use crate::embed::{train, Corpus, LossPoint, ParallelSgns, RustSgns, TrainConfig, TrainMode};
 use crate::graph::partition::PartitionerKind;
 use crate::graph::Graph;
 use crate::node2vec::{
@@ -30,13 +30,20 @@ pub struct EmbedOutcome {
     pub embeddings: Vec<Vec<f32>>,
     pub loss_curve: Vec<LossPoint>,
     pub train_secs: f64,
-    /// "pjrt" (AOT JAX/Pallas via the runtime) or "rust-oracle" fallback.
+    /// "pjrt" (AOT JAX/Pallas via the runtime), "rust-parallel-hogwild" /
+    /// "rust-parallel-sharded" (multi-threaded, `cfg.threads > 1`), or
+    /// the serial "rust-oracle" fallback.
     pub backend: &'static str,
 }
 
-/// Train SGNS embeddings from walks. Uses the PJRT runtime when artifacts
-/// exist (the production path: Python never runs here), else the pure-Rust
-/// oracle so examples stay runnable before `make artifacts`.
+/// Train SGNS embeddings from walks. `cfg.threads > 1` — or `sharded`
+/// mode at *any* thread count, so a sharded run is the same trajectory at
+/// every `threads` value — selects the multi-threaded [`ParallelSgns`]
+/// subsystem (an explicit parallel request wins over artifacts — the
+/// PJRT step is a single-stream program); otherwise the PJRT runtime
+/// when artifacts exist (the production path: Python never runs here),
+/// else the pure-Rust oracle so examples stay runnable before
+/// `make artifacts`.
 pub fn embeddings_from_walks(
     walks: &WalkSet,
     num_vertices: usize,
@@ -44,6 +51,19 @@ pub fn embeddings_from_walks(
 ) -> Result<EmbedOutcome> {
     let corpus = Corpus::new(walks, num_vertices);
     let t = std::time::Instant::now();
+    if cfg.threads > 1 || cfg.mode == TrainMode::Sharded {
+        let mut model = ParallelSgns::from_config(num_vertices, 64, cfg);
+        let curve = model.train(&corpus, cfg, 256, 5);
+        return Ok(EmbedOutcome {
+            embeddings: model.embeddings(),
+            loss_curve: curve,
+            train_secs: t.elapsed().as_secs_f64(),
+            backend: match cfg.mode {
+                TrainMode::Hogwild => "rust-parallel-hogwild",
+                TrainMode::Sharded => "rust-parallel-sharded",
+            },
+        });
+    }
     if artifacts_present() {
         match SgnsRuntime::load(&artifacts_dir(), num_vertices, cfg.seed) {
             Ok(mut rt) => {
@@ -272,6 +292,36 @@ mod tests {
         assert_eq!(a.queries, 5);
         assert!(a.reuse_secs >= 0.0 && a.rebuild_secs >= 0.0);
         assert!(a.speedup() > 0.0);
+    }
+
+    #[test]
+    fn parallel_backend_selected_and_useful_when_threads_requested() {
+        let lg = labeled_community_graph(&LabeledConfig::tiny(31));
+        let session = WalkSession::builder(
+            lg.graph.clone(),
+            FnConfig::new(1.0, 1.0, 7).with_walk_length(20),
+        )
+        .workers(4)
+        .build();
+        let walks = session.collect(&WalkRequest::all()).unwrap().walks;
+        for (mode, name) in [
+            (TrainMode::Hogwild, "rust-parallel-hogwild"),
+            (TrainMode::Sharded, "rust-parallel-sharded"),
+        ] {
+            let cfg = TrainConfig {
+                steps: 400,
+                log_every: 100,
+                threads: 2,
+                mode,
+                ..Default::default()
+            };
+            let out = embeddings_from_walks(&walks, lg.graph.num_vertices(), &cfg).unwrap();
+            assert_eq!(out.backend, name);
+            assert!(!out.loss_curve.is_empty());
+            let first = out.loss_curve.first().unwrap().loss;
+            let last = out.loss_curve.last().unwrap().loss;
+            assert!(last < first, "{name} loss did not decrease: {first} -> {last}");
+        }
     }
 
     #[test]

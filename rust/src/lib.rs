@@ -15,7 +15,8 @@
 //!                 trim-30, shuffle-spill joins).
 //! - [`runtime`] — PJRT loader for AOT-compiled JAX/Pallas SGNS artifacts.
 //! - [`embed`]   — skip-gram-negative-sampling trainer over walks (HLO hot
-//!                 path with a pure-Rust oracle).
+//!                 path with a pure-Rust oracle, plus the lock-free
+//!                 multi-threaded `embed::parallel` subsystem).
 //! - [`classify`]— one-vs-rest logistic regression + micro/macro F1.
 //! - [`exp`]     — per-figure experiment drivers (Table 1, Figures 1-14).
 //! - [`util`]    — PRNG, alias sampling, CLI, benchkit, propkit, memstat.

@@ -1,0 +1,222 @@
+//! Acceptance suite for the parallel SGNS subsystem (ISSUE 5):
+//!
+//! - `ParallelSgns` with `threads = 1` (hogwild) is bit-identical to the
+//!   `RustSgns` oracle — loss curves *and* both embedding tables — on the
+//!   staged `train` path;
+//! - `sharded` mode is bit-deterministic across runs *and* thread counts,
+//!   staged and through `TrainerSink`;
+//! - `hogwild` multi-threaded training passes the same
+//!   communities-separate quality gate as the serial oracle;
+//! - `TrainerSink` drives the new backend unchanged through a live
+//!   `WalkSession` (the `SgnsBackend` seam holds).
+
+use std::sync::Arc;
+
+use fastn2v::embed::{
+    cosine, Corpus, ParallelSgns, RustSgns, SgnsBackend, TrainConfig, TrainMode, TrainerSink,
+};
+use fastn2v::gen::{labeled_community_graph, LabeledConfig};
+use fastn2v::graph::Graph;
+use fastn2v::node2vec::{FnConfig, WalkRequest, WalkSession, WalkSet};
+
+fn community_walks(seed: u64) -> (Arc<Graph>, WalkSet) {
+    let lg = labeled_community_graph(&LabeledConfig::tiny(seed));
+    let cfg = FnConfig::new(1.0, 1.0, 3).with_walk_length(20);
+    let session = WalkSession::builder(lg.graph.clone(), cfg).workers(4).build();
+    let out = session.collect(&WalkRequest::all()).unwrap();
+    (lg.graph, out.walks)
+}
+
+/// Acceptance: one-thread `ParallelSgns` *is* the oracle, byte for byte.
+#[test]
+fn single_thread_hogwild_train_bit_identical_to_oracle() {
+    let (g, walks) = community_walks(5);
+    let n = g.num_vertices();
+    let corpus = Corpus::new(&walks, n);
+    let cfg = TrainConfig {
+        steps: 250,
+        log_every: 50,
+        seed: 9,
+        ..Default::default()
+    };
+    let mut oracle = RustSgns::new(n, 32, 9);
+    let oracle_curve = oracle.train(&corpus, &cfg, 128, 5);
+
+    let mut par = ParallelSgns::new(n, 32, 9, 1, TrainMode::Hogwild);
+    let par_curve = par.train(&corpus, &cfg, 128, 5);
+
+    assert_eq!(oracle_curve.len(), par_curve.len());
+    for (a, b) in oracle_curve.iter().zip(&par_curve) {
+        assert_eq!(a.step, b.step);
+        assert_eq!(a.loss, b.loss, "loss diverged at step {}", a.step);
+    }
+    assert_eq!(par.embeddings_flat(), &oracle.w_in[..], "w_in diverged");
+    assert_eq!(par.matrix().w_out(), &oracle.w_out[..], "w_out diverged");
+}
+
+/// Acceptance: `sharded` training is a pure function of the corpus and
+/// config — the same bits for every thread count and every run.
+#[test]
+fn sharded_train_bit_identical_across_runs_and_thread_counts() {
+    let (g, walks) = community_walks(7);
+    let n = g.num_vertices();
+    let corpus = Corpus::new(&walks, n);
+    let cfg = TrainConfig {
+        steps: 120,
+        log_every: 30,
+        seed: 21,
+        ..Default::default()
+    };
+    let run = |threads: usize| {
+        let mut m = ParallelSgns::new(n, 16, 21, threads, TrainMode::Sharded);
+        let curve = m.train(&corpus, &cfg, 64, 5);
+        (m.embeddings_flat().to_vec(), m.matrix().w_out().to_vec(), curve)
+    };
+    let (w_in_1, w_out_1, curve_1) = run(1);
+    assert!(!curve_1.is_empty());
+    for threads in [1usize, 2, 3, 4] {
+        let (w_in_t, w_out_t, curve_t) = run(threads);
+        assert_eq!(w_in_t, w_in_1, "w_in depends on thread count {threads}");
+        assert_eq!(w_out_t, w_out_1, "w_out depends on thread count {threads}");
+        assert_eq!(curve_t.len(), curve_1.len());
+        for (a, b) in curve_t.iter().zip(&curve_1) {
+            assert_eq!(a.step, b.step);
+            assert_eq!(a.loss, b.loss, "sharded loss not invariant at step {}", a.step);
+        }
+    }
+}
+
+/// Quality gate (the `embeddings_capture_communities` bar) for racy
+/// multi-threaded hogwild: same-community vertices end closer than
+/// cross-community ones.
+#[test]
+fn hogwild_multithread_passes_community_quality_gate() {
+    let lg = labeled_community_graph(&LabeledConfig::tiny(9));
+    let cfg = FnConfig::new(1.0, 1.0, 3).with_walk_length(20);
+    let session = WalkSession::builder(lg.graph.clone(), cfg).workers(4).build();
+    let walks = session.collect(&WalkRequest::all()).unwrap().walks;
+    let n = lg.graph.num_vertices();
+    let corpus = Corpus::new(&walks, n);
+    let tcfg = TrainConfig {
+        steps: 1200,
+        log_every: 0,
+        seed: 3,
+        threads: 4,
+        mode: TrainMode::Hogwild,
+        ..Default::default()
+    };
+    let mut model = ParallelSgns::from_config(n, 32, &tcfg);
+    model.train(&corpus, &tcfg, 128, 5);
+    let (emb, d) = (model.embeddings_flat(), model.dim());
+    let mut rng = fastn2v::util::rng::Xoshiro256pp::seed_from_u64(11);
+    let (mut same, mut cross) = (0f64, 0f64);
+    let (mut ns, mut nc) = (0u32, 0u32);
+    for _ in 0..4000 {
+        let a = rng.next_index(n);
+        let b = rng.next_index(n);
+        if a == b {
+            continue;
+        }
+        let shared = lg.labels[a].iter().any(|l| lg.labels[b].contains(l));
+        let cs = cosine(&emb[a * d..(a + 1) * d], &emb[b * d..(b + 1) * d]) as f64;
+        if shared {
+            same += cs;
+            ns += 1;
+        } else {
+            cross += cs;
+            nc += 1;
+        }
+    }
+    let same = same / ns as f64;
+    let cross = cross / nc as f64;
+    assert!(
+        same > cross + 0.05,
+        "hogwild communities not separated: same {same:.3} cross {cross:.3}"
+    );
+}
+
+/// The `SgnsBackend` seam: `TrainerSink` drives the parallel backend
+/// unchanged. With one thread the pipelined trajectory is bit-identical
+/// to the sink over the oracle; in sharded mode it is additionally
+/// invariant to the backend's thread count.
+#[test]
+fn trainer_sink_unchanged_over_parallel_backend() {
+    let (g, walks) = community_walks(13);
+    let n = g.num_vertices();
+    let rounds = 3u32;
+    let tcfg = TrainConfig {
+        steps: 240,
+        log_every: 40,
+        seed: 11,
+        ..Default::default()
+    };
+    let feed = |mut sink: TrainerSink<Box<dyn SgnsBackend>>| {
+        use fastn2v::node2vec::{RoundStats, WalkSink};
+        for round in 0..rounds {
+            for (seed, w) in walks.iter().enumerate() {
+                if (seed as u32) % rounds == round && w.len() >= 2 {
+                    sink.on_walk(seed as u32, round, w);
+                }
+            }
+            sink.on_round_end(round, &RoundStats::default());
+        }
+        assert_eq!(sink.steps_run(), tcfg.steps);
+        let (model, curve) = sink.finish().unwrap();
+        let (flat, dim) = model.embeddings_flat().expect("rust backends expose flat views");
+        assert_eq!(dim, 24);
+        (flat.to_vec(), curve)
+    };
+    let sink_over = |backend: Box<dyn SgnsBackend>| {
+        feed(TrainerSink::new(backend, n, tcfg, 128, 5, rounds))
+    };
+
+    // threads=1 parallel backend == oracle backend, bit for bit.
+    let (oracle_emb, oracle_curve) = sink_over(Box::new(RustSgns::new(n, 24, 11)));
+    let (par_emb, par_curve) =
+        sink_over(Box::new(ParallelSgns::new(n, 24, 11, 1, TrainMode::Hogwild)));
+    assert_eq!(par_emb, oracle_emb, "threads=1 sink diverged from oracle sink");
+    assert_eq!(par_curve.len(), oracle_curve.len());
+    for (a, b) in par_curve.iter().zip(&oracle_curve) {
+        assert_eq!((a.step, a.loss), (b.step, b.loss));
+    }
+
+    // Sharded: the sink trajectory is invariant to backend thread count.
+    let sharded = |threads: usize| {
+        sink_over(Box::new(ParallelSgns::new(n, 24, 11, threads, TrainMode::Sharded)))
+    };
+    let (emb_1, curve_1) = sharded(1);
+    for threads in [2usize, 4] {
+        let (emb_t, curve_t) = sharded(threads);
+        assert_eq!(emb_t, emb_1, "sharded sink depends on thread count {threads}");
+        for (a, b) in curve_t.iter().zip(&curve_1) {
+            assert_eq!((a.step, a.loss), (b.step, b.loss));
+        }
+    }
+}
+
+/// Staged multi-threaded hogwild keeps making progress (loss decreases
+/// and stays finite) — the throughput mode's sanity bar.
+#[test]
+fn hogwild_multithread_staged_train_loss_decreases() {
+    let (g, walks) = community_walks(17);
+    let n = g.num_vertices();
+    let corpus = Corpus::new(&walks, n);
+    let cfg = TrainConfig {
+        steps: 600,
+        log_every: 100,
+        seed: 29,
+        threads: 4,
+        mode: TrainMode::Hogwild,
+        ..Default::default()
+    };
+    let mut model = ParallelSgns::from_config(n, 32, &cfg);
+    let curve = model.train(&corpus, &cfg, 128, 5);
+    assert!(curve.len() >= 3, "worker 0 must log its share of the schedule");
+    let first = curve.first().unwrap().loss;
+    let last = curve.last().unwrap().loss;
+    assert!(first.is_finite() && last.is_finite());
+    assert!(last < first * 0.8, "loss did not decrease: {first} -> {last}");
+    for x in model.embeddings_flat() {
+        assert!(x.is_finite(), "hogwild races corrupted the matrix");
+    }
+}
