@@ -1,0 +1,358 @@
+"""Executable spec for the FN2VCKP1 checkpoint format and resume rules.
+
+Mirrors rust/src/pregel/checkpoint.rs and the degradation policy in
+rust/src/node2vec/session.rs (the Rust cannot be compiled in this
+container — see EXPERIMENTS.md §Environment): a byte-exact
+reimplementation of the checkpoint writer, the header parser with its
+validation order, the checkpoint-file naming rule, the FN-Multi
+class-splitting identity, and the transient-I/O retry schedule.
+
+Keep in sync with the Rust:
+
+- header layout (64 bytes, little-endian): magic "FN2VCKP1" | version
+  u32=1 | superstep u32 | pass u32 | round u32 | rounds u32 | n u32 |
+  fingerprint u64 | payload_len u64 | fxhash64(payload) | fxhash64 of
+  bytes 0..56;
+- payload: [tag u32][len u64][body] sections — VALUES (1), MESSAGES (2),
+  SCHEDULE (3); VALUES/MESSAGES bodies open with a count u64;
+- validation order: size (header) → magic → version → checksum →
+  superstep (vs the engine cap) → size (payload) → payload checksum →
+  sections, each failure naming the field;
+- files are named ckpt-<unit:06>-<superstep:06>.fn2vckp so lexicographic
+  order is logical order;
+- degradation splits class {s ≡ er (mod c)} into {s ≡ er (mod 2c)} and
+  {s ≡ er+c (mod 2c)}, capped at 32× the requested rounds;
+- retry_io: 4 attempts, backoff 1 ms doubling to a 50 ms cap.
+"""
+
+import struct
+
+import pytest
+
+MASK64 = (1 << 64) - 1
+FX_SEED = 0x517C_C1B7_2722_0A95  # util/fxhash.rs
+MAGIC = b"FN2VCKP1"
+VERSION = 1
+HEADER_BYTES = 64
+SEC_VALUES = 1
+SEC_MESSAGES = 2
+SEC_SCHEDULE = 3
+CKP_EXTENSION = "fn2vckp"
+
+# util/failpoints.rs retry schedule.
+RETRY_ATTEMPTS = 4
+BACKOFF_START_MS = 1
+BACKOFF_CAP_MS = 50
+
+# session.rs split_or_fail: splitting stops past 32x the requested rounds.
+SPLIT_CAP_FACTOR = 32
+
+
+def rotl64(x: int, r: int) -> int:
+    return ((x << r) | (x >> (64 - r))) & MASK64
+
+
+def fxhash64(data: bytes) -> int:
+    # Mirrors FxHasher::write + finish.
+    h = 0
+    for i in range(0, len(data), 8):
+        word = int.from_bytes(data[i : i + 8].ljust(8, b"\0"), "little")
+        h = ((rotl64(h, 5) ^ word) * FX_SEED) & MASK64
+    return h
+
+
+class FormatError(Exception):
+    """Field-typed failure, mirroring StoreError::Format."""
+
+    def __init__(self, field: str, detail: str = ""):
+        super().__init__(f"invalid {field}: {detail}")
+        self.field = field
+
+
+# ------------------------------------------------------------------ writer
+
+
+def section(tag: int, body: bytes) -> bytes:
+    return struct.pack("<IQ", tag, len(body)) + body
+
+
+def write_checkpoint(
+    superstep,
+    pass_,
+    round_,
+    rounds,
+    n,
+    fingerprint,
+    values=b"",
+    messages=b"",
+    schedule=b"",
+    value_count=0,
+    msg_count=0,
+) -> bytes:
+    # Mirrors checkpoint.rs::write_checkpoint (the in-memory image; the
+    # Rust writes it via temp file + fsync + atomic rename).
+    payload = (
+        section(SEC_VALUES, struct.pack("<Q", value_count) + values)
+        + section(SEC_MESSAGES, struct.pack("<Q", msg_count) + messages)
+        + section(SEC_SCHEDULE, schedule)
+    )
+    head = MAGIC + struct.pack(
+        "<IIIIIIQQQ",
+        VERSION,
+        superstep,
+        pass_,
+        round_,
+        rounds,
+        n,
+        fingerprint,
+        len(payload),
+        fxhash64(payload),
+    )
+    assert len(head) == 56
+    head += struct.pack("<Q", fxhash64(head))
+    return head + payload
+
+
+def checkpoint_name(unit_seq: int, superstep: int) -> str:
+    return f"ckpt-{unit_seq:06}-{superstep:06}.{CKP_EXTENSION}"
+
+
+# ------------------------------------------------------------------ reader
+
+
+def read_checkpoint(buf: bytes, max_supersteps: int):
+    # Mirrors checkpoint.rs::read_checkpoint — this exact order.
+    if len(buf) < HEADER_BYTES:
+        raise FormatError("size", "file shorter than the header")
+    h = buf[:HEADER_BYTES]
+    if h[0:8] != MAGIC:
+        raise FormatError("magic", "not an FN2VCKP1 checkpoint")
+    (version,) = struct.unpack("<I", h[8:12])
+    if version != VERSION:
+        raise FormatError("version", str(version))
+    (stored_sum,) = struct.unpack("<Q", h[56:64])
+    if stored_sum != fxhash64(h[:56]):
+        raise FormatError("checksum", "header checksum mismatch")
+    (superstep,) = struct.unpack("<I", h[12:16])
+    if superstep > max_supersteps:
+        raise FormatError("superstep", f"{superstep} exceeds cap {max_supersteps}")
+    pass_, round_, rounds, n = struct.unpack("<IIII", h[16:32])
+    fingerprint, payload_len, payload_sum = struct.unpack("<QQQ", h[32:56])
+    payload = buf[HEADER_BYTES:]
+    if payload_len != len(payload):
+        raise FormatError("size", f"payload needs {payload_len}, have {len(payload)}")
+    if payload_sum != fxhash64(payload):
+        raise FormatError("payload", "payload checksum mismatch")
+    sections, pos = {}, 0
+    while pos < len(payload):
+        if pos + 12 > len(payload):
+            raise FormatError("sections", "truncated section frame")
+        tag, length = struct.unpack_from("<IQ", payload, pos)
+        pos += 12
+        if pos + length > len(payload):
+            raise FormatError("sections", "section body overruns payload")
+        if tag not in (SEC_VALUES, SEC_MESSAGES, SEC_SCHEDULE):
+            raise FormatError("sections", f"unknown section tag {tag}")
+        sections[tag] = payload[pos : pos + length]
+        pos += length
+    if set(sections) != {SEC_VALUES, SEC_MESSAGES, SEC_SCHEDULE}:
+        raise FormatError("sections", "missing a required section")
+    return {
+        "superstep": superstep,
+        "pass": pass_,
+        "round": round_,
+        "rounds": rounds,
+        "n": n,
+        "fingerprint": fingerprint,
+        "sections": sections,
+    }
+
+
+# --------------------------------------------------------------- fixtures
+
+
+def sample_checkpoint(**overrides) -> bytes:
+    kw = dict(
+        superstep=7,
+        pass_=0,
+        round_=1,
+        rounds=2,
+        n=512,
+        fingerprint=0xDEAD_BEEF_0123,
+        values=bytes(range(48)),
+        messages=b"\x11" * 24,
+        schedule=b"\x22" * 17,
+        value_count=3,
+        msg_count=2,
+    )
+    kw.update(overrides)
+    return write_checkpoint(**kw)
+
+
+def repack_header(buf: bytes, offset: int, field_bytes: bytes) -> bytes:
+    """Patch a header field and re-checksum (the corruption under test is
+    the field, not the checksum covering it)."""
+    b = bytearray(buf)
+    b[offset : offset + len(field_bytes)] = field_bytes
+    b[56:64] = struct.pack("<Q", fxhash64(bytes(b[:56])))
+    return bytes(b)
+
+
+# ------------------------------------------------------------------- tests
+
+
+def test_round_trip_preserves_every_header_field_and_section():
+    buf = sample_checkpoint()
+    c = read_checkpoint(buf, 10_000)
+    assert c["superstep"] == 7
+    assert (c["pass"], c["round"], c["rounds"]) == (0, 1, 2)
+    assert c["n"] == 512
+    assert c["fingerprint"] == 0xDEAD_BEEF_0123
+    assert c["sections"][SEC_VALUES] == struct.pack("<Q", 3) + bytes(range(48))
+    assert c["sections"][SEC_MESSAGES] == struct.pack("<Q", 2) + b"\x11" * 24
+    assert c["sections"][SEC_SCHEDULE] == b"\x22" * 17
+
+
+def test_header_layout_is_byte_exact():
+    buf = sample_checkpoint()
+    assert buf[0:8] == MAGIC
+    assert struct.unpack("<I", buf[8:12]) == (VERSION,)
+    assert struct.unpack("<I", buf[12:16]) == (7,)          # superstep
+    assert struct.unpack("<III", buf[16:28]) == (0, 1, 2)   # pass, round, rounds
+    assert struct.unpack("<I", buf[28:32]) == (512,)        # n
+    assert struct.unpack("<Q", buf[32:40]) == (0xDEAD_BEEF_0123,)
+    (payload_len,) = struct.unpack("<Q", buf[40:48])
+    assert payload_len == len(buf) - HEADER_BYTES
+    assert struct.unpack("<Q", buf[48:56]) == (fxhash64(buf[HEADER_BYTES:]),)
+    assert struct.unpack("<Q", buf[56:64]) == (fxhash64(buf[:56]),)
+
+
+def test_corrupt_matrix_matches_rust_fields():
+    buf = sample_checkpoint()
+
+    # bad magic
+    with pytest.raises(FormatError) as e:
+        read_checkpoint(b"XX" + buf[2:], 10_000)
+    assert e.value.field == "magic"
+
+    # bad version (re-checksummed so the version check itself fires)
+    with pytest.raises(FormatError) as e:
+        read_checkpoint(repack_header(buf, 8, struct.pack("<I", 9)), 10_000)
+    assert e.value.field == "version"
+
+    # a patched field without a matching re-checksum is caught by the
+    # header checksum before the field is ever interpreted
+    b = bytearray(buf)
+    b[28:32] = struct.pack("<I", 7)
+    with pytest.raises(FormatError) as e:
+        read_checkpoint(bytes(b), 10_000)
+    assert e.value.field == "checksum"
+
+    # stored superstep beyond the engine cap is stale by definition
+    with pytest.raises(FormatError) as e:
+        read_checkpoint(repack_header(buf, 12, struct.pack("<I", 60_000)), 10_000)
+    assert e.value.field == "superstep"
+
+    # truncation anywhere in the payload breaks the declared length
+    with pytest.raises(FormatError) as e:
+        read_checkpoint(buf[:-5], 10_000)
+    assert e.value.field == "size"
+    # ... and a header-only stump is undersized before sections are read
+    with pytest.raises(FormatError) as e:
+        read_checkpoint(buf[:40], 10_000)
+    assert e.value.field == "size"
+
+    # a flipped payload byte fails the payload checksum
+    b = bytearray(buf)
+    b[HEADER_BYTES + 10] ^= 0xFF
+    with pytest.raises(FormatError) as e:
+        read_checkpoint(bytes(b), 10_000)
+    assert e.value.field == "payload"
+
+    # an unknown section tag (checksums re-stamped) fails section parse
+    b = bytearray(buf)
+    struct.pack_into("<I", b, HEADER_BYTES, 9)
+    b[48:56] = struct.pack("<Q", fxhash64(bytes(b[HEADER_BYTES:])))
+    b[56:64] = struct.pack("<Q", fxhash64(bytes(b[:56])))
+    with pytest.raises(FormatError) as e:
+        read_checkpoint(bytes(b), 10_000)
+    assert e.value.field == "sections"
+
+
+def test_checksum_detects_header_bit_flips():
+    buf = sample_checkpoint()
+    # Any single-bit flip in the covered region must be caught (by the
+    # checksum, or by the magic/version checks that run before it).
+    for bit in range(0, 56 * 8, 37):  # sampled positions incl. byte 0
+        b = bytearray(buf)
+        b[bit // 8] ^= 1 << (bit % 8)
+        with pytest.raises(FormatError) as e:
+            read_checkpoint(bytes(b), 10_000)
+        assert e.value.field in ("checksum", "magic", "version")
+
+
+def test_checkpoint_names_sort_in_logical_order():
+    # (unit_seq, superstep) ascending must equal lexicographic filename
+    # order — that is what lets latest_valid pick files newest-first.
+    logical = [
+        (u, s)
+        for u in (0, 1, 2, 9, 10, 99, 100)
+        for s in (0, 1, 7, 9, 10, 64, 999, 12345)
+    ]
+    names = [checkpoint_name(u, s) for (u, s) in logical]
+    assert names == sorted(names)
+    assert checkpoint_name(3, 12) == "ckpt-000003-000012.fn2vckp"
+    assert all(n.endswith("." + CKP_EXTENSION) for n in names)
+
+
+def test_class_split_identity_preserves_seed_population():
+    # session.rs split_or_fail: {s ≡ er (mod c)} is the disjoint union of
+    # {s ≡ er (mod 2c)} and {s ≡ er+c (mod 2c)} — the degraded run visits
+    # exactly the original seeds, each exactly once.
+    n = 997
+    for c in (1, 2, 3, 8):
+        for er in range(c):
+            parent = {s for s in range(n) if s % c == er}
+            left = {s for s in range(n) if s % (2 * c) == er}
+            right = {s for s in range(n) if s % (2 * c) == er + c}
+            assert left | right == parent
+            assert not (left & right)
+
+
+def test_split_cap_bounds_the_degradation_ladder():
+    # Repeated splitting doubles er_count; splitting is allowed while
+    # er_count <= 32 * rounds, so the ladder from er_count = rounds is
+    # finite and the 1-byte-budget case terminates in OutOfMemory.
+    for rounds in (1, 2, 5):
+        cap = rounds * SPLIT_CAP_FACTOR
+        er_count, generations = rounds, 0
+        while er_count <= cap:
+            er_count *= 2
+            generations += 1
+        assert generations == 6  # 32x = 2^5, plus the step that crosses
+        assert er_count == rounds * 64
+
+
+def test_retry_schedule_constants_and_backoff():
+    # util/failpoints.rs::retry_io — 4 attempts, 1 ms doubling, 50 ms cap.
+    assert RETRY_ATTEMPTS == 4
+    delays, d = [], BACKOFF_START_MS
+    for _ in range(RETRY_ATTEMPTS - 1):  # sleeps happen between attempts
+        delays.append(d)
+        d = min(d * 2, BACKOFF_CAP_MS)
+    assert delays == [1, 2, 4]
+    # The cap binds once attempts grow: the 7th delay would saturate.
+    d = BACKOFF_START_MS
+    for _ in range(7):
+        d = min(d * 2, BACKOFF_CAP_MS)
+    assert d == BACKOFF_CAP_MS
+
+
+def test_fxhash_reference_vectors():
+    # Pin the hash so a drifting python mirror can't agree with itself.
+    assert fxhash64(b"\0" * 8) == 0
+    w = int.from_bytes(MAGIC, "little")
+    assert fxhash64(MAGIC) == (w * FX_SEED) & MASK64
+    w2 = 0x0102030405060708
+    expect = ((rotl64((w * FX_SEED) & MASK64, 5) ^ w2) * FX_SEED) & MASK64
+    assert fxhash64(MAGIC + w2.to_bytes(8, "little")) == expect

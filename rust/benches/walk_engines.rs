@@ -2,10 +2,11 @@
 //! FN variants plus both baselines on a skewed R-MAT graph, reported as
 //! wall time and steps/second — plus a linear-vs-rejection sampler
 //! head-to-head, a partitioning ablation (hash / range / degree-aware ×
-//! hot-vertex splitting, EXPERIMENTS.md §Partitioning) and the SGNS
+//! hot-vertex splitting, EXPERIMENTS.md §Partitioning), the SGNS
 //! trainer throughput grid (threads × {hogwild, sharded},
-//! EXPERIMENTS.md §Train), all recorded as a machine-readable baseline in
-//! `BENCH_walks.json` for future PRs.
+//! EXPERIMENTS.md §Train) and the checkpoint overhead/resume-latency
+//! pair (EXPERIMENTS.md §Robustness), all recorded as a machine-readable
+//! baseline in `BENCH_walks.json` for future PRs.
 //!
 //! Run: `cargo bench --bench walk_engines`
 //! (FASTN2V_BENCH_FULL=1 for a larger graph; FASTN2V_BENCH_OUT to move the
@@ -20,7 +21,10 @@ use fastn2v::exp::pipeline::{
 };
 use fastn2v::gen::{skew_graph, GenConfig};
 use fastn2v::graph::{open_graph, write_v2, OpenOptions};
-use fastn2v::node2vec::{FnConfig, SamplerKind, SeedSet, Variant, WalkRequest, WalkSession};
+use fastn2v::node2vec::{
+    CheckpointCfg, CollectSink, FnConfig, SamplerKind, SeedSet, Variant, WalkRequest, WalkSession,
+};
+use fastn2v::pregel::checkpoint::checkpoint_files;
 use fastn2v::util::benchkit::print_table;
 use fastn2v::util::mmap::Mmap;
 
@@ -242,6 +246,42 @@ fn main() {
         }
     }
 
+    // ---- checkpoint: crash-safety overhead + resume-from-mid latency ----
+    // What checkpointing costs when nothing crashes (EXPERIMENTS.md
+    // §Robustness), and how long a resume from a mid-run checkpoint takes.
+    let ckpt = checkpoint_bench(&g, walk_len.min(20), quick);
+    let ckpt_table: Vec<(String, Vec<String>)> = vec![
+        (
+            "plain".into(),
+            vec![fastn2v::util::fmt_secs(ckpt.plain_secs), "-".into(), "-".into()],
+        ),
+        (
+            "checkpointed".into(),
+            vec![
+                fastn2v::util::fmt_secs(ckpt.checkpointed_secs),
+                format!("{:+.1}%", ckpt.overhead_pct()),
+                format!(
+                    "{} files, {} io",
+                    ckpt.checkpoints_written,
+                    fastn2v::util::fmt_secs(ckpt.checkpoint_io_secs)
+                ),
+            ],
+        ),
+        (
+            "resume (mid ckpt)".into(),
+            vec![fastn2v::util::fmt_secs(ckpt.resume_secs), "-".into(), "-".into()],
+        ),
+    ];
+    print_table(
+        &format!(
+            "checkpoint (FN-Cache, every {} supersteps, {} per file)",
+            ckpt.every,
+            fastn2v::util::fmt_bytes(ckpt.file_bytes)
+        ),
+        &["wall", "vs plain", "checkpoint io"],
+        &ckpt_table,
+    );
+
     let secs_of = |name: &str| rows.iter().find(|r| r.name == name).and_then(|r| r.secs);
     let speedup = |a: Option<f64>, b: Option<f64>| match (a, b) {
         (Some(a), Some(b)) if b > 0.0 => Some(a / b),
@@ -275,6 +315,7 @@ fn main() {
         &amort,
         &store,
         &sgns,
+        &ckpt,
     );
     match std::fs::write(&out_path, &json) {
         Ok(()) => println!("baseline written to {out_path}"),
@@ -350,6 +391,95 @@ fn sgns_train_bench(
         negatives,
         steps,
         rows,
+    }
+}
+
+struct CheckpointBench {
+    every: u32,
+    plain_secs: f64,
+    checkpointed_secs: f64,
+    checkpoints_written: u64,
+    checkpoint_io_secs: f64,
+    file_bytes: u64,
+    resume_secs: f64,
+}
+
+impl CheckpointBench {
+    fn overhead_pct(&self) -> f64 {
+        if self.plain_secs > 0.0 {
+            (self.checkpointed_secs / self.plain_secs - 1.0) * 100.0
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Run the same 2-round FN-Cache query plain and checkpointed (the
+/// no-crash overhead), then delete every checkpoint but the middle one
+/// and time a resume — an interrupted run's recovery latency, including
+/// the deterministic replay of the completed units.
+fn checkpoint_bench(
+    g: &std::sync::Arc<fastn2v::graph::Graph>,
+    walk_len: u32,
+    quick: bool,
+) -> CheckpointBench {
+    let dir = std::env::temp_dir().join(format!("fastn2v-bench-ckpt-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = FnConfig::new(0.5, 2.0, 3)
+        .with_walk_length(walk_len)
+        .with_popular_threshold(popular_threshold(g))
+        .with_variant(Variant::Cache);
+    let session = WalkSession::builder(g.clone(), cfg).workers(4).build();
+    let req = WalkRequest::all().with_rounds(2);
+    let n = g.num_vertices();
+    let every = if quick { 2 } else { 4 };
+
+    let t = std::time::Instant::now();
+    let plain = session.collect(&req).expect("plain bench walks").walks;
+    let plain_secs = t.elapsed().as_secs_f64();
+
+    let mut ckpt_cfg = CheckpointCfg::new(&dir, every);
+    ckpt_cfg.keep_all = true;
+    let mut sink = CollectSink::new(n);
+    let t = std::time::Instant::now();
+    let q = session
+        .run_checkpointed(&req, &mut sink, &ckpt_cfg)
+        .expect("checkpointed bench walks");
+    let checkpointed_secs = t.elapsed().as_secs_f64();
+    assert_eq!(sink.walks(), &plain, "checkpointed bench run diverged");
+
+    // Keep only the middle checkpoint: the resume below replays the done
+    // units and restores mid-unit state, as after a real interruption.
+    let files = checkpoint_files(&dir);
+    let file_bytes = files
+        .last()
+        .and_then(|f| std::fs::metadata(f).ok())
+        .map(|m| m.len())
+        .unwrap_or(0);
+    let mid = files.len() / 2;
+    for (i, f) in files.iter().enumerate() {
+        if i != mid {
+            let _ = std::fs::remove_file(f);
+        }
+    }
+    let resume_cfg = CheckpointCfg::new(&dir, u32::MAX);
+    let mut rsink = CollectSink::new(n);
+    let t = std::time::Instant::now();
+    session
+        .resume(&req, &mut rsink, &resume_cfg)
+        .expect("resumed bench walks");
+    let resume_secs = t.elapsed().as_secs_f64();
+    assert_eq!(rsink.walks(), &plain, "resumed bench run diverged");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    CheckpointBench {
+        every,
+        plain_secs,
+        checkpointed_secs,
+        checkpoints_written: q.metrics.checkpoints_written,
+        checkpoint_io_secs: q.metrics.checkpoint_secs,
+        file_bytes,
+        resume_secs,
     }
 }
 
@@ -434,6 +564,7 @@ fn render_json(
     amort: &SessionAmortization,
     store: &GraphStoreBench,
     sgns: &SgnsTrainBench,
+    ckpt: &CheckpointBench,
 ) -> String {
     let stats = g.stats();
     let fmt_opt = |o: Option<f64>| o.map(|v| format!("{v:.3}")).unwrap_or_else(|| "null".into());
@@ -521,6 +652,17 @@ fn render_json(
         ));
     }
     s.push_str("  ]},\n");
+    s.push_str(&format!(
+        "  \"checkpoint\": {{\"every_supersteps\": {}, \"plain_secs\": {:.6}, \"checkpointed_secs\": {:.6}, \"overhead_pct\": {:.2}, \"checkpoints_written\": {}, \"checkpoint_io_secs\": {:.6}, \"file_bytes\": {}, \"resume_secs\": {:.6}}},\n",
+        ckpt.every,
+        ckpt.plain_secs,
+        ckpt.checkpointed_secs,
+        ckpt.overhead_pct(),
+        ckpt.checkpoints_written,
+        ckpt.checkpoint_io_secs,
+        ckpt.file_bytes,
+        ckpt.resume_secs
+    ));
     s.push_str(&format!(
         "  \"session_amortization\": {{\"queries\": {}, \"seeds_per_query\": {}, \"reuse_secs\": {:.6}, \"rebuild_secs\": {:.6}, \"speedup\": {:.3}}}\n",
         amort.queries,

@@ -33,6 +33,7 @@ pub use parallel::{EmbeddingMatrix, ParallelSgns, TrainMode};
 
 use crate::graph::VertexId;
 use crate::node2vec::{RoundStats, WalkSet, WalkSink};
+use crate::pregel::checkpoint::{ByteReader, Persist};
 use crate::runtime::SgnsRuntime;
 use crate::util::alias::AliasTable;
 use crate::util::error::Result;
@@ -359,6 +360,20 @@ pub trait SgnsBackend {
     fn embeddings_flat(&self) -> Option<(&[f32], usize)> {
         None
     }
+
+    /// Checkpoint hook: flat `(w_in, w_out)` snapshots of both tables.
+    /// `None` (the default) for backends whose state lives off-host (the
+    /// PJRT runtime) — a [`TrainerSink`] over such a backend then resumes
+    /// by deterministic replay instead of state restore.
+    fn export_state(&self) -> Option<(Vec<f32>, Vec<f32>)> {
+        None
+    }
+
+    /// Restore tables captured by [`SgnsBackend::export_state`].
+    fn import_state(&mut self, w_in: &[f32], w_out: &[f32]) -> std::result::Result<(), String> {
+        let _ = (w_in, w_out);
+        Err("this backend does not support state import".into())
+    }
 }
 
 /// Boxed backends forward, so callers can pick a backend at runtime
@@ -382,6 +397,14 @@ impl<B: SgnsBackend + ?Sized> SgnsBackend for Box<B> {
     fn embeddings_flat(&self) -> Option<(&[f32], usize)> {
         (**self).embeddings_flat()
     }
+
+    fn export_state(&self) -> Option<(Vec<f32>, Vec<f32>)> {
+        (**self).export_state()
+    }
+
+    fn import_state(&mut self, w_in: &[f32], w_out: &[f32]) -> std::result::Result<(), String> {
+        (**self).import_state(w_in, w_out)
+    }
 }
 
 impl SgnsBackend for RustSgns {
@@ -401,6 +424,25 @@ impl SgnsBackend for RustSgns {
 
     fn embeddings_flat(&self) -> Option<(&[f32], usize)> {
         Some((&self.w_in, self.dim))
+    }
+
+    fn export_state(&self) -> Option<(Vec<f32>, Vec<f32>)> {
+        Some((self.w_in.clone(), self.w_out.clone()))
+    }
+
+    fn import_state(&mut self, w_in: &[f32], w_out: &[f32]) -> std::result::Result<(), String> {
+        if w_in.len() != self.w_in.len() || w_out.len() != self.w_out.len() {
+            return Err(format!(
+                "embedding snapshot shape mismatch: got {}+{} floats, expected {}+{}",
+                w_in.len(),
+                w_out.len(),
+                self.w_in.len(),
+                self.w_out.len()
+            ));
+        }
+        self.w_in.copy_from_slice(w_in);
+        self.w_out.copy_from_slice(w_out);
+        Ok(())
     }
 }
 
@@ -570,6 +612,73 @@ impl<B: SgnsBackend> WalkSink for TrainerSink<B> {
             }
             self.global_step += 1;
         }
+    }
+
+    /// Snapshot the full trainer state — global step, batch RNG position,
+    /// loss curve, and both embedding tables — so a resumed run continues
+    /// the exact SGD trajectory instead of replaying every prior round's
+    /// training. `None` when the backend can't export its tables (PJRT);
+    /// the checkpointed driver then falls back to deterministic replay.
+    fn checkpoint_blob(&mut self) -> Option<Vec<u8>> {
+        if self.error.is_some() {
+            return None;
+        }
+        let (w_in, w_out) = self.backend.export_state()?;
+        let mut blob = Vec::with_capacity(64 + 4 * (w_in.len() + w_out.len()));
+        self.global_step.persist(&mut blob);
+        for word in self.rng.state() {
+            word.persist(&mut blob);
+        }
+        (self.curve.len() as u64).persist(&mut blob);
+        for p in &self.curve {
+            p.step.persist(&mut blob);
+            p.loss.persist(&mut blob);
+        }
+        (w_in.len() as u64).persist(&mut blob);
+        for x in &w_in {
+            x.persist(&mut blob);
+        }
+        (w_out.len() as u64).persist(&mut blob);
+        for x in &w_out {
+            x.persist(&mut blob);
+        }
+        Some(blob)
+    }
+
+    fn restore_blob(&mut self, blob: &[u8]) -> std::result::Result<(), String> {
+        let mut r = ByteReader::new(blob);
+        let global_step = r.u32()?;
+        let mut st = [0u64; 4];
+        for w in &mut st {
+            *w = r.u64()?;
+        }
+        let curve_len = r.u64()? as usize;
+        let mut curve = Vec::with_capacity(curve_len.min(1 << 20));
+        for _ in 0..curve_len {
+            curve.push(LossPoint {
+                step: r.u32()?,
+                loss: r.f32()?,
+            });
+        }
+        let read_table = |r: &mut ByteReader<'_>| -> std::result::Result<Vec<f32>, String> {
+            let len = r.u64()? as usize;
+            let mut t = Vec::with_capacity(len.min(1 << 24));
+            for _ in 0..len {
+                t.push(r.f32()?);
+            }
+            Ok(t)
+        };
+        let w_in = read_table(&mut r)?;
+        let w_out = read_table(&mut r)?;
+        if !r.is_empty() {
+            return Err("trailing bytes in trainer sink blob".into());
+        }
+        self.backend.import_state(&w_in, &w_out)?;
+        self.rng = Xoshiro256pp::from_state(st);
+        self.global_step = global_step;
+        self.curve = curve;
+        self.round_walks.clear();
+        Ok(())
     }
 }
 

@@ -300,6 +300,24 @@ impl EmbeddingMatrix {
         self.w_in().chunks_exact(self.dim).map(|r| r.to_vec()).collect()
     }
 
+    /// Overwrite both tables from flat snapshots (checkpoint restore).
+    /// Takes `&mut self`, so no worker can be mid-step through the cells.
+    pub fn load(&mut self, w_in: &[f32], w_out: &[f32]) -> std::result::Result<(), String> {
+        let len = self.num_vertices * self.dim;
+        if w_in.len() != len || w_out.len() != len {
+            return Err(format!(
+                "embedding snapshot shape mismatch: got {}+{} floats, table is 2x{len}",
+                w_in.len(),
+                w_out.len()
+            ));
+        }
+        unsafe {
+            std::ptr::copy_nonoverlapping(w_in.as_ptr(), self.w_in_ptr(), len);
+            std::ptr::copy_nonoverlapping(w_out.as_ptr(), self.w_out_ptr(), len);
+        }
+        Ok(())
+    }
+
     /// Read a row of `w_in` for sharded phase 1 (frozen-matrix reads).
     ///
     /// # Safety
@@ -1147,6 +1165,14 @@ impl SgnsBackend for ParallelSgns {
 
     fn embeddings_flat(&self) -> Option<(&[f32], usize)> {
         Some((self.matrix.w_in(), self.matrix.dim()))
+    }
+
+    fn export_state(&self) -> Option<(Vec<f32>, Vec<f32>)> {
+        Some((self.matrix.w_in().to_vec(), self.matrix.w_out().to_vec()))
+    }
+
+    fn import_state(&mut self, w_in: &[f32], w_out: &[f32]) -> std::result::Result<(), String> {
+        self.matrix.load(w_in, w_out)
     }
 }
 

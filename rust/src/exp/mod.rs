@@ -28,6 +28,11 @@ COMMANDS:
                  [--sampler <linear|reject>] [--partitioner <hash|range|degree>]
                  [--hot-threshold <deg>] [--seeds <spec>] [--rounds <k>]
                  [--stream-walks <path>] [--graph-file <path>] [--mmap]
+                 [--checkpoint-dir <dir>] [--checkpoint-every <k>]
+                 [--strict-memory]
+    walk resume --checkpoint-dir <dir> [same flags as walk]
+                                                restart an interrupted walk
+                                                from its latest checkpoint
     embed --graph <name> [--rounds <k>] [--train-threads <n>]
                  [--train-mode <hogwild|sharded>]
                                                 walks pipelined into SGNS
@@ -62,7 +67,16 @@ COMMON FLAGS:
                        sink, resident walks) at ~1/k (default 1)
     --stream-walks <p> stream each round's walks to file <p> (one line per
                        walk: `seed<TAB>v0 v1 ...`) instead of collecting
-                       them in memory
+                       them in memory; the file is written atomically
+                       (`<p>.tmp` + rename) with a `# fastn2v-walks` footer
+    --checkpoint-dir <d> snapshot engine + sink state into <d> at superstep
+                       barriers (FN2VCKP1 format) so an interrupted query
+                       can be restarted with `walk resume`; see
+                       EXPERIMENTS.md §Robustness
+    --checkpoint-every <k> checkpoint every k supersteps (default 16)
+    --strict-memory    abort on a memory-budget overrun instead of
+                       degrading to 2x round splitting with a warning
+                       (the default recovery policy)
     --train-threads <n> SGNS worker threads for embed/pipeline (default 1
                        = the serial oracle; >1 runs the parallel trainer
                        with a pre-sampling batch pipeline)
@@ -95,7 +109,7 @@ pub fn cli_main(raw: Vec<String>) -> i32 {
 }
 
 fn cli_inner(raw: Vec<String>) -> Result<(), String> {
-    let args = Args::parse(raw, &["quick", "verbose", "mmap"])?;
+    let args = Args::parse(raw, &["quick", "verbose", "mmap", "strict-memory"])?;
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     if args.has_switch("verbose") {
         crate::util::logging::set_level(crate::util::logging::Level::Debug);
@@ -198,6 +212,13 @@ fn cli_inner(raw: Vec<String>) -> Result<(), String> {
             Ok(())
         }
         "walk" => {
+            let resume = match args.positional.get(1).map(String::as_str) {
+                None => false,
+                Some("resume") => true,
+                Some(other) => {
+                    return Err(format!("unknown walk subcommand `{other}`; expected resume"))
+                }
+            };
             let variant = match args.get_choice(
                 "variant",
                 "base",
@@ -228,6 +249,16 @@ fn cli_inner(raw: Vec<String>) -> Result<(), String> {
             let q: f32 = args.get_parsed("q", 2.0)?;
             let workers: usize = args.get_parsed("workers", common::WORKERS)?;
             let rounds: u32 = args.get_parsed("rounds", 1)?;
+            let ckpt = match args.get("checkpoint-dir") {
+                Some(dir) => Some(crate::node2vec::CheckpointCfg::new(
+                    dir,
+                    args.get_parsed("checkpoint-every", 16)?,
+                )),
+                None if resume => {
+                    return Err("walk resume needs --checkpoint-dir <dir>".into())
+                }
+                None => None,
+            };
             let seeds = crate::node2vec::SeedSet::parse(args.get_or("seeds", "all"))?;
             let ng = common::resolve_graph(
                 args.get("graph"),
@@ -248,6 +279,7 @@ fn cli_inner(raw: Vec<String>) -> Result<(), String> {
                 .workers(workers)
                 .engine_opts(crate::pregel::EngineOpts {
                     memory_budget: Some(common::Budgets::CLUSTER),
+                    strict_memory: args.has_switch("strict-memory"),
                     ..Default::default()
                 })
                 .build();
@@ -256,11 +288,22 @@ fn cli_inner(raw: Vec<String>) -> Result<(), String> {
                 .with_seeds(seeds)
                 .with_rounds(rounds);
             let t = std::time::Instant::now();
+            // Checkpointing / resume reroute the same sink through the
+            // crash-safe driver; a plain run stays on the direct path.
+            let run_one = |sink: &mut dyn crate::node2vec::WalkSink| match &ckpt {
+                Some(c) if resume => session.resume(&req, sink, c),
+                Some(c) => session.run_checkpointed(&req, sink, c),
+                None => session.run(&req, sink),
+            };
             let cell = match args.get("stream-walks") {
                 Some(path) => {
-                    let mut sink = crate::node2vec::StreamingFileSink::create(path)
-                        .map_err(|e| format!("--stream-walks {path}: {e}"))?;
-                    match session.run(&req, &mut sink) {
+                    let mut sink = if resume {
+                        crate::node2vec::StreamingFileSink::resume(path)
+                    } else {
+                        crate::node2vec::StreamingFileSink::create(path)
+                    }
+                    .map_err(|e| format!("--stream-walks {path}: {e}"))?;
+                    match run_one(&mut sink) {
                         Err(e) => format!("x ({e})"),
                         Ok(_) => {
                             let written = sink.finish().map_err(|e| format!("{path}: {e}"))?;
@@ -271,10 +314,13 @@ fn cli_inner(raw: Vec<String>) -> Result<(), String> {
                         }
                     }
                 }
-                None => match session.collect(&req) {
-                    Err(e) => format!("x ({e})"),
-                    Ok(_) => crate::util::fmt_secs(t.elapsed().as_secs_f64()),
-                },
+                None => {
+                    let mut sink = crate::node2vec::CollectSink::new(ng.graph.num_vertices());
+                    match run_one(&mut sink) {
+                        Err(e) => format!("x ({e})"),
+                        Ok(_) => crate::util::fmt_secs(t.elapsed().as_secs_f64()),
+                    }
+                }
             };
             println!(
                 "{} ({} sampler, {} partitioner{}) on {}, {num_seeds} seeds x {rounds} round(s): {cell}",
@@ -618,6 +664,42 @@ mod cli_tests {
         let walks = crate::node2vec::read_walk_file(&path).unwrap();
         assert_eq!(walks.len(), 32, "one streamed line per seed");
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn walk_checkpoint_resume_and_strict_memory_knobs() {
+        let dir = std::env::temp_dir().join(format!("fn2v-cli-ckpt-{}", std::process::id()));
+        let ckpt = dir.join("ckpts");
+        let ckpt_s = ckpt.to_str().unwrap().to_string();
+        assert_eq!(
+            run(&[
+                "walk", "--graph", "skew-2", "--variant", "cache", "--seeds", "0..32",
+                "--checkpoint-dir", &ckpt_s, "--checkpoint-every", "1", "--quick",
+            ]),
+            0
+        );
+        // The run left a durable checkpoint behind for a later resume.
+        assert!(ckpt.read_dir().unwrap().next().is_some());
+        // Resuming (even a completed run) replays deterministically and
+        // exits cleanly.
+        assert_eq!(
+            run(&[
+                "walk", "resume", "--graph", "skew-2", "--variant", "cache", "--seeds",
+                "0..32", "--checkpoint-dir", &ckpt_s, "--checkpoint-every", "1",
+                "--quick",
+            ]),
+            0
+        );
+        // --strict-memory is accepted as a bare switch.
+        assert_eq!(
+            run(&["walk", "--graph", "skew-2", "--strict-memory", "--quick"]),
+            0
+        );
+        // Bad combinations fail loudly: resume without a checkpoint dir,
+        // and an unknown walk subcommand.
+        assert_eq!(run(&["walk", "resume", "--graph", "skew-2", "--quick"]), 2);
+        assert_eq!(run(&["walk", "restart", "--graph", "skew-2", "--quick"]), 2);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -22,7 +22,9 @@ use crate::util::error::{Context, Result};
 
 use super::builder::GraphBuilder;
 use super::csr::{Graph, VertexId};
-use super::store::{decode_le_items, validate_adj, validate_offsets, validate_weights, StoreError};
+use super::store::{
+    decode_le_items, section_ctx, validate_adj, validate_offsets, validate_weights, StoreError,
+};
 
 const MAGIC: &[u8; 8] = b"FN2VGRF1";
 
@@ -210,13 +212,15 @@ pub(crate) fn read_binary_store(path: &Path) -> std::result::Result<Graph, Store
     let arcs = arcs64 as usize;
 
     let mut offsets = Vec::with_capacity(n + 1);
-    decode_le_items::<_, 8>(&mut r, n + 1, &rctx, |_, b| {
+    decode_le_items::<_, 8>(&mut r, n + 1, section_ctx(path, "offsets"), |_, b| {
         offsets.push(u64::from_le_bytes(b))
     })?;
     validate_offsets(path, &offsets, arcs64)?;
 
     let mut adj = Vec::with_capacity(arcs);
-    decode_le_items::<_, 4>(&mut r, arcs, &rctx, |_, b| adj.push(u32::from_le_bytes(b)))?;
+    decode_le_items::<_, 4>(&mut r, arcs, section_ctx(path, "adjacency"), |_, b| {
+        adj.push(u32::from_le_bytes(b))
+    })?;
     validate_adj(path, &adj, n64)?;
 
     r.read_exact(&mut b1).map_err(&rctx)?;
@@ -237,7 +241,7 @@ pub(crate) fn read_binary_store(path: &Path) -> std::result::Result<Graph, Store
             ));
         }
         let mut weights = Vec::with_capacity(arcs);
-        decode_le_items::<_, 4>(&mut r, arcs, &rctx, |_, b| {
+        decode_le_items::<_, 4>(&mut r, arcs, section_ctx(path, "weights"), |_, b| {
             weights.push(f32::from_le_bytes(b))
         })?;
         validate_weights(path, &weights)?;

@@ -562,7 +562,10 @@ pub(crate) fn decode_le_items<R: Read, const W: usize>(
     let mut done = 0usize;
     while done < count {
         let take = ((count - done) * W).min(buf.len());
-        r.read_exact(&mut buf[..take]).map_err(&on_io)?;
+        // Transient faults (EINTR-class errors, or the `io.read-chunk`
+        // failpoint) are retried with capped backoff before giving up.
+        crate::util::failpoints::retry_io("io.read-chunk", || r.read_exact(&mut buf[..take]))
+            .map_err(&on_io)?;
         for (j, c) in buf[..take].chunks_exact(W).enumerate() {
             let mut a = [0u8; W];
             a.copy_from_slice(c);
@@ -571,6 +574,15 @@ pub(crate) fn decode_le_items<R: Read, const W: usize>(
         done += take / W;
     }
     Ok(())
+}
+
+/// I/O error context naming the section being read, so a fault inside the
+/// chunked decode loop reports *which* part of the file it interrupted.
+pub(crate) fn section_ctx<'a>(
+    path: &'a Path,
+    section: &'static str,
+) -> impl Fn(std::io::Error) -> StoreError + 'a {
+    move |e| StoreError::io(format!("read {section} section of {}", path.display()), e)
 }
 
 fn skip_bytes<R: Read>(
@@ -708,15 +720,17 @@ pub fn open_v2(path: &Path, opts: &OpenOptions) -> Result<Graph, StoreError> {
         let n = h.n as usize;
         let arcs = h.arcs as usize;
         let mut offsets = Vec::with_capacity(n + 1);
-        decode_le_items::<_, 8>(&mut r, n + 1, &rctx, |_, b| {
+        decode_le_items::<_, 8>(&mut r, n + 1, section_ctx(path, "offsets"), |_, b| {
             offsets.push(u64::from_le_bytes(b))
         })?;
         skip_bytes(&mut r, h.adj_start - (h.offsets_start + (h.n + 1) * 8), &rctx)?;
         let mut adj = Vec::with_capacity(arcs);
-        decode_le_items::<_, 4>(&mut r, arcs, &rctx, |_, b| adj.push(u32::from_le_bytes(b)))?;
+        decode_le_items::<_, 4>(&mut r, arcs, section_ctx(path, "adjacency"), |_, b| {
+            adj.push(u32::from_le_bytes(b))
+        })?;
         skip_bytes(&mut r, h.weights_start - (h.adj_start + h.arcs * 4), &rctx)?;
         let mut weights = Vec::with_capacity(arcs);
-        decode_le_items::<_, 4>(&mut r, arcs, &rctx, |_, b| {
+        decode_le_items::<_, 4>(&mut r, arcs, section_ctx(path, "weights"), |_, b| {
             weights.push(f32::from_le_bytes(b))
         })?;
         if !opts.trusted {

@@ -47,8 +47,9 @@ use crate::pregel::{EngineError, EngineMetrics, EngineOpts};
 pub use program::{FnMsg, FnProgram, RoundStats, WalkStats};
 pub use sampler::{SamplerStats, SecondOrderSampler};
 pub use session::{
-    read_walk_file, run_query, run_query_collect, CollectSink, QueryOutput, SeedMask, SeedSet,
-    StreamingFileSink, WalkRequest, WalkSession, WalkSessionBuilder, WalkSink,
+    read_walk_file, run_query, run_query_collect, CheckpointCfg, CollectSink, QueryOutput,
+    SeedMask, SeedSet, StreamingFileSink, WalkFileError, WalkRequest, WalkSession,
+    WalkSessionBuilder, WalkSink,
 };
 
 /// Re-export so walk configs can name placement schemes without reaching

@@ -30,6 +30,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::graph::{Graph, VertexId};
+use crate::pregel::checkpoint::{ByteReader, Persist};
 use crate::pregel::{Ctx, Message, VertexProgram};
 use crate::util::alias::sample_linear;
 use crate::util::rng::stream;
@@ -627,5 +628,256 @@ impl VertexProgram for FnProgram {
             + 8
             + v.own_arc.as_ref().map_or(0, |a| 4 * a.len())
             + 24) as u64
+    }
+}
+
+// ---- checkpoint encoding (crash-safe walks; see pregel::checkpoint) ----
+
+fn persist_ids(ids: &[VertexId], out: &mut Vec<u8>) {
+    (ids.len() as u64).persist(out);
+    for &v in ids {
+        v.persist(out);
+    }
+}
+
+fn restore_ids(r: &mut ByteReader<'_>) -> Result<Arc<[VertexId]>, String> {
+    let n = r.u64()? as usize;
+    let mut ids = Vec::with_capacity(n.min(1 << 20));
+    for _ in 0..n {
+        ids.push(r.u32()?);
+    }
+    Ok(ids.into())
+}
+
+fn restore_idx(r: &mut ByteReader<'_>) -> Result<u16, String> {
+    let v = r.u32()?;
+    u16::try_from(v).map_err(|_| format!("step index {v} exceeds u16"))
+}
+
+impl Persist for FnValue {
+    fn persist(&self, out: &mut Vec<u8>) {
+        (self.walk.len() as u64).persist(out);
+        for &v in &self.walk {
+            v.persist(out);
+        }
+        self.worker_sent.persist(out);
+        // `own_arc` is a lazily-rebuilt payload cache — never persisted.
+    }
+
+    fn restore(r: &mut ByteReader<'_>) -> Result<Self, String> {
+        let n = r.u64()? as usize;
+        let mut walk = Vec::with_capacity(n.min(1 << 20));
+        for _ in 0..n {
+            walk.push(r.u32()?);
+        }
+        let worker_sent = r.u64()?;
+        Ok(FnValue {
+            walk,
+            worker_sent,
+            own_arc: None,
+        })
+    }
+}
+
+impl Persist for FnMsg {
+    fn persist(&self, out: &mut Vec<u8>) {
+        match self {
+            FnMsg::Step { start, idx, vertex } => {
+                out.push(0);
+                start.persist(out);
+                u32::from(*idx).persist(out);
+                vertex.persist(out);
+            }
+            FnMsg::Neig { start, idx, from, neigh } => {
+                out.push(1);
+                start.persist(out);
+                u32::from(*idx).persist(out);
+                from.persist(out);
+                persist_ids(neigh, out);
+            }
+            FnMsg::Move { start, idx, from } => {
+                out.push(2);
+                start.persist(out);
+                u32::from(*idx).persist(out);
+                from.persist(out);
+            }
+            FnMsg::Marker { start, idx, from } => {
+                out.push(3);
+                start.persist(out);
+                u32::from(*idx).persist(out);
+                from.persist(out);
+            }
+            FnMsg::NeigReq { start, idx, asker } => {
+                out.push(4);
+                start.persist(out);
+                u32::from(*idx).persist(out);
+                asker.persist(out);
+            }
+            FnMsg::SwitchReq { start, idx, from } => {
+                out.push(5);
+                start.persist(out);
+                u32::from(*idx).persist(out);
+                from.persist(out);
+            }
+            FnMsg::SwitchNeig { start, idx, at, neigh, weights } => {
+                out.push(6);
+                start.persist(out);
+                u32::from(*idx).persist(out);
+                at.persist(out);
+                persist_ids(neigh, out);
+                match weights {
+                    Some(w) => {
+                        out.push(1);
+                        (w.len() as u64).persist(out);
+                        for &x in w.iter() {
+                            x.persist(out);
+                        }
+                    }
+                    None => out.push(0),
+                }
+            }
+        }
+    }
+
+    fn restore(r: &mut ByteReader<'_>) -> Result<Self, String> {
+        let tag = r.u8()?;
+        let start = r.u32()?;
+        let idx = restore_idx(r)?;
+        Ok(match tag {
+            0 => FnMsg::Step {
+                start,
+                idx,
+                vertex: r.u32()?,
+            },
+            1 => FnMsg::Neig {
+                start,
+                idx,
+                from: r.u32()?,
+                neigh: restore_ids(r)?,
+            },
+            2 => FnMsg::Move {
+                start,
+                idx,
+                from: r.u32()?,
+            },
+            3 => FnMsg::Marker {
+                start,
+                idx,
+                from: r.u32()?,
+            },
+            4 => FnMsg::NeigReq {
+                start,
+                idx,
+                asker: r.u32()?,
+            },
+            5 => FnMsg::SwitchReq {
+                start,
+                idx,
+                from: r.u32()?,
+            },
+            6 => {
+                let at = r.u32()?;
+                let neigh = restore_ids(r)?;
+                let weights = match r.u8()? {
+                    0 => None,
+                    1 => {
+                        let n = r.u64()? as usize;
+                        let mut w = Vec::with_capacity(n.min(1 << 20));
+                        for _ in 0..n {
+                            w.push(r.f32()?);
+                        }
+                        Some(Arc::from(w))
+                    }
+                    other => return Err(format!("bad weights flag {other}")),
+                };
+                FnMsg::SwitchNeig {
+                    start,
+                    idx,
+                    at,
+                    neigh,
+                    weights,
+                }
+            }
+            other => return Err(format!("bad FnMsg tag {other}")),
+        })
+    }
+}
+
+#[cfg(test)]
+mod persist_tests {
+    use super::*;
+
+    fn roundtrip_msg(m: &FnMsg) -> FnMsg {
+        let mut buf = Vec::new();
+        m.persist(&mut buf);
+        let mut r = ByteReader::new(&buf);
+        let back = FnMsg::restore(&mut r).unwrap();
+        assert!(r.is_empty(), "trailing bytes after restore");
+        back
+    }
+
+    fn wire(m: &FnMsg) -> Vec<u8> {
+        let mut buf = Vec::new();
+        m.persist(&mut buf);
+        buf
+    }
+
+    #[test]
+    fn every_fn_msg_variant_roundtrips() {
+        let neigh: Arc<[VertexId]> = Arc::from(&[3u32, 7, 9][..]);
+        let weights: Arc<[f32]> = Arc::from(&[0.5f32, 1.5, 2.0][..]);
+        let msgs = [
+            FnMsg::Step { start: 1, idx: 2, vertex: 3 },
+            FnMsg::Neig { start: 4, idx: 5, from: 6, neigh: neigh.clone() },
+            FnMsg::Move { start: 7, idx: 8, from: 9 },
+            FnMsg::Marker { start: 10, idx: 11, from: 12 },
+            FnMsg::NeigReq { start: 13, idx: 14, asker: 15 },
+            FnMsg::SwitchReq { start: 16, idx: 17, from: 18 },
+            FnMsg::SwitchNeig {
+                start: 19,
+                idx: 20,
+                at: 21,
+                neigh: neigh.clone(),
+                weights: Some(weights),
+            },
+            FnMsg::SwitchNeig {
+                start: 22,
+                idx: 23,
+                at: 24,
+                neigh,
+                weights: None,
+            },
+        ];
+        for m in &msgs {
+            assert_eq!(wire(&roundtrip_msg(m)), wire(m));
+        }
+    }
+
+    #[test]
+    fn fn_value_roundtrips_without_the_arc_cache() {
+        let v = FnValue {
+            walk: vec![5, 9, 2, 2],
+            worker_sent: 0b1011,
+            own_arc: Some(Arc::from(&[1u32][..])),
+        };
+        let mut buf = Vec::new();
+        v.persist(&mut buf);
+        let mut r = ByteReader::new(&buf);
+        let back = FnValue::restore(&mut r).unwrap();
+        assert!(r.is_empty());
+        assert_eq!(back.walk, v.walk);
+        assert_eq!(back.worker_sent, v.worker_sent);
+        assert!(back.own_arc.is_none());
+    }
+
+    #[test]
+    fn corrupt_msg_bytes_are_typed_errors() {
+        let mut buf = Vec::new();
+        FnMsg::Step { start: 1, idx: 2, vertex: 3 }.persist(&mut buf);
+        buf[0] = 9; // unknown tag
+        assert!(FnMsg::restore(&mut ByteReader::new(&buf)).is_err());
+        buf[0] = 0;
+        let short = &buf[..buf.len() - 2];
+        assert!(FnMsg::restore(&mut ByteReader::new(short)).is_err());
     }
 }

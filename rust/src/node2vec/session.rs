@@ -32,16 +32,22 @@
 //! session, the legacy shim, [`run_query`], or alongside other seeds in a
 //! bigger request — the conformance suite (`tests/session.rs`) pins this.
 
-use std::io::{BufRead, Write};
-use std::path::Path;
+use std::collections::VecDeque;
+use std::io::{BufRead, Seek, Write};
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use crate::graph::partition::Partitioner;
-use crate::graph::store::{open_graph, OpenOptions, StoreError};
+use crate::graph::store::{fxhash64, open_graph, OpenOptions, StoreError};
 use crate::graph::{Graph, VertexId};
-use crate::pregel::{Engine, EngineError, EngineMetrics, EngineOpts, WorkerPlan};
+use crate::pregel::checkpoint::{
+    self, encode_schedule, Checkpoint, CheckpointMeta, CheckpointSpec, EngineSnapshot, Persist,
+    ScheduleState, UnitId,
+};
+use crate::pregel::{Engine, EngineError, EngineMetrics, EngineOpts, RunResult, WorkerPlan};
+use crate::util::failpoints;
 
-use super::program::{FnProgram, RoundStats};
+use super::program::{FnProgram, FnValue, RoundStats};
 use super::{FnConfig, SamplerKind, WalkOutput, WalkSet, WalkStats};
 
 /// Which vertices a [`WalkRequest`] starts walks from.
@@ -270,6 +276,24 @@ pub trait WalkSink {
     fn on_round_end(&mut self, round: u32, stats: &RoundStats) {
         let _ = (round, stats);
     }
+
+    /// Crash-safety hook: a compact snapshot of the sink's own durable
+    /// state, captured by the checkpointed driver at each unit boundary
+    /// and stored inside the engine checkpoint. Stateless sinks (and
+    /// sinks whose state is cheap to rebuild by re-execution) keep the
+    /// default `None`.
+    fn checkpoint_blob(&mut self) -> Option<Vec<u8>> {
+        None
+    }
+
+    /// Restore state captured by [`WalkSink::checkpoint_blob`]. A sink
+    /// that returns `Err` here (the default) is instead *replayed*: the
+    /// resumed driver re-executes the completed units deterministically,
+    /// so the sink observes exactly the original walk stream.
+    fn restore_blob(&mut self, blob: &[u8]) -> Result<(), String> {
+        let _ = blob;
+        Err("this sink does not support checkpoint restore".into())
+    }
 }
 
 /// Sink that reassembles the legacy [`WalkSet`]: `walks[v]` is the walk
@@ -311,10 +335,23 @@ impl WalkSink for CollectSink {
 ///
 /// File format: one line per walk, `seed<TAB>v0 v1 v2 ...` — see
 /// [`read_walk_file`].
+/// Crash-safety: the sink writes to `<path>.tmp` and only renames over
+/// the final path in [`StreamingFileSink::finish`], after a completion
+/// footer, flush and fsync — a reader never observes a partial file at
+/// the final path, and an unfinished temp file is removed on drop.
 pub struct StreamingFileSink {
-    writer: std::io::BufWriter<std::fs::File>,
+    /// `None` only after `finish` (optional so `finish(self)` can move
+    /// the writer out despite the cleanup `Drop`).
+    writer: Option<std::io::BufWriter<std::fs::File>>,
+    final_path: PathBuf,
+    /// Temp file holding the in-progress output; renamed over
+    /// `final_path` by `finish`, removed by `Drop` otherwise.
+    tmp: Option<PathBuf>,
     /// Reusable line buffer (the only per-walk scratch).
     line: String,
+    /// Bytes of walk lines ordered into the file so far — the resume
+    /// offset recorded in checkpoint blobs.
+    file_bytes: u64,
     round_bytes: u64,
     peak_round_bytes: u64,
     total_walk_bytes: u64,
@@ -322,17 +359,47 @@ pub struct StreamingFileSink {
     error: Option<std::io::Error>,
 }
 
+fn sink_tmp_path(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_owned();
+    os.push(".tmp");
+    PathBuf::from(os)
+}
+
 impl StreamingFileSink {
-    pub fn create(path: impl AsRef<Path>) -> std::io::Result<StreamingFileSink> {
+    fn open(path: impl AsRef<Path>, truncate: bool) -> std::io::Result<StreamingFileSink> {
+        let final_path = path.as_ref().to_path_buf();
+        let tmp = sink_tmp_path(&final_path);
+        let file = failpoints::retry_io("sink.create", || {
+            std::fs::OpenOptions::new()
+                .write(true)
+                .create(true)
+                .truncate(truncate)
+                .open(&tmp)
+        })?;
         Ok(StreamingFileSink {
-            writer: std::io::BufWriter::new(std::fs::File::create(path)?),
+            writer: Some(std::io::BufWriter::new(file)),
+            final_path,
+            tmp: Some(tmp),
             line: String::new(),
+            file_bytes: 0,
             round_bytes: 0,
             peak_round_bytes: 0,
             total_walk_bytes: 0,
             walks_written: 0,
             error: None,
         })
+    }
+
+    pub fn create(path: impl AsRef<Path>) -> std::io::Result<StreamingFileSink> {
+        Self::open(path, true)
+    }
+
+    /// Open for a checkpoint resume: keeps whatever an interrupted run
+    /// already wrote to the temp file, so
+    /// [`restore_blob`](WalkSink::restore_blob) can truncate to the
+    /// checkpoint's recorded offset instead of starting over.
+    pub fn resume(path: impl AsRef<Path>) -> std::io::Result<StreamingFileSink> {
+        Self::open(path, false)
     }
 
     /// Largest walk-byte volume (4 per vertex id) of any single round —
@@ -351,13 +418,42 @@ impl StreamingFileSink {
         self.walks_written
     }
 
-    /// Flush and surface any deferred I/O error.
+    /// Surface any deferred I/O error, then make the output durable:
+    /// completion footer, flush, fsync, and atomic rename of the temp
+    /// file over the final path.
     pub fn finish(mut self) -> std::io::Result<u64> {
         if let Some(e) = self.error.take() {
             return Err(e);
         }
-        self.writer.flush()?;
+        let Some(mut writer) = self.writer.take() else {
+            return Err(std::io::Error::other("sink already finished"));
+        };
+        writeln!(writer, "# fastn2v-walks complete walks={}", self.walks_written)?;
+        failpoints::retry_io("sink.flush", || {
+            writer.flush()?;
+            writer.get_ref().sync_all()
+        })?;
+        drop(writer);
+        failpoints::retry_io("sink.rename", || {
+            let tmp = self
+                .tmp
+                .as_ref()
+                .ok_or_else(|| std::io::Error::other("sink temp path missing"))?;
+            std::fs::rename(tmp, &self.final_path)
+        })?;
+        self.tmp = None; // renamed away: nothing for Drop to clean up
         Ok(self.walks_written)
+    }
+}
+
+impl Drop for StreamingFileSink {
+    fn drop(&mut self) {
+        // An unfinished sink leaves no partial artifact: release the file
+        // handle, then remove the temp file.
+        if let Some(tmp) = self.tmp.take() {
+            drop(self.writer.take());
+            let _ = std::fs::remove_file(&tmp);
+        }
     }
 }
 
@@ -369,6 +465,9 @@ impl WalkSink for StreamingFileSink {
         if self.error.is_some() {
             return;
         }
+        let Some(writer) = self.writer.as_mut() else {
+            return;
+        };
         self.line.clear();
         self.line.push_str(&seed.to_string());
         self.line.push('\t');
@@ -379,10 +478,11 @@ impl WalkSink for StreamingFileSink {
             self.line.push_str(&v.to_string());
         }
         self.line.push('\n');
-        if let Err(e) = self.writer.write_all(self.line.as_bytes()) {
+        if let Err(e) = writer.write_all(self.line.as_bytes()) {
             self.error = Some(e);
         } else {
             self.walks_written += 1;
+            self.file_bytes += self.line.len() as u64;
         }
     }
 
@@ -391,39 +491,148 @@ impl WalkSink for StreamingFileSink {
         // Walks were written through on arrival; push the round's bytes
         // down to the OS so a crash mid-query loses at most one round.
         if self.error.is_none() {
-            if let Err(e) = self.writer.flush() {
-                self.error = Some(e);
+            if let Some(writer) = self.writer.as_mut() {
+                if let Err(e) = failpoints::retry_io("sink.flush", || writer.flush()) {
+                    self.error = Some(e);
+                }
             }
+        }
+    }
+
+    fn checkpoint_blob(&mut self) -> Option<Vec<u8>> {
+        if self.error.is_some() {
+            return None;
+        }
+        // Everything up to the recorded offset must actually be in the
+        // file before the engine snapshot claims it is.
+        let writer = self.writer.as_mut()?;
+        writer.flush().ok()?;
+        let mut blob = Vec::new();
+        self.walks_written.persist(&mut blob);
+        self.file_bytes.persist(&mut blob);
+        self.total_walk_bytes.persist(&mut blob);
+        self.peak_round_bytes.persist(&mut blob);
+        Some(blob)
+    }
+
+    fn restore_blob(&mut self, blob: &[u8]) -> Result<(), String> {
+        let mut r = checkpoint::ByteReader::new(blob);
+        let walks_written = r.u64()?;
+        let file_bytes = r.u64()?;
+        let total_walk_bytes = r.u64()?;
+        let peak_round_bytes = r.u64()?;
+        if !r.is_empty() {
+            return Err("trailing bytes in walk sink blob".into());
+        }
+        let writer = self
+            .writer
+            .as_mut()
+            .ok_or_else(|| "sink already finished".to_string())?;
+        // Push any bytes written *after* the snapshot out of the buffer
+        // first; the truncation below then rolls the file back to exactly
+        // the snapshot offset.
+        writer.flush().map_err(|e| e.to_string())?;
+        let file = writer.get_mut();
+        let len = file.metadata().map_err(|e| e.to_string())?.len();
+        if len < file_bytes {
+            // The temp file lost the prior run's bytes (e.g. the sink was
+            // opened with `create`, which truncates). Reset so the caller
+            // can fall back to deterministic replay on a clean file.
+            file.set_len(0).map_err(|e| e.to_string())?;
+            return Err(format!(
+                "walk temp file has {len} bytes but the checkpoint recorded {file_bytes}; \
+                 open with StreamingFileSink::resume to keep prior walks"
+            ));
+        }
+        file.set_len(file_bytes).map_err(|e| e.to_string())?;
+        file.seek(std::io::SeekFrom::Start(file_bytes))
+            .map_err(|e| e.to_string())?;
+        self.walks_written = walks_written;
+        self.file_bytes = file_bytes;
+        self.total_walk_bytes = total_walk_bytes;
+        self.peak_round_bytes = peak_round_bytes;
+        self.round_bytes = 0;
+        Ok(())
+    }
+}
+
+/// Error from [`read_walk_file`]: distinguishes plain I/O failures,
+/// malformed lines, and files whose writer never reached
+/// [`StreamingFileSink::finish`] (no completion footer).
+#[derive(Debug)]
+pub enum WalkFileError {
+    Io(std::io::Error),
+    Malformed { line: String },
+    Truncated { detail: String },
+}
+
+impl std::fmt::Display for WalkFileError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WalkFileError::Io(e) => write!(f, "walk file I/O error: {e}"),
+            WalkFileError::Malformed { line } => write!(f, "malformed walk line: {line:?}"),
+            WalkFileError::Truncated { detail } => write!(f, "truncated walk file: {detail}"),
         }
     }
 }
 
+impl std::error::Error for WalkFileError {}
+
+impl From<std::io::Error> for WalkFileError {
+    fn from(e: std::io::Error) -> Self {
+        WalkFileError::Io(e)
+    }
+}
+
 /// Read a [`StreamingFileSink`] file back as `(seed, walk)` pairs in file
-/// order.
-pub fn read_walk_file(path: impl AsRef<Path>) -> std::io::Result<Vec<(VertexId, Vec<VertexId>)>> {
-    let bad = |line: &str| {
-        std::io::Error::new(
-            std::io::ErrorKind::InvalidData,
-            format!("malformed walk line: {line:?}"),
-        )
-    };
-    let reader = std::io::BufReader::new(std::fs::File::open(path)?);
+/// order. Requires the completion footer `finish` writes; a file cut off
+/// mid-write (or never finished) is a [`WalkFileError::Truncated`], never
+/// silently short data.
+pub fn read_walk_file(
+    path: impl AsRef<Path>,
+) -> Result<Vec<(VertexId, Vec<VertexId>)>, WalkFileError> {
+    let reader = std::io::BufReader::new(std::fs::File::open(path.as_ref())?);
     let mut out = Vec::new();
+    let mut footer: Option<u64> = None;
     for line in reader.lines() {
         let line = line?;
         if line.is_empty() {
             continue;
         }
-        let (seed, rest) = line.split_once('\t').ok_or_else(|| bad(&line))?;
-        let seed: VertexId = seed.parse().map_err(|_| bad(&line))?;
+        if let Some(rest) = line.strip_prefix('#') {
+            let n = rest
+                .trim()
+                .strip_prefix("fastn2v-walks complete walks=")
+                .and_then(|v| v.parse::<u64>().ok());
+            match n {
+                Some(n) => footer = Some(n),
+                None => return Err(WalkFileError::Malformed { line }),
+            }
+            continue;
+        }
+        if footer.is_some() {
+            // Walk data after the completion footer: not a sink file.
+            return Err(WalkFileError::Malformed { line });
+        }
+        let bad = || WalkFileError::Malformed { line: line.clone() };
+        let (seed, rest) = line.split_once('\t').ok_or_else(bad)?;
+        let seed: VertexId = seed.parse().map_err(|_| bad())?;
         let walk = rest
             .split(' ')
             .filter(|t| !t.is_empty())
-            .map(|t| t.parse::<VertexId>().map_err(|_| bad(&line)))
+            .map(|t| t.parse::<VertexId>().map_err(|_| bad()))
             .collect::<Result<Vec<_>, _>>()?;
         out.push((seed, walk));
     }
-    Ok(out)
+    match footer {
+        Some(n) if n == out.len() as u64 => Ok(out),
+        Some(n) => Err(WalkFileError::Truncated {
+            detail: format!("footer records {n} walks, file holds {}", out.len()),
+        }),
+        None => Err(WalkFileError::Truncated {
+            detail: "no completion footer (writer did not finish)".into(),
+        }),
+    }
 }
 
 /// Engine + sampler counters for one query (what [`WalkSession::run`]
@@ -553,6 +762,54 @@ impl WalkSession {
             stats: q.stats,
         })
     }
+
+    /// Execute one query with crash-safe superstep checkpointing: engine
+    /// and sink state are persisted into `ckpt.dir` every `ckpt.every`
+    /// supersteps (atomic temp-file + rename, FN2VCKP1 format), so an
+    /// interrupted query can be picked up by [`WalkSession::resume`].
+    pub fn run_checkpointed(
+        &self,
+        req: &WalkRequest,
+        sink: &mut dyn WalkSink,
+        ckpt: &CheckpointCfg,
+    ) -> Result<QueryOutput, EngineError> {
+        drive_checkpointed(
+            &self.graph,
+            &self.part,
+            &self.plan,
+            &self.cfg,
+            self.opts,
+            req,
+            sink,
+            ckpt,
+            false,
+        )
+    }
+
+    /// Resume an interrupted checkpointed query from the newest valid
+    /// checkpoint in `ckpt.dir` whose fingerprint matches this (graph,
+    /// config, request) — falling back to a fresh checkpointed run when
+    /// none is found. The delivered walks are bit-identical to an
+    /// uninterrupted run, including across different worker counts and
+    /// partitioners (the checkpoint deliberately does not pin either).
+    pub fn resume(
+        &self,
+        req: &WalkRequest,
+        sink: &mut dyn WalkSink,
+        ckpt: &CheckpointCfg,
+    ) -> Result<QueryOutput, EngineError> {
+        drive_checkpointed(
+            &self.graph,
+            &self.part,
+            &self.plan,
+            &self.cfg,
+            self.opts,
+            req,
+            sink,
+            ckpt,
+            true,
+        )
+    }
 }
 
 /// One-shot query execution without a prepared session: derives the
@@ -635,43 +892,319 @@ fn drive(
         let mut pass_cfg = cfg;
         pass_cfg.seed = pass_seed(cfg.seed, pass);
         for round in 0..req.rounds {
-            let program =
-                FnProgram::new(graph, pass_cfg, round, req.rounds).with_seed_mask(mask.clone());
-            let engine = Engine::new(graph, part.clone(), program, opts);
-            let out = engine.run_on(plan)?;
-            stats.merge(&engine.program().stats());
-
-            // Flush this round's walks to the sink: only the round's
-            // seeds are visited, so an explicit query never reads (or
-            // allocates for) non-seed walk state.
-            let mut walks_in_round = 0u64;
-            for seed in req.seeds.iter(n) {
-                if req.rounds > 1 && seed % req.rounds != round {
-                    continue;
-                }
-                let walk = &out.values[seed as usize].walk;
-                if !walk.is_empty() {
-                    walks_in_round += 1;
-                    sink.on_walk(seed, round, walk);
+            // Worklist of FN-Multi classes `(er, er_count)` for this
+            // round; a memory-budget overrun splits the failed class in
+            // two and retries (see `split_or_fail`) instead of aborting.
+            let mut classes = VecDeque::from([(round, req.rounds)]);
+            while let Some((er, er_count)) = classes.pop_front() {
+                let program =
+                    FnProgram::new(graph, pass_cfg, er, er_count).with_seed_mask(mask.clone());
+                let engine = Engine::new(graph, part.clone(), program, opts);
+                match engine.run_on(plan) {
+                    Ok(out) => {
+                        stats.merge(&engine.program().stats());
+                        let unit = UnitId { pass, er, er_count };
+                        deliver_unit(req, n, unit, out, sink, &mut merged, &mut stats);
+                    }
+                    Err(e) => split_or_fail(e, opts, req, er, er_count, &mut classes)?,
                 }
             }
-            let rs = RoundStats {
-                pass,
-                round,
-                walks: walks_in_round,
-                peak_msg_bytes: out.metrics.peak_msg_bytes(),
-                peak_bytes: out.metrics.peak_bytes,
-                supersteps: out.metrics.num_supersteps(),
-            };
-            sink.on_round_end(round, &rs);
-            stats.per_round.push(rs);
+        }
+    }
+    Ok(QueryOutput {
+        metrics: merged,
+        stats,
+    })
+}
 
-            // Merge metrics exactly as the legacy API did: rounds run
-            // back-to-back, so supersteps concatenate and peaks max.
-            merged.base_bytes = merged.base_bytes.max(out.metrics.base_bytes);
-            merged.peak_bytes = merged.peak_bytes.max(out.metrics.peak_bytes);
-            merged.wall_secs += out.metrics.wall_secs;
-            merged.supersteps.extend(out.metrics.supersteps);
+/// Deliver one completed engine unit — FN-Multi class `er (mod er_count)`
+/// of pass `pass` — to the sink and fold its metrics into the query
+/// totals. The sink-visible round index is the *outer* FN-Multi round
+/// (`er % req.rounds`), so degradation splits are invisible to sinks
+/// beyond extra `on_round_end` calls for the same round.
+fn deliver_unit(
+    req: &WalkRequest,
+    n: usize,
+    unit: UnitId,
+    out: RunResult<FnValue>,
+    sink: &mut dyn WalkSink,
+    merged: &mut EngineMetrics,
+    stats: &mut WalkStats,
+) {
+    let UnitId { pass, er, er_count } = unit;
+    let outer_round = er % req.rounds;
+    // Flush this unit's walks to the sink: only the class's seeds are
+    // visited, so an explicit query never reads (or allocates for)
+    // non-seed walk state.
+    let mut walks_in_round = 0u64;
+    for seed in req.seeds.iter(n) {
+        if er_count > 1 && seed % er_count != er {
+            continue;
+        }
+        let walk = &out.values[seed as usize].walk;
+        if !walk.is_empty() {
+            walks_in_round += 1;
+            sink.on_walk(seed, outer_round, walk);
+        }
+    }
+    let rs = RoundStats {
+        pass,
+        round: outer_round,
+        walks: walks_in_round,
+        peak_msg_bytes: out.metrics.peak_msg_bytes(),
+        peak_bytes: out.metrics.peak_bytes,
+        supersteps: out.metrics.num_supersteps(),
+    };
+    sink.on_round_end(outer_round, &rs);
+    stats.per_round.push(rs);
+
+    // Merge metrics exactly as the legacy API did: units run
+    // back-to-back, so supersteps concatenate and peaks max.
+    merged.base_bytes = merged.base_bytes.max(out.metrics.base_bytes);
+    merged.peak_bytes = merged.peak_bytes.max(out.metrics.peak_bytes);
+    merged.wall_secs += out.metrics.wall_secs;
+    merged.checkpoints_written += out.metrics.checkpoints_written;
+    merged.checkpoint_secs += out.metrics.checkpoint_secs;
+    merged.supersteps.extend(out.metrics.supersteps);
+}
+
+/// Memory-budget degradation: on a simulated OOM (and unless
+/// [`EngineOpts::strict_memory`]), split the failed FN-Multi class
+/// `er (mod er_count)` into its two half-size subclasses and retry those
+/// instead of aborting the query. The split preserves the seed population
+/// exactly — `{s ≡ er (mod c)}` is the disjoint union of
+/// `{s ≡ er (mod 2c)}` and `{s ≡ er+c (mod 2c)}` — and the walks are
+/// unchanged because sampling never depends on the round split. Splitting
+/// caps at 64× the requested round count; past that the budget is treated
+/// as truly unsatisfiable and the error propagates.
+fn split_or_fail(
+    e: EngineError,
+    opts: EngineOpts,
+    req: &WalkRequest,
+    er: u32,
+    er_count: u32,
+    classes: &mut VecDeque<(u32, u32)>,
+) -> Result<(), EngineError> {
+    let cap = req.rounds.saturating_mul(32);
+    match e {
+        EngineError::OutOfMemory { bytes, .. } if !opts.strict_memory && er_count <= cap => {
+            crate::log_warn!(
+                "walk class {er} (mod {er_count}) exceeded the memory budget ({} resident); \
+                 degrading to {}-way round splitting",
+                crate::util::fmt_bytes(bytes),
+                er_count.saturating_mul(2)
+            );
+            classes.push_front((er + er_count, er_count * 2));
+            classes.push_front((er, er_count * 2));
+            Ok(())
+        }
+        e => Err(e),
+    }
+}
+
+/// Where and how often a checkpointed walk query persists its state.
+#[derive(Clone, Debug)]
+pub struct CheckpointCfg {
+    /// Directory for `ckpt-*.fn2vckp` files (created on first write).
+    pub dir: PathBuf,
+    /// Write a checkpoint every `every` supersteps (clamped to ≥ 1).
+    pub every: u32,
+    /// Keep every checkpoint instead of pruning to the newest two.
+    pub keep_all: bool,
+}
+
+impl CheckpointCfg {
+    pub fn new(dir: impl Into<PathBuf>, every: u32) -> CheckpointCfg {
+        CheckpointCfg {
+            dir: dir.into(),
+            every,
+            keep_all: false,
+        }
+    }
+}
+
+/// Fingerprint binding a checkpoint to its (graph, config, request):
+/// resume refuses checkpoints written by a different query. Deliberately
+/// *excludes* the worker count and the partitioner — the message snapshot
+/// is worker-agnostic, so a checkpoint taken with 4 workers resumes
+/// bit-identically on 1 (the recovery suite pins this).
+fn query_fingerprint(graph: &Graph, cfg: &FnConfig, req: &WalkRequest) -> u64 {
+    let mut buf = Vec::new();
+    (graph.num_vertices() as u64).persist(&mut buf);
+    (graph.num_arcs() as u64).persist(&mut buf);
+    cfg.p.to_bits().persist(&mut buf);
+    cfg.q.to_bits().persist(&mut buf);
+    cfg.walk_length.persist(&mut buf);
+    cfg.seed.persist(&mut buf);
+    buf.extend_from_slice(cfg.variant.name().as_bytes());
+    cfg.popular_threshold.persist(&mut buf);
+    cfg.approx_eps.to_bits().persist(&mut buf);
+    buf.extend_from_slice(cfg.sampler.name().as_bytes());
+    req.walks_per_seed.persist(&mut buf);
+    req.rounds.persist(&mut buf);
+    match req.length {
+        Some(l) => {
+            1u32.persist(&mut buf);
+            l.persist(&mut buf);
+        }
+        None => 0u32.persist(&mut buf),
+    }
+    match &req.seeds {
+        SeedSet::All => 0u32.persist(&mut buf),
+        SeedSet::Slice { start, end } => {
+            1u32.persist(&mut buf);
+            start.persist(&mut buf);
+            end.persist(&mut buf);
+        }
+        SeedSet::Explicit(ids) => {
+            2u32.persist(&mut buf);
+            let mut idb = Vec::with_capacity(ids.len() * 4);
+            for id in ids {
+                idb.extend_from_slice(&id.to_le_bytes());
+            }
+            fxhash64(&idb).persist(&mut buf);
+        }
+    }
+    fxhash64(&buf)
+}
+
+/// Build the engine [`CheckpointSpec`] for one unit: the schedule encodes
+/// everything a resumed driver needs *besides* the engine state — units
+/// already delivered, the remaining class queue (head = the unit this
+/// spec belongs to), and the sink's own snapshot.
+fn make_spec(
+    ckpt: &CheckpointCfg,
+    fingerprint: u64,
+    meta: CheckpointMeta,
+    done: &[UnitId],
+    unit: (u32, u32),
+    remaining: &VecDeque<(u32, u32)>,
+    sink: &mut dyn WalkSink,
+) -> CheckpointSpec {
+    let mut queue = Vec::with_capacity(1 + remaining.len());
+    queue.push(unit);
+    queue.extend(remaining.iter().copied());
+    let schedule = ScheduleState {
+        done: done.to_vec(),
+        queue,
+        sink_blob: sink.checkpoint_blob(),
+    };
+    let mut spec = CheckpointSpec::new(ckpt.dir.clone(), ckpt.every);
+    spec.keep_all = ckpt.keep_all;
+    spec.fingerprint = fingerprint;
+    spec.meta = meta;
+    spec.schedule = encode_schedule(&schedule);
+    spec
+}
+
+/// The crash-safe sibling of [`drive`]: identical walk delivery, but every
+/// engine unit runs with a [`CheckpointSpec`] so state is persisted at
+/// superstep barriers, and with `resume` the query restarts from the
+/// newest valid checkpoint instead of from scratch.
+#[allow(clippy::too_many_arguments)]
+fn drive_checkpointed(
+    graph: &Graph,
+    part: &Partitioner,
+    plan: &WorkerPlan,
+    cfg: &FnConfig,
+    opts: EngineOpts,
+    req: &WalkRequest,
+    sink: &mut dyn WalkSink,
+    ckpt: &CheckpointCfg,
+    resume: bool,
+) -> Result<QueryOutput, EngineError> {
+    assert!(req.rounds >= 1, "need at least one round");
+    assert!(req.walks_per_seed >= 1, "need at least one walk per seed");
+    let n = graph.num_vertices();
+    req.seeds.assert_in_range(n);
+
+    let mut cfg = *cfg;
+    if let Some(l) = req.length {
+        cfg.walk_length = l;
+    }
+    let opts = cfg.engine_opts(opts);
+    if cfg.effective_sampler() == SamplerKind::Reject {
+        let _ = graph.first_order_tables();
+    }
+    let mask = req.seeds.mask(n);
+    let fp = query_fingerprint(graph, &cfg, req);
+
+    let mut merged = EngineMetrics::default();
+    let mut stats = WalkStats::default();
+    let mut done: Vec<UnitId> = Vec::new();
+    let mut start_pass = 0u32;
+    let mut start_round = 0u32;
+    // `(remaining classes, engine snapshot)` for the resume point; taken
+    // by the first `(pass, round)` iteration.
+    let mut pending: Option<(Vec<(u32, u32)>, EngineSnapshot<FnProgram>)> = None;
+
+    if resume {
+        if let Some(c) = checkpoint::latest_valid(&ckpt.dir, opts.max_supersteps, fp) {
+            let snap = c.snapshot::<FnProgram>().map_err(|e| EngineError::Checkpoint {
+                superstep: c.superstep,
+                detail: e.to_string(),
+            })?;
+            let restored = c
+                .schedule
+                .sink_blob
+                .as_deref()
+                .is_some_and(|b| sink.restore_blob(b).is_ok());
+            if !restored {
+                // Replay: re-run every completed unit so a sink without
+                // restorable state observes exactly the original walk
+                // stream (units are deterministic in (seed, pass)).
+                for &u in &c.schedule.done {
+                    let mut pass_cfg = cfg;
+                    pass_cfg.seed = pass_seed(cfg.seed, u.pass);
+                    let program = FnProgram::new(graph, pass_cfg, u.er, u.er_count)
+                        .with_seed_mask(mask.clone());
+                    let engine = Engine::new(graph, part.clone(), program, opts);
+                    let out = engine.run_on(plan)?;
+                    stats.merge(&engine.program().stats());
+                    deliver_unit(req, n, u, out, sink, &mut merged, &mut stats);
+                }
+            }
+            done = c.schedule.done.clone();
+            start_pass = c.meta.pass;
+            start_round = c.meta.round;
+            pending = Some((c.schedule.queue.clone(), snap));
+        }
+    }
+
+    for pass in start_pass..req.walks_per_seed {
+        let mut pass_cfg = cfg;
+        pass_cfg.seed = pass_seed(cfg.seed, pass);
+        let first_round = if pass == start_pass { start_round } else { 0 };
+        for round in first_round..req.rounds {
+            let (mut classes, mut resumed) = match pending.take() {
+                Some((queue, snap)) => (VecDeque::from(queue), Some(snap)),
+                None => (VecDeque::from([(round, req.rounds)]), None),
+            };
+            while let Some((er, er_count)) = classes.pop_front() {
+                let meta = CheckpointMeta {
+                    pass,
+                    round,
+                    rounds: req.rounds,
+                    unit_seq: done.len() as u32,
+                };
+                let spec = make_spec(ckpt, fp, meta, &done, (er, er_count), &classes, sink);
+                let program =
+                    FnProgram::new(graph, pass_cfg, er, er_count).with_seed_mask(mask.clone());
+                let engine = Engine::new(graph, part.clone(), program, opts);
+                let run = match resumed.take() {
+                    Some(snap) => engine.run_on_resumed(plan, snap, Some(&spec)),
+                    None => engine.run_on_checkpointed(plan, &spec),
+                };
+                match run {
+                    Ok(out) => {
+                        stats.merge(&engine.program().stats());
+                        let unit = UnitId { pass, er, er_count };
+                        deliver_unit(req, n, unit, out, sink, &mut merged, &mut stats);
+                        done.push(unit);
+                    }
+                    Err(e) => split_or_fail(e, opts, req, er, er_count, &mut classes)?,
+                }
+            }
         }
     }
     Ok(QueryOutput {
@@ -744,18 +1277,84 @@ mod tests {
         assert_ne!(pass_seed(42, 1), pass_seed(42, 2));
     }
 
-    #[test]
-    fn walk_file_roundtrip() {
+    fn test_path(name: &str) -> PathBuf {
         let dir = std::env::temp_dir().join("fastn2v_session_test");
         std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("walks_roundtrip.txt");
+        dir.join(format!("{name}_{}.txt", std::process::id()))
+    }
+
+    #[test]
+    fn walk_file_roundtrip() {
+        let path = test_path("walks_roundtrip");
         let mut sink = StreamingFileSink::create(&path).unwrap();
         sink.on_walk(3, 0, &[3, 1, 2]);
         sink.on_walk(7, 0, &[7]);
         sink.on_round_end(0, &RoundStats::default());
+        // Mid-write the output lives at the temp path only: a reader never
+        // sees a partial file at the final path.
+        assert!(!path.exists());
+        assert!(sink_tmp_path(&path).exists());
         sink.on_walk(4, 1, &[4, 0]);
         sink.on_round_end(1, &RoundStats::default());
         assert_eq!(sink.peak_round_bytes(), 16); // round 0: (3 + 1) ids
+        assert_eq!(sink.finish().unwrap(), 3);
+        assert!(!sink_tmp_path(&path).exists());
+        let back = read_walk_file(&path).unwrap();
+        assert_eq!(
+            back,
+            vec![(3, vec![3, 1, 2]), (7, vec![7]), (4, vec![4, 0])]
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn unfinished_sink_leaves_no_partial_artifacts() {
+        let path = test_path("walks_unfinished");
+        std::fs::remove_file(&path).ok();
+        {
+            let mut sink = StreamingFileSink::create(&path).unwrap();
+            sink.on_walk(1, 0, &[1, 2, 3]);
+            // Dropped without finish(): a simulated crash.
+        }
+        assert!(!path.exists(), "final path must not appear without finish");
+        assert!(!sink_tmp_path(&path).exists(), "temp file must be removed");
+    }
+
+    #[test]
+    fn walk_file_without_footer_is_truncated() {
+        let path = test_path("walks_nofooter");
+        std::fs::write(&path, "3\t3 1 2\n7\t7\n").unwrap();
+        match read_walk_file(&path) {
+            Err(WalkFileError::Truncated { .. }) => {}
+            other => panic!("expected Truncated, got {other:?}"),
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn walk_file_footer_count_mismatch_is_truncated() {
+        let path = test_path("walks_badcount");
+        std::fs::write(&path, "3\t3 1 2\n# fastn2v-walks complete walks=5\n").unwrap();
+        match read_walk_file(&path) {
+            Err(WalkFileError::Truncated { detail }) => {
+                assert!(detail.contains("5"), "detail names the footer count: {detail}");
+            }
+            other => panic!("expected Truncated, got {other:?}"),
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn sink_blob_roundtrips_counters_and_offset() {
+        let path = test_path("walks_blob");
+        let mut sink = StreamingFileSink::create(&path).unwrap();
+        sink.on_walk(3, 0, &[3, 1, 2]);
+        sink.on_walk(7, 0, &[7]);
+        let blob = sink.checkpoint_blob().expect("file sink snapshots");
+        // More walks after the snapshot — restore must roll them back.
+        sink.on_walk(9, 0, &[9, 9]);
+        sink.restore_blob(&blob).unwrap();
+        sink.on_walk(4, 1, &[4, 0]);
         assert_eq!(sink.finish().unwrap(), 3);
         let back = read_walk_file(&path).unwrap();
         assert_eq!(

@@ -1,0 +1,828 @@
+//! FN2VCKP1: checksummed engine-state checkpoints written at superstep
+//! barriers, and the decode path that makes deterministic resume possible.
+//!
+//! A checkpoint captures everything the BSP engine needs to restart a run
+//! mid-flight: every vertex's program value and halted flag, every message
+//! in flight for the next superstep, and a session-supplied *schedule*
+//! (FN-Multi round progress plus an opaque sink blob). Because walk
+//! sampling draws only from counter-based RNG streams keyed by
+//! `(seed, walk, step)` — never from engine state — restoring this snapshot
+//! and re-running produces walks bit-identical to the uninterrupted run,
+//! independent of worker count or partitioner.
+//!
+//! # On-disk layout (all little-endian)
+//!
+//! 64-byte header, mirroring the FN2VGRF2 discipline in
+//! [`crate::graph::store`]:
+//!
+//! | bytes  | field                                      |
+//! |--------|--------------------------------------------|
+//! | 0..8   | magic `"FN2VCKP1"`                         |
+//! | 8..12  | version (`1`)                              |
+//! | 12..16 | superstep (the *next* superstep to run)    |
+//! | 16..20 | pass                                       |
+//! | 20..24 | round (in-flight FN-Multi round `e_r`)     |
+//! | 24..28 | rounds (in-flight round count `e_R`)       |
+//! | 28..32 | n (vertex count)                           |
+//! | 32..40 | session fingerprint                        |
+//! | 40..48 | payload length                             |
+//! | 48..56 | fxhash64 of the payload                    |
+//! | 56..64 | fxhash64 of header bytes 0..56             |
+//!
+//! The payload is a sequence of `[tag: u32][len: u64][body]` sections:
+//! VALUES (1) holds `count: u64` then per-vertex `(vid: u32, halted: u8,
+//! Persist-encoded value)`; MESSAGES (2) holds `count: u64` then
+//! `(dst: u32, Persist-encoded message)` entries; SCHEDULE (3) holds the
+//! encoded [`ScheduleState`]. Files are written to `<path>.tmp`, fsynced,
+//! and atomically renamed, so a crash mid-write never leaves a partial
+//! checkpoint on the final path; validation runs magic → version →
+//! checksum → superstep → size → payload, each failure a typed
+//! [`StoreError`] naming the field.
+
+use std::fs::{self, File};
+use std::io::{self, Write};
+use std::path::{Path, PathBuf};
+
+use crate::graph::store::{fxhash64, StoreError};
+use crate::graph::VertexId;
+use crate::util::failpoints;
+
+use super::engine::VertexProgram;
+
+const MAGIC: &[u8; 8] = b"FN2VCKP1";
+const CKP_VERSION: u32 = 1;
+const HEADER_BYTES: usize = 64;
+const SEC_VALUES: u32 = 1;
+const SEC_MESSAGES: u32 = 2;
+const SEC_SCHEDULE: u32 = 3;
+
+/// File extension of checkpoint files (`ckpt-<unit>-<superstep>.fn2vckp`).
+pub const CKP_EXTENSION: &str = "fn2vckp";
+
+/// State that survives a crash, encoded with explicit little-endian
+/// framing. `restore` must consume exactly what `persist` wrote.
+pub trait Persist: Sized {
+    fn persist(&self, out: &mut Vec<u8>);
+    fn restore(r: &mut ByteReader<'_>) -> Result<Self, String>;
+}
+
+impl Persist for u32 {
+    fn persist(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    fn restore(r: &mut ByteReader<'_>) -> Result<Self, String> {
+        r.u32()
+    }
+}
+
+impl Persist for u64 {
+    fn persist(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    fn restore(r: &mut ByteReader<'_>) -> Result<Self, String> {
+        r.u64()
+    }
+}
+
+impl Persist for f32 {
+    fn persist(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    fn restore(r: &mut ByteReader<'_>) -> Result<Self, String> {
+        r.f32()
+    }
+}
+
+/// Bounds-checked little-endian cursor used by [`Persist::restore`].
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        ByteReader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.remaining() < n {
+            return Err(format!(
+                "need {n} bytes at offset {}, {} remain",
+                self.pos,
+                self.remaining()
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32, String> {
+        let mut b = [0u8; 4];
+        b.copy_from_slice(self.take(4)?);
+        Ok(u32::from_le_bytes(b))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, String> {
+        let mut b = [0u8; 8];
+        b.copy_from_slice(self.take(8)?);
+        Ok(u64::from_le_bytes(b))
+    }
+
+    pub fn f32(&mut self) -> Result<f32, String> {
+        let mut b = [0u8; 4];
+        b.copy_from_slice(self.take(4)?);
+        Ok(f32::from_le_bytes(b))
+    }
+}
+
+/// One work unit of a walk query: `(pass, round class)` — the granularity
+/// at which the session delivers walks and the schedule records progress.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct UnitId {
+    pub pass: u32,
+    /// Round class residue: the unit covered seeds with
+    /// `vid % er_count == er`.
+    pub er: u32,
+    pub er_count: u32,
+}
+
+/// Session-level progress stored in the SCHEDULE section: completed units
+/// since the start of the query, the remaining round classes of the
+/// current pass (excluding the in-flight unit the engine snapshot covers),
+/// and an opaque sink blob for sinks that can restore their own state.
+#[derive(Clone, Debug, Default)]
+pub struct ScheduleState {
+    pub done: Vec<UnitId>,
+    /// Remaining `(er, er_count)` classes of the in-flight pass.
+    pub queue: Vec<(u32, u32)>,
+    pub sink_blob: Option<Vec<u8>>,
+}
+
+/// Encode a [`ScheduleState`] into the SCHEDULE section body.
+pub fn encode_schedule(s: &ScheduleState) -> Vec<u8> {
+    let mut out = Vec::new();
+    (s.done.len() as u64).persist(&mut out);
+    for u in &s.done {
+        u.pass.persist(&mut out);
+        u.er.persist(&mut out);
+        u.er_count.persist(&mut out);
+    }
+    (s.queue.len() as u64).persist(&mut out);
+    for &(er, er_count) in &s.queue {
+        er.persist(&mut out);
+        er_count.persist(&mut out);
+    }
+    match &s.sink_blob {
+        None => out.push(0),
+        Some(blob) => {
+            out.push(1);
+            (blob.len() as u64).persist(&mut out);
+            out.extend_from_slice(blob);
+        }
+    }
+    out
+}
+
+fn decode_schedule(r: &mut ByteReader<'_>) -> Result<ScheduleState, String> {
+    let mut s = ScheduleState::default();
+    let done = r.u64()?;
+    for _ in 0..done {
+        s.done.push(UnitId {
+            pass: r.u32()?,
+            er: r.u32()?,
+            er_count: r.u32()?,
+        });
+    }
+    let queued = r.u64()?;
+    for _ in 0..queued {
+        s.queue.push((r.u32()?, r.u32()?));
+    }
+    if r.u8()? != 0 {
+        let len = r.u64()? as usize;
+        s.sink_blob = Some(r.take(len)?.to_vec());
+    }
+    if !r.is_empty() {
+        return Err(format!("{} trailing bytes after schedule", r.remaining()));
+    }
+    Ok(s)
+}
+
+/// Identity of the in-flight unit, stamped into the header and filename.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CheckpointMeta {
+    pub pass: u32,
+    pub round: u32,
+    pub rounds: u32,
+    /// Completed-unit count at the time of the snapshot (filename prefix,
+    /// so lexicographic order equals logical order).
+    pub unit_seq: u32,
+}
+
+/// Everything the engine needs to write checkpoints during one run.
+#[derive(Clone, Debug)]
+pub struct CheckpointSpec {
+    pub dir: PathBuf,
+    /// Write every this-many supersteps (`1` = every barrier).
+    pub every: u32,
+    /// Keep every checkpoint instead of pruning to the newest two — the
+    /// resume-conformance tests replay from *all* of them.
+    pub keep_all: bool,
+    pub meta: CheckpointMeta,
+    /// Session fingerprint; resume refuses checkpoints from a different
+    /// (graph, config, request) triple.
+    pub fingerprint: u64,
+    /// Pre-encoded [`ScheduleState`] (see [`encode_schedule`]).
+    pub schedule: Vec<u8>,
+}
+
+impl CheckpointSpec {
+    pub fn new(dir: impl Into<PathBuf>, every: u32) -> Self {
+        CheckpointSpec {
+            dir: dir.into(),
+            every: every.max(1),
+            keep_all: false,
+            meta: CheckpointMeta::default(),
+            fingerprint: 0,
+            schedule: encode_schedule(&ScheduleState::default()),
+        }
+    }
+}
+
+/// One worker's encoded slice of the snapshot (values + next-superstep
+/// inbox), produced between the checkpoint barriers.
+#[derive(Default)]
+pub(crate) struct EncodedPart {
+    pub(crate) value_count: u64,
+    pub(crate) values: Vec<u8>,
+    pub(crate) msg_count: u64,
+    pub(crate) msgs: Vec<u8>,
+}
+
+/// Dense engine state reconstructed from a checkpoint, consumable by
+/// `Engine::run_on_resumed`.
+pub struct EngineSnapshot<P: VertexProgram> {
+    /// The superstep the resumed run executes first.
+    pub superstep: u32,
+    pub values: Vec<P::Value>,
+    pub halted: Vec<bool>,
+    pub messages: Vec<(VertexId, P::Msg)>,
+}
+
+fn section(out: &mut Vec<u8>, tag: u32, body: &[u8]) {
+    tag.persist(out);
+    (body.len() as u64).persist(out);
+    out.extend_from_slice(body);
+}
+
+/// Assemble and atomically write one checkpoint; returns its final path.
+/// `superstep` is the next superstep the resumed run would execute.
+pub(crate) fn write_checkpoint(
+    spec: &CheckpointSpec,
+    superstep: u32,
+    n: u32,
+    parts: Vec<EncodedPart>,
+) -> Result<PathBuf, StoreError> {
+    fs::create_dir_all(&spec.dir)
+        .map_err(|e| StoreError::io(format!("create checkpoint dir {}", spec.dir.display()), e))?;
+
+    let mut values = Vec::new();
+    let mut msgs = Vec::new();
+    let (mut value_count, mut msg_count) = (0u64, 0u64);
+    for p in &parts {
+        value_count += p.value_count;
+        msg_count += p.msg_count;
+    }
+    value_count.persist(&mut values);
+    msg_count.persist(&mut msgs);
+    for p in &parts {
+        values.extend_from_slice(&p.values);
+        msgs.extend_from_slice(&p.msgs);
+    }
+
+    let mut payload = Vec::new();
+    section(&mut payload, SEC_VALUES, &values);
+    section(&mut payload, SEC_MESSAGES, &msgs);
+    section(&mut payload, SEC_SCHEDULE, &spec.schedule);
+
+    let mut header = [0u8; HEADER_BYTES];
+    header[0..8].copy_from_slice(MAGIC);
+    header[8..12].copy_from_slice(&CKP_VERSION.to_le_bytes());
+    header[12..16].copy_from_slice(&superstep.to_le_bytes());
+    header[16..20].copy_from_slice(&spec.meta.pass.to_le_bytes());
+    header[20..24].copy_from_slice(&spec.meta.round.to_le_bytes());
+    header[24..28].copy_from_slice(&spec.meta.rounds.to_le_bytes());
+    header[28..32].copy_from_slice(&n.to_le_bytes());
+    header[32..40].copy_from_slice(&spec.fingerprint.to_le_bytes());
+    header[40..48].copy_from_slice(&(payload.len() as u64).to_le_bytes());
+    header[48..56].copy_from_slice(&fxhash64(&payload).to_le_bytes());
+    let sum = fxhash64(&header[..56]);
+    header[56..64].copy_from_slice(&sum.to_le_bytes());
+
+    let name = format!(
+        "ckpt-{:06}-{:06}.{}",
+        spec.meta.unit_seq, superstep, CKP_EXTENSION
+    );
+    let path = spec.dir.join(&name);
+    let tmp = spec.dir.join(format!("{name}.tmp"));
+
+    let res: io::Result<()> = (|| {
+        let f = failpoints::retry_io("checkpoint.write", || {
+            let mut f = File::create(&tmp)?;
+            f.write_all(&header)?;
+            f.write_all(&payload)?;
+            Ok(f)
+        })?;
+        failpoints::retry_io("checkpoint.sync", || f.sync_all())?;
+        drop(f);
+        failpoints::retry_io("checkpoint.rename", || fs::rename(&tmp, &path))
+    })();
+    if let Err(e) = res {
+        let _ = fs::remove_file(&tmp);
+        return Err(StoreError::io(format!("write checkpoint {}", path.display()), e));
+    }
+
+    if !spec.keep_all {
+        let files = checkpoint_files(&spec.dir);
+        for stale in files.iter().rev().skip(2) {
+            let _ = fs::remove_file(stale);
+        }
+    }
+    Ok(path)
+}
+
+/// Checkpoint files in `dir`, sorted ascending by logical order (the
+/// zero-padded `ckpt-<unit>-<superstep>` name makes lexicographic order
+/// logical order). Empty when the directory is missing or unreadable.
+pub fn checkpoint_files(dir: &Path) -> Vec<PathBuf> {
+    let Ok(entries) = fs::read_dir(dir) else {
+        return Vec::new();
+    };
+    let mut files: Vec<PathBuf> = entries
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| {
+            p.extension().is_some_and(|x| x == CKP_EXTENSION)
+                && p.file_name()
+                    .and_then(|f| f.to_str())
+                    .is_some_and(|f| f.starts_with("ckpt-"))
+        })
+        .collect();
+    files.sort();
+    files
+}
+
+/// A validated, parsed checkpoint file.
+pub struct Checkpoint {
+    pub path: PathBuf,
+    /// The next superstep the resumed run executes.
+    pub superstep: u32,
+    pub meta: CheckpointMeta,
+    pub n: u32,
+    pub fingerprint: u64,
+    pub schedule: ScheduleState,
+    value_count: u64,
+    values_raw: Vec<u8>,
+    msg_count: u64,
+    msgs_raw: Vec<u8>,
+}
+
+fn le_u32(b: &[u8]) -> u32 {
+    let mut x = [0u8; 4];
+    x.copy_from_slice(&b[..4]);
+    u32::from_le_bytes(x)
+}
+
+fn le_u64(b: &[u8]) -> u64 {
+    let mut x = [0u8; 8];
+    x.copy_from_slice(&b[..8]);
+    u64::from_le_bytes(x)
+}
+
+/// Read and validate a checkpoint file. `max_supersteps` bounds the stored
+/// superstep (a value beyond the engine's cap is stale or corrupt).
+/// Validation order: magic → version → checksum → superstep → size →
+/// payload — each failure a typed [`StoreError`] naming the field.
+pub fn read_checkpoint(path: &Path, max_supersteps: u32) -> Result<Checkpoint, StoreError> {
+    let bytes = fs::read(path)
+        .map_err(|e| StoreError::io(format!("read checkpoint {}", path.display()), e))?;
+    if bytes.len() < HEADER_BYTES {
+        return Err(StoreError::format(
+            path,
+            "size",
+            format!(
+                "file has {} bytes, header alone is {HEADER_BYTES}",
+                bytes.len()
+            ),
+        ));
+    }
+    let header = &bytes[..HEADER_BYTES];
+    if &header[0..8] != MAGIC {
+        return Err(StoreError::format(
+            path,
+            "magic",
+            "not an FN2VCKP1 checkpoint",
+        ));
+    }
+    let version = le_u32(&header[8..12]);
+    if version != CKP_VERSION {
+        return Err(StoreError::format(
+            path,
+            "version",
+            format!("version {version}, this build reads {CKP_VERSION}"),
+        ));
+    }
+    let stored_sum = le_u64(&header[56..64]);
+    let computed = fxhash64(&header[..56]);
+    if stored_sum != computed {
+        return Err(StoreError::format(
+            path,
+            "checksum",
+            format!("stored {stored_sum:#x}, computed {computed:#x}"),
+        ));
+    }
+    let superstep = le_u32(&header[12..16]);
+    if superstep > max_supersteps {
+        return Err(StoreError::format(
+            path,
+            "superstep",
+            format!("superstep {superstep} exceeds the engine cap {max_supersteps} — stale"),
+        ));
+    }
+    let meta = CheckpointMeta {
+        pass: le_u32(&header[16..20]),
+        round: le_u32(&header[20..24]),
+        rounds: le_u32(&header[24..28]),
+        unit_seq: 0, // derived from the schedule below
+    };
+    let n = le_u32(&header[28..32]);
+    let fingerprint = le_u64(&header[32..40]);
+    let payload_len = le_u64(&header[40..48]);
+    let actual = (bytes.len() - HEADER_BYTES) as u64;
+    if payload_len != actual {
+        return Err(StoreError::format(
+            path,
+            "size",
+            format!("payload needs {payload_len} bytes, file carries {actual}"),
+        ));
+    }
+    let payload = &bytes[HEADER_BYTES..];
+    let stored_payload_sum = le_u64(&header[48..56]);
+    let computed_payload = fxhash64(payload);
+    if stored_payload_sum != computed_payload {
+        return Err(StoreError::format(
+            path,
+            "payload",
+            format!("stored {stored_payload_sum:#x}, computed {computed_payload:#x}"),
+        ));
+    }
+
+    let bad = |d: String| StoreError::format(path, "sections", d);
+    let mut r = ByteReader::new(payload);
+    let (mut values_raw, mut msgs_raw, mut schedule) = (None, None, None);
+    while !r.is_empty() {
+        let tag = r.u32().map_err(&bad)?;
+        let len = r.u64().map_err(&bad)? as usize;
+        let body = r.take(len).map_err(&bad)?;
+        match tag {
+            SEC_VALUES => values_raw = Some(body),
+            SEC_MESSAGES => msgs_raw = Some(body),
+            SEC_SCHEDULE => schedule = Some(body),
+            other => return Err(bad(format!("unknown section tag {other}"))),
+        }
+    }
+    let (Some(values_raw), Some(msgs_raw), Some(schedule)) = (values_raw, msgs_raw, schedule)
+    else {
+        return Err(bad("missing a required section".to_string()));
+    };
+    let schedule = {
+        let mut sr = ByteReader::new(schedule);
+        decode_schedule(&mut sr).map_err(|d| StoreError::format(path, "schedule", d))?
+    };
+    let mut vr = ByteReader::new(values_raw);
+    let value_count = vr
+        .u64()
+        .map_err(|d| StoreError::format(path, "values", d))?;
+    let mut mr = ByteReader::new(msgs_raw);
+    let msg_count = mr
+        .u64()
+        .map_err(|d| StoreError::format(path, "messages", d))?;
+    let meta = CheckpointMeta {
+        unit_seq: schedule.done.len() as u32,
+        ..meta
+    };
+    Ok(Checkpoint {
+        path: path.to_path_buf(),
+        superstep,
+        meta,
+        n,
+        fingerprint,
+        schedule,
+        value_count,
+        values_raw: values_raw[8..].to_vec(),
+        msg_count,
+        msgs_raw: msgs_raw[8..].to_vec(),
+    })
+}
+
+/// Newest checkpoint in `dir` that validates and matches `fingerprint`;
+/// corrupt or mismatched files are skipped with a warning so one damaged
+/// checkpoint falls back to its predecessor instead of failing resume.
+pub fn latest_valid(dir: &Path, max_supersteps: u32, fingerprint: u64) -> Option<Checkpoint> {
+    for path in checkpoint_files(dir).into_iter().rev() {
+        match read_checkpoint(&path, max_supersteps) {
+            Ok(c) if c.fingerprint == fingerprint => return Some(c),
+            Ok(c) => crate::log_warn!(
+                "skipping {}: fingerprint {:#x} does not match this session ({:#x})",
+                path.display(),
+                c.fingerprint,
+                fingerprint
+            ),
+            Err(e) => crate::log_warn!("skipping corrupt checkpoint: {e}"),
+        }
+    }
+    None
+}
+
+impl Checkpoint {
+    /// Reconstruct dense engine state. Fails (field `"values"` /
+    /// `"messages"`) when the sections do not cover every vertex exactly
+    /// once or reference out-of-range ids.
+    pub fn snapshot<P: VertexProgram>(&self) -> Result<EngineSnapshot<P>, StoreError>
+    where
+        P::Value: Persist,
+        P::Msg: Persist,
+    {
+        let n = self.n as usize;
+        if self.value_count != self.n as u64 {
+            return Err(StoreError::format(
+                &self.path,
+                "values",
+                format!("{} value entries for {} vertices", self.value_count, self.n),
+            ));
+        }
+        let mut values: Vec<Option<P::Value>> = Vec::new();
+        values.resize_with(n, || None);
+        let mut halted = vec![false; n];
+        let mut r = ByteReader::new(&self.values_raw);
+        for _ in 0..self.value_count {
+            let err = |d: String| StoreError::format(&self.path, "values", d);
+            let vid = r.u32().map_err(err)?;
+            let h = r.u8().map_err(err)? != 0;
+            let v = P::Value::restore(&mut r).map_err(err)?;
+            let slot = values
+                .get_mut(vid as usize)
+                .ok_or_else(|| err(format!("vertex {vid} out of range (n = {n})")))?;
+            if slot.is_some() {
+                return Err(err(format!("vertex {vid} appears twice")));
+            }
+            *slot = Some(v);
+            halted[vid as usize] = h;
+        }
+        if !r.is_empty() {
+            return Err(StoreError::format(
+                &self.path,
+                "values",
+                format!("{} trailing bytes", r.remaining()),
+            ));
+        }
+        let values: Vec<P::Value> = values
+            .into_iter()
+            .map(|v| v.unwrap_or_default()) // every slot verified Some above
+            .collect();
+
+        let mut messages = Vec::with_capacity(self.msg_count.min(1 << 20) as usize);
+        let mut r = ByteReader::new(&self.msgs_raw);
+        for _ in 0..self.msg_count {
+            let err = |d: String| StoreError::format(&self.path, "messages", d);
+            let dst = r.u32().map_err(err)?;
+            if dst as usize >= n {
+                return Err(err(format!("destination {dst} out of range (n = {n})")));
+            }
+            let msg = P::Msg::restore(&mut r).map_err(err)?;
+            messages.push((dst, msg));
+        }
+        if !r.is_empty() {
+            return Err(StoreError::format(
+                &self.path,
+                "messages",
+                format!("{} trailing bytes", r.remaining()),
+            ));
+        }
+        Ok(EngineSnapshot {
+            superstep: self.superstep,
+            values,
+            halted,
+            messages,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("fn2v-ckpt-{}-{name}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn byte_reader_bounds_checked() {
+        let mut r = ByteReader::new(&[1, 0, 0, 0, 2]);
+        assert_eq!(r.u32().unwrap(), 1);
+        assert_eq!(r.u8().unwrap(), 2);
+        assert!(r.is_empty());
+        assert!(r.u32().is_err());
+    }
+
+    #[test]
+    fn schedule_roundtrips() {
+        let s = ScheduleState {
+            done: vec![
+                UnitId {
+                    pass: 0,
+                    er: 0,
+                    er_count: 4,
+                },
+                UnitId {
+                    pass: 0,
+                    er: 1,
+                    er_count: 4,
+                },
+            ],
+            queue: vec![(3, 4)],
+            sink_blob: Some(vec![9, 8, 7]),
+        };
+        let enc = encode_schedule(&s);
+        let got = decode_schedule(&mut ByteReader::new(&enc)).unwrap();
+        assert_eq!(got.done, s.done);
+        assert_eq!(got.queue, s.queue);
+        assert_eq!(got.sink_blob, s.sink_blob);
+    }
+
+    fn demo_parts() -> Vec<EncodedPart> {
+        // Two workers, 3 vertices total, values are u64, messages u32.
+        let mut a = EncodedPart::default();
+        for (vid, val, halted) in [(0u32, 10u64, false), (2, 30, true)] {
+            a.values.extend_from_slice(&vid.to_le_bytes());
+            a.values.push(halted as u8);
+            val.persist(&mut a.values);
+            a.value_count += 1;
+        }
+        a.msgs.extend_from_slice(&1u32.to_le_bytes());
+        77u32.persist(&mut a.msgs);
+        a.msg_count = 1;
+        let mut b = EncodedPart::default();
+        b.values.extend_from_slice(&1u32.to_le_bytes());
+        b.values.push(0);
+        20u64.persist(&mut b.values);
+        b.value_count = 1;
+        vec![a, b]
+    }
+
+    struct DemoProgram;
+    impl VertexProgram for DemoProgram {
+        type Value = u64;
+        type Msg = u32;
+        fn compute(
+            &self,
+            _ctx: &mut crate::pregel::Ctx<'_, Self>,
+            _vid: VertexId,
+            _value: &mut u64,
+            _msgs: &mut Vec<u32>,
+        ) {
+        }
+    }
+    impl crate::pregel::Message for u32 {
+        fn wire_bytes(&self) -> u64 {
+            4
+        }
+    }
+
+    #[test]
+    fn write_read_snapshot_roundtrip() {
+        let dir = tmpdir("roundtrip");
+        let mut spec = CheckpointSpec::new(&dir, 1);
+        spec.fingerprint = 0xFEED;
+        spec.meta = CheckpointMeta {
+            pass: 1,
+            round: 2,
+            rounds: 4,
+            unit_seq: 6,
+        };
+        spec.schedule = encode_schedule(&ScheduleState {
+            done: vec![UnitId {
+                pass: 0,
+                er: 0,
+                er_count: 1,
+            }],
+            queue: vec![(3, 4)],
+            sink_blob: None,
+        });
+        let path = write_checkpoint(&spec, 7, 3, demo_parts()).unwrap();
+        assert!(path.ends_with(format!("ckpt-000006-000007.{CKP_EXTENSION}")));
+
+        let c = read_checkpoint(&path, 10_000).unwrap();
+        assert_eq!(c.superstep, 7);
+        assert_eq!(c.n, 3);
+        assert_eq!(c.fingerprint, 0xFEED);
+        assert_eq!((c.meta.pass, c.meta.round, c.meta.rounds), (1, 2, 4));
+        assert_eq!(c.meta.unit_seq, 1); // derived from schedule.done
+        assert_eq!(c.schedule.queue, vec![(3, 4)]);
+
+        let snap = c.snapshot::<DemoProgram>().unwrap();
+        assert_eq!(snap.superstep, 7);
+        assert_eq!(snap.values, vec![10, 20, 30]);
+        assert_eq!(snap.halted, vec![false, false, true]);
+        assert_eq!(snap.messages, vec![(1, 77)]);
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn no_tmp_file_survives_a_write() {
+        let dir = tmpdir("atomic");
+        write_checkpoint(&CheckpointSpec::new(&dir, 1), 1, 0, vec![]).unwrap();
+        let leftovers: Vec<_> = fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.path().to_string_lossy().ends_with(".tmp"))
+            .collect();
+        assert!(leftovers.is_empty());
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn pruning_keeps_the_newest_two() {
+        let dir = tmpdir("prune");
+        let mut spec = CheckpointSpec::new(&dir, 1);
+        for seq in 0..5u32 {
+            spec.meta.unit_seq = seq;
+            write_checkpoint(&spec, seq, 0, vec![]).unwrap();
+        }
+        let files = checkpoint_files(&dir);
+        assert_eq!(files.len(), 2);
+        assert!(files[1].ends_with(format!("ckpt-000004-000004.{CKP_EXTENSION}")));
+
+        spec.keep_all = true;
+        for seq in 5..8u32 {
+            spec.meta.unit_seq = seq;
+            write_checkpoint(&spec, seq, 0, vec![]).unwrap();
+        }
+        assert_eq!(checkpoint_files(&dir).len(), 5);
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stale_superstep_is_rejected() {
+        let dir = tmpdir("stale");
+        let path = write_checkpoint(&CheckpointSpec::new(&dir, 1), 50, 0, vec![]).unwrap();
+        let err = read_checkpoint(&path, 10).unwrap_err();
+        assert_eq!(err.field(), Some("superstep"));
+        assert!(read_checkpoint(&path, 50).is_ok());
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn latest_valid_skips_corrupt_and_mismatched() {
+        let dir = tmpdir("latest");
+        let mut spec = CheckpointSpec::new(&dir, 1);
+        spec.keep_all = true;
+        spec.fingerprint = 0xA;
+        spec.meta.unit_seq = 0;
+        write_checkpoint(&spec, 1, 0, vec![]).unwrap();
+        spec.meta.unit_seq = 1;
+        let good = write_checkpoint(&spec, 2, 0, vec![]).unwrap();
+        spec.fingerprint = 0xB; // a different session's file
+        spec.meta.unit_seq = 2;
+        write_checkpoint(&spec, 3, 0, vec![]).unwrap();
+        spec.fingerprint = 0xA;
+        spec.meta.unit_seq = 3;
+        let newest = write_checkpoint(&spec, 4, 0, vec![]).unwrap();
+        // Corrupt the newest matching file: flip a payload byte.
+        let mut bytes = fs::read(&newest).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xFF;
+        fs::write(&newest, bytes).unwrap();
+
+        let c = latest_valid(&dir, 10_000, 0xA).expect("a valid checkpoint exists");
+        assert_eq!(c.path, good);
+        assert_eq!(c.superstep, 2);
+        assert!(latest_valid(&dir, 10_000, 0xC).is_none());
+        fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -36,14 +36,16 @@
 //! per-(walk, step) RNG streams; only *where* a message is processed
 //! changes, which the per-worker compute-time metrics make visible.
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Barrier, Mutex};
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 use crate::graph::partition::Partitioner;
 use crate::graph::{Graph, VertexId};
 use crate::util::fxhash::FxHashMap;
 
+use super::checkpoint::{self, CheckpointSpec, EncodedPart, EngineSnapshot, Persist};
 use super::metrics::{EngineMetrics, SuperstepMetrics};
 use super::Message;
 
@@ -118,6 +120,12 @@ pub struct EngineOpts {
     /// [`VertexProgram::supports_hot_split`] are entirely unaffected —
     /// the engine doesn't even take the extra barrier for them.
     pub hot_degree_threshold: Option<u32>,
+    /// Memory-budget policy for the *session driver*: the engine itself
+    /// always reports an overrun as [`EngineError::OutOfMemory`], but a
+    /// walk session degrades gracefully (splits the round into smaller
+    /// FN-Multi classes and retries) unless this is `true`, in which case
+    /// the overrun aborts the query — the pre-degradation behavior.
+    pub strict_memory: bool,
 }
 
 impl Default for EngineOpts {
@@ -127,6 +135,7 @@ impl Default for EngineOpts {
             memory_budget: None,
             cache_capacity: None,
             hot_degree_threshold: None,
+            strict_memory: false,
         }
     }
 }
@@ -153,6 +162,17 @@ pub enum EngineError {
     OutOfMemory { superstep: u32, bytes: u64 },
     /// `max_supersteps` reached without quiescence.
     DidNotTerminate { supersteps: u32 },
+    /// A worker thread panicked. The panic is caught at the thread
+    /// boundary, the barrier is poisoned so siblings drain cleanly, and
+    /// the payload is carried here instead of aborting the process.
+    WorkerFailed {
+        worker: usize,
+        superstep: u32,
+        payload: String,
+    },
+    /// Writing a superstep checkpoint failed persistently (after the
+    /// transient-IO retries); no partial file is left behind.
+    Checkpoint { superstep: u32, detail: String },
 }
 
 impl std::fmt::Display for EngineError {
@@ -165,6 +185,17 @@ impl std::fmt::Display for EngineError {
             ),
             EngineError::DidNotTerminate { supersteps } => {
                 write!(f, "no quiescence after {supersteps} supersteps")
+            }
+            EngineError::WorkerFailed {
+                worker,
+                superstep,
+                payload,
+            } => write!(
+                f,
+                "worker {worker} failed at superstep {superstep}: {payload}"
+            ),
+            EngineError::Checkpoint { superstep, detail } => {
+                write!(f, "checkpoint at superstep {superstep} failed: {detail}")
             }
         }
     }
@@ -415,9 +446,111 @@ impl<'a, P: VertexProgram + ?Sized> Ctx<'a, P> {
     }
 }
 
+/// Outcome of one [`PoisonBarrier::wait`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum BarrierWait {
+    /// This waiter completed the round (it plays master).
+    Leader,
+    Member,
+    /// A sibling worker panicked; stop without touching shared state.
+    Poisoned,
+}
+
+impl BarrierWait {
+    #[inline]
+    fn is_leader(self) -> bool {
+        matches!(self, BarrierWait::Leader)
+    }
+
+    #[inline]
+    fn poisoned(self) -> bool {
+        matches!(self, BarrierWait::Poisoned)
+    }
+}
+
+/// A reusable barrier that can be *poisoned*: when a worker panics, its
+/// `catch_unwind` handler poisons the barrier and every current and future
+/// wait returns [`BarrierWait::Poisoned`] immediately — siblings drain
+/// cleanly instead of deadlocking on a participant that will never arrive
+/// (`std::sync::Barrier` has no such escape hatch).
+struct PoisonBarrier {
+    lock: Mutex<BarrierState>,
+    cvar: Condvar,
+    parties: usize,
+}
+
+struct BarrierState {
+    count: usize,
+    generation: u64,
+    poisoned: bool,
+}
+
+impl PoisonBarrier {
+    fn new(parties: usize) -> Self {
+        PoisonBarrier {
+            lock: Mutex::new(BarrierState {
+                count: 0,
+                generation: 0,
+                poisoned: false,
+            }),
+            cvar: Condvar::new(),
+            parties,
+        }
+    }
+
+    fn wait(&self) -> BarrierWait {
+        let mut s = self.lock.lock().unwrap_or_else(|p| p.into_inner());
+        if s.poisoned {
+            return BarrierWait::Poisoned;
+        }
+        s.count += 1;
+        if s.count == self.parties {
+            s.count = 0;
+            s.generation += 1;
+            self.cvar.notify_all();
+            return BarrierWait::Leader;
+        }
+        let generation = s.generation;
+        while s.generation == generation && !s.poisoned {
+            s = self.cvar.wait(s).unwrap_or_else(|p| p.into_inner());
+        }
+        if s.poisoned {
+            BarrierWait::Poisoned
+        } else {
+            BarrierWait::Member
+        }
+    }
+
+    fn poison(&self) {
+        let mut s = self.lock.lock().unwrap_or_else(|p| p.into_inner());
+        s.poisoned = true;
+        self.cvar.notify_all();
+    }
+}
+
+/// Checkpoint control shared by the workers of one checkpointed run.
+struct CkptCtl<P: VertexProgram> {
+    spec: CheckpointSpec,
+    /// Monomorphic encoders captured where the `Persist` bounds hold, so
+    /// the shared worker loop needs no bounds of its own.
+    persist_value: fn(&P::Value, &mut Vec<u8>),
+    persist_msg: fn(&P::Msg, &mut Vec<u8>),
+    /// Leader-set at the decision barrier: snapshot after this superstep.
+    due: AtomicBool,
+    /// Per-worker encoded state, collected between checkpoint barriers.
+    parts: Mutex<Vec<Option<EncodedPart>>>,
+    written: AtomicU64,
+    nanos: AtomicU64,
+}
+
 /// Shared state across worker threads for one run.
 struct Shared<P: VertexProgram> {
-    barrier: Barrier,
+    barrier: PoisonBarrier,
+    /// Superstep currently in progress (workers race it upward at the top
+    /// of each iteration; only read for failure reporting).
+    cur_superstep: AtomicU32,
+    /// Superstep checkpointing; `None` for plain runs (zero extra work).
+    ckpt: Option<CkptCtl<P>>,
     /// Double-buffered inboxes, one per worker per superstep parity.
     /// Messages sent during superstep `s` land in `inboxes[(s+1) % 2]`
     /// while receivers drain `inboxes[s % 2]`, so a fast worker can never
@@ -482,6 +615,66 @@ impl<'g, P: VertexProgram> Engine<'g, P> {
     /// [`Engine::run`] against a prebuilt [`WorkerPlan`] (must have been
     /// built from this engine's partitioner over this graph's vertices).
     pub fn run_on(&self, plan: &WorkerPlan) -> Result<RunResult<P::Value>, EngineError> {
+        self.run_inner(plan, None, None)
+    }
+
+    /// [`Engine::run_on`], writing an FN2VCKP1 checkpoint every
+    /// `spec.every` supersteps (atomic temp-file + rename; see
+    /// [`super::checkpoint`]). Results are identical to a plain run.
+    pub fn run_on_checkpointed(
+        &self,
+        plan: &WorkerPlan,
+        spec: &CheckpointSpec,
+    ) -> Result<RunResult<P::Value>, EngineError>
+    where
+        P::Value: Persist,
+        P::Msg: Persist,
+    {
+        self.run_inner(plan, None, Some(self.ckpt_ctl(plan, spec)))
+    }
+
+    /// Restart from a checkpoint-reconstructed snapshot, optionally
+    /// continuing to checkpoint. Messages are re-bucketed through this
+    /// engine's partitioner, so resume works across worker counts and
+    /// partitioning schemes; results are bit-identical to the
+    /// uninterrupted run because sampling draws only from counter-based
+    /// RNG streams, never from engine state.
+    pub fn run_on_resumed(
+        &self,
+        plan: &WorkerPlan,
+        snapshot: EngineSnapshot<P>,
+        spec: Option<&CheckpointSpec>,
+    ) -> Result<RunResult<P::Value>, EngineError>
+    where
+        P::Value: Persist,
+        P::Msg: Persist,
+    {
+        let ckpt = spec.map(|s| self.ckpt_ctl(plan, s));
+        self.run_inner(plan, Some(snapshot), ckpt)
+    }
+
+    fn ckpt_ctl(&self, plan: &WorkerPlan, spec: &CheckpointSpec) -> CkptCtl<P>
+    where
+        P::Value: Persist,
+        P::Msg: Persist,
+    {
+        CkptCtl {
+            spec: spec.clone(),
+            persist_value: <P::Value as Persist>::persist,
+            persist_msg: <P::Msg as Persist>::persist,
+            due: AtomicBool::new(false),
+            parts: Mutex::new((0..plan.num_workers()).map(|_| None).collect()),
+            written: AtomicU64::new(0),
+            nanos: AtomicU64::new(0),
+        }
+    }
+
+    fn run_inner(
+        &self,
+        plan: &WorkerPlan,
+        resume: Option<EngineSnapshot<P>>,
+        ckpt: Option<CkptCtl<P>>,
+    ) -> Result<RunResult<P::Value>, EngineError> {
         let w = self.part.num_workers();
         let n = self.graph.num_vertices();
         assert_eq!(
@@ -495,9 +688,12 @@ impl<'g, P: VertexProgram> Engine<'g, P> {
             "worker plan built for a different graph"
         );
         let t_run = Instant::now();
+        let start_superstep = resume.as_ref().map_or(0, |s| s.superstep);
 
         let shared: Shared<P> = Shared {
-            barrier: Barrier::new(w),
+            barrier: PoisonBarrier::new(w),
+            cur_superstep: AtomicU32::new(start_superstep),
+            ckpt,
             inboxes: [
                 (0..w).map(|_| Mutex::new(Vec::new())).collect(),
                 (0..w).map(|_| Mutex::new(Vec::new())).collect(),
@@ -527,34 +723,112 @@ impl<'g, P: VertexProgram> Engine<'g, P> {
         let graph_bytes = self.graph.resident_bytes();
         let opts = self.opts;
 
+        // Hand each worker its start state: superstep 0 with program-
+        // initialized values for a fresh run, or the checkpoint-restored
+        // slice of the snapshot for a resumed one. In-flight messages are
+        // re-bucketed through *this* engine's partitioner, which is what
+        // makes resume independent of the original worker layout.
+        let starts: Vec<WorkerStart<P>> = match resume {
+            Some(snap) => {
+                let EngineSnapshot {
+                    superstep,
+                    values,
+                    halted,
+                    messages,
+                } = snap;
+                assert_eq!(values.len(), n, "snapshot built for a different graph");
+                let parity = (superstep % 2) as usize;
+                for (dst, msg) in messages {
+                    let dw = self.part.worker_of(dst);
+                    shared.inboxes[parity][dw].lock().unwrap().push((dst, msg));
+                }
+                let mut dense = values;
+                (0..w)
+                    .map(|me| WorkerStart {
+                        superstep,
+                        values: Some(
+                            plan.vertices(me)
+                                .iter()
+                                .map(|&v| std::mem::take(&mut dense[v as usize]))
+                                .collect(),
+                        ),
+                        halted: Some(
+                            plan.vertices(me)
+                                .iter()
+                                .map(|&v| halted[v as usize])
+                                .collect(),
+                        ),
+                    })
+                    .collect()
+            }
+            None => (0..w)
+                .map(|_| WorkerStart {
+                    superstep: 0,
+                    values: None,
+                    halted: None,
+                })
+                .collect(),
+        };
+
         let worker_outputs: Vec<Vec<P::Value>> = std::thread::scope(|scope| {
             let shared = &shared;
             let mut handles = Vec::with_capacity(w);
-            for me in 0..w {
+            for (me, start) in starts.into_iter().enumerate() {
                 let program = &self.program;
                 let graph = self.graph;
                 let part = &self.part;
                 let my_vertices = plan.vertices(me);
                 handles.push(scope.spawn(move || {
-                    worker_loop::<P>(
-                        me,
-                        graph,
-                        part,
-                        my_vertices,
-                        program,
-                        shared,
-                        opts,
-                        graph_bytes,
-                    )
+                    // A panic inside `compute` (or the engine itself) must
+                    // not take the process down or deadlock the siblings:
+                    // catch it, record a typed error, poison the barrier so
+                    // every other worker drains out cleanly.
+                    let run = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                        worker_loop::<P>(
+                            me,
+                            graph,
+                            part,
+                            my_vertices,
+                            program,
+                            shared,
+                            opts,
+                            graph_bytes,
+                            start,
+                        )
+                    }));
+                    run.unwrap_or_else(|payload| {
+                        let superstep = shared.cur_superstep.load(Ordering::Relaxed);
+                        let mut err =
+                            shared.error.lock().unwrap_or_else(|p| p.into_inner());
+                        if err.is_none() {
+                            *err = Some(EngineError::WorkerFailed {
+                                worker: me,
+                                superstep,
+                                payload: panic_payload(payload),
+                            });
+                        }
+                        drop(err);
+                        shared.stop.store(true, Ordering::Relaxed);
+                        shared.barrier.poison();
+                        Vec::new()
+                    })
                 }));
             }
+            // The closure above never panics (worker_loop panics are caught
+            // inside it), so a join error is impossible; default keeps the
+            // error path allocation-free.
             handles
                 .into_iter()
-                .map(|h| h.join().expect("worker thread panicked"))
+                .map(|h| h.join().unwrap_or_default())
                 .collect()
         });
 
-        if let Some(err) = shared.error.lock().unwrap().take() {
+        if let Some(err) = shared
+            .error
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .take()
+        {
             return Err(err);
         }
 
@@ -572,6 +846,13 @@ impl<'g, P: VertexProgram> Engine<'g, P> {
         // was reset by the leader, so recompute from the assembled values).
         let final_value_bytes: u64 = values.iter().map(|v| self.program.value_bytes(v)).sum();
         let base_bytes = graph_bytes + final_value_bytes;
+        let (checkpoints_written, checkpoint_secs) = match &shared.ckpt {
+            Some(c) => (
+                c.written.load(Ordering::Relaxed),
+                c.nanos.load(Ordering::Relaxed) as f64 * 1e-9,
+            ),
+            None => (0, 0.0),
+        };
         Ok(RunResult {
             values,
             metrics: EngineMetrics {
@@ -579,8 +860,30 @@ impl<'g, P: VertexProgram> Engine<'g, P> {
                 base_bytes,
                 wall_secs: t_run.elapsed().as_secs_f64(),
                 peak_bytes: shared.peak_bytes.load(Ordering::Relaxed),
+                checkpoints_written,
+                checkpoint_secs,
             },
         })
+    }
+}
+
+/// Per-worker start state for [`worker_loop`]: superstep 0 with
+/// program-initialized values for a fresh run, or checkpoint-restored
+/// state (in `my_vertices` order) for a resumed one.
+struct WorkerStart<P: VertexProgram> {
+    superstep: u32,
+    values: Option<Vec<P::Value>>,
+    halted: Option<Vec<bool>>,
+}
+
+/// Render a caught panic payload for [`EngineError::WorkerFailed`].
+fn panic_payload(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
     }
 }
 
@@ -637,6 +940,7 @@ fn worker_loop<P: VertexProgram>(
     shared: &Shared<P>,
     opts: EngineOpts,
     graph_bytes: u64,
+    start: WorkerStart<P>,
 ) -> Vec<P::Value> {
     // Hot splitting is pointless on a single worker or for a program that
     // never opts in; the decision must be uniform across workers (it adds
@@ -646,11 +950,16 @@ fn worker_loop<P: VertexProgram>(
         Some(t) if part.num_workers() > 1 && program.supports_hot_split() => Some(t),
         _ => None,
     };
-    let mut values: Vec<P::Value> = my_vertices
-        .iter()
-        .map(|&v| program.init_value(v))
-        .collect();
-    let mut halted = vec![false; my_vertices.len()];
+    let mut values: Vec<P::Value> = start.values.unwrap_or_else(|| {
+        my_vertices
+            .iter()
+            .map(|&v| program.init_value(v))
+            .collect()
+    });
+    debug_assert_eq!(values.len(), my_vertices.len());
+    let mut halted = start
+        .halted
+        .unwrap_or_else(|| vec![false; my_vertices.len()]);
     let mut cache = WorkerCache::new(opts.cache_capacity);
     let mut out: Vec<Vec<(VertexId, P::Msg)>> = (0..part.num_workers())
         .map(|_| Vec::new())
@@ -660,10 +969,14 @@ fn worker_loop<P: VertexProgram>(
     // its capacity), so steady-state delivery allocates nothing.
     let mut vertex_msgs: Vec<Vec<P::Msg>> = Vec::new();
     vertex_msgs.resize_with(my_vertices.len(), Vec::new);
-    let mut superstep: u32 = 0;
+    let mut superstep: u32 = start.superstep;
     let mut step_start = Instant::now();
 
     loop {
+        // Published so the panic handler in `run_inner` can report where a
+        // worker died; fetch_max because workers race past the barrier.
+        shared.cur_superstep.fetch_max(superstep, Ordering::Relaxed);
+        crate::util::failpoints::maybe_panic("engine.superstep");
         // ---- message delivery: bucket my inbox by local dense index. ----
         // A single O(msgs) counting/bucket pass replaces the former global
         // `sort_unstable_by_key` over the whole inbox (O(msgs log msgs)
@@ -732,7 +1045,9 @@ fn worker_loop<P: VertexProgram>(
         if hot_threshold.is_some() {
             // Barrier: every worker has finished enqueueing before anyone
             // steals, so the queue length only decreases from here on.
-            shared.barrier.wait();
+            if shared.barrier.wait().poisoned() {
+                return values;
+            }
             let t_steal = Instant::now();
             loop {
                 let task = shared.hot_queue.lock().unwrap().pop();
@@ -791,7 +1106,11 @@ fn worker_loop<P: VertexProgram>(
         shared.value_bytes.fetch_add(vbytes, Ordering::Relaxed);
 
         // ---- barrier: leader plays master ----
-        if shared.barrier.wait().is_leader() {
+        let wait = shared.barrier.wait();
+        if wait.poisoned() {
+            return values;
+        }
+        if wait.is_leader() {
             let msg_mem = shared.bytes_local.load(Ordering::Relaxed)
                 + shared.bytes_remote.load(Ordering::Relaxed);
             let cache_total = shared.cache_bytes.load(Ordering::Relaxed);
@@ -826,22 +1145,33 @@ fn worker_loop<P: VertexProgram>(
             shared.peak_bytes.fetch_max(current, Ordering::Relaxed);
 
             // Termination / error decisions.
+            let mut stopping = false;
             if let Some(budget) = opts.memory_budget {
                 if current > budget {
                     *shared.error.lock().unwrap() = Some(EngineError::OutOfMemory {
                         superstep,
                         bytes: current,
                     });
-                    shared.stop.store(true, Ordering::Relaxed);
+                    stopping = true;
                 }
             }
             if total_msgs == 0 && not_halted == 0 {
-                shared.stop.store(true, Ordering::Relaxed);
+                stopping = true;
             } else if superstep + 1 >= opts.max_supersteps {
                 *shared.error.lock().unwrap() = Some(EngineError::DidNotTerminate {
                     supersteps: superstep + 1,
                 });
+                stopping = true;
+            }
+            if stopping {
                 shared.stop.store(true, Ordering::Relaxed);
+            } else if let Some(ckpt) = shared.ckpt.as_ref() {
+                // Checkpoint cadence: after superstep boundaries where one
+                // more superstep will actually run. `superstep + 1` is the
+                // superstep a resume would execute next.
+                if (superstep + 1) % ckpt.spec.every.max(1) == 0 {
+                    ckpt.due.store(true, Ordering::Relaxed);
+                }
             }
 
             // Reset per-step accumulators.
@@ -856,10 +1186,82 @@ fn worker_loop<P: VertexProgram>(
             shared.hot_tasks.store(0, Ordering::Relaxed);
         }
         // Second barrier: everyone observes the leader's decision.
-        shared.barrier.wait();
+        if shared.barrier.wait().poisoned() {
+            return values;
+        }
         if shared.stop.load(Ordering::Relaxed) {
             break;
         }
+
+        // ---- checkpoint phase (only on supersteps the leader marked) ----
+        // Two extra barriers, paid only on checkpoint supersteps: one so
+        // every worker's encoded part is in place before the leader
+        // assembles, one so the leader's write outcome is visible to all.
+        if let Some(ckpt) = shared.ckpt.as_ref() {
+            if ckpt.due.load(Ordering::Relaxed) {
+                let mut enc = EncodedPart::default();
+                for (li, &vid) in my_vertices.iter().enumerate() {
+                    enc.values.extend_from_slice(&vid.to_le_bytes());
+                    enc.values.push(u8::from(halted[li]));
+                    (ckpt.persist_value)(&values[li], &mut enc.values);
+                }
+                enc.value_count = my_vertices.len() as u64;
+                {
+                    // The *next*-parity inbox holds exactly the in-flight
+                    // messages the resumed superstep will deliver.
+                    let inbox = shared.inboxes[1 - parity][me].lock().unwrap();
+                    enc.msg_count = inbox.len() as u64;
+                    for (dst, msg) in inbox.iter() {
+                        enc.msgs.extend_from_slice(&dst.to_le_bytes());
+                        (ckpt.persist_msg)(msg, &mut enc.msgs);
+                    }
+                }
+                ckpt.parts.lock().unwrap()[me] = Some(enc);
+                let wait = shared.barrier.wait();
+                if wait.poisoned() {
+                    return values;
+                }
+                if wait.is_leader() {
+                    let parts: Vec<EncodedPart> = {
+                        let mut slots = ckpt.parts.lock().unwrap();
+                        slots.iter_mut().map(|s| s.take().unwrap_or_default()).collect()
+                    };
+                    let t_ckpt = Instant::now();
+                    let written = checkpoint::write_checkpoint(
+                        &ckpt.spec,
+                        superstep + 1,
+                        graph.num_vertices() as u32,
+                        parts,
+                    );
+                    match written {
+                        Ok(_) => {
+                            ckpt.written.fetch_add(1, Ordering::Relaxed);
+                            let nanos = t_ckpt.elapsed().as_nanos() as u64;
+                            ckpt.nanos.fetch_add(nanos, Ordering::Relaxed);
+                        }
+                        Err(e) => {
+                            let mut err = shared.error.lock().unwrap();
+                            if err.is_none() {
+                                *err = Some(EngineError::Checkpoint {
+                                    superstep,
+                                    detail: e.to_string(),
+                                });
+                            }
+                            drop(err);
+                            shared.stop.store(true, Ordering::Relaxed);
+                        }
+                    }
+                    ckpt.due.store(false, Ordering::Relaxed);
+                }
+                if shared.barrier.wait().poisoned() {
+                    return values;
+                }
+                if shared.stop.load(Ordering::Relaxed) {
+                    break;
+                }
+            }
+        }
+
         superstep += 1;
         step_start = Instant::now();
     }
@@ -1421,5 +1823,129 @@ mod tests {
             };
             assert_eq!(run(w1), run(w2));
         });
+    }
+
+    impl Persist for IdMsg {
+        fn persist(&self, out: &mut Vec<u8>) {
+            self.0.persist(out);
+        }
+        fn restore(r: &mut checkpoint::ByteReader<'_>) -> Result<Self, String> {
+            Ok(IdMsg(u64::restore(r)?))
+        }
+    }
+
+    /// Panics at one (superstep, vertex); otherwise behaves like SumIds.
+    struct PanicAt {
+        at: u32,
+    }
+    impl VertexProgram for PanicAt {
+        type Value = u64;
+        type Msg = IdMsg;
+
+        fn compute(
+            &self,
+            ctx: &mut Ctx<'_, Self>,
+            vid: VertexId,
+            _value: &mut u64,
+            _msgs: &mut Vec<IdMsg>,
+        ) {
+            assert!(
+                ctx.superstep() != self.at || vid != 0,
+                "boom at superstep {}",
+                self.at
+            );
+            if ctx.superstep() < self.at + 4 {
+                for &nb in ctx.neighbors() {
+                    ctx.send(nb, IdMsg(1));
+                }
+            } else {
+                ctx.vote_to_halt();
+            }
+        }
+    }
+
+    #[test]
+    fn worker_panic_surfaces_as_typed_error() {
+        let g = er_graph(&GenConfig::new(120, 5, 17));
+        for workers in [1usize, 4] {
+            let eng = Engine::new(
+                &g,
+                Partitioner::hash(workers),
+                PanicAt { at: 2 },
+                EngineOpts::default(),
+            );
+            match eng.run() {
+                Err(EngineError::WorkerFailed {
+                    superstep, payload, ..
+                }) => {
+                    assert_eq!(superstep, 2, "workers={workers}");
+                    assert!(payload.contains("boom"), "payload: {payload}");
+                }
+                other => panic!(
+                    "workers={workers}: expected WorkerFailed, got {:?}",
+                    other.err()
+                ),
+            }
+        }
+    }
+
+    fn engine_tmpdir(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("fn2v-eng-{}-{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn checkpointed_run_matches_plain_and_every_checkpoint_resumes() {
+        let g = er_graph(&GenConfig::new(150, 6, 11));
+        let dir = engine_tmpdir("resume");
+        let part = Partitioner::hash(3);
+        let plan = WorkerPlan::new(&part, g.num_vertices());
+        let eng = Engine::new(&g, part, SumIds { rounds: 5 }, EngineOpts::default());
+        let plain = eng.run_on(&plan).unwrap();
+
+        let mut spec = checkpoint::CheckpointSpec::new(dir.clone(), 1);
+        spec.keep_all = true;
+        spec.fingerprint = 42;
+        let ckpt_run = eng.run_on_checkpointed(&plan, &spec).unwrap();
+        assert_eq!(ckpt_run.values, plain.values, "checkpointing changed results");
+        assert!(ckpt_run.metrics.checkpoints_written >= 4);
+
+        let files = checkpoint::checkpoint_files(&dir);
+        assert_eq!(files.len() as u64, ckpt_run.metrics.checkpoints_written);
+        for file in &files {
+            let ckpt = checkpoint::read_checkpoint(file, 10_000).unwrap();
+            assert_eq!(ckpt.fingerprint, 42);
+            let snap = ckpt.snapshot::<SumIds>().unwrap();
+            // Resume on a *different* worker layout: messages re-bucket.
+            let part2 = Partitioner::range(2, g.num_vertices());
+            let plan2 = WorkerPlan::new(&part2, g.num_vertices());
+            let eng2 = Engine::new(&g, part2, SumIds { rounds: 5 }, EngineOpts::default());
+            let resumed = eng2.run_on_resumed(&plan2, snap, None).unwrap();
+            assert_eq!(
+                resumed.values,
+                plain.values,
+                "resume from {} diverged",
+                file.display()
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn checkpoint_to_unwritable_dir_is_a_typed_error() {
+        let g = path_graph(6);
+        let part = Partitioner::hash(2);
+        let plan = WorkerPlan::new(&part, g.num_vertices());
+        let eng = Engine::new(&g, part, SumIds { rounds: 4 }, EngineOpts::default());
+        // A regular *file* where the checkpoint dir should be.
+        let dir = engine_tmpdir("baddir");
+        std::fs::write(&dir, b"not a directory").unwrap();
+        let spec = checkpoint::CheckpointSpec::new(dir.clone(), 1);
+        match eng.run_on_checkpointed(&plan, &spec) {
+            Err(EngineError::Checkpoint { .. }) => {}
+            other => panic!("expected Checkpoint error, got {:?}", other.err()),
+        }
+        let _ = std::fs::remove_file(&dir);
     }
 }

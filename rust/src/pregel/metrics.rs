@@ -69,6 +69,11 @@ pub struct EngineMetrics {
     pub wall_secs: f64,
     /// Peak of (base + messages + cache) over the run.
     pub peak_bytes: u64,
+    /// Superstep checkpoints durably written (0 for plain runs).
+    pub checkpoints_written: u64,
+    /// Wall time spent assembling + writing checkpoints (leader-side;
+    /// the run pays it inside the checkpoint barriers).
+    pub checkpoint_secs: f64,
 }
 
 impl EngineMetrics {
@@ -176,6 +181,7 @@ mod tests {
             base_bytes: 100,
             wall_secs: 0.0,
             peak_bytes: 141,
+            ..Default::default()
         };
         assert_eq!(m.total_messages(), 7);
         assert_eq!(m.total_remote_bytes(), 26);

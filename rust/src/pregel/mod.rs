@@ -20,9 +20,13 @@
 //! - a per-worker global cache for remote adjacency
 //!   ([`Ctx::cache_get`] / [`Ctx::cache_put`], used by FN-Cache).
 
+pub mod checkpoint;
 mod engine;
 mod metrics;
 
+pub use checkpoint::{
+    Checkpoint, CheckpointMeta, CheckpointSpec, EngineSnapshot, Persist, ScheduleState, UnitId,
+};
 pub use engine::{Ctx, Engine, EngineError, EngineOpts, RunResult, VertexProgram, WorkerPlan};
 pub use metrics::{EngineMetrics, SuperstepMetrics};
 

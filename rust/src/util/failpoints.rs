@@ -1,0 +1,311 @@
+//! Deterministic fault injection for the crash-safety test harness.
+//!
+//! A *failpoint* is a named site on an I/O or engine path where a fault
+//! can be injected on demand: [`check`] returns an injected `io::Error`
+//! when the site is armed, [`maybe_panic`] panics (simulating a worker
+//! crash at a superstep boundary). Sites are compiled to no-ops unless the
+//! `failpoints` cargo feature is on — the registry, the per-site counters
+//! and the branch in `check` all vanish, so production binaries pay
+//! nothing for the hooks threaded through the engine, checkpoint, sink,
+//! and mmap paths.
+//!
+//! Injection is deterministic, not random: a site is armed to fire on its
+//! n-th upcoming hit ([`arm`] / [`arm_fatal`]), or every registered I/O
+//! site is armed from a single seed ([`arm_all_from_seed`]) for sweep
+//! runs. The fault-injection suite in `tests/recovery.rs` trips every
+//! entry of [`SITES`] and asserts the documented contract: a *transient*
+//! fault (`ErrorKind::Interrupted`) is absorbed by [`retry_io`]'s capped
+//! exponential backoff and the run succeeds; a *fatal* fault surfaces as
+//! a typed error with no partial artifacts left on disk.
+
+use std::io;
+use std::time::Duration;
+
+/// What a tripped site does.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SiteKind {
+    /// [`check`] returns an injected `io::Error` (transient or fatal,
+    /// chosen at arm time).
+    Io,
+    /// [`maybe_panic`] panics — simulates a worker crash.
+    Panic,
+}
+
+/// A registered injection site.
+#[derive(Clone, Copy, Debug)]
+pub struct Site {
+    pub name: &'static str,
+    pub kind: SiteKind,
+}
+
+/// The full failpoint catalog (also documented in EXPERIMENTS.md
+/// §Robustness). The CI fault-injection job sweeps every entry.
+pub const SITES: &[Site] = &[
+    // A worker panics at the start of a superstep's compute phase — the
+    // path that must surface as `EngineError::WorkerFailed`, never as a
+    // process abort.
+    Site { name: "engine.superstep", kind: SiteKind::Panic },
+    // Checkpoint temp-file I/O: body write, fsync, atomic rename.
+    Site { name: "checkpoint.write", kind: SiteKind::Io },
+    Site { name: "checkpoint.sync", kind: SiteKind::Io },
+    Site { name: "checkpoint.rename", kind: SiteKind::Io },
+    // StreamingFileSink: temp-file creation, per-round flush, the
+    // finish-time fsync+rename pair.
+    Site { name: "sink.create", kind: SiteKind::Io },
+    Site { name: "sink.flush", kind: SiteKind::Io },
+    Site { name: "sink.rename", kind: SiteKind::Io },
+    // Graph open paths: the mmap(2) syscall and the chunked section
+    // decode loop shared by the v1/v2 owned readers.
+    Site { name: "mmap.open", kind: SiteKind::Io },
+    Site { name: "io.read-chunk", kind: SiteKind::Io },
+];
+
+/// Severity of an injected I/O fault.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// `ErrorKind::Interrupted` — [`retry_io`] callers must recover.
+    Transient,
+    /// `ErrorKind::Other` — must surface as a typed error.
+    Fatal,
+}
+
+impl Fault {
+    fn to_error(self, site: &str) -> io::Error {
+        match self {
+            Fault::Transient => io::Error::new(
+                io::ErrorKind::Interrupted,
+                format!("injected transient fault at failpoint `{site}`"),
+            ),
+            Fault::Fatal => io::Error::other(format!("injected fatal fault at failpoint `{site}`")),
+        }
+    }
+}
+
+/// Hit this site: `Err` exactly when the site is armed and this is its
+/// n-th hit. Free (always `Ok`) without the `failpoints` feature.
+#[inline]
+pub fn check(site: &'static str) -> io::Result<()> {
+    #[cfg(feature = "failpoints")]
+    {
+        if let Some(fault) = registry::hit(site) {
+            return Err(fault.to_error(site));
+        }
+    }
+    #[cfg(not(feature = "failpoints"))]
+    let _ = site;
+    Ok(())
+}
+
+/// Hit a [`SiteKind::Panic`] site: panics when armed and due, otherwise a
+/// no-op. Free without the `failpoints` feature.
+#[inline]
+pub fn maybe_panic(site: &'static str) {
+    #[cfg(feature = "failpoints")]
+    {
+        if registry::hit(site).is_some() {
+            panic!("failpoint `{site}` tripped");
+        }
+    }
+    #[cfg(not(feature = "failpoints"))]
+    let _ = site;
+}
+
+/// Maximum attempts of [`retry_io`] (first try + retries).
+pub const RETRY_ATTEMPTS: u32 = 4;
+
+/// Run `op`, retrying transient failures (`Interrupted` — e.g. EINTR —
+/// `WouldBlock`, `TimedOut`) with capped exponential backoff: 1 ms
+/// doubling to a 50 ms cap, [`RETRY_ATTEMPTS`] attempts total. The
+/// failpoint `site` is checked before every attempt, so an injected
+/// transient fault exercises exactly this recovery path. Non-transient
+/// errors propagate immediately.
+pub fn retry_io<T>(site: &'static str, mut op: impl FnMut() -> io::Result<T>) -> io::Result<T> {
+    let mut delay_ms = 1u64;
+    let mut last = None;
+    for attempt in 0..RETRY_ATTEMPTS {
+        match check(site).and_then(|()| op()) {
+            Ok(v) => return Ok(v),
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    io::ErrorKind::Interrupted
+                        | io::ErrorKind::WouldBlock
+                        | io::ErrorKind::TimedOut
+                ) =>
+            {
+                if attempt + 1 < RETRY_ATTEMPTS {
+                    std::thread::sleep(Duration::from_millis(delay_ms));
+                    delay_ms = (delay_ms * 2).min(50);
+                }
+                last = Some(e);
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Err(last.expect("loop ran at least once"))
+}
+
+#[cfg(feature = "failpoints")]
+pub use registry::{arm, arm_all_from_seed, arm_fatal, clear_all, hits};
+
+#[cfg(feature = "failpoints")]
+mod registry {
+    use super::{Fault, SiteKind, SITES};
+    use std::collections::HashMap;
+    use std::sync::{Mutex, MutexGuard, OnceLock};
+
+    struct Armed {
+        /// Hits to let pass before firing.
+        skip: u64,
+        fault: Fault,
+    }
+
+    #[derive(Default)]
+    struct State {
+        armed: HashMap<&'static str, Armed>,
+        hits: HashMap<&'static str, u64>,
+    }
+
+    fn state() -> MutexGuard<'static, State> {
+        static STATE: OnceLock<Mutex<State>> = OnceLock::new();
+        STATE
+            .get_or_init(|| Mutex::new(State::default()))
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Record a hit; `Some(fault)` when the site fires (one-shot: firing
+    /// disarms the site, keeping sweeps deterministic).
+    pub(super) fn hit(site: &'static str) -> Option<Fault> {
+        let mut s = state();
+        *s.hits.entry(site).or_insert(0) += 1;
+        let armed = s.armed.get_mut(site)?;
+        if armed.skip > 0 {
+            armed.skip -= 1;
+            return None;
+        }
+        let fault = armed.fault;
+        s.armed.remove(site);
+        Some(fault)
+    }
+
+    /// Arm `site` to inject a transient fault on its `nth` upcoming hit
+    /// (0 = next hit), firing once then disarming.
+    pub fn arm(site: &'static str, nth: u64) {
+        state().armed.insert(
+            site,
+            Armed {
+                skip: nth,
+                fault: Fault::Transient,
+            },
+        );
+    }
+
+    /// As [`arm`], but the injected fault is fatal (non-retryable).
+    pub fn arm_fatal(site: &'static str, nth: u64) {
+        state().armed.insert(
+            site,
+            Armed {
+                skip: nth,
+                fault: Fault::Fatal,
+            },
+        );
+    }
+
+    /// Seed-driven sweep arming: every registered I/O site gets a
+    /// transient fault at a seed-derived hit index in `[0, 3)`. The same
+    /// seed always arms the same schedule.
+    pub fn arm_all_from_seed(seed: u64) {
+        for (i, site) in SITES.iter().enumerate() {
+            if site.kind == SiteKind::Io {
+                let nth = crate::util::rng::stream(seed, i as u64, 0, 0xFA11).next_bounded(3);
+                arm(site.name, nth);
+            }
+        }
+    }
+
+    /// Total hits a site has seen (armed or not) — the sweep harness uses
+    /// this to prove a site was actually exercised.
+    pub fn hits(site: &'static str) -> u64 {
+        state().hits.get(site).copied().unwrap_or(0)
+    }
+
+    /// Disarm everything and zero the hit counters.
+    pub fn clear_all() {
+        let mut s = state();
+        s.armed.clear();
+        s.hits.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU32, Ordering};
+
+    #[test]
+    fn retry_io_passes_through_success_and_fatal_errors() {
+        assert_eq!(retry_io("sink.flush", || Ok(7)).unwrap(), 7);
+        let err = retry_io("sink.flush", || {
+            Err::<(), _>(io::Error::other("hard failure"))
+        })
+        .unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::Other);
+    }
+
+    #[test]
+    fn retry_io_recovers_from_transient_errors() {
+        let calls = AtomicU32::new(0);
+        let out = retry_io("sink.flush", || {
+            if calls.fetch_add(1, Ordering::SeqCst) < 2 {
+                Err(io::Error::new(io::ErrorKind::Interrupted, "eintr"))
+            } else {
+                Ok(42)
+            }
+        })
+        .unwrap();
+        assert_eq!(out, 42);
+        assert_eq!(calls.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn retry_io_gives_up_after_capped_attempts() {
+        let calls = AtomicU32::new(0);
+        let err = retry_io("sink.flush", || {
+            calls.fetch_add(1, Ordering::SeqCst);
+            Err::<(), _>(io::Error::new(io::ErrorKind::Interrupted, "eintr forever"))
+        })
+        .unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::Interrupted);
+        assert_eq!(calls.load(Ordering::SeqCst), RETRY_ATTEMPTS);
+    }
+
+    #[test]
+    fn disabled_checks_are_noops() {
+        // Without the feature these are identities; with it, nothing is
+        // armed in this test, so they are still no-ops.
+        for site in SITES {
+            match site.kind {
+                SiteKind::Io => assert!(check(site.name).is_ok()),
+                SiteKind::Panic => maybe_panic(site.name),
+            }
+        }
+    }
+
+    #[cfg(feature = "failpoints")]
+    #[test]
+    fn armed_sites_fire_once_at_the_requested_hit() {
+        clear_all();
+        arm("sink.create", 2);
+        assert!(check("sink.create").is_ok());
+        assert!(check("sink.create").is_ok());
+        let err = check("sink.create").unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::Interrupted);
+        // One-shot: disarmed after firing.
+        assert!(check("sink.create").is_ok());
+        assert_eq!(hits("sink.create"), 4);
+        arm_fatal("sink.create", 0);
+        assert_eq!(check("sink.create").unwrap_err().kind(), io::ErrorKind::Other);
+        clear_all();
+    }
+}

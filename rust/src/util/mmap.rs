@@ -16,6 +16,7 @@
 //! headroom serve walks (ROADMAP: billion-edge graphs on mid-sized
 //! machines).
 
+use crate::util::failpoints;
 use std::fs::File;
 use std::io;
 
@@ -52,7 +53,10 @@ impl Mmap {
 
     /// Map the whole of `file` read-only. Fails on unsupported targets
     /// (see [`Mmap::supported`]), on zero-length files (`mmap` rejects
-    /// empty ranges), or when the syscall itself fails.
+    /// empty ranges), or when the syscall itself fails. A syscall that
+    /// fails with `EINTR` (or an injected transient fault at the
+    /// `mmap.open` failpoint) is retried with capped backoff before the
+    /// error is surfaced, wrapped with syscall context.
     pub fn map(file: &File) -> io::Result<Mmap> {
         let len = file.metadata()?.len();
         if len == 0 {
@@ -67,7 +71,8 @@ impl Mmap {
                 "file too large for the address space",
             ));
         }
-        sys::map(file, len as usize)
+        let ctx = |e: io::Error| io::Error::new(e.kind(), format!("mmap of {len}-byte file: {e}"));
+        failpoints::retry_io("mmap.open", || sys::map(file, len as usize)).map_err(ctx)
     }
 
     /// Base pointer of the mapping.
@@ -202,6 +207,22 @@ mod tests {
     fn empty_file_is_rejected() {
         let p = tmp_file("empty", b"");
         assert!(Mmap::map(&File::open(&p).unwrap()).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[cfg(feature = "failpoints")]
+    #[test]
+    fn transient_mmap_fault_is_retried() {
+        if !Mmap::supported() {
+            eprintln!("skipping: mmap unsupported on this target");
+            return;
+        }
+        // Transient arming is safe under concurrent tests: any other
+        // mapping that hits the armed site recovers via the same retry.
+        failpoints::arm("mmap.open", 0);
+        let p = tmp_file("retry", b"abc");
+        let m = Mmap::map(&File::open(&p).unwrap()).unwrap();
+        assert_eq!(m.as_slice(), b"abc");
         std::fs::remove_file(&p).ok();
     }
 

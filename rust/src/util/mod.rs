@@ -11,6 +11,7 @@ pub mod alias;
 pub mod benchkit;
 pub mod cli;
 pub mod error;
+pub mod failpoints;
 pub mod fxhash;
 pub mod logging;
 pub mod memstat;

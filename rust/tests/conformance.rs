@@ -332,9 +332,11 @@ fn hub_graph_hot_split_engages_and_preserves_walks() {
 
 /// Regression test for the engine's `memory_budget` abort path
 /// (`EngineError::OutOfMemory`): a skewed RMAT run under a tight budget
-/// must abort cleanly, and FN-Multi (`rounds > 1`) — whose whole point is
-/// dividing peak message memory — must complete under the same budget and
-/// produce the same walks.
+/// must abort cleanly in strict mode, FN-Multi (`rounds > 1`) — whose
+/// whole point is dividing peak message memory — must complete under the
+/// same budget and produce the same walks, and the default (non-strict)
+/// policy must degrade to round splitting instead of aborting, with walks
+/// unchanged.
 #[test]
 fn memory_budget_aborts_cleanly_and_fn_multi_completes() {
     let g = skew_graph(&GenConfig::new(1200, 20, 9), 4.0);
@@ -353,12 +355,13 @@ fn memory_budget_aborts_cleanly_and_fn_multi_completes() {
         "FN-Multi did not reduce peak bytes: {peak1} -> {peak8}"
     );
     let budget = peak8 + (peak1 - peak8) / 2;
-    let opts = EngineOpts {
+    let strict = EngineOpts {
         memory_budget: Some(budget),
+        strict_memory: true,
         ..Default::default()
     };
 
-    match run_walks(&g, part(), &cfg, opts, 1) {
+    match run_walks(&g, part(), &cfg, strict, 1) {
         Err(EngineError::OutOfMemory { bytes, .. }) => {
             assert!(bytes > budget, "OOM reported {bytes} <= budget {budget}")
         }
@@ -366,7 +369,18 @@ fn memory_budget_aborts_cleanly_and_fn_multi_completes() {
         Ok(_) => panic!("rounds=1 run must exceed the {budget}-byte budget"),
     }
 
-    let survived = run_walks(&g, part(), &cfg, opts, 8)
+    let survived = run_walks(&g, part(), &cfg, strict, 8)
         .expect("FN-Multi must complete under the same budget");
     assert_eq!(survived.walks, full.walks, "budgeted FN-Multi changed walks");
+
+    // Default policy: the same over-budget single-round request degrades
+    // to round splitting (with a warning) instead of aborting, and the
+    // split run samples exactly the same walks.
+    let lenient = EngineOpts {
+        memory_budget: Some(budget),
+        ..Default::default()
+    };
+    let degraded = run_walks(&g, part(), &cfg, lenient, 1)
+        .expect("non-strict run must degrade to round splitting and complete");
+    assert_eq!(degraded.walks, full.walks, "degraded run changed walks");
 }

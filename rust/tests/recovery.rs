@@ -1,0 +1,615 @@
+//! Crash-safety suite: superstep checkpointing, deterministic resume, the
+//! corrupt-checkpoint matrix, memory-budget degradation, and (under
+//! `--features failpoints`) the fault-injection sweep over every
+//! registered site.
+//!
+//! The resume contract: a run interrupted at *any* checkpoint and resumed
+//! — even on a different worker count or partitioner — produces walks
+//! (and embeddings, via `TrainerSink`) bit-identical to the uninterrupted
+//! run. The fault contract: transient I/O faults are absorbed by capped
+//! retries; fatal faults surface as typed errors with no partial
+//! artifacts on disk; a worker panic surfaces as
+//! `EngineError::WorkerFailed`, never as a process abort.
+//!
+//! CI runs this file single-threaded under the `failpoints` feature (the
+//! injection registry is process-global; see .github/workflows/ci.yml).
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use fastn2v::embed::{RustSgns, TrainConfig, TrainerSink};
+use fastn2v::gen::{skew_graph, GenConfig};
+use fastn2v::graph::{Graph, VertexId};
+use fastn2v::node2vec::{
+    CheckpointCfg, CollectSink, FnConfig, PartitionerKind, RoundStats, Variant, WalkRequest,
+    WalkSession, WalkSink,
+};
+use fastn2v::pregel::checkpoint::{checkpoint_files, read_checkpoint};
+use fastn2v::pregel::{EngineError, EngineOpts};
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("fn2v-recovery-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn test_graph() -> Arc<Graph> {
+    Arc::new(skew_graph(&GenConfig::new(512, 12, 29), 3.0))
+}
+
+fn base_cfg() -> FnConfig {
+    FnConfig::new(0.5, 2.0, 71)
+        .with_walk_length(6)
+        .with_popular_threshold(24)
+}
+
+fn session(g: &Arc<Graph>, cfg: FnConfig, workers: usize) -> WalkSession {
+    WalkSession::builder(g.clone(), cfg).workers(workers).build()
+}
+
+/// Checkpoint config retaining every file (the tests pick arbitrary
+/// restart points from the full history).
+fn ckpt_cfg(dir: &Path, every: u32) -> CheckpointCfg {
+    let mut c = CheckpointCfg::new(dir, every);
+    c.keep_all = true;
+    c
+}
+
+/// A resume config that never writes new checkpoints, so resumed runs are
+/// compared on their walk output alone.
+fn resume_cfg(dir: &Path) -> CheckpointCfg {
+    ckpt_cfg(dir, 1_000_000)
+}
+
+/// Records the full delivery stream — (seed, round, walk) events plus the
+/// round boundaries — so equivalence checks cover ordering, not just the
+/// final per-seed state.
+#[derive(Default)]
+struct RecordSink {
+    events: Vec<(VertexId, u32, Vec<VertexId>)>,
+    rounds: Vec<u32>,
+}
+
+impl WalkSink for RecordSink {
+    fn on_walk(&mut self, seed: VertexId, round: u32, walk: &[VertexId]) {
+        self.events.push((seed, round, walk.to_vec()));
+    }
+    fn on_round_end(&mut self, round: u32, _stats: &RoundStats) {
+        self.rounds.push(round);
+    }
+}
+
+/// Tentpole acceptance (part 1): checkpointing is observationally free —
+/// for every variant, a checkpointed run delivers walks bit-identical to
+/// the plain run, while actually writing checkpoints.
+#[test]
+fn checkpointed_runs_are_bit_identical_across_variants() {
+    let g = test_graph();
+    let req = WalkRequest::all().with_rounds(2);
+    for variant in Variant::ALL {
+        let cfg = base_cfg().with_variant(variant);
+        let s = session(&g, cfg, 4);
+        let plain = s.collect(&req).unwrap();
+        let dir = tmp_dir(&format!("ident-{}", variant.name()));
+        let mut sink = CollectSink::new(g.num_vertices());
+        let q = s.run_checkpointed(&req, &mut sink, &ckpt_cfg(&dir, 2)).unwrap();
+        assert_eq!(
+            sink.walks(),
+            &plain.walks,
+            "{} checkpointed run diverged",
+            variant.name()
+        );
+        assert!(
+            q.metrics.checkpoints_written > 0,
+            "{} wrote no checkpoints",
+            variant.name()
+        );
+        assert!(q.metrics.checkpoint_secs >= 0.0);
+        assert!(!checkpoint_files(&dir).is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+/// Tentpole acceptance (part 2): resuming from *every* checkpoint of a
+/// multi-round, multi-pass run reproduces the uninterrupted delivery
+/// stream event for event.
+#[test]
+fn resume_from_every_checkpoint_matches_the_uninterrupted_run() {
+    let g = test_graph();
+    let cfg = base_cfg().with_variant(Variant::Cache);
+    let s = session(&g, cfg, 4);
+    let req = WalkRequest::all().with_rounds(2).with_walks_per_seed(2);
+
+    let dir = tmp_dir("every");
+    let mut clean = RecordSink::default();
+    s.run_checkpointed(&req, &mut clean, &ckpt_cfg(&dir, 1)).unwrap();
+    let files = checkpoint_files(&dir);
+    assert!(
+        files.len() >= 8,
+        "expected a checkpoint per superstep, got {}",
+        files.len()
+    );
+    // Zero-padded `ckpt-<unit>-<superstep>` names sort logically.
+    for w in files.windows(2) {
+        assert!(w[0] < w[1], "checkpoint names out of order: {w:?}");
+    }
+
+    for (i, f) in files.iter().enumerate() {
+        let rdir = tmp_dir("every-resume");
+        std::fs::copy(f, rdir.join(f.file_name().unwrap())).unwrap();
+        let mut sink = RecordSink::default();
+        s.resume(&req, &mut sink, &resume_cfg(&rdir)).unwrap();
+        assert_eq!(sink.events, clean.events, "resume from checkpoint {i} diverged");
+        assert_eq!(sink.rounds, clean.rounds, "round boundaries diverged at {i}");
+        std::fs::remove_dir_all(&rdir).ok();
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The fingerprint deliberately excludes worker count and partitioner:
+/// a checkpoint taken under (hash, 4 workers) must resume bit-identically
+/// under 1 worker and under degree-aware placement, for every variant.
+#[test]
+fn resume_crosses_worker_counts_and_partitioners() {
+    let g = test_graph();
+    let req = WalkRequest::all().with_rounds(2);
+    for variant in Variant::ALL {
+        let cfg = base_cfg().with_variant(variant);
+        let origin = session(&g, cfg, 4);
+        let plain = origin.collect(&req).unwrap().walks;
+        let dir = tmp_dir(&format!("cross-{}", variant.name()));
+        let mut sink = CollectSink::new(g.num_vertices());
+        origin.run_checkpointed(&req, &mut sink, &ckpt_cfg(&dir, 1)).unwrap();
+        let files = checkpoint_files(&dir);
+        let mid = &files[files.len() / 2];
+        for (kind, workers) in [
+            (PartitionerKind::Hash, 1),
+            (PartitionerKind::DegreeAware, 1),
+            (PartitionerKind::DegreeAware, 4),
+        ] {
+            let rdir = tmp_dir(&format!("cross-resume-{}", variant.name()));
+            std::fs::copy(mid, rdir.join(mid.file_name().unwrap())).unwrap();
+            let resumed = session(&g, cfg.with_partitioner(kind), workers);
+            let mut rsink = CollectSink::new(g.num_vertices());
+            resumed.resume(&req, &mut rsink, &resume_cfg(&rdir)).unwrap();
+            assert_eq!(
+                rsink.walks(),
+                &plain,
+                "{} resumed under {} x{workers} diverged",
+                variant.name(),
+                kind.name()
+            );
+            std::fs::remove_dir_all(&rdir).ok();
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+/// Embedding acceptance: a `TrainerSink` run resumed from a mid-run
+/// checkpoint (model weights, RNG stream, and step counter all restored
+/// from the sink blob) finishes with bit-identical embeddings and loss
+/// curve.
+#[test]
+fn trainer_sink_resume_reproduces_embeddings_bit_identically() {
+    let g = test_graph();
+    let n = g.num_vertices();
+    let cfg = base_cfg().with_variant(Variant::Cache);
+    let rounds = 3u32;
+    let req = WalkRequest::all().with_rounds(rounds);
+    let s = session(&g, cfg, 4);
+    let tcfg = TrainConfig {
+        steps: 180,
+        log_every: 30,
+        ..Default::default()
+    };
+
+    let dir = tmp_dir("trainer");
+    let mut clean = TrainerSink::new(RustSgns::new(n, 16, 11), n, tcfg, 128, 5, rounds);
+    s.run_checkpointed(&req, &mut clean, &ckpt_cfg(&dir, 1)).unwrap();
+    let (clean_model, clean_curve) = clean.finish().unwrap();
+
+    let files = checkpoint_files(&dir);
+    let mid = &files[files.len() / 2];
+    let rdir = tmp_dir("trainer-resume");
+    std::fs::copy(mid, rdir.join(mid.file_name().unwrap())).unwrap();
+    let mut resumed = TrainerSink::new(RustSgns::new(n, 16, 11), n, tcfg, 128, 5, rounds);
+    s.resume(&req, &mut resumed, &resume_cfg(&rdir)).unwrap();
+    let (res_model, res_curve) = resumed.finish().unwrap();
+
+    assert_eq!(clean_curve.len(), res_curve.len(), "loss curve length diverged");
+    for (a, b) in clean_curve.iter().zip(&res_curve) {
+        assert_eq!(a.step, b.step);
+        assert_eq!(a.loss, b.loss, "loss diverged at step {}", a.step);
+    }
+    assert_eq!(res_model.w_in, clean_model.w_in, "embeddings diverged after resume");
+    assert_eq!(res_model.w_out, clean_model.w_out, "output weights diverged");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&rdir).ok();
+}
+
+// -------------------------------------------------- corrupt-checkpoint matrix
+
+fn fxhash64(bytes: &[u8]) -> u64 {
+    use std::hash::Hasher;
+    let mut h = fastn2v::util::fxhash::FxHasher::default();
+    h.write(bytes);
+    h.finish()
+}
+
+fn patch(path: &Path, offset: usize, bytes: &[u8]) {
+    let mut all = std::fs::read(path).unwrap();
+    all[offset..offset + bytes.len()].copy_from_slice(bytes);
+    std::fs::write(path, &all).unwrap();
+}
+
+/// Patch a checkpoint *header* field and rewrite the header checksum, so
+/// the corruption under test is the field itself, not the checksum
+/// covering it (mirrors the FN2VGRF2 matrix in tests/storage.rs).
+fn patch_header(path: &Path, offset: usize, bytes: &[u8]) {
+    let mut all = std::fs::read(path).unwrap();
+    all[offset..offset + bytes.len()].copy_from_slice(bytes);
+    let sum = fxhash64(&all[..56]);
+    all[56..64].copy_from_slice(&sum.to_le_bytes());
+    std::fs::write(path, &all).unwrap();
+}
+
+fn truncate(path: &Path, len: u64) {
+    let all = std::fs::read(path).unwrap();
+    std::fs::write(path, &all[..len as usize]).unwrap();
+}
+
+/// Every corruption class of the FN2VCKP1 format yields a typed
+/// `StoreError` naming the failing field, in validation order: magic →
+/// version → checksum → superstep → size → payload → sections.
+#[test]
+fn corrupt_checkpoint_matrix_yields_typed_errors() {
+    let g = test_graph();
+    let s = session(&g, base_cfg(), 4);
+    let dir = tmp_dir("matrix");
+    let mut sink = CollectSink::new(g.num_vertices());
+    s.run_checkpointed(&WalkRequest::all(), &mut sink, &ckpt_cfg(&dir, 1)).unwrap();
+    let src = checkpoint_files(&dir).pop().expect("no checkpoint written");
+
+    let case = |name: &str, corrupt: &dyn Fn(&Path)| {
+        let p = dir.join(format!("case-{name}.bad"));
+        std::fs::copy(&src, &p).unwrap();
+        corrupt(&p);
+        let e = read_checkpoint(&p, 10_000).expect_err("corrupt checkpoint read back");
+        std::fs::remove_file(&p).ok();
+        e
+    };
+
+    assert_eq!(case("magic", &|p| patch(p, 0, b"XX")).field(), Some("magic"));
+    assert_eq!(
+        case("version", &|p| patch_header(p, 8, &9u32.to_le_bytes())).field(),
+        Some("version")
+    );
+    // A patched field without a matching re-checksum is caught by the
+    // header checksum before the field itself is ever interpreted.
+    assert_eq!(
+        case("checksum", &|p| patch(p, 28, &7u32.to_le_bytes())).field(),
+        Some("checksum")
+    );
+    // A stored superstep beyond the engine cap is stale by definition.
+    assert_eq!(
+        case("superstep", &|p| patch_header(p, 12, &60_000u32.to_le_bytes())).field(),
+        Some("superstep")
+    );
+    // Truncation anywhere in the payload breaks the declared length.
+    assert_eq!(
+        case("size", &|p| {
+            let len = std::fs::metadata(p).unwrap().len();
+            truncate(p, len - 5);
+        })
+        .field(),
+        Some("size")
+    );
+    // A header-only stump is undersized before sections are touched.
+    assert_eq!(case("stump", &|p| truncate(p, 40)).field(), Some("size"));
+    // A flipped payload byte fails the payload checksum.
+    assert_eq!(
+        case("payload", &|p| {
+            let mut all = std::fs::read(p).unwrap();
+            all[74] ^= 0xFF;
+            std::fs::write(p, &all).unwrap();
+        })
+        .field(),
+        Some("payload")
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// One damaged checkpoint must not kill recovery: resume skips the
+/// corrupt newest file (with a warning) and restarts from its intact
+/// predecessor, still bit-identical to the uninterrupted run.
+#[test]
+fn resume_falls_back_past_a_corrupt_latest_checkpoint() {
+    let g = test_graph();
+    let s = session(&g, base_cfg(), 4);
+    let req = WalkRequest::all().with_rounds(2);
+    let plain = s.collect(&req).unwrap().walks;
+
+    let dir = tmp_dir("fallback");
+    let mut sink = CollectSink::new(g.num_vertices());
+    s.run_checkpointed(&req, &mut sink, &ckpt_cfg(&dir, 1)).unwrap();
+    let files = checkpoint_files(&dir);
+    assert!(files.len() >= 2, "need at least two checkpoints");
+    let last = files.last().unwrap();
+    let mut all = std::fs::read(last).unwrap();
+    let mid = all.len() / 2;
+    all[mid] ^= 0xFF;
+    std::fs::write(last, &all).unwrap();
+    assert!(read_checkpoint(last, 10_000).is_err(), "corruption not detected");
+    assert!(
+        read_checkpoint(&files[files.len() - 2], 10_000).is_ok(),
+        "predecessor should be intact"
+    );
+
+    let mut resumed = CollectSink::new(g.num_vertices());
+    s.resume(&req, &mut resumed, &resume_cfg(&dir)).unwrap();
+    assert_eq!(resumed.walks(), &plain, "fallback resume diverged");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Graceful degradation has a floor: under an absurd budget no split can
+/// satisfy, the driver stops at the split cap and surfaces the typed
+/// `OutOfMemory` instead of splitting forever.
+#[test]
+fn split_cap_exhaustion_surfaces_out_of_memory() {
+    let g = test_graph();
+    let s = WalkSession::builder(g.clone(), base_cfg())
+        .workers(2)
+        .engine_opts(EngineOpts {
+            memory_budget: Some(1),
+            ..Default::default()
+        })
+        .build();
+    match s.collect(&WalkRequest::all()) {
+        Err(EngineError::OutOfMemory { .. }) => {}
+        Err(other) => panic!("expected OutOfMemory, got {other}"),
+        Ok(_) => panic!("run completed under a 1-byte budget"),
+    }
+}
+
+// ------------------------------------------------------- fault injection
+//
+// Everything below arms the process-global failpoint registry and must
+// run with `--features failpoints -- --test-threads 1`.
+
+#[cfg(feature = "failpoints")]
+mod fault_injection {
+    use super::*;
+    use fastn2v::graph::{open_graph, write_v2, OpenOptions, StoreError};
+    use fastn2v::node2vec::{read_walk_file, StreamingFileSink};
+    use fastn2v::util::failpoints::{
+        arm, arm_all_from_seed, arm_fatal, clear_all, hits, SiteKind, SITES,
+    };
+    use fastn2v::util::mmap::Mmap;
+
+    /// One checkpointed streaming walk; returns the walks read back from
+    /// the finished (atomically renamed) file.
+    fn streaming_run(dir: &Path, every: u32) -> Result<Vec<(u32, Vec<u32>)>, String> {
+        std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+        let g = test_graph();
+        let s = session(&g, base_cfg(), 2);
+        let path = dir.join("walks.txt");
+        let mut sink = StreamingFileSink::create(&path).map_err(|e| e.to_string())?;
+        let req = WalkRequest::all().with_rounds(2);
+        s.run_checkpointed(&req, &mut sink, &ckpt_cfg(&dir.join("ckpt"), every))
+            .map_err(|e| e.to_string())?;
+        sink.finish().map_err(|e| e.to_string())?;
+        read_walk_file(&path).map_err(|e| e.to_string())
+    }
+
+    fn leftover_tmp_files(dir: &Path) -> Vec<PathBuf> {
+        let Ok(rd) = std::fs::read_dir(dir) else {
+            return Vec::new();
+        };
+        rd.filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| p.extension().is_some_and(|x| x == "tmp"))
+            .collect()
+    }
+
+    /// Sweep: a transient fault at every registered I/O site is absorbed
+    /// by the capped-backoff retry and the run's output is unchanged. The
+    /// match is exhaustive over site names so a new catalog entry fails
+    /// here until the harness covers it.
+    #[test]
+    fn transient_faults_at_every_io_site_recover() {
+        clear_all();
+        let base = tmp_dir("transient");
+        let reference = streaming_run(&base.join("ref"), 2).unwrap();
+        let g = test_graph();
+        let gpath = base.join("g.fn2v");
+        write_v2(&g, &gpath).unwrap();
+
+        for site in SITES {
+            if site.kind != SiteKind::Io {
+                continue; // panic sites are covered by the crash tests
+            }
+            clear_all();
+            arm(site.name, 0);
+            match site.name {
+                "mmap.open" => {
+                    if !Mmap::supported() {
+                        clear_all();
+                        continue;
+                    }
+                    open_graph(&gpath, &OpenOptions::mapped())
+                        .unwrap_or_else(|e| panic!("{} did not recover: {e}", site.name));
+                }
+                "io.read-chunk" => {
+                    open_graph(&gpath, &OpenOptions::owned())
+                        .unwrap_or_else(|e| panic!("{} did not recover: {e}", site.name));
+                }
+                "checkpoint.write" | "checkpoint.sync" | "checkpoint.rename" | "sink.create"
+                | "sink.flush" | "sink.rename" => {
+                    let out = streaming_run(&base.join(site.name), 2)
+                        .unwrap_or_else(|e| panic!("{} did not recover: {e}", site.name));
+                    assert_eq!(out, reference, "{} changed the output", site.name);
+                }
+                other => panic!("site `{other}` is not covered by this harness"),
+            }
+            assert!(hits(site.name) > 0, "{} was never exercised", site.name);
+        }
+        clear_all();
+        std::fs::remove_dir_all(&base).ok();
+    }
+
+    /// The seed-driven sweep arms every I/O site at once from one seed;
+    /// the full pipeline still completes with unchanged output.
+    #[test]
+    fn seeded_sweep_arms_every_io_site_and_recovers() {
+        clear_all();
+        let base = tmp_dir("sweep");
+        let reference = streaming_run(&base.join("ref"), 2).unwrap();
+        clear_all();
+        arm_all_from_seed(0xF417_BACC);
+        let out = streaming_run(&base.join("armed"), 2).expect("seeded sweep did not recover");
+        assert_eq!(out, reference, "seeded sweep changed walk output");
+        clear_all();
+        std::fs::remove_dir_all(&base).ok();
+    }
+
+    /// Fatal faults surface as typed errors — `EngineError::Checkpoint`
+    /// for checkpoint I/O, `StoreError::Io` for graph opens, `io::Error`
+    /// from the sink — and never leave partial artifacts behind.
+    #[test]
+    fn fatal_faults_surface_typed_errors_with_no_partial_artifacts() {
+        clear_all();
+        let base = tmp_dir("fatal");
+        let g = test_graph();
+        let req = WalkRequest::all().with_rounds(2);
+
+        for site in ["checkpoint.write", "checkpoint.sync", "checkpoint.rename"] {
+            clear_all();
+            arm_fatal(site, 0);
+            let d = base.join(site);
+            let s = session(&g, base_cfg(), 2);
+            let mut sink = CollectSink::new(g.num_vertices());
+            match s.run_checkpointed(&req, &mut sink, &ckpt_cfg(&d, 1)) {
+                Err(EngineError::Checkpoint { detail, .. }) => {
+                    assert!(detail.contains("injected"), "{site}: {detail}")
+                }
+                Err(other) => panic!("{site}: expected a Checkpoint error, got {other}"),
+                Ok(_) => panic!("{site}: fatal fault did not fail the run"),
+            }
+            let tmps = leftover_tmp_files(&d);
+            assert!(tmps.is_empty(), "{site} left temp files: {tmps:?}");
+        }
+
+        // sink.create: creation fails typed, nothing appears on disk.
+        clear_all();
+        arm_fatal("sink.create", 0);
+        let sp = base.join("create.txt");
+        assert!(StreamingFileSink::create(&sp).is_err(), "sink.create fault ignored");
+        assert!(!sp.exists(), "sink.create left a final file");
+        assert!(leftover_tmp_files(&base).is_empty(), "sink.create left a temp file");
+
+        // sink.flush / sink.rename: the engine run itself succeeds (sink
+        // faults are the sink's to report), finish() surfaces the fault,
+        // and neither the final file nor the temp file survives.
+        for site in ["sink.flush", "sink.rename"] {
+            clear_all();
+            let sp = base.join(format!("{site}.txt"));
+            let mut sink = StreamingFileSink::create(&sp).unwrap();
+            let s = session(&g, base_cfg(), 2);
+            arm_fatal(site, 0);
+            s.run(&req, &mut sink).unwrap_or_else(|e| panic!("{site}: engine run failed: {e}"));
+            assert!(sink.finish().is_err(), "{site}: fatal fault vanished");
+            assert!(!sp.exists(), "{site}: partial final file left behind");
+            assert!(leftover_tmp_files(&base).is_empty(), "{site}: temp file left behind");
+        }
+
+        // Graph-open sites: typed `StoreError::Io` with syscall context.
+        let gpath = base.join("g.fn2v");
+        write_v2(&g, &gpath).unwrap();
+        if Mmap::supported() {
+            clear_all();
+            arm_fatal("mmap.open", 0);
+            match open_graph(&gpath, &OpenOptions::mapped()) {
+                Err(StoreError::Io { .. }) => {}
+                Err(other) => panic!("mmap.open: wrong error {other}"),
+                Ok(_) => panic!("mmap.open: fatal fault ignored"),
+            }
+        }
+        clear_all();
+        arm_fatal("io.read-chunk", 0);
+        match open_graph(&gpath, &OpenOptions::owned()) {
+            Err(StoreError::Io { .. }) => {}
+            Err(other) => panic!("io.read-chunk: wrong error {other}"),
+            Ok(_) => panic!("io.read-chunk: fatal fault ignored"),
+        }
+
+        clear_all();
+        std::fs::remove_dir_all(&base).ok();
+    }
+
+    /// Tentpole end-to-end: a worker panic mid-run is caught at the thread
+    /// boundary as `EngineError::WorkerFailed` (no process abort, no
+    /// poisoned siblings), and a deterministic resume from the surviving
+    /// checkpoints completes bit-identically.
+    #[test]
+    fn worker_panic_is_caught_and_resume_completes_bit_identically() {
+        clear_all();
+        let g = test_graph();
+        let req = WalkRequest::all().with_rounds(2);
+        let s = session(&g, base_cfg(), 2);
+        let plain = s.collect(&req).unwrap().walks;
+
+        let dir = tmp_dir("crash");
+        arm("engine.superstep", 12);
+        let mut sink = CollectSink::new(g.num_vertices());
+        match s.run_checkpointed(&req, &mut sink, &ckpt_cfg(&dir, 1)) {
+            Err(EngineError::WorkerFailed { payload, .. }) => {
+                assert!(payload.contains("failpoint"), "unexpected payload: {payload}")
+            }
+            Err(other) => panic!("expected WorkerFailed, got {other}"),
+            Ok(_) => panic!("armed panic did not fire"),
+        }
+        clear_all();
+
+        let mut resumed = CollectSink::new(g.num_vertices());
+        s.resume(&req, &mut resumed, &resume_cfg(&dir)).unwrap();
+        assert_eq!(resumed.walks(), &plain, "post-crash resume diverged");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Crash recovery for the streaming sink: the temp file of the killed
+    /// run (kept alive via `mem::forget`, simulating process death where
+    /// destructors never run) is picked up by `StreamingFileSink::resume`,
+    /// already-written rounds are kept, and the finished file equals the
+    /// uninterrupted run's.
+    #[test]
+    fn streaming_sink_survives_a_crash_and_resumes_in_place() {
+        clear_all();
+        let g = test_graph();
+        let req = WalkRequest::all().with_rounds(3);
+        let s = session(&g, base_cfg(), 2);
+        let plain = s.collect(&req).unwrap().walks;
+
+        let dir = tmp_dir("crash-stream");
+        let path = dir.join("walks.txt");
+        let mut sink = StreamingFileSink::create(&path).unwrap();
+        arm("engine.superstep", 30);
+        match s.run_checkpointed(&req, &mut sink, &ckpt_cfg(&dir.join("ckpt"), 1)) {
+            Err(EngineError::WorkerFailed { .. }) => {}
+            Err(other) => panic!("expected WorkerFailed, got {other}"),
+            Ok(_) => panic!("armed panic did not fire"),
+        }
+        clear_all();
+        std::mem::forget(sink);
+
+        let mut sink = StreamingFileSink::resume(&path).unwrap();
+        s.resume(&req, &mut sink, &resume_cfg(&dir.join("ckpt"))).unwrap();
+        assert_eq!(sink.finish().unwrap(), g.num_vertices() as u64);
+        let streamed = read_walk_file(&path).unwrap();
+        assert_eq!(streamed.len(), g.num_vertices());
+        for (seed, w) in streamed {
+            assert_eq!(w, plain[seed as usize], "resumed stream diverged at seed {seed}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -222,11 +222,13 @@ fn streaming_sink_bounds_resident_walks_under_memory_budget() {
         .workers(4)
         .engine_opts(EngineOpts {
             memory_budget: Some(budget),
+            strict_memory: true,
             ..Default::default()
         })
         .build();
 
-    // rounds=1 must abort on the budget...
+    // rounds=1 must abort on the budget (strict mode keeps the historical
+    // hard-abort; the default policy degrades — see tests/recovery.rs)...
     match session.collect(&WalkRequest::all()) {
         Err(EngineError::OutOfMemory { bytes, .. }) => assert!(bytes > budget),
         other => panic!(
