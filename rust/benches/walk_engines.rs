@@ -4,9 +4,10 @@
 //! head-to-head, a partitioning ablation (hash / range / degree-aware ×
 //! hot-vertex splitting, EXPERIMENTS.md §Partitioning), the SGNS
 //! trainer throughput grid (threads × {hogwild, sharded},
-//! EXPERIMENTS.md §Train) and the checkpoint overhead/resume-latency
-//! pair (EXPERIMENTS.md §Robustness), all recorded as a machine-readable
-//! baseline in `BENCH_walks.json` for future PRs.
+//! EXPERIMENTS.md §Train), the checkpoint overhead/resume-latency
+//! pair (EXPERIMENTS.md §Robustness) and the shard-per-process fleet
+//! overhead at 1/2/4 shards (EXPERIMENTS.md §Distributed), all recorded
+//! as a machine-readable baseline in `BENCH_walks.json` for future PRs.
 //!
 //! Run: `cargo bench --bench walk_engines`
 //! (FASTN2V_BENCH_FULL=1 for a larger graph; FASTN2V_BENCH_OUT to move the
@@ -14,6 +15,7 @@
 //! `-- --quick` for the CI smoke run: tiny graph, JSON write skipped
 //! unless FASTN2V_BENCH_OUT is set.)
 
+use fastn2v::coordinator::DistConfig;
 use fastn2v::embed::{Corpus, ParallelSgns, TrainConfig, TrainMode};
 use fastn2v::exp::common::{popular_threshold, run_fn_with_cfg, run_solution, Solution};
 use fastn2v::exp::pipeline::{
@@ -282,6 +284,39 @@ fn main() {
         &ckpt_table,
     );
 
+    // ---- distributed: shard-per-process fleet vs single process ----
+    // In-proc transport isolates the sharding overhead itself (message
+    // encode/decode + barrier) from process-spawn cost; every fleet shape
+    // must stay bit-identical to the plain run (EXPERIMENTS.md
+    // §Distributed), so the rows are directly comparable.
+    let dist = distributed_bench(&g, walk_len.min(20));
+    let mut dist_table: Vec<(String, Vec<String>)> = vec![(
+        "single process".into(),
+        vec![fastn2v::util::fmt_secs(dist.plain_secs), "-".into(), "-".into()],
+    )];
+    for r in &dist.rows {
+        dist_table.push((
+            format!("{} shard(s)", r.shards),
+            vec![
+                fastn2v::util::fmt_secs(r.wall_secs),
+                if dist.plain_secs > 0.0 {
+                    format!("{:+.1}%", (r.wall_secs / dist.plain_secs - 1.0) * 100.0)
+                } else {
+                    "-".into()
+                },
+                fastn2v::util::fmt_bytes(r.bytes_remote),
+            ],
+        ));
+    }
+    print_table(
+        &format!(
+            "distributed fleet (FN-Cache, in-proc transport, {} workers/shard)",
+            dist.workers_per_shard
+        ),
+        &["wall", "vs single", "remote bytes"],
+        &dist_table,
+    );
+
     let secs_of = |name: &str| rows.iter().find(|r| r.name == name).and_then(|r| r.secs);
     let speedup = |a: Option<f64>, b: Option<f64>| match (a, b) {
         (Some(a), Some(b)) if b > 0.0 => Some(a / b),
@@ -316,6 +351,7 @@ fn main() {
         &store,
         &sgns,
         &ckpt,
+        &dist,
     );
     match std::fs::write(&out_path, &json) {
         Ok(()) => println!("baseline written to {out_path}"),
@@ -483,6 +519,62 @@ fn checkpoint_bench(
     }
 }
 
+struct DistRow {
+    shards: usize,
+    wall_secs: f64,
+    bytes_remote: u64,
+}
+
+struct DistributedBench {
+    workers_per_shard: usize,
+    plain_secs: f64,
+    rows: Vec<DistRow>,
+}
+
+/// Run the same FN-Cache query single-process and as in-proc shard
+/// fleets at 1/2/4 shards. Every fleet shape must produce bit-identical
+/// walks (the §Distributed conformance bar), so the wall-clock delta is
+/// pure sharding overhead: frame encode/decode plus the per-superstep
+/// barrier round-trip through the coordinator.
+fn distributed_bench(
+    g: &std::sync::Arc<fastn2v::graph::Graph>,
+    walk_len: u32,
+) -> DistributedBench {
+    const WORKERS_PER_SHARD: usize = 2;
+    let cfg = FnConfig::new(0.5, 2.0, 3)
+        .with_walk_length(walk_len)
+        .with_popular_threshold(popular_threshold(g))
+        .with_variant(Variant::Cache);
+    let req = WalkRequest::all();
+
+    let session = WalkSession::builder(g.clone(), cfg).workers(4).build();
+    let t = std::time::Instant::now();
+    let plain = session.collect(&req).expect("plain bench walks").walks;
+    let plain_secs = t.elapsed().as_secs_f64();
+
+    let mut rows = Vec::new();
+    for shards in [1usize, 2, 4] {
+        let fleet = WalkSession::builder(g.clone(), cfg)
+            .workers(WORKERS_PER_SHARD)
+            .distributed(DistConfig::new(shards, WORKERS_PER_SHARD))
+            .build();
+        let t = std::time::Instant::now();
+        let out = fleet.collect(&req).expect("sharded bench walks");
+        let wall_secs = t.elapsed().as_secs_f64();
+        assert_eq!(out.walks, plain, "sharded bench run diverged at {shards} shard(s)");
+        rows.push(DistRow {
+            shards,
+            wall_secs,
+            bytes_remote: out.metrics.total_remote_bytes(),
+        });
+    }
+    DistributedBench {
+        workers_per_shard: WORKERS_PER_SHARD,
+        plain_secs,
+        rows,
+    }
+}
+
 struct StoreModeRow {
     name: &'static str,
     open_secs: f64,
@@ -565,6 +657,7 @@ fn render_json(
     store: &GraphStoreBench,
     sgns: &SgnsTrainBench,
     ckpt: &CheckpointBench,
+    dist: &DistributedBench,
 ) -> String {
     let stats = g.stats();
     let fmt_opt = |o: Option<f64>| o.map(|v| format!("{v:.3}")).unwrap_or_else(|| "null".into());
@@ -663,6 +756,20 @@ fn render_json(
         ckpt.file_bytes,
         ckpt.resume_secs
     ));
+    s.push_str(&format!(
+        "  \"distributed\": {{\"transport\": \"inproc\", \"workers_per_shard\": {}, \"single_process_secs\": {:.6}, \"rows\": [\n",
+        dist.workers_per_shard, dist.plain_secs
+    ));
+    for (i, r) in dist.rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"shards\": {}, \"wall_secs\": {:.6}, \"bytes_remote\": {}}}{}\n",
+            r.shards,
+            r.wall_secs,
+            r.bytes_remote,
+            if i + 1 < dist.rows.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]},\n");
     s.push_str(&format!(
         "  \"session_amortization\": {{\"queries\": {}, \"seeds_per_query\": {}, \"reuse_secs\": {:.6}, \"rebuild_secs\": {:.6}, \"speedup\": {:.3}}}\n",
         amort.queries,

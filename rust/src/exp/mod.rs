@@ -29,7 +29,7 @@ COMMANDS:
                  [--hot-threshold <deg>] [--seeds <spec>] [--rounds <k>]
                  [--stream-walks <path>] [--graph-file <path>] [--mmap]
                  [--checkpoint-dir <dir>] [--checkpoint-every <k>]
-                 [--strict-memory]
+                 [--strict-memory] [--shards <n>] [--transport <inproc|uds>]
     walk resume --checkpoint-dir <dir> [same flags as walk]
                                                 restart an interrupted walk
                                                 from its latest checkpoint
@@ -77,6 +77,19 @@ COMMON FLAGS:
     --strict-memory    abort on a memory-budget overrun instead of
                        degrading to 2x round splitting with a warning
                        (the default recovery policy)
+    --shards <n>       run the walk across n shards (default 1 = the
+                       in-process engine); each shard owns 1/n of the
+                       partition plan and supersteps are coordinated by
+                       the distributed master (EXPERIMENTS.md §Distributed).
+                       Walks are bit-identical across shard counts.
+    --transport <t>    how shards exchange frames: `inproc` (shard threads,
+                       in-memory channels; the default) or `uds` (one OS
+                       process per shard, Unix-domain sockets, graph served
+                       from an FN2VGRF2 file — spilled to a temp file if
+                       the run used a generated `--graph`)
+    --hot-split-cross-shard  allow hot-vertex splitting to recruit workers
+                       of other shards (shared-memory only; rejected with
+                       an error when --shards > 1)
     --train-threads <n> SGNS worker threads for embed/pipeline (default 1
                        = the serial oracle; >1 runs the parallel trainer
                        with a pre-sampling batch pipeline)
@@ -109,7 +122,23 @@ pub fn cli_main(raw: Vec<String>) -> i32 {
 }
 
 fn cli_inner(raw: Vec<String>) -> Result<(), String> {
-    let args = Args::parse(raw, &["quick", "verbose", "mmap", "strict-memory"])?;
+    // Hidden entrypoint: under `--transport uds` the coordinator spawns
+    // `fastn2v shard-worker --socket ... --shard ...` child processes.
+    // It parses its own flags (the coordinator controls the argv), so it
+    // bypasses `Args::parse` and never appears in HELP.
+    if raw.first().map(String::as_str) == Some("shard-worker") {
+        return crate::coordinator::shard_worker_main(&raw[1..]);
+    }
+    let args = Args::parse(
+        raw,
+        &[
+            "quick",
+            "verbose",
+            "mmap",
+            "strict-memory",
+            "hot-split-cross-shard",
+        ],
+    )?;
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     if args.has_switch("verbose") {
         crate::util::logging::set_level(crate::util::logging::Level::Debug);
@@ -259,6 +288,22 @@ fn cli_inner(raw: Vec<String>) -> Result<(), String> {
                 }
                 None => None,
             };
+            let shards: usize = args.get_parsed("shards", 1)?;
+            let transport = crate::coordinator::TransportKind::parse(args.get_choice(
+                "transport",
+                "inproc",
+                &["inproc", "uds"],
+            )?)
+            .expect("get_choice validated");
+            // Session::run re-checks this; failing here turns it into a
+            // loud usage error (exit 2) instead of a failed-run cell.
+            if args.has_switch("hot-split-cross-shard") && shards > 1 {
+                return Err(format!(
+                    "--hot-split-cross-shard requires --shards 1: the hot-split work \
+                     queue is shared memory and cannot cross shard processes \
+                     ({shards} shards requested)"
+                ));
+            }
             let seeds = crate::node2vec::SeedSet::parse(args.get_or("seeds", "all"))?;
             let ng = common::resolve_graph(
                 args.get("graph"),
@@ -275,14 +320,26 @@ fn cli_inner(raw: Vec<String>) -> Result<(), String> {
                 .with_sampler(sampler)
                 .with_partitioner(partitioner)
                 .with_hot_threshold(hot_threshold);
-            let session = crate::node2vec::WalkSession::builder(ng.graph.clone(), cfg)
+            let mut builder = crate::node2vec::WalkSession::builder(ng.graph.clone(), cfg)
                 .workers(workers)
                 .engine_opts(crate::pregel::EngineOpts {
                     memory_budget: Some(common::Budgets::CLUSTER),
                     strict_memory: args.has_switch("strict-memory"),
+                    hot_split_cross_shard: args.has_switch("hot-split-cross-shard"),
                     ..Default::default()
-                })
-                .build();
+                });
+            if shards > 1 || transport == crate::coordinator::TransportKind::Uds {
+                let mut dist = crate::coordinator::DistConfig::new(shards, workers)
+                    .with_transport(transport)
+                    .with_mmap(args.has_switch("mmap"));
+                // Shard processes reopen the graph themselves; hand them
+                // the user's file directly instead of spilling a copy.
+                if let Some(f) = args.get("graph-file") {
+                    dist = dist.with_graph_file(std::path::PathBuf::from(f));
+                }
+                builder = builder.distributed(dist);
+            }
+            let session = builder.build();
             let num_seeds = seeds.count(ng.graph.num_vertices());
             let req = crate::node2vec::WalkRequest::all()
                 .with_seeds(seeds)
@@ -323,13 +380,18 @@ fn cli_inner(raw: Vec<String>) -> Result<(), String> {
                 }
             };
             println!(
-                "{} ({} sampler, {} partitioner{}) on {}, {num_seeds} seeds x {rounds} round(s): {cell}",
+                "{} ({} sampler, {} partitioner{}{}) on {}, {num_seeds} seeds x {rounds} round(s): {cell}",
                 variant.name(),
                 cfg.effective_sampler().name(),
                 partitioner.name(),
                 hot_threshold
                     .map(|t| format!(", hot>={t}"))
                     .unwrap_or_default(),
+                if shards > 1 || transport == crate::coordinator::TransportKind::Uds {
+                    format!(", {shards} shard(s) via {}", transport.name())
+                } else {
+                    String::new()
+                },
                 ng.name,
             );
             Ok(())
@@ -646,6 +708,36 @@ mod cli_tests {
         // In-range validation happens before the engine runs.
         assert_eq!(
             run(&["walk", "--graph", "skew-2", "--seeds", "999999999", "--quick"]),
+            2
+        );
+    }
+
+    #[test]
+    fn walk_sharded_inproc_runs() {
+        assert_eq!(
+            run(&[
+                "walk", "--graph", "skew-2", "--variant", "cache", "--shards", "2",
+                "--quick",
+            ]),
+            0
+        );
+        // Cross-shard hot splitting is shared-memory-only: rejected with
+        // more than one shard...
+        assert_eq!(
+            run(&[
+                "walk", "--graph", "skew-2", "--shards", "2", "--hot-split-cross-shard",
+                "--quick",
+            ]),
+            2
+        );
+        // ...but fine in the single-shard (shared-memory) engine.
+        assert_eq!(
+            run(&["walk", "--graph", "skew-2", "--hot-split-cross-shard", "--quick"]),
+            0
+        );
+        // Bad transport value fails loudly.
+        assert_eq!(
+            run(&["walk", "--graph", "skew-2", "--transport", "tcp", "--quick"]),
             2
         );
     }

@@ -657,6 +657,23 @@ pub fn write_v2(graph: &Graph, path: &Path) -> Result<(), StoreError> {
     w.flush().map_err(&wctx)
 }
 
+/// Spill `graph` as FN2VGRF2 into `dir` under a process-unique temporary
+/// name, returning the path. The distributed coordinator uses this to
+/// hand an in-memory graph to shard processes that must each reopen
+/// their own copy; the caller owns removal.
+pub fn spill_v2_temp(graph: &Graph, dir: &Path) -> Result<PathBuf, StoreError> {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static SPILL_SEQ: AtomicU64 = AtomicU64::new(0);
+    let name = format!(
+        "fn2v-spill-{}-{}.grf",
+        std::process::id(),
+        SPILL_SEQ.fetch_add(1, Ordering::Relaxed)
+    );
+    let path = dir.join(name);
+    write_v2(graph, &path)?;
+    Ok(path)
+}
+
 /// Open an FN2VGRF2 file. Mapped mode is zero-copy (and downgrades to
 /// owned where [`Mmap::supported`] is false); see [`OpenOptions`] for the
 /// trusted/verified distinction.

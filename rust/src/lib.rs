@@ -18,11 +18,15 @@
 //!                 path with a pure-Rust oracle, plus the lock-free
 //!                 multi-threaded `embed::parallel` subsystem).
 //! - [`classify`]— one-vs-rest logistic regression + micro/macro F1.
+//! - [`coordinator`] — shard-per-process distributed walk engine: the L3
+//!                 master (barrier protocol, shard registration, aggregate
+//!                 memory budget, checkpoint orchestration).
 //! - [`exp`]     — per-figure experiment drivers (Table 1, Figures 1-14).
 //! - [`util`]    — PRNG, alias sampling, CLI, benchkit, propkit, memstat.
 
 pub mod baselines;
 pub mod classify;
+pub mod coordinator;
 pub mod embed;
 pub mod exp;
 pub mod gen;

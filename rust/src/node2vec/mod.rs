@@ -31,8 +31,9 @@
 //! [`WalkSession`] once per graph (it owns the partition plan, worker
 //! vertex lists, and sampler tables), then serve [`WalkRequest`]s whose
 //! walks stream into a [`WalkSink`] round by round. [`run_query`] is the
-//! one-shot form for single queries; the legacy [`run_walks`] survives as
-//! a deprecated shim over the same driver.
+//! one-shot form for single queries. A session can also run its walks
+//! across shard processes ([`WalkSessionBuilder::distributed`]): the same
+//! query API, with supersteps coordinated by [`crate::coordinator`].
 
 pub mod program;
 pub mod reference;
@@ -40,9 +41,7 @@ pub mod sampler;
 pub mod session;
 pub mod transition;
 
-use crate::graph::partition::Partitioner;
-use crate::graph::Graph;
-use crate::pregel::{EngineError, EngineMetrics, EngineOpts};
+use crate::pregel::{EngineMetrics, EngineOpts};
 
 pub use program::{FnMsg, FnProgram, RoundStats, WalkStats};
 pub use sampler::{SamplerStats, SecondOrderSampler};
@@ -238,31 +237,6 @@ pub struct WalkOutput {
     pub walks: WalkSet,
     pub metrics: EngineMetrics,
     pub stats: WalkStats,
-}
-
-/// Run Node2Vec walks for every vertex with the configured variant.
-///
-/// `rounds > 1` enables FN-Multi: the walk population is split into
-/// `rounds` disjoint start sets executed sequentially, dividing peak
-/// message memory by ~`rounds` (paper §3.4).
-///
-/// Deprecated shim: delegates to [`run_query`] with [`SeedSet::All`] and a
-/// [`CollectSink`], which reproduces the historical output bit-for-bit but
-/// re-derives the worker plan on every call and stages all n walks in
-/// memory. Build a [`WalkSession`] instead (amortized preparation,
-/// streaming sinks, seed-scoped queries).
-#[deprecated(
-    since = "0.2.0",
-    note = "build a WalkSession (or call run_query) and stream walks into a WalkSink"
-)]
-pub fn run_walks(
-    graph: &Graph,
-    part: Partitioner,
-    cfg: &FnConfig,
-    opts: EngineOpts,
-    rounds: u32,
-) -> Result<WalkOutput, EngineError> {
-    run_query_collect(graph, &part, cfg, opts, &WalkRequest::all().with_rounds(rounds))
 }
 
 #[cfg(test)]

@@ -1,7 +1,7 @@
 //! The prepared, streaming walk API: [`WalkSession`] + [`WalkSink`].
 //!
-//! The one-shot [`run_walks`](super::run_walks) entry point had two
-//! structural costs the paper's own design argues against:
+//! The retired one-shot `run_walks` entry point had two structural costs
+//! the paper's own design argues against:
 //!
 //! 1. **Re-preparation per call.** Every call re-derived the partition
 //!    plan, the per-worker vertex lists, and (for the rejection sampler)
@@ -29,14 +29,21 @@
 //!
 //! Determinism: walks depend only on `(cfg.seed, start vertex, step)` RNG
 //! streams, so a query's walks are identical whether they run through a
-//! session, the legacy shim, [`run_query`], or alongside other seeds in a
-//! bigger request — the conformance suite (`tests/session.rs`) pins this.
+//! session, [`run_query`], or alongside other seeds in a bigger request —
+//! the conformance suite (`tests/session.rs`) pins this.
+//!
+//! Sessions can also run **distributed**: [`WalkSessionBuilder::distributed`]
+//! moves unit execution behind a [`Coordinator`] that drives one engine
+//! shard per thread or process (see [`crate::coordinator`]). The driver
+//! below is agnostic — every engine unit goes through a [`UnitRunner`],
+//! and the in-process and sharded runners return bit-identical walks.
 
 use std::collections::VecDeque;
 use std::io::{BufRead, Seek, Write};
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
+use crate::coordinator::{Coordinator, DistConfig, UnitParams};
 use crate::graph::partition::Partitioner;
 use crate::graph::store::{fxhash64, open_graph, OpenOptions, StoreError};
 use crate::graph::{Graph, VertexId};
@@ -649,17 +656,19 @@ pub struct WalkSessionBuilder {
     cfg: FnConfig,
     workers: usize,
     opts: EngineOpts,
+    dist: Option<DistConfig>,
 }
 
 impl WalkSessionBuilder {
     /// Start from a shared graph and a walk configuration. Defaults:
-    /// 4 workers, [`EngineOpts::default`].
+    /// 4 workers, [`EngineOpts::default`], in-process execution.
     pub fn new(graph: Arc<Graph>, cfg: FnConfig) -> WalkSessionBuilder {
         WalkSessionBuilder {
             graph,
             cfg,
             workers: 4,
             opts: EngineOpts::default(),
+            dist: None,
         }
     }
 
@@ -689,12 +698,29 @@ impl WalkSessionBuilder {
         self
     }
 
+    /// Run queries across engine shards instead of in this process's
+    /// worker threads (see [`crate::coordinator`]). In distributed mode
+    /// [`workers`](Self::workers) means workers *per shard*: the global
+    /// worker space is `shards × workers`, and the walks are bit-identical
+    /// to an in-process session with that many workers.
+    pub fn distributed(mut self, dist: DistConfig) -> Self {
+        self.dist = Some(dist);
+        self
+    }
+
     /// Materialize the session: build the partitioner plan
     /// ([`FnConfig::partitioner`] over the worker count), the per-worker
     /// vertex lists, and — when the effective sampler is
     /// [`SamplerKind::Reject`] — the first-order alias tables, all once.
     pub fn build(self) -> WalkSession {
-        let part = self.cfg.partitioner.build(&self.graph, self.workers);
+        let (total_workers, dist) = match self.dist {
+            Some(mut d) => {
+                d.workers_per_shard = self.workers;
+                (self.workers * d.shards.max(1), Some(d))
+            }
+            None => (self.workers, None),
+        };
+        let part = self.cfg.partitioner.build(&self.graph, total_workers);
         let plan = WorkerPlan::new(&part, self.graph.num_vertices());
         if self.cfg.effective_sampler() == SamplerKind::Reject {
             let _ = self.graph.first_order_tables();
@@ -705,6 +731,7 @@ impl WalkSessionBuilder {
             opts: self.opts,
             part,
             plan,
+            dist,
         }
     }
 }
@@ -719,6 +746,8 @@ pub struct WalkSession {
     opts: EngineOpts,
     part: Partitioner,
     plan: WorkerPlan,
+    /// `Some` switches unit execution to a per-query shard fleet.
+    dist: Option<DistConfig>,
 }
 
 impl WalkSession {
@@ -743,12 +772,38 @@ impl WalkSession {
     }
 
     /// Execute one query, streaming walks into `sink` round by round.
+    ///
+    /// A distributed session launches its shard fleet here (one
+    /// [`Coordinator`] per query, reused across every FN-Multi unit) and
+    /// tears it down on return.
     pub fn run(
         &self,
         req: &WalkRequest,
         sink: &mut dyn WalkSink,
     ) -> Result<QueryOutput, EngineError> {
-        drive(&self.graph, &self.part, &self.plan, &self.cfg, self.opts, req, sink)
+        let (cfg, opts) = effective(&self.graph, &self.cfg, self.opts, req);
+        match &self.dist {
+            None => {
+                let mut runner = InProcRunner {
+                    graph: &self.graph,
+                    part: &self.part,
+                    plan: &self.plan,
+                    opts,
+                    mask: req.seeds.mask(self.graph.num_vertices()),
+                };
+                drive(&self.graph, cfg, opts, req, sink, &mut runner)
+            }
+            Some(dist) => {
+                check_dist(opts, dist)?;
+                let mut coord = Coordinator::launch(&self.graph, &self.part, dist)?;
+                let mut runner = DistRunner {
+                    coord: &mut coord,
+                    opts,
+                    seeds: req.seeds.clone(),
+                };
+                drive(&self.graph, cfg, opts, req, sink, &mut runner)
+            }
+        }
     }
 
     /// Convenience: execute one query through a [`CollectSink`] and return
@@ -773,48 +828,78 @@ impl WalkSession {
         sink: &mut dyn WalkSink,
         ckpt: &CheckpointCfg,
     ) -> Result<QueryOutput, EngineError> {
-        drive_checkpointed(
-            &self.graph,
-            &self.part,
-            &self.plan,
-            &self.cfg,
-            self.opts,
-            req,
-            sink,
-            ckpt,
-            false,
-        )
+        self.drive_ckpt(req, sink, ckpt, false)
     }
 
     /// Resume an interrupted checkpointed query from the newest valid
     /// checkpoint in `ckpt.dir` whose fingerprint matches this (graph,
     /// config, request) — falling back to a fresh checkpointed run when
     /// none is found. The delivered walks are bit-identical to an
-    /// uninterrupted run, including across different worker counts and
-    /// partitioners (the checkpoint deliberately does not pin either).
+    /// uninterrupted run, including across different worker counts,
+    /// partitioners, shard counts, and transports (the checkpoint
+    /// deliberately pins none of them), so a query whose shard *process*
+    /// died resumes on a fresh fleet — or in-process — to the same bytes.
     pub fn resume(
         &self,
         req: &WalkRequest,
         sink: &mut dyn WalkSink,
         ckpt: &CheckpointCfg,
     ) -> Result<QueryOutput, EngineError> {
-        drive_checkpointed(
-            &self.graph,
-            &self.part,
-            &self.plan,
-            &self.cfg,
-            self.opts,
-            req,
-            sink,
-            ckpt,
-            true,
-        )
+        self.drive_ckpt(req, sink, ckpt, true)
+    }
+
+    fn drive_ckpt(
+        &self,
+        req: &WalkRequest,
+        sink: &mut dyn WalkSink,
+        ckpt: &CheckpointCfg,
+        resume: bool,
+    ) -> Result<QueryOutput, EngineError> {
+        let (cfg, opts) = effective(&self.graph, &self.cfg, self.opts, req);
+        match &self.dist {
+            None => {
+                let mut runner = InProcRunner {
+                    graph: &self.graph,
+                    part: &self.part,
+                    plan: &self.plan,
+                    opts,
+                    mask: req.seeds.mask(self.graph.num_vertices()),
+                };
+                drive_checkpointed(&self.graph, cfg, opts, req, sink, ckpt, resume, &mut runner)
+            }
+            Some(dist) => {
+                check_dist(opts, dist)?;
+                let mut coord = Coordinator::launch(&self.graph, &self.part, dist)?;
+                let mut runner = DistRunner {
+                    coord: &mut coord,
+                    opts,
+                    seeds: req.seeds.clone(),
+                };
+                drive_checkpointed(&self.graph, cfg, opts, req, sink, ckpt, resume, &mut runner)
+            }
+        }
     }
 }
 
+/// Distributed-mode config validation shared by every query entry point:
+/// surface impossible deployments as a typed error *before* a fleet is
+/// launched.
+fn check_dist(opts: EngineOpts, dist: &DistConfig) -> Result<(), EngineError> {
+    if opts.hot_split_cross_shard && dist.shards > 1 {
+        return Err(EngineError::Config {
+            detail: format!(
+                "hot-split work stealing cannot cross shard processes: the hot queue is \
+                 shared memory. Run with --shards 1 or drop hot_split_cross_shard \
+                 ({} shards requested)",
+                dist.shards
+            ),
+        });
+    }
+    Ok(())
+}
+
 /// One-shot query execution without a prepared session: derives the
-/// partition plan and worker lists for this call only. This is what the
-/// deprecated [`run_walks`](super::run_walks) shim delegates to; prefer a
+/// partition plan and worker lists for this call only. Prefer a
 /// [`WalkSession`] anywhere more than one query runs against a graph.
 pub fn run_query(
     graph: &Graph,
@@ -825,12 +910,20 @@ pub fn run_query(
     sink: &mut dyn WalkSink,
 ) -> Result<QueryOutput, EngineError> {
     let plan = WorkerPlan::new(part, graph.num_vertices());
-    drive(graph, part, &plan, cfg, opts, req, sink)
+    let (cfg, opts) = effective(graph, cfg, opts, req);
+    let mut runner = InProcRunner {
+        graph,
+        part,
+        plan: &plan,
+        opts,
+        mask: req.seeds.mask(graph.num_vertices()),
+    };
+    drive(graph, cfg, opts, req, sink, &mut runner)
 }
 
 /// [`run_query`] through a [`CollectSink`], assembled into the legacy
 /// [`WalkOutput`] shape — the one collect-and-return path shared by the
-/// deprecated shim, the experiment drivers, and the conformance tests.
+/// experiment drivers and the conformance tests.
 pub fn run_query_collect(
     graph: &Graph,
     part: &Partitioner,
@@ -857,34 +950,122 @@ fn pass_seed(seed: u64, pass: u32) -> u64 {
     }
 }
 
-/// The shared query executor behind [`WalkSession::run`] and
-/// [`run_query`]: one engine run per (pass, round), flushing each round
-/// into the sink as it completes.
-fn drive(
+/// Shared request validation + config/opts layering for every query entry
+/// point: apply the request's walk-length override and the config's
+/// engine-option layer ([`FnConfig::engine_opts`]).
+fn effective(
     graph: &Graph,
-    part: &Partitioner,
-    plan: &WorkerPlan,
     cfg: &FnConfig,
     opts: EngineOpts,
     req: &WalkRequest,
-    sink: &mut dyn WalkSink,
-) -> Result<QueryOutput, EngineError> {
+) -> (FnConfig, EngineOpts) {
     assert!(req.rounds >= 1, "need at least one round");
     assert!(req.walks_per_seed >= 1, "need at least one walk per seed");
-    let n = graph.num_vertices();
-    req.seeds.assert_in_range(n);
-
+    req.seeds.assert_in_range(graph.num_vertices());
     let mut cfg = *cfg;
     if let Some(l) = req.length {
         cfg.walk_length = l;
     }
     let opts = cfg.engine_opts(opts);
+    (cfg, opts)
+}
+
+/// Executes one engine unit — FN-Multi class `er (mod er_count)` of one
+/// pass — wherever the session's units run: this process's worker threads
+/// ([`InProcRunner`]) or a shard fleet behind a [`Coordinator`]
+/// ([`DistRunner`]). The driver loops below are written against this
+/// trait only, which is what makes sharded and in-process walks
+/// bit-identical by construction: same unit schedule, same seeds, same
+/// delivery order.
+trait UnitRunner {
+    fn run_unit(
+        &mut self,
+        pass_cfg: &FnConfig,
+        er: u32,
+        er_count: u32,
+        spec: Option<&CheckpointSpec>,
+        resume: Option<EngineSnapshot<FnProgram>>,
+    ) -> Result<(RunResult<FnValue>, WalkStats), EngineError>;
+}
+
+/// The classic path: one [`Engine`] run over the session's worker threads.
+struct InProcRunner<'a> {
+    graph: &'a Graph,
+    part: &'a Partitioner,
+    plan: &'a WorkerPlan,
+    opts: EngineOpts,
+    mask: Option<Arc<SeedMask>>,
+}
+
+impl UnitRunner for InProcRunner<'_> {
+    fn run_unit(
+        &mut self,
+        pass_cfg: &FnConfig,
+        er: u32,
+        er_count: u32,
+        spec: Option<&CheckpointSpec>,
+        resume: Option<EngineSnapshot<FnProgram>>,
+    ) -> Result<(RunResult<FnValue>, WalkStats), EngineError> {
+        let program = FnProgram::new(self.graph, *pass_cfg, er, er_count)
+            .with_seed_mask(self.mask.clone());
+        let engine = Engine::new(self.graph, self.part.clone(), program, self.opts);
+        let out = match (resume, spec) {
+            (Some(snap), s) => engine.run_on_resumed(self.plan, snap, s),
+            (None, Some(s)) => engine.run_on_checkpointed(self.plan, s),
+            (None, None) => engine.run_on(self.plan),
+        }?;
+        let stats = engine.program().stats();
+        Ok((out, stats))
+    }
+}
+
+/// The sharded path: the unit is broadcast to the fleet and the
+/// [`Coordinator`] plays engine master across shard boundaries.
+struct DistRunner<'a> {
+    coord: &'a mut Coordinator,
+    opts: EngineOpts,
+    seeds: SeedSet,
+}
+
+impl UnitRunner for DistRunner<'_> {
+    fn run_unit(
+        &mut self,
+        pass_cfg: &FnConfig,
+        er: u32,
+        er_count: u32,
+        spec: Option<&CheckpointSpec>,
+        resume: Option<EngineSnapshot<FnProgram>>,
+    ) -> Result<(RunResult<FnValue>, WalkStats), EngineError> {
+        self.coord.run_unit(UnitParams {
+            cfg: *pass_cfg,
+            opts: self.opts,
+            er,
+            er_count,
+            seeds: &self.seeds,
+            ckpt: spec,
+            resume,
+        })
+    }
+}
+
+/// The shared query executor behind [`WalkSession::run`] and
+/// [`run_query`]: one engine unit per (pass, round), flushing each round
+/// into the sink as it completes. `cfg`/`opts` come pre-layered from
+/// [`effective`].
+fn drive(
+    graph: &Graph,
+    cfg: FnConfig,
+    opts: EngineOpts,
+    req: &WalkRequest,
+    sink: &mut dyn WalkSink,
+    runner: &mut dyn UnitRunner,
+) -> Result<QueryOutput, EngineError> {
+    let n = graph.num_vertices();
     if cfg.effective_sampler() == SamplerKind::Reject {
         // Shared proposal tables: built before the first superstep so
         // every round and worker reuses them (no lazy-init race).
         let _ = graph.first_order_tables();
     }
-    let mask = req.seeds.mask(n);
 
     let mut merged = EngineMetrics::default();
     let mut stats = WalkStats::default();
@@ -897,12 +1078,9 @@ fn drive(
             // two and retries (see `split_or_fail`) instead of aborting.
             let mut classes = VecDeque::from([(round, req.rounds)]);
             while let Some((er, er_count)) = classes.pop_front() {
-                let program =
-                    FnProgram::new(graph, pass_cfg, er, er_count).with_seed_mask(mask.clone());
-                let engine = Engine::new(graph, part.clone(), program, opts);
-                match engine.run_on(plan) {
-                    Ok(out) => {
-                        stats.merge(&engine.program().stats());
+                match runner.run_unit(&pass_cfg, er, er_count, None, None) {
+                    Ok((out, unit_stats)) => {
+                        stats.merge(&unit_stats);
                         let unit = UnitId { pass, er, er_count };
                         deliver_unit(req, n, unit, out, sink, &mut merged, &mut stats);
                     }
@@ -1100,33 +1278,25 @@ fn make_spec(
 /// The crash-safe sibling of [`drive`]: identical walk delivery, but every
 /// engine unit runs with a [`CheckpointSpec`] so state is persisted at
 /// superstep barriers, and with `resume` the query restarts from the
-/// newest valid checkpoint instead of from scratch.
+/// newest valid checkpoint instead of from scratch. Like [`drive`], the
+/// loop is runner-agnostic: a checkpoint written by a shard fleet resumes
+/// in-process and vice versa (the FN2VCKP1 fingerprint deliberately
+/// excludes worker count, partitioner, shard count, and transport).
 #[allow(clippy::too_many_arguments)]
 fn drive_checkpointed(
     graph: &Graph,
-    part: &Partitioner,
-    plan: &WorkerPlan,
-    cfg: &FnConfig,
+    cfg: FnConfig,
     opts: EngineOpts,
     req: &WalkRequest,
     sink: &mut dyn WalkSink,
     ckpt: &CheckpointCfg,
     resume: bool,
+    runner: &mut dyn UnitRunner,
 ) -> Result<QueryOutput, EngineError> {
-    assert!(req.rounds >= 1, "need at least one round");
-    assert!(req.walks_per_seed >= 1, "need at least one walk per seed");
     let n = graph.num_vertices();
-    req.seeds.assert_in_range(n);
-
-    let mut cfg = *cfg;
-    if let Some(l) = req.length {
-        cfg.walk_length = l;
-    }
-    let opts = cfg.engine_opts(opts);
     if cfg.effective_sampler() == SamplerKind::Reject {
         let _ = graph.first_order_tables();
     }
-    let mask = req.seeds.mask(n);
     let fp = query_fingerprint(graph, &cfg, req);
 
     let mut merged = EngineMetrics::default();
@@ -1156,11 +1326,9 @@ fn drive_checkpointed(
                 for &u in &c.schedule.done {
                     let mut pass_cfg = cfg;
                     pass_cfg.seed = pass_seed(cfg.seed, u.pass);
-                    let program = FnProgram::new(graph, pass_cfg, u.er, u.er_count)
-                        .with_seed_mask(mask.clone());
-                    let engine = Engine::new(graph, part.clone(), program, opts);
-                    let out = engine.run_on(plan)?;
-                    stats.merge(&engine.program().stats());
+                    let (out, unit_stats) =
+                        runner.run_unit(&pass_cfg, u.er, u.er_count, None, None)?;
+                    stats.merge(&unit_stats);
                     deliver_unit(req, n, u, out, sink, &mut merged, &mut stats);
                 }
             }
@@ -1188,16 +1356,10 @@ fn drive_checkpointed(
                     unit_seq: done.len() as u32,
                 };
                 let spec = make_spec(ckpt, fp, meta, &done, (er, er_count), &classes, sink);
-                let program =
-                    FnProgram::new(graph, pass_cfg, er, er_count).with_seed_mask(mask.clone());
-                let engine = Engine::new(graph, part.clone(), program, opts);
-                let run = match resumed.take() {
-                    Some(snap) => engine.run_on_resumed(plan, snap, Some(&spec)),
-                    None => engine.run_on_checkpointed(plan, &spec),
-                };
+                let run = runner.run_unit(&pass_cfg, er, er_count, Some(&spec), resumed.take());
                 match run {
-                    Ok(out) => {
-                        stats.merge(&engine.program().stats());
+                    Ok((out, unit_stats)) => {
+                        stats.merge(&unit_stats);
                         let unit = UnitId { pass, er, er_count };
                         deliver_unit(req, n, unit, out, sink, &mut merged, &mut stats);
                         done.push(unit);

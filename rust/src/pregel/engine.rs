@@ -45,8 +45,9 @@ use crate::graph::partition::Partitioner;
 use crate::graph::{Graph, VertexId};
 use crate::util::fxhash::FxHashMap;
 
-use super::checkpoint::{self, CheckpointSpec, EncodedPart, EngineSnapshot, Persist};
+use super::checkpoint::{self, ByteReader, CheckpointSpec, EncodedPart, EngineSnapshot, Persist};
 use super::metrics::{EngineMetrics, SuperstepMetrics};
+use super::transport::{self, Decision, Frame, FrameKind, ShardReport, Transport, WireMsg, COORD_ID};
 use super::Message;
 
 /// A vertex-centric program.
@@ -126,6 +127,13 @@ pub struct EngineOpts {
     /// FN-Multi classes and retries) unless this is `true`, in which case
     /// the overrun aborts the query — the pre-degradation behavior.
     pub strict_memory: bool,
+    /// Request hot-vertex chunks be stolen *across shard processes* in a
+    /// distributed run. The hot queue is a shared-memory structure that
+    /// cannot cross a process boundary, so this is not implemented: asking
+    /// for it with more than one shard yields [`EngineError::Config`]
+    /// instead of silently dropping chunks. In-process runs ignore the
+    /// flag (every worker already shares one queue).
+    pub hot_split_cross_shard: bool,
 }
 
 impl Default for EngineOpts {
@@ -136,6 +144,7 @@ impl Default for EngineOpts {
             cache_capacity: None,
             hot_degree_threshold: None,
             strict_memory: false,
+            hot_split_cross_shard: false,
         }
     }
 }
@@ -173,6 +182,14 @@ pub enum EngineError {
     /// Writing a superstep checkpoint failed persistently (after the
     /// transient-IO retries); no partial file is left behind.
     Checkpoint { superstep: u32, detail: String },
+    /// The requested run configuration is invalid (e.g. cross-shard hot
+    /// splitting, which shared-memory work stealing cannot provide).
+    Config { detail: String },
+    /// A shard process failed or its transport broke mid-run; the
+    /// coordinator aborts the unit and surfaces the first failure.
+    /// `shard == usize::MAX` means the failure was on the coordinator
+    /// side (launch, accept, or frame forwarding).
+    ShardFailed { shard: usize, detail: String },
 }
 
 impl std::fmt::Display for EngineError {
@@ -196,6 +213,14 @@ impl std::fmt::Display for EngineError {
             ),
             EngineError::Checkpoint { superstep, detail } => {
                 write!(f, "checkpoint at superstep {superstep} failed: {detail}")
+            }
+            EngineError::Config { detail } => write!(f, "invalid configuration: {detail}"),
+            EngineError::ShardFailed { shard, detail } => {
+                if *shard == usize::MAX {
+                    write!(f, "coordinator failed: {detail}")
+                } else {
+                    write!(f, "shard {shard} failed: {detail}")
+                }
             }
         }
     }
@@ -530,7 +555,11 @@ impl PoisonBarrier {
 
 /// Checkpoint control shared by the workers of one checkpointed run.
 struct CkptCtl<P: VertexProgram> {
-    spec: CheckpointSpec,
+    /// `Some` for in-process runs, which write the FN2VCKP1 file
+    /// themselves; `None` for shard processes, which instead ship their
+    /// encoded parts to the coordinator (the coordinator holds the spec
+    /// and decides the cadence via [`Decision::Continue`]).
+    spec: Option<CheckpointSpec>,
     /// Monomorphic encoders captured where the `Persist` bounds hold, so
     /// the shared worker loop needs no bounds of its own.
     persist_value: fn(&P::Value, &mut Vec<u8>),
@@ -541,6 +570,46 @@ struct CkptCtl<P: VertexProgram> {
     parts: Mutex<Vec<Option<EncodedPart>>>,
     written: AtomicU64,
     nanos: AtomicU64,
+}
+
+/// Per-destination-shard outbound buffer: messages crossing the process
+/// boundary are encoded with the real wire codec as workers flush, then
+/// drained into one [`FrameKind::Data`] frame per destination by the
+/// shard leader at the barrier.
+#[derive(Default)]
+struct OutBuf {
+    bytes: Vec<u8>,
+    msgs: u64,
+    /// Self-reported `Msg::wire_bytes()` sum (the simulated accounting the
+    /// paper's figures use — kept so budget decisions are bit-identical to
+    /// the in-process engine).
+    sim_bytes: u64,
+    /// Measured encoded size (entry framing included) — what actually hits
+    /// the transport, reported as `bytes_remote` by the coordinator.
+    wire_bytes: u64,
+}
+
+/// Distributed-run control handed to [`worker_loop`] when this process is
+/// one shard of a multi-process run. Workers `first..first + wps` of the
+/// global worker space run here; everything else is remote. The shard
+/// leader (barrier leader) speaks the coordinator protocol instead of
+/// playing master itself.
+pub(crate) struct RemoteCtl<'c, P: VertexProgram> {
+    shard: usize,
+    shards: usize,
+    /// Workers per shard; global worker `w` lives on shard `w / wps`.
+    wps: usize,
+    /// First global worker index of this shard (`shard * wps`).
+    first: usize,
+    /// The duplex connection to the coordinator. Only the shard leader
+    /// touches it during the exchange, but it must be shareable across
+    /// the worker threads because any of them can be the leader.
+    conn: &'c Mutex<Box<dyn Transport>>,
+    /// One outbound buffer per destination shard (own slot unused).
+    outbound: Vec<Mutex<OutBuf>>,
+    /// Monomorphic wire codecs (same trick as [`CkptCtl`]'s persist fns).
+    encode_entry: fn(VertexId, &P::Msg, &mut Vec<u8>) -> u64,
+    decode_entry: fn(&mut ByteReader<'_>) -> Result<(VertexId, P::Msg), String>,
 }
 
 /// Shared state across worker threads for one run.
@@ -615,7 +684,7 @@ impl<'g, P: VertexProgram> Engine<'g, P> {
     /// [`Engine::run`] against a prebuilt [`WorkerPlan`] (must have been
     /// built from this engine's partitioner over this graph's vertices).
     pub fn run_on(&self, plan: &WorkerPlan) -> Result<RunResult<P::Value>, EngineError> {
-        self.run_inner(plan, None, None)
+        self.run_inner(plan, None, None, None)
     }
 
     /// [`Engine::run_on`], writing an FN2VCKP1 checkpoint every
@@ -630,7 +699,7 @@ impl<'g, P: VertexProgram> Engine<'g, P> {
         P::Value: Persist,
         P::Msg: Persist,
     {
-        self.run_inner(plan, None, Some(self.ckpt_ctl(plan, spec)))
+        self.run_inner(plan, None, Some(self.ckpt_ctl(plan, Some(spec))), None)
     }
 
     /// Restart from a checkpoint-reconstructed snapshot, optionally
@@ -649,17 +718,71 @@ impl<'g, P: VertexProgram> Engine<'g, P> {
         P::Value: Persist,
         P::Msg: Persist,
     {
-        let ckpt = spec.map(|s| self.ckpt_ctl(plan, s));
-        self.run_inner(plan, Some(snapshot), ckpt)
+        let ckpt = spec.map(|s| self.ckpt_ctl(plan, Some(s)));
+        self.run_inner(plan, Some(snapshot), ckpt, None)
     }
 
-    fn ckpt_ctl(&self, plan: &WorkerPlan, spec: &CheckpointSpec) -> CkptCtl<P>
+    /// Run this engine as shard `shard` of a `shards`-process distributed
+    /// run, speaking the coordinator protocol over `conn`. The global
+    /// worker space is `plan.num_workers()` wide; this process executes
+    /// workers `shard * wps .. (shard + 1) * wps` and exchanges
+    /// cross-shard messages through the coordinator as encoded
+    /// [`FrameKind::Data`] frames. All master decisions (quiescence, OOM,
+    /// superstep cap, checkpoint cadence) arrive as [`Decision`] frames;
+    /// when `ckpt_active` the shard ships encoded checkpoint parts to the
+    /// coordinator instead of writing files itself.
+    pub fn run_sharded(
+        &self,
+        plan: &WorkerPlan,
+        shard: usize,
+        shards: usize,
+        conn: &Mutex<Box<dyn Transport>>,
+        ckpt_active: bool,
+        resume: Option<EngineSnapshot<P>>,
+    ) -> Result<RunResult<P::Value>, EngineError>
+    where
+        P::Value: Persist,
+        P::Msg: Persist + WireMsg,
+    {
+        let w = self.part.num_workers();
+        if shards == 0 || w % shards != 0 {
+            return Err(EngineError::Config {
+                detail: format!("{w} workers do not divide evenly into {shards} shards"),
+            });
+        }
+        if self.opts.hot_split_cross_shard && shards > 1 {
+            return Err(EngineError::Config {
+                detail: "cross-shard hot splitting is not available: the hot queue is \
+                         shared memory and cannot cross a process boundary"
+                    .to_string(),
+            });
+        }
+        let wps = w / shards;
+        let rc = RemoteCtl::<P> {
+            shard,
+            shards,
+            wps,
+            first: shard * wps,
+            conn,
+            outbound: (0..shards).map(|_| Mutex::new(OutBuf::default())).collect(),
+            encode_entry: transport::encode_entry::<P::Msg>,
+            decode_entry: transport::decode_entry::<P::Msg>,
+        };
+        let ckpt = if ckpt_active {
+            Some(self.ckpt_ctl(plan, None))
+        } else {
+            None
+        };
+        self.run_inner(plan, resume, ckpt, Some(&rc))
+    }
+
+    fn ckpt_ctl(&self, plan: &WorkerPlan, spec: Option<&CheckpointSpec>) -> CkptCtl<P>
     where
         P::Value: Persist,
         P::Msg: Persist,
     {
         CkptCtl {
-            spec: spec.clone(),
+            spec: spec.cloned(),
             persist_value: <P::Value as Persist>::persist,
             persist_msg: <P::Msg as Persist>::persist,
             due: AtomicBool::new(false),
@@ -674,6 +797,7 @@ impl<'g, P: VertexProgram> Engine<'g, P> {
         plan: &WorkerPlan,
         resume: Option<EngineSnapshot<P>>,
         ckpt: Option<CkptCtl<P>>,
+        remote: Option<&RemoteCtl<'_, P>>,
     ) -> Result<RunResult<P::Value>, EngineError> {
         let w = self.part.num_workers();
         let n = self.graph.num_vertices();
@@ -690,8 +814,14 @@ impl<'g, P: VertexProgram> Engine<'g, P> {
         let t_run = Instant::now();
         let start_superstep = resume.as_ref().map_or(0, |s| s.superstep);
 
+        // In a sharded run only this shard's workers exist as threads, so
+        // the barrier synchronizes `wps` parties, not the global count.
+        let local_workers: Vec<usize> = match remote {
+            Some(rc) => (rc.first..rc.first + rc.wps).collect(),
+            None => (0..w).collect(),
+        };
         let shared: Shared<P> = Shared {
-            barrier: PoisonBarrier::new(w),
+            barrier: PoisonBarrier::new(local_workers.len()),
             cur_superstep: AtomicU32::new(start_superstep),
             ckpt,
             inboxes: [
@@ -740,6 +870,13 @@ impl<'g, P: VertexProgram> Engine<'g, P> {
                 let parity = (superstep % 2) as usize;
                 for (dst, msg) in messages {
                     let dw = self.part.worker_of(dst);
+                    // Sharded resume: the snapshot is broadcast whole, each
+                    // shard keeps only the messages its workers own.
+                    if let Some(rc) = remote {
+                        if dw / rc.wps != rc.shard {
+                            continue;
+                        }
+                    }
                     shared.inboxes[parity][dw].lock().unwrap().push((dst, msg));
                 }
                 let mut dense = values;
@@ -772,8 +909,11 @@ impl<'g, P: VertexProgram> Engine<'g, P> {
 
         let worker_outputs: Vec<Vec<P::Value>> = std::thread::scope(|scope| {
             let shared = &shared;
-            let mut handles = Vec::with_capacity(w);
+            let mut handles = Vec::with_capacity(local_workers.len());
             for (me, start) in starts.into_iter().enumerate() {
+                if !local_workers.contains(&me) {
+                    continue;
+                }
                 let program = &self.program;
                 let graph = self.graph;
                 let part = &self.part;
@@ -794,6 +934,7 @@ impl<'g, P: VertexProgram> Engine<'g, P> {
                             opts,
                             graph_bytes,
                             start,
+                            remote,
                         )
                     }));
                     run.unwrap_or_else(|payload| {
@@ -832,10 +973,12 @@ impl<'g, P: VertexProgram> Engine<'g, P> {
             return Err(err);
         }
 
-        // Scatter worker-local values back to a dense vid-indexed vec.
+        // Scatter worker-local values back to a dense vid-indexed vec (in
+        // a sharded run only this shard's workers contributed; the rest of
+        // the vec stays `Default` and the coordinator assembles the whole).
         let mut values: Vec<P::Value> = Vec::with_capacity(n);
         values.resize_with(n, Default::default);
-        for (me, vals) in worker_outputs.into_iter().enumerate() {
+        for (&me, vals) in local_workers.iter().zip(worker_outputs) {
             for (&vid, val) in plan.vertices(me).iter().zip(vals) {
                 values[vid as usize] = val;
             }
@@ -941,13 +1084,18 @@ fn worker_loop<P: VertexProgram>(
     opts: EngineOpts,
     graph_bytes: u64,
     start: WorkerStart<P>,
+    remote: Option<&RemoteCtl<'_, P>>,
 ) -> Vec<P::Value> {
     // Hot splitting is pointless on a single worker or for a program that
     // never opts in; the decision must be uniform across workers (it adds
     // a barrier) and it is: every worker sees the same opts, partitioner
-    // and program instance.
+    // and program instance. In a sharded run the hot queue is shared
+    // memory, so stealing is confined to *this shard's* workers: the
+    // gate counts local workers, not the global worker space (the fix for
+    // the cross-process stealing bug — see `EngineOpts::hot_split_cross_shard`).
+    let local_workers = remote.map_or_else(|| part.num_workers(), |rc| rc.wps);
     let hot_threshold = match opts.hot_degree_threshold {
-        Some(t) if part.num_workers() > 1 && program.supports_hot_split() => Some(t),
+        Some(t) if local_workers > 1 && program.supports_hot_split() => Some(t),
         _ => None,
     };
     let mut values: Vec<P::Value> = start.values.unwrap_or_else(|| {
@@ -1016,7 +1164,7 @@ fn worker_loop<P: VertexProgram>(
             if let Some(threshold) = hot_threshold {
                 if msgs.len() >= HOT_MIN_SPLIT_MSGS && graph.degree(vid) >= threshold as usize
                 {
-                    offload_hot_messages::<P>(program, me, vid, msgs, part.num_workers(), shared);
+                    offload_hot_messages::<P>(program, me, vid, msgs, local_workers, shared);
                 }
             }
             halted[li] = false;
@@ -1077,9 +1225,26 @@ fn worker_loop<P: VertexProgram>(
         shared.worker_msgs[me].store(counters.msgs_handled, Ordering::Relaxed);
 
         // ---- flush outgoing messages into destination inboxes ----
+        // Within-shard destinations append straight into the next-parity
+        // inbox. In a sharded run, messages for workers on other shards
+        // are instead encoded with the real wire codec into the
+        // per-destination-shard outbound buffer; the shard leader ships
+        // them as Data frames at the barrier.
         for (dst_worker, buf) in out.iter_mut().enumerate() {
             if buf.is_empty() {
                 continue;
+            }
+            if let Some(rc) = remote {
+                let ds = dst_worker / rc.wps;
+                if ds != rc.shard {
+                    let mut ob = rc.outbound[ds].lock().unwrap();
+                    for (dst, msg) in buf.drain(..) {
+                        ob.sim_bytes += msg.wire_bytes();
+                        ob.wire_bytes += (rc.encode_entry)(dst, &msg, &mut ob.bytes);
+                        ob.msgs += 1;
+                    }
+                    continue;
+                }
             }
             shared.inboxes[1 - parity][dst_worker]
                 .lock()
@@ -1111,79 +1276,15 @@ fn worker_loop<P: VertexProgram>(
             return values;
         }
         if wait.is_leader() {
-            let msg_mem = shared.bytes_local.load(Ordering::Relaxed)
-                + shared.bytes_remote.load(Ordering::Relaxed);
-            let cache_total = shared.cache_bytes.load(Ordering::Relaxed);
-            let value_total = shared.value_bytes.load(Ordering::Relaxed);
-            let sm = SuperstepMetrics {
-                superstep,
-                active_vertices: shared.active.load(Ordering::Relaxed),
-                msgs_local: shared.msgs_local.load(Ordering::Relaxed),
-                msgs_remote: shared.msgs_remote.load(Ordering::Relaxed),
-                bytes_local: shared.bytes_local.load(Ordering::Relaxed),
-                bytes_remote: shared.bytes_remote.load(Ordering::Relaxed),
-                msg_mem_bytes: msg_mem,
-                cache_bytes: cache_total,
-                wall_secs: step_start.elapsed().as_secs_f64(),
-                worker_compute_secs: shared
-                    .worker_compute_nanos
-                    .iter()
-                    .map(|c| c.load(Ordering::Relaxed) as f64 * 1e-9)
-                    .collect(),
-                worker_msgs_handled: shared
-                    .worker_msgs
-                    .iter()
-                    .map(|c| c.load(Ordering::Relaxed))
-                    .collect(),
-                hot_split_tasks: shared.hot_tasks.load(Ordering::Relaxed),
-            };
-            let total_msgs = sm.msgs_local + sm.msgs_remote;
-            let not_halted = shared.not_halted.load(Ordering::Relaxed);
-            shared.metrics.lock().unwrap().push(sm);
-
-            let current = graph_bytes + value_total + msg_mem + cache_total;
-            shared.peak_bytes.fetch_max(current, Ordering::Relaxed);
-
-            // Termination / error decisions.
-            let mut stopping = false;
-            if let Some(budget) = opts.memory_budget {
-                if current > budget {
-                    *shared.error.lock().unwrap() = Some(EngineError::OutOfMemory {
-                        superstep,
-                        bytes: current,
-                    });
-                    stopping = true;
-                }
+            match remote {
+                // Shard leader: ship cross-shard messages and this shard's
+                // barrier report to the coordinator, then apply its
+                // decision. The master role lives on the coordinator.
+                Some(rc) => shard_leader_exchange::<P>(rc, part, shared, superstep),
+                // In-process leader plays master directly.
+                None => master_step::<P>(shared, opts, graph_bytes, superstep, &step_start),
             }
-            if total_msgs == 0 && not_halted == 0 {
-                stopping = true;
-            } else if superstep + 1 >= opts.max_supersteps {
-                *shared.error.lock().unwrap() = Some(EngineError::DidNotTerminate {
-                    supersteps: superstep + 1,
-                });
-                stopping = true;
-            }
-            if stopping {
-                shared.stop.store(true, Ordering::Relaxed);
-            } else if let Some(ckpt) = shared.ckpt.as_ref() {
-                // Checkpoint cadence: after superstep boundaries where one
-                // more superstep will actually run. `superstep + 1` is the
-                // superstep a resume would execute next.
-                if (superstep + 1) % ckpt.spec.every.max(1) == 0 {
-                    ckpt.due.store(true, Ordering::Relaxed);
-                }
-            }
-
-            // Reset per-step accumulators.
-            shared.msgs_local.store(0, Ordering::Relaxed);
-            shared.msgs_remote.store(0, Ordering::Relaxed);
-            shared.bytes_local.store(0, Ordering::Relaxed);
-            shared.bytes_remote.store(0, Ordering::Relaxed);
-            shared.active.store(0, Ordering::Relaxed);
-            shared.not_halted.store(0, Ordering::Relaxed);
-            shared.cache_bytes.store(0, Ordering::Relaxed);
-            shared.value_bytes.store(0, Ordering::Relaxed);
-            shared.hot_tasks.store(0, Ordering::Relaxed);
+            reset_step_accumulators::<P>(shared);
         }
         // Second barrier: everyone observes the leader's decision.
         if shared.barrier.wait().poisoned() {
@@ -1226,29 +1327,43 @@ fn worker_loop<P: VertexProgram>(
                         let mut slots = ckpt.parts.lock().unwrap();
                         slots.iter_mut().map(|s| s.take().unwrap_or_default()).collect()
                     };
-                    let t_ckpt = Instant::now();
-                    let written = checkpoint::write_checkpoint(
-                        &ckpt.spec,
-                        superstep + 1,
-                        graph.num_vertices() as u32,
-                        parts,
-                    );
-                    match written {
-                        Ok(_) => {
-                            ckpt.written.fetch_add(1, Ordering::Relaxed);
-                            let nanos = t_ckpt.elapsed().as_nanos() as u64;
-                            ckpt.nanos.fetch_add(nanos, Ordering::Relaxed);
+                    match remote {
+                        // Shard leader: ship this shard's encoded part to
+                        // the coordinator, which assembles all shards into
+                        // one FN2VCKP1 file, and wait for the verdict.
+                        Some(rc) => {
+                            shard_leader_checkpoint::<P>(rc, part, shared, superstep, parts)
                         }
-                        Err(e) => {
-                            let mut err = shared.error.lock().unwrap();
-                            if err.is_none() {
-                                *err = Some(EngineError::Checkpoint {
-                                    superstep,
-                                    detail: e.to_string(),
-                                });
+                        None => {
+                            let spec = ckpt
+                                .spec
+                                .as_ref()
+                                .expect("in-process checkpoint runs carry a spec");
+                            let t_ckpt = Instant::now();
+                            let written = checkpoint::write_checkpoint(
+                                spec,
+                                superstep + 1,
+                                graph.num_vertices() as u32,
+                                parts,
+                            );
+                            match written {
+                                Ok(_) => {
+                                    ckpt.written.fetch_add(1, Ordering::Relaxed);
+                                    let nanos = t_ckpt.elapsed().as_nanos() as u64;
+                                    ckpt.nanos.fetch_add(nanos, Ordering::Relaxed);
+                                }
+                                Err(e) => {
+                                    let mut err = shared.error.lock().unwrap();
+                                    if err.is_none() {
+                                        *err = Some(EngineError::Checkpoint {
+                                            superstep,
+                                            detail: e.to_string(),
+                                        });
+                                    }
+                                    drop(err);
+                                    shared.stop.store(true, Ordering::Relaxed);
+                                }
                             }
-                            drop(err);
-                            shared.stop.store(true, Ordering::Relaxed);
                         }
                     }
                     ckpt.due.store(false, Ordering::Relaxed);
@@ -1266,6 +1381,386 @@ fn worker_loop<P: VertexProgram>(
         step_start = Instant::now();
     }
     values
+}
+
+/// The in-process leader's master role: aggregate the superstep's
+/// counters into a [`SuperstepMetrics`] record, check the memory budget,
+/// decide termination, and mark checkpoint cadence.
+fn master_step<P: VertexProgram>(
+    shared: &Shared<P>,
+    opts: EngineOpts,
+    graph_bytes: u64,
+    superstep: u32,
+    step_start: &Instant,
+) {
+    let msg_mem =
+        shared.bytes_local.load(Ordering::Relaxed) + shared.bytes_remote.load(Ordering::Relaxed);
+    let cache_total = shared.cache_bytes.load(Ordering::Relaxed);
+    let value_total = shared.value_bytes.load(Ordering::Relaxed);
+    let sm = SuperstepMetrics {
+        superstep,
+        active_vertices: shared.active.load(Ordering::Relaxed),
+        msgs_local: shared.msgs_local.load(Ordering::Relaxed),
+        msgs_remote: shared.msgs_remote.load(Ordering::Relaxed),
+        bytes_local: shared.bytes_local.load(Ordering::Relaxed),
+        bytes_remote: shared.bytes_remote.load(Ordering::Relaxed),
+        msg_mem_bytes: msg_mem,
+        cache_bytes: cache_total,
+        wall_secs: step_start.elapsed().as_secs_f64(),
+        worker_compute_secs: shared
+            .worker_compute_nanos
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed) as f64 * 1e-9)
+            .collect(),
+        worker_msgs_handled: shared
+            .worker_msgs
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect(),
+        hot_split_tasks: shared.hot_tasks.load(Ordering::Relaxed),
+    };
+    let total_msgs = sm.msgs_local + sm.msgs_remote;
+    let not_halted = shared.not_halted.load(Ordering::Relaxed);
+    shared.metrics.lock().unwrap().push(sm);
+
+    let current = graph_bytes + value_total + msg_mem + cache_total;
+    shared.peak_bytes.fetch_max(current, Ordering::Relaxed);
+
+    // Termination / error decisions.
+    let mut stopping = false;
+    if let Some(budget) = opts.memory_budget {
+        if current > budget {
+            *shared.error.lock().unwrap() = Some(EngineError::OutOfMemory {
+                superstep,
+                bytes: current,
+            });
+            stopping = true;
+        }
+    }
+    if total_msgs == 0 && not_halted == 0 {
+        stopping = true;
+    } else if superstep + 1 >= opts.max_supersteps {
+        *shared.error.lock().unwrap() = Some(EngineError::DidNotTerminate {
+            supersteps: superstep + 1,
+        });
+        stopping = true;
+    }
+    if stopping {
+        shared.stop.store(true, Ordering::Relaxed);
+    } else if let Some(ckpt) = shared.ckpt.as_ref() {
+        // Checkpoint cadence: after superstep boundaries where one more
+        // superstep will actually run. `superstep + 1` is the superstep a
+        // resume would execute next. Shard runs have no local spec — the
+        // coordinator owns the cadence and signals it in the decision.
+        if let Some(spec) = ckpt.spec.as_ref() {
+            if (superstep + 1) % spec.every.max(1) == 0 {
+                ckpt.due.store(true, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+/// Reset the per-superstep accumulators (leader-only, between barriers).
+fn reset_step_accumulators<P: VertexProgram>(shared: &Shared<P>) {
+    shared.msgs_local.store(0, Ordering::Relaxed);
+    shared.msgs_remote.store(0, Ordering::Relaxed);
+    shared.bytes_local.store(0, Ordering::Relaxed);
+    shared.bytes_remote.store(0, Ordering::Relaxed);
+    shared.active.store(0, Ordering::Relaxed);
+    shared.not_halted.store(0, Ordering::Relaxed);
+    shared.cache_bytes.store(0, Ordering::Relaxed);
+    shared.value_bytes.store(0, Ordering::Relaxed);
+    shared.hot_tasks.store(0, Ordering::Relaxed);
+}
+
+/// Record a shard-side failure (first error wins) and stop the run.
+fn fail_shard<P: VertexProgram>(shared: &Shared<P>, err: EngineError) {
+    let mut slot = shared.error.lock().unwrap_or_else(|p| p.into_inner());
+    if slot.is_none() {
+        *slot = Some(err);
+    }
+    drop(slot);
+    shared.stop.store(true, Ordering::Relaxed);
+}
+
+fn shard_err(shard: usize, detail: String) -> EngineError {
+    EngineError::ShardFailed { shard, detail }
+}
+
+/// The shard leader's half of the coordinator barrier protocol for one
+/// superstep: drain the outbound buffers into one `Data` frame per
+/// destination shard, send this shard's `Barrier` report, then receive
+/// until the coordinator's `Decision` arrives — delivering any forwarded
+/// `Data` frames into the local inboxes on the way.
+///
+/// Safe to deliver while siblings wait: non-leader workers are parked at
+/// the decision barrier, and per-connection FIFO ordering guarantees every
+/// `Data` frame for superstep `s` is forwarded before the coordinator's
+/// `Decision` for `s` (the coordinator only decides after all barrier
+/// reports, and forwards each shard's data before processing its barrier).
+fn shard_leader_exchange<P: VertexProgram>(
+    rc: &RemoteCtl<'_, P>,
+    part: &Partitioner,
+    shared: &Shared<P>,
+    superstep: u32,
+) {
+    if let Err(e) = shard_exchange_inner(rc, part, shared, superstep) {
+        fail_shard(shared, e);
+    }
+}
+
+fn shard_exchange_inner<P: VertexProgram>(
+    rc: &RemoteCtl<'_, P>,
+    part: &Partitioner,
+    shared: &Shared<P>,
+    superstep: u32,
+) -> Result<(), EngineError> {
+    let me = rc.shard;
+    let my_workers = rc.first..rc.first + rc.wps;
+    let mut report = ShardReport {
+        superstep,
+        active: shared.active.load(Ordering::Relaxed),
+        not_halted: shared.not_halted.load(Ordering::Relaxed),
+        msgs_within: 0,
+        msgs_cross: 0,
+        bytes_within: 0,
+        bytes_cross_sim: 0,
+        bytes_cross_wire: 0,
+        cache_bytes: shared.cache_bytes.load(Ordering::Relaxed),
+        value_bytes: shared.value_bytes.load(Ordering::Relaxed),
+        hot_tasks: shared.hot_tasks.load(Ordering::Relaxed),
+        compute_nanos: my_workers
+            .clone()
+            .map(|w| shared.worker_compute_nanos[w].load(Ordering::Relaxed))
+            .collect(),
+        msgs_handled: my_workers
+            .clone()
+            .map(|w| shared.worker_msgs[w].load(Ordering::Relaxed))
+            .collect(),
+    };
+    let mut conn = rc.conn.lock().unwrap_or_else(|p| p.into_inner());
+    for ds in 0..rc.shards {
+        if ds == me {
+            continue;
+        }
+        let payload = {
+            let mut ob = rc.outbound[ds].lock().unwrap_or_else(|p| p.into_inner());
+            report.msgs_cross += ob.msgs;
+            report.bytes_cross_sim += ob.sim_bytes;
+            report.bytes_cross_wire += ob.wire_bytes;
+            ob.msgs = 0;
+            ob.sim_bytes = 0;
+            ob.wire_bytes = 0;
+            std::mem::take(&mut ob.bytes)
+        };
+        if payload.is_empty() {
+            continue;
+        }
+        conn.send(&Frame::new(
+            FrameKind::Data,
+            me as u8,
+            ds as u8,
+            superstep,
+            payload,
+        ))
+        .map_err(|e| shard_err(me, format!("sending data frame: {e}")))?;
+    }
+    // Within-shard traffic = everything the simulated accounting charged,
+    // minus what actually crossed the process boundary. The coordinator
+    // recombines the two so budget decisions match the in-process engine
+    // bit for bit while `bytes_remote` reports *measured* frame bytes.
+    let msgs_total =
+        shared.msgs_local.load(Ordering::Relaxed) + shared.msgs_remote.load(Ordering::Relaxed);
+    let bytes_total =
+        shared.bytes_local.load(Ordering::Relaxed) + shared.bytes_remote.load(Ordering::Relaxed);
+    report.msgs_within = msgs_total - report.msgs_cross;
+    report.bytes_within = bytes_total - report.bytes_cross_sim;
+    conn.send(&Frame::new(
+        FrameKind::Barrier,
+        me as u8,
+        COORD_ID,
+        superstep,
+        report.encode(),
+    ))
+    .map_err(|e| shard_err(me, format!("sending barrier report: {e}")))?;
+
+    loop {
+        let frame = conn
+            .recv()
+            .map_err(|e| shard_err(me, format!("awaiting decision: {e}")))?;
+        match frame.kind {
+            FrameKind::Data => {
+                let t = frame.superstep;
+                if t != superstep && t != superstep + 1 {
+                    return Err(shard_err(
+                        me,
+                        format!("data frame for superstep {t} during superstep {superstep}"),
+                    ));
+                }
+                deliver_data_frame(rc, part, shared, &frame)?;
+            }
+            FrameKind::Decision => {
+                let d = Decision::decode(&frame.payload)
+                    .map_err(|e| shard_err(me, format!("bad decision frame: {e}")))?;
+                apply_decision(shared, d, me)?;
+                return Ok(());
+            }
+            other => {
+                return Err(shard_err(
+                    me,
+                    format!("unexpected {other:?} frame while awaiting decision"),
+                ));
+            }
+        }
+    }
+}
+
+/// Decode a forwarded `Data` frame and push its entries into the local
+/// next-parity inboxes. Messages tagged with superstep `t` were sent
+/// *during* `t`, so their delivery superstep is `t + 1` and the right
+/// inbox is `inboxes[(t + 1) % 2]`.
+fn deliver_data_frame<P: VertexProgram>(
+    rc: &RemoteCtl<'_, P>,
+    part: &Partitioner,
+    shared: &Shared<P>,
+    frame: &Frame,
+) -> Result<(), EngineError> {
+    let me = rc.shard;
+    let slot = ((frame.superstep as usize) + 1) % 2;
+    let mut r = ByteReader::new(&frame.payload);
+    while !r.is_empty() {
+        let (dst, msg) = (rc.decode_entry)(&mut r)
+            .map_err(|e| shard_err(me, format!("bad data entry from shard {}: {e}", frame.src)))?;
+        let dw = part.worker_of(dst);
+        if dw / rc.wps != me {
+            return Err(shard_err(
+                me,
+                format!("misrouted message for vertex {dst} (worker {dw})"),
+            ));
+        }
+        shared.inboxes[slot][dw].lock().unwrap().push((dst, msg));
+    }
+    Ok(())
+}
+
+/// Apply a coordinator decision on the shard. Stop decisions reproduce the
+/// in-process master's typed errors so the session driver's FN-Multi
+/// degradation sees exactly what it would see single-process.
+fn apply_decision<P: VertexProgram>(
+    shared: &Shared<P>,
+    d: Decision,
+    me: usize,
+) -> Result<(), EngineError> {
+    match d {
+        Decision::Continue { checkpoint } => {
+            if checkpoint {
+                if let Some(ckpt) = shared.ckpt.as_ref() {
+                    ckpt.due.store(true, Ordering::Relaxed);
+                } else {
+                    return Err(shard_err(
+                        me,
+                        "checkpoint requested but run has no checkpoint control".to_string(),
+                    ));
+                }
+            }
+        }
+        Decision::Stop => shared.stop.store(true, Ordering::Relaxed),
+        Decision::StopOom { superstep, bytes } => {
+            fail_shard(
+                shared,
+                EngineError::OutOfMemory { superstep, bytes },
+            );
+        }
+        Decision::StopCap { supersteps } => {
+            fail_shard(shared, EngineError::DidNotTerminate { supersteps });
+        }
+        Decision::Abort { detail } => {
+            return Err(shard_err(me, format!("unit aborted: {detail}")));
+        }
+    }
+    Ok(())
+}
+
+/// The shard leader's half of the checkpoint phase: merge this shard's
+/// per-worker encoded parts into one `CkptPart` frame, ship it, and wait
+/// for the coordinator's `CkptResult` verdict (the coordinator assembles
+/// every shard's part into a single FN2VCKP1 file, so sharded checkpoints
+/// are interchangeable with in-process ones).
+fn shard_leader_checkpoint<P: VertexProgram>(
+    rc: &RemoteCtl<'_, P>,
+    part: &Partitioner,
+    shared: &Shared<P>,
+    superstep: u32,
+    parts: Vec<EncodedPart>,
+) {
+    if let Err(e) = shard_checkpoint_inner(rc, part, shared, superstep, parts) {
+        fail_shard(shared, e);
+    }
+}
+
+fn shard_checkpoint_inner<P: VertexProgram>(
+    rc: &RemoteCtl<'_, P>,
+    part: &Partitioner,
+    shared: &Shared<P>,
+    superstep: u32,
+    parts: Vec<EncodedPart>,
+) -> Result<(), EngineError> {
+    let me = rc.shard;
+    let mut merged = EncodedPart::default();
+    for p in parts {
+        merged.value_count += p.value_count;
+        merged.values.extend_from_slice(&p.values);
+        merged.msg_count += p.msg_count;
+        merged.msgs.extend_from_slice(&p.msgs);
+    }
+    let mut payload =
+        Vec::with_capacity(32 + merged.values.len() + merged.msgs.len());
+    payload.extend_from_slice(&merged.value_count.to_le_bytes());
+    payload.extend_from_slice(&(merged.values.len() as u64).to_le_bytes());
+    payload.extend_from_slice(&merged.values);
+    payload.extend_from_slice(&merged.msg_count.to_le_bytes());
+    payload.extend_from_slice(&(merged.msgs.len() as u64).to_le_bytes());
+    payload.extend_from_slice(&merged.msgs);
+
+    let mut conn = rc.conn.lock().unwrap_or_else(|p| p.into_inner());
+    conn.send(&Frame::new(
+        FrameKind::CkptPart,
+        me as u8,
+        COORD_ID,
+        superstep,
+        payload,
+    ))
+    .map_err(|e| shard_err(me, format!("sending checkpoint part: {e}")))?;
+
+    loop {
+        let frame = conn
+            .recv()
+            .map_err(|e| shard_err(me, format!("awaiting checkpoint result: {e}")))?;
+        match frame.kind {
+            FrameKind::Data => deliver_data_frame(rc, part, shared, &frame)?,
+            FrameKind::CkptResult => {
+                let mut r = ByteReader::new(&frame.payload);
+                let ok = r
+                    .u8()
+                    .map_err(|e| shard_err(me, format!("bad checkpoint result: {e}")))?;
+                if ok == 0 {
+                    let rem = r.remaining();
+                    let detail =
+                        String::from_utf8_lossy(r.take(rem).unwrap_or_default()).into_owned();
+                    // Mirror the in-process write-failure path: typed
+                    // error, stop the run, no partial progress claimed.
+                    fail_shard(shared, EngineError::Checkpoint { superstep, detail });
+                }
+                return Ok(());
+            }
+            other => {
+                return Err(shard_err(
+                    me,
+                    format!("unexpected {other:?} frame while awaiting checkpoint result"),
+                ));
+            }
+        }
+    }
 }
 
 #[cfg(test)]

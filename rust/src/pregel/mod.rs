@@ -23,12 +23,14 @@
 pub mod checkpoint;
 mod engine;
 mod metrics;
+pub mod transport;
 
 pub use checkpoint::{
     Checkpoint, CheckpointMeta, CheckpointSpec, EngineSnapshot, Persist, ScheduleState, UnitId,
 };
 pub use engine::{Ctx, Engine, EngineError, EngineOpts, RunResult, VertexProgram, WorkerPlan};
 pub use metrics::{EngineMetrics, SuperstepMetrics};
+pub use transport::{Frame, FrameError, FrameKind, Transport, WireMsg};
 
 /// Messages must report their simulated wire size; the engine charges it to
 /// the per-superstep accounting that reproduces the paper's Figures 4/14.

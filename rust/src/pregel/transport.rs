@@ -1,0 +1,856 @@
+//! The distributed transport: length-prefixed, checksummed frames between
+//! shard processes and the L3 coordinator, plus the compact wire codec for
+//! FN messages and delta-encoded walk state.
+//!
+//! The shard-per-process engine keeps the BSP structure of
+//! [`super::engine`] untouched: workers still exchange messages through
+//! per-worker inboxes, and only the *shard boundary* is crossed by this
+//! module. Topology is hub-and-spoke — every shard holds exactly one
+//! duplex connection to the coordinator, which forwards cross-shard data
+//! frames and multiplexes control (barrier reports, decisions, checkpoint
+//! parts) on the same ordered stream. That single-connection discipline is
+//! what makes the ordering argument in `coordinator/` airtight: all frames
+//! a shard sends are observed in send order, and the coordinator never
+//! emits a superstep decision before it has forwarded every data frame of
+//! that superstep.
+//!
+//! # Frame layout (all little-endian)
+//!
+//! | bytes  | field                                         |
+//! |--------|-----------------------------------------------|
+//! | 0..4   | magic `"FN2T"`                                |
+//! | 4      | kind ([`FrameKind`])                          |
+//! | 5      | source shard                                  |
+//! | 6      | destination shard                             |
+//! | 7      | reserved (0)                                  |
+//! | 8..12  | superstep                                     |
+//! | 12..16 | payload length                                |
+//! | 16..24 | fxhash64 of the payload                       |
+//!
+//! Validation mirrors the FN2VGRF2 store: magic → kind → length bound →
+//! payload checksum, each failure a typed [`FrameError`]. The two
+//! [`Transport`] implementations share the codec byte-for-byte: the
+//! in-process channel transport carries fully *encoded* frames through an
+//! `mpsc` pair, so checksums and decode paths are exercised identically
+//! whether shards are threads or processes.
+//!
+//! # Wire message entries
+//!
+//! Cross-shard FN messages travel inside `Data` frames as a sequence of
+//! entries: `[entry_len: u32][dst: u32][encoded message]`. The encoded
+//! message is exactly [`crate::pregel::Message::wire_bytes`] bytes — the
+//! simulated wire size the engine has always charged — and
+//! [`encode_entry`] debug-asserts that equality, so the measured
+//! `bytes_remote` metric and the self-reported accounting can never drift
+//! apart silently. The `dst` and `entry_len` words are routing/framing
+//! overhead on top of the simulated size (4 + 4 bytes per entry).
+//!
+//! Walk state shipped back to the coordinator at the end of a unit is
+//! delta-encoded ([`encode_walk_delta`]): consecutive walk vertices are
+//! zigzag-varint deltas from the previous vertex, which compresses the
+//! locality-heavy walks FN produces far below raw 4-byte ids.
+
+use std::io::{Read, Write};
+use std::os::unix::net::UnixStream;
+use std::sync::mpsc::{Receiver, Sender};
+
+use crate::graph::store::fxhash64;
+use crate::graph::VertexId;
+use crate::util::failpoints;
+
+use super::checkpoint::ByteReader;
+use super::Message;
+
+/// Frame magic: `"FN2T"` (FN2V transport).
+pub const FRAME_MAGIC: u32 = u32::from_le_bytes(*b"FN2T");
+
+/// Fixed frame header size in bytes.
+pub const FRAME_HEADER_BYTES: usize = 24;
+
+/// Upper bound on a frame payload; anything larger is a protocol error
+/// (a corrupt length field must not trigger a giant allocation).
+pub const MAX_FRAME_BYTES: u32 = 1 << 30;
+
+/// What a frame carries. The numeric tags are part of the wire format.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameKind {
+    /// Shard → coordinator on connect: shard id + graph shape check.
+    Hello = 1,
+    /// Coordinator → shard: parameters of one engine unit to run.
+    Run = 2,
+    /// Shard → shard (via coordinator): encoded cross-shard messages.
+    Data = 3,
+    /// Shard → coordinator: end-of-superstep report ([`ShardReport`]).
+    Barrier = 4,
+    /// Coordinator → shard: superstep [`Decision`].
+    Decision = 5,
+    /// Shard → coordinator: this shard's encoded checkpoint part.
+    CkptPart = 6,
+    /// Coordinator → shard: checkpoint write outcome.
+    CkptResult = 7,
+    /// Shard → coordinator: final walks + stats of a finished unit.
+    Values = 8,
+    /// Shard → coordinator: local failure (worker panic etc.).
+    Error = 9,
+    /// Coordinator → shard: exit the serve loop.
+    Shutdown = 10,
+}
+
+impl FrameKind {
+    pub fn from_u8(tag: u8) -> Option<FrameKind> {
+        Some(match tag {
+            1 => FrameKind::Hello,
+            2 => FrameKind::Run,
+            3 => FrameKind::Data,
+            4 => FrameKind::Barrier,
+            5 => FrameKind::Decision,
+            6 => FrameKind::CkptPart,
+            7 => FrameKind::CkptResult,
+            8 => FrameKind::Values,
+            9 => FrameKind::Error,
+            10 => FrameKind::Shutdown,
+            _ => return None,
+        })
+    }
+}
+
+/// One transport frame.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Frame {
+    pub kind: FrameKind,
+    /// Source shard (coordinator uses `u8::MAX`).
+    pub src: u8,
+    /// Destination shard (coordinator uses `u8::MAX`).
+    pub dst: u8,
+    pub superstep: u32,
+    pub payload: Vec<u8>,
+}
+
+/// The coordinator's shard id in `src`/`dst` fields.
+pub const COORD_ID: u8 = u8::MAX;
+
+impl Frame {
+    pub fn new(kind: FrameKind, src: u8, dst: u8, superstep: u32, payload: Vec<u8>) -> Frame {
+        Frame {
+            kind,
+            src,
+            dst,
+            superstep,
+            payload,
+        }
+    }
+}
+
+/// Typed frame decode/transport failures, mirroring the corrupt-file
+/// matrix style of `graph::store`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FrameError {
+    /// First four bytes are not `"FN2T"`.
+    BadMagic { got: u32 },
+    /// Unknown [`FrameKind`] tag.
+    BadKind { got: u8 },
+    /// Payload length exceeds [`MAX_FRAME_BYTES`].
+    TooLarge { len: u32 },
+    /// Stream or buffer ended mid-frame.
+    Truncated { needed: usize, got: usize },
+    /// Payload checksum mismatch.
+    BadChecksum { expected: u64, got: u64 },
+    /// Underlying I/O failure.
+    Io(String),
+    /// Peer closed the connection at a frame boundary.
+    Closed,
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::BadMagic { got } => {
+                write!(f, "bad frame magic {got:#010x} (expected \"FN2T\")")
+            }
+            FrameError::BadKind { got } => write!(f, "unknown frame kind tag {got}"),
+            FrameError::TooLarge { len } => {
+                write!(f, "frame payload of {len} bytes exceeds {MAX_FRAME_BYTES}")
+            }
+            FrameError::Truncated { needed, got } => {
+                write!(f, "truncated frame: needed {needed} bytes, got {got}")
+            }
+            FrameError::BadChecksum { expected, got } => write!(
+                f,
+                "frame payload checksum mismatch: header says {expected:#018x}, payload hashes to {got:#018x}"
+            ),
+            FrameError::Io(detail) => write!(f, "transport I/O error: {detail}"),
+            FrameError::Closed => write!(f, "transport connection closed"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// Encode a frame (header + payload) into a fresh buffer.
+pub fn encode_frame(frame: &Frame) -> Vec<u8> {
+    let mut out = Vec::with_capacity(FRAME_HEADER_BYTES + frame.payload.len());
+    out.extend_from_slice(&FRAME_MAGIC.to_le_bytes());
+    out.push(frame.kind as u8);
+    out.push(frame.src);
+    out.push(frame.dst);
+    out.push(0);
+    out.extend_from_slice(&frame.superstep.to_le_bytes());
+    out.extend_from_slice(&(frame.payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&fxhash64(&frame.payload).to_le_bytes());
+    out.extend_from_slice(&frame.payload);
+    out
+}
+
+/// Parsed header fields: (kind, src, dst, superstep, payload_len, checksum).
+fn parse_header(h: &[u8; FRAME_HEADER_BYTES]) -> Result<(FrameKind, u8, u8, u32, u32, u64), FrameError> {
+    let magic = u32::from_le_bytes([h[0], h[1], h[2], h[3]]);
+    if magic != FRAME_MAGIC {
+        return Err(FrameError::BadMagic { got: magic });
+    }
+    let kind = FrameKind::from_u8(h[4]).ok_or(FrameError::BadKind { got: h[4] })?;
+    let superstep = u32::from_le_bytes([h[8], h[9], h[10], h[11]]);
+    let len = u32::from_le_bytes([h[12], h[13], h[14], h[15]]);
+    if len > MAX_FRAME_BYTES {
+        return Err(FrameError::TooLarge { len });
+    }
+    let sum = u64::from_le_bytes([h[16], h[17], h[18], h[19], h[20], h[21], h[22], h[23]]);
+    Ok((kind, h[5], h[6], superstep, len, sum))
+}
+
+/// Decode one frame from a complete buffer (the channel transport's path;
+/// also the unit under test for the corrupt-frame matrix).
+pub fn decode_frame(buf: &[u8]) -> Result<Frame, FrameError> {
+    if buf.len() < FRAME_HEADER_BYTES {
+        return Err(FrameError::Truncated {
+            needed: FRAME_HEADER_BYTES,
+            got: buf.len(),
+        });
+    }
+    let mut h = [0u8; FRAME_HEADER_BYTES];
+    h.copy_from_slice(&buf[..FRAME_HEADER_BYTES]);
+    let (kind, src, dst, superstep, len, expected) = parse_header(&h)?;
+    let total = FRAME_HEADER_BYTES + len as usize;
+    if buf.len() < total {
+        return Err(FrameError::Truncated {
+            needed: total,
+            got: buf.len(),
+        });
+    }
+    let payload = &buf[FRAME_HEADER_BYTES..total];
+    let got = fxhash64(payload);
+    if got != expected {
+        return Err(FrameError::BadChecksum { expected, got });
+    }
+    Ok(Frame {
+        kind,
+        src,
+        dst,
+        superstep,
+        payload: payload.to_vec(),
+    })
+}
+
+/// A duplex frame connection. Implementations must preserve send order
+/// (the barrier protocol's correctness argument leans on FIFO delivery).
+pub trait Transport: Send {
+    fn send(&mut self, frame: &Frame) -> Result<(), FrameError>;
+    fn recv(&mut self) -> Result<Frame, FrameError>;
+    /// Split into independent (reader, writer) halves so the coordinator
+    /// can pump each direction from its own thread.
+    fn split(self: Box<Self>) -> Result<(Box<dyn Transport>, Box<dyn Transport>), FrameError>;
+}
+
+/// In-process transport: an `mpsc` pair carrying fully encoded frames, so
+/// the codec (checksums included) runs exactly as it does over a socket.
+pub struct ChanTransport {
+    tx: Option<Sender<Vec<u8>>>,
+    rx: Option<Receiver<Vec<u8>>>,
+}
+
+impl ChanTransport {
+    /// A connected duplex pair.
+    pub fn pair() -> (ChanTransport, ChanTransport) {
+        let (atx, brx) = std::sync::mpsc::channel();
+        let (btx, arx) = std::sync::mpsc::channel();
+        (
+            ChanTransport {
+                tx: Some(atx),
+                rx: Some(arx),
+            },
+            ChanTransport {
+                tx: Some(btx),
+                rx: Some(brx),
+            },
+        )
+    }
+}
+
+impl Transport for ChanTransport {
+    fn send(&mut self, frame: &Frame) -> Result<(), FrameError> {
+        failpoints::retry_io("transport.write", || failpoints::check("transport.write"))
+            .map_err(|e| FrameError::Io(e.to_string()))?;
+        let tx = self.tx.as_ref().ok_or(FrameError::Closed)?;
+        tx.send(encode_frame(frame)).map_err(|_| FrameError::Closed)
+    }
+
+    fn recv(&mut self) -> Result<Frame, FrameError> {
+        failpoints::retry_io("transport.read", || failpoints::check("transport.read"))
+            .map_err(|e| FrameError::Io(e.to_string()))?;
+        let rx = self.rx.as_ref().ok_or(FrameError::Closed)?;
+        let bytes = rx.recv().map_err(|_| FrameError::Closed)?;
+        decode_frame(&bytes)
+    }
+
+    fn split(self: Box<Self>) -> Result<(Box<dyn Transport>, Box<dyn Transport>), FrameError> {
+        Ok((
+            Box::new(ChanTransport {
+                tx: None,
+                rx: self.rx,
+            }),
+            Box::new(ChanTransport {
+                tx: self.tx,
+                rx: None,
+            }),
+        ))
+    }
+}
+
+/// Unix-domain-socket transport between shard processes and the
+/// coordinator. EINTR/partial reads are absorbed by [`failpoints::retry_io`]
+/// around every syscall, which is also where the fault-injection suite
+/// drives the `transport.read` / `transport.write` sites.
+pub struct UdsTransport {
+    stream: UnixStream,
+}
+
+impl UdsTransport {
+    pub fn new(stream: UnixStream) -> UdsTransport {
+        UdsTransport { stream }
+    }
+}
+
+/// Fill `buf` from `stream`. `Ok(false)` when the peer closed cleanly
+/// before the first byte (and `allow_eof` is set); a close mid-buffer is
+/// always a [`FrameError::Truncated`].
+fn read_full(stream: &mut UnixStream, buf: &mut [u8], allow_eof: bool) -> Result<bool, FrameError> {
+    let mut filled = 0usize;
+    while filled < buf.len() {
+        let n = failpoints::retry_io("transport.read", || stream.read(&mut buf[filled..]))
+            .map_err(|e| FrameError::Io(e.to_string()))?;
+        if n == 0 {
+            if filled == 0 && allow_eof {
+                return Ok(false);
+            }
+            return Err(FrameError::Truncated {
+                needed: buf.len(),
+                got: filled,
+            });
+        }
+        filled += n;
+    }
+    Ok(true)
+}
+
+impl Transport for UdsTransport {
+    fn send(&mut self, frame: &Frame) -> Result<(), FrameError> {
+        let bytes = encode_frame(frame);
+        failpoints::retry_io("transport.write", || self.stream.write_all(&bytes))
+            .map_err(|e| FrameError::Io(e.to_string()))?;
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Frame, FrameError> {
+        let mut header = [0u8; FRAME_HEADER_BYTES];
+        if !read_full(&mut self.stream, &mut header, true)? {
+            return Err(FrameError::Closed);
+        }
+        let (kind, src, dst, superstep, len, expected) = parse_header(&header)?;
+        let mut payload = vec![0u8; len as usize];
+        read_full(&mut self.stream, &mut payload, false)?;
+        let got = fxhash64(&payload);
+        if got != expected {
+            return Err(FrameError::BadChecksum { expected, got });
+        }
+        Ok(Frame {
+            kind,
+            src,
+            dst,
+            superstep,
+            payload,
+        })
+    }
+
+    fn split(self: Box<Self>) -> Result<(Box<dyn Transport>, Box<dyn Transport>), FrameError> {
+        let clone = self
+            .stream
+            .try_clone()
+            .map_err(|e| FrameError::Io(format!("clone socket: {e}")))?;
+        Ok((Box::new(UdsTransport { stream: clone }), self))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Wire message entries
+// ---------------------------------------------------------------------------
+
+/// A message that can cross a shard boundary. `encode_wire` must write
+/// *exactly* [`Message::wire_bytes`] bytes — the engine has always charged
+/// that simulated size, and [`encode_entry`] asserts the codec agrees.
+pub trait WireMsg: Message + Sized {
+    fn encode_wire(&self, out: &mut Vec<u8>);
+    /// Decode one message from a bounded entry body (everything after the
+    /// `dst` word); the body length disambiguates variable-size variants.
+    fn decode_wire(r: &mut ByteReader<'_>) -> Result<Self, String>;
+}
+
+/// Append one `[entry_len][dst][msg]` entry; returns the bytes written
+/// (framing included). Debug-asserts the codec size against
+/// `Msg::wire_bytes()` so `BENCH_walks.json`'s wire-byte numbers cannot
+/// silently drift from what actually crosses the transport.
+pub fn encode_entry<M: WireMsg>(dst: VertexId, msg: &M, out: &mut Vec<u8>) -> u64 {
+    let at = out.len();
+    out.extend_from_slice(&0u32.to_le_bytes()); // entry_len, patched below
+    out.extend_from_slice(&dst.to_le_bytes());
+    msg.encode_wire(out);
+    let body = (out.len() - at - 4) as u64;
+    debug_assert_eq!(
+        body - 4,
+        msg.wire_bytes(),
+        "wire codec size and Msg::wire_bytes() disagree"
+    );
+    let len = (body as u32).to_le_bytes();
+    out[at..at + 4].copy_from_slice(&len);
+    body + 4
+}
+
+/// Decode one entry written by [`encode_entry`].
+pub fn decode_entry<M: WireMsg>(r: &mut ByteReader<'_>) -> Result<(VertexId, M), String> {
+    let len = r.u32()? as usize;
+    let body = r.take(len)?;
+    let mut br = ByteReader::new(body);
+    let dst = br.u32()?;
+    let msg = M::decode_wire(&mut br)?;
+    if !br.is_empty() {
+        return Err(format!("{} trailing bytes after wire message", br.remaining()));
+    }
+    Ok((dst, msg))
+}
+
+// ---------------------------------------------------------------------------
+// Varints and delta-encoded walks
+// ---------------------------------------------------------------------------
+
+/// LEB128 unsigned varint.
+pub fn write_varint(mut x: u64, out: &mut Vec<u8>) {
+    loop {
+        let b = (x & 0x7f) as u8;
+        x >>= 7;
+        if x == 0 {
+            out.push(b);
+            return;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+pub fn read_varint(r: &mut ByteReader<'_>) -> Result<u64, String> {
+    let mut x = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let b = r.u8()?;
+        if shift >= 64 {
+            return Err("varint longer than 64 bits".into());
+        }
+        x |= ((b & 0x7f) as u64) << shift;
+        if b & 0x80 == 0 {
+            return Ok(x);
+        }
+        shift += 7;
+    }
+}
+
+fn zigzag(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+fn unzigzag(z: u64) -> i64 {
+    ((z >> 1) as i64) ^ -((z & 1) as i64)
+}
+
+/// Delta-encode a walk against its seed vertex: `len` then zigzag-varint
+/// deltas between consecutive vertices (the first delta is against `vid`,
+/// which is 0 for the walks FN produces — walks start at their seed).
+pub fn encode_walk_delta(vid: VertexId, walk: &[VertexId], out: &mut Vec<u8>) {
+    write_varint(walk.len() as u64, out);
+    let mut prev = vid as i64;
+    for &v in walk {
+        write_varint(zigzag(v as i64 - prev), out);
+        prev = v as i64;
+    }
+}
+
+pub fn decode_walk_delta(vid: VertexId, r: &mut ByteReader<'_>) -> Result<Vec<VertexId>, String> {
+    let len = read_varint(r)? as usize;
+    let mut walk = Vec::with_capacity(len);
+    let mut prev = vid as i64;
+    for _ in 0..len {
+        let v = prev + unzigzag(read_varint(r)?);
+        if !(0..=u32::MAX as i64).contains(&v) {
+            return Err(format!("delta-decoded vertex {v} out of u32 range"));
+        }
+        walk.push(v as VertexId);
+        prev = v;
+    }
+    Ok(walk)
+}
+
+// ---------------------------------------------------------------------------
+// Barrier reports and decisions
+// ---------------------------------------------------------------------------
+
+/// One shard's end-of-superstep accounting, sent in a `Barrier` frame.
+/// Message counts/bytes are split by *process* locality: `within` stayed
+/// inside the shard (any worker), `cross` crossed the transport.
+/// `bytes_cross_sim` is the simulated (`wire_bytes`) size the aggregate
+/// memory budget charges — identical to in-process accounting — while
+/// `bytes_cross_wire` is the measured encoded payload the metrics report.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ShardReport {
+    pub superstep: u32,
+    pub active: u64,
+    pub not_halted: u64,
+    pub msgs_within: u64,
+    pub msgs_cross: u64,
+    pub bytes_within: u64,
+    pub bytes_cross_sim: u64,
+    pub bytes_cross_wire: u64,
+    pub cache_bytes: u64,
+    pub value_bytes: u64,
+    pub hot_tasks: u64,
+    /// Per local worker, in global worker order.
+    pub compute_nanos: Vec<u64>,
+    pub msgs_handled: Vec<u64>,
+}
+
+impl ShardReport {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(96 + 16 * self.compute_nanos.len());
+        out.extend_from_slice(&self.superstep.to_le_bytes());
+        for v in [
+            self.active,
+            self.not_halted,
+            self.msgs_within,
+            self.msgs_cross,
+            self.bytes_within,
+            self.bytes_cross_sim,
+            self.bytes_cross_wire,
+            self.cache_bytes,
+            self.value_bytes,
+            self.hot_tasks,
+        ] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out.extend_from_slice(&(self.compute_nanos.len() as u32).to_le_bytes());
+        for v in &self.compute_nanos {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        for v in &self.msgs_handled {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<ShardReport, String> {
+        let mut r = ByteReader::new(buf);
+        let superstep = r.u32()?;
+        let mut fields = [0u64; 10];
+        for f in &mut fields {
+            *f = r.u64()?;
+        }
+        let workers = r.u32()? as usize;
+        let mut compute_nanos = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            compute_nanos.push(r.u64()?);
+        }
+        let mut msgs_handled = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            msgs_handled.push(r.u64()?);
+        }
+        if !r.is_empty() {
+            return Err(format!("{} trailing bytes after shard report", r.remaining()));
+        }
+        Ok(ShardReport {
+            superstep,
+            active: fields[0],
+            not_halted: fields[1],
+            msgs_within: fields[2],
+            msgs_cross: fields[3],
+            bytes_within: fields[4],
+            bytes_cross_sim: fields[5],
+            bytes_cross_wire: fields[6],
+            cache_bytes: fields[7],
+            value_bytes: fields[8],
+            hot_tasks: fields[9],
+            compute_nanos,
+            msgs_handled,
+        })
+    }
+}
+
+/// The coordinator's verdict for one superstep barrier, broadcast in a
+/// `Decision` frame. Mirrors the in-process leader's decision order: OOM,
+/// then quiescence, then the superstep cap, then checkpoint cadence.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Decision {
+    /// Keep going; `checkpoint` asks shards to enter the checkpoint phase.
+    Continue { checkpoint: bool },
+    /// All shards quiesced: send `Values` and await the next `Run`.
+    Stop,
+    /// Aggregate memory budget exceeded.
+    StopOom { superstep: u32, bytes: u64 },
+    /// Superstep cap reached.
+    StopCap { supersteps: u32 },
+    /// A peer shard (or the coordinator) failed; abandon the unit.
+    Abort { detail: String },
+}
+
+impl Decision {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            Decision::Continue { checkpoint } => {
+                out.push(0);
+                out.push(u8::from(*checkpoint));
+            }
+            Decision::Stop => out.push(1),
+            Decision::StopOom { superstep, bytes } => {
+                out.push(2);
+                out.extend_from_slice(&superstep.to_le_bytes());
+                out.extend_from_slice(&bytes.to_le_bytes());
+            }
+            Decision::StopCap { supersteps } => {
+                out.push(3);
+                out.extend_from_slice(&supersteps.to_le_bytes());
+            }
+            Decision::Abort { detail } => {
+                out.push(4);
+                out.extend_from_slice(&(detail.len() as u32).to_le_bytes());
+                out.extend_from_slice(detail.as_bytes());
+            }
+        }
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Decision, String> {
+        let mut r = ByteReader::new(buf);
+        let d = match r.u8()? {
+            0 => Decision::Continue {
+                checkpoint: r.u8()? != 0,
+            },
+            1 => Decision::Stop,
+            2 => Decision::StopOom {
+                superstep: r.u32()?,
+                bytes: r.u64()?,
+            },
+            3 => Decision::StopCap {
+                supersteps: r.u32()?,
+            },
+            4 => {
+                let len = r.u32()? as usize;
+                let detail = String::from_utf8_lossy(r.take(len)?).into_owned();
+                Decision::Abort { detail }
+            }
+            other => return Err(format!("unknown decision tag {other}")),
+        };
+        if !r.is_empty() {
+            return Err(format!("{} trailing bytes after decision", r.remaining()));
+        }
+        Ok(d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame() -> Frame {
+        Frame::new(FrameKind::Data, 1, 2, 7, vec![9, 8, 7, 6, 5])
+    }
+
+    #[test]
+    fn frame_roundtrips_through_codec() {
+        let f = frame();
+        let bytes = encode_frame(&f);
+        assert_eq!(bytes.len(), FRAME_HEADER_BYTES + 5);
+        assert_eq!(decode_frame(&bytes).unwrap(), f);
+
+        // Empty payloads are legal (e.g. Shutdown).
+        let empty = Frame::new(FrameKind::Shutdown, COORD_ID, 0, 0, vec![]);
+        assert_eq!(decode_frame(&encode_frame(&empty)).unwrap(), empty);
+    }
+
+    #[test]
+    fn corrupt_frames_fail_typed() {
+        let good = encode_frame(&frame());
+
+        // Bad magic.
+        let mut b = good.clone();
+        b[0] ^= 0xff;
+        assert!(matches!(decode_frame(&b), Err(FrameError::BadMagic { .. })));
+
+        // Unknown kind tag.
+        let mut b = good.clone();
+        b[4] = 200;
+        assert_eq!(decode_frame(&b), Err(FrameError::BadKind { got: 200 }));
+
+        // Oversized length field.
+        let mut b = good.clone();
+        b[12..16].copy_from_slice(&(MAX_FRAME_BYTES + 1).to_le_bytes());
+        assert!(matches!(decode_frame(&b), Err(FrameError::TooLarge { .. })));
+
+        // Length pointing past the buffer.
+        let mut b = good.clone();
+        b[12..16].copy_from_slice(&100u32.to_le_bytes());
+        assert!(matches!(decode_frame(&b), Err(FrameError::Truncated { .. })));
+
+        // Flipped payload byte fails the checksum.
+        let mut b = good.clone();
+        *b.last_mut().unwrap() ^= 1;
+        assert!(matches!(decode_frame(&b), Err(FrameError::BadChecksum { .. })));
+
+        // Truncation at every prefix is typed, never a panic.
+        for cut in 0..good.len() {
+            match decode_frame(&good[..cut]) {
+                Err(FrameError::Truncated { .. }) | Err(FrameError::BadMagic { .. }) => {}
+                other => panic!("cut at {cut}: unexpected {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn chan_transport_delivers_in_order_and_closes() {
+        let (mut a, mut b) = ChanTransport::pair();
+        let f1 = frame();
+        let f2 = Frame::new(FrameKind::Barrier, 0, COORD_ID, 3, vec![1]);
+        a.send(&f1).unwrap();
+        a.send(&f2).unwrap();
+        assert_eq!(b.recv().unwrap(), f1);
+        assert_eq!(b.recv().unwrap(), f2);
+        drop(a);
+        assert_eq!(b.recv(), Err(FrameError::Closed));
+    }
+
+    #[test]
+    fn chan_transport_split_halves_keep_working() {
+        let (a, mut b) = ChanTransport::pair();
+        let (mut rd, mut wr) = (Box::new(a) as Box<dyn Transport>).split().unwrap();
+        wr.send(&frame()).unwrap();
+        assert_eq!(b.recv().unwrap(), frame());
+        b.send(&frame()).unwrap();
+        assert_eq!(rd.recv().unwrap(), frame());
+        // The wrong half is a typed close, not a hang.
+        assert_eq!(rd.send(&frame()), Err(FrameError::Closed));
+        assert_eq!(wr.recv(), Err(FrameError::Closed));
+    }
+
+    #[test]
+    fn uds_transport_roundtrips_and_reports_truncation() {
+        let (s1, s2) = UnixStream::pair().unwrap();
+        let mut a = UdsTransport::new(s1);
+        let mut b = UdsTransport::new(s2);
+        let f = frame();
+        a.send(&f).unwrap();
+        assert_eq!(b.recv().unwrap(), f);
+
+        // Clean close at a frame boundary.
+        let (s1, s2) = UnixStream::pair().unwrap();
+        drop(UdsTransport::new(s1));
+        assert_eq!(UdsTransport::new(s2).recv(), Err(FrameError::Closed));
+
+        // Close mid-frame is a truncation, not a clean close.
+        let (s1, s2) = UnixStream::pair().unwrap();
+        let mut raw = s1;
+        let bytes = encode_frame(&f);
+        raw.write_all(&bytes[..10]).unwrap();
+        drop(raw);
+        assert!(matches!(
+            UdsTransport::new(s2).recv(),
+            Err(FrameError::Truncated { .. })
+        ));
+    }
+
+    #[test]
+    fn varint_and_zigzag_roundtrip() {
+        let mut out = Vec::new();
+        let cases = [0u64, 1, 127, 128, 300, u32::MAX as u64, u64::MAX];
+        for &c in &cases {
+            out.clear();
+            write_varint(c, &mut out);
+            let mut r = ByteReader::new(&out);
+            assert_eq!(read_varint(&mut r).unwrap(), c);
+            assert!(r.is_empty());
+        }
+        for v in [0i64, 1, -1, 63, -64, i64::MAX, i64::MIN] {
+            assert_eq!(unzigzag(zigzag(v)), v);
+        }
+    }
+
+    #[test]
+    fn walk_delta_roundtrips_and_compresses_local_walks() {
+        let walk: Vec<u32> = vec![5, 6, 5, 9, 8, 8, 200, 199];
+        let mut out = Vec::new();
+        encode_walk_delta(5, &walk, &mut out);
+        // Seven of eight hops are small deltas: one byte each.
+        assert!(out.len() < walk.len() * 4, "no compression: {}", out.len());
+        let mut r = ByteReader::new(&out);
+        assert_eq!(decode_walk_delta(5, &mut r).unwrap(), walk);
+        assert!(r.is_empty());
+
+        let empty: Vec<u32> = vec![];
+        out.clear();
+        encode_walk_delta(3, &empty, &mut out);
+        let mut r = ByteReader::new(&out);
+        assert_eq!(decode_walk_delta(3, &mut r).unwrap(), empty);
+    }
+
+    #[test]
+    fn shard_report_roundtrips() {
+        let rep = ShardReport {
+            superstep: 4,
+            active: 10,
+            not_halted: 3,
+            msgs_within: 100,
+            msgs_cross: 7,
+            bytes_within: 1200,
+            bytes_cross_sim: 84,
+            bytes_cross_wire: 140,
+            cache_bytes: 64,
+            value_bytes: 4096,
+            hot_tasks: 2,
+            compute_nanos: vec![11, 22, 33],
+            msgs_handled: vec![5, 6, 7],
+        };
+        assert_eq!(ShardReport::decode(&rep.encode()).unwrap(), rep);
+        assert!(ShardReport::decode(&rep.encode()[..10]).is_err());
+    }
+
+    #[test]
+    fn decision_roundtrips() {
+        for d in [
+            Decision::Continue { checkpoint: false },
+            Decision::Continue { checkpoint: true },
+            Decision::Stop,
+            Decision::StopOom {
+                superstep: 9,
+                bytes: 1 << 40,
+            },
+            Decision::StopCap { supersteps: 10_000 },
+            Decision::Abort {
+                detail: "shard 2 died".into(),
+            },
+        ] {
+            assert_eq!(Decision::decode(&d.encode()).unwrap(), d);
+        }
+        assert!(Decision::decode(&[99]).is_err());
+    }
+}

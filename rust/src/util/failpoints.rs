@@ -58,6 +58,11 @@ pub const SITES: &[Site] = &[
     // decode loop shared by the v1/v2 owned readers.
     Site { name: "mmap.open", kind: SiteKind::Io },
     Site { name: "io.read-chunk", kind: SiteKind::Io },
+    // Distributed transport: frame reads and writes on the
+    // shard <-> coordinator connection (both the in-process channel and
+    // the Unix-socket transport route through `retry_io` on these).
+    Site { name: "transport.read", kind: SiteKind::Io },
+    Site { name: "transport.write", kind: SiteKind::Io },
 ];
 
 /// Severity of an injected I/O fault.

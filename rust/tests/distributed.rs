@@ -1,0 +1,354 @@
+//! Distributed conformance: the shard-per-process walk engine against the
+//! single-process engine.
+//!
+//! The contract under test (EXPERIMENTS.md §Distributed):
+//!
+//! - walks are **bit-identical** across shard counts {1, 2, 4}, for all 6
+//!   variants and both samplers, over both transports;
+//! - the coordinator's aggregate memory accounting reproduces the
+//!   single-process engine's byte-for-byte (same `peak_bytes`, same strict
+//!   OOM, same non-strict degradation to round splitting);
+//! - cross-shard hot splitting is rejected with a typed config error;
+//! - (`--features failpoints`) a shard process killed mid-query is
+//!   detected by the coordinator, and a fresh fleet resumes from the
+//!   latest checkpoint to the same bytes as an uninterrupted run.
+//!
+//! CI runs this file single-threaded: the UDS tests spawn `fastn2v
+//! shard-worker` child processes and the failpoint registry is
+//! process-global.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use fastn2v::coordinator::{DistConfig, TransportKind};
+use fastn2v::gen::{skew_graph, GenConfig};
+use fastn2v::graph::{write_v2, Graph};
+use fastn2v::node2vec::{
+    FnConfig, SamplerKind, Variant, WalkOutput, WalkRequest, WalkSession,
+};
+use fastn2v::pregel::{EngineError, EngineOpts};
+
+fn test_graph() -> Arc<Graph> {
+    Arc::new(skew_graph(&GenConfig::new(384, 10, 29), 3.0))
+}
+
+fn base_cfg() -> FnConfig {
+    FnConfig::new(0.5, 2.0, 71)
+        .with_walk_length(8)
+        .with_popular_threshold(24)
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("fn2v-dist-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// The binary whose hidden `shard-worker` subcommand UDS fleets spawn.
+fn shard_binary() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_fastn2v"))
+}
+
+fn plain_run(g: &Arc<Graph>, cfg: FnConfig, workers: usize, req: &WalkRequest) -> WalkOutput {
+    WalkSession::builder(g.clone(), cfg)
+        .workers(workers)
+        .build()
+        .collect(req)
+        .expect("single-process run failed")
+}
+
+fn sharded_run(
+    g: &Arc<Graph>,
+    cfg: FnConfig,
+    dist: DistConfig,
+    req: &WalkRequest,
+) -> Result<WalkOutput, EngineError> {
+    let wps = dist.workers_per_shard;
+    WalkSession::builder(g.clone(), cfg)
+        .workers(wps)
+        .distributed(dist)
+        .build()
+        .collect(req)
+}
+
+/// Conformance bar, in-process transport: every variant × sampler ×
+/// shard count produces the walks of the single-process engine, bit for
+/// bit. (The in-proc transport still runs the full frame codec,
+/// checksums included, so this covers everything but the socket.)
+#[test]
+fn inproc_sharded_walks_match_single_process_across_the_full_matrix() {
+    let g = test_graph();
+    let req = WalkRequest::all();
+    for variant in Variant::ALL {
+        for sampler in [SamplerKind::Linear, SamplerKind::Reject] {
+            let cfg = base_cfg().with_variant(variant).with_sampler(sampler);
+            let plain = plain_run(&g, cfg, 4, &req);
+            for shards in [1usize, 2, 4] {
+                let out = sharded_run(&g, cfg, DistConfig::new(shards, 2), &req)
+                    .expect("sharded run failed");
+                assert_eq!(
+                    out.walks,
+                    plain.walks,
+                    "{} sampler={} shards={shards} diverged from single-process",
+                    variant.name(),
+                    sampler.name(),
+                );
+            }
+        }
+    }
+}
+
+/// Conformance bar, Unix-domain sockets: same matrix with one OS process
+/// per shard, each reopening the graph from an FN2VGRF2 file.
+#[test]
+fn uds_sharded_walks_match_single_process_across_the_full_matrix() {
+    let g = test_graph();
+    let dir = tmp_dir("uds-matrix");
+    let gpath = dir.join("g.fn2v");
+    write_v2(&g, &gpath).unwrap();
+    let req = WalkRequest::all();
+    for variant in Variant::ALL {
+        for sampler in [SamplerKind::Linear, SamplerKind::Reject] {
+            let cfg = base_cfg().with_variant(variant).with_sampler(sampler);
+            let plain = plain_run(&g, cfg, 4, &req);
+            for shards in [1usize, 2, 4] {
+                let dist = DistConfig::new(shards, 1)
+                    .with_transport(TransportKind::Uds)
+                    .with_shard_binary(shard_binary())
+                    .with_graph_file(gpath.clone());
+                let out = sharded_run(&g, cfg, dist, &req).expect("UDS run failed");
+                assert_eq!(
+                    out.walks,
+                    plain.walks,
+                    "{} sampler={} shards={shards} diverged over UDS",
+                    variant.name(),
+                    sampler.name(),
+                );
+            }
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// FN-Multi round splitting and multi-pass requests run through the
+/// distributed driver unchanged.
+#[test]
+fn sharded_rounds_and_passes_match_single_process() {
+    let g = test_graph();
+    let cfg = base_cfg().with_variant(Variant::Cache);
+    for req in [
+        WalkRequest::all().with_rounds(4),
+        WalkRequest::all().with_walks_per_seed(2),
+    ] {
+        let plain = plain_run(&g, cfg, 4, &req);
+        let out = sharded_run(&g, cfg, DistConfig::new(2, 2), &req)
+            .expect("sharded multi-round run failed");
+        assert_eq!(out.walks, plain.walks);
+        assert_eq!(out.stats.per_round, plain.stats.per_round);
+    }
+}
+
+/// Satellite: the coordinator's aggregate accounting *is* the
+/// single-process accounting. Shard resident shares sum exactly to the
+/// graph's resident bytes and message/value/cache charges mirror the
+/// in-process master, so the measured peak is bit-equal, a strict budget
+/// trips the same OOM, and the non-strict policy degrades to the same
+/// round splitting with the same walks.
+#[test]
+fn aggregate_memory_accounting_matches_single_process() {
+    let g = test_graph();
+    let cfg = base_cfg().with_variant(Variant::Cache);
+    let req = WalkRequest::all();
+    // Same worker plan both sides: 4 in-process workers vs 2 shards x 2.
+    let plain = plain_run(&g, cfg, 4, &req);
+    let dist = sharded_run(&g, cfg, DistConfig::new(2, 2), &req).expect("sharded run failed");
+    assert_eq!(
+        dist.metrics.peak_bytes, plain.metrics.peak_bytes,
+        "distributed peak accounting diverged from single-process"
+    );
+    // Same total worker count => the per-worker counters line up too.
+    assert_eq!(dist.stats, plain.stats, "walk stats diverged at equal worker counts");
+
+    let strict = EngineOpts {
+        memory_budget: Some(plain.metrics.peak_bytes - 1),
+        strict_memory: true,
+        ..Default::default()
+    };
+    let out = WalkSession::builder(g.clone(), cfg)
+        .workers(2)
+        .engine_opts(strict)
+        .distributed(DistConfig::new(2, 2))
+        .build()
+        .collect(&req);
+    match out {
+        Err(EngineError::OutOfMemory { bytes, .. }) => assert!(
+            bytes > plain.metrics.peak_bytes - 1,
+            "OOM reported {bytes} within budget"
+        ),
+        other => panic!("expected OutOfMemory under a sub-peak strict budget, got {other:?}"),
+    }
+
+    // Non-strict: the same budget degrades to round splitting, walks
+    // unchanged (the coordinator re-runs the unit as smaller rounds).
+    let lenient = EngineOpts {
+        memory_budget: Some(plain.metrics.peak_bytes - 1),
+        ..Default::default()
+    };
+    let degraded = WalkSession::builder(g.clone(), cfg)
+        .workers(2)
+        .engine_opts(lenient)
+        .distributed(DistConfig::new(2, 2))
+        .build()
+        .collect(&req)
+        .expect("non-strict sharded run must degrade and complete");
+    assert_eq!(degraded.walks, plain.walks, "degraded sharded run changed walks");
+}
+
+/// Satellite: hot-vertex splitting is confined within a shard. Asking for
+/// cross-shard splitting on a multi-shard fleet is a typed config error;
+/// within-shard splitting stays bit-identical to the unsplit run.
+#[test]
+fn cross_shard_hot_split_is_a_config_error_and_within_shard_split_conforms() {
+    let g = test_graph();
+    let cfg = base_cfg().with_variant(Variant::Cache).with_hot_threshold(Some(24));
+    let req = WalkRequest::all();
+    let out = WalkSession::builder(g.clone(), cfg)
+        .workers(2)
+        .engine_opts(EngineOpts {
+            hot_split_cross_shard: true,
+            ..Default::default()
+        })
+        .distributed(DistConfig::new(2, 2))
+        .build()
+        .collect(&req);
+    match out {
+        Err(EngineError::Config { detail }) => assert!(
+            detail.contains("shard"),
+            "config error does not explain the shard restriction: {detail}"
+        ),
+        other => panic!("expected a Config error for cross-shard hot split, got {other:?}"),
+    }
+
+    // Same request with splitting confined to each shard: allowed, and
+    // the walks match both the unsplit sharded and single-process runs.
+    let plain = plain_run(&g, cfg, 4, &req);
+    let split = sharded_run(&g, cfg, DistConfig::new(2, 2), &req)
+        .expect("within-shard hot split run failed");
+    assert_eq!(split.walks, plain.walks, "within-shard hot split changed walks");
+}
+
+/// Launch-time validation fails fast with typed errors (and without
+/// leaking threads or processes).
+#[test]
+fn bad_fleet_shapes_are_rejected_at_launch() {
+    let g = test_graph();
+    let cfg = base_cfg();
+    for dist in [DistConfig::new(0, 2), DistConfig::new(65, 2), DistConfig::new(2, 0)] {
+        match sharded_run(&g, cfg, dist, &WalkRequest::all()) {
+            Err(EngineError::Config { .. }) => {}
+            other => panic!("expected a Config error for a bad fleet shape, got {other:?}"),
+        }
+    }
+}
+
+/// Checkpointed sharded runs write the same FN2VCKP1 files the
+/// single-process engine reads: a query checkpointed by a 2-shard fleet
+/// resumes in a *single-process* session (and vice versa), because the
+/// fingerprint excludes shard count and transport.
+#[test]
+fn checkpoints_cross_the_process_model_boundary() {
+    let g = test_graph();
+    let cfg = base_cfg().with_variant(Variant::Cache);
+    let req = WalkRequest::all().with_rounds(2);
+    let plain = plain_run(&g, cfg, 4, &req);
+
+    // Sharded checkpointed run to completion...
+    let dir = tmp_dir("ckpt-cross");
+    let ckpt = fastn2v::node2vec::CheckpointCfg::new(dir.join("ckpt"), 1);
+    let mut sink = fastn2v::node2vec::CollectSink::new(g.num_vertices());
+    WalkSession::builder(g.clone(), cfg)
+        .workers(2)
+        .distributed(DistConfig::new(2, 2))
+        .build()
+        .run_checkpointed(&req, &mut sink, &ckpt)
+        .expect("sharded checkpointed run failed");
+    assert_eq!(sink.into_walks(), plain.walks);
+
+    // ...then a single-process resume replays the same query from the
+    // fleet's checkpoints to the same walks.
+    let mut sink = fastn2v::node2vec::CollectSink::new(g.num_vertices());
+    WalkSession::builder(g.clone(), cfg)
+        .workers(4)
+        .build()
+        .resume(&req, &mut sink, &ckpt)
+        .expect("single-process resume of a fleet checkpoint failed");
+    assert_eq!(
+        sink.into_walks(),
+        plain.walks,
+        "cross-model resume diverged"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The kill/resume round trip (`--features failpoints`): shard 1 of a
+/// 2-process UDS fleet aborts at its 4th superstep, the coordinator
+/// surfaces `ShardFailed`, and a fresh fleet *without* the failpoint
+/// resumes from the latest checkpoint to walks bit-identical to an
+/// uninterrupted run.
+#[cfg(feature = "failpoints")]
+#[test]
+fn killed_shard_process_is_detected_and_resume_completes_bit_identically() {
+    let g = test_graph();
+    let dir = tmp_dir("kill");
+    let gpath = dir.join("g.fn2v");
+    write_v2(&g, &gpath).unwrap();
+    let cfg = base_cfg().with_variant(Variant::Cache);
+    let req = WalkRequest::all().with_rounds(2);
+    let plain = plain_run(&g, cfg, 4, &req);
+    let ckpt = fastn2v::node2vec::CheckpointCfg::new(dir.join("ckpt"), 1);
+
+    let uds = |env: bool| {
+        let mut d = DistConfig::new(2, 1)
+            .with_transport(TransportKind::Uds)
+            .with_shard_binary(shard_binary())
+            .with_graph_file(gpath.clone());
+        if env {
+            // shard 1 aborts the whole process on the 4th hit of the
+            // engine.superstep site (see coordinator::shard_worker_main).
+            d = d.with_shard_env("FASTN2V_SHARD_FAILPOINT", "1:engine.superstep:3");
+        }
+        d
+    };
+
+    let mut sink = fastn2v::node2vec::CollectSink::new(g.num_vertices());
+    let err = WalkSession::builder(g.clone(), cfg)
+        .workers(1)
+        .distributed(uds(true))
+        .build()
+        .run_checkpointed(&req, &mut sink, &ckpt)
+        .expect_err("a killed shard process must fail the query");
+    assert!(
+        matches!(err, EngineError::ShardFailed { .. }),
+        "expected ShardFailed, got {err:?}"
+    );
+    // The fleet checkpointed at superstep barriers before the crash.
+    assert!(
+        dir.join("ckpt").read_dir().unwrap().next().is_some(),
+        "no checkpoint survived the crash"
+    );
+
+    let mut sink = fastn2v::node2vec::CollectSink::new(g.num_vertices());
+    WalkSession::builder(g.clone(), cfg)
+        .workers(1)
+        .distributed(uds(false))
+        .build()
+        .resume(&req, &mut sink, &ckpt)
+        .expect("resume after a shard kill failed");
+    assert_eq!(
+        sink.into_walks(),
+        plain.walks,
+        "resume after a shard kill diverged from the uninterrupted run"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}

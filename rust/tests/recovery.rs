@@ -402,6 +402,25 @@ mod fault_injection {
         read_walk_file(&path).map_err(|e| e.to_string())
     }
 
+    /// As [`streaming_run`], but on a 2-shard in-process fleet, so every
+    /// frame crosses the transport codec and its `transport.read` /
+    /// `transport.write` failpoint sites.
+    fn sharded_streaming_run(dir: &Path, every: u32) -> Result<Vec<(u32, Vec<u32>)>, String> {
+        std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+        let g = test_graph();
+        let s = WalkSession::builder(g.clone(), base_cfg())
+            .workers(2)
+            .distributed(fastn2v::coordinator::DistConfig::new(2, 2))
+            .build();
+        let path = dir.join("walks.txt");
+        let mut sink = StreamingFileSink::create(&path).map_err(|e| e.to_string())?;
+        let req = WalkRequest::all().with_rounds(2);
+        s.run_checkpointed(&req, &mut sink, &ckpt_cfg(&dir.join("ckpt"), every))
+            .map_err(|e| e.to_string())?;
+        sink.finish().map_err(|e| e.to_string())?;
+        read_walk_file(&path).map_err(|e| e.to_string())
+    }
+
     fn leftover_tmp_files(dir: &Path) -> Vec<PathBuf> {
         let Ok(rd) = std::fs::read_dir(dir) else {
             return Vec::new();
@@ -450,12 +469,40 @@ mod fault_injection {
                         .unwrap_or_else(|e| panic!("{} did not recover: {e}", site.name));
                     assert_eq!(out, reference, "{} changed the output", site.name);
                 }
+                // The transport sites only exist on shard connections:
+                // run the same query on a 2-shard fleet (walks are
+                // bit-identical to the single-process reference).
+                "transport.read" | "transport.write" => {
+                    let out = sharded_streaming_run(&base.join(site.name), 2)
+                        .unwrap_or_else(|e| panic!("{} did not recover: {e}", site.name));
+                    assert_eq!(out, reference, "{} changed the output", site.name);
+                }
                 other => panic!("site `{other}` is not covered by this harness"),
             }
             assert!(hits(site.name) > 0, "{} was never exercised", site.name);
         }
         clear_all();
         std::fs::remove_dir_all(&base).ok();
+    }
+
+    /// A fatal (non-retryable) transport fault fails the fleet as a typed
+    /// `EngineError::ShardFailed` — never a hang or a process abort.
+    #[test]
+    fn fatal_transport_fault_fails_the_fleet_typed() {
+        clear_all();
+        let g = test_graph();
+        let s = WalkSession::builder(g.clone(), base_cfg())
+            .workers(2)
+            .distributed(fastn2v::coordinator::DistConfig::new(2, 2))
+            .build();
+        // Skip the two handshake reads; the fault lands mid-query.
+        arm_fatal("transport.read", 2);
+        let mut sink = CollectSink::new(g.num_vertices());
+        match s.run(&WalkRequest::all(), &mut sink) {
+            Err(EngineError::ShardFailed { .. }) => {}
+            other => panic!("expected ShardFailed from a fatal transport fault, got {other:?}"),
+        }
+        clear_all();
     }
 
     /// The seed-driven sweep arms every I/O site at once from one seed;
@@ -467,7 +514,10 @@ mod fault_injection {
         let reference = streaming_run(&base.join("ref"), 2).unwrap();
         clear_all();
         arm_all_from_seed(0xF417_BACC);
-        let out = streaming_run(&base.join("armed"), 2).expect("seeded sweep did not recover");
+        // The armed run goes through a 2-shard fleet so the seed schedule
+        // can reach the transport sites along with the disk I/O ones.
+        let out =
+            sharded_streaming_run(&base.join("armed"), 2).expect("seeded sweep did not recover");
         assert_eq!(out, reference, "seeded sweep changed walk output");
         clear_all();
         std::fs::remove_dir_all(&base).ok();

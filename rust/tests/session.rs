@@ -1,7 +1,8 @@
 //! Conformance for the WalkSession/WalkSink query API:
 //!
-//! - `CollectSink` through a session is bit-identical to the legacy
-//!   `run_walks` shim across all 6 variants × {hash, degree} partitioners;
+//! - `CollectSink` through a session is bit-identical to the free-function
+//!   `run_query_collect` path across all 6 variants × {hash, degree}
+//!   partitioners;
 //! - `SeedSet::Explicit`/`Slice` queries equal the corresponding rows of a
 //!   full `SeedSet::All` run and leave non-seed walk state untouched;
 //! - `TrainerSink` pipelined training matches a staged walks→train feed
@@ -28,13 +29,11 @@ fn conformance_graph() -> Arc<Graph> {
     Arc::new(skew_graph(&GenConfig::new(512, 12, 29), 3.0))
 }
 
-/// Satellite (a): `WalkSession` + `CollectSink` reproduces the legacy
-/// one-shot API bit-identically for every variant and both placement-
-/// sensitive partitioners. Doubles as the deprecation-shim compile test:
-/// `run_walks` callers must still build.
+/// Satellite (a): `WalkSession` + `CollectSink` reproduces the one-shot
+/// `run_query_collect` path bit-identically for every variant and both
+/// placement-sensitive partitioners.
 #[test]
-#[allow(deprecated)]
-fn collect_sink_matches_legacy_run_walks_across_variants_and_partitioners() {
+fn collect_sink_matches_one_shot_query_across_variants_and_partitioners() {
     let g = conformance_graph();
     let base = FnConfig::new(0.5, 2.0, 71)
         .with_walk_length(8)
@@ -44,18 +43,18 @@ fn collect_sink_matches_legacy_run_walks_across_variants_and_partitioners() {
             let cfg = base.with_variant(variant).with_partitioner(kind);
             let session = WalkSession::builder(g.clone(), cfg).workers(4).build();
             let via_session = session.collect(&WalkRequest::all()).unwrap();
-            let legacy = fastn2v::node2vec::run_walks(
+            let one_shot = fastn2v::node2vec::run_query_collect(
                 &g,
-                kind.build(&g, 4),
+                &kind.build(&g, 4),
                 &cfg,
                 EngineOpts::default(),
-                1,
+                &WalkRequest::all(),
             )
             .unwrap();
             assert_eq!(
                 via_session.walks,
-                legacy.walks,
-                "{} under {} diverged from legacy run_walks",
+                one_shot.walks,
+                "{} under {} diverged from run_query_collect",
                 variant.name(),
                 kind.name()
             );
@@ -64,20 +63,24 @@ fn collect_sink_matches_legacy_run_walks_across_variants_and_partitioners() {
 }
 
 #[test]
-#[allow(deprecated)]
-fn deprecated_shim_rounds_match_session_rounds() {
+fn one_shot_query_rounds_match_session_rounds() {
     let g = conformance_graph();
     let cfg = FnConfig::new(0.5, 2.0, 43).with_walk_length(6);
     let session = WalkSession::builder(g.clone(), cfg).workers(4).build();
     let via_session = session.collect(&WalkRequest::all().with_rounds(4)).unwrap();
-    let legacy =
-        fastn2v::node2vec::run_walks(&g, Partitioner::hash(4), &cfg, EngineOpts::default(), 4)
-            .unwrap();
-    assert_eq!(via_session.walks, legacy.walks);
-    assert_eq!(via_session.stats.per_round, legacy.stats.per_round);
+    let one_shot = fastn2v::node2vec::run_query_collect(
+        &g,
+        &Partitioner::hash(4),
+        &cfg,
+        EngineOpts::default(),
+        &WalkRequest::all().with_rounds(4),
+    )
+    .unwrap();
+    assert_eq!(via_session.walks, one_shot.walks);
+    assert_eq!(via_session.stats.per_round, one_shot.stats.per_round);
     assert_eq!(
         via_session.metrics.num_supersteps(),
-        legacy.metrics.num_supersteps()
+        one_shot.metrics.num_supersteps()
     );
 }
 
