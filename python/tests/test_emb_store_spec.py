@@ -1,0 +1,315 @@
+"""Executable spec for the FN2VEMB1 embedding storage format.
+
+Mirrors rust/src/serve/store.rs (which cannot be compiled in this
+container — see EXPERIMENTS.md §Environment): a byte-exact
+reimplementation of the `--emb-out` writer and the header parser with
+its O(1) validation order, exercised over the same corrupt-file matrix
+the Rust integration suite (rust/tests/serve.rs) pins.
+
+Keep in sync with the Rust:
+
+- header layout: magic `FN2VEMB1` | version u32=1 | flags u32=0 |
+  n u64 | dim u32 | reserved u32=0 | graph fingerprint u64 |
+  emb_start u64=64 | reserved u64=0 | fxhash64 of bytes 0..56 —
+  all little-endian, 64 bytes total;
+- the embeddings section starts at byte 64 (64-byte aligned, so a
+  mapped open can hand back an aligned zero-copy &[f32] view) and holds
+  n * dim LE f32 values, row-major;
+- the graph fingerprint is fxhash64 over 16 bytes: n_vertices u64 ++
+  n_arcs u64, both LE — an O(1) binding of embeddings to the graph they
+  were trained on, checked by `fastn2v serve` unless --trusted;
+- validation failures name a field, in this exact order: magic,
+  version, checksum, flags, reserved, n, dim, sections, dim (overflow),
+  size, then the finite-value scan: embeddings.
+"""
+
+import math
+import struct
+
+import pytest
+
+MASK64 = (1 << 64) - 1
+FX_SEED = 0x517C_C1B7_2722_0A95  # util/fxhash.rs
+MAGIC_EMB = b"FN2VEMB1"
+VERSION = 1
+HEADER_BYTES = 64
+SECTION_ALIGN = 64
+U32_MAX = (1 << 32) - 1
+
+
+def rotl64(x: int, r: int) -> int:
+    return ((x << r) | (x >> (64 - r))) & MASK64
+
+
+def fxhash64(data: bytes) -> int:
+    # Mirrors FxHasher::write + finish.
+    h = 0
+    for i in range(0, len(data), 8):
+        word = int.from_bytes(data[i : i + 8].ljust(8, b"\0"), "little")
+        h = ((rotl64(h, 5) ^ word) * FX_SEED) & MASK64
+    return h
+
+
+def graph_fingerprint(n_vertices: int, n_arcs: int) -> int:
+    # Mirrors serve/store.rs::graph_fingerprint.
+    return fxhash64(struct.pack("<QQ", n_vertices, n_arcs))
+
+
+class FormatError(Exception):
+    """Field-typed failure, mirroring StoreError::Format."""
+
+    def __init__(self, field: str, detail: str = ""):
+        super().__init__(f"invalid {field}: {detail}")
+        self.field = field
+
+
+# ------------------------------------------------------------------ writer
+
+
+def write_emb(flat, dim, fingerprint) -> bytes:
+    if dim == 0 or dim > U32_MAX:
+        raise FormatError("dim", f"embedding dim {dim} out of range")
+    if len(flat) % dim:
+        raise FormatError(
+            "embeddings", f"flat length {len(flat)} is not a multiple of dim {dim}"
+        )
+    n = len(flat) // dim
+    emb_start = HEADER_BYTES
+    head = MAGIC_EMB + struct.pack(
+        "<IIQIIQQQ", VERSION, 0, n, dim, 0, fingerprint, emb_start, 0
+    )
+    assert len(head) == 56
+    head += struct.pack("<Q", fxhash64(head))
+    return head + struct.pack(f"<{len(flat)}f", *flat)
+
+
+# ------------------------------------------------------------------ reader
+
+
+def parse_emb_header(buf: bytes):
+    # Mirrors serve/store.rs::parse_emb_header — O(1), in this exact order.
+    if len(buf) < HEADER_BYTES:
+        raise FormatError("size", "file shorter than the header")
+    h = buf[:HEADER_BYTES]
+    if h[0:8] != MAGIC_EMB:
+        raise FormatError("magic", "not an FN2VEMB1 embedding file")
+    version, flags = struct.unpack("<II", h[8:16])
+    if version != VERSION:
+        raise FormatError("version", str(version))
+    (stored_sum,) = struct.unpack("<Q", h[56:64])
+    if stored_sum != fxhash64(h[:56]):
+        raise FormatError("checksum", "header checksum mismatch")
+    if flags != 0:
+        raise FormatError("flags", hex(flags))
+    reserved32, = struct.unpack("<I", h[28:32])
+    reserved64, = struct.unpack("<Q", h[48:56])
+    if reserved32 or reserved64:
+        raise FormatError("reserved", "reserved header fields must be zero")
+    (n,) = struct.unpack("<Q", h[16:24])
+    if n > U32_MAX:
+        raise FormatError("n", f"{n} rows, but vertex ids are u32")
+    (dim,) = struct.unpack("<I", h[24:28])
+    if dim == 0:
+        raise FormatError("dim", "embedding dim must be nonzero")
+    fingerprint, emb_start = struct.unpack("<QQ", h[32:48])
+    if emb_start != HEADER_BYTES:
+        raise FormatError("sections", f"embeddings must start at {HEADER_BYTES}")
+    emb_bytes = n * dim * 4
+    if emb_bytes > MASK64 or emb_start + emb_bytes > MASK64:
+        raise FormatError("dim", f"{n} x {dim} embeddings overflows")
+    if len(buf) < emb_start + emb_bytes:
+        raise FormatError(
+            "size", f"need {emb_start + emb_bytes} bytes, have {len(buf)}"
+        )
+    return {
+        "n": n,
+        "dim": dim,
+        "graph_fingerprint": fingerprint,
+        "emb_start": emb_start,
+    }
+
+
+def read_emb(buf: bytes, trusted: bool = False):
+    h = parse_emb_header(buf)
+    count = h["n"] * h["dim"]
+    flat = list(struct.unpack_from(f"<{count}f", buf, h["emb_start"]))
+    if not trusted:
+        for i, x in enumerate(flat):
+            if math.isnan(x) or math.isinf(x):
+                raise FormatError(
+                    "embeddings", f"value {x} at flat index {i} is not finite"
+                )
+    return h, flat
+
+
+def check_graph(header, n_vertices, n_arcs):
+    # Mirrors EmbStore::check_graph: row count first, then fingerprint.
+    if header["n"] != n_vertices:
+        raise FormatError(
+            "n", f"{header['n']} embedding rows for {n_vertices} vertices"
+        )
+    expect = graph_fingerprint(n_vertices, n_arcs)
+    if header["graph_fingerprint"] != expect:
+        raise FormatError(
+            "graph_fingerprint",
+            "embeddings were trained on a different graph "
+            "(pass --trusted to serve anyway)",
+        )
+
+
+# --------------------------------------------------------------- fixtures
+
+
+def make_flat(n=37, dim=8, seed=3):
+    # Deterministic, struct-round-trippable f32 values.
+    vals = []
+    x = seed
+    for _ in range(n * dim):
+        x = (x * 6364136223846793005 + 1442695040888963407) & MASK64
+        vals.append(((x >> 40) % 2048) / 256.0 - 4.0)
+    return [struct.unpack("<f", struct.pack("<f", v))[0] for v in vals]
+
+
+def emb_bytes(n=37, dim=8, fingerprint=None, n_arcs=200):
+    fp = graph_fingerprint(n, n_arcs) if fingerprint is None else fingerprint
+    flat = make_flat(n, dim)
+    return write_emb(flat, dim, fp), flat
+
+
+def repack_header(buf: bytes, offset: int, field_bytes: bytes) -> bytes:
+    """Patch a header field and re-checksum (the corruption under test is
+    the field, not the checksum covering it)."""
+    b = bytearray(buf)
+    b[offset : offset + len(field_bytes)] = field_bytes
+    b[56:64] = struct.pack("<Q", fxhash64(bytes(b[:56])))
+    return bytes(b)
+
+
+# ------------------------------------------------------------------- tests
+
+
+def test_round_trip_and_layout():
+    buf, flat = emb_bytes()
+    h, flat2 = read_emb(buf)
+    assert h["n"] == 37 and h["dim"] == 8
+    assert flat2 == pytest.approx(flat)
+    # The embeddings section is 64-byte aligned and starts right after
+    # the header — the property the zero-copy mapped open relies on.
+    assert h["emb_start"] == HEADER_BYTES
+    assert h["emb_start"] % SECTION_ALIGN == 0
+    assert len(buf) == HEADER_BYTES + 37 * 8 * 4
+
+
+def test_writer_rejects_bad_shapes():
+    with pytest.raises(FormatError) as e:
+        write_emb([1.0] * 8, 0, 1)
+    assert e.value.field == "dim"
+    with pytest.raises(FormatError) as e:
+        write_emb([1.0] * 9, 4, 1)
+    assert e.value.field == "embeddings"
+
+
+def test_checksum_detects_header_bit_flips():
+    buf, _ = emb_bytes()
+    # Any single-bit flip in the covered region must be caught (by the
+    # checksum, or by the magic/version checks that run before it).
+    for bit in range(0, 56 * 8, 37):  # sampled positions incl. byte 0
+        b = bytearray(buf)
+        b[bit // 8] ^= 1 << (bit % 8)
+        with pytest.raises(FormatError) as e:
+            parse_emb_header(bytes(b))
+        assert e.value.field in ("checksum", "magic", "version")
+
+
+def test_corrupt_matrix_matches_rust_fields():
+    buf, _ = emb_bytes()
+
+    # bad magic
+    with pytest.raises(FormatError) as e:
+        read_emb(b"XX" + buf[2:])
+    assert e.value.field == "magic"
+
+    # bad version (re-checksummed so the version check itself fires)
+    with pytest.raises(FormatError) as e:
+        read_emb(repack_header(buf, 8, struct.pack("<I", 9)))
+    assert e.value.field == "version"
+
+    # unknown flags
+    with pytest.raises(FormatError) as e:
+        read_emb(repack_header(buf, 12, struct.pack("<I", 0x80)))
+    assert e.value.field == "flags"
+
+    # nonzero reserved fields
+    with pytest.raises(FormatError) as e:
+        read_emb(repack_header(buf, 28, struct.pack("<I", 1)))
+    assert e.value.field == "reserved"
+    with pytest.raises(FormatError) as e:
+        read_emb(repack_header(buf, 48, struct.pack("<Q", 1)))
+    assert e.value.field == "reserved"
+
+    # huge n: rejected O(1), before anything is sized from it
+    with pytest.raises(FormatError) as e:
+        read_emb(repack_header(buf, 16, struct.pack("<Q", MASK64 // 2)))
+    assert e.value.field == "n"
+
+    # zero dim
+    with pytest.raises(FormatError) as e:
+        read_emb(repack_header(buf, 24, struct.pack("<I", 0)))
+    assert e.value.field == "dim"
+
+    # section start elsewhere than 64
+    with pytest.raises(FormatError) as e:
+        read_emb(repack_header(buf, 40, struct.pack("<Q", 128)))
+    assert e.value.field == "sections"
+
+    # row count inflated past the file size
+    with pytest.raises(FormatError) as e:
+        read_emb(repack_header(buf, 16, struct.pack("<Q", 38)))
+    assert e.value.field == "size"
+
+    # truncated body / truncated header
+    with pytest.raises(FormatError) as e:
+        read_emb(buf[:-5])
+    assert e.value.field == "size"
+    with pytest.raises(FormatError) as e:
+        read_emb(buf[:40])
+    assert e.value.field == "size"
+
+    # non-finite value in the payload...
+    b = bytearray(buf)
+    struct.pack_into("<f", b, HEADER_BYTES + 4 * 4, float("nan"))
+    with pytest.raises(FormatError) as e:
+        read_emb(bytes(b))
+    assert e.value.field == "embeddings"
+    # ...which `trusted` skips (the O(1) header checks still ran).
+    read_emb(bytes(b), trusted=True)
+
+
+def test_graph_fingerprint_binding():
+    n, arcs = 37, 200
+    buf, _ = emb_bytes(n=n, n_arcs=arcs)
+    h, _ = read_emb(buf)
+    check_graph(h, n, arcs)  # the matching graph passes
+
+    # A different arc count is a different graph: refused with the
+    # --trusted hint (the serve startup gate of satellite 6).
+    with pytest.raises(FormatError) as e:
+        check_graph(h, n, arcs + 1)
+    assert e.value.field == "graph_fingerprint"
+    assert "--trusted" in str(e.value)
+
+    # A row-count mismatch blames `n` before the fingerprint.
+    with pytest.raises(FormatError) as e:
+        check_graph(h, n + 1, arcs)
+    assert e.value.field == "n"
+
+
+def test_fxhash_reference_vectors():
+    # Pin the hash so a drifting python mirror can't silently agree with
+    # itself: h(8 zero bytes) is one multiply of 0, i.e. 0.
+    assert fxhash64(b"\0" * 8) == 0
+    w = int.from_bytes(b"FN2VEMB1", "little")
+    assert fxhash64(b"FN2VEMB1") == (w * FX_SEED) & MASK64
+    w2 = 0x0102030405060708
+    expect = ((rotl64((w * FX_SEED) & MASK64, 5) ^ w2) * FX_SEED) & MASK64
+    assert fxhash64(b"FN2VEMB1" + w2.to_bytes(8, "little")) == expect

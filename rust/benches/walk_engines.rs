@@ -5,9 +5,12 @@
 //! hot-vertex splitting, EXPERIMENTS.md §Partitioning), the SGNS
 //! trainer throughput grid (threads × {hogwild, sharded},
 //! EXPERIMENTS.md §Train), the checkpoint overhead/resume-latency
-//! pair (EXPERIMENTS.md §Robustness) and the shard-per-process fleet
-//! overhead at 1/2/4 shards (EXPERIMENTS.md §Distributed), all recorded
-//! as a machine-readable baseline in `BENCH_walks.json` for future PRs.
+//! pair (EXPERIMENTS.md §Robustness), the shard-per-process fleet
+//! overhead at 1/2/4 shards (EXPERIMENTS.md §Distributed) and the
+//! serving stack — FN2VEMB1 write/open, HNSW build + recall@10,
+//! brute-force vs indexed query latency and a daemon batch-size sweep
+//! (EXPERIMENTS.md §Serve) — all recorded as a machine-readable
+//! baseline in `BENCH_walks.json` for future PRs.
 //!
 //! Run: `cargo bench --bench walk_engines`
 //! (FASTN2V_BENCH_FULL=1 for a larger graph; FASTN2V_BENCH_OUT to move the
@@ -27,6 +30,10 @@ use fastn2v::node2vec::{
     CheckpointCfg, CollectSink, FnConfig, SamplerKind, SeedSet, Variant, WalkRequest, WalkSession,
 };
 use fastn2v::pregel::checkpoint::checkpoint_files;
+use fastn2v::serve::{
+    recall_at_k, run_server, write_emb, EmbStore, HnswIndex, HnswParams, ServeClient, ServeCore,
+    ServeOpts, ServeRequest,
+};
 use fastn2v::util::benchkit::print_table;
 use fastn2v::util::mmap::Mmap;
 
@@ -317,6 +324,95 @@ fn main() {
         &dist_table,
     );
 
+    // ---- serve: FN2VEMB1 store + HNSW + daemon batch sweep ----
+    // The serving half of EXPERIMENTS.md §Serve: persist/reopen cost of
+    // the embedding file (owned decode vs zero-copy mmap), HNSW build
+    // time and recall@10 against the brute-force oracle, per-query NN
+    // latency both ways, and daemon throughput as the batcher's drain
+    // size grows.
+    let serve = serve_bench(&g, quick);
+    let mut serve_table: Vec<(String, Vec<String>)> = vec![
+        (
+            "emb write".into(),
+            vec![fastn2v::util::fmt_secs(serve.write_secs), "-".into()],
+        ),
+        (
+            "emb open (owned)".into(),
+            vec![fastn2v::util::fmt_secs(serve.open_owned_secs), "-".into()],
+        ),
+    ];
+    if let Some(s) = serve.open_mapped_secs {
+        serve_table.push((
+            "emb open (mmap)".into(),
+            vec![fastn2v::util::fmt_secs(s), "-".into()],
+        ));
+    }
+    serve_table.push((
+        "hnsw build".into(),
+        vec![
+            fastn2v::util::fmt_secs(serve.hnsw_build_secs),
+            format!("recall@10 {:.3}", serve.recall_at_10),
+        ],
+    ));
+    serve_table.push((
+        "nn brute".into(),
+        vec![
+            format!("{:.0} us p50", serve.brute_p50_us),
+            format!("{:.0} us p99", serve.brute_p99_us),
+        ],
+    ));
+    serve_table.push((
+        "nn hnsw".into(),
+        vec![
+            format!("{:.0} us p50", serve.hnsw_p50_us),
+            format!("{:.0} us p99", serve.hnsw_p99_us),
+        ],
+    ));
+    print_table(
+        &format!(
+            "serve ({} rows x dim {} FN2VEMB1, {}{})",
+            serve.n,
+            serve.dim,
+            fastn2v::util::fmt_bytes(serve.file_bytes),
+            if serve.mmap_supported {
+                ""
+            } else {
+                "; mmap unsupported here"
+            }
+        ),
+        &["wall / p50", "p99 / recall"],
+        &serve_table,
+    );
+    let sweep_table: Vec<(String, Vec<String>)> = serve
+        .batch_rows
+        .iter()
+        .map(|r| {
+            (
+                format!("batch {}", r.batch_max),
+                vec![
+                    format!("{:.0} q/s", r.queries_per_sec),
+                    format!("{} us", r.p50_us),
+                    format!("{} us", r.p99_us),
+                    format!("{:.1}", r.mean_batch),
+                ],
+            )
+        })
+        .collect();
+    print_table(
+        &format!(
+            "serve daemon batch sweep ({} pipelined NN queries over UDS)",
+            serve.daemon_queries
+        ),
+        &["throughput", "p50", "p99", "mean batch"],
+        &sweep_table,
+    );
+    if serve.hnsw_p50_us > 0.0 {
+        println!(
+            "hnsw query speedup vs brute force (p50): {:.2}x",
+            serve.brute_p50_us / serve.hnsw_p50_us
+        );
+    }
+
     let secs_of = |name: &str| rows.iter().find(|r| r.name == name).and_then(|r| r.secs);
     let speedup = |a: Option<f64>, b: Option<f64>| match (a, b) {
         (Some(a), Some(b)) if b > 0.0 => Some(a / b),
@@ -352,6 +448,7 @@ fn main() {
         &sgns,
         &ckpt,
         &dist,
+        &serve,
     );
     match std::fs::write(&out_path, &json) {
         Ok(()) => println!("baseline written to {out_path}"),
@@ -640,6 +737,200 @@ fn graph_store_bench(g: &fastn2v::graph::Graph, walk_len: u32) -> GraphStoreBenc
     }
 }
 
+struct ServeBatchRow {
+    batch_max: usize,
+    queries_per_sec: f64,
+    p50_us: u64,
+    p99_us: u64,
+    mean_batch: f64,
+}
+
+struct ServeBench {
+    n: usize,
+    dim: usize,
+    file_bytes: u64,
+    mmap_supported: bool,
+    write_secs: f64,
+    open_owned_secs: f64,
+    open_mapped_secs: Option<f64>,
+    hnsw_build_secs: f64,
+    recall_at_10: f64,
+    nn_queries: usize,
+    brute_p50_us: f64,
+    brute_p99_us: f64,
+    hnsw_p50_us: f64,
+    hnsw_p99_us: f64,
+    daemon_queries: usize,
+    batch_rows: Vec<ServeBatchRow>,
+}
+
+/// Nearest-rank percentile over an unsorted sample, in microseconds.
+fn pctile_us(samples: &mut [f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((samples.len() as f64 - 1.0) * p).round() as usize;
+    samples[idx.min(samples.len() - 1)]
+}
+
+/// Deterministic filler rows (splitmix64 per element, values in
+/// [-0.5, 0.5)): uniform random vectors are HNSW's worst case, so the
+/// recall and latency below are conservative relative to trained
+/// embeddings, and the bench never pays an SGNS run.
+fn synth_flat(n: usize, dim: usize, seed: u64) -> Vec<f32> {
+    let mut out = Vec::with_capacity(n * dim);
+    for i in 0..(n * dim) as u64 {
+        let mut z = seed.wrapping_add((i + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^= z >> 31;
+        out.push(((z >> 40) as f32) / (1u64 << 24) as f32 - 0.5);
+    }
+    out
+}
+
+/// Measure the serving stack over one FN2VEMB1 file sized to the bench
+/// graph: atomic write, owned vs mapped reopen, HNSW build + recall@10
+/// vs `nearest_flat`, per-query NN latency brute vs indexed, then a
+/// daemon batch-size sweep — the same pipelined-client pattern `serve
+/// query --count N` uses, so `mean_batch` shows the batcher actually
+/// coalescing under depth.
+fn serve_bench(g: &std::sync::Arc<fastn2v::graph::Graph>, quick: bool) -> ServeBench {
+    let dir = std::env::temp_dir().join(format!("fastn2v-bench-serve-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).ok();
+    let emb_path = dir.join("bench.emb");
+    let n = g.num_vertices();
+    let dim = 64usize;
+    let flat = synth_flat(n, dim, 0xEB5E);
+
+    let t = std::time::Instant::now();
+    write_emb(&emb_path, &flat, dim, 0xBE9C).expect("write FN2VEMB1");
+    let write_secs = t.elapsed().as_secs_f64();
+    let file_bytes = std::fs::metadata(&emb_path).map(|m| m.len()).unwrap_or(0);
+
+    let t = std::time::Instant::now();
+    let emb = EmbStore::open(&emb_path, &OpenOptions::owned()).expect("open owned");
+    let open_owned_secs = t.elapsed().as_secs_f64();
+    let mmap_supported = Mmap::supported();
+    let open_mapped_secs = if mmap_supported {
+        let t = std::time::Instant::now();
+        let mapped = EmbStore::open(&emb_path, &OpenOptions::mapped()).expect("open mapped");
+        let secs = t.elapsed().as_secs_f64();
+        assert!(mapped.is_mapped(), "mapped bench open fell back to owned");
+        Some(secs)
+    } else {
+        None
+    };
+
+    let params = HnswParams::default();
+    let t = std::time::Instant::now();
+    let idx = HnswIndex::build(&flat, dim, &params);
+    let hnsw_build_secs = t.elapsed().as_secs_f64();
+    let idx_path = dir.join("bench.emb.idx");
+    idx.save(&idx_path, emb.header_checksum())
+        .expect("save FN2VIDX1 sidecar");
+
+    let nn_queries = if quick { 64 } else { 256 };
+    let queries: Vec<usize> = (0..nn_queries).map(|i| i * n / nn_queries).collect();
+    let recall_at_10 = recall_at_k(&idx, &flat, dim, 10, params.ef_search, &queries);
+
+    let mut brute_us = Vec::with_capacity(queries.len());
+    let mut hnsw_us = Vec::with_capacity(queries.len());
+    for &v in &queries {
+        let t = std::time::Instant::now();
+        let truth = fastn2v::embed::nearest_flat(&flat, dim, v, 10);
+        brute_us.push(t.elapsed().as_secs_f64() * 1e6);
+        let t = std::time::Instant::now();
+        let got = idx.search(
+            &flat,
+            &flat[v * dim..(v + 1) * dim],
+            10,
+            params.ef_search,
+            Some(v as u32),
+        );
+        hnsw_us.push(t.elapsed().as_secs_f64() * 1e6);
+        assert_eq!(truth.len(), got.len(), "bench query shape diverged");
+    }
+    let brute_p50_us = pctile_us(&mut brute_us, 0.50);
+    let brute_p99_us = pctile_us(&mut brute_us, 0.99);
+    let hnsw_p50_us = pctile_us(&mut hnsw_us, 0.50);
+    let hnsw_p99_us = pctile_us(&mut hnsw_us, 0.99);
+
+    // Daemon sweep: same query load at three drain sizes. Each point gets
+    // a fresh daemon (the core consumes the store); the index reloads
+    // from the sidecar so only batch_max varies across points.
+    let daemon_queries = if quick { 64 } else { 512 };
+    let mut batch_rows = Vec::new();
+    for batch_max in [1usize, 8, 64] {
+        let emb = EmbStore::open(&emb_path, &OpenOptions::owned()).expect("open for daemon");
+        let idx = HnswIndex::load(&idx_path, emb.header_checksum(), emb.n(), emb.dim())
+            .expect("load FN2VIDX1 sidecar");
+        let sock = dir.join(format!("bench-{batch_max}.sock"));
+        let _ = std::fs::remove_file(&sock);
+        let listener =
+            std::os::unix::net::UnixListener::bind(&sock).expect("bind bench serve socket");
+        let core = ServeCore::new(emb, Some(idx), None, params.ef_search);
+        let opts = ServeOpts {
+            batch_max,
+            ..ServeOpts::default()
+        };
+        let sock_srv = sock.clone();
+        let server = std::thread::spawn(move || run_server(listener, &sock_srv, core, opts));
+        let (mut client, hello) = ServeClient::connect(&sock).expect("connect bench client");
+        assert!(hello.has_index, "bench daemon lost its index");
+        let t = std::time::Instant::now();
+        for i in 0..daemon_queries {
+            let v = ((i * n / daemon_queries) % n) as u32;
+            client
+                .send(&ServeRequest::Nearest { v, k: 10 })
+                .expect("send bench query");
+        }
+        for _ in 0..daemon_queries {
+            let (_, reply) = client.recv().expect("recv bench reply");
+            reply.expect("bench daemon rejected an admitted query");
+        }
+        let wall = t.elapsed().as_secs_f64();
+        let snap = client.stats().expect("bench stats");
+        client.shutdown().expect("bench shutdown");
+        server
+            .join()
+            .expect("bench server thread")
+            .expect("bench server io");
+        batch_rows.push(ServeBatchRow {
+            batch_max,
+            queries_per_sec: if wall > 0.0 {
+                daemon_queries as f64 / wall
+            } else {
+                0.0
+            },
+            p50_us: snap.nearest.p50_us,
+            p99_us: snap.nearest.p99_us,
+            mean_batch: snap.mean_batch(),
+        });
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+
+    ServeBench {
+        n,
+        dim,
+        file_bytes,
+        mmap_supported,
+        write_secs,
+        open_owned_secs,
+        open_mapped_secs,
+        hnsw_build_secs,
+        recall_at_10,
+        nn_queries,
+        brute_p50_us,
+        brute_p99_us,
+        hnsw_p50_us,
+        hnsw_p99_us,
+        daemon_queries,
+        batch_rows,
+    }
+}
+
 /// Hand-rolled JSON (serde is unavailable offline); schema documented in
 /// EXPERIMENTS.md §Perf, §Partitioning and §Scale.
 #[allow(clippy::too_many_arguments)]
@@ -658,6 +949,7 @@ fn render_json(
     sgns: &SgnsTrainBench,
     ckpt: &CheckpointBench,
     dist: &DistributedBench,
+    serve: &ServeBench,
 ) -> String {
     let stats = g.stats();
     let fmt_opt = |o: Option<f64>| o.map(|v| format!("{v:.3}")).unwrap_or_else(|| "null".into());
@@ -767,6 +1059,39 @@ fn render_json(
             r.wall_secs,
             r.bytes_remote,
             if i + 1 < dist.rows.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]},\n");
+    s.push_str(&format!(
+        "  \"serve\": {{\"format\": \"FN2VEMB1\", \"rows\": {}, \"dim\": {}, \"file_bytes\": {}, \"mmap_supported\": {}, \"emb_write_secs\": {:.6}, \"emb_open_owned_secs\": {:.6}, \"emb_open_mmap_secs\": {}, \"hnsw_build_secs\": {:.6}, \"recall_at_10\": {:.4}, \"nn_queries\": {}, \"brute_p50_us\": {:.1}, \"brute_p99_us\": {:.1}, \"hnsw_p50_us\": {:.1}, \"hnsw_p99_us\": {:.1}, \"daemon_queries\": {}, \"batch_sweep\": [\n",
+        serve.n,
+        serve.dim,
+        serve.file_bytes,
+        serve.mmap_supported,
+        serve.write_secs,
+        serve.open_owned_secs,
+        serve
+            .open_mapped_secs
+            .map(|v| format!("{v:.6}"))
+            .unwrap_or_else(|| "null".into()),
+        serve.hnsw_build_secs,
+        serve.recall_at_10,
+        serve.nn_queries,
+        serve.brute_p50_us,
+        serve.brute_p99_us,
+        serve.hnsw_p50_us,
+        serve.hnsw_p99_us,
+        serve.daemon_queries
+    ));
+    for (i, r) in serve.batch_rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"batch_max\": {}, \"queries_per_sec\": {:.1}, \"p50_us\": {}, \"p99_us\": {}, \"mean_batch\": {:.2}}}{}\n",
+            r.batch_max,
+            r.queries_per_sec,
+            r.p50_us,
+            r.p99_us,
+            r.mean_batch,
+            if i + 1 < serve.batch_rows.len() { "," } else { "" }
         ));
     }
     s.push_str("  ]},\n");

@@ -327,7 +327,7 @@ impl RustSgns {
     }
 
     pub fn embeddings(&self) -> Vec<Vec<f32>> {
-        self.w_in.chunks_exact(self.dim).map(|r| r.to_vec()).collect()
+        rows_from_flat(&self.w_in, self.dim)
     }
 
     /// Flat row-major view of the input embeddings — the zero-copy hot
@@ -689,6 +689,15 @@ pub(crate) fn softplus(x: f32) -> f32 {
     } else {
         (1.0 + x.exp()).ln()
     }
+}
+
+/// Materialize a flat row-major matrix as owned rows — the one place
+/// the `Vec<Vec<f32>>` shape is ever built. Every backend keeps its
+/// state flat (the zero-copy read path shared with the serving layer);
+/// this is the boundary where legacy row-shaped consumers are fed.
+pub fn rows_from_flat(flat: &[f32], dim: usize) -> Vec<Vec<f32>> {
+    assert!(dim > 0 && flat.len() % dim == 0);
+    flat.chunks_exact(dim).map(|r| r.to_vec()).collect()
 }
 
 /// Cosine similarity between two embedding rows.

@@ -295,9 +295,10 @@ impl EmbeddingMatrix {
     }
 
     /// Row-per-vertex copy of `w_in` (the legacy
-    /// [`SgnsBackend::final_embeddings`] shape).
+    /// [`SgnsBackend::final_embeddings`] shape), materialized through
+    /// the one shared flat→rows boundary.
     pub fn embeddings(&self) -> Vec<Vec<f32>> {
-        self.w_in().chunks_exact(self.dim).map(|r| r.to_vec()).collect()
+        crate::embed::rows_from_flat(self.w_in(), self.dim)
     }
 
     /// Overwrite both tables from flat snapshots (checkpoint restore).

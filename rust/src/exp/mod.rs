@@ -34,9 +34,18 @@ COMMANDS:
                                                 restart an interrupted walk
                                                 from its latest checkpoint
     embed --graph <name> [--rounds <k>] [--train-threads <n>]
-                 [--train-mode <hogwild|sharded>]
+                 [--train-mode <hogwild|sharded>] [--emb-out <path>]
                                                 walks pipelined into SGNS
-    pipeline --graph blogcatalog [--rounds <k>] walks -> embeddings -> F1
+    pipeline --graph blogcatalog [--rounds <k>] [--emb-out <path>]
+                                                walks -> embeddings -> F1
+    serve --emb <path> [--graph <name>|--graph-file <path>] [--socket <p>]
+                 [--index <p>] [--no-index] [--trusted] [--max-queue <n>]
+                 [--batch <n>] [--ef <n>] [--hnsw-m <m>] [--hnsw-efc <n>]
+                                                query daemon over mmap'd
+                                                FN2VEMB1 embeddings (UDS)
+    serve query --socket <p> [--nn <v> --k <k>] [--score <u,v>] [--walk <v>]
+                 [--count <n>] [--concurrency <c>] [--stats] [--ping]
+                 [--shutdown]                   scripted serve client
     help
 
 All three walk-running commands build a WalkSession (one-time partition
@@ -104,6 +113,14 @@ COMMON FLAGS:
                        (O(1) open, pages shared across processes); a
                        generated graph is spilled to a temp v2 file first,
                        a v1 file downgrades to an owned decode
+    --emb-out <p>      embed/pipeline: persist the trained embeddings as an
+                       FN2VEMB1 file (atomic tmp+fsync+rename; 64-byte
+                       checksummed header binding the training graph's
+                       fingerprint) — the input of `fastn2v serve`
+    --trusted          serve: skip the graph-fingerprint check and the
+                       finite-value scan of the embedding file (mirrors
+                       the graph store's trusted open); serving answers
+                       for the wrong graph becomes YOUR correctness bug
 
 GRAPH NAMES:
     blogcatalog, livejournal, orkut, friendster (scaled analogues),
@@ -137,6 +154,11 @@ fn cli_inner(raw: Vec<String>) -> Result<(), String> {
             "mmap",
             "strict-memory",
             "hot-split-cross-shard",
+            "trusted",
+            "no-index",
+            "stats",
+            "ping",
+            "shutdown",
         ],
     )?;
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
@@ -456,6 +478,18 @@ fn cli_inner(raw: Vec<String>) -> Result<(), String> {
                     nn.iter().map(|(v, c)| format!("{v} ({c:.2})")).collect();
                 println!("nearest to v0: {}", nn.join(", "));
             }
+            if let Some(out) = args.get("emb-out") {
+                match crate::embed::SgnsBackend::embeddings_flat(&model) {
+                    Some((flat, dim)) => write_emb_out_flat(out, flat, dim, &ng.graph)?,
+                    None => {
+                        let rows = crate::embed::SgnsBackend::final_embeddings(&model)
+                            .map_err(|e| e.to_string())?;
+                        let dim = rows.first().map(|r| r.len()).unwrap_or(0);
+                        let flat: Vec<f32> = rows.into_iter().flatten().collect();
+                        write_emb_out_flat(out, &flat, dim, &ng.graph)?;
+                    }
+                }
+            }
             Ok(())
         }
         "pipeline" => {
@@ -532,6 +566,11 @@ fn cli_inner(raw: Vec<String>) -> Result<(), String> {
                 );
                 emb.embeddings
             };
+            if let Some(out) = args.get("emb-out") {
+                let dim = embeddings.first().map(|r| r.len()).unwrap_or(0);
+                let flat: Vec<f32> = embeddings.iter().flatten().copied().collect();
+                write_emb_out_flat(out, &flat, dim, &graph)?;
+            }
             let scores = pipeline::classify_fractions(
                 &embeddings,
                 &lg.labels,
@@ -545,8 +584,305 @@ fn cli_inner(raw: Vec<String>) -> Result<(), String> {
             );
             Ok(())
         }
+        "serve" => {
+            if args.positional.get(1).map(String::as_str) == Some("query") {
+                serve_query(&args)
+            } else {
+                serve_daemon(&args, scale, seed)
+            }
+        }
         other => Err(format!("unknown command `{other}`; see `fastn2v help`")),
     }
+}
+
+/// Persist a trained embedding matrix as FN2VEMB1 (`--emb-out` on
+/// `embed` / `pipeline`), fingerprinted against the graph it was trained
+/// on so `serve` can refuse a mismatched pairing later.
+fn write_emb_out_flat(
+    out: &str,
+    flat: &[f32],
+    dim: usize,
+    graph: &crate::graph::Graph,
+) -> Result<(), String> {
+    let fp = crate::serve::graph_fingerprint(graph);
+    crate::serve::write_emb(std::path::Path::new(out), flat, dim, fp)
+        .map_err(|e| e.to_string())?;
+    println!(
+        "wrote FN2VEMB1 {out}: {} rows x dim {dim}, graph fingerprint {fp:#018x}",
+        if dim == 0 { 0 } else { flat.len() / dim }
+    );
+    Ok(())
+}
+
+/// `fastn2v serve`: open an FN2VEMB1 file (mapped where the platform
+/// allows — a restart costs a header read, not a matrix copy), verify it
+/// against the serving graph, load or build the HNSW sidecar, and answer
+/// queries on a unix socket until a shutdown frame arrives.
+fn serve_daemon(args: &Args, scale: Scale, seed: u64) -> Result<(), String> {
+    let emb_arg = args.get("emb").ok_or("serve needs --emb <path>")?.to_string();
+    let emb_path = std::path::PathBuf::from(&emb_arg);
+    let trusted = args.has_switch("trusted");
+    let open = if crate::util::mmap::Mmap::supported() {
+        crate::graph::OpenOptions::mapped()
+    } else {
+        crate::graph::OpenOptions::owned()
+    }
+    .trusted(trusted);
+    let emb = crate::serve::EmbStore::open(&emb_path, &open).map_err(|e| e.to_string())?;
+    println!(
+        "opened {emb_arg}: {} rows x dim {} ({}{})",
+        emb.n(),
+        emb.dim(),
+        if emb.is_mapped() { "mapped" } else { "owned" },
+        if trusted { ", trusted" } else { "" },
+    );
+
+    // A graph is optional: without one the daemon answers NN/score only.
+    // With one, the embedding file must fingerprint-match it (satellite 6)
+    // unless --trusted says the operator knows better.
+    let graph_given = args.get("graph").is_some() || args.get("graph-file").is_some();
+    let walks = if graph_given {
+        let ng = common::resolve_graph(
+            args.get("graph"),
+            args.get("graph-file"),
+            args.has_switch("mmap"),
+            scale,
+            seed,
+        )?;
+        if trusted {
+            println!("skipping graph fingerprint check (--trusted)");
+        } else {
+            emb.check_graph(&ng.graph).map_err(|e| e.to_string())?;
+        }
+        let p: f32 = args.get_parsed("p", 0.5)?;
+        let q: f32 = args.get_parsed("q", 2.0)?;
+        let workers: usize = args.get_parsed("workers", common::WORKERS)?;
+        let cfg = crate::node2vec::FnConfig::new(p, q, seed)
+            .with_walk_length(scale.walk_length())
+            .with_variant(crate::node2vec::Variant::Cache)
+            .with_popular_threshold(common::popular_threshold(&ng.graph));
+        Some(
+            crate::node2vec::WalkSession::builder(ng.graph.clone(), cfg)
+                .workers(workers)
+                .build(),
+        )
+    } else {
+        None
+    };
+
+    let ef_search: usize = args.get_parsed("ef", 64)?;
+    let index = if args.has_switch("no-index") {
+        None
+    } else {
+        let defaults = crate::serve::HnswParams::default();
+        let params = crate::serve::HnswParams {
+            m: args.get_parsed("hnsw-m", defaults.m)?,
+            ef_construction: args.get_parsed("hnsw-efc", defaults.ef_construction)?,
+            ef_search,
+            seed: args.get_parsed("index-seed", defaults.seed)?,
+        };
+        let idx_path = args
+            .get("index")
+            .map(std::path::PathBuf::from)
+            .unwrap_or_else(|| crate::serve::default_index_path(&emb_path));
+        let t = std::time::Instant::now();
+        let (idx, built) = crate::serve::load_or_build_index(&emb, &idx_path, &params)
+            .map_err(|e| e.to_string())?;
+        println!(
+            "{} HNSW index {} (m {}, ef_construction {}) in {}",
+            if built { "built" } else { "loaded" },
+            idx_path.display(),
+            params.m,
+            params.ef_construction,
+            crate::util::fmt_secs(t.elapsed().as_secs_f64()),
+        );
+        Some(idx)
+    };
+
+    let socket = args
+        .get("socket")
+        .map(str::to_string)
+        .unwrap_or_else(|| format!("/tmp/fastn2v-serve-{}.sock", std::process::id()));
+    let sock_path = std::path::PathBuf::from(&socket);
+    if sock_path.exists() {
+        std::fs::remove_file(&sock_path)
+            .map_err(|e| format!("{socket}: could not remove stale socket: {e}"))?;
+    }
+    let listener = std::os::unix::net::UnixListener::bind(&sock_path)
+        .map_err(|e| format!("{socket}: bind: {e}"))?;
+    let opts = crate::serve::ServeOpts {
+        max_queue: args.get_parsed("max-queue", 1024)?,
+        batch_max: args.get_parsed("batch", 64)?,
+        ef_search,
+        drain_delay: None,
+    };
+    println!(
+        "serving on {socket} (max-queue {}, batch {})",
+        opts.max_queue, opts.batch_max
+    );
+    let core = crate::serve::ServeCore::new(emb, index, walks, ef_search);
+    let snap =
+        crate::serve::run_server(listener, &sock_path, core, opts).map_err(|e| e.to_string())?;
+    let _ = std::fs::remove_file(&sock_path);
+    println!("serve metrics: {snap}");
+    Ok(())
+}
+
+fn fmt_serve_response(resp: &crate::serve::ServeResponse) -> String {
+    use crate::serve::ServeResponse;
+    match resp {
+        ServeResponse::Neighbors(nn) => {
+            let nn: Vec<String> = nn.iter().map(|(v, c)| format!("{v} ({c:.3})")).collect();
+            format!("neighbors: {}", nn.join(", "))
+        }
+        ServeResponse::Score(s) => format!("score: {s:.4}"),
+        ServeResponse::Walk(w) => format!(
+            "walk ({} steps): {:?}{}",
+            w.len(),
+            &w[..w.len().min(12)],
+            if w.len() > 12 { " ..." } else { "" }
+        ),
+        ServeResponse::Stats(s) => format!("stats: {s}"),
+        ServeResponse::Pong => "pong".to_string(),
+    }
+}
+
+/// `fastn2v serve query`: the scripted client used by CI and smoke tests.
+/// Builds `--count` requests from one of `--nn/--score/--walk`, fans them
+/// over `--concurrency` pipelined connections, and reports ok/overloaded
+/// tallies a script can grep.
+fn serve_query(args: &Args) -> Result<(), String> {
+    let socket = args
+        .get("socket")
+        .ok_or("serve query needs --socket <path>")?;
+    let sock = std::path::PathBuf::from(socket);
+    let (mut client, hello) =
+        crate::serve::ServeClient::connect(&sock).map_err(|e| e.to_string())?;
+    println!(
+        "connected: {} rows x dim {}, index {}, walks {}",
+        hello.n,
+        hello.dim,
+        if hello.has_index { "hnsw" } else { "brute" },
+        if hello.has_walks { "on" } else { "off" },
+    );
+
+    let count: usize = args.get_parsed("count", 1)?;
+    let concurrency: usize = args.get_parsed("concurrency", 1)?;
+    let n = (hello.n as u32).max(1);
+    let mut reqs: Vec<crate::serve::ServeRequest> = Vec::new();
+    if let Some(v) = args.get_opt_parsed::<u32>("nn")? {
+        let k: u32 = args.get_parsed("k", 10)?;
+        for i in 0..count {
+            // Spread query vertices so a batch sweep exercises distinct rows.
+            let v = (v.wrapping_add(i as u32)) % n;
+            reqs.push(crate::serve::ServeRequest::Nearest { v, k });
+        }
+    } else if let Some(pair) = args.get("score") {
+        let (u, v) = pair
+            .split_once(',')
+            .ok_or("--score expects <u,v> (two vertex ids)")?;
+        let u: u32 = u
+            .trim()
+            .parse()
+            .map_err(|_| format!("bad --score vertex `{u}`"))?;
+        let v: u32 = v
+            .trim()
+            .parse()
+            .map_err(|_| format!("bad --score vertex `{v}`"))?;
+        for _ in 0..count {
+            reqs.push(crate::serve::ServeRequest::Score { u, v });
+        }
+    } else if let Some(v) = args.get_opt_parsed::<u32>("walk")? {
+        let length: u32 = args.get_parsed("walk-length", 0)?;
+        for _ in 0..count {
+            reqs.push(crate::serve::ServeRequest::Walk { v, length });
+        }
+    }
+
+    if !reqs.is_empty() {
+        let total = reqs.len();
+        let conc = concurrency.clamp(1, total);
+        let mut chunks: Vec<Vec<crate::serve::ServeRequest>> = vec![Vec::new(); conc];
+        for (i, r) in reqs.into_iter().enumerate() {
+            chunks[i % conc].push(r);
+        }
+        let t = std::time::Instant::now();
+        let (mut ok, mut overloaded, mut rejected) = (0usize, 0usize, 0usize);
+        let mut first: Option<crate::serve::ServeResponse> = None;
+        std::thread::scope(|s| -> Result<(), String> {
+            let handles: Vec<_> = chunks
+                .into_iter()
+                .map(|chunk| {
+                    let sockp = sock.clone();
+                    s.spawn(move || -> Result<_, String> {
+                        let (mut c, _) = crate::serve::ServeClient::connect(&sockp)
+                            .map_err(|e| e.to_string())?;
+                        // Pipelined: send the whole chunk, then drain, so
+                        // the daemon actually sees batchable depth.
+                        for r in &chunk {
+                            c.send(r).map_err(|e| e.to_string())?;
+                        }
+                        let (mut ok, mut over, mut rej) = (0usize, 0usize, 0usize);
+                        let mut first = None;
+                        for _ in 0..chunk.len() {
+                            let (_id, res) = c.recv().map_err(|e| e.to_string())?;
+                            match res {
+                                Ok(resp) => {
+                                    ok += 1;
+                                    if first.is_none() {
+                                        first = Some(resp);
+                                    }
+                                }
+                                Err(r) if r.is_overload() => over += 1,
+                                Err(_) => rej += 1,
+                            }
+                        }
+                        Ok((ok, over, rej, first))
+                    })
+                })
+                .collect();
+            for h in handles {
+                let (o, ov, rj, f) =
+                    h.join().map_err(|_| "query thread panicked".to_string())??;
+                ok += o;
+                overloaded += ov;
+                rejected += rj;
+                if first.is_none() {
+                    first = f;
+                }
+            }
+            Ok(())
+        })?;
+        let secs = t.elapsed().as_secs_f64().max(1e-9);
+        if let Some(resp) = &first {
+            println!("first response: {}", fmt_serve_response(resp));
+        }
+        println!(
+            "queries: ok={ok} overloaded={overloaded} rejected={rejected} \
+             in {} ({:.0}/s, {conc} conns)",
+            crate::util::fmt_secs(secs),
+            total as f64 / secs,
+        );
+    }
+
+    let only_control = args.get("nn").is_none()
+        && args.get("score").is_none()
+        && args.get("walk").is_none();
+    if args.has_switch("ping")
+        || (only_control && !args.has_switch("stats") && !args.has_switch("shutdown"))
+    {
+        client.ping().map_err(|e| e.to_string())?;
+        println!("pong");
+    }
+    if args.has_switch("stats") {
+        let snap = client.stats().map_err(|e| e.to_string())?;
+        println!("server stats: {snap}");
+    }
+    if args.has_switch("shutdown") {
+        client.shutdown().map_err(|e| e.to_string())?;
+        println!("server acknowledged shutdown");
+    }
+    Ok(())
 }
 
 /// Parse the shared SGNS training knobs of `embed` / `pipeline`.
@@ -894,5 +1230,103 @@ mod cli_tests {
             run(&["walk", "--graph", "skew-2", "--sampler", "alias", "--quick"]),
             2
         );
+    }
+
+    #[test]
+    fn embed_emb_out_writes_servable_store() {
+        let dir = std::env::temp_dir().join(format!("fn2v-cli-embout-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let emb = dir.join("skew2.emb");
+        let embs = emb.to_str().unwrap().to_string();
+        assert_eq!(
+            run(&[
+                "embed", "--graph", "skew-2", "--rounds", "2", "--emb-out", &embs,
+                "--quick",
+            ]),
+            0
+        );
+        let h = crate::serve::read_emb_header(&emb).unwrap();
+        assert_eq!(h.dim, 64);
+        assert!(h.n > 0);
+        // Same generator + seed => the fingerprint `serve` will check.
+        let ng = common::build_graph("skew-2", Scale::Quick, 42);
+        assert_eq!(h.graph_fingerprint, crate::serve::graph_fingerprint(&ng.graph));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn serve_daemon_and_query_round_trip() {
+        let dir = std::env::temp_dir().join(format!("fn2v-cli-serve-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let embs = dir.join("g.emb").to_str().unwrap().to_string();
+        assert_eq!(
+            run(&[
+                "embed", "--graph", "skew-2", "--rounds", "2", "--emb-out", &embs,
+                "--quick",
+            ]),
+            0
+        );
+        let sock = dir.join("serve.sock");
+        let sock_s = sock.to_str().unwrap().to_string();
+        let (embs_c, sock_c) = (embs.clone(), sock_s.clone());
+        let daemon = std::thread::spawn(move || {
+            run(&[
+                "serve",
+                "--emb",
+                embs_c.as_str(),
+                "--graph",
+                "skew-2",
+                "--socket",
+                sock_c.as_str(),
+                "--quick",
+            ])
+        });
+        for _ in 0..400 {
+            if sock.exists() {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(25));
+        }
+        assert!(sock.exists(), "daemon did not bind its socket in time");
+        // NN queries fan over two pipelined connections; walk comes off the
+        // live WalkSession; stats + shutdown ride the control plane.
+        assert_eq!(
+            run(&[
+                "serve", "query", "--socket", &sock_s, "--nn", "0", "--k", "3",
+                "--count", "8", "--concurrency", "2",
+            ]),
+            0
+        );
+        assert_eq!(run(&["serve", "query", "--socket", &sock_s, "--walk", "1"]), 0);
+        assert_eq!(
+            run(&["serve", "query", "--socket", &sock_s, "--stats", "--shutdown"]),
+            0
+        );
+        assert_eq!(daemon.join().unwrap(), 0, "daemon must exit cleanly");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn serve_rejects_bad_invocations_and_fingerprint_mismatch() {
+        assert_eq!(run(&["serve", "--quick"]), 2); // missing --emb
+        assert_eq!(run(&["serve", "--emb", "/nonexistent.emb", "--quick"]), 2);
+        assert_eq!(run(&["serve", "query", "--nn", "0"]), 2); // missing --socket
+        let dir = std::env::temp_dir().join(format!("fn2v-cli-fpmis-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let embs = dir.join("skew2.emb").to_str().unwrap().to_string();
+        assert_eq!(
+            run(&[
+                "embed", "--graph", "skew-2", "--rounds", "2", "--emb-out", &embs,
+                "--quick",
+            ]),
+            0
+        );
+        // Embeddings trained on skew-2 must not serve er-10: the
+        // fingerprint check fails before the daemon binds a socket.
+        assert_eq!(
+            run(&["serve", "--emb", &embs, "--graph", "er-10", "--quick"]),
+            2
+        );
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -65,8 +65,8 @@ pub const MAGIC_V2: &[u8; 8] = b"FN2VGRF2";
 pub(crate) const MAGIC_V1: &[u8; 8] = b"FN2VGRF1";
 
 const VERSION: u32 = 2;
-const HEADER_BYTES: usize = 64;
-const SECTION_ALIGN: u64 = 64;
+pub(crate) const HEADER_BYTES: usize = 64;
+pub(crate) const SECTION_ALIGN: u64 = 64;
 const FLAG_UNDIRECTED: u32 = 1;
 const FLAG_UNIT_WEIGHTS: u32 = 2;
 
@@ -329,15 +329,15 @@ pub(crate) fn fxhash64(bytes: &[u8]) -> u64 {
     h.finish()
 }
 
-fn align_up(x: u64) -> u64 {
+pub(crate) fn align_up(x: u64) -> u64 {
     x.div_ceil(SECTION_ALIGN) * SECTION_ALIGN
 }
 
-fn le_u32(b: &[u8]) -> u32 {
+pub(crate) fn le_u32(b: &[u8]) -> u32 {
     u32::from_le_bytes(b.try_into().unwrap())
 }
 
-fn le_u64(b: &[u8]) -> u64 {
+pub(crate) fn le_u64(b: &[u8]) -> u64 {
     u64::from_le_bytes(b.try_into().unwrap())
 }
 

@@ -21,6 +21,10 @@
 //! - [`coordinator`] — shard-per-process distributed walk engine: the L3
 //!                 master (barrier protocol, shard registration, aggregate
 //!                 memory budget, checkpoint orchestration).
+//! - [`serve`]   — embedding serving subsystem: FN2VEMB1 mmap-fast
+//!                 embedding store, deterministic HNSW ANN index, and the
+//!                 `fastn2v serve` query daemon (batching + admission
+//!                 control over the FN2T frame codec).
 //! - [`exp`]     — per-figure experiment drivers (Table 1, Figures 1-14).
 //! - [`util`]    — PRNG, alias sampling, CLI, benchkit, propkit, memstat.
 
@@ -34,4 +38,5 @@ pub mod graph;
 pub mod node2vec;
 pub mod pregel;
 pub mod runtime;
+pub mod serve;
 pub mod util;

@@ -219,16 +219,24 @@ mod pjrt {
             Ok(flat[0])
         }
 
+        /// Download the center-embedding table as one flat row-major
+        /// buffer plus the row width — the same shape
+        /// `SgnsBackend::embeddings_flat` exposes in-process and
+        /// FN2VEMB1 stores on disk. One literal download, one copy.
+        pub fn embeddings_flat_vec(&self) -> Result<(Vec<f32>, usize)> {
+            let lit = self.state.to_literal_sync()?;
+            let mut flat: Vec<f32> = lit.to_vec()?;
+            let d = self.variant.dim;
+            // Skip the loss row, keep the first `num_vertices` rows.
+            flat.drain(..d);
+            flat.truncate(self.num_vertices * d);
+            Ok((flat, d))
+        }
+
         /// Download the center-embedding table (first `num_vertices` rows).
         pub fn embeddings(&self) -> Result<Vec<Vec<f32>>> {
-            let lit = self.state.to_literal_sync()?;
-            let flat: Vec<f32> = lit.to_vec()?;
-            let d = self.variant.dim;
-            // Skip the loss row.
-            Ok(flat[d..(1 + self.num_vertices) * d]
-                .chunks_exact(d)
-                .map(|r| r.to_vec())
-                .collect())
+            let (flat, d) = self.embeddings_flat_vec()?;
+            Ok(crate::embed::rows_from_flat(&flat, d))
         }
     }
 }
@@ -289,8 +297,13 @@ mod stub {
             bail!("PJRT runtime unavailable (built without the `pjrt` feature)")
         }
 
-        pub fn embeddings(&self) -> Result<Vec<Vec<f32>>> {
+        pub fn embeddings_flat_vec(&self) -> Result<(Vec<f32>, usize)> {
             bail!("PJRT runtime unavailable (built without the `pjrt` feature)")
+        }
+
+        pub fn embeddings(&self) -> Result<Vec<Vec<f32>>> {
+            let (flat, d) = self.embeddings_flat_vec()?;
+            Ok(crate::embed::rows_from_flat(&flat, d))
         }
     }
 }

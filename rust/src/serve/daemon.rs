@@ -1,0 +1,1094 @@
+//! The `fastn2v serve` query daemon.
+//!
+//! A long-lived server holding an mmap'd [`EmbStore`], an optional
+//! [`HnswIndex`], and an optional [`WalkSession`], answering concurrent
+//! queries over a Unix-domain socket. Frames reuse the checksummed FN2T
+//! codec from `pregel/transport.rs` — the codec is host-agnostic, so a
+//! TCP listener is a listener swap, not a protocol change (ROADMAP
+//! item 2):
+//!
+//! | frame kind | direction | meaning                                  |
+//! |------------|-----------|------------------------------------------|
+//! | `Hello`    | both      | handshake; server replies with store shape |
+//! | `Run`      | client →  | one [`ServeRequest`]; `superstep` = request id |
+//! | `Values`   | → client  | the matching [`ServeResponse`], id echoed |
+//! | `Error`    | → client  | typed [`ServeRejection`], id echoed      |
+//! | `Shutdown` | both      | drain + stop; server acks before exit    |
+//!
+//! **Batching.** Every connection gets a reader thread that decodes
+//! frames and pushes jobs onto one bounded queue; a single batcher
+//! thread drains up to `batch_max` jobs per wakeup and answers them.
+//! Queries from different connections batch together — the amortization
+//! the walk engine gets from supersteps, applied to serving.
+//!
+//! **Admission control.** When the queue is at `max_queue`, new work is
+//! rejected *immediately* with a typed `Overloaded` error — the client
+//! hears "retry later" in microseconds instead of watching its socket
+//! back up, and jobs already admitted still complete (drain-then-stop
+//! is also the shutdown discipline). Overload sheds load; it never
+//! collapses the daemon.
+//!
+//! **Metrics.** Per query class (nearest / score / walk): served count
+//! and p50/p99 latency from admission to response write, plus rejected
+//! counts and batch-occupancy numbers.
+
+use std::collections::VecDeque;
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::embed::nearest_flat;
+use crate::node2vec::{SeedSet, WalkRequest, WalkSession};
+use crate::pregel::checkpoint::ByteReader;
+use crate::pregel::transport::{Frame, FrameError, FrameKind, Transport, UdsTransport, COORD_ID};
+use crate::serve::hnsw::HnswIndex;
+use crate::serve::store::EmbStore;
+use crate::util::failpoints;
+
+// ---------------------------------------------------------------------------
+// Request / response payloads
+// ---------------------------------------------------------------------------
+
+/// Rejection codes carried in `Error` frame payloads.
+pub mod reject_code {
+    /// Queue at `max_queue` — retry later.
+    pub const OVERLOADED: u8 = 1;
+    /// Malformed or out-of-range request.
+    pub const BAD_REQUEST: u8 = 2;
+    /// Query class this daemon was not started with (e.g. walk queries
+    /// without a graph).
+    pub const UNSUPPORTED: u8 = 3;
+    /// Daemon is draining for shutdown.
+    pub const SHUTTING_DOWN: u8 = 4;
+    /// Query execution failed server-side.
+    pub const INTERNAL: u8 = 5;
+}
+
+const OP_NEAREST: u8 = 1;
+const OP_SCORE: u8 = 2;
+const OP_WALK: u8 = 3;
+const OP_STATS: u8 = 4;
+const OP_PING: u8 = 5;
+
+/// One query, as decoded from a `Run` frame payload.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeRequest {
+    /// Top-`k` nearest neighbors of vertex `v` (self excluded).
+    Nearest { v: u32, k: u32 },
+    /// Link-prediction score: cosine similarity of rows `u` and `v`.
+    Score { u: u32, v: u32 },
+    /// On-demand walk from a (cold) vertex; `length == 0` uses the
+    /// session default.
+    Walk { v: u32, length: u32 },
+    /// Metrics snapshot (control plane: answered inline, never queued).
+    Stats,
+    /// Liveness probe (control plane).
+    Ping,
+}
+
+impl ServeRequest {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(9);
+        match *self {
+            ServeRequest::Nearest { v, k } => {
+                out.push(OP_NEAREST);
+                out.extend_from_slice(&v.to_le_bytes());
+                out.extend_from_slice(&k.to_le_bytes());
+            }
+            ServeRequest::Score { u, v } => {
+                out.push(OP_SCORE);
+                out.extend_from_slice(&u.to_le_bytes());
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+            ServeRequest::Walk { v, length } => {
+                out.push(OP_WALK);
+                out.extend_from_slice(&v.to_le_bytes());
+                out.extend_from_slice(&length.to_le_bytes());
+            }
+            ServeRequest::Stats => out.push(OP_STATS),
+            ServeRequest::Ping => out.push(OP_PING),
+        }
+        out
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<ServeRequest, String> {
+        let mut r = ByteReader::new(payload);
+        let req = match r.u8()? {
+            OP_NEAREST => ServeRequest::Nearest {
+                v: r.u32()?,
+                k: r.u32()?,
+            },
+            OP_SCORE => ServeRequest::Score {
+                u: r.u32()?,
+                v: r.u32()?,
+            },
+            OP_WALK => ServeRequest::Walk {
+                v: r.u32()?,
+                length: r.u32()?,
+            },
+            OP_STATS => ServeRequest::Stats,
+            OP_PING => ServeRequest::Ping,
+            op => return Err(format!("unknown serve op {op}")),
+        };
+        if !r.is_empty() {
+            return Err(format!("{} trailing bytes after request", r.remaining()));
+        }
+        Ok(req)
+    }
+}
+
+/// Latency percentiles of one query class.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ClassStats {
+    pub served: u64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+}
+
+/// Point-in-time metrics snapshot ([`ServeRequest::Stats`] answer).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StatsSnapshot {
+    pub nearest: ClassStats,
+    pub score: ClassStats,
+    pub walk: ClassStats,
+    pub rejected: u64,
+    pub batches: u64,
+    pub batched_jobs: u64,
+}
+
+impl StatsSnapshot {
+    /// Mean jobs per drained batch (the batching win, measured).
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batched_jobs as f64 / self.batches as f64
+        }
+    }
+}
+
+impl std::fmt::Display for StatsSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for (name, c) in [
+            ("nearest", &self.nearest),
+            ("score", &self.score),
+            ("walk", &self.walk),
+        ] {
+            writeln!(
+                f,
+                "  {name:<8} served {:<8} p50 {} us, p99 {} us",
+                c.served, c.p50_us, c.p99_us
+            )?;
+        }
+        write!(
+            f,
+            "  rejected {}  batches {}  mean batch {:.2}",
+            self.rejected,
+            self.batches,
+            self.mean_batch()
+        )
+    }
+}
+
+/// One answer, as carried in a `Values` frame payload (first byte echoes
+/// the request op).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServeResponse {
+    Neighbors(Vec<(u32, f32)>),
+    Score(f32),
+    Walk(Vec<u32>),
+    Stats(StatsSnapshot),
+    Pong,
+}
+
+impl ServeResponse {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            ServeResponse::Neighbors(hits) => {
+                out.push(OP_NEAREST);
+                out.extend_from_slice(&(hits.len() as u32).to_le_bytes());
+                for &(v, sim) in hits {
+                    out.extend_from_slice(&v.to_le_bytes());
+                    out.extend_from_slice(&sim.to_le_bytes());
+                }
+            }
+            ServeResponse::Score(s) => {
+                out.push(OP_SCORE);
+                out.extend_from_slice(&s.to_le_bytes());
+            }
+            ServeResponse::Walk(walk) => {
+                out.push(OP_WALK);
+                out.extend_from_slice(&(walk.len() as u32).to_le_bytes());
+                for &v in walk {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            ServeResponse::Stats(s) => {
+                out.push(OP_STATS);
+                for c in [&s.nearest, &s.score, &s.walk] {
+                    out.extend_from_slice(&c.served.to_le_bytes());
+                    out.extend_from_slice(&c.p50_us.to_le_bytes());
+                    out.extend_from_slice(&c.p99_us.to_le_bytes());
+                }
+                out.extend_from_slice(&s.rejected.to_le_bytes());
+                out.extend_from_slice(&s.batches.to_le_bytes());
+                out.extend_from_slice(&s.batched_jobs.to_le_bytes());
+            }
+            ServeResponse::Pong => out.push(OP_PING),
+        }
+        out
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<ServeResponse, String> {
+        let mut r = ByteReader::new(payload);
+        let resp = match r.u8()? {
+            OP_NEAREST => {
+                let count = r.u32()? as usize;
+                let mut hits = Vec::with_capacity(count.min(1 << 16));
+                for _ in 0..count {
+                    hits.push((r.u32()?, r.f32()?));
+                }
+                ServeResponse::Neighbors(hits)
+            }
+            OP_SCORE => ServeResponse::Score(r.f32()?),
+            OP_WALK => {
+                let len = r.u32()? as usize;
+                let mut walk = Vec::with_capacity(len.min(1 << 16));
+                for _ in 0..len {
+                    walk.push(r.u32()?);
+                }
+                ServeResponse::Walk(walk)
+            }
+            OP_STATS => {
+                let mut class = || -> Result<ClassStats, String> {
+                    Ok(ClassStats {
+                        served: r.u64()?,
+                        p50_us: r.u64()?,
+                        p99_us: r.u64()?,
+                    })
+                };
+                let nearest = class()?;
+                let score = class()?;
+                let walk = class()?;
+                ServeResponse::Stats(StatsSnapshot {
+                    nearest,
+                    score,
+                    walk,
+                    rejected: r.u64()?,
+                    batches: r.u64()?,
+                    batched_jobs: r.u64()?,
+                })
+            }
+            OP_PING => ServeResponse::Pong,
+            op => return Err(format!("unknown serve response op {op}")),
+        };
+        if !r.is_empty() {
+            return Err(format!("{} trailing bytes after response", r.remaining()));
+        }
+        Ok(resp)
+    }
+}
+
+/// A typed rejection (`Error` frame payload: code byte + UTF-8 detail).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ServeRejection {
+    pub code: u8,
+    pub message: String,
+}
+
+impl ServeRejection {
+    pub fn new(code: u8, message: impl Into<String>) -> ServeRejection {
+        ServeRejection {
+            code,
+            message: message.into(),
+        }
+    }
+
+    pub fn is_overload(&self) -> bool {
+        self.code == reject_code::OVERLOADED
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(1 + self.message.len());
+        out.push(self.code);
+        out.extend_from_slice(self.message.as_bytes());
+        out
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<ServeRejection, String> {
+        if payload.is_empty() {
+            return Err("empty rejection payload".into());
+        }
+        Ok(ServeRejection {
+            code: payload[0],
+            message: String::from_utf8_lossy(&payload[1..]).into_owned(),
+        })
+    }
+}
+
+impl std::fmt::Display for ServeRejection {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let name = match self.code {
+            reject_code::OVERLOADED => "overloaded",
+            reject_code::BAD_REQUEST => "bad-request",
+            reject_code::UNSUPPORTED => "unsupported",
+            reject_code::SHUTTING_DOWN => "shutting-down",
+            reject_code::INTERNAL => "internal",
+            _ => "unknown",
+        };
+        write!(f, "{name}: {}", self.message)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Core query execution
+// ---------------------------------------------------------------------------
+
+/// Everything needed to answer data-plane queries: the embedding store,
+/// the optional ANN index (brute force when absent), and the optional
+/// walk session for on-demand walks.
+pub struct ServeCore {
+    emb: EmbStore,
+    index: Option<HnswIndex>,
+    walks: Option<WalkSession>,
+    ef_search: usize,
+}
+
+impl ServeCore {
+    pub fn new(
+        emb: EmbStore,
+        index: Option<HnswIndex>,
+        walks: Option<WalkSession>,
+        ef_search: usize,
+    ) -> ServeCore {
+        ServeCore {
+            emb,
+            index,
+            walks,
+            ef_search,
+        }
+    }
+
+    pub fn emb(&self) -> &EmbStore {
+        &self.emb
+    }
+
+    pub fn index(&self) -> Option<&HnswIndex> {
+        self.index.as_ref()
+    }
+
+    fn check_vertex(&self, v: u32) -> Result<usize, ServeRejection> {
+        let v = v as usize;
+        if v >= self.emb.n() {
+            return Err(ServeRejection::new(
+                reject_code::BAD_REQUEST,
+                format!("vertex {v} out of range for {} rows", self.emb.n()),
+            ));
+        }
+        Ok(v)
+    }
+
+    /// Answer one data-plane query.
+    pub fn answer(&self, req: &ServeRequest) -> Result<ServeResponse, ServeRejection> {
+        match *req {
+            ServeRequest::Nearest { v, k } => {
+                let vu = self.check_vertex(v)?;
+                if k == 0 {
+                    return Err(ServeRejection::new(reject_code::BAD_REQUEST, "k must be > 0"));
+                }
+                let k = (k as usize).min(self.emb.n().saturating_sub(1));
+                let flat = self.emb.flat();
+                let dim = self.emb.dim();
+                let hits: Vec<(u32, f32)> = match &self.index {
+                    Some(idx) => idx
+                        .search(flat, &flat[vu * dim..(vu + 1) * dim], k, self.ef_search, Some(v))
+                        .into_iter()
+                        .map(|(id, sim)| (id as u32, sim))
+                        .collect(),
+                    None => nearest_flat(flat, dim, vu, k)
+                        .into_iter()
+                        .map(|(id, sim)| (id as u32, sim))
+                        .collect(),
+                };
+                Ok(ServeResponse::Neighbors(hits))
+            }
+            ServeRequest::Score { u, v } => {
+                let uu = self.check_vertex(u)?;
+                let vu = self.check_vertex(v)?;
+                let score = crate::embed::cosine(self.emb.row(uu), self.emb.row(vu));
+                Ok(ServeResponse::Score(score))
+            }
+            ServeRequest::Walk { v, length } => {
+                let session = self.walks.as_ref().ok_or_else(|| {
+                    ServeRejection::new(
+                        reject_code::UNSUPPORTED,
+                        "daemon started without a graph; walk queries need --graph/--graph-file",
+                    )
+                })?;
+                let vu = v as usize;
+                if vu >= session.graph().num_vertices() {
+                    return Err(ServeRejection::new(
+                        reject_code::BAD_REQUEST,
+                        format!(
+                            "vertex {vu} out of range for {} graph vertices",
+                            session.graph().num_vertices()
+                        ),
+                    ));
+                }
+                let mut req = WalkRequest::all().with_seeds(SeedSet::Explicit(vec![v]));
+                if length > 0 {
+                    req = req.with_length(length);
+                }
+                let out = session.collect(&req).map_err(|e| {
+                    ServeRejection::new(reject_code::INTERNAL, format!("walk failed: {e}"))
+                })?;
+                Ok(ServeResponse::Walk(out.walks[vu].clone()))
+            }
+            ServeRequest::Stats | ServeRequest::Ping => Err(ServeRejection::new(
+                reject_code::BAD_REQUEST,
+                "control-plane request on the data plane",
+            )),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Metrics
+// ---------------------------------------------------------------------------
+
+/// Cap on retained latency samples per class (ring overwrite beyond).
+const LATENCY_SAMPLES: usize = 1 << 16;
+
+#[derive(Default)]
+struct ClassMetrics {
+    served: u64,
+    lat_us: Vec<u64>,
+    next: usize,
+}
+
+impl ClassMetrics {
+    fn record(&mut self, us: u64) {
+        self.served += 1;
+        if self.lat_us.len() < LATENCY_SAMPLES {
+            self.lat_us.push(us);
+        } else {
+            self.lat_us[self.next] = us;
+            self.next = (self.next + 1) % LATENCY_SAMPLES;
+        }
+    }
+
+    fn snapshot(&self) -> ClassStats {
+        let mut sorted = self.lat_us.clone();
+        sorted.sort_unstable();
+        let pct = |p: f64| -> u64 {
+            if sorted.is_empty() {
+                0
+            } else {
+                let i = ((sorted.len() - 1) as f64 * p) as usize;
+                sorted[i]
+            }
+        };
+        ClassStats {
+            served: self.served,
+            p50_us: pct(0.50),
+            p99_us: pct(0.99),
+        }
+    }
+}
+
+#[derive(Default)]
+struct MetricsInner {
+    nearest: ClassMetrics,
+    score: ClassMetrics,
+    walk: ClassMetrics,
+    rejected: u64,
+    batches: u64,
+    batched_jobs: u64,
+}
+
+impl MetricsInner {
+    fn class_for(&mut self, req: &ServeRequest) -> Option<&mut ClassMetrics> {
+        match req {
+            ServeRequest::Nearest { .. } => Some(&mut self.nearest),
+            ServeRequest::Score { .. } => Some(&mut self.score),
+            ServeRequest::Walk { .. } => Some(&mut self.walk),
+            _ => None,
+        }
+    }
+
+    fn snapshot(&self) -> StatsSnapshot {
+        StatsSnapshot {
+            nearest: self.nearest.snapshot(),
+            score: self.score.snapshot(),
+            walk: self.walk.snapshot(),
+            rejected: self.rejected,
+            batches: self.batches,
+            batched_jobs: self.batched_jobs,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Server
+// ---------------------------------------------------------------------------
+
+/// Daemon tuning knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOpts {
+    /// Admission limit: queued jobs beyond this are rejected with
+    /// [`reject_code::OVERLOADED`].
+    pub max_queue: usize,
+    /// Max jobs the batcher drains per wakeup.
+    pub batch_max: usize,
+    /// HNSW search beam width (floor; raised to `k` per query).
+    pub ef_search: usize,
+    /// Artificial per-batch service delay — a test/bench hook that makes
+    /// overload deterministic to provoke. `None` in production.
+    pub drain_delay: Option<Duration>,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts {
+            max_queue: 1024,
+            batch_max: 64,
+            ef_search: 64,
+            drain_delay: None,
+        }
+    }
+}
+
+struct Job {
+    req: ServeRequest,
+    id: u32,
+    admitted: Instant,
+    writer: Arc<Mutex<Box<dyn Transport>>>,
+}
+
+struct Shared {
+    core: Arc<ServeCore>,
+    opts: ServeOpts,
+    queue: Mutex<VecDeque<Job>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+    metrics: Mutex<MetricsInner>,
+    /// Raw handles of accepted connections, shut down after the drain so
+    /// blocked reader threads unblock and join.
+    conns: Mutex<Vec<UnixStream>>,
+}
+
+fn send_on(writer: &Arc<Mutex<Box<dyn Transport>>>, frame: &Frame) {
+    let mut w = writer.lock().unwrap_or_else(|p| p.into_inner());
+    // A dead client connection is the client's problem, not the daemon's.
+    let _ = w.send(frame);
+}
+
+fn response_frame(id: u32, resp: &ServeResponse) -> Frame {
+    Frame::new(FrameKind::Values, COORD_ID, 0, id, resp.encode())
+}
+
+fn rejection_frame(id: u32, rej: &ServeRejection) -> Frame {
+    Frame::new(FrameKind::Error, COORD_ID, 0, id, rej.encode())
+}
+
+/// Handshake info (`Hello` reply payload): store shape + capabilities.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HelloInfo {
+    pub n: u64,
+    pub dim: u32,
+    pub has_index: bool,
+    pub has_walks: bool,
+}
+
+impl HelloInfo {
+    fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(14);
+        out.extend_from_slice(&self.n.to_le_bytes());
+        out.extend_from_slice(&self.dim.to_le_bytes());
+        out.push(self.has_index as u8);
+        out.push(self.has_walks as u8);
+        out
+    }
+
+    fn decode(payload: &[u8]) -> Result<HelloInfo, String> {
+        let mut r = ByteReader::new(payload);
+        Ok(HelloInfo {
+            n: r.u64()?,
+            dim: r.u32()?,
+            has_index: r.u8()? != 0,
+            has_walks: r.u8()? != 0,
+        })
+    }
+}
+
+fn reader_loop(shared: &Arc<Shared>, stream: UnixStream, socket_path: &Path) {
+    let (writer, mut reader) = match Box::new(UdsTransport::new(stream)).split() {
+        Ok((w, r)) => (Arc::new(Mutex::new(w)), r),
+        Err(_) => return,
+    };
+    loop {
+        // The serve.read failpoint sits in front of every frame read;
+        // transient faults are absorbed here, exactly like
+        // transport.read inside the codec.
+        if failpoints::retry_io("serve.read", || failpoints::check("serve.read")).is_err() {
+            break;
+        }
+        let frame = match reader.recv() {
+            Ok(f) => f,
+            // Closed, a mid-frame error, or a dropped client all end
+            // this connection only — the daemon keeps serving.
+            Err(_) => break,
+        };
+        let id = frame.superstep;
+        match frame.kind {
+            FrameKind::Hello => {
+                let core = &shared.core;
+                let info = HelloInfo {
+                    n: core.emb.n() as u64,
+                    dim: core.emb.dim() as u32,
+                    has_index: core.index.is_some(),
+                    has_walks: core.walks.is_some(),
+                };
+                send_on(
+                    &writer,
+                    &Frame::new(FrameKind::Hello, COORD_ID, 0, id, info.encode()),
+                );
+            }
+            FrameKind::Shutdown => {
+                shared.shutdown.store(true, Ordering::SeqCst);
+                shared.cv.notify_all();
+                send_on(
+                    &writer,
+                    &Frame::new(FrameKind::Shutdown, COORD_ID, 0, id, Vec::new()),
+                );
+                // Unblock the accept loop so it can run the drain.
+                let _ = UnixStream::connect(socket_path);
+            }
+            FrameKind::Run => {
+                let req = match ServeRequest::decode(&frame.payload) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        send_on(
+                            &writer,
+                            &rejection_frame(
+                                id,
+                                &ServeRejection::new(reject_code::BAD_REQUEST, e),
+                            ),
+                        );
+                        continue;
+                    }
+                };
+                match req {
+                    // Control plane: answered inline so stats stay
+                    // observable under overload.
+                    ServeRequest::Stats => {
+                        let snap = shared
+                            .metrics
+                            .lock()
+                            .unwrap_or_else(|p| p.into_inner())
+                            .snapshot();
+                        send_on(&writer, &response_frame(id, &ServeResponse::Stats(snap)));
+                    }
+                    ServeRequest::Ping => {
+                        send_on(&writer, &response_frame(id, &ServeResponse::Pong));
+                    }
+                    req => {
+                        if shared.shutdown.load(Ordering::SeqCst) {
+                            send_on(
+                                &writer,
+                                &rejection_frame(
+                                    id,
+                                    &ServeRejection::new(
+                                        reject_code::SHUTTING_DOWN,
+                                        "daemon is draining",
+                                    ),
+                                ),
+                            );
+                            continue;
+                        }
+                        let mut q = shared.queue.lock().unwrap_or_else(|p| p.into_inner());
+                        if q.len() >= shared.opts.max_queue {
+                            drop(q);
+                            shared
+                                .metrics
+                                .lock()
+                                .unwrap_or_else(|p| p.into_inner())
+                                .rejected += 1;
+                            send_on(
+                                &writer,
+                                &rejection_frame(
+                                    id,
+                                    &ServeRejection::new(
+                                        reject_code::OVERLOADED,
+                                        format!(
+                                            "queue full ({} jobs); retry later",
+                                            shared.opts.max_queue
+                                        ),
+                                    ),
+                                ),
+                            );
+                        } else {
+                            q.push_back(Job {
+                                req,
+                                id,
+                                admitted: Instant::now(),
+                                writer: writer.clone(),
+                            });
+                            drop(q);
+                            shared.cv.notify_one();
+                        }
+                    }
+                }
+            }
+            // Anything else is a protocol error on this connection.
+            _ => {
+                send_on(
+                    &writer,
+                    &rejection_frame(
+                        id,
+                        &ServeRejection::new(
+                            reject_code::BAD_REQUEST,
+                            format!("unexpected frame kind {:?}", frame.kind),
+                        ),
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// The batcher: drain up to `batch_max` jobs per wakeup, answer each,
+/// exit once shutdown is flagged *and* the queue is empty — admitted
+/// work always completes.
+fn batcher_loop(shared: &Arc<Shared>) {
+    loop {
+        let batch: Vec<Job> = {
+            let mut q = shared.queue.lock().unwrap_or_else(|p| p.into_inner());
+            loop {
+                if !q.is_empty() {
+                    break;
+                }
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                q = shared.cv.wait(q).unwrap_or_else(|p| p.into_inner());
+            }
+            let take = q.len().min(shared.opts.batch_max.max(1));
+            q.drain(..take).collect()
+        };
+        if let Some(delay) = shared.opts.drain_delay {
+            std::thread::sleep(delay);
+        }
+        {
+            let mut m = shared.metrics.lock().unwrap_or_else(|p| p.into_inner());
+            m.batches += 1;
+            m.batched_jobs += batch.len() as u64;
+        }
+        for job in batch {
+            let frame = match shared.core.answer(&job.req) {
+                Ok(resp) => response_frame(job.id, &resp),
+                Err(rej) => rejection_frame(job.id, &rej),
+            };
+            send_on(&job.writer, &frame);
+            let us = job.admitted.elapsed().as_micros() as u64;
+            let mut m = shared.metrics.lock().unwrap_or_else(|p| p.into_inner());
+            if let Some(c) = m.class_for(&job.req) {
+                c.record(us);
+            }
+        }
+    }
+}
+
+/// Run the daemon on an already-bound listener until a `Shutdown` frame
+/// arrives, then drain admitted jobs and return the final metrics.
+/// `socket_path` must be the listener's bound path (the shutdown path
+/// pokes it to unblock `accept`).
+pub fn run_server(
+    listener: UnixListener,
+    socket_path: &Path,
+    core: ServeCore,
+    opts: ServeOpts,
+) -> std::io::Result<StatsSnapshot> {
+    let shared = Arc::new(Shared {
+        core: Arc::new(core),
+        opts,
+        queue: Mutex::new(VecDeque::new()),
+        cv: Condvar::new(),
+        shutdown: AtomicBool::new(false),
+        metrics: Mutex::new(MetricsInner::default()),
+        conns: Mutex::new(Vec::new()),
+    });
+    let batcher = {
+        let shared = shared.clone();
+        std::thread::spawn(move || batcher_loop(&shared))
+    };
+    let mut readers = Vec::new();
+    loop {
+        let (stream, _addr) = failpoints::retry_io("serve.accept", || listener.accept())?;
+        if shared.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        if let Ok(clone) = stream.try_clone() {
+            shared
+                .conns
+                .lock()
+                .unwrap_or_else(|p| p.into_inner())
+                .push(clone);
+        }
+        let shared = shared.clone();
+        let path = socket_path.to_path_buf();
+        readers.push(std::thread::spawn(move || {
+            reader_loop(&shared, stream, &path)
+        }));
+    }
+    // Drain: the batcher finishes every admitted job, then exits.
+    shared.cv.notify_all();
+    let _ = batcher.join();
+    // Now unblock reader threads still parked in recv and join them.
+    for conn in shared
+        .conns
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+        .drain(..)
+    {
+        let _ = conn.shutdown(std::net::Shutdown::Both);
+    }
+    for r in readers {
+        let _ = r.join();
+    }
+    let snap = shared
+        .metrics
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+        .snapshot();
+    Ok(snap)
+}
+
+// ---------------------------------------------------------------------------
+// Client
+// ---------------------------------------------------------------------------
+
+/// Client-side failure of one query.
+#[derive(Debug)]
+pub enum ClientError {
+    /// Transport/codec failure.
+    Frame(FrameError),
+    /// The daemon answered with a typed rejection.
+    Rejected(ServeRejection),
+    /// The daemon answered, but with a payload this client cannot parse.
+    Protocol(String),
+}
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClientError::Frame(e) => write!(f, "transport: {e}"),
+            ClientError::Rejected(r) => write!(f, "rejected: {r}"),
+            ClientError::Protocol(d) => write!(f, "protocol: {d}"),
+        }
+    }
+}
+
+impl std::error::Error for ClientError {}
+
+impl From<FrameError> for ClientError {
+    fn from(e: FrameError) -> ClientError {
+        ClientError::Frame(e)
+    }
+}
+
+/// A blocking client over one UDS connection. Supports pipelining:
+/// [`ServeClient::send`] fires a request without waiting, [`ServeClient::recv`]
+/// collects the next answer (ids correlate them).
+pub struct ServeClient {
+    t: UdsTransport,
+    next_id: u32,
+}
+
+impl ServeClient {
+    /// Connect and handshake; returns the client plus the daemon's
+    /// [`HelloInfo`].
+    pub fn connect(socket: &Path) -> Result<(ServeClient, HelloInfo), ClientError> {
+        let stream = UnixStream::connect(socket)
+            .map_err(|e| ClientError::Frame(FrameError::Io(e.to_string())))?;
+        let mut c = ServeClient {
+            t: UdsTransport::new(stream),
+            next_id: 0,
+        };
+        c.t.send(&Frame::new(FrameKind::Hello, 0, COORD_ID, 0, Vec::new()))?;
+        let reply = c.t.recv()?;
+        if reply.kind != FrameKind::Hello {
+            return Err(ClientError::Protocol(format!(
+                "expected Hello reply, got {:?}",
+                reply.kind
+            )));
+        }
+        let info = HelloInfo::decode(&reply.payload).map_err(ClientError::Protocol)?;
+        Ok((c, info))
+    }
+
+    /// Fire one request without waiting; returns its id.
+    pub fn send(&mut self, req: &ServeRequest) -> Result<u32, ClientError> {
+        let id = self.next_id;
+        self.next_id = self.next_id.wrapping_add(1);
+        self.t
+            .send(&Frame::new(FrameKind::Run, 0, COORD_ID, id, req.encode()))?;
+        Ok(id)
+    }
+
+    /// Collect the next answer: `(id, Ok(response) | Err(rejection))`.
+    pub fn recv(&mut self) -> Result<(u32, Result<ServeResponse, ServeRejection>), ClientError> {
+        let frame = self.t.recv()?;
+        match frame.kind {
+            FrameKind::Values => {
+                let resp = ServeResponse::decode(&frame.payload).map_err(ClientError::Protocol)?;
+                Ok((frame.superstep, Ok(resp)))
+            }
+            FrameKind::Error => {
+                let rej = ServeRejection::decode(&frame.payload).map_err(ClientError::Protocol)?;
+                Ok((frame.superstep, Err(rej)))
+            }
+            k => Err(ClientError::Protocol(format!(
+                "unexpected frame kind {k:?}"
+            ))),
+        }
+    }
+
+    fn roundtrip(&mut self, req: &ServeRequest) -> Result<ServeResponse, ClientError> {
+        self.send(req)?;
+        let (_, out) = self.recv()?;
+        out.map_err(ClientError::Rejected)
+    }
+
+    /// Top-`k` nearest neighbors of `v`.
+    pub fn nearest(&mut self, v: u32, k: u32) -> Result<Vec<(u32, f32)>, ClientError> {
+        match self.roundtrip(&ServeRequest::Nearest { v, k })? {
+            ServeResponse::Neighbors(hits) => Ok(hits),
+            other => Err(ClientError::Protocol(format!("mismatched reply {other:?}"))),
+        }
+    }
+
+    /// Link-prediction score of `(u, v)`.
+    pub fn score(&mut self, u: u32, v: u32) -> Result<f32, ClientError> {
+        match self.roundtrip(&ServeRequest::Score { u, v })? {
+            ServeResponse::Score(s) => Ok(s),
+            other => Err(ClientError::Protocol(format!("mismatched reply {other:?}"))),
+        }
+    }
+
+    /// On-demand walk from `v` (`length == 0` = session default).
+    pub fn walk(&mut self, v: u32, length: u32) -> Result<Vec<u32>, ClientError> {
+        match self.roundtrip(&ServeRequest::Walk { v, length })? {
+            ServeResponse::Walk(w) => Ok(w),
+            other => Err(ClientError::Protocol(format!("mismatched reply {other:?}"))),
+        }
+    }
+
+    /// Metrics snapshot.
+    pub fn stats(&mut self) -> Result<StatsSnapshot, ClientError> {
+        match self.roundtrip(&ServeRequest::Stats)? {
+            ServeResponse::Stats(s) => Ok(s),
+            other => Err(ClientError::Protocol(format!("mismatched reply {other:?}"))),
+        }
+    }
+
+    /// Liveness probe.
+    pub fn ping(&mut self) -> Result<(), ClientError> {
+        match self.roundtrip(&ServeRequest::Ping)? {
+            ServeResponse::Pong => Ok(()),
+            other => Err(ClientError::Protocol(format!("mismatched reply {other:?}"))),
+        }
+    }
+
+    /// Ask the daemon to drain and stop; waits for the ack.
+    pub fn shutdown(&mut self) -> Result<(), ClientError> {
+        self.t
+            .send(&Frame::new(FrameKind::Shutdown, 0, COORD_ID, 0, Vec::new()))?;
+        let reply = self.t.recv()?;
+        if reply.kind != FrameKind::Shutdown {
+            return Err(ClientError::Protocol(format!(
+                "expected Shutdown ack, got {:?}",
+                reply.kind
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_codec_round_trips() {
+        for req in [
+            ServeRequest::Nearest { v: 7, k: 10 },
+            ServeRequest::Score { u: 1, v: 2 },
+            ServeRequest::Walk { v: 3, length: 0 },
+            ServeRequest::Stats,
+            ServeRequest::Ping,
+        ] {
+            assert_eq!(ServeRequest::decode(&req.encode()).unwrap(), req);
+        }
+        assert!(ServeRequest::decode(&[99]).is_err());
+        assert!(ServeRequest::decode(&[OP_NEAREST, 1, 2]).is_err());
+        // Trailing garbage is rejected, not ignored.
+        let mut bytes = ServeRequest::Ping.encode();
+        bytes.push(0);
+        assert!(ServeRequest::decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn response_codec_round_trips() {
+        let snap = StatsSnapshot {
+            nearest: ClassStats {
+                served: 5,
+                p50_us: 10,
+                p99_us: 90,
+            },
+            rejected: 3,
+            batches: 2,
+            batched_jobs: 7,
+            ..Default::default()
+        };
+        for resp in [
+            ServeResponse::Neighbors(vec![(4, 0.9), (2, 0.5)]),
+            ServeResponse::Score(0.25),
+            ServeResponse::Walk(vec![1, 2, 3]),
+            ServeResponse::Stats(snap),
+            ServeResponse::Pong,
+        ] {
+            assert_eq!(ServeResponse::decode(&resp.encode()).unwrap(), resp);
+        }
+    }
+
+    #[test]
+    fn rejection_codec_and_classification() {
+        let rej = ServeRejection::new(reject_code::OVERLOADED, "queue full");
+        let back = ServeRejection::decode(&rej.encode()).unwrap();
+        assert_eq!(back, rej);
+        assert!(back.is_overload());
+        assert!(!ServeRejection::new(reject_code::BAD_REQUEST, "x").is_overload());
+        assert!(ServeRejection::decode(&[]).is_err());
+    }
+
+    #[test]
+    fn percentiles_from_recorded_latencies() {
+        let mut c = ClassMetrics::default();
+        for us in 1..=100 {
+            c.record(us);
+        }
+        let s = c.snapshot();
+        assert_eq!(s.served, 100);
+        assert_eq!(s.p50_us, 50);
+        assert_eq!(s.p99_us, 99);
+    }
+
+    #[test]
+    fn mean_batch_is_guarded_against_zero() {
+        assert_eq!(StatsSnapshot::default().mean_batch(), 0.0);
+    }
+}

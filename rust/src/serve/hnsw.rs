@@ -1,0 +1,682 @@
+//! Deterministic HNSW over flat embedding rows.
+//!
+//! Hierarchical Navigable Small World (Malkov & Yashunin) adapted to the
+//! serving layer's constraints:
+//!
+//! - **Deterministic construction.** Level draws come from a
+//!   [`Xoshiro256pp`] seeded by the caller and vertices are inserted in
+//!   id order, so the same `(embeddings, params, seed)` always builds the
+//!   same graph — index files are reproducible artifacts, not snowflakes,
+//!   and the recall gate in CI is not flaky by construction.
+//! - **Cosine metric**, matching `embed::nearest_flat` exactly — the
+//!   brute-force scan stays the oracle the index is graded against.
+//! - **Checksummed sidecar** (`FN2VIDX1`): the link structure persists
+//!   next to the FN2VEMB1 file and binds to its header checksum, so a
+//!   stale index (embeddings rewritten underneath it) is detected at
+//!   load and rebuilt instead of silently serving the wrong neighbors.
+//!
+//! The index stores only `u32` links — vectors stay in the (possibly
+//! mmap'd) embedding store, so the memory cost is `O(n · M)` on top of
+//! zero-copy rows.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::path::Path;
+
+use crate::graph::store::{fxhash64, le_u32, le_u64, StoreError, HEADER_BYTES};
+use crate::pregel::checkpoint::ByteReader;
+use crate::serve::store::atomic_write;
+use crate::util::rng::Xoshiro256pp;
+
+/// Sidecar magic.
+pub const MAGIC_IDX: &[u8; 8] = b"FN2VIDX1";
+const IDX_VERSION: u32 = 1;
+/// Hard cap on stored levels; with m >= 2 the draw distribution makes
+/// exceeding this astronomically unlikely, but the decoder must bound it.
+const MAX_LEVEL: usize = 32;
+
+/// Construction/search parameters. `ef_search` is a floor — queries use
+/// `max(ef_search, k)` candidates.
+#[derive(Clone, Copy, Debug)]
+pub struct HnswParams {
+    /// Max links per node per layer (level 0 gets `2 * m`).
+    pub m: usize,
+    /// Candidate-list width during construction.
+    pub ef_construction: usize,
+    /// Candidate-list width during search.
+    pub ef_search: usize,
+    /// Level-draw seed.
+    pub seed: u64,
+}
+
+impl Default for HnswParams {
+    fn default() -> Self {
+        HnswParams {
+            m: 16,
+            ef_construction: 128,
+            ef_search: 64,
+            seed: 0x48_4e_53_57, // "HNSW"
+        }
+    }
+}
+
+/// Similarity ordered for heaps: ties broken by id so identical vectors
+/// sort deterministically.
+#[derive(Clone, Copy, Debug, PartialEq)]
+struct Scored {
+    sim: f32,
+    id: u32,
+}
+
+impl Eq for Scored {}
+
+impl Ord for Scored {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.sim
+            .total_cmp(&other.sim)
+            .then_with(|| other.id.cmp(&self.id))
+    }
+}
+
+impl PartialOrd for Scored {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+fn cosine(a: &[f32], b: &[f32]) -> f32 {
+    let mut dot = 0.0f32;
+    let mut na = 0.0f32;
+    let mut nb = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        dot += x * y;
+        na += x * x;
+        nb += y * y;
+    }
+    dot / (na.sqrt() * nb.sqrt()).max(1e-12)
+}
+
+/// The built index: per-node per-level adjacency plus the entry point.
+#[derive(Clone, Debug)]
+pub struct HnswIndex {
+    dim: usize,
+    m: usize,
+    ef_construction: usize,
+    seed: u64,
+    entry: u32,
+    /// `links[v][l]` — neighbors of `v` at level `l`; `links[v].len()`
+    /// is v's level + 1.
+    links: Vec<Vec<Vec<u32>>>,
+}
+
+impl HnswIndex {
+    /// Build over `n` rows of `flat` (row-major, `n * dim` values).
+    /// Deterministic: same inputs, same index.
+    pub fn build(flat: &[f32], dim: usize, params: &HnswParams) -> HnswIndex {
+        assert!(dim > 0 && flat.len() % dim == 0, "flat/dim mismatch");
+        let n = flat.len() / dim;
+        let m = params.m.max(2);
+        let ef_c = params.ef_construction.max(m);
+        let mut rng = Xoshiro256pp::seed_from_u64(params.seed);
+        // mL = 1/ln(M): the standard level-draw temperature.
+        let ml = 1.0 / (m as f64).ln();
+        let mut index = HnswIndex {
+            dim,
+            m,
+            ef_construction: ef_c,
+            seed: params.seed,
+            entry: 0,
+            links: Vec::with_capacity(n),
+        };
+        let row = |v: u32| &flat[v as usize * dim..(v as usize + 1) * dim];
+        for v in 0..n as u32 {
+            // Inverse-CDF of the geometric-ish level distribution; the
+            // `1 - u` keeps u=0 (ln 0) out of the domain.
+            let u = 1.0 - rng.next_f64();
+            let level = ((-u.ln() * ml) as usize).min(MAX_LEVEL - 1);
+            index.insert(v, level, row(v), flat);
+        }
+        index
+    }
+
+    fn top_level(&self) -> usize {
+        if self.links.is_empty() {
+            0
+        } else {
+            self.links[self.entry as usize].len() - 1
+        }
+    }
+
+    fn insert(&mut self, v: u32, level: usize, q: &[f32], flat: &[f32]) {
+        self.links.push(vec![Vec::new(); level + 1]);
+        if v == 0 {
+            self.entry = 0;
+            return;
+        }
+        let row = |u: u32| &flat[u as usize * self.dim..(u as usize + 1) * self.dim];
+        let mut ep = self.entry;
+        let top = self.top_level();
+        // Greedy descent through levels above the new node's level.
+        for l in ((level + 1)..=top).rev() {
+            ep = self.greedy_closest(ep, q, l, row);
+        }
+        // From min(level, top) down: search with ef_construction, link.
+        for l in (0..=level.min(top)).rev() {
+            let found = self.search_layer(ep, q, l, self.ef_construction, row);
+            let cap = if l == 0 { self.m * 2 } else { self.m };
+            let selected = self.select_neighbors(&found, cap, row);
+            for &Scored { id: u, .. } in &selected {
+                self.links[v as usize][l].push(u);
+                self.links[u as usize][l].push(v);
+                // Prune the neighbor if it overflowed its budget.
+                if self.links[u as usize][l].len() > cap {
+                    let cands: Vec<Scored> = self.links[u as usize][l]
+                        .iter()
+                        .map(|&w| Scored {
+                            sim: cosine(row(u), row(w)),
+                            id: w,
+                        })
+                        .collect();
+                    let kept = self.select_neighbors(&cands, cap, row);
+                    self.links[u as usize][l] = kept.iter().map(|s| s.id).collect();
+                }
+            }
+            if let Some(best) = selected.first() {
+                ep = best.id;
+            }
+        }
+        if level > top {
+            self.entry = v;
+        }
+    }
+
+    /// Greedy hill-climb at one level: follow the best neighbor until no
+    /// neighbor improves on the current node.
+    fn greedy_closest<'a>(
+        &self,
+        mut ep: u32,
+        q: &[f32],
+        level: usize,
+        row: impl Fn(u32) -> &'a [f32],
+    ) -> u32 {
+        let mut best = cosine(q, row(ep));
+        loop {
+            let mut improved = false;
+            for &u in &self.links[ep as usize][level] {
+                let s = cosine(q, row(u));
+                if s > best {
+                    best = s;
+                    ep = u;
+                    improved = true;
+                }
+            }
+            if !improved {
+                return ep;
+            }
+        }
+    }
+
+    /// Best-first beam search at one level, returning up to `ef`
+    /// candidates sorted by descending similarity.
+    fn search_layer<'a>(
+        &self,
+        ep: u32,
+        q: &[f32],
+        level: usize,
+        ef: usize,
+        row: impl Fn(u32) -> &'a [f32],
+    ) -> Vec<Scored> {
+        let mut visited = vec![false; self.links.len()];
+        visited[ep as usize] = true;
+        let start = Scored {
+            sim: cosine(q, row(ep)),
+            id: ep,
+        };
+        // Frontier: best-similarity-first. Results: worst-first so the
+        // floor is O(1) to inspect and evict.
+        let mut frontier = BinaryHeap::from([start]);
+        let mut results: BinaryHeap<Reverse<Scored>> = BinaryHeap::from([Reverse(start)]);
+        while let Some(cand) = frontier.pop() {
+            let floor = results.peek().map(|r| r.0.sim).unwrap_or(f32::MIN);
+            if results.len() >= ef && cand.sim < floor {
+                break;
+            }
+            let node = cand.id as usize;
+            if level >= self.links[node].len() {
+                continue;
+            }
+            for &u in &self.links[node][level] {
+                if visited[u as usize] {
+                    continue;
+                }
+                visited[u as usize] = true;
+                let s = Scored {
+                    sim: cosine(q, row(u)),
+                    id: u,
+                };
+                let floor = results.peek().map(|r| r.0.sim).unwrap_or(f32::MIN);
+                if results.len() < ef || s.sim > floor {
+                    frontier.push(s);
+                    results.push(Reverse(s));
+                    if results.len() > ef {
+                        results.pop();
+                    }
+                }
+            }
+        }
+        let mut out: Vec<Scored> = results.into_iter().map(|r| r.0).collect();
+        out.sort_by(|a, b| b.cmp(a));
+        out
+    }
+
+    /// Heuristic neighbor selection (algorithm 4 of the HNSW paper): a
+    /// candidate is kept only if it is closer to the query than to every
+    /// already-kept neighbor, which preserves connectivity across
+    /// clusters — plain top-M would wire each community into an island.
+    fn select_neighbors<'a>(
+        &self,
+        cands: &[Scored],
+        cap: usize,
+        row: impl Fn(u32) -> &'a [f32],
+    ) -> Vec<Scored> {
+        let mut sorted = cands.to_vec();
+        sorted.sort_by(|a, b| b.cmp(a));
+        sorted.dedup_by_key(|s| s.id);
+        let mut kept: Vec<Scored> = Vec::with_capacity(cap);
+        for &c in &sorted {
+            if kept.len() >= cap {
+                break;
+            }
+            let dominated = kept
+                .iter()
+                .any(|k| cosine(row(c.id), row(k.id)) > c.sim);
+            if !dominated {
+                kept.push(c);
+            }
+        }
+        // Backfill with the best dominated candidates if under budget
+        // (keepPrunedConnections in the paper).
+        if kept.len() < cap {
+            for &c in &sorted {
+                if kept.len() >= cap {
+                    break;
+                }
+                if !kept.iter().any(|k| k.id == c.id) {
+                    kept.push(c);
+                }
+            }
+        }
+        kept
+    }
+
+    /// Top-`k` most-similar rows to `q` (which need not be a stored
+    /// row), descending similarity. `exclude` drops one id from the
+    /// results — pass the query vertex itself to mirror
+    /// `nearest_flat`'s self-exclusion.
+    pub fn search(
+        &self,
+        flat: &[f32],
+        q: &[f32],
+        k: usize,
+        ef: usize,
+        exclude: Option<u32>,
+    ) -> Vec<(usize, f32)> {
+        if self.links.is_empty() || k == 0 {
+            return Vec::new();
+        }
+        let row = |u: u32| &flat[u as usize * self.dim..(u as usize + 1) * self.dim];
+        let mut ep = self.entry;
+        for l in (1..=self.top_level()).rev() {
+            ep = self.greedy_closest(ep, q, l, row);
+        }
+        let ef = ef.max(k + usize::from(exclude.is_some()));
+        let found = self.search_layer(ep, q, 0, ef, row);
+        found
+            .into_iter()
+            .filter(|s| Some(s.id) != exclude)
+            .take(k)
+            .map(|s| (s.id as usize, s.sim))
+            .collect()
+    }
+
+    /// Number of indexed rows.
+    pub fn len(&self) -> usize {
+        self.links.len()
+    }
+
+    /// True when no rows are indexed.
+    pub fn is_empty(&self) -> bool {
+        self.links.is_empty()
+    }
+
+    /// Construction seed (persisted; identifies the build).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    // ---- FN2VIDX1 sidecar ----
+    //
+    // | bytes  | field                                    |
+    // |--------|------------------------------------------|
+    // | 0..8   | magic `FN2VIDX1`                         |
+    // | 8..12  | version (u32, = 1)                       |
+    // | 12..16 | n — indexed rows (u32)                   |
+    // | 16..20 | dim (u32)                                |
+    // | 20..24 | m (u32)                                  |
+    // | 24..28 | ef_construction (u32)                    |
+    // | 28..32 | entry point (u32)                        |
+    // | 32..40 | level-draw seed (u64)                    |
+    // | 40..48 | bound FN2VEMB1 header checksum (u64)     |
+    // | 48..56 | payload length (u64)                     |
+    // | 56..64 | fxhash64 of bytes 0..56                  |
+    //
+    // Payload: fxhash64 of the link bytes (u64), then per node: level
+    // (u8), then per level: count (u32) + count * u32 neighbor ids.
+
+    /// Serialize as an FN2VIDX1 sidecar bound to `emb_checksum` and
+    /// write it atomically (same `emb.*` failpoint discipline as the
+    /// embedding store).
+    pub fn save(&self, path: &Path, emb_checksum: u64) -> Result<(), StoreError> {
+        let mut payload = Vec::new();
+        for node in &self.links {
+            payload.push((node.len() - 1) as u8);
+            for level in node {
+                payload.extend_from_slice(&(level.len() as u32).to_le_bytes());
+                for &u in level {
+                    payload.extend_from_slice(&u.to_le_bytes());
+                }
+            }
+        }
+        let mut bytes = Vec::with_capacity(HEADER_BYTES + 8 + payload.len());
+        let mut header = [0u8; HEADER_BYTES];
+        header[0..8].copy_from_slice(MAGIC_IDX);
+        header[8..12].copy_from_slice(&IDX_VERSION.to_le_bytes());
+        header[12..16].copy_from_slice(&(self.links.len() as u32).to_le_bytes());
+        header[16..20].copy_from_slice(&(self.dim as u32).to_le_bytes());
+        header[20..24].copy_from_slice(&(self.m as u32).to_le_bytes());
+        header[24..28].copy_from_slice(&(self.ef_construction as u32).to_le_bytes());
+        header[28..32].copy_from_slice(&self.entry.to_le_bytes());
+        header[32..40].copy_from_slice(&self.seed.to_le_bytes());
+        header[40..48].copy_from_slice(&emb_checksum.to_le_bytes());
+        header[48..56].copy_from_slice(&(payload.len() as u64).to_le_bytes());
+        let sum = fxhash64(&header[..56]);
+        header[56..64].copy_from_slice(&sum.to_le_bytes());
+        bytes.extend_from_slice(&header);
+        bytes.extend_from_slice(&fxhash64(&payload).to_le_bytes());
+        bytes.extend_from_slice(&payload);
+        atomic_write(path, &bytes)
+    }
+
+    /// Load an FN2VIDX1 sidecar, validating magic → version → header
+    /// checksum → binding → payload bounds → payload checksum →
+    /// structure. `expect_emb_checksum` must match the bound value —
+    /// a sidecar for different embeddings is a `Format` error (field
+    /// `binding`), which the daemon treats as "rebuild".
+    pub fn load(
+        path: &Path,
+        expect_emb_checksum: u64,
+        expect_n: usize,
+        expect_dim: usize,
+    ) -> Result<HnswIndex, StoreError> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| StoreError::io(format!("read {}", path.display()), e))?;
+        if bytes.len() < HEADER_BYTES + 8 {
+            return Err(StoreError::format(
+                path,
+                "size",
+                format!(
+                    "file has {} bytes, header + payload hash alone is {}",
+                    bytes.len(),
+                    HEADER_BYTES + 8
+                ),
+            ));
+        }
+        let h = &bytes[..HEADER_BYTES];
+        if &h[0..8] != MAGIC_IDX {
+            return Err(StoreError::format(path, "magic", "not an FN2VIDX1 index file"));
+        }
+        let version = le_u32(&h[8..12]);
+        if version != IDX_VERSION {
+            return Err(StoreError::format(
+                path,
+                "version",
+                format!("unsupported version {version} (expected {IDX_VERSION})"),
+            ));
+        }
+        let stored_sum = le_u64(&h[56..64]);
+        let computed = fxhash64(&h[..56]);
+        if stored_sum != computed {
+            return Err(StoreError::format(
+                path,
+                "checksum",
+                format!(
+                    "header checksum mismatch (stored {stored_sum:#x}, computed {computed:#x})"
+                ),
+            ));
+        }
+        let n = le_u32(&h[12..16]) as usize;
+        let dim = le_u32(&h[16..20]) as usize;
+        let m = le_u32(&h[20..24]) as usize;
+        let ef_construction = le_u32(&h[24..28]) as usize;
+        let entry = le_u32(&h[28..32]);
+        let seed = le_u64(&h[32..40]);
+        let bound = le_u64(&h[40..48]);
+        if bound != expect_emb_checksum {
+            return Err(StoreError::format(
+                path,
+                "binding",
+                format!(
+                    "index is bound to embedding checksum {bound:#x}, \
+                     store has {expect_emb_checksum:#x} (stale sidecar)"
+                ),
+            ));
+        }
+        if n != expect_n || dim != expect_dim {
+            return Err(StoreError::format(
+                path,
+                "binding",
+                format!("index shape {n}x{dim} != embedding shape {expect_n}x{expect_dim}"),
+            ));
+        }
+        let payload_len = le_u64(&h[48..56]) as usize;
+        if bytes.len() != HEADER_BYTES + 8 + payload_len {
+            return Err(StoreError::format(
+                path,
+                "size",
+                format!(
+                    "payload length {payload_len} does not match file size {}",
+                    bytes.len()
+                ),
+            ));
+        }
+        let payload_sum = le_u64(&bytes[HEADER_BYTES..HEADER_BYTES + 8]);
+        let payload = &bytes[HEADER_BYTES + 8..];
+        let computed = fxhash64(payload);
+        if payload_sum != computed {
+            return Err(StoreError::format(
+                path,
+                "payload",
+                format!(
+                    "payload checksum mismatch (stored {payload_sum:#x}, computed {computed:#x})"
+                ),
+            ));
+        }
+        let mut r = ByteReader::new(payload);
+        let fmt = |d: String| StoreError::format(path, "payload", d);
+        let mut links = Vec::with_capacity(n);
+        for v in 0..n {
+            let level = r.u8().map_err(fmt)? as usize;
+            if level >= MAX_LEVEL {
+                return Err(StoreError::format(
+                    path,
+                    "payload",
+                    format!("node {v} claims level {level} (max {MAX_LEVEL})"),
+                ));
+            }
+            let mut node = Vec::with_capacity(level + 1);
+            for _ in 0..=level {
+                let count = r.u32().map_err(fmt)? as usize;
+                let mut nbrs = Vec::with_capacity(count.min(1 << 16));
+                for _ in 0..count {
+                    let u = r.u32().map_err(fmt)?;
+                    if u as usize >= n {
+                        return Err(StoreError::format(
+                            path,
+                            "payload",
+                            format!("neighbor id {u} out of range for {n} rows"),
+                        ));
+                    }
+                    nbrs.push(u);
+                }
+                node.push(nbrs);
+            }
+            links.push(node);
+        }
+        if !r.is_empty() {
+            return Err(StoreError::format(
+                path,
+                "payload",
+                format!("{} trailing bytes after link structure", r.remaining()),
+            ));
+        }
+        if entry as usize >= n.max(1) {
+            return Err(StoreError::format(
+                path,
+                "payload",
+                format!("entry point {entry} out of range"),
+            ));
+        }
+        Ok(HnswIndex {
+            dim,
+            m,
+            ef_construction,
+            seed,
+            entry,
+            links,
+        })
+    }
+}
+
+/// recall@k of `index` against the brute-force oracle over a sample of
+/// query vertices: fraction of oracle top-k ids the index also returns.
+pub fn recall_at_k(
+    index: &HnswIndex,
+    flat: &[f32],
+    dim: usize,
+    k: usize,
+    ef: usize,
+    queries: &[usize],
+) -> f64 {
+    if queries.is_empty() {
+        return 1.0;
+    }
+    let mut hit = 0usize;
+    let mut total = 0usize;
+    for &v in queries {
+        let truth = crate::embed::nearest_flat(flat, dim, v, k);
+        let got = index.search(flat, &flat[v * dim..(v + 1) * dim], k, ef, Some(v as u32));
+        let got_ids: Vec<usize> = got.iter().map(|&(id, _)| id).collect();
+        for (id, _) in truth {
+            total += 1;
+            if got_ids.contains(&id) {
+                hit += 1;
+            }
+        }
+    }
+    if total == 0 {
+        1.0
+    } else {
+        hit as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Clustered test vectors: `c` well-separated centers plus small
+    /// deterministic jitter — the shape community embeddings take.
+    fn clustered(n: usize, dim: usize, c: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let centers: Vec<f32> = (0..c * dim).map(|_| rng.next_f64() as f32 * 2.0 - 1.0).collect();
+        let mut flat = Vec::with_capacity(n * dim);
+        for v in 0..n {
+            let base = &centers[(v % c) * dim..(v % c + 1) * dim];
+            for &b in base {
+                flat.push(b + (rng.next_f64() as f32 - 0.5) * 0.1);
+            }
+        }
+        flat
+    }
+
+    #[test]
+    fn build_is_deterministic() {
+        let flat = clustered(200, 16, 5, 7);
+        let p = HnswParams::default();
+        let a = HnswIndex::build(&flat, 16, &p);
+        let b = HnswIndex::build(&flat, 16, &p);
+        assert_eq!(a.entry, b.entry);
+        assert_eq!(a.links, b.links);
+    }
+
+    #[test]
+    fn recall_on_clustered_vectors() {
+        let flat = clustered(500, 16, 8, 11);
+        let p = HnswParams::default();
+        let idx = HnswIndex::build(&flat, 16, &p);
+        let queries: Vec<usize> = (0..500).step_by(7).collect();
+        let r = recall_at_k(&idx, &flat, 16, 10, p.ef_search, &queries);
+        assert!(r >= 0.95, "recall@10 {r} below gate");
+    }
+
+    #[test]
+    fn search_excludes_query_vertex() {
+        let flat = clustered(100, 8, 3, 3);
+        let idx = HnswIndex::build(&flat, 8, &HnswParams::default());
+        let got = idx.search(&flat, &flat[0..8], 5, 64, Some(0));
+        assert!(got.iter().all(|&(id, _)| id != 0));
+        assert_eq!(got.len(), 5);
+    }
+
+    #[test]
+    fn sidecar_round_trip_and_binding() {
+        let flat = clustered(120, 8, 4, 9);
+        let idx = HnswIndex::build(&flat, 8, &HnswParams::default());
+        let dir = std::env::temp_dir().join(format!("fn2v-idx-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("round-trip.idx");
+        idx.save(&path, 0xabcd).unwrap();
+        let loaded = HnswIndex::load(&path, 0xabcd, 120, 8).unwrap();
+        assert_eq!(loaded.links, idx.links);
+        assert_eq!(loaded.entry, idx.entry);
+        assert_eq!(loaded.seed(), idx.seed());
+        // Wrong binding → typed stale-sidecar error.
+        let err = HnswIndex::load(&path, 0xabce, 120, 8).unwrap_err();
+        assert_eq!(err.field(), Some("binding"));
+        let err = HnswIndex::load(&path, 0xabcd, 121, 8).unwrap_err();
+        assert_eq!(err.field(), Some("binding"));
+    }
+
+    #[test]
+    fn sidecar_corruption_detected() {
+        let flat = clustered(60, 8, 3, 5);
+        let idx = HnswIndex::build(&flat, 8, &HnswParams::default());
+        let dir = std::env::temp_dir().join(format!("fn2v-idx-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("corrupt.idx");
+        idx.save(&path, 1).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Flip one payload byte: payload checksum must catch it.
+        let at = HEADER_BYTES + 8 + 3;
+        bytes[at] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = HnswIndex::load(&path, 1, 60, 8).unwrap_err();
+        assert_eq!(err.field(), Some("payload"));
+        // Flip a header byte: header checksum must catch it.
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[12] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = HnswIndex::load(&path, 1, 60, 8).unwrap_err();
+        assert_eq!(err.field(), Some("checksum"));
+    }
+}

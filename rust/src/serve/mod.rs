@@ -1,0 +1,93 @@
+//! Embedding serving subsystem: train once, answer queries forever.
+//!
+//! Three layers, each usable alone:
+//!
+//! - [`store`] — FN2VEMB1, the on-disk embedding format. A 64-byte
+//!   fxhash-checksummed header (version, rows, dim, graph fingerprint)
+//!   followed by a 64-byte-aligned little-endian f32 section, written
+//!   atomically by `embed`/`pipeline --emb-out` and reopened zero-copy
+//!   through `util/mmap.rs` — a serving restart costs one header page,
+//!   not a matrix copy.
+//! - [`hnsw`] — a deterministic seeded HNSW index over the flat rows,
+//!   persisted as a checksummed FN2VIDX1 sidecar bound to the embedding
+//!   file's identity. `embed::nearest_flat` stays the exact oracle; the
+//!   index is graded against it (recall@10 gate in CI).
+//! - [`daemon`] — the `fastn2v serve` server: concurrent
+//!   nearest-neighbor / link-prediction / on-demand-walk queries over
+//!   the FN2T frame codec (UDS), with request batching, queue-depth
+//!   admission control, and per-class latency metrics.
+
+pub mod daemon;
+pub mod hnsw;
+pub mod store;
+
+pub use daemon::{
+    reject_code, run_server, ClientError, HelloInfo, ServeClient, ServeCore, ServeOpts,
+    ServeRejection, ServeRequest, ServeResponse, StatsSnapshot,
+};
+pub use hnsw::{recall_at_k, HnswIndex, HnswParams, MAGIC_IDX};
+pub use store::{graph_fingerprint, read_emb_header, write_emb, EmbHeader, EmbStore, MAGIC_EMB};
+
+use std::path::Path;
+
+use crate::graph::StoreError;
+
+/// Default sidecar path for an embedding file: `<emb>.idx`.
+pub fn default_index_path(emb_path: &Path) -> std::path::PathBuf {
+    let mut os = emb_path.as_os_str().to_os_string();
+    os.push(".idx");
+    std::path::PathBuf::from(os)
+}
+
+/// Load the FN2VIDX1 sidecar at `path` if it exists and matches `emb`'s
+/// identity and the requested params; otherwise build the index
+/// deterministically and persist it (atomic write). Returns the index
+/// and whether it was rebuilt.
+pub fn load_or_build_index(
+    emb: &EmbStore,
+    path: &Path,
+    params: &HnswParams,
+) -> Result<(HnswIndex, bool), StoreError> {
+    let checksum = emb.header_checksum();
+    if path.exists() {
+        match HnswIndex::load(path, checksum, emb.n(), emb.dim()) {
+            Ok(idx) if idx.seed() == params.seed => return Ok((idx, false)),
+            // Stale, corrupt, or differently-seeded sidecars are rebuilt,
+            // never served.
+            Ok(_) | Err(StoreError::Format { .. }) => {}
+            Err(e) => return Err(e),
+        }
+    }
+    let idx = HnswIndex::build(emb.flat(), emb.dim(), params);
+    idx.save(path, checksum)?;
+    Ok((idx, true))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::OpenOptions;
+
+    #[test]
+    fn index_is_built_once_then_loaded() {
+        let dir = std::env::temp_dir().join(format!("fn2v-serve-mod-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let emb_path = dir.join("idx-cache.emb");
+        let flat: Vec<f32> = (0..64 * 8).map(|i| ((i % 17) as f32) - 8.0).collect();
+        write_emb(&emb_path, &flat, 8, 42).unwrap();
+        let emb = EmbStore::open(&emb_path, &OpenOptions::owned()).unwrap();
+        let idx_path = default_index_path(&emb_path);
+        let _ = std::fs::remove_file(&idx_path);
+        let params = HnswParams::default();
+        let (_, built) = load_or_build_index(&emb, &idx_path, &params).unwrap();
+        assert!(built, "first call must build");
+        let (_, built) = load_or_build_index(&emb, &idx_path, &params).unwrap();
+        assert!(!built, "second call must load the sidecar");
+        // Rewriting the embeddings invalidates the sidecar binding.
+        let flat2: Vec<f32> = flat.iter().map(|x| x + 1.0).collect();
+        write_emb(&emb_path, &flat2, 8, 43).unwrap();
+        let emb2 = EmbStore::open(&emb_path, &OpenOptions::owned()).unwrap();
+        let (_, built) = load_or_build_index(&emb2, &idx_path, &params).unwrap();
+        assert!(built, "stale sidecar must be rebuilt");
+    }
+}

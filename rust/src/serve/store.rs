@@ -1,0 +1,547 @@
+//! FN2VEMB1 — the on-disk embedding format, FN2VGRF2's sibling.
+//!
+//! Layout (all integers little-endian):
+//!
+//! | bytes  | field                                           |
+//! |--------|-------------------------------------------------|
+//! | 0..8   | magic `FN2VEMB1`                                |
+//! | 8..12  | version (u32, = 1)                              |
+//! | 12..16 | flags (u32, = 0; unknown bits rejected)         |
+//! | 16..24 | n — embedding rows (u64)                        |
+//! | 24..28 | dim — f32 columns per row (u32)                 |
+//! | 28..32 | reserved (u32, = 0)                             |
+//! | 32..40 | graph fingerprint (u64, see [`graph_fingerprint`]) |
+//! | 40..48 | embeddings section start (u64, = 64)            |
+//! | 48..56 | reserved (u64, = 0)                             |
+//! | 56..64 | fxhash64 of bytes 0..56                         |
+//!
+//! The embeddings section starts 64-byte aligned (it begins right after
+//! the 64-byte header) and holds `n * dim` LE f32 values, row-major.
+//! That alignment is what lets [`EmbStore::open`] hand back a
+//! [`Section<f32>`] view straight into the mmap — a serving restart
+//! touches the header page and nothing else, no matter how many
+//! gigabytes of embeddings follow.
+//!
+//! Writes are atomic: `<path>.tmp` + write + fsync + rename, with the
+//! temporary removed on any failure, so a crash mid-`--emb-out` never
+//! leaves a partial file on the final path (same discipline as
+//! FN2VCKP1 checkpoints, pinned by the failpoint sweep in
+//! tests/recovery.rs).
+//!
+//! The graph fingerprint binds an embedding file to the graph it was
+//! trained on. `fastn2v serve` refuses to pair an embedding file with a
+//! mismatching graph unless `--trusted` is passed — silently answering
+//! nearest-neighbor queries for the wrong graph is a correctness trap,
+//! not a recoverable condition.
+
+use std::fs::{self, File};
+use std::io::{BufReader, Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::graph::store::{
+    align_up, decode_le_items, fxhash64, le_u32, le_u64, section_ctx, Section, StoreError,
+    StoreMode, HEADER_BYTES, SECTION_ALIGN,
+};
+use crate::graph::{Graph, OpenOptions};
+use crate::util::failpoints;
+use crate::util::mmap::Mmap;
+
+/// Embedding-store magic.
+pub const MAGIC_EMB: &[u8; 8] = b"FN2VEMB1";
+const VERSION: u32 = 1;
+
+/// Parsed, validated FN2VEMB1 header.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EmbHeader {
+    pub n: u64,
+    pub dim: u32,
+    pub graph_fingerprint: u64,
+    pub emb_start: u64,
+}
+
+impl EmbHeader {
+    /// Exact file size the header implies.
+    pub fn expected_file_bytes(&self) -> u64 {
+        self.emb_start + self.n * self.dim as u64 * 4
+    }
+}
+
+/// Fingerprint of the graph an embedding matrix was trained on: the
+/// structural identity (vertex and arc counts) hashed with the same
+/// fxhash64 that checksums every on-disk header. Deliberately *not* a
+/// hash of the full CSR — serving must be able to check it in O(1)
+/// against an mmap'd graph without faulting in the adjacency pages.
+pub fn graph_fingerprint(graph: &Graph) -> u64 {
+    let mut buf = [0u8; 16];
+    buf[0..8].copy_from_slice(&(graph.num_vertices() as u64).to_le_bytes());
+    buf[8..16].copy_from_slice(&(graph.num_arcs() as u64).to_le_bytes());
+    fxhash64(&buf)
+}
+
+fn emb_tmp_path(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".tmp");
+    PathBuf::from(os)
+}
+
+/// Write `n_rows * dim` embeddings (row-major `flat`) as FN2VEMB1,
+/// atomically: the bytes land on `<path>.tmp`, are fsynced, and only
+/// then renamed onto `path`. Any failure removes the temporary.
+pub fn write_emb(
+    path: &Path,
+    flat: &[f32],
+    dim: usize,
+    graph_fingerprint: u64,
+) -> Result<(), StoreError> {
+    if dim == 0 || dim > u32::MAX as usize {
+        return Err(StoreError::format(
+            path,
+            "dim",
+            format!("embedding dim {dim} out of range"),
+        ));
+    }
+    if flat.len() % dim != 0 {
+        return Err(StoreError::format(
+            path,
+            "embeddings",
+            format!("flat length {} is not a multiple of dim {dim}", flat.len()),
+        ));
+    }
+    let tmp = emb_tmp_path(path);
+    let res = write_emb_inner(&tmp, flat, dim, graph_fingerprint).and_then(|()| {
+        failpoints::retry_io("emb.rename", || fs::rename(&tmp, path))
+            .map_err(|e| StoreError::io(format!("rename {} into place", tmp.display()), e))
+    });
+    if res.is_err() {
+        let _ = fs::remove_file(&tmp);
+    }
+    res
+}
+
+fn write_emb_inner(
+    tmp: &Path,
+    flat: &[f32],
+    dim: usize,
+    graph_fingerprint: u64,
+) -> Result<(), StoreError> {
+    let wctx = |e: std::io::Error| StoreError::io(format!("write {}", tmp.display()), e);
+    let f = failpoints::retry_io("emb.write", || File::create(tmp)).map_err(&wctx)?;
+    let mut w = std::io::BufWriter::new(f);
+    let n = (flat.len() / dim) as u64;
+    let emb_start = HEADER_BYTES as u64;
+    debug_assert_eq!(emb_start, align_up(emb_start));
+
+    let mut header = [0u8; HEADER_BYTES];
+    header[0..8].copy_from_slice(MAGIC_EMB);
+    header[8..12].copy_from_slice(&VERSION.to_le_bytes());
+    // flags (12..16) and the reserved fields (28..32, 48..56) stay zero.
+    header[16..24].copy_from_slice(&n.to_le_bytes());
+    header[24..28].copy_from_slice(&(dim as u32).to_le_bytes());
+    header[32..40].copy_from_slice(&graph_fingerprint.to_le_bytes());
+    header[40..48].copy_from_slice(&emb_start.to_le_bytes());
+    let sum = fxhash64(&header[..56]);
+    header[56..64].copy_from_slice(&sum.to_le_bytes());
+    failpoints::retry_io("emb.write", || w.write_all(&header)).map_err(&wctx)?;
+
+    for row in flat.chunks(8192) {
+        let mut bytes = Vec::with_capacity(row.len() * 4);
+        for &x in row {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        failpoints::retry_io("emb.write", || w.write_all(&bytes)).map_err(&wctx)?;
+    }
+    failpoints::retry_io("emb.write", || w.flush()).map_err(&wctx)?;
+    let f = w
+        .into_inner()
+        .map_err(|e| StoreError::io(format!("flush {}", tmp.display()), e.into_error()))?;
+    failpoints::retry_io("emb.sync", || f.sync_all()).map_err(&wctx)?;
+    Ok(())
+}
+
+/// O(1) header validation, mirroring `graph/store.rs::parse_header`'s
+/// field order exactly: magic → version → checksum → flags → reserved →
+/// scalar fields → section table → file size. Every field is bounded
+/// before a single embedding byte is read or an allocation sized from
+/// the file.
+fn parse_emb_header(
+    path: &Path,
+    h: &[u8; HEADER_BYTES],
+    file_len: u64,
+) -> Result<EmbHeader, StoreError> {
+    if &h[0..8] != MAGIC_EMB {
+        return Err(StoreError::format(
+            path,
+            "magic",
+            "not an FN2VEMB1 embedding file",
+        ));
+    }
+    let version = le_u32(&h[8..12]);
+    if version != VERSION {
+        return Err(StoreError::format(
+            path,
+            "version",
+            format!("unsupported version {version} (expected {VERSION})"),
+        ));
+    }
+    let stored_sum = le_u64(&h[56..64]);
+    let computed = fxhash64(&h[..56]);
+    if stored_sum != computed {
+        return Err(StoreError::format(
+            path,
+            "checksum",
+            format!("header checksum mismatch (stored {stored_sum:#x}, computed {computed:#x})"),
+        ));
+    }
+    let flags = le_u32(&h[12..16]);
+    if flags != 0 {
+        return Err(StoreError::format(
+            path,
+            "flags",
+            format!("unknown flag bits {flags:#x}"),
+        ));
+    }
+    if le_u32(&h[28..32]) != 0 || le_u64(&h[48..56]) != 0 {
+        return Err(StoreError::format(
+            path,
+            "reserved",
+            "reserved header fields must be zero",
+        ));
+    }
+    let n = le_u64(&h[16..24]);
+    if n > u32::MAX as u64 {
+        return Err(StoreError::format(
+            path,
+            "n",
+            format!("{n} rows, but vertex ids are u32"),
+        ));
+    }
+    let dim = le_u32(&h[24..28]);
+    if dim == 0 {
+        return Err(StoreError::format(path, "dim", "embedding dim must be nonzero"));
+    }
+    let graph_fingerprint = le_u64(&h[32..40]);
+    let emb_start = le_u64(&h[40..48]);
+    if emb_start != HEADER_BYTES as u64 {
+        return Err(StoreError::format(
+            path,
+            "sections",
+            format!("embeddings section must start at {HEADER_BYTES}, got {emb_start}"),
+        ));
+    }
+    debug_assert_eq!(emb_start % SECTION_ALIGN, 0);
+    let emb_bytes = n
+        .checked_mul(dim as u64)
+        .and_then(|c| c.checked_mul(4))
+        .ok_or_else(|| {
+            StoreError::format(path, "dim", format!("{n} x {dim} embeddings overflows"))
+        })?;
+    let expected = emb_start.checked_add(emb_bytes).ok_or_else(|| {
+        StoreError::format(path, "dim", format!("{n} x {dim} embeddings overflows the file size"))
+    })?;
+    if file_len < expected {
+        return Err(StoreError::format(
+            path,
+            "size",
+            format!("file truncated: header needs {expected} bytes, file has {file_len}"),
+        ));
+    }
+    Ok(EmbHeader {
+        n,
+        dim,
+        graph_fingerprint,
+        emb_start,
+    })
+}
+
+/// Read and validate just the 64-byte header of an FN2VEMB1 file (O(1)).
+pub fn read_emb_header(path: &Path) -> Result<EmbHeader, StoreError> {
+    let mut f =
+        File::open(path).map_err(|e| StoreError::io(format!("open {}", path.display()), e))?;
+    let file_len = f
+        .metadata()
+        .map_err(|e| StoreError::io(format!("stat {}", path.display()), e))?
+        .len();
+    if file_len < HEADER_BYTES as u64 {
+        return Err(StoreError::format(
+            path,
+            "size",
+            format!("file has {file_len} bytes, header alone is {HEADER_BYTES}"),
+        ));
+    }
+    let mut h = [0u8; HEADER_BYTES];
+    f.read_exact(&mut h)
+        .map_err(|e| StoreError::io(format!("read header of {}", path.display()), e))?;
+    parse_emb_header(path, &h, file_len)
+}
+
+fn validate_embeddings(path: &Path, flat: &[f32]) -> Result<(), StoreError> {
+    for (i, &x) in flat.iter().enumerate() {
+        if !x.is_finite() {
+            return Err(StoreError::format(
+                path,
+                "embeddings",
+                format!("value {x} at flat index {i} is not finite"),
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// An opened embedding matrix: the validated header plus a
+/// [`Section<f32>`] that is either a zero-copy view into the mmap'd
+/// file or an owned decode, exactly like a `Graph`'s CSR arrays.
+#[derive(Debug)]
+pub struct EmbStore {
+    path: PathBuf,
+    header: EmbHeader,
+    data: Section<f32>,
+}
+
+impl EmbStore {
+    /// Open an FN2VEMB1 file. Mapped mode is zero-copy — no f32 is
+    /// copied or converted, the section points straight into the page
+    /// cache — and downgrades to owned where [`Mmap::supported`] is
+    /// false. `opts.trusted` skips the O(n·dim) finite-value scan (it
+    /// does *not* skip header validation, and it does not skip the
+    /// graph-fingerprint check — that lives in [`EmbStore::check_graph`]
+    /// so the caller decides).
+    pub fn open(path: &Path, opts: &OpenOptions) -> Result<EmbStore, StoreError> {
+        let rctx = |e: std::io::Error| StoreError::io(format!("read {}", path.display()), e);
+        let mut f =
+            File::open(path).map_err(|e| StoreError::io(format!("open {}", path.display()), e))?;
+        let file_len = f
+            .metadata()
+            .map_err(|e| StoreError::io(format!("stat {}", path.display()), e))?
+            .len();
+        if file_len < HEADER_BYTES as u64 {
+            return Err(StoreError::format(
+                path,
+                "size",
+                format!("file has {file_len} bytes, header alone is {HEADER_BYTES}"),
+            ));
+        }
+        let mut hbytes = [0u8; HEADER_BYTES];
+        f.read_exact(&mut hbytes).map_err(&rctx)?;
+        let h = parse_emb_header(path, &hbytes, file_len)?;
+        let count = (h.n * h.dim as u64) as usize;
+
+        let mapped = opts.mode == StoreMode::Mapped && Mmap::supported() && count > 0;
+        let data = if mapped {
+            let map = Arc::new(
+                Mmap::map(&f).map_err(|e| StoreError::io(format!("mmap {}", path.display()), e))?,
+            );
+            Section::<f32>::mapped(map, h.emb_start as usize, count)
+                .map_err(|d| StoreError::format(path, "sections", d))?
+        } else {
+            let mut r = BufReader::new(f);
+            let mut flat = Vec::with_capacity(count);
+            decode_le_items::<_, 4>(&mut r, count, section_ctx(path, "embeddings"), |_, b| {
+                flat.push(f32::from_le_bytes(b))
+            })?;
+            Section::owned(flat)
+        };
+        if !opts.trusted {
+            validate_embeddings(path, &data)?;
+        }
+        Ok(EmbStore {
+            path: path.to_path_buf(),
+            header: h,
+            data,
+        })
+    }
+
+    /// Number of embedding rows.
+    pub fn n(&self) -> usize {
+        self.header.n as usize
+    }
+
+    /// Columns per row.
+    pub fn dim(&self) -> usize {
+        self.header.dim as usize
+    }
+
+    /// Fingerprint of the training graph, as stored in the header.
+    pub fn graph_fingerprint(&self) -> u64 {
+        self.header.graph_fingerprint
+    }
+
+    /// The validated header.
+    pub fn header(&self) -> &EmbHeader {
+        &self.header
+    }
+
+    /// Path this store was opened from.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Header checksum — a cheap identity for sidecar files (the HNSW
+    /// index binds to this so a stale index is detected at load).
+    pub fn header_checksum(&self) -> u64 {
+        let mut h = [0u8; 56];
+        h[0..8].copy_from_slice(MAGIC_EMB);
+        h[8..12].copy_from_slice(&VERSION.to_le_bytes());
+        h[16..24].copy_from_slice(&self.header.n.to_le_bytes());
+        h[24..28].copy_from_slice(&self.header.dim.to_le_bytes());
+        h[32..40].copy_from_slice(&self.header.graph_fingerprint.to_le_bytes());
+        h[40..48].copy_from_slice(&self.header.emb_start.to_le_bytes());
+        fxhash64(&h)
+    }
+
+    /// True when the rows are a zero-copy view into the mmap'd file.
+    pub fn is_mapped(&self) -> bool {
+        self.data.is_mapped()
+    }
+
+    /// The full matrix, row-major — the same shape
+    /// `SgnsBackend::embeddings_flat` hands out in-process.
+    pub fn flat(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// One embedding row.
+    pub fn row(&self, v: usize) -> &[f32] {
+        let d = self.dim();
+        &self.data[v * d..(v + 1) * d]
+    }
+
+    /// Check this store against the graph it is about to serve. Errors
+    /// blame `n` (row count differs from the vertex count — structurally
+    /// unusable) or `graph_fingerprint` (counts collide but identity
+    /// differs, or the stored fingerprint is from another graph).
+    pub fn check_graph(&self, graph: &Graph) -> Result<(), StoreError> {
+        let gn = graph.num_vertices() as u64;
+        if self.header.n != gn {
+            return Err(StoreError::format(
+                &self.path,
+                "n",
+                format!(
+                    "embedding file has {} rows but the graph has {gn} vertices",
+                    self.header.n
+                ),
+            ));
+        }
+        let fp = graph_fingerprint(graph);
+        if self.header.graph_fingerprint != fp {
+            return Err(StoreError::format(
+                &self.path,
+                "graph_fingerprint",
+                format!(
+                    "embedding file was trained on a different graph \
+                     (stored {:#x}, loaded graph {fp:#x}); pass --trusted to serve anyway",
+                    self.header.graph_fingerprint
+                ),
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Atomically write `bytes` to `path` via `<path>.tmp` + fsync + rename,
+/// under the same `emb.*` failpoint sites as [`write_emb`] (the HNSW
+/// sidecar uses this; both artifacts share one crash discipline).
+pub(crate) fn atomic_write(path: &Path, bytes: &[u8]) -> Result<(), StoreError> {
+    let tmp = emb_tmp_path(path);
+    let wctx = |e: std::io::Error| StoreError::io(format!("write {}", tmp.display()), e);
+    let res = (|| {
+        let mut f = failpoints::retry_io("emb.write", || File::create(&tmp)).map_err(&wctx)?;
+        failpoints::retry_io("emb.write", || f.write_all(bytes)).map_err(&wctx)?;
+        failpoints::retry_io("emb.sync", || f.sync_all()).map_err(&wctx)?;
+        failpoints::retry_io("emb.rename", || fs::rename(&tmp, path))
+            .map_err(|e| StoreError::io(format!("rename {} into place", tmp.display()), e))
+    })();
+    if res.is_err() {
+        let _ = fs::remove_file(&tmp);
+    }
+    res
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("fn2v-emb-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn demo_flat(n: usize, dim: usize) -> Vec<f32> {
+        (0..n * dim).map(|i| (i as f32 * 0.25) - 3.0).collect()
+    }
+
+    #[test]
+    fn round_trip_owned_and_mapped() {
+        let path = tmp("round-trip.emb");
+        let flat = demo_flat(7, 5);
+        write_emb(&path, &flat, 5, 0xfeed).unwrap();
+        for opts in [OpenOptions::owned(), OpenOptions::mapped()] {
+            let store = EmbStore::open(&path, &opts).unwrap();
+            assert_eq!(store.n(), 7);
+            assert_eq!(store.dim(), 5);
+            assert_eq!(store.graph_fingerprint(), 0xfeed);
+            assert_eq!(store.flat(), &flat[..]);
+            assert_eq!(store.row(3), &flat[15..20]);
+        }
+    }
+
+    #[test]
+    fn mapped_open_is_zero_copy() {
+        let path = tmp("zero-copy.emb");
+        write_emb(&path, &demo_flat(4, 16), 16, 1).unwrap();
+        let store = EmbStore::open(&path, &OpenOptions::mapped()).unwrap();
+        if crate::util::mmap::Mmap::supported() {
+            assert!(store.is_mapped(), "mapped open must not copy f32s");
+            // The section starts at byte 64 of the mapping: 64-byte aligned.
+            assert_eq!(store.flat().as_ptr() as usize % 4, 0);
+        }
+        let owned = EmbStore::open(&path, &OpenOptions::owned()).unwrap();
+        assert!(!owned.is_mapped());
+    }
+
+    #[test]
+    fn write_leaves_no_tmp_file() {
+        let path = tmp("no-tmp.emb");
+        write_emb(&path, &demo_flat(3, 4), 4, 2).unwrap();
+        assert!(path.exists());
+        assert!(!emb_tmp_path(&path).exists());
+    }
+
+    #[test]
+    fn rejects_bad_dim_at_write() {
+        let path = tmp("bad-dim.emb");
+        let err = write_emb(&path, &[1.0; 10], 0, 0).unwrap_err();
+        assert_eq!(err.field(), Some("dim"));
+        let err = write_emb(&path, &[1.0; 10], 3, 0).unwrap_err();
+        assert_eq!(err.field(), Some("embeddings"));
+    }
+
+    #[test]
+    fn non_finite_values_rejected_unless_trusted() {
+        let path = tmp("nan.emb");
+        let mut flat = demo_flat(3, 4);
+        flat[5] = f32::NAN;
+        write_emb(&path, &flat, 4, 0).unwrap();
+        let err = EmbStore::open(&path, &OpenOptions::owned()).unwrap_err();
+        assert_eq!(err.field(), Some("embeddings"));
+        let store = EmbStore::open(&path, &OpenOptions::owned().trusted(true)).unwrap();
+        assert!(store.flat()[5].is_nan());
+    }
+
+    #[test]
+    fn header_checksum_is_stable_identity() {
+        let path = tmp("ident.emb");
+        write_emb(&path, &demo_flat(5, 3), 3, 77).unwrap();
+        let a = EmbStore::open(&path, &OpenOptions::owned()).unwrap();
+        let b = EmbStore::open(&path, &OpenOptions::mapped()).unwrap();
+        assert_eq!(a.header_checksum(), b.header_checksum());
+        // Identity covers the graph fingerprint: a different graph, a
+        // different checksum.
+        let path2 = tmp("ident2.emb");
+        write_emb(&path2, &demo_flat(5, 3), 3, 78).unwrap();
+        let c = EmbStore::open(&path2, &OpenOptions::owned()).unwrap();
+        assert_ne!(a.header_checksum(), c.header_checksum());
+    }
+}

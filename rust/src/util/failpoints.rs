@@ -63,6 +63,18 @@ pub const SITES: &[Site] = &[
     // the Unix-socket transport route through `retry_io` on these).
     Site { name: "transport.read", kind: SiteKind::Io },
     Site { name: "transport.write", kind: SiteKind::Io },
+    // FN2VEMB1 embedding store + FN2VIDX1 sidecar: temp-file writes,
+    // fsync, atomic rename (`--emb-out` and index persistence share the
+    // same atomic-write path, so a crash never leaves a partial file on
+    // the final path).
+    Site { name: "emb.write", kind: SiteKind::Io },
+    Site { name: "emb.sync", kind: SiteKind::Io },
+    Site { name: "emb.rename", kind: SiteKind::Io },
+    // Serve daemon: the listener accept loop and per-connection frame
+    // reads (both ride `retry_io`, so a transient fault degrades to a
+    // retry, never a dropped daemon).
+    Site { name: "serve.accept", kind: SiteKind::Io },
+    Site { name: "serve.read", kind: SiteKind::Io },
 ];
 
 /// Severity of an injected I/O fault.

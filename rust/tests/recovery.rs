@@ -421,6 +421,34 @@ mod fault_injection {
         read_walk_file(&path).map_err(|e| e.to_string())
     }
 
+    /// A minimal daemon round trip: write a small FN2VEMB1 store, serve it
+    /// brute-force on a temp socket, ask for neighbors, shut down.
+    fn serve_round_trip(dir: &Path) -> Result<Vec<(u32, f32)>, String> {
+        use fastn2v::serve::{run_server, ServeClient, ServeCore, ServeOpts};
+        std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+        let emb_path = dir.join("serve.emb");
+        let flat: Vec<f32> = (0..16 * 8).map(|i| ((i * 37) % 97) as f32 / 97.0).collect();
+        fastn2v::serve::write_emb(&emb_path, &flat, 8, 7).map_err(|e| e.to_string())?;
+        let emb = fastn2v::serve::EmbStore::open(&emb_path, &OpenOptions::owned())
+            .map_err(|e| e.to_string())?;
+        let sock = dir.join("serve.sock");
+        let _ = std::fs::remove_file(&sock);
+        let listener =
+            std::os::unix::net::UnixListener::bind(&sock).map_err(|e| e.to_string())?;
+        let core = ServeCore::new(emb, None, None, 16);
+        let sp = sock.clone();
+        let server =
+            std::thread::spawn(move || run_server(listener, &sp, core, ServeOpts::default()));
+        let (mut c, _) = ServeClient::connect(&sock).map_err(|e| e.to_string())?;
+        let nn = c.nearest(0, 3).map_err(|e| e.to_string())?;
+        c.shutdown().map_err(|e| e.to_string())?;
+        server
+            .join()
+            .map_err(|_| "server panicked".to_string())?
+            .map_err(|e| e.to_string())?;
+        Ok(nn)
+    }
+
     fn leftover_tmp_files(dir: &Path) -> Vec<PathBuf> {
         let Ok(rd) = std::fs::read_dir(dir) else {
             return Vec::new();
@@ -476,6 +504,24 @@ mod fault_injection {
                     let out = sharded_streaming_run(&base.join(site.name), 2)
                         .unwrap_or_else(|e| panic!("{} did not recover: {e}", site.name));
                     assert_eq!(out, reference, "{} changed the output", site.name);
+                }
+                // Embedding-store sites: an armed `write_emb` recovers and
+                // the reopened payload is bit-identical.
+                "emb.write" | "emb.sync" | "emb.rename" => {
+                    let p = base.join(format!("{}.emb", site.name));
+                    let flat: Vec<f32> = (0..64).map(|i| i as f32 * 0.5).collect();
+                    fastn2v::serve::write_emb(&p, &flat, 8, 99)
+                        .unwrap_or_else(|e| panic!("{} did not recover: {e}", site.name));
+                    let emb = fastn2v::serve::EmbStore::open(&p, &OpenOptions::owned())
+                        .unwrap_or_else(|e| panic!("{} reopen failed: {e}", site.name));
+                    assert_eq!(emb.flat(), &flat[..], "{} corrupted the payload", site.name);
+                }
+                // Serve sites: a full daemon round trip on a unix socket
+                // absorbs an armed accept/read fault.
+                "serve.accept" | "serve.read" => {
+                    let nn = serve_round_trip(&base.join(site.name))
+                        .unwrap_or_else(|e| panic!("{} did not recover: {e}", site.name));
+                    assert!(!nn.is_empty(), "{} returned no neighbors", site.name);
                 }
                 other => panic!("site `{other}` is not covered by this harness"),
             }
@@ -593,6 +639,33 @@ mod fault_injection {
             Ok(_) => panic!("io.read-chunk: fatal fault ignored"),
         }
 
+        clear_all();
+        std::fs::remove_dir_all(&base).ok();
+    }
+
+    /// Fatal embedding-store faults fail typed and leave neither the
+    /// final file nor the temp file behind — a crashed `--emb-out` never
+    /// publishes a partial FN2VEMB1.
+    #[test]
+    fn fatal_emb_faults_leave_no_file_on_final_path() {
+        clear_all();
+        let base = tmp_dir("emb-fatal");
+        for site in ["emb.write", "emb.sync", "emb.rename"] {
+            clear_all();
+            arm_fatal(site, 0);
+            let p = base.join(format!("{site}.emb"));
+            let flat: Vec<f32> = (0..32).map(|i| i as f32).collect();
+            match fastn2v::serve::write_emb(&p, &flat, 8, 1) {
+                Err(StoreError::Io { .. }) => {}
+                Err(other) => panic!("{site}: wrong error {other}"),
+                Ok(_) => panic!("{site}: fatal fault ignored"),
+            }
+            assert!(!p.exists(), "{site}: partial final file left behind");
+            assert!(
+                leftover_tmp_files(&base).is_empty(),
+                "{site}: temp file left behind"
+            );
+        }
         clear_all();
         std::fs::remove_dir_all(&base).ok();
     }

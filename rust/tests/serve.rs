@@ -1,0 +1,374 @@
+//! Serving subsystem integration: the FN2VEMB1 corrupt-file matrix, the
+//! zero-copy reopen, the HNSW recall gate against the brute-force
+//! oracle, and the daemon end-to-end — concurrent clients over a unix
+//! socket, typed overload rejection with in-flight queries completing,
+//! and the graph-fingerprint binding `serve` enforces at startup.
+//!
+//! The embeddings under test are trained on a `gen/labeled.rs` community
+//! graph (the same generator the classification experiments use), so the
+//! recall gate measures the index on realistic, clustered vectors —
+//! not on synthetic blobs hand-shaped to flatter HNSW.
+
+use std::path::PathBuf;
+use std::sync::{Arc, OnceLock};
+use std::time::Duration;
+
+use fastn2v::embed::{cosine, RustSgns, SgnsBackend, TrainConfig, TrainerSink};
+use fastn2v::gen::{labeled_community_graph, LabeledConfig};
+use fastn2v::graph::{Graph, OpenOptions, StoreError};
+use fastn2v::node2vec::{FnConfig, WalkRequest, WalkSession};
+use fastn2v::serve::{
+    graph_fingerprint, read_emb_header, recall_at_k, run_server, write_emb, EmbStore, HnswIndex,
+    HnswParams, ServeClient, ServeCore, ServeOpts, ServeRequest, ServeResponse,
+};
+use fastn2v::util::mmap::Mmap;
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("fn2v-serve-it-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Mirror of the store's header hash, kept independent on purpose: a
+/// change to `FxHasher` that silently breaks on-disk compatibility fails
+/// here, not in production.
+fn fxhash64(bytes: &[u8]) -> u64 {
+    use std::hash::Hasher;
+    let mut h = fastn2v::util::fxhash::FxHasher::default();
+    h.write(bytes);
+    h.finish()
+}
+
+/// Tiny labeled community graph plus embeddings trained on its walks —
+/// the fixture every serving test shares (trained once per process).
+fn fixture() -> &'static (Arc<Graph>, Vec<f32>, usize) {
+    static FIXTURE: OnceLock<(Arc<Graph>, Vec<f32>, usize)> = OnceLock::new();
+    FIXTURE.get_or_init(|| {
+        let lg = labeled_community_graph(&LabeledConfig::tiny(97));
+        let g = lg.graph.clone();
+        let n = g.num_vertices();
+        let cfg = FnConfig::new(0.5, 2.0, 97).with_walk_length(8);
+        let session = WalkSession::builder(g.clone(), cfg).workers(2).build();
+        let tcfg = TrainConfig {
+            steps: 400,
+            seed: 97,
+            ..Default::default()
+        };
+        let mut sink = TrainerSink::new(RustSgns::new(n, 16, 97), n, tcfg, 128, 5, 1);
+        session.run(&WalkRequest::all(), &mut sink).unwrap();
+        let (model, _) = sink.finish().unwrap();
+        let (flat, dim) = model.embeddings_flat().unwrap();
+        (g, flat.to_vec(), dim)
+    })
+}
+
+fn walk_cfg(seed: u64) -> FnConfig {
+    FnConfig::new(0.5, 2.0, seed).with_walk_length(8)
+}
+
+// ----------------------------------------------------------- the store
+
+#[test]
+fn emb_round_trip_and_mapped_reopen_is_zero_copy() {
+    let (g, flat, dim) = fixture();
+    let dir = tmp_dir("zero-copy");
+    let p = dir.join("g.emb");
+    write_emb(&p, flat, *dim, graph_fingerprint(g)).unwrap();
+    let h = read_emb_header(&p).unwrap();
+    assert_eq!(h.n as usize, g.num_vertices());
+    assert_eq!(h.dim as usize, *dim);
+    let emb = EmbStore::open(&p, &OpenOptions::mapped()).unwrap();
+    if Mmap::supported() {
+        assert!(emb.is_mapped(), "mapped open must not decode-copy the matrix");
+    }
+    assert_eq!(emb.flat(), &flat[..]);
+    assert_eq!(emb.row(3), &flat[3 * dim..4 * dim]);
+    emb.check_graph(g).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Every corrupted byte range is refused with blame on the right header
+/// field — the same discipline (and validation order) as the graph
+/// store's matrix.
+#[test]
+fn corrupt_emb_files_are_rejected_with_field_blame() {
+    let (g, flat, dim) = fixture();
+    let dir = tmp_dir("corrupt");
+    let p = dir.join("g.emb");
+    write_emb(&p, flat, *dim, graph_fingerprint(g)).unwrap();
+    let base = std::fs::read(&p).unwrap();
+
+    let reseal = |b: &mut [u8]| {
+        let sum = fxhash64(&b[..56]);
+        b[56..64].copy_from_slice(&sum.to_le_bytes());
+    };
+    let open_mutated = |name: &str, mutate: &dyn Fn(&mut Vec<u8>)| -> StoreError {
+        let mut bytes = base.clone();
+        mutate(&mut bytes);
+        let cp = dir.join(format!("{name}.emb"));
+        std::fs::write(&cp, &bytes).unwrap();
+        EmbStore::open(&cp, &OpenOptions::owned())
+            .err()
+            .unwrap_or_else(|| panic!("{name}: corrupt file opened cleanly"))
+    };
+
+    // Detected before the checksum: identity fields.
+    let cases: Vec<(&str, &str, Box<dyn Fn(&mut Vec<u8>)>)> = vec![
+        ("magic", "magic", Box::new(|b: &mut Vec<u8>| b[0] ^= 0xFF)),
+        ("version", "version", Box::new(|b: &mut Vec<u8>| b[8] = 9)),
+        ("checksum", "checksum", Box::new(|b: &mut Vec<u8>| b[60] ^= 0x01)),
+        // Detected after the checksum: mutate, then reseal the header so
+        // the field check itself (not the checksum) does the rejecting.
+        (
+            "flags",
+            "flags",
+            Box::new(move |b: &mut Vec<u8>| {
+                b[12] = 1;
+                reseal(b);
+            }),
+        ),
+        (
+            "reserved",
+            "reserved",
+            Box::new(move |b: &mut Vec<u8>| {
+                b[28] = 1;
+                reseal(b);
+            }),
+        ),
+        (
+            "dim-zero",
+            "dim",
+            Box::new(move |b: &mut Vec<u8>| {
+                b[24..28].copy_from_slice(&0u32.to_le_bytes());
+                reseal(b);
+            }),
+        ),
+        (
+            "row-count-vs-size",
+            "size",
+            Box::new(move |b: &mut Vec<u8>| {
+                let n = u64::from_le_bytes(b[16..24].try_into().unwrap());
+                b[16..24].copy_from_slice(&(n + 1).to_le_bytes());
+                reseal(b);
+            }),
+        ),
+        (
+            "truncated-body",
+            "size",
+            Box::new(|b: &mut Vec<u8>| {
+                let l = b.len();
+                b.truncate(l - 5);
+            }),
+        ),
+        (
+            "truncated-header",
+            "size",
+            Box::new(|b: &mut Vec<u8>| b.truncate(40)),
+        ),
+    ];
+    for (name, field, mutate) in &cases {
+        let e = open_mutated(name, mutate);
+        assert_eq!(
+            e.field(),
+            Some(*field),
+            "{name}: wrong blame, got {e}"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Satellite 6: the startup binding. An embedding file that does not
+/// fingerprint-match the loaded graph is refused (with a hint at the
+/// `--trusted` override); a row-count mismatch blames `n` first.
+#[test]
+fn check_graph_refuses_mismatched_fingerprint_and_row_count() {
+    let (g, flat, dim) = fixture();
+    let dir = tmp_dir("fingerprint");
+
+    let p = dir.join("wrong-fp.emb");
+    write_emb(&p, flat, *dim, graph_fingerprint(g) ^ 1).unwrap();
+    let emb = EmbStore::open(&p, &OpenOptions::owned()).unwrap();
+    let e = emb.check_graph(g).unwrap_err();
+    assert_eq!(e.field(), Some("graph_fingerprint"), "got {e}");
+    assert!(e.to_string().contains("--trusted"), "no override hint: {e}");
+
+    let p2 = dir.join("short.emb");
+    write_emb(&p2, &flat[..flat.len() - dim], *dim, graph_fingerprint(g)).unwrap();
+    let emb2 = EmbStore::open(&p2, &OpenOptions::owned()).unwrap();
+    assert_eq!(emb2.check_graph(g).unwrap_err().field(), Some("n"));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ----------------------------------------------------------- the index
+
+/// The acceptance gate: HNSW recall@10 against the exact brute-force
+/// oracle on embeddings trained from the labeled community generator.
+#[test]
+fn hnsw_recall_at_10_meets_gate_on_trained_embeddings() {
+    let (_, flat, dim) = fixture();
+    let idx = HnswIndex::build(flat, *dim, &HnswParams::default());
+    let n = flat.len() / dim;
+    let queries: Vec<usize> = (0..n).step_by(3).collect();
+    let r = recall_at_k(&idx, flat, *dim, 10, 64, &queries);
+    assert!(r >= 0.95, "recall@10 = {r:.3} below the 0.95 gate");
+}
+
+// ---------------------------------------------------------- the daemon
+
+#[test]
+fn daemon_answers_concurrent_clients_scores_and_walks() {
+    let (g, flat, dim) = fixture();
+    let n = flat.len() / dim;
+    let dir = tmp_dir("daemon");
+    let p = dir.join("g.emb");
+    write_emb(&p, flat, *dim, graph_fingerprint(g)).unwrap();
+    let emb = EmbStore::open(&p, &OpenOptions::mapped()).unwrap();
+    let index = HnswIndex::build(emb.flat(), emb.dim(), &HnswParams::default());
+    let session = WalkSession::builder(g.clone(), walk_cfg(97)).workers(2).build();
+
+    let sock = dir.join("serve.sock");
+    let listener = std::os::unix::net::UnixListener::bind(&sock).unwrap();
+    let core = ServeCore::new(emb, Some(index), Some(session), 64);
+    let sp = sock.clone();
+    let server =
+        std::thread::spawn(move || run_server(listener, &sp, core, ServeOpts::default()));
+
+    // Three concurrent clients, interleaved NN queries.
+    std::thread::scope(|s| {
+        for t in 0..3usize {
+            let sockc = sock.clone();
+            s.spawn(move || {
+                let (mut c, hello) = ServeClient::connect(&sockc).unwrap();
+                assert_eq!(hello.n as usize, n);
+                assert!(hello.has_index && hello.has_walks);
+                for i in 0..20usize {
+                    let v = ((t * 31 + i * 7) % n) as u32;
+                    let nn = c.nearest(v, 5).unwrap();
+                    assert!(!nn.is_empty(), "empty answer for v{v}");
+                    assert!(nn.iter().all(|(u, _)| *u != v), "self in results");
+                    assert!(nn.iter().all(|(u, _)| (*u as usize) < n));
+                }
+            });
+        }
+    });
+
+    let (mut c, _) = ServeClient::connect(&sock).unwrap();
+    // Link-prediction score is exactly the cosine of the stored rows.
+    let got = c.score(0, 1).unwrap();
+    let want = cosine(&flat[..*dim], &flat[*dim..2 * dim]);
+    assert!((got - want).abs() < 1e-6, "score {got} != cosine {want}");
+    // An on-demand walk starts at its (cold) seed and stays in range.
+    let w = c.walk(5, 8).unwrap();
+    assert_eq!(w[0], 5, "walk must start at the requested vertex");
+    assert!(w.len() > 1 && w.iter().all(|&u| (u as usize) < g.num_vertices()));
+
+    let stats = c.stats().unwrap();
+    assert!(stats.nearest.served >= 60, "stats lost queries: {stats}");
+    assert!(stats.score.served >= 1 && stats.walk.served >= 1);
+    assert!(stats.batches >= 1 && stats.mean_batch() >= 1.0);
+
+    c.shutdown().unwrap();
+    let snap = server.join().unwrap().unwrap();
+    assert!(snap.nearest.served >= 60);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The acceptance criterion for admission control: flooding a tiny queue
+/// returns typed `OVERLOADED` rejections while every admitted query
+/// still completes — the daemon degrades, it does not collapse.
+#[test]
+fn overload_rejects_typed_and_admitted_queries_complete() {
+    let dir = tmp_dir("overload");
+    let p = dir.join("g.emb");
+    let n = 64usize;
+    let dim = 8usize;
+    let flat: Vec<f32> = (0..n * dim).map(|i| ((i * 37) % 101) as f32 / 101.0).collect();
+    write_emb(&p, &flat, dim, 7).unwrap();
+    let emb = EmbStore::open(&p, &OpenOptions::owned()).unwrap();
+
+    let sock = dir.join("serve.sock");
+    let listener = std::os::unix::net::UnixListener::bind(&sock).unwrap();
+    let opts = ServeOpts {
+        max_queue: 4,
+        batch_max: 2,
+        ef_search: 16,
+        // Slow the batcher deterministically so the flood below must
+        // overflow the 4-deep queue.
+        drain_delay: Some(Duration::from_millis(25)),
+    };
+    let core = ServeCore::new(emb, None, None, 16);
+    let sp = sock.clone();
+    let server = std::thread::spawn(move || run_server(listener, &sp, core, opts));
+
+    let (mut c, _) = ServeClient::connect(&sock).unwrap();
+    let total = 48usize;
+    for i in 0..total {
+        c.send(&ServeRequest::Nearest {
+            v: (i % n) as u32,
+            k: 3,
+        })
+        .unwrap();
+    }
+    let (mut ok, mut overloaded) = (0usize, 0usize);
+    for _ in 0..total {
+        let (_id, res) = c.recv().unwrap();
+        match res {
+            Ok(ServeResponse::Neighbors(nn)) => {
+                assert!(!nn.is_empty());
+                ok += 1;
+            }
+            Ok(other) => panic!("unexpected response {other:?}"),
+            Err(r) if r.is_overload() => overloaded += 1,
+            Err(r) => panic!("unexpected rejection: {r}"),
+        }
+    }
+    assert!(overloaded >= 1, "48 pipelined queries never overflowed a 4-deep queue");
+    assert!(ok >= 1, "no admitted query completed under overload");
+    assert_eq!(ok + overloaded, total);
+
+    // The control plane answers inline, so it stays observable while the
+    // data queue is saturated; the rejection tally matches what we saw.
+    let stats = c.stats().unwrap();
+    assert_eq!(stats.rejected as usize, overloaded, "stats: {stats}");
+    assert_eq!(stats.nearest.served as usize, ok);
+
+    c.shutdown().unwrap();
+    let snap = server.join().unwrap().unwrap();
+    assert_eq!(snap.rejected as usize, overloaded);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Queries for vertices outside the stored rows are refused per-request
+/// (BAD_REQUEST), never by dropping the connection.
+#[test]
+fn out_of_range_queries_are_rejected_not_fatal() {
+    let dir = tmp_dir("bad-request");
+    let p = dir.join("g.emb");
+    let flat: Vec<f32> = (0..32 * 4).map(|i| i as f32 * 0.25).collect();
+    write_emb(&p, &flat, 4, 9).unwrap();
+    let emb = EmbStore::open(&p, &OpenOptions::owned()).unwrap();
+    let sock = dir.join("serve.sock");
+    let listener = std::os::unix::net::UnixListener::bind(&sock).unwrap();
+    let core = ServeCore::new(emb, None, None, 16);
+    let sp = sock.clone();
+    let server =
+        std::thread::spawn(move || run_server(listener, &sp, core, ServeOpts::default()));
+
+    let (mut c, _) = ServeClient::connect(&sock).unwrap();
+    // Out of range: typed rejection.
+    c.send(&ServeRequest::Nearest { v: 999, k: 3 }).unwrap();
+    let (_, res) = c.recv().unwrap();
+    assert!(res.is_err(), "out-of-range vertex must be rejected");
+    // Walks without a WalkSession: unsupported, not fatal.
+    c.send(&ServeRequest::Walk { v: 0, length: 4 }).unwrap();
+    let (_, res) = c.recv().unwrap();
+    assert!(res.is_err(), "walk without a session must be rejected");
+    // The connection is still alive and serves valid queries.
+    let nn = c.nearest(0, 3).unwrap();
+    assert_eq!(nn.len(), 3);
+    c.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
