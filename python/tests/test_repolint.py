@@ -1,0 +1,308 @@
+"""Unit tests for python/tools/repolint.py.
+
+Each rule is exercised both ways: a seeded-violation fixture tree must
+produce the expected finding (the lint demonstrably *fails* on bad
+input), and the corresponding clean fixture must not. The final test
+runs the full lint over the real repository — the tree this file ships
+in must itself be clean.
+"""
+
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO_ROOT = Path(__file__).resolve().parents[2]
+sys.path.insert(0, str(REPO_ROOT / "python" / "tools"))
+
+import repolint  # noqa: E402
+
+
+def make_tree(tmp_path: Path, files: dict[str, str]) -> Path:
+    """Materialize a fixture repo: {relative_path: content}."""
+    for relpath, content in files.items():
+        p = tmp_path / relpath
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(content)
+    return tmp_path
+
+
+# ---------------------------------------------------------------------------
+# R1: unsafe-safety-comment
+# ---------------------------------------------------------------------------
+
+def test_unsafe_block_without_safety_comment_is_flagged(tmp_path):
+    root = make_tree(tmp_path, {
+        "rust/src/bad.rs": (
+            "pub fn f(p: *const u8) -> u8 {\n"
+            "    unsafe { *p }\n"
+            "}\n"
+        ),
+    })
+    findings = repolint.check_unsafe_comments(root)
+    assert len(findings) == 1
+    assert findings[0].rule == "unsafe-safety-comment"
+    assert findings[0].path == "rust/src/bad.rs"
+    assert findings[0].line == 2
+
+
+def test_unsafe_block_with_nearby_safety_comment_passes(tmp_path):
+    root = make_tree(tmp_path, {
+        "rust/src/ok.rs": (
+            "pub fn f(p: *const u8) -> u8 {\n"
+            "    // SAFETY: caller guarantees p is valid (see # Safety).\n"
+            "    unsafe { *p }\n"
+            "}\n"
+        ),
+    })
+    assert repolint.check_unsafe_comments(root) == []
+
+
+def test_long_contiguous_safety_block_passes(tmp_path):
+    # The justification starts >3 lines above the unsafe impl but the
+    # comment block is contiguous — must not be penalized for length.
+    root = make_tree(tmp_path, {
+        "rust/src/long.rs": (
+            "struct P(*const u8);\n"
+            "// SAFETY: the pointee outlives the dispatch because the\n"
+            "// submitting thread blocks until every worker is done, so\n"
+            "// the borrow it was created from is still live whenever a\n"
+            "// worker dereferences it; the pointee is Sync, so shared\n"
+            "// calls from multiple workers are allowed.\n"
+            "unsafe impl Send for P {}\n"
+        ),
+    })
+    assert repolint.check_unsafe_comments(root) == []
+
+
+def test_unsafe_impl_without_comment_is_flagged(tmp_path):
+    root = make_tree(tmp_path, {
+        "rust/src/imp.rs": (
+            "struct P(*const u8);\n"
+            "unsafe impl Send for P {}\n"
+        ),
+    })
+    findings = repolint.check_unsafe_comments(root)
+    assert [f.line for f in findings] == [2]
+
+
+def test_unsafe_fn_requires_safety_doc_section(tmp_path):
+    root = make_tree(tmp_path, {
+        "rust/src/decl.rs": (
+            "/// Reads a raw pointer.\n"
+            "pub unsafe fn read(p: *const u8) -> u8 {\n"
+            "    // SAFETY: forwarded from the caller's contract.\n"
+            "    unsafe { *p }\n"
+            "}\n"
+        ),
+    })
+    findings = repolint.check_unsafe_comments(root)
+    assert len(findings) == 1
+    assert "# Safety" in findings[0].message
+
+    root2 = make_tree(tmp_path / "ok", {
+        "rust/src/decl.rs": (
+            "/// Reads a raw pointer.\n"
+            "///\n"
+            "/// # Safety\n"
+            "///\n"
+            "/// `p` must be valid for reads.\n"
+            "pub unsafe fn read(p: *const u8) -> u8 {\n"
+            "    // SAFETY: forwarded from the caller's contract.\n"
+            "    unsafe { *p }\n"
+            "}\n"
+        ),
+    })
+    assert repolint.check_unsafe_comments(root2) == []
+
+
+def test_commented_out_unsafe_is_ignored(tmp_path):
+    root = make_tree(tmp_path, {
+        "rust/src/doc.rs": (
+            "//! Never use `unsafe { transmute }` here.\n"
+            "// let x = unsafe { *p };\n"
+            "pub fn f() {}\n"
+        ),
+    })
+    assert repolint.check_unsafe_comments(root) == []
+
+
+# ---------------------------------------------------------------------------
+# R2: sync-facade
+# ---------------------------------------------------------------------------
+
+def test_direct_std_sync_import_is_flagged(tmp_path):
+    root = make_tree(tmp_path, {
+        "rust/src/worker.rs": (
+            "use std::sync::Mutex;\n"
+            "pub fn f() { let _ = std::thread::spawn(|| {}); }\n"
+        ),
+    })
+    findings = repolint.check_sync_facade(root)
+    assert [f.line for f in findings] == [1, 2]
+    assert all(f.rule == "sync-facade" for f in findings)
+
+
+def test_util_sync_is_exempt_and_facade_use_passes(tmp_path):
+    root = make_tree(tmp_path, {
+        # The facade itself must be allowed to name std::sync.
+        "rust/src/util/sync/mod.rs": "pub use std::sync::{Arc, Mutex};\n",
+        # Normal modules go through the facade.
+        "rust/src/worker.rs": (
+            "use crate::util::sync::{thread, Mutex};\n"
+            "// A comment mentioning std::sync is fine.\n"
+            "pub fn f() { let _ = thread::spawn(|| {}); }\n"
+        ),
+    })
+    assert repolint.check_sync_facade(root) == []
+
+
+# ---------------------------------------------------------------------------
+# R3: magic-mirror
+# ---------------------------------------------------------------------------
+
+GRAPH_MIRRORS = [m for m in repolint.MIRRORS if m.label.startswith("FN2VGRF2")]
+
+
+def graph_fixture(tmp_path, rust_magic="FN2VGRF2", rust_version="2"):
+    return make_tree(tmp_path, {
+        "rust/src/graph/store.rs": (
+            f'pub const MAGIC_V2: &[u8; 8] = b"{rust_magic}";\n'
+            f"const VERSION: u32 = {rust_version};\n"
+        ),
+        "python/tests/test_graph_store_spec.py": (
+            'MAGIC_V2 = b"FN2VGRF2"\n'
+            "VERSION = 2\n"
+        ),
+    })
+
+
+def test_matching_magic_and_version_pass(tmp_path):
+    root = graph_fixture(tmp_path)
+    assert repolint.check_magic_mirrors(root, GRAPH_MIRRORS) == []
+
+
+def test_drifted_magic_is_flagged(tmp_path):
+    root = graph_fixture(tmp_path, rust_magic="FN2VGRF3")
+    findings = repolint.check_magic_mirrors(root, GRAPH_MIRRORS)
+    assert len(findings) == 1
+    assert findings[0].rule == "magic-mirror"
+    assert "FN2VGRF3" in findings[0].message
+    assert findings[0].line == 1
+
+
+def test_drifted_version_is_flagged(tmp_path):
+    root = graph_fixture(tmp_path, rust_version="3")
+    findings = repolint.check_magic_mirrors(root, GRAPH_MIRRORS)
+    assert len(findings) == 1
+    assert "FN2VGRF2 version" in findings[0].message
+    assert findings[0].line == 2
+
+
+def test_vanished_declaration_is_flagged(tmp_path):
+    root = make_tree(tmp_path, {
+        "rust/src/graph/store.rs": "// constants moved elsewhere\n",
+        "python/tests/test_graph_store_spec.py": (
+            'MAGIC_V2 = b"FN2VGRF2"\nVERSION = 2\n'
+        ),
+    })
+    findings = repolint.check_magic_mirrors(root, GRAPH_MIRRORS)
+    assert len(findings) == 2
+    assert all("not found" in f.message for f in findings)
+
+
+def test_pinned_rust_only_constant_is_checked(tmp_path):
+    pin = [m for m in repolint.MIRRORS if m.label == "FN2T frame magic"]
+    root = make_tree(tmp_path, {
+        "rust/src/pregel/transport.rs":
+            'pub const FRAME_MAGIC: u32 = u32::from_le_bytes(*b"FN2X");\n',
+    })
+    findings = repolint.check_magic_mirrors(root, pin)
+    assert len(findings) == 1
+    assert "FN2X" in findings[0].message
+
+
+# ---------------------------------------------------------------------------
+# R4: failpoint-catalog
+# ---------------------------------------------------------------------------
+
+def failpoint_fixture(tmp_path, call_site="sink.flush", documented=True):
+    return make_tree(tmp_path, {
+        "rust/src/util/failpoints.rs": (
+            "pub const SITES: &[Site] = &[\n"
+            '    Site { name: "sink.flush", kind: SiteKind::Io },\n'
+            '    Site { name: "engine.superstep", kind: SiteKind::Panic },\n'
+            "];\n"
+        ),
+        "rust/src/sink.rs": (
+            f'pub fn f() -> io::Result<()> {{ check("{call_site}") }}\n'
+        ),
+        "EXPERIMENTS.md": (
+            "| site | kind |\n| `sink.flush` | Io |\n| `engine.superstep` | Panic |\n"
+            if documented
+            else "| site | kind |\n| `sink.flush` | Io |\n"
+        ),
+    })
+
+
+def test_registered_and_documented_sites_pass(tmp_path):
+    root = failpoint_fixture(tmp_path)
+    assert repolint.check_failpoint_catalog(root) == []
+
+
+def test_unregistered_call_site_is_flagged(tmp_path):
+    root = failpoint_fixture(tmp_path, call_site="sink.flsh")  # typo
+    findings = repolint.check_failpoint_catalog(root)
+    assert len(findings) == 1
+    assert "sink.flsh" in findings[0].message
+    assert findings[0].path == "rust/src/sink.rs"
+
+
+def test_undocumented_registered_site_is_flagged(tmp_path):
+    root = failpoint_fixture(tmp_path, documented=False)
+    findings = repolint.check_failpoint_catalog(root)
+    assert len(findings) == 1
+    assert "engine.superstep" in findings[0].message
+    assert findings[0].path == "EXPERIMENTS.md"
+
+
+# ---------------------------------------------------------------------------
+# Helpers and the real tree
+# ---------------------------------------------------------------------------
+
+def test_strip_comment_is_string_literal_aware():
+    assert repolint.strip_comment("let x = 1; // SAFETY: no") == "let x = 1; "
+    assert repolint.strip_comment('let u = "http://x";') == 'let u = "http://x";'
+    assert repolint.strip_comment('let u = "a"; // b') == 'let u = "a"; '
+
+
+def test_site_call_regex_matches_all_entry_points():
+    line = (
+        'check("a.b")?; maybe_panic("c.d"); retry_io("e.f", || op())?; '
+        'arm("g.h", 0); arm_fatal("i.j", 1);'
+    )
+    assert repolint.SITE_CALL_RE.findall(line) == [
+        "a.b", "c.d", "e.f", "g.h", "i.j",
+    ]
+
+
+def test_real_repository_is_clean():
+    findings = repolint.run(REPO_ROOT)
+    assert findings == [], "\n".join(str(f) for f in findings)
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    clean = make_tree(tmp_path / "clean", {
+        "rust/src/util/failpoints.rs":
+            'pub const SITES: &[Site] = &[Site { name: "x.y", kind: SiteKind::Io }];\n',
+        "EXPERIMENTS.md": "`x.y`\n",
+        **{m.rust_file: "" for m in repolint.MIRRORS},
+    })
+    # The empty mirror files make R3 fire: nonzero exit.
+    assert repolint.main(["--root", str(clean)]) == 1
+    out = capsys.readouterr()
+    assert "magic-mirror" in out.out
+
+    assert repolint.main(["--root", str(REPO_ROOT)]) == 0
+    out = capsys.readouterr()
+    assert "repolint: clean" in out.out

@@ -1,0 +1,448 @@
+#!/usr/bin/env python3
+"""repolint: toolchain-free lint pass over the repo's cross-cutting
+invariants — the ones neither rustc nor clippy can see because they span
+files, languages, or documentation.
+
+Rules (each is a pure function over the source tree; no cargo, no
+rustc, no third-party packages):
+
+  R1 unsafe-safety-comment
+     Every `unsafe` block or `unsafe impl` in rust/src must carry a
+     `SAFETY:` comment on the same line, within the 3 preceding lines,
+     or anywhere in the contiguous `//` comment block directly above;
+     every `unsafe fn` / `unsafe trait` declaration must have a
+     `# Safety` section in its doc comment (callers discharge the
+     obligation, so it belongs in the API docs, not a code comment).
+
+  R2 sync-facade
+     No module under rust/src outside util/sync/ may name
+     `std::sync` or `std::thread` — imports and fully-qualified paths
+     both. Everything goes through `crate::util::sync`, which is what
+     makes the loom model swap (`--cfg loom`) sound: a stray direct
+     import would silently bypass the checker.
+
+  R3 magic-mirror
+     The on-disk format constants (magic bytes + version) in the Rust
+     writers must byte-match the executable python specs, which are
+     the source of truth for the formats; rust-only formats with no
+     python mirror are pinned here so a drive-by rename fails loudly.
+
+  R4 failpoint-catalog
+     Every failpoint site name used at a `check` / `maybe_panic` /
+     `retry_io` / `arm` / `arm_fatal` call site must be registered in
+     `failpoints::SITES` (a typo'd name silently never fires), and
+     every registered site must be documented in the EXPERIMENTS.md
+     catalog (the sweep harness's contract).
+
+Usage:
+    python3 python/tools/repolint.py [--root REPO_ROOT]
+
+Exit status 0 when clean; 1 with one `path:line: [rule] message` per
+finding otherwise. CI runs this in its own job and alongside the
+python spec suite; `python/tests/test_repolint.py` unit-tests every
+rule against seeded-violation fixtures.
+"""
+
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+from pathlib import Path
+from typing import Iterator, NamedTuple
+
+
+class Finding(NamedTuple):
+    path: str
+    line: int  # 1-based; 0 for file/tree-level findings
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+def rust_sources(root: Path, exclude_sync: bool = False) -> Iterator[Path]:
+    """All .rs files under rust/src, sorted for stable output."""
+    src = root / "rust" / "src"
+    for path in sorted(src.rglob("*.rs")):
+        if exclude_sync and (src / "util" / "sync") in path.parents:
+            continue
+        yield path
+
+
+def rel(root: Path, path: Path) -> str:
+    return str(path.relative_to(root))
+
+
+def strip_comment(line: str) -> str:
+    """Drop a trailing // comment (string-literal aware enough for this
+    codebase: `//` inside a string would need a quote open at that
+    point, which we approximate by quote parity)."""
+    idx = 0
+    while True:
+        idx = line.find("//", idx)
+        if idx < 0:
+            return line
+        if line.count('"', 0, idx) % 2 == 0:
+            return line[:idx]
+        idx += 2
+
+
+# ---------------------------------------------------------------------------
+# R1: unsafe needs SAFETY
+# ---------------------------------------------------------------------------
+
+# `unsafe` opening a block or an impl — not fn/trait declarations.
+UNSAFE_USE_RE = re.compile(r"\bunsafe\b(?!\s*(?:fn|trait)\b)")
+UNSAFE_DECL_RE = re.compile(r"\bunsafe\s+(?:fn|trait)\b")
+SAFETY_LOOKBACK = 3
+
+
+def check_unsafe_comments(root: Path) -> list[Finding]:
+    findings: list[Finding] = []
+    for path in rust_sources(root):
+        lines = path.read_text().splitlines()
+        for i, raw in enumerate(lines):
+            code = strip_comment(raw)
+            stripped = raw.lstrip()
+            if stripped.startswith(("//", "//!", "///")):
+                continue
+            if UNSAFE_DECL_RE.search(code):
+                if not _doc_block_has_safety_section(lines, i):
+                    findings.append(
+                        Finding(
+                            rel(root, path),
+                            i + 1,
+                            "unsafe-safety-comment",
+                            "`unsafe fn`/`unsafe trait` without a "
+                            "`# Safety` section in its doc comment",
+                        )
+                    )
+            elif UNSAFE_USE_RE.search(code):
+                if not _has_safety_comment(lines, i):
+                    findings.append(
+                        Finding(
+                            rel(root, path),
+                            i + 1,
+                            "unsafe-safety-comment",
+                            "`unsafe` without a `SAFETY:` comment on the "
+                            f"same line or the {SAFETY_LOOKBACK} preceding "
+                            "lines",
+                        )
+                    )
+    return findings
+
+
+def _has_safety_comment(lines: list[str], idx: int) -> bool:
+    """`SAFETY:` on the line itself, within the 3 preceding lines, or
+    anywhere in a contiguous `//` comment block ending directly above
+    (a long justification must not be penalized for its length)."""
+    window = lines[max(0, idx - SAFETY_LOOKBACK) : idx + 1]
+    if any("SAFETY:" in w for w in window):
+        return True
+    i = idx - 1
+    while i >= 0 and lines[i].lstrip().startswith("//"):
+        if "SAFETY:" in lines[i]:
+            return True
+        i -= 1
+    return False
+
+
+def _doc_block_has_safety_section(lines: list[str], decl_idx: int) -> bool:
+    """Walk the contiguous doc/attribute block above `decl_idx` looking
+    for a `# Safety` heading (a plain SAFETY: comment is accepted too —
+    some unsafe fns are private helpers with internal contracts)."""
+    i = decl_idx - 1
+    while i >= 0:
+        s = lines[i].lstrip()
+        if s.startswith("///") or s.startswith("#[") or s.startswith("//"):
+            if "# Safety" in s or "SAFETY:" in s:
+                return True
+            i -= 1
+        elif s == "":
+            # Blank line ends a doc block (rustdoc requires contiguity).
+            return False
+        else:
+            return False
+    return False
+
+
+# ---------------------------------------------------------------------------
+# R2: the sync facade is the only road to std::sync / std::thread
+# ---------------------------------------------------------------------------
+
+STD_SYNC_RE = re.compile(r"\bstd\s*::\s*(?:sync|thread)\b")
+
+
+def check_sync_facade(root: Path) -> list[Finding]:
+    findings: list[Finding] = []
+    for path in rust_sources(root, exclude_sync=True):
+        for i, raw in enumerate(path.read_text().splitlines()):
+            stripped = raw.lstrip()
+            if stripped.startswith(("//", "//!", "///")):
+                continue
+            if STD_SYNC_RE.search(strip_comment(raw)):
+                findings.append(
+                    Finding(
+                        rel(root, path),
+                        i + 1,
+                        "sync-facade",
+                        "direct std::sync/std::thread use outside "
+                        "util/sync — import from crate::util::sync so "
+                        "the loom model swap covers this code",
+                    )
+                )
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# R3: on-disk format constants mirror the python specs byte-exactly
+# ---------------------------------------------------------------------------
+
+class Mirror(NamedTuple):
+    label: str
+    rust_file: str
+    rust_re: str  # one capture group
+    spec_file: str | None  # None: rust-only, compare against `pinned`
+    spec_re: str | None
+    pinned: str | None
+
+
+MIRRORS: list[Mirror] = [
+    Mirror(
+        "FN2VGRF2 magic",
+        "rust/src/graph/store.rs",
+        r'MAGIC_V2:\s*&\[u8;\s*8\]\s*=\s*b"(\w{8})"',
+        "python/tests/test_graph_store_spec.py",
+        r'^MAGIC_V2\s*=\s*b"(\w{8})"',
+        None,
+    ),
+    Mirror(
+        "FN2VGRF2 version",
+        "rust/src/graph/store.rs",
+        r"const VERSION:\s*u32\s*=\s*(\d+)\s*;",
+        "python/tests/test_graph_store_spec.py",
+        r"^VERSION\s*=\s*(\d+)",
+        None,
+    ),
+    Mirror(
+        "FN2VCKP1 magic",
+        "rust/src/pregel/checkpoint.rs",
+        r'MAGIC:\s*&\[u8;\s*8\]\s*=\s*b"(\w{8})"',
+        "python/tests/test_checkpoint_spec.py",
+        r'^MAGIC\s*=\s*b"(\w{8})"',
+        None,
+    ),
+    Mirror(
+        "FN2VCKP1 version",
+        "rust/src/pregel/checkpoint.rs",
+        r"const CKP_VERSION:\s*u32\s*=\s*(\d+)\s*;",
+        "python/tests/test_checkpoint_spec.py",
+        r"^VERSION\s*=\s*(\d+)",
+        None,
+    ),
+    Mirror(
+        "FN2VEMB1 magic",
+        "rust/src/serve/store.rs",
+        r'MAGIC_EMB:\s*&\[u8;\s*8\]\s*=\s*b"(\w{8})"',
+        "python/tests/test_emb_store_spec.py",
+        r'^MAGIC_EMB\s*=\s*b"(\w{8})"',
+        None,
+    ),
+    Mirror(
+        "FN2VEMB1 version",
+        "rust/src/serve/store.rs",
+        r"const VERSION:\s*u32\s*=\s*(\d+)\s*;",
+        "python/tests/test_emb_store_spec.py",
+        r"^VERSION\s*=\s*(\d+)",
+        None,
+    ),
+    # Rust-only formats (no python spec yet): pin the literals so a
+    # rename or version bump trips the lint until the pin — and any
+    # compatibility story — is updated deliberately.
+    Mirror(
+        "FN2VIDX1 magic",
+        "rust/src/serve/hnsw.rs",
+        r'MAGIC_IDX:\s*&\[u8;\s*8\]\s*=\s*b"(\w{8})"',
+        None,
+        None,
+        "FN2VIDX1",
+    ),
+    Mirror(
+        "FN2VIDX1 version",
+        "rust/src/serve/hnsw.rs",
+        r"const IDX_VERSION:\s*u32\s*=\s*(\d+)\s*;",
+        None,
+        None,
+        "1",
+    ),
+    Mirror(
+        "FN2T frame magic",
+        "rust/src/pregel/transport.rs",
+        r'FRAME_MAGIC:\s*u32\s*=\s*u32::from_le_bytes\(\*b"(\w{4})"\)',
+        None,
+        None,
+        "FN2T",
+    ),
+]
+
+
+def check_magic_mirrors(root: Path, mirrors: list[Mirror] | None = None) -> list[Finding]:
+    findings: list[Finding] = []
+    for m in mirrors if mirrors is not None else MIRRORS:
+        rust_path = root / m.rust_file
+        if not rust_path.is_file():
+            findings.append(
+                Finding(m.rust_file, 0, "magic-mirror", f"{m.label}: rust file missing")
+            )
+            continue
+        rust_text = rust_path.read_text()
+        rust_match = re.search(m.rust_re, rust_text, re.MULTILINE)
+        if rust_match is None:
+            findings.append(
+                Finding(
+                    m.rust_file,
+                    0,
+                    "magic-mirror",
+                    f"{m.label}: declaration not found (pattern {m.rust_re!r}) — "
+                    "renamed or moved? update MIRRORS in repolint.py with the "
+                    "format-compatibility story",
+                )
+            )
+            continue
+        rust_val = rust_match.group(1)
+        rust_line = rust_text.count("\n", 0, rust_match.start()) + 1
+        if m.spec_file is None:
+            want, source = m.pinned, "repolint pin"
+            spec_desc = "the pinned literal"
+        else:
+            spec_path = root / m.spec_file
+            if not spec_path.is_file():
+                findings.append(
+                    Finding(m.spec_file, 0, "magic-mirror", f"{m.label}: spec file missing")
+                )
+                continue
+            spec_match = re.search(m.spec_re, spec_path.read_text(), re.MULTILINE)
+            if spec_match is None:
+                findings.append(
+                    Finding(
+                        m.spec_file,
+                        0,
+                        "magic-mirror",
+                        f"{m.label}: spec constant not found (pattern {m.spec_re!r})",
+                    )
+                )
+                continue
+            want, source = spec_match.group(1), m.spec_file
+            spec_desc = f"the python spec ({source})"
+        if rust_val != want:
+            findings.append(
+                Finding(
+                    m.rust_file,
+                    rust_line,
+                    "magic-mirror",
+                    f"{m.label}: rust declares {rust_val!r} but {spec_desc} "
+                    f"says {want!r} — the formats have drifted",
+                )
+            )
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# R4: failpoint site names are registered and documented
+# ---------------------------------------------------------------------------
+
+SITES_DECL_RE = re.compile(r'Site\s*\{\s*name:\s*"([\w.-]+)"')
+SITE_CALL_RE = re.compile(
+    r"\b(?:check|maybe_panic|retry_io|arm|arm_fatal)\(\s*\"([\w.-]+)\""
+)
+
+
+def registered_sites(root: Path) -> set[str]:
+    text = (root / "rust" / "src" / "util" / "failpoints.rs").read_text()
+    return set(SITES_DECL_RE.findall(text))
+
+
+def check_failpoint_catalog(root: Path) -> list[Finding]:
+    findings: list[Finding] = []
+    sites = registered_sites(root)
+    if not sites:
+        return [
+            Finding(
+                "rust/src/util/failpoints.rs",
+                0,
+                "failpoint-catalog",
+                "no sites parsed from the SITES registry",
+            )
+        ]
+    # Call sites must name a registered site (a typo never fires).
+    for path in rust_sources(root):
+        for i, raw in enumerate(path.read_text().splitlines()):
+            for name in SITE_CALL_RE.findall(strip_comment(raw)):
+                if name not in sites:
+                    findings.append(
+                        Finding(
+                            rel(root, path),
+                            i + 1,
+                            "failpoint-catalog",
+                            f"failpoint site {name!r} is not in "
+                            "failpoints::SITES — it will never fire",
+                        )
+                    )
+    # Every registered site is documented in the EXPERIMENTS catalog.
+    experiments = (root / "EXPERIMENTS.md").read_text()
+    for name in sorted(sites):
+        if name not in experiments:
+            findings.append(
+                Finding(
+                    "EXPERIMENTS.md",
+                    0,
+                    "failpoint-catalog",
+                    f"registered failpoint site {name!r} is missing from "
+                    "the EXPERIMENTS.md catalog",
+                )
+            )
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+ALL_RULES = [
+    check_unsafe_comments,
+    check_sync_facade,
+    check_magic_mirrors,
+    check_failpoint_catalog,
+]
+
+
+def run(root: Path) -> list[Finding]:
+    findings: list[Finding] = []
+    for rule in ALL_RULES:
+        findings.extend(rule(root))
+    return findings
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument(
+        "--root",
+        type=Path,
+        default=Path(__file__).resolve().parents[2],
+        help="repository root (default: two levels above this script)",
+    )
+    args = parser.parse_args(argv)
+    findings = run(args.root)
+    for f in findings:
+        print(f)
+    if findings:
+        print(f"repolint: {len(findings)} finding(s)", file=sys.stderr)
+        return 1
+    print("repolint: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

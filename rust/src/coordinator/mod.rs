@@ -42,10 +42,10 @@ use std::io;
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::PathBuf;
 use std::process::{Child, Command};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use crate::util::sync::{Arc, Mutex};
+use crate::util::sync::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::graph::partition::Partitioner;
@@ -312,7 +312,7 @@ impl Coordinator {
         for s in 0..shards {
             let (coord_end, shard_end) = ChanTransport::pair();
             let g = Arc::clone(graph);
-            let handle = std::thread::Builder::new()
+            let handle = crate::util::sync::thread::Builder::new()
                 .name(format!("fn2v-shard-{s}"))
                 .spawn(move || {
                     let _ = shard_serve(&g, s, shards, Box::new(shard_end));
@@ -405,7 +405,7 @@ impl Coordinator {
                             "timed out waiting for shard processes to connect".to_string(),
                         ));
                     }
-                    std::thread::sleep(Duration::from_millis(10));
+                    crate::util::sync::thread::sleep(Duration::from_millis(10));
                 }
                 Err(e) => return Err(launch_err(format!("accept shard connection: {e}"))),
             }
@@ -474,7 +474,7 @@ impl Coordinator {
             let rx = writer_rx[s].take().expect("one writer queue per shard");
             let etx = event_tx.clone();
             self.writer_threads.push(
-                std::thread::Builder::new()
+                crate::util::sync::thread::Builder::new()
                     .name(format!("fn2v-wr-{s}"))
                     .spawn(move || {
                         while let Ok(f) = rx.recv() {
@@ -489,7 +489,7 @@ impl Coordinator {
             let etx = event_tx.clone();
             let fwd: Vec<Sender<Frame>> = writers.clone();
             self.reader_threads.push(
-                std::thread::Builder::new()
+                crate::util::sync::thread::Builder::new()
                     .name(format!("fn2v-rd-{s}"))
                     .spawn(move || loop {
                         match reader.recv() {
@@ -856,7 +856,7 @@ impl Drop for Coordinator {
                 match child.try_wait() {
                     Ok(Some(_)) => break,
                     Ok(None) if Instant::now() < deadline => {
-                        std::thread::sleep(Duration::from_millis(10));
+                        crate::util::sync::thread::sleep(Duration::from_millis(10));
                     }
                     _ => {
                         let _ = child.kill();

@@ -282,7 +282,8 @@ impl RustSgns {
             return 0.0;
         }
         let mut dc = vec![0f32; self.dim];
-        // Safety: the tables are exclusively borrowed (`&mut self`) and
+        let pairs = parallel::PairBatch::new(centers, positives, negatives);
+        // SAFETY: the tables are exclusively borrowed (`&mut self`) and
         // every id in a batch is bounded by `num_vertices` (Corpus draws
         // from walk-visited vertices only).
         let total = unsafe {
@@ -290,9 +291,7 @@ impl RustSgns {
                 self.w_in.as_mut_ptr(),
                 self.w_out.as_mut_ptr(),
                 self.dim,
-                centers,
-                positives,
-                negatives,
+                pairs,
                 lr,
                 0..b,
                 &mut dc,
@@ -750,7 +749,7 @@ mod tests {
     use crate::gen::{labeled_community_graph, LabeledConfig};
     use crate::node2vec::{FnConfig, WalkRequest, WalkSession};
 
-    fn tiny_walks() -> (std::sync::Arc<crate::graph::Graph>, WalkSet) {
+    fn tiny_walks() -> (crate::util::sync::Arc<crate::graph::Graph>, WalkSet) {
         let lg = labeled_community_graph(&LabeledConfig::tiny(5));
         let cfg = FnConfig::new(1.0, 1.0, 3).with_walk_length(20);
         let session = WalkSession::builder(lg.graph.clone(), cfg).workers(4).build();

@@ -55,14 +55,16 @@
 //! `python/tests/test_sgns_parallel_spec.py`.
 
 use std::cell::UnsafeCell;
-use std::collections::{BTreeMap, VecDeque};
 use std::ops::Range;
-use std::sync::atomic::{AtomicU32, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
 
 use super::{sigmoid, softplus, Corpus, LossPoint, SgnsBackend, TrainConfig};
 use crate::util::error::Result;
 use crate::util::rng::stream;
+use crate::util::sync::atomic::{AtomicU32, Ordering};
+use crate::util::sync::pipeline::StepPipeline;
+use crate::util::sync::pool::WorkerPool;
+use crate::util::sync::queue::BoundedQueue;
+use crate::util::sync::{thread, Mutex};
 
 /// Parallel update discipline — see the module docs for the trade-off.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -165,6 +167,46 @@ pub(crate) fn scale_into(alpha: f32, x: &[f32], y: &mut [f32]) {
     }
 }
 
+/// One batch's `(center, positive, negatives)` index triples, passed to
+/// the kernels as a unit (the param-struct fix for what used to be a
+/// `clippy::too_many_arguments` allow).
+#[derive(Clone, Copy)]
+pub(crate) struct PairBatch<'a> {
+    pub centers: &'a [i32],
+    pub positives: &'a [i32],
+    pub negatives: &'a [i32],
+}
+
+impl<'a> PairBatch<'a> {
+    pub(crate) fn new(
+        centers: &'a [i32],
+        positives: &'a [i32],
+        negatives: &'a [i32],
+    ) -> PairBatch<'a> {
+        PairBatch {
+            centers,
+            positives,
+            negatives,
+        }
+    }
+
+    /// Pairs in the batch.
+    #[inline]
+    pub(crate) fn len(&self) -> usize {
+        self.centers.len()
+    }
+
+    /// Negatives per pair.
+    #[inline]
+    pub(crate) fn k(&self) -> usize {
+        if self.centers.is_empty() {
+            0
+        } else {
+            self.negatives.len() / self.centers.len()
+        }
+    }
+}
+
 /// One serial SGNS pass over `range` of the batch against flat tables.
 /// Returns the raw (not batch-normalized) f64 loss total.
 ///
@@ -180,25 +222,21 @@ pub(crate) fn scale_into(alpha: f32, x: &[f32], y: &mut [f32]) {
 /// ids in the batch slices must be in range. Exclusive access is the
 /// caller's contract — hogwild callers intentionally run this concurrently
 /// over overlapping rows and accept the benign data races.
-#[allow(clippy::too_many_arguments)]
 pub(crate) unsafe fn sgd_step_range(
     w_in: *mut f32,
     w_out: *mut f32,
     dim: usize,
-    centers: &[i32],
-    positives: &[i32],
-    negatives: &[i32],
+    pairs: PairBatch<'_>,
     lr: f32,
     range: Range<usize>,
     dc: &mut [f32],
 ) -> f64 {
     debug_assert_eq!(dc.len(), dim);
-    let b = centers.len();
-    let k = if b == 0 { 0 } else { negatives.len() / b };
+    let k = pairs.k();
     let mut total = 0f64;
     for i in range {
-        let c = centers[i] as usize;
-        let o = positives[i] as usize;
+        let c = pairs.centers[i] as usize;
+        let o = pairs.positives[i] as usize;
         let wc = std::slice::from_raw_parts_mut(w_in.add(c * dim), dim);
         // Positive pair.
         {
@@ -211,7 +249,7 @@ pub(crate) unsafe fn sgd_step_range(
         }
         // Negatives.
         for s in 0..k {
-            let nv = negatives[i * k + s] as usize;
+            let nv = pairs.negatives[i * k + s] as usize;
             let wn = std::slice::from_raw_parts_mut(w_out.add(nv * dim), dim);
             let neg = dot(wc, wn);
             let gn = sigmoid(neg);
@@ -239,7 +277,7 @@ pub struct EmbeddingMatrix {
     data: Box<[UnsafeCell<f32>]>,
 }
 
-// Safety: all mutation goes through raw pointers derived from the
+// SAFETY: all mutation goes through raw pointers derived from the
 // UnsafeCells under the mode disciplines documented on the module.
 unsafe impl Sync for EmbeddingMatrix {}
 
@@ -278,7 +316,8 @@ impl EmbeddingMatrix {
 
     #[inline]
     pub(crate) fn w_out_ptr(&self) -> *mut f32 {
-        // Safety: the allocation holds 2 * n * dim floats.
+        // SAFETY: the allocation holds 2 * n * dim floats, so the offset
+        // n * dim stays inside it.
         unsafe { self.base().add(self.num_vertices * self.dim) }
     }
 
@@ -286,11 +325,15 @@ impl EmbeddingMatrix {
     /// no per-row cloning). Only call between training steps: the view
     /// aliases the cells workers write through.
     pub fn w_in(&self) -> &[f32] {
+        // SAFETY: rows [0, n) of the allocation are n * dim initialized
+        // f32s; no worker writes between steps (documented contract).
         unsafe { std::slice::from_raw_parts(self.w_in_ptr(), self.num_vertices * self.dim) }
     }
 
     /// Flat row-major view of the output (context) embeddings.
     pub fn w_out(&self) -> &[f32] {
+        // SAFETY: rows [n, 2n) of the allocation are n * dim initialized
+        // f32s; no worker writes between steps (documented contract).
         unsafe { std::slice::from_raw_parts(self.w_out_ptr(), self.num_vertices * self.dim) }
     }
 
@@ -312,6 +355,9 @@ impl EmbeddingMatrix {
                 w_out.len()
             ));
         }
+        // SAFETY: both destinations are `len` in-bounds f32s (checked
+        // above), the sources don't alias them (distinct allocations),
+        // and `&mut self` rules out concurrent access through the cells.
         unsafe {
             std::ptr::copy_nonoverlapping(w_in.as_ptr(), self.w_in_ptr(), len);
             std::ptr::copy_nonoverlapping(w_out.as_ptr(), self.w_out_ptr(), len);
@@ -342,6 +388,12 @@ impl EmbeddingMatrix {
     /// # Safety
     /// Caller must hold exclusive write ownership of the row (sharded
     /// phase 2 guarantees it via `owner(v) = v % threads`).
+    //
+    // The `mut_from_ref` allow is sound, not a lint dodge: the `&mut`
+    // derives from `UnsafeCell` contents (the one legal interior-
+    // mutability route), the method is `unsafe`, and its contract —
+    // exclusive row ownership — is exactly the aliasing condition the
+    // lint cannot see. This is `UnsafeCell::get`-style API shape.
     #[inline]
     #[allow(clippy::mut_from_ref)]
     unsafe fn row_in_mut(&self, v: usize) -> &mut [f32] {
@@ -352,6 +404,8 @@ impl EmbeddingMatrix {
     ///
     /// # Safety
     /// As [`EmbeddingMatrix::row_in_mut`].
+    //
+    // Allow justified as on `row_in_mut`.
     #[inline]
     #[allow(clippy::mut_from_ref)]
     unsafe fn row_out_mut(&self, v: usize) -> &mut [f32] {
@@ -375,10 +429,12 @@ impl<T> Clone for RawSlice<T> {
 }
 impl<T> Copy for RawSlice<T> {}
 
-// Safety: workers write *disjoint* index ranges (the caller's contract on
+// SAFETY: workers write *disjoint* index ranges (the caller's contract on
 // `slice`), and the borrow the RawSlice was built from outlives the pool
-// dispatch (the submitting thread blocks in `Pool::run`).
+// dispatch (the submitting thread blocks in `WorkerPool::run`).
 unsafe impl<T: Send> Send for RawSlice<T> {}
+// SAFETY: as above — disjoint ranges make shared references across
+// threads safe.
 unsafe impl<T: Send> Sync for RawSlice<T> {}
 
 impl<T> RawSlice<T> {
@@ -399,132 +455,8 @@ impl<T> RawSlice<T> {
 }
 
 // ---------------------------------------------------------------------------
-// Persistent fork-join pool
-// ---------------------------------------------------------------------------
-
-/// Raw pointer to the current fork-join task; valid for exactly one epoch
-/// because the submitter blocks in [`Pool::run`] until every worker is
-/// done.
-#[derive(Clone, Copy)]
-struct TaskPtr(*const (dyn Fn(usize) + Sync));
-// Safety: see the validity argument above; the pointee is Sync.
-unsafe impl Send for TaskPtr {}
-
-struct PoolCtl {
-    epoch: u64,
-    task: Option<TaskPtr>,
-    remaining: usize,
-    panicked: bool,
-    shutdown: bool,
-}
-
-struct PoolShared {
-    ctl: Mutex<PoolCtl>,
-    go: Condvar,
-    done: Condvar,
-}
-
-/// `threads` parked workers; `run(f)` executes `f(worker_index)` on every
-/// worker and returns when all have finished — one fork-join barrier,
-/// reused thousands of times per training run without respawning.
-struct Pool {
-    shared: Arc<PoolShared>,
-    handles: Vec<std::thread::JoinHandle<()>>,
-}
-
-impl Pool {
-    fn new(threads: usize) -> Pool {
-        let shared = Arc::new(PoolShared {
-            ctl: Mutex::new(PoolCtl {
-                epoch: 0,
-                task: None,
-                remaining: 0,
-                panicked: false,
-                shutdown: false,
-            }),
-            go: Condvar::new(),
-            done: Condvar::new(),
-        });
-        let handles = (0..threads)
-            .map(|idx| {
-                let shared = shared.clone();
-                std::thread::Builder::new()
-                    .name(format!("sgns-worker-{idx}"))
-                    .spawn(move || Pool::worker_loop(&shared, idx))
-                    .expect("spawn sgns worker")
-            })
-            .collect();
-        Pool { shared, handles }
-    }
-
-    fn worker_loop(shared: &PoolShared, idx: usize) {
-        let mut seen = 0u64;
-        loop {
-            let task = {
-                let mut ctl = shared.ctl.lock().unwrap();
-                loop {
-                    if ctl.shutdown {
-                        return;
-                    }
-                    if ctl.epoch != seen {
-                        seen = ctl.epoch;
-                        break ctl.task.expect("task published with epoch");
-                    }
-                    ctl = shared.go.wait(ctl).unwrap();
-                }
-            };
-            // Safety: the task pointer stays valid until `remaining` hits
-            // zero, which cannot happen before this call returns.
-            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
-                (*task.0)(idx)
-            }));
-            let mut ctl = shared.ctl.lock().unwrap();
-            if outcome.is_err() {
-                ctl.panicked = true;
-            }
-            ctl.remaining -= 1;
-            if ctl.remaining == 0 {
-                shared.done.notify_all();
-            }
-        }
-    }
-
-    /// Run `task(worker)` on every worker; blocks until all finish.
-    /// Panics (on the caller) if any worker panicked.
-    fn run(&self, task: &(dyn Fn(usize) + Sync)) {
-        let mut ctl = self.shared.ctl.lock().unwrap();
-        debug_assert_eq!(ctl.remaining, 0, "Pool::run reentered");
-        ctl.task = Some(TaskPtr(task as *const _));
-        ctl.remaining = self.handles.len();
-        ctl.epoch += 1;
-        self.shared.go.notify_all();
-        while ctl.remaining > 0 {
-            ctl = self.shared.done.wait(ctl).unwrap();
-        }
-        ctl.task = None;
-        if ctl.panicked {
-            ctl.panicked = false;
-            drop(ctl);
-            panic!("ParallelSgns worker panicked");
-        }
-    }
-}
-
-impl Drop for Pool {
-    fn drop(&mut self) {
-        {
-            let mut ctl = self.shared.ctl.lock().unwrap();
-            ctl.shutdown = true;
-            self.shared.go.notify_all();
-        }
-        for h in self.handles.drain(..) {
-            let _ = h.join();
-        }
-    }
-}
-
-// ---------------------------------------------------------------------------
-// Batch pipeline plumbing
+// Batch pipeline plumbing (the pool/queue/pipeline primitives themselves
+// live in `crate::util::sync`, where they are shared and model-checked)
 // ---------------------------------------------------------------------------
 
 /// One pre-sampled SGNS batch.
@@ -541,142 +473,6 @@ impl Batch {
             positives: vec![0i32; b],
             negatives: vec![0i32; b * k],
         }
-    }
-}
-
-/// Bounded SPSC queue for the hogwild pipeline: one producer fills it (a
-/// worker's private batch sequence), one SGD worker drains it. Push and
-/// pop counts match exactly on the happy path; `close` exists purely for
-/// panic unwinding — it wakes both sides so a dead peer cannot leave the
-/// other blocked forever (pop panics, push becomes a no-op).
-struct BoundedQueue<T> {
-    q: Mutex<QueueState<T>>,
-    cap: usize,
-    space: Condvar,
-    item: Condvar,
-}
-
-struct QueueState<T> {
-    q: VecDeque<T>,
-    closed: bool,
-}
-
-impl<T> BoundedQueue<T> {
-    fn new(cap: usize) -> BoundedQueue<T> {
-        BoundedQueue {
-            q: Mutex::new(QueueState {
-                q: VecDeque::with_capacity(cap),
-                closed: false,
-            }),
-            cap,
-            space: Condvar::new(),
-            item: Condvar::new(),
-        }
-    }
-
-    fn push(&self, x: T) {
-        let mut g = self.q.lock().unwrap();
-        while g.q.len() >= self.cap && !g.closed {
-            g = self.space.wait(g).unwrap();
-        }
-        if g.closed {
-            return;
-        }
-        g.q.push_back(x);
-        self.item.notify_one();
-    }
-
-    fn pop(&self) -> T {
-        let mut g = self.q.lock().unwrap();
-        loop {
-            if let Some(x) = g.q.pop_front() {
-                self.space.notify_one();
-                return x;
-            }
-            if g.closed {
-                panic!("hogwild batch queue closed by a failed peer");
-            }
-            g = self.item.wait(g).unwrap();
-        }
-    }
-
-    fn close(&self) {
-        let mut g = self.q.lock().unwrap();
-        g.closed = true;
-        self.space.notify_all();
-        self.item.notify_all();
-    }
-}
-
-/// In-order step delivery for the sharded pipeline: producers claim step
-/// tickets, sample out of order, and insert; the consumer takes steps
-/// strictly in sequence. `await_window` bounds the lookahead so at most
-/// [`PIPELINE_DEPTH`] batches are ever resident.
-struct StepPipeline {
-    state: Mutex<StepState>,
-    cv: Condvar,
-    depth: u32,
-}
-
-struct StepState {
-    ready: BTreeMap<u32, Batch>,
-    consumed: u32,
-    /// Set on unwind (either side) so the other side never blocks on a
-    /// dead peer: `await_window` returns `false`, `take` panics.
-    closed: bool,
-}
-
-impl StepPipeline {
-    fn new(depth: u32) -> StepPipeline {
-        StepPipeline {
-            state: Mutex::new(StepState {
-                ready: BTreeMap::new(),
-                consumed: 0,
-                closed: false,
-            }),
-            cv: Condvar::new(),
-            depth,
-        }
-    }
-
-    /// Block until step `s` is within the lookahead window. Returns
-    /// `false` if the pipeline closed (consumer gone) — stop producing.
-    fn await_window(&self, s: u32) -> bool {
-        let mut g = self.state.lock().unwrap();
-        while s >= g.consumed.saturating_add(self.depth) && !g.closed {
-            g = self.cv.wait(g).unwrap();
-        }
-        !g.closed
-    }
-
-    fn insert(&self, s: u32, batch: Batch) {
-        let mut g = self.state.lock().unwrap();
-        if !g.closed {
-            g.ready.insert(s, batch);
-        }
-        self.cv.notify_all();
-    }
-
-    /// Take step `s` (the consumer calls with s = 0, 1, 2, ... in order).
-    fn take(&self, s: u32) -> Batch {
-        let mut g = self.state.lock().unwrap();
-        loop {
-            if let Some(b) = g.ready.remove(&s) {
-                g.consumed = s + 1;
-                self.cv.notify_all();
-                return b;
-            }
-            if g.closed {
-                panic!("sharded batch pipeline closed by a failed producer");
-            }
-            g = self.cv.wait(g).unwrap();
-        }
-    }
-
-    fn close(&self) {
-        let mut g = self.state.lock().unwrap();
-        g.closed = true;
-        self.cv.notify_all();
     }
 }
 
@@ -721,7 +517,7 @@ pub struct ParallelSgns {
     matrix: EmbeddingMatrix,
     mode: TrainMode,
     threads: usize,
-    pool: Option<Pool>,
+    pool: Option<WorkerPool>,
     shard: ShardScratch,
     /// Serial-path center-gradient scratch (threads == 1).
     dc: Vec<f32>,
@@ -740,7 +536,7 @@ impl ParallelSgns {
             matrix: EmbeddingMatrix::new(num_vertices, dim, seed),
             mode,
             threads,
-            pool: (threads > 1).then(|| Pool::new(threads)),
+            pool: (threads > 1).then(|| WorkerPool::new(threads)),
             shard: ShardScratch::default(),
             dc: vec![0f32; dim],
         }
@@ -805,14 +601,15 @@ impl ParallelSgns {
                 self.matrix.w_out_ptr(),
                 self.matrix.dim(),
             );
+            // SAFETY: the tables hold n * dim f32s each, ids come from
+            // the corpus (all < n), and `&mut self` gives this thread
+            // exclusive access.
             let total = unsafe {
                 sgd_step_range(
                     w_in,
                     w_out,
                     d,
-                    centers,
-                    positives,
-                    negatives,
+                    PairBatch::new(centers, positives, negatives),
                     lr,
                     0..b,
                     &mut self.dc,
@@ -831,24 +628,23 @@ impl ParallelSgns {
             let hi = (t + 1) * b / t_count;
             let d = matrix.dim();
             let mut dc = vec![0f32; d];
-            // Safety: contiguous pair chunks are disjoint; row updates race
+            // SAFETY: contiguous pair chunks are disjoint; row updates race
             // across threads by design (hogwild).
             let total = unsafe {
                 sgd_step_range(
                     matrix.w_in_ptr(),
                     matrix.w_out_ptr(),
                     d,
-                    centers,
-                    positives,
-                    negatives,
+                    PairBatch::new(centers, positives, negatives),
                     lr,
                     lo..hi,
                     &mut dc,
                 )
             };
+            // SAFETY: worker t writes only index t — disjoint ranges.
             unsafe { partials.slice(t..t + 1)[0] = total };
         });
-        // Safety: pool.run returned, workers are parked again.
+        // SAFETY: pool.run returned, workers are parked again.
         let total: f64 = unsafe { partials.slice(0..t_count) }.iter().sum();
         (total / b as f64) as f32
     }
@@ -869,22 +665,21 @@ impl ParallelSgns {
         self.shard.ensure(b, k, d);
         let matrix = &self.matrix;
         let t_count = self.threads;
+        let pairs = PairBatch::new(centers, positives, negatives);
         {
-            let gp = RawSlice::new(&mut self.shard.gp);
-            let gn = RawSlice::new(&mut self.shard.gn);
-            let cin = RawSlice::new(&mut self.shard.cin);
-            let dcs = RawSlice::new(&mut self.shard.dc);
-            let loss = RawSlice::new(&mut self.shard.loss);
+            let scratch = ShardSlices {
+                gp: RawSlice::new(&mut self.shard.gp),
+                gn: RawSlice::new(&mut self.shard.gn),
+                cin: RawSlice::new(&mut self.shard.cin),
+                dcs: RawSlice::new(&mut self.shard.dc),
+                loss: RawSlice::new(&mut self.shard.loss),
+            };
             let phase1 = |t: usize| {
                 let lo = t * b / t_count;
                 let hi = (t + 1) * b / t_count;
-                // Safety: per-pair scratch regions are disjoint across the
+                // SAFETY: per-pair scratch regions are disjoint across the
                 // contiguous chunks; the matrix is only *read* in phase 1.
-                unsafe {
-                    sharded_grad_range(
-                        matrix, centers, positives, negatives, k, lo..hi, gp, gn, cin, dcs, loss,
-                    )
-                };
+                unsafe { sharded_grad_range(matrix, pairs, k, lo..hi, scratch) };
             };
             match &self.pool {
                 Some(pool) => pool.run(&phase1),
@@ -892,20 +687,16 @@ impl ParallelSgns {
             }
         }
         // Barrier passed: scratch is fully written; apply owned rows.
-        let (gp, gn, cin, dcs) = (
-            &self.shard.gp[..b],
-            &self.shard.gn[..b * k],
-            &self.shard.cin[..b * d],
-            &self.shard.dc[..b * d],
-        );
+        let reads = ShardReads {
+            gp: &self.shard.gp[..b],
+            gn: &self.shard.gn[..b * k],
+            cin: &self.shard.cin[..b * d],
+            dcs: &self.shard.dc[..b * d],
+        };
         let phase2 = |t: usize| {
-            // Safety: each row is written by exactly one thread
+            // SAFETY: each row is written by exactly one thread
             // (`owner(v) = v % t_count`), in global pair order.
-            unsafe {
-                sharded_apply_owned(
-                    matrix, centers, positives, negatives, k, lr, t_count, t, gp, gn, cin, dcs,
-                )
-            };
+            unsafe { sharded_apply_owned(matrix, pairs, k, lr, t_count, t, reads) };
         };
         match &self.pool {
             Some(pool) => pool.run(&phase2),
@@ -995,7 +786,7 @@ impl ParallelSgns {
         let matrix = &self.matrix;
         let pool = self.pool.as_ref().expect("pool exists for threads > 1");
         let (queues, share) = (&queues, &share);
-        std::thread::scope(|sc| {
+        thread::scope(|sc| {
             for p in 0..producers {
                 sc.spawn(move || {
                     // Producer p owns workers t ≡ p (mod producers) and
@@ -1050,11 +841,16 @@ impl ParallelSgns {
                     let frac = g as f32 / steps.max(1) as f32;
                     let lr = cfg.lr_start + (cfg.lr_end - cfg.lr_start) * frac;
                     let bt = queues[t].pop();
-                    // Safety: hogwild — racy row updates by design.
+                    // SAFETY: hogwild — racy row updates by design.
                     let total = unsafe {
                         sgd_step_range(
-                            w_in, w_out, d, &bt.centers, &bt.positives, &bt.negatives, lr,
-                            0..batch, &mut dc,
+                            w_in,
+                            w_out,
+                            d,
+                            PairBatch::new(&bt.centers, &bt.positives, &bt.negatives),
+                            lr,
+                            0..batch,
+                            &mut dc,
                         )
                     };
                     if t == 0
@@ -1097,7 +893,7 @@ impl ParallelSgns {
         let next = AtomicU32::new(0);
         let mut curve = Vec::new();
         let (pipeline_ref, next_ref) = (&pipeline, &next);
-        std::thread::scope(|sc| {
+        thread::scope(|sc| {
             for _ in 0..producers {
                 sc.spawn(move || {
                     let produce = || loop {
@@ -1177,6 +973,27 @@ impl SgnsBackend for ParallelSgns {
     }
 }
 
+/// The sharded phase-1 scratch regions as pool-crossing raw slices,
+/// passed to [`sharded_grad_range`] as a unit.
+#[derive(Clone, Copy)]
+struct ShardSlices {
+    gp: RawSlice<f32>,
+    gn: RawSlice<f32>,
+    cin: RawSlice<f32>,
+    dcs: RawSlice<f32>,
+    loss: RawSlice<f64>,
+}
+
+/// The same scratch, frozen after the phase barrier, read by
+/// [`sharded_apply_owned`].
+#[derive(Clone, Copy)]
+struct ShardReads<'a> {
+    gp: &'a [f32],
+    gn: &'a [f32],
+    cin: &'a [f32],
+    dcs: &'a [f32],
+}
+
 /// Sharded phase 1: for each pair in `range`, compute the gradient
 /// coefficients, per-pair loss, the frozen center row snapshot, and the
 /// center gradient — all against the start-of-step matrix.
@@ -1184,44 +1001,37 @@ impl SgnsBackend for ParallelSgns {
 /// # Safety
 /// `range`s of concurrent callers must be disjoint; no thread may write
 /// the matrix while any phase-1 call runs.
-#[allow(clippy::too_many_arguments)]
 unsafe fn sharded_grad_range(
     m: &EmbeddingMatrix,
-    centers: &[i32],
-    positives: &[i32],
-    negatives: &[i32],
+    pairs: PairBatch<'_>,
     k: usize,
     range: Range<usize>,
-    gp: RawSlice<f32>,
-    gn: RawSlice<f32>,
-    cin: RawSlice<f32>,
-    dcs: RawSlice<f32>,
-    loss: RawSlice<f64>,
+    scratch: ShardSlices,
 ) {
     let d = m.dim();
     for i in range {
-        let c = centers[i] as usize;
-        let o = positives[i] as usize;
+        let c = pairs.centers[i] as usize;
+        let o = pairs.positives[i] as usize;
         let wc = m.row_in_ref(c);
-        let ci = cin.slice(i * d..(i + 1) * d);
+        let ci = scratch.cin.slice(i * d..(i + 1) * d);
         ci.copy_from_slice(wc);
-        let dc = dcs.slice(i * d..(i + 1) * d);
+        let dc = scratch.dcs.slice(i * d..(i + 1) * d);
         let wo = m.row_out_ref(o);
         let pos = dot(wc, wo);
         let g = sigmoid(pos) - 1.0;
-        gp.slice(i..i + 1)[0] = g;
+        scratch.gp.slice(i..i + 1)[0] = g;
         let mut l = softplus(-pos) as f64;
         scale_into(g, wo, dc);
         for s in 0..k {
-            let nv = negatives[i * k + s] as usize;
+            let nv = pairs.negatives[i * k + s] as usize;
             let wn = m.row_out_ref(nv);
             let neg = dot(wc, wn);
             let g = sigmoid(neg);
-            gn.slice(i * k + s..i * k + s + 1)[0] = g;
+            scratch.gn.slice(i * k + s..i * k + s + 1)[0] = g;
             l += softplus(neg) as f64;
             axpy(g, wn, dc);
         }
-        loss.slice(i..i + 1)[0] = l;
+        scratch.loss.slice(i..i + 1)[0] = l;
     }
 }
 
@@ -1233,38 +1043,32 @@ unsafe fn sharded_grad_range(
 /// # Safety
 /// Caller must run phase 1 to completion first (full barrier) and give
 /// each thread a distinct `t < t_count`.
-#[allow(clippy::too_many_arguments)]
 unsafe fn sharded_apply_owned(
     m: &EmbeddingMatrix,
-    centers: &[i32],
-    positives: &[i32],
-    negatives: &[i32],
+    pairs: PairBatch<'_>,
     k: usize,
     lr: f32,
     t_count: usize,
     t: usize,
-    gp: &[f32],
-    gn: &[f32],
-    cin: &[f32],
-    dcs: &[f32],
+    reads: ShardReads<'_>,
 ) {
     let d = m.dim();
-    let b = centers.len();
+    let b = pairs.len();
     for i in 0..b {
-        let c = centers[i] as usize;
-        let o = positives[i] as usize;
-        let ci = &cin[i * d..(i + 1) * d];
+        let c = pairs.centers[i] as usize;
+        let o = pairs.positives[i] as usize;
+        let ci = &reads.cin[i * d..(i + 1) * d];
         if shard_owner(o, t_count) == t {
-            axpy(-lr * gp[i], ci, m.row_out_mut(o));
+            axpy(-lr * reads.gp[i], ci, m.row_out_mut(o));
         }
         for s in 0..k {
-            let nv = negatives[i * k + s] as usize;
+            let nv = pairs.negatives[i * k + s] as usize;
             if shard_owner(nv, t_count) == t {
-                axpy(-lr * gn[i * k + s], ci, m.row_out_mut(nv));
+                axpy(-lr * reads.gn[i * k + s], ci, m.row_out_mut(nv));
             }
         }
         if shard_owner(c, t_count) == t {
-            axpy(-lr, &dcs[i * d..(i + 1) * d], m.row_in_mut(c));
+            axpy(-lr, &reads.dcs[i * d..(i + 1) * d], m.row_in_mut(c));
         }
     }
 }
@@ -1274,7 +1078,6 @@ mod tests {
     use super::super::RustSgns;
     use super::*;
     use crate::util::rng::Xoshiro256pp;
-    use std::sync::atomic::AtomicUsize;
 
     #[test]
     fn matrix_init_matches_oracle_bitwise() {
@@ -1282,78 +1085,6 @@ mod tests {
         let m = EmbeddingMatrix::new(37, 8, 99);
         assert_eq!(m.w_in(), &oracle.w_in[..]);
         assert_eq!(m.w_out(), &oracle.w_out[..]);
-    }
-
-    #[test]
-    fn pool_runs_every_worker_every_epoch() {
-        let pool = Pool::new(4);
-        let hits = AtomicUsize::new(0);
-        for _ in 0..50 {
-            pool.run(&|_t| {
-                hits.fetch_add(1, Ordering::SeqCst);
-            });
-        }
-        assert_eq!(hits.load(Ordering::SeqCst), 200);
-    }
-
-    #[test]
-    fn pool_propagates_worker_panics() {
-        let pool = Pool::new(2);
-        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            pool.run(&|t| {
-                if t == 1 {
-                    panic!("boom");
-                }
-            });
-        }));
-        assert!(caught.is_err());
-        // The pool stays usable afterwards.
-        let hits = AtomicUsize::new(0);
-        pool.run(&|_t| {
-            hits.fetch_add(1, Ordering::SeqCst);
-        });
-        assert_eq!(hits.load(Ordering::SeqCst), 2);
-    }
-
-    #[test]
-    fn bounded_queue_fifo_within_capacity() {
-        let q = BoundedQueue::new(4);
-        for i in 0..4 {
-            q.push(i);
-        }
-        for i in 0..4 {
-            assert_eq!(q.pop(), i);
-        }
-    }
-
-    #[test]
-    fn step_pipeline_delivers_in_order_despite_insert_order() {
-        let p = StepPipeline::new(8);
-        for s in [3u32, 1, 0, 2] {
-            assert!(p.await_window(s), "open pipeline must admit in-window steps");
-            p.insert(s, Batch::new(1, 1));
-        }
-        for s in 0..4 {
-            let _ = p.take(s);
-        }
-        assert_eq!(p.state.lock().unwrap().consumed, 4);
-        // Closing releases producers: an out-of-window await returns
-        // immediately with `false` instead of blocking.
-        p.close();
-        assert!(!p.await_window(1_000_000));
-    }
-
-    #[test]
-    fn closed_queue_unblocks_both_sides() {
-        let q: BoundedQueue<u32> = BoundedQueue::new(2);
-        q.push(1);
-        q.close();
-        // Push after close is a no-op; the buffered item still drains.
-        q.push(2);
-        assert_eq!(q.pop(), 1);
-        // A further pop must fail loudly, not block forever.
-        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| q.pop()));
-        assert!(res.is_err());
     }
 
     fn toy_batch(n: usize, b: usize, k: usize, seed: u64) -> (Vec<i32>, Vec<i32>, Vec<i32>) {
@@ -1410,7 +1141,10 @@ mod tests {
         }
     }
 
+    // Hogwild races on matrix rows by design; Miri flags them as UB, so
+    // the determinism-free mode is covered by TSan/conformance instead.
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn hogwild_multithread_step_trains_without_corruption() {
         let n = 40;
         let mut par = ParallelSgns::new(n, 16, 3, 4, TrainMode::Hogwild);

@@ -1,6 +1,6 @@
 //! Shared experiment plumbing: named graphs, engine runners, scale modes.
 
-use std::sync::Arc;
+use crate::util::sync::Arc;
 
 use crate::baselines::cnode2vec::{CNode2Vec, CNode2VecError};
 use crate::baselines::spark_sim::{RddError, SparkNode2Vec};
@@ -92,14 +92,14 @@ pub fn remap_through_store(graph: &Graph) -> Result<Graph, crate::graph::StoreEr
     // Unique per spill (not just per process): two live graphs must never
     // share a path, or `File::create` would truncate an inode a still-live
     // mapping points at.
-    static SPILL_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    static SPILL_SEQ: crate::util::sync::atomic::AtomicU64 = crate::util::sync::atomic::AtomicU64::new(0);
     let dir = std::env::temp_dir().join("fastn2v-store");
     std::fs::create_dir_all(&dir)
         .map_err(|e| StoreError::io(format!("create {}", dir.display()), e))?;
     let path = dir.join(format!(
         "spill-{}-{}.fn2v",
         std::process::id(),
-        SPILL_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+        SPILL_SEQ.fetch_add(1, crate::util::sync::atomic::Ordering::Relaxed)
     ));
     write_v2(graph, &path)?;
     let g = open_graph(&path, &OpenOptions::mapped());

@@ -503,7 +503,7 @@ fn cli_inner(raw: Vec<String>) -> Result<(), String> {
             // --mmap: labels stay with the generator, the topology is
             // round-tripped through the FN2VGRF2 store and served mapped.
             let graph = if args.has_switch("mmap") {
-                std::sync::Arc::new(
+                crate::util::sync::Arc::new(
                     common::remap_through_store(&lg.graph).map_err(|e| e.to_string())?,
                 )
             } else {
@@ -809,7 +809,7 @@ fn serve_query(args: &Args) -> Result<(), String> {
         let t = std::time::Instant::now();
         let (mut ok, mut overloaded, mut rejected) = (0usize, 0usize, 0usize);
         let mut first: Option<crate::serve::ServeResponse> = None;
-        std::thread::scope(|s| -> Result<(), String> {
+        crate::util::sync::thread::scope(|s| -> Result<(), String> {
             let handles: Vec<_> = chunks
                 .into_iter()
                 .map(|chunk| {
@@ -1269,7 +1269,7 @@ mod cli_tests {
         let sock = dir.join("serve.sock");
         let sock_s = sock.to_str().unwrap().to_string();
         let (embs_c, sock_c) = (embs.clone(), sock_s.clone());
-        let daemon = std::thread::spawn(move || {
+        let daemon = crate::util::sync::thread::spawn(move || {
             run(&[
                 "serve",
                 "--emb",
@@ -1285,7 +1285,7 @@ mod cli_tests {
             if sock.exists() {
                 break;
             }
-            std::thread::sleep(std::time::Duration::from_millis(25));
+            crate::util::sync::thread::sleep(std::time::Duration::from_millis(25));
         }
         assert!(sock.exists(), "daemon did not bind its socket in time");
         // NN queries fan over two pipelined connections; walk comes off the

@@ -189,7 +189,7 @@ impl SessionAmortization {
 /// both. Walks are asserted identical between the two paths (preparation
 /// must never change results), so the delta is pure amortized setup.
 pub fn session_amortization(
-    graph: &std::sync::Arc<Graph>,
+    graph: &crate::util::sync::Arc<Graph>,
     workers: usize,
     cfg: &FnConfig,
     queries: usize,
@@ -282,7 +282,7 @@ mod tests {
 
     #[test]
     fn session_amortization_paths_agree() {
-        let g = std::sync::Arc::new(crate::gen::skew_graph(
+        let g = crate::util::sync::Arc::new(crate::gen::skew_graph(
             &crate::gen::GenConfig::new(1 << 9, 8, 3),
             2.0,
         ));

@@ -62,7 +62,7 @@ impl LabeledConfig {
 /// (plain `&lg.graph` callers keep working through deref coercion).
 #[derive(Clone, Debug)]
 pub struct LabeledGraph {
-    pub graph: std::sync::Arc<Graph>,
+    pub graph: crate::util::sync::Arc<Graph>,
     /// `labels[v]` = sorted community ids of vertex `v` (non-empty).
     pub labels: Vec<Vec<u16>>,
     pub num_labels: usize,

@@ -113,7 +113,7 @@ pub fn rmat_graph_edges(
 ) -> Graph {
     let n = cfg.num_vertices as u64;
     let levels = (64 - (n - 1).leading_zeros()).max(1);
-    let nthreads = std::thread::available_parallelism()
+    let nthreads = crate::util::sync::thread::available_parallelism()
         .map(|p| p.get())
         .unwrap_or(4)
         .min(16)
@@ -121,7 +121,7 @@ pub fn rmat_graph_edges(
     // Deterministic chunking: fixed chunk count regardless of nthreads.
     let chunks: u64 = 64;
     let per_chunk = num_edges.div_ceil(chunks);
-    let chunk_edges: Vec<Vec<(VertexId, VertexId)>> = std::thread::scope(|scope| {
+    let chunk_edges: Vec<Vec<(VertexId, VertexId)>> = crate::util::sync::thread::scope(|scope| {
         let mut handles = Vec::new();
         for t in 0..nthreads as u64 {
             let params = params;

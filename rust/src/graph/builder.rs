@@ -97,8 +97,8 @@ impl GraphBuilder {
     /// [`GraphBuilder::build`] into an `Arc<Graph>` — the ownership shape
     /// a [`WalkSession`](crate::node2vec::WalkSession) takes, so a loaded
     /// graph can back many concurrent sessions/queries without copies.
-    pub fn build_shared(self) -> std::sync::Arc<Graph> {
-        std::sync::Arc::new(self.build())
+    pub fn build_shared(self) -> crate::util::sync::Arc<Graph> {
+        crate::util::sync::Arc::new(self.build())
     }
 
     /// [`GraphBuilder::build`], plus a degree-aware partitioner over the

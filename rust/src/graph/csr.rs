@@ -13,7 +13,7 @@
 //! over the static edge weights, O(Σd) total memory, built once and shared
 //! (lazily, behind an `Arc<OnceLock>`) across engines, rounds and clones.
 
-use std::sync::{Arc, OnceLock};
+use crate::util::sync::{Arc, OnceLock};
 
 use crate::util::alias::AliasTable;
 use crate::util::rng::Xoshiro256pp;
@@ -482,7 +482,7 @@ mod tests {
         assert_eq!(t.memory_bytes(), 0);
         // Shared across clones and repeat calls.
         let t2 = g.clone().first_order_tables();
-        assert!(std::sync::Arc::ptr_eq(&t, &t2));
+        assert!(crate::util::sync::Arc::ptr_eq(&t, &t2));
     }
 
     #[test]

@@ -38,7 +38,7 @@
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
-use std::sync::Arc;
+use crate::util::sync::Arc;
 
 use super::csr::{Graph, VertexId};
 

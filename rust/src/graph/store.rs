@@ -54,7 +54,7 @@
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::{Path, PathBuf};
-use std::sync::Arc;
+use crate::util::sync::Arc;
 
 use crate::util::mmap::Mmap;
 
@@ -83,8 +83,12 @@ pub(crate) const DECODE_CHUNK_BYTES: usize = 1 << 20;
 /// Implementors must be valid for every bit pattern of their size and
 /// contain no padding, pointers, or interior mutability.
 pub unsafe trait Pod: Copy + std::fmt::Debug + 'static {}
+// SAFETY: u32 is valid for all bit patterns, padding-free, pointer-free.
 unsafe impl Pod for u32 {}
+// SAFETY: u64 is valid for all bit patterns, padding-free, pointer-free.
 unsafe impl Pod for u64 {}
+// SAFETY: f32 is valid for all bit patterns (NaNs included),
+// padding-free, pointer-free.
 unsafe impl Pod for f32 {}
 
 /// One CSR array of a [`Graph`]: `Owned` heap memory (built graphs, v1
@@ -662,7 +666,7 @@ pub fn write_v2(graph: &Graph, path: &Path) -> Result<(), StoreError> {
 /// hand an in-memory graph to shard processes that must each reopen
 /// their own copy; the caller owns removal.
 pub fn spill_v2_temp(graph: &Graph, dir: &Path) -> Result<PathBuf, StoreError> {
-    use std::sync::atomic::{AtomicU64, Ordering};
+    use crate::util::sync::atomic::{AtomicU64, Ordering};
     static SPILL_SEQ: AtomicU64 = AtomicU64::new(0);
     let name = format!(
         "fn2v-spill-{}-{}.grf",
@@ -858,7 +862,11 @@ mod tests {
         assert_eq!(g2.storage(), crate::graph::StorageKind::Owned);
     }
 
+    // Ignored under Miri: the mapped open path is raw mmap(2) FFI,
+    // which Miri cannot interpret (the owned round-trip test covers the
+    // decode logic there).
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn v2_round_trip_mapped() {
         if !Mmap::supported() {
             eprintln!("skipping: mmap unsupported on this target");
@@ -957,7 +965,9 @@ mod tests {
         assert_eq!(g2.num_arcs(), 0);
     }
 
+    // Ignored under Miri: builds sections over a real mmap(2) mapping.
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn section_misalignment_is_typed_error() {
         if !Mmap::supported() {
             eprintln!("skipping: mmap unsupported on this target");

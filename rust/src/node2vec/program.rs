@@ -26,8 +26,8 @@
 //! are bit-identical across worker counts, variants (exact ones), and the
 //! single-threaded reference walker in [`super::reference`].
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::Arc;
 
 use crate::graph::{Graph, VertexId};
 use crate::pregel::checkpoint::{ByteReader, Persist};
@@ -512,6 +512,8 @@ impl FnProgram {
 
     /// Sample step `idx` at the current vertex given the predecessor's
     /// adjacency; report it to `start` and forward the walk.
+    // Allowed: private helper on the compute hot path; the params are
+    // the already-destructured fields of one walk message.
     #[allow(clippy::too_many_arguments)]
     fn continue_walk(
         &self,

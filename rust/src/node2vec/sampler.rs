@@ -28,8 +28,8 @@
 //! [`super::transition::second_order_distribution`]), not bit-identical
 //! ones.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::Arc;
 
 use crate::graph::{FirstOrderTables, Graph, VertexId};
 use crate::util::rng::Xoshiro256pp;
@@ -61,6 +61,9 @@ pub trait SecondOrderSampler: Send + Sync {
     /// `scratch` is a reusable per-thread buffer for strategies that fill
     /// per-neighbor weights; `rng` is the caller's `(seed, walk, step)`
     /// stream.
+    // Allowed: the trait signature mirrors the (v, u) adjacency/weight
+    // quads every strategy needs; bundling them would cost a struct per
+    // call in the walk hot loop for no clarity gain.
     #[allow(clippy::too_many_arguments)]
     fn sample(
         &self,

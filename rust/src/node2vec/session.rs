@@ -41,7 +41,7 @@
 use std::collections::VecDeque;
 use std::io::{BufRead, Seek, Write};
 use std::path::{Path, PathBuf};
-use std::sync::Arc;
+use crate::util::sync::Arc;
 
 use crate::coordinator::{Coordinator, DistConfig, UnitParams};
 use crate::graph::partition::Partitioner;
@@ -1282,6 +1282,8 @@ fn make_spec(
 /// loop is runner-agnostic: a checkpoint written by a shard fleet resumes
 /// in-process and vice versa (the FN2VCKP1 fingerprint deliberately
 /// excludes worker count, partitioner, shard count, and transport).
+// Allowed: one private call site; the extra params over `drive` are
+// exactly the checkpoint plumbing (spec dir, cadence, resume flag).
 #[allow(clippy::too_many_arguments)]
 fn drive_checkpointed(
     graph: &Graph,
@@ -1522,6 +1524,43 @@ mod tests {
         assert_eq!(
             back,
             vec![(3, vec![3, 1, 2]), (7, vec![7]), (4, vec![4, 0])]
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// The checkpoint-truncate offset contract, asserted at the byte
+    /// level (its interleaving-safety is model-checked in
+    /// `tests/loom_sync.rs`; recovery.rs exercises it end-to-end): the
+    /// snapshot offset equals the flushed temp-file length, post-snapshot
+    /// writes grow the file past it, and restore truncates to exactly it.
+    #[test]
+    fn sink_restore_truncates_to_recorded_offset() {
+        let path = test_path("walks_offsets");
+        let tmp = sink_tmp_path(&path);
+        let mut sink = StreamingFileSink::create(&path).unwrap();
+        sink.on_walk(0, 0, &[0, 1, 2]); // "0\t0 1 2\n" = 8 bytes
+        sink.on_walk(1, 0, &[1, 2]); // "1\t1 2\n"   = 6 bytes
+        let blob = sink.checkpoint_blob().expect("file sink snapshots");
+        assert_eq!(
+            std::fs::metadata(&tmp).unwrap().len(),
+            14,
+            "snapshot must flush everything it claims"
+        );
+        sink.on_walk(2, 0, &[999, 999]); // doomed: after the snapshot
+        sink.restore_blob(&blob).unwrap();
+        assert_eq!(
+            std::fs::metadata(&tmp).unwrap().len(),
+            14,
+            "restore must truncate to the recorded offset"
+        );
+        assert_eq!(sink.walks_written(), 2);
+        // Deterministic replay of the rolled-back unit, then finish.
+        sink.on_walk(2, 0, &[2, 0]);
+        assert_eq!(sink.finish().unwrap(), 3);
+        let back = read_walk_file(&path).unwrap();
+        assert_eq!(
+            back,
+            vec![(0, vec![0, 1, 2]), (1, vec![1, 2]), (2, vec![2, 0])]
         );
         std::fs::remove_file(&path).ok();
     }

@@ -95,6 +95,9 @@ pub(crate) fn gallop_search(hay: &[VertexId], x: VertexId) -> (bool, usize) {
 /// Sample the next walk step at `v` (2nd-order, exact). Returns the index
 /// into `v_neighbors`, or `None` when the distribution is degenerate
 /// (no neighbors / all-zero weights — a truncated walk).
+// Allowed: the arguments are the textbook inputs of the second-order
+// kernel ((v, u) adjacency/weights, p, q, rng); grouping them would
+// obscure the correspondence with the paper's Eq. (2).
 #[allow(clippy::too_many_arguments)]
 pub fn sample_second_order(
     v_neighbors: &[VertexId],

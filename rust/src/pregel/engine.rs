@@ -37,9 +37,11 @@
 //! changes, which the per-worker compute-time metrics make visible.
 
 use std::panic::AssertUnwindSafe;
-use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
+
+use crate::util::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use crate::util::sync::barrier::{BarrierWait, PoisonBarrier};
+use crate::util::sync::{thread, Arc, Condvar, Mutex};
 
 use crate::graph::partition::Partitioner;
 use crate::graph::{Graph, VertexId};
@@ -471,88 +473,6 @@ impl<'a, P: VertexProgram + ?Sized> Ctx<'a, P> {
     }
 }
 
-/// Outcome of one [`PoisonBarrier::wait`].
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-enum BarrierWait {
-    /// This waiter completed the round (it plays master).
-    Leader,
-    Member,
-    /// A sibling worker panicked; stop without touching shared state.
-    Poisoned,
-}
-
-impl BarrierWait {
-    #[inline]
-    fn is_leader(self) -> bool {
-        matches!(self, BarrierWait::Leader)
-    }
-
-    #[inline]
-    fn poisoned(self) -> bool {
-        matches!(self, BarrierWait::Poisoned)
-    }
-}
-
-/// A reusable barrier that can be *poisoned*: when a worker panics, its
-/// `catch_unwind` handler poisons the barrier and every current and future
-/// wait returns [`BarrierWait::Poisoned`] immediately — siblings drain
-/// cleanly instead of deadlocking on a participant that will never arrive
-/// (`std::sync::Barrier` has no such escape hatch).
-struct PoisonBarrier {
-    lock: Mutex<BarrierState>,
-    cvar: Condvar,
-    parties: usize,
-}
-
-struct BarrierState {
-    count: usize,
-    generation: u64,
-    poisoned: bool,
-}
-
-impl PoisonBarrier {
-    fn new(parties: usize) -> Self {
-        PoisonBarrier {
-            lock: Mutex::new(BarrierState {
-                count: 0,
-                generation: 0,
-                poisoned: false,
-            }),
-            cvar: Condvar::new(),
-            parties,
-        }
-    }
-
-    fn wait(&self) -> BarrierWait {
-        let mut s = self.lock.lock().unwrap_or_else(|p| p.into_inner());
-        if s.poisoned {
-            return BarrierWait::Poisoned;
-        }
-        s.count += 1;
-        if s.count == self.parties {
-            s.count = 0;
-            s.generation += 1;
-            self.cvar.notify_all();
-            return BarrierWait::Leader;
-        }
-        let generation = s.generation;
-        while s.generation == generation && !s.poisoned {
-            s = self.cvar.wait(s).unwrap_or_else(|p| p.into_inner());
-        }
-        if s.poisoned {
-            BarrierWait::Poisoned
-        } else {
-            BarrierWait::Member
-        }
-    }
-
-    fn poison(&self) {
-        let mut s = self.lock.lock().unwrap_or_else(|p| p.into_inner());
-        s.poisoned = true;
-        self.cvar.notify_all();
-    }
-}
-
 /// Checkpoint control shared by the workers of one checkpointed run.
 struct CkptCtl<P: VertexProgram> {
     /// `Some` for in-process runs, which write the FN2VCKP1 file
@@ -907,7 +827,7 @@ impl<'g, P: VertexProgram> Engine<'g, P> {
                 .collect(),
         };
 
-        let worker_outputs: Vec<Vec<P::Value>> = std::thread::scope(|scope| {
+        let worker_outputs: Vec<Vec<P::Value>> = thread::scope(|scope| {
             let shared = &shared;
             let mut handles = Vec::with_capacity(local_workers.len());
             for (me, start) in starts.into_iter().enumerate() {
@@ -1073,6 +993,9 @@ fn offload_hot_messages<P: VertexProgram>(
 }
 
 /// Body of one worker thread.
+// Allowed: one call site; the params are the per-worker slices of
+// engine state, deliberately passed as disjoint borrows so the borrow
+// checker can prove the workers' aliasing discipline.
 #[allow(clippy::too_many_arguments)]
 fn worker_loop<P: VertexProgram>(
     me: usize,
@@ -2081,7 +2004,7 @@ mod tests {
                 // One vertex per worker (the least id = worker id for hash
                 // partitioning) populates the cache.
                 if (vid as usize) < ctx.num_workers() {
-                    let ok = ctx.cache_put(999_999, std::sync::Arc::from(&[1u32, 2, 3][..]));
+                    let ok = ctx.cache_put(999_999, Arc::from(&[1u32, 2, 3][..]));
                     assert!(ok);
                 }
                 // Everyone runs next step too.
@@ -2122,7 +2045,7 @@ mod tests {
                 _msgs: &mut Vec<IdMsg>,
             ) {
                 if vid == 0 {
-                    let big: std::sync::Arc<[u32]> = (0..100u32).collect::<Vec<_>>().into();
+                    let big: Arc<[u32]> = (0..100u32).collect::<Vec<_>>().into();
                     assert!(ctx.cache_put(1, big.clone()));
                     // Second insert exceeds the 500-byte capacity.
                     assert!(!ctx.cache_put(2, big));

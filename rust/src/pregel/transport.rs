@@ -52,7 +52,7 @@
 
 use std::io::{Read, Write};
 use std::os::unix::net::UnixStream;
-use std::sync::mpsc::{Receiver, Sender};
+use crate::util::sync::mpsc::{Receiver, Sender};
 
 use crate::graph::store::fxhash64;
 use crate::graph::VertexId;
@@ -270,8 +270,8 @@ pub struct ChanTransport {
 impl ChanTransport {
     /// A connected duplex pair.
     pub fn pair() -> (ChanTransport, ChanTransport) {
-        let (atx, brx) = std::sync::mpsc::channel();
-        let (btx, arx) = std::sync::mpsc::channel();
+        let (atx, brx) = crate::util::sync::mpsc::channel();
+        let (btx, arx) = crate::util::sync::mpsc::channel();
         (
             ChanTransport {
                 tx: Some(atx),

@@ -32,11 +32,8 @@
 //! and p50/p99 latency from admission to response write, plus rejected
 //! counts and batch-occupancy numbers.
 
-use std::collections::VecDeque;
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::embed::nearest_flat;
@@ -46,6 +43,8 @@ use crate::pregel::transport::{Frame, FrameError, FrameKind, Transport, UdsTrans
 use crate::serve::hnsw::HnswIndex;
 use crate::serve::store::EmbStore;
 use crate::util::failpoints;
+use crate::util::sync::service::{Admission, ShutdownQueue};
+use crate::util::sync::{thread, Arc, Mutex};
 
 // ---------------------------------------------------------------------------
 // Request / response payloads
@@ -571,9 +570,10 @@ struct Job {
 struct Shared {
     core: Arc<ServeCore>,
     opts: ServeOpts,
-    queue: Mutex<VecDeque<Job>>,
-    cv: Condvar,
-    shutdown: AtomicBool,
+    /// Admission queue; its shutdown flag doubles as the daemon's
+    /// drain-mode bit (flag and queue share one lock so shutdown can
+    /// never race past a parked batcher — see `util::sync::service`).
+    queue: ShutdownQueue<Job>,
     metrics: Mutex<MetricsInner>,
     /// Raw handles of accepted connections, shut down after the drain so
     /// blocked reader threads unblock and join.
@@ -658,8 +658,7 @@ fn reader_loop(shared: &Arc<Shared>, stream: UnixStream, socket_path: &Path) {
                 );
             }
             FrameKind::Shutdown => {
-                shared.shutdown.store(true, Ordering::SeqCst);
-                shared.cv.notify_all();
+                shared.queue.shutdown();
                 send_on(
                     &writer,
                     &Frame::new(FrameKind::Shutdown, COORD_ID, 0, id, Vec::new()),
@@ -696,49 +695,46 @@ fn reader_loop(shared: &Arc<Shared>, stream: UnixStream, socket_path: &Path) {
                         send_on(&writer, &response_frame(id, &ServeResponse::Pong));
                     }
                     req => {
-                        if shared.shutdown.load(Ordering::SeqCst) {
-                            send_on(
-                                &writer,
-                                &rejection_frame(
-                                    id,
-                                    &ServeRejection::new(
-                                        reject_code::SHUTTING_DOWN,
-                                        "daemon is draining",
-                                    ),
-                                ),
-                            );
-                            continue;
-                        }
-                        let mut q = shared.queue.lock().unwrap_or_else(|p| p.into_inner());
-                        if q.len() >= shared.opts.max_queue {
-                            drop(q);
-                            shared
-                                .metrics
-                                .lock()
-                                .unwrap_or_else(|p| p.into_inner())
-                                .rejected += 1;
-                            send_on(
-                                &writer,
-                                &rejection_frame(
-                                    id,
-                                    &ServeRejection::new(
-                                        reject_code::OVERLOADED,
-                                        format!(
-                                            "queue full ({} jobs); retry later",
-                                            shared.opts.max_queue
+                        let job = Job {
+                            req,
+                            id,
+                            admitted: Instant::now(),
+                            writer: writer.clone(),
+                        };
+                        match shared.queue.offer(job, shared.opts.max_queue) {
+                            Admission::Admitted => {}
+                            Admission::ShuttingDown => {
+                                send_on(
+                                    &writer,
+                                    &rejection_frame(
+                                        id,
+                                        &ServeRejection::new(
+                                            reject_code::SHUTTING_DOWN,
+                                            "daemon is draining",
                                         ),
                                     ),
-                                ),
-                            );
-                        } else {
-                            q.push_back(Job {
-                                req,
-                                id,
-                                admitted: Instant::now(),
-                                writer: writer.clone(),
-                            });
-                            drop(q);
-                            shared.cv.notify_one();
+                                );
+                            }
+                            Admission::Overloaded => {
+                                shared
+                                    .metrics
+                                    .lock()
+                                    .unwrap_or_else(|p| p.into_inner())
+                                    .rejected += 1;
+                                send_on(
+                                    &writer,
+                                    &rejection_frame(
+                                        id,
+                                        &ServeRejection::new(
+                                            reject_code::OVERLOADED,
+                                            format!(
+                                                "queue full ({} jobs); retry later",
+                                                shared.opts.max_queue
+                                            ),
+                                        ),
+                                    ),
+                                );
+                            }
                         }
                     }
                 }
@@ -765,22 +761,13 @@ fn reader_loop(shared: &Arc<Shared>, stream: UnixStream, socket_path: &Path) {
 /// work always completes.
 fn batcher_loop(shared: &Arc<Shared>) {
     loop {
-        let batch: Vec<Job> = {
-            let mut q = shared.queue.lock().unwrap_or_else(|p| p.into_inner());
-            loop {
-                if !q.is_empty() {
-                    break;
-                }
-                if shared.shutdown.load(Ordering::SeqCst) {
-                    return;
-                }
-                q = shared.cv.wait(q).unwrap_or_else(|p| p.into_inner());
-            }
-            let take = q.len().min(shared.opts.batch_max.max(1));
-            q.drain(..take).collect()
+        let batch: Vec<Job> = match shared.queue.drain(shared.opts.batch_max) {
+            Some(b) => b,
+            // Shutdown flagged and queue fully drained.
+            None => return,
         };
         if let Some(delay) = shared.opts.drain_delay {
-            std::thread::sleep(delay);
+            thread::sleep(delay);
         }
         {
             let mut m = shared.metrics.lock().unwrap_or_else(|p| p.into_inner());
@@ -815,20 +802,18 @@ pub fn run_server(
     let shared = Arc::new(Shared {
         core: Arc::new(core),
         opts,
-        queue: Mutex::new(VecDeque::new()),
-        cv: Condvar::new(),
-        shutdown: AtomicBool::new(false),
+        queue: ShutdownQueue::new(),
         metrics: Mutex::new(MetricsInner::default()),
         conns: Mutex::new(Vec::new()),
     });
     let batcher = {
         let shared = shared.clone();
-        std::thread::spawn(move || batcher_loop(&shared))
+        thread::spawn(move || batcher_loop(&shared))
     };
     let mut readers = Vec::new();
     loop {
         let (stream, _addr) = failpoints::retry_io("serve.accept", || listener.accept())?;
-        if shared.shutdown.load(Ordering::SeqCst) {
+        if shared.queue.is_shutdown() {
             break;
         }
         if let Ok(clone) = stream.try_clone() {
@@ -840,12 +825,13 @@ pub fn run_server(
         }
         let shared = shared.clone();
         let path = socket_path.to_path_buf();
-        readers.push(std::thread::spawn(move || {
-            reader_loop(&shared, stream, &path)
-        }));
+        readers.push(thread::spawn(move || reader_loop(&shared, stream, &path)));
     }
-    // Drain: the batcher finishes every admitted job, then exits.
-    shared.cv.notify_all();
+    // Drain: the batcher finishes every admitted job, then exits. The
+    // reader thread already flagged shutdown under the queue lock (so
+    // the wakeup cannot be lost); re-flagging here is an idempotent
+    // belt-and-braces, not a correctness requirement.
+    shared.queue.shutdown();
     let _ = batcher.join();
     // Now unblock reader threads still parked in recv and join them.
     for conn in shared

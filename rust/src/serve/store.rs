@@ -37,7 +37,7 @@
 use std::fs::{self, File};
 use std::io::{BufReader, Read, Write};
 use std::path::{Path, PathBuf};
-use std::sync::Arc;
+use crate::util::sync::Arc;
 
 use crate::graph::store::{
     align_up, decode_le_items, fxhash64, le_u32, le_u64, section_ctx, Section, StoreError,

@@ -151,7 +151,7 @@ pub fn retry_io<T>(site: &'static str, mut op: impl FnMut() -> io::Result<T>) ->
                 ) =>
             {
                 if attempt + 1 < RETRY_ATTEMPTS {
-                    std::thread::sleep(Duration::from_millis(delay_ms));
+                    crate::util::sync::thread::sleep(Duration::from_millis(delay_ms));
                     delay_ms = (delay_ms * 2).min(50);
                 }
                 last = Some(e);
@@ -169,7 +169,7 @@ pub use registry::{arm, arm_all_from_seed, arm_fatal, clear_all, hits};
 mod registry {
     use super::{Fault, SiteKind, SITES};
     use std::collections::HashMap;
-    use std::sync::{Mutex, MutexGuard, OnceLock};
+    use crate::util::sync::{Mutex, MutexGuard, OnceLock};
 
     struct Armed {
         /// Hits to let pass before firing.
@@ -258,7 +258,7 @@ mod registry {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::{AtomicU32, Ordering};
+    use crate::util::sync::atomic::{AtomicU32, Ordering};
 
     #[test]
     fn retry_io_passes_through_success_and_fatal_errors() {

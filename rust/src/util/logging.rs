@@ -4,7 +4,7 @@
 //! and elapsed-time prefixes so experiment logs read like the paper's
 //! superstep traces.
 
-use std::sync::atomic::{AtomicU8, Ordering};
+use crate::util::sync::atomic::{AtomicU8, Ordering};
 use std::time::Instant;
 
 use once_cell_lite::Lazy;
@@ -82,7 +82,7 @@ macro_rules! log_debug {
 /// dependency-free makes it reusable in build scripts; this mirrors
 /// `once_cell::sync::Lazy` for the `fn() -> T` case).
 mod once_cell_lite {
-    use std::sync::Once;
+    use crate::util::sync::Once;
 
     pub struct Lazy<T> {
         once: Once,

@@ -11,7 +11,7 @@
 //!    and the §Perf logs.
 
 use std::fs;
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::atomic::{AtomicU64, Ordering};
 
 /// Current process resident set size in bytes, or `None` off-Linux.
 pub fn process_rss_bytes() -> Option<u64> {
@@ -134,12 +134,12 @@ mod tests {
 
     #[test]
     fn gauge_concurrent_adds() {
-        use std::sync::Arc;
+        use crate::util::sync::Arc;
         let g = Arc::new(ByteGauge::new());
         let mut handles = Vec::new();
         for _ in 0..8 {
             let g = g.clone();
-            handles.push(std::thread::spawn(move || {
+            handles.push(crate::util::sync::thread::spawn(move || {
                 for _ in 0..1000 {
                     g.add(3);
                     g.sub(1);

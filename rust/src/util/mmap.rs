@@ -27,10 +27,12 @@ pub struct Mmap {
     len: usize,
 }
 
-// SAFETY: the mapping is PROT_READ for its whole lifetime; concurrent
-// reads of immutable memory are safe, and munmap happens exactly once in
-// Drop (Mmap is not Clone — sharing goes through Arc<Mmap>).
+// SAFETY: the mapping is PROT_READ for its whole lifetime, and munmap
+// happens exactly once in Drop (Mmap is not Clone — sharing goes through
+// Arc<Mmap>), so moving the owner across threads is sound.
 unsafe impl Send for Mmap {}
+// SAFETY: pages are immutable (PROT_READ) for the lifetime of the map,
+// so concurrent reads through shared references are safe.
 unsafe impl Sync for Mmap {}
 
 impl std::fmt::Debug for Mmap {
@@ -190,7 +192,10 @@ mod tests {
         p
     }
 
+    // mmap(2) goes through a raw extern "C" syscall Miri cannot
+    // interpret; the mapped path is the test subject here, so ignore.
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn maps_file_contents_when_supported() {
         if !Mmap::supported() {
             eprintln!("skipping: mmap unsupported on this target");
@@ -210,8 +215,10 @@ mod tests {
         std::fs::remove_file(&p).ok();
     }
 
+    // Ignored under Miri: exercises the raw mmap(2) FFI (as above).
     #[cfg(feature = "failpoints")]
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn transient_mmap_fault_is_retried() {
         if !Mmap::supported() {
             eprintln!("skipping: mmap unsupported on this target");
@@ -226,18 +233,20 @@ mod tests {
         std::fs::remove_file(&p).ok();
     }
 
+    // Ignored under Miri: exercises the raw mmap(2) FFI (as above).
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn mapping_is_shareable_across_threads() {
         if !Mmap::supported() {
             eprintln!("skipping: mmap unsupported on this target");
             return;
         }
         let p = tmp_file("shared", &[7u8; 4096]);
-        let m = std::sync::Arc::new(Mmap::map(&File::open(&p).unwrap()).unwrap());
+        let m = crate::util::sync::Arc::new(Mmap::map(&File::open(&p).unwrap()).unwrap());
         let handles: Vec<_> = (0..4)
             .map(|_| {
                 let m = m.clone();
-                std::thread::spawn(move || m.as_slice().iter().map(|&b| b as u64).sum::<u64>())
+                crate::util::sync::thread::spawn(move || m.as_slice().iter().map(|&b| b as u64).sum::<u64>())
             })
             .collect();
         for h in handles {

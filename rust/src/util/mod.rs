@@ -19,6 +19,7 @@ pub mod mmap;
 pub mod propkit;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 
 /// Format a byte count for human consumption (`12.3 GB`, `481 KB`, ...).
 pub fn fmt_bytes(bytes: u64) -> String {

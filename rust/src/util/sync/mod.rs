@@ -1,0 +1,99 @@
+//! The repo-wide synchronization facade, plus the reusable concurrency
+//! primitives built on it.
+//!
+//! Every module in `rust/src` imports its sync and threading types from
+//! here instead of `std::sync` / `std::thread` (enforced by
+//! `python/tools/repolint.py`). In a normal build the facade is a pure
+//! re-export of `std` — zero runtime cost, and walk/train output stays
+//! bit-identical to the pre-facade tree. Under `RUSTFLAGS="--cfg loom"`
+//! the `Mutex`/`Condvar`/atomic/thread-spawn surface swaps to the
+//! [`model`] runtime: a dependency-free, loom-style model checker that
+//! exhaustively enumerates thread interleavings of a bounded test
+//! scenario (`tests/loom_sync.rs`). The name `loom` is kept for the cfg
+//! so the intent is greppable, but the runtime is vendored here — the
+//! crate stays zero-dependency and builds offline (the real `loom` crate
+//! cannot be resolved in this environment; see Cargo.toml).
+//!
+//! What the model checker covers and what it doesn't:
+//!
+//! - **Covers**: every interleaving of facade operations (mutex
+//!   lock/unlock, condvar wait/notify, atomic ops, spawn/join) at
+//!   sequential-consistency granularity, with deadlock detection —
+//!   lost-wakeup and lock-ordering bugs in the small primitives below
+//!   are found exhaustively.
+//! - **Does not cover**: weak-memory reorderings (atomics are explored
+//!   at `SeqCst` regardless of the ordering argument) and spurious
+//!   condvar wakeups. Those are the ThreadSanitizer job's department
+//!   (see EXPERIMENTS.md §Analysis); every condvar wait below is a
+//!   `while` loop, so spurious wakeups are tolerated by construction.
+//!
+//! The submodules host the shared concurrency primitives themselves,
+//! extracted from their original call sites so they are reusable and
+//! model-checkable from one place:
+//!
+//! - [`pool::WorkerPool`] — the persistent fork-join pool (from
+//!   `embed/parallel.rs`).
+//! - [`queue::BoundedQueue`] — the bounded SPSC batch queue (from
+//!   `embed/parallel.rs`).
+//! - [`pipeline::StepPipeline`] — in-order bounded-lookahead step
+//!   delivery (from `embed/parallel.rs`, genericized).
+//! - [`barrier::PoisonBarrier`] — the poisonable generation barrier
+//!   (from `pregel/engine.rs`).
+//! - [`service::ShutdownQueue`] — the serve daemon's admission queue
+//!   (extracted from `serve/daemon.rs`, with the shutdown flag moved
+//!   inside the mutex — the standalone `AtomicBool` had a missed-wakeup
+//!   window; see the module docs).
+
+pub mod barrier;
+pub mod pipeline;
+pub mod pool;
+pub mod queue;
+pub mod service;
+
+#[cfg(loom)]
+pub mod model;
+
+// --- Normal builds: a pure re-export of std. -------------------------------
+
+#[cfg(not(loom))]
+pub use std::sync::{Arc, Condvar, Mutex, MutexGuard, Once, OnceLock};
+
+#[cfg(not(loom))]
+pub use std::sync::atomic;
+
+#[cfg(not(loom))]
+pub use std::sync::mpsc;
+
+#[cfg(not(loom))]
+pub mod thread {
+    pub use std::thread::*;
+}
+
+// --- cfg(loom) builds: the model-checked surface. --------------------------
+//
+// Types the checker does not interpose (`Arc`, `Once*`, `mpsc`, scoped
+// threads, `sleep`) stay std re-exports: they are either not part of any
+// model-checked primitive or are pure reference counting with no
+// blocking behaviour to explore. Model tests must only use the
+// interposed subset.
+
+#[cfg(loom)]
+pub use model::sync::{Condvar, Mutex, MutexGuard};
+
+#[cfg(loom)]
+pub use std::sync::{Arc, Once, OnceLock};
+
+#[cfg(loom)]
+pub use std::sync::mpsc;
+
+#[cfg(loom)]
+pub mod atomic {
+    pub use super::model::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicU8, AtomicUsize};
+    pub use std::sync::atomic::Ordering;
+}
+
+#[cfg(loom)]
+pub mod thread {
+    pub use super::model::thread::{spawn, Builder, JoinHandle};
+    pub use std::thread::{available_parallelism, scope, sleep, yield_now, Scope};
+}

@@ -1,0 +1,891 @@
+//! A dependency-free, loom-style model checker (compiled only under
+//! `RUSTFLAGS="--cfg loom"`).
+//!
+//! [`model`] runs a closure repeatedly, exploring **every** schedule of
+//! the threads it spawns through the facade: each facade operation
+//! (mutex lock/unlock, condvar wait/notify, atomic access, spawn/join)
+//! is a *scheduling point* where exactly one runnable thread is granted
+//! the right to execute its next operation. The grant decisions form a
+//! tree; a depth-first search over that tree enumerates every
+//! interleaving of the bounded scenario, so for the primitive under test
+//! the properties asserted by `tests/loom_sync.rs` (FIFO order, no lost
+//! wakeup, in-order windowed delivery, barrier generation counting) hold
+//! for *all* schedules, not just the ones an OS scheduler happens to
+//! produce.
+//!
+//! Execution model and its (documented) approximations:
+//!
+//! - Threads are real OS threads, but at most one is ever runnable in
+//!   user code: all others are parked waiting for a grant, so every
+//!   explored schedule is a deterministic serialization. Replaying a
+//!   decision path replays the identical execution, which is what makes
+//!   DFS backtracking sound.
+//! - Atomics are explored at `SeqCst` regardless of the ordering
+//!   argument: the checker verifies interleaving correctness, not
+//!   weak-memory reorderings (ThreadSanitizer covers the latter; see
+//!   EXPERIMENTS.md §Analysis). `compare_exchange_weak` never fails
+//!   spuriously.
+//! - Condvars do not wake spuriously. `notify_one`'s choice of waiter
+//!   *is* explored (it is a decision point over the wait set).
+//! - A state where no thread is runnable but not all are finished is
+//!   reported as a deadlock with the thread states and the decision
+//!   path — this is the lost-wakeup detector.
+//! - Panic paths (e.g. a queue `close()` racing a poisoned peer) are
+//!   not modeled: an unexpected panic in any model thread aborts the
+//!   exploration and reports the failing schedule.
+//!
+//! `LOOMLITE_MAX_ITERS` caps the schedule count (default 2,000,000);
+//! exceeding it fails the test loudly rather than silently truncating
+//! coverage, so a model that passes has genuinely been exhausted.
+
+use std::any::Any;
+use std::cell::RefCell;
+use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar as OsCondvar, Mutex as OsMutex};
+use std::time::Duration;
+
+/// Sentinel for `Sched::current` when every thread has finished.
+const NO_THREAD: usize = usize::MAX;
+
+/// Panic payload used to tear threads out of an aborting execution;
+/// never reported as a model failure itself.
+struct ModelAbort;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum TState {
+    Runnable,
+    /// Parked trying to acquire the model mutex with this key.
+    BlockedMutex(usize),
+    /// Parked in a condvar wait set (the set itself lives in
+    /// `Sched::cv_waiters`).
+    BlockedCondvar,
+    /// Parked joining the thread with this id.
+    BlockedJoin(usize),
+    Finished,
+}
+
+/// One recorded scheduling decision: `taken`-th of `options` choices.
+/// Only points with more than one option are recorded — single-option
+/// grants are forced moves and never need backtracking.
+#[derive(Clone, Copy, Debug)]
+struct Choice {
+    taken: usize,
+    options: usize,
+}
+
+struct Sched {
+    threads: Vec<TState>,
+    /// Thread currently granted execution (`NO_THREAD` when done).
+    current: usize,
+    /// Decision path: a replayed prefix plus first-choice extensions.
+    path: Vec<Choice>,
+    /// Next decision index to consume from / append to `path`.
+    depth: usize,
+    /// Model-level lock state per mutex (keyed by object address).
+    mutexes: HashMap<usize, bool>,
+    /// Condvar wait sets (keyed by object address).
+    cv_waiters: HashMap<usize, VecDeque<usize>>,
+    /// Tearing down: every parked thread unwinds via [`ModelAbort`].
+    aborting: bool,
+    /// First failure observed (deadlock or a thread panic).
+    failure: Option<String>,
+    /// OS handles of spawned model threads, joined at iteration end.
+    os_handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Sched {
+    fn new(path: Vec<Choice>) -> Sched {
+        Sched {
+            threads: vec![TState::Runnable],
+            current: 0,
+            path,
+            depth: 0,
+            mutexes: HashMap::new(),
+            cv_waiters: HashMap::new(),
+            aborting: false,
+            failure: None,
+            os_handles: Vec::new(),
+        }
+    }
+}
+
+struct Execution {
+    sched: OsMutex<Sched>,
+    cv: OsCondvar,
+}
+
+thread_local! {
+    /// The execution this thread belongs to, and its model thread id.
+    static CUR: RefCell<Option<(Arc<Execution>, usize)>> = const { RefCell::new(None) };
+}
+
+fn cur_opt() -> Option<(Arc<Execution>, usize)> {
+    CUR.with(|c| c.borrow().clone())
+}
+
+/// True while the calling thread is part of a model execution.
+pub fn in_model() -> bool {
+    CUR.with(|c| c.borrow().is_some())
+}
+
+fn abort_panic() -> ! {
+    std::panic::panic_any(ModelAbort)
+}
+
+fn lock(exec: &Execution) -> std::sync::MutexGuard<'_, Sched> {
+    exec.sched.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Resolve one decision with `options` choices against the path (consume
+/// on replay, append first-choice beyond it).
+fn decide(s: &mut Sched, options: usize) -> usize {
+    if options <= 1 {
+        return 0;
+    }
+    let d = s.depth;
+    s.depth += 1;
+    if d < s.path.len() {
+        debug_assert_eq!(
+            s.path[d].options, options,
+            "non-deterministic replay: decision {d} had {} options, now {options}",
+            s.path[d].options
+        );
+        s.path[d].taken.min(options - 1)
+    } else {
+        s.path.push(Choice { taken: 0, options });
+        0
+    }
+}
+
+/// Grant the next runnable thread (a decision point when several are).
+/// With none runnable: termination if all finished, deadlock otherwise.
+fn pick_next(s: &mut Sched) {
+    let runnable: Vec<usize> = s
+        .threads
+        .iter()
+        .enumerate()
+        .filter(|(_, t)| matches!(t, TState::Runnable))
+        .map(|(i, _)| i)
+        .collect();
+    if runnable.is_empty() {
+        if s.threads.iter().all(|t| matches!(t, TState::Finished)) {
+            s.current = NO_THREAD;
+        } else if !s.aborting {
+            s.aborting = true;
+            s.failure = Some(format!(
+                "deadlock: no runnable thread (states: {:?}, path: {:?})",
+                s.threads, s.path
+            ));
+        }
+        return;
+    }
+    let idx = decide(s, runnable.len());
+    s.current = runnable[idx];
+}
+
+/// Park until this thread holds the grant (status `Runnable`, `current`
+/// pointing at it). The scheduler lock is held on entry and on return.
+fn wait_for_grant<'a>(
+    exec: &'a Execution,
+    me: usize,
+    mut s: std::sync::MutexGuard<'a, Sched>,
+) -> std::sync::MutexGuard<'a, Sched> {
+    loop {
+        if s.aborting {
+            drop(s);
+            abort_panic();
+        }
+        if s.current == me && s.threads[me] == TState::Runnable {
+            return s;
+        }
+        s = exec.cv.wait(s).unwrap_or_else(|p| p.into_inner());
+    }
+}
+
+/// A scheduling point: offer the scheduler a chance to switch to any
+/// other runnable thread before this thread's next operation. No-op
+/// outside a model execution.
+pub(super) fn op_point() {
+    let Some((exec, me)) = cur_opt() else {
+        return;
+    };
+    let mut s = lock(&exec);
+    if s.aborting {
+        drop(s);
+        abort_panic();
+    }
+    pick_next(&mut s);
+    exec.cv.notify_all();
+    let s = wait_for_grant(&exec, me, s);
+    drop(s);
+}
+
+/// Acquire the model-level lock `addr`, parking (as a scheduler state,
+/// not an OS state) while it is held. Assumes the grant is already held;
+/// retains it on return.
+fn relock(exec: &Execution, me: usize, addr: usize) {
+    loop {
+        let mut s = lock(exec);
+        if s.aborting {
+            drop(s);
+            abort_panic();
+        }
+        let held = s.mutexes.entry(addr).or_insert(false);
+        if !*held {
+            *held = true;
+            return;
+        }
+        s.threads[me] = TState::BlockedMutex(addr);
+        pick_next(&mut s);
+        exec.cv.notify_all();
+        let s = wait_for_grant(exec, me, s);
+        drop(s);
+    }
+}
+
+pub(super) fn mutex_lock(addr: usize) {
+    let Some((exec, me)) = cur_opt() else {
+        return;
+    };
+    op_point();
+    relock(&exec, me, addr);
+}
+
+pub(super) fn mutex_unlock(addr: usize) {
+    let Some((exec, _me)) = cur_opt() else {
+        return;
+    };
+    // Guards dropped during a panic unwind skip the scheduling point: a
+    // nested ModelAbort panic would escalate to a process abort.
+    if !std::thread::panicking() {
+        op_point();
+    }
+    let mut s = lock(&exec);
+    s.mutexes.insert(addr, false);
+    for t in s.threads.iter_mut() {
+        if *t == TState::BlockedMutex(addr) {
+            *t = TState::Runnable;
+        }
+    }
+    exec.cv.notify_all();
+}
+
+/// Condvar wait: atomically (in one scheduler step, mirroring the real
+/// primitive's contract) release the mutex and join the wait set; on
+/// wake, reacquire the mutex before returning.
+pub(super) fn cv_wait(cv_addr: usize, mutex_addr: usize) {
+    let Some((exec, me)) = cur_opt() else {
+        return;
+    };
+    // Scheduling point *before* the wait, with the mutex still held:
+    // threads that signal without taking the mutex (the missed-wakeup
+    // bug shape) must be able to interleave between the caller's last
+    // predicate check and the wait entry. The release + wait-set join
+    // below is then a single scheduler step, mirroring the real
+    // primitive's atomicity.
+    op_point();
+    {
+        let mut s = lock(&exec);
+        if s.aborting {
+            drop(s);
+            abort_panic();
+        }
+        s.mutexes.insert(mutex_addr, false);
+        for t in s.threads.iter_mut() {
+            if *t == TState::BlockedMutex(mutex_addr) {
+                *t = TState::Runnable;
+            }
+        }
+        s.cv_waiters.entry(cv_addr).or_default().push_back(me);
+        s.threads[me] = TState::BlockedCondvar;
+        pick_next(&mut s);
+        exec.cv.notify_all();
+        let s = wait_for_grant(&exec, me, s);
+        drop(s);
+    }
+    relock(&exec, me, mutex_addr);
+}
+
+/// `notify_one` (`all == false`) explores the choice of which waiter
+/// wakes; `notify_all` wakes the whole set.
+pub(super) fn cv_notify(cv_addr: usize, all: bool) {
+    let Some((exec, _me)) = cur_opt() else {
+        return;
+    };
+    if !std::thread::panicking() {
+        op_point();
+    }
+    let mut s = lock(&exec);
+    let waiters = s.cv_waiters.entry(cv_addr).or_default();
+    if all {
+        let woken: Vec<usize> = waiters.drain(..).collect();
+        for w in woken {
+            s.threads[w] = TState::Runnable;
+        }
+    } else if !waiters.is_empty() {
+        let n = waiters.len();
+        // Borrow dance: `decide` needs the whole scheduler.
+        let pick = decide(&mut s, n);
+        let w = s
+            .cv_waiters
+            .get_mut(&cv_addr)
+            .expect("wait set exists")
+            .remove(pick)
+            .expect("picked waiter in range");
+        s.threads[w] = TState::Runnable;
+    }
+    exec.cv.notify_all();
+}
+
+fn panic_msg(e: &(dyn Any + Send)) -> String {
+    if let Some(s) = e.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = e.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Mark `me` finished, wake its joiners, record an optional failure, and
+/// hand the grant onward.
+fn finishing(exec: &Execution, me: usize, failure: Option<String>) {
+    let mut s = lock(exec);
+    s.threads[me] = TState::Finished;
+    for t in s.threads.iter_mut() {
+        if *t == TState::BlockedJoin(me) {
+            *t = TState::Runnable;
+        }
+    }
+    if let Some(f) = failure {
+        if s.failure.is_none() {
+            s.failure = Some(f);
+        }
+        s.aborting = true;
+    }
+    pick_next(&mut s);
+    exec.cv.notify_all();
+}
+
+/// Serializes concurrent `model()` calls (the loom CI job also pins
+/// `--test-threads 1`; this makes the entry point safe regardless).
+static MODEL_GATE: OsMutex<()> = OsMutex::new(());
+
+fn install_quiet_abort_hook() {
+    static HOOK: std::sync::Once = std::sync::Once::new();
+    HOOK.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if info.payload().downcast_ref::<ModelAbort>().is_some() {
+                return;
+            }
+            prev(info);
+        }));
+    });
+}
+
+/// Exhaustively model-check `f`: run it under every schedule of the
+/// facade operations it performs. Panics on the first failing schedule
+/// (assertion failure, deadlock, or thread panic) with the decision path
+/// that reaches it.
+pub fn model<F: Fn()>(f: F) {
+    let _gate = MODEL_GATE.lock().unwrap_or_else(|p| p.into_inner());
+    install_quiet_abort_hook();
+    let max_iters: u64 = std::env::var("LOOMLITE_MAX_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2_000_000);
+    let mut path: Vec<Choice> = Vec::new();
+    let mut iterations: u64 = 0;
+    loop {
+        iterations += 1;
+        assert!(
+            iterations <= max_iters,
+            "model exceeded {max_iters} schedules without exhausting the tree; \
+             shrink the scenario (threads/ops) or raise LOOMLITE_MAX_ITERS"
+        );
+        let exec = Arc::new(Execution {
+            sched: OsMutex::new(Sched::new(path)),
+            cv: OsCondvar::new(),
+        });
+        CUR.with(|c| *c.borrow_mut() = Some((exec.clone(), 0)));
+        let out = catch_unwind(AssertUnwindSafe(&f));
+        let main_failure = match &out {
+            Ok(()) => None,
+            Err(e) if e.downcast_ref::<ModelAbort>().is_some() => None,
+            Err(e) => Some(format!("main model thread panicked: {}", panic_msg(&**e))),
+        };
+        finishing(&exec, 0, main_failure);
+        // Drain the execution: remaining threads keep granting each other
+        // until everyone is finished (or the abort has torn them down).
+        let handles = {
+            let mut s = lock(&exec);
+            while !s.threads.iter().all(|t| matches!(t, TState::Finished)) {
+                exec.cv.notify_all();
+                let (guard, _timeout) = exec
+                    .cv
+                    .wait_timeout(s, Duration::from_secs(1))
+                    .unwrap_or_else(|p| p.into_inner());
+                s = guard;
+            }
+            std::mem::take(&mut s.os_handles)
+        };
+        for h in handles {
+            let _ = h.join();
+        }
+        CUR.with(|c| *c.borrow_mut() = None);
+        let (failure, mut new_path) = {
+            let mut s = lock(&exec);
+            (s.failure.take(), std::mem::take(&mut s.path))
+        };
+        if let Some(fail) = failure {
+            panic!("model failure on schedule {iterations}: {fail}");
+        }
+        if let Err(e) = out {
+            // Unreachable in practice (covered by `failure`), but never
+            // swallow a panic.
+            std::panic::resume_unwind(e);
+        }
+        // Depth-first backtrack: advance the deepest decision that still
+        // has unexplored options; drop exhausted tail decisions.
+        loop {
+            match new_path.last_mut() {
+                None => {
+                    eprintln!("model: exhausted {iterations} schedules");
+                    return;
+                }
+                Some(c) if c.taken + 1 < c.options => {
+                    c.taken += 1;
+                    break;
+                }
+                Some(_) => {
+                    new_path.pop();
+                }
+            }
+        }
+        path = new_path;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The interposed std::sync surface.
+// ---------------------------------------------------------------------------
+
+pub mod sync {
+    use std::mem::ManuallyDrop;
+    use std::ops::{Deref, DerefMut};
+    use std::sync::{Condvar as OsCondvar, LockResult, Mutex as OsMutex};
+
+    /// Model-aware `Mutex`: data lives in a real `std` mutex (always
+    /// uncontended inside a model, because the scheduler serializes
+    /// threads), while blocking decisions go through the scheduler.
+    /// Outside a model execution it behaves exactly like `std`'s.
+    pub struct Mutex<T> {
+        inner: OsMutex<T>,
+    }
+
+    impl<T> Mutex<T> {
+        pub const fn new(t: T) -> Mutex<T> {
+            Mutex {
+                inner: OsMutex::new(t),
+            }
+        }
+
+        fn addr(&self) -> usize {
+            self as *const Mutex<T> as usize
+        }
+
+        pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+            super::mutex_lock(self.addr());
+            let os = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+            Ok(MutexGuard {
+                mx: self,
+                os: ManuallyDrop::new(os),
+            })
+        }
+
+        pub fn into_inner(self) -> LockResult<T> {
+            self.inner.into_inner()
+        }
+
+        pub fn get_mut(&mut self) -> LockResult<&mut T> {
+            self.inner.get_mut()
+        }
+    }
+
+    impl<T: Default> Default for Mutex<T> {
+        fn default() -> Mutex<T> {
+            Mutex::new(T::default())
+        }
+    }
+
+    pub struct MutexGuard<'a, T> {
+        mx: &'a Mutex<T>,
+        os: ManuallyDrop<std::sync::MutexGuard<'a, T>>,
+    }
+
+    impl<'a, T> MutexGuard<'a, T> {
+        /// Consume the guard releasing the OS lock but *not* the model
+        /// lock (condvar wait needs the release and the wait-set join to
+        /// be one scheduler step).
+        fn dismantle(self) -> &'a Mutex<T> {
+            let mut me = ManuallyDrop::new(self);
+            // SAFETY: `me`'s Drop never runs (ManuallyDrop) and the OS
+            // guard is dropped exactly once, here.
+            unsafe { ManuallyDrop::drop(&mut me.os) };
+            me.mx
+        }
+
+        /// Consume the guard into its parts without releasing anything
+        /// (the outside-model condvar delegation hands the OS guard to
+        /// `std::sync::Condvar::wait`).
+        fn into_parts(self) -> (&'a Mutex<T>, std::sync::MutexGuard<'a, T>) {
+            let mut me = ManuallyDrop::new(self);
+            // SAFETY: `me`'s Drop never runs and the OS guard is moved
+            // out exactly once, here.
+            let os = unsafe { ManuallyDrop::take(&mut me.os) };
+            (me.mx, os)
+        }
+    }
+
+    impl<T> Deref for MutexGuard<'_, T> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            &self.os
+        }
+    }
+
+    impl<T> DerefMut for MutexGuard<'_, T> {
+        fn deref_mut(&mut self) -> &mut T {
+            &mut self.os
+        }
+    }
+
+    impl<T> Drop for MutexGuard<'_, T> {
+        fn drop(&mut self) {
+            // SAFETY: Drop runs at most once; `os` is not touched again.
+            unsafe { ManuallyDrop::drop(&mut self.os) };
+            super::mutex_unlock(self.mx.addr());
+        }
+    }
+
+    pub struct Condvar {
+        inner: OsCondvar,
+    }
+
+    impl Condvar {
+        pub const fn new() -> Condvar {
+            Condvar {
+                inner: OsCondvar::new(),
+            }
+        }
+
+        fn addr(&self) -> usize {
+            self as *const Condvar as usize
+        }
+
+        pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+            if super::in_model() {
+                let mx = guard.dismantle();
+                super::cv_wait(self.addr(), mx as *const Mutex<T> as usize);
+                let os = mx.inner.lock().unwrap_or_else(|p| p.into_inner());
+                Ok(MutexGuard {
+                    mx,
+                    os: ManuallyDrop::new(os),
+                })
+            } else {
+                let (mx, os) = guard.into_parts();
+                let os = self.inner.wait(os).unwrap_or_else(|p| p.into_inner());
+                Ok(MutexGuard {
+                    mx,
+                    os: ManuallyDrop::new(os),
+                })
+            }
+        }
+
+        pub fn notify_one(&self) {
+            if super::in_model() {
+                super::cv_notify(self.addr(), false);
+            } else {
+                self.inner.notify_one();
+            }
+        }
+
+        pub fn notify_all(&self) {
+            if super::in_model() {
+                super::cv_notify(self.addr(), true);
+            } else {
+                self.inner.notify_all();
+            }
+        }
+    }
+
+    impl Default for Condvar {
+        fn default() -> Condvar {
+            Condvar::new()
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Atomics: every access is a scheduling point; the value itself lives in
+// a std atomic, accessed at SeqCst (see the module docs for why).
+// ---------------------------------------------------------------------------
+
+pub mod atomic {
+    use std::sync::atomic::Ordering;
+    const SC: Ordering = Ordering::SeqCst;
+
+    macro_rules! model_atomic {
+        ($name:ident, $os:ident, $t:ty) => {
+            pub struct $name {
+                inner: std::sync::atomic::$os,
+            }
+
+            impl $name {
+                pub const fn new(v: $t) -> $name {
+                    $name {
+                        inner: std::sync::atomic::$os::new(v),
+                    }
+                }
+
+                pub fn load(&self, _o: Ordering) -> $t {
+                    super::op_point();
+                    self.inner.load(SC)
+                }
+
+                pub fn store(&self, v: $t, _o: Ordering) {
+                    super::op_point();
+                    self.inner.store(v, SC)
+                }
+
+                pub fn swap(&self, v: $t, _o: Ordering) -> $t {
+                    super::op_point();
+                    self.inner.swap(v, SC)
+                }
+
+                pub fn compare_exchange(
+                    &self,
+                    cur: $t,
+                    new: $t,
+                    _s: Ordering,
+                    _f: Ordering,
+                ) -> Result<$t, $t> {
+                    super::op_point();
+                    self.inner.compare_exchange(cur, new, SC, SC)
+                }
+
+                /// Never fails spuriously in the model (documented
+                /// approximation; callers must already loop).
+                pub fn compare_exchange_weak(
+                    &self,
+                    cur: $t,
+                    new: $t,
+                    s: Ordering,
+                    f: Ordering,
+                ) -> Result<$t, $t> {
+                    self.compare_exchange(cur, new, s, f)
+                }
+            }
+
+            impl Default for $name {
+                fn default() -> $name {
+                    $name::new(Default::default())
+                }
+            }
+
+            impl std::fmt::Debug for $name {
+                fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                    write!(f, "{:?}", self.inner)
+                }
+            }
+        };
+    }
+
+    macro_rules! model_atomic_int_ops {
+        ($name:ident, $t:ty) => {
+            impl $name {
+                pub fn fetch_add(&self, v: $t, _o: Ordering) -> $t {
+                    super::op_point();
+                    self.inner.fetch_add(v, SC)
+                }
+
+                pub fn fetch_sub(&self, v: $t, _o: Ordering) -> $t {
+                    super::op_point();
+                    self.inner.fetch_sub(v, SC)
+                }
+
+                pub fn fetch_max(&self, v: $t, _o: Ordering) -> $t {
+                    super::op_point();
+                    self.inner.fetch_max(v, SC)
+                }
+
+                pub fn fetch_min(&self, v: $t, _o: Ordering) -> $t {
+                    super::op_point();
+                    self.inner.fetch_min(v, SC)
+                }
+            }
+        };
+    }
+
+    model_atomic!(AtomicBool, AtomicBool, bool);
+    model_atomic!(AtomicU8, AtomicU8, u8);
+    model_atomic!(AtomicU32, AtomicU32, u32);
+    model_atomic!(AtomicU64, AtomicU64, u64);
+    model_atomic!(AtomicUsize, AtomicUsize, usize);
+    model_atomic_int_ops!(AtomicU8, u8);
+    model_atomic_int_ops!(AtomicU32, u32);
+    model_atomic_int_ops!(AtomicU64, u64);
+    model_atomic_int_ops!(AtomicUsize, usize);
+
+    impl AtomicBool {
+        pub fn fetch_or(&self, v: bool, _o: Ordering) -> bool {
+            super::op_point();
+            self.inner.fetch_or(v, SC)
+        }
+
+        pub fn fetch_and(&self, v: bool, _o: Ordering) -> bool {
+            super::op_point();
+            self.inner.fetch_and(v, SC)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Thread spawn/join. Inside a model, spawned threads are registered with
+// the scheduler; outside one, everything delegates to std.
+// ---------------------------------------------------------------------------
+
+pub mod thread {
+    use super::{
+        abort_panic, catch_unwind, cur_opt, finishing, lock, op_point, panic_msg, pick_next,
+        AssertUnwindSafe, Arc, OsMutex, TState, CUR,
+    };
+
+    enum Inner<T> {
+        Os(std::thread::JoinHandle<T>),
+        Model {
+            tid: usize,
+            exec: Arc<super::Execution>,
+            slot: Arc<OsMutex<Option<std::thread::Result<T>>>>,
+        },
+    }
+
+    pub struct JoinHandle<T>(Inner<T>);
+
+    impl<T> JoinHandle<T> {
+        pub fn join(self) -> std::thread::Result<T> {
+            match self.0 {
+                Inner::Os(h) => h.join(),
+                Inner::Model { tid, exec, slot } => {
+                    let (_, me) = cur_opt().expect("model JoinHandle joined outside its model");
+                    op_point();
+                    {
+                        let mut s = lock(&exec);
+                        while s.threads[tid] != TState::Finished {
+                            if s.aborting {
+                                drop(s);
+                                abort_panic();
+                            }
+                            s.threads[me] = TState::BlockedJoin(tid);
+                            pick_next(&mut s);
+                            exec.cv.notify_all();
+                            s = super::wait_for_grant(&exec, me, s);
+                        }
+                    }
+                    slot.lock()
+                        .unwrap_or_else(|p| p.into_inner())
+                        .take()
+                        .expect("joined model thread left no result")
+                }
+            }
+        }
+    }
+
+    #[derive(Default)]
+    pub struct Builder {
+        name: Option<String>,
+    }
+
+    impl Builder {
+        pub fn new() -> Builder {
+            Builder::default()
+        }
+
+        pub fn name(mut self, name: String) -> Builder {
+            self.name = Some(name);
+            self
+        }
+
+        pub fn spawn<F, T>(self, f: F) -> std::io::Result<JoinHandle<T>>
+        where
+            F: FnOnce() -> T + Send + 'static,
+            T: Send + 'static,
+        {
+            let Some((exec, _me)) = cur_opt() else {
+                // Outside a model: plain std thread.
+                let mut b = std::thread::Builder::new();
+                if let Some(n) = self.name {
+                    b = b.name(n);
+                }
+                return b.spawn(f).map(|h| JoinHandle(Inner::Os(h)));
+            };
+            op_point();
+            let tid = {
+                let mut s = lock(&exec);
+                s.threads.push(TState::Runnable);
+                s.threads.len() - 1
+            };
+            let slot: Arc<OsMutex<Option<std::thread::Result<T>>>> = Arc::new(OsMutex::new(None));
+            let exec2 = exec.clone();
+            let slot2 = slot.clone();
+            let os = std::thread::Builder::new()
+                .name(self.name.unwrap_or_else(|| format!("model-{tid}")))
+                .spawn(move || {
+                    CUR.with(|c| *c.borrow_mut() = Some((exec2.clone(), tid)));
+                    // Wait for the first grant before touching user code.
+                    let granted = {
+                        let mut s = lock(&exec2);
+                        loop {
+                            if s.aborting {
+                                break false;
+                            }
+                            if s.current == tid && s.threads[tid] == TState::Runnable {
+                                break true;
+                            }
+                            s = exec2.cv.wait(s).unwrap_or_else(|p| p.into_inner());
+                        }
+                    };
+                    if !granted {
+                        finishing(&exec2, tid, None);
+                        return;
+                    }
+                    let out = catch_unwind(AssertUnwindSafe(f));
+                    let failure = match &out {
+                        Ok(_) => None,
+                        Err(e) if e.downcast_ref::<super::ModelAbort>().is_some() => None,
+                        Err(e) => Some(format!(
+                            "model thread {tid} panicked: {}",
+                            panic_msg(&**e)
+                        )),
+                    };
+                    *slot2.lock().unwrap_or_else(|p| p.into_inner()) = Some(match out {
+                        Ok(v) => Ok(v),
+                        Err(e) => Err(e),
+                    });
+                    finishing(&exec2, tid, failure);
+                })?;
+            lock(&exec).os_handles.push(os);
+            Ok(JoinHandle(Inner::Model { tid, exec, slot }))
+        }
+    }
+
+    pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        Builder::new().spawn(f).expect("failed to spawn thread")
+    }
+}

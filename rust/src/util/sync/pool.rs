@@ -1,0 +1,177 @@
+//! [`WorkerPool`]: the persistent fork-join pool (extracted from
+//! `embed/parallel.rs`, where it runs SGD workers across training steps
+//! without respawning threads).
+
+use crate::util::sync::{thread, Arc, Condvar, Mutex};
+
+/// Raw pointer to the current fork-join task; valid for exactly one
+/// epoch because the submitter blocks in [`WorkerPool::run`] until every
+/// worker is done.
+#[derive(Clone, Copy)]
+struct TaskPtr(*const (dyn Fn(usize) + Sync));
+// SAFETY: the pointee outlives the dispatch (the submitting thread
+// blocks in `WorkerPool::run` until `remaining` hits zero, so the
+// borrow it was created from is still live whenever a worker
+// dereferences it), and the pointee is `Sync`, so shared calls from
+// multiple workers are allowed.
+unsafe impl Send for TaskPtr {}
+
+struct PoolCtl {
+    epoch: u64,
+    task: Option<TaskPtr>,
+    remaining: usize,
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    ctl: Mutex<PoolCtl>,
+    go: Condvar,
+    done: Condvar,
+}
+
+/// `threads` parked workers; `run(f)` executes `f(worker_index)` on
+/// every worker and returns when all have finished — one fork-join
+/// barrier, reused thousands of times per training run without
+/// respawning.
+///
+/// Model-checked in `tests/loom_sync.rs` (every worker runs each epoch
+/// exactly once; `run` never returns early) over every schedule of a
+/// bounded two-worker scenario.
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    handles: Vec<thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    pub fn new(threads: usize) -> WorkerPool {
+        let shared = Arc::new(PoolShared {
+            ctl: Mutex::new(PoolCtl {
+                epoch: 0,
+                task: None,
+                remaining: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            go: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (0..threads)
+            .map(|idx| {
+                let shared = shared.clone();
+                thread::Builder::new()
+                    .name(format!("sgns-worker-{idx}"))
+                    .spawn(move || WorkerPool::worker_loop(&shared, idx))
+                    .expect("spawn sgns worker")
+            })
+            .collect();
+        WorkerPool { shared, handles }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.handles.len()
+    }
+
+    fn worker_loop(shared: &PoolShared, idx: usize) {
+        let mut seen = 0u64;
+        loop {
+            let task = {
+                let mut ctl = shared.ctl.lock().unwrap();
+                loop {
+                    if ctl.shutdown {
+                        return;
+                    }
+                    if ctl.epoch != seen {
+                        seen = ctl.epoch;
+                        break ctl.task.expect("task published with epoch");
+                    }
+                    ctl = shared.go.wait(ctl).unwrap();
+                }
+            };
+            // SAFETY: the task pointer stays valid until `remaining` hits
+            // zero, which cannot happen before this call returns (we
+            // decrement only after it does).
+            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
+                (*task.0)(idx)
+            }));
+            let mut ctl = shared.ctl.lock().unwrap();
+            if outcome.is_err() {
+                ctl.panicked = true;
+            }
+            ctl.remaining -= 1;
+            if ctl.remaining == 0 {
+                shared.done.notify_all();
+            }
+        }
+    }
+
+    /// Run `task(worker)` on every worker; blocks until all finish.
+    /// Panics (on the caller) if any worker panicked.
+    pub fn run(&self, task: &(dyn Fn(usize) + Sync)) {
+        let mut ctl = self.shared.ctl.lock().unwrap();
+        debug_assert_eq!(ctl.remaining, 0, "WorkerPool::run reentered");
+        ctl.task = Some(TaskPtr(task as *const _));
+        ctl.remaining = self.handles.len();
+        ctl.epoch += 1;
+        self.shared.go.notify_all();
+        while ctl.remaining > 0 {
+            ctl = self.shared.done.wait(ctl).unwrap();
+        }
+        ctl.task = None;
+        if ctl.panicked {
+            ctl.panicked = false;
+            drop(ctl);
+            panic!("worker pool task panicked");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut ctl = self.shared.ctl.lock().unwrap();
+            ctl.shutdown = true;
+            self.shared.go.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn pool_runs_every_worker_every_epoch() {
+        let pool = WorkerPool::new(4);
+        let hits = AtomicUsize::new(0);
+        for _ in 0..50 {
+            pool.run(&|_t| {
+                hits.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(hits.load(Ordering::SeqCst), 200);
+    }
+
+    #[test]
+    fn pool_propagates_worker_panics() {
+        let pool = WorkerPool::new(2);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(&|t| {
+                if t == 1 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(caught.is_err());
+        // The pool stays usable afterwards.
+        let hits = AtomicUsize::new(0);
+        pool.run(&|_t| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 2);
+    }
+}

@@ -1,0 +1,102 @@
+//! [`BoundedQueue`]: the bounded SPSC hand-off queue (extracted from
+//! `embed/parallel.rs`, where it feeds each hogwild worker its private
+//! pre-sampled batch sequence).
+
+use crate::util::sync::{Condvar, Mutex};
+use std::collections::VecDeque;
+
+/// Bounded SPSC queue: one producer fills it, one consumer drains it.
+/// Push and pop counts match exactly on the happy path; `close` exists
+/// purely for panic unwinding — it wakes both sides so a dead peer
+/// cannot leave the other blocked forever (pop panics, push becomes a
+/// no-op).
+///
+/// Model-checked in `tests/loom_sync.rs` (FIFO order and no lost
+/// wakeups, over every schedule of a bounded push/pop scenario).
+pub struct BoundedQueue<T> {
+    q: Mutex<QueueState<T>>,
+    cap: usize,
+    space: Condvar,
+    item: Condvar,
+}
+
+struct QueueState<T> {
+    q: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(cap: usize) -> BoundedQueue<T> {
+        BoundedQueue {
+            q: Mutex::new(QueueState {
+                q: VecDeque::with_capacity(cap),
+                closed: false,
+            }),
+            cap,
+            space: Condvar::new(),
+            item: Condvar::new(),
+        }
+    }
+
+    pub fn push(&self, x: T) {
+        let mut g = self.q.lock().unwrap();
+        while g.q.len() >= self.cap && !g.closed {
+            g = self.space.wait(g).unwrap();
+        }
+        if g.closed {
+            return;
+        }
+        g.q.push_back(x);
+        self.item.notify_one();
+    }
+
+    pub fn pop(&self) -> T {
+        let mut g = self.q.lock().unwrap();
+        loop {
+            if let Some(x) = g.q.pop_front() {
+                self.space.notify_one();
+                return x;
+            }
+            if g.closed {
+                panic!("bounded queue closed by a failed peer");
+            }
+            g = self.item.wait(g).unwrap();
+        }
+    }
+
+    pub fn close(&self) {
+        let mut g = self.q.lock().unwrap();
+        g.closed = true;
+        self.space.notify_all();
+        self.item.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounded_queue_fifo_within_capacity() {
+        let q = BoundedQueue::new(4);
+        for i in 0..4 {
+            q.push(i);
+        }
+        for i in 0..4 {
+            assert_eq!(q.pop(), i);
+        }
+    }
+
+    #[test]
+    fn closed_queue_unblocks_both_sides() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(2);
+        q.push(1);
+        q.close();
+        // Push after close is a no-op; the buffered item still drains.
+        q.push(2);
+        assert_eq!(q.pop(), 1);
+        // A further pop must fail loudly, not block forever.
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| q.pop()));
+        assert!(res.is_err());
+    }
+}

@@ -1,0 +1,164 @@
+//! [`ShutdownQueue`]: a drain-on-shutdown MPSC work queue (extracted
+//! from `serve/daemon.rs`, where it carries admitted jobs from the
+//! per-connection reader threads to the single batcher thread).
+//!
+//! The extraction also fixes a real missed-wakeup window the original
+//! had: the shutdown flag was a standalone `AtomicBool` *outside* the
+//! queue mutex, stored + notified without holding the lock. The batcher
+//! checked the flag between `lock` and `wait`; a shutdown landing in
+//! that window notified an empty wait set and was lost, leaving the
+//! batcher parked forever (and `run_server`'s `join` hung — only a
+//! belt-and-braces re-notify on the accept path masked it). With the
+//! flag inside the mutex, `shutdown()` can only run before the check
+//! (the waiter sees it) or after the park (condvar wait releases the
+//! lock atomically, so the waiter is in the wait set and gets the
+//! notification). `tests/loom_sync.rs` model-checks both the fixed
+//! queue and the original buggy shape — the checker finds the deadlock
+//! in the latter on an exhaustive schedule search.
+
+use crate::util::sync::{Condvar, Mutex};
+use std::collections::VecDeque;
+
+/// Admission verdict of one [`ShutdownQueue::offer`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    /// Queued; the consumer will process it.
+    Admitted,
+    /// Queue at `max_queue` — caller should shed the work.
+    Overloaded,
+    /// Shutdown already flagged — no new work.
+    ShuttingDown,
+}
+
+struct ServiceState<T> {
+    q: VecDeque<T>,
+    /// Inside the mutex by design — see the module docs.
+    shutdown: bool,
+}
+
+/// Bounded MPSC admission queue with drain-then-stop shutdown: producers
+/// [`offer`](ShutdownQueue::offer) under an admission limit, the single
+/// consumer [`drain`](ShutdownQueue::drain)s batches, and
+/// [`shutdown`](ShutdownQueue::shutdown) lets admitted work complete
+/// before the consumer sees `None`.
+pub struct ShutdownQueue<T> {
+    state: Mutex<ServiceState<T>>,
+    cv: Condvar,
+}
+
+impl<T> Default for ShutdownQueue<T> {
+    fn default() -> Self {
+        ShutdownQueue::new()
+    }
+}
+
+impl<T> ShutdownQueue<T> {
+    pub fn new() -> ShutdownQueue<T> {
+        ShutdownQueue {
+            state: Mutex::new(ServiceState {
+                q: VecDeque::new(),
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Try to enqueue `item`; rejected when shutting down or when the
+    /// queue already holds `max_queue` items. The shutdown / depth check
+    /// and the push are one atomic step.
+    pub fn offer(&self, item: T, max_queue: usize) -> Admission {
+        let mut s = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        if s.shutdown {
+            return Admission::ShuttingDown;
+        }
+        if s.q.len() >= max_queue {
+            return Admission::Overloaded;
+        }
+        s.q.push_back(item);
+        self.cv.notify_one();
+        Admission::Admitted
+    }
+
+    /// Block until work is available, then drain up to `max` items.
+    /// Returns `None` exactly once the queue is empty *and* shutdown is
+    /// flagged — admitted work always completes first.
+    pub fn drain(&self, max: usize) -> Option<Vec<T>> {
+        let mut s = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        loop {
+            if !s.q.is_empty() {
+                let take = s.q.len().min(max.max(1));
+                return Some(s.q.drain(..take).collect());
+            }
+            if s.shutdown {
+                return None;
+            }
+            s = self.cv.wait(s).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
+    /// Flag shutdown and wake the consumer. Idempotent. Taking the queue
+    /// lock here is what closes the missed-wakeup window (module docs).
+    pub fn shutdown(&self) {
+        let mut s = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        s.shutdown = true;
+        self.cv.notify_all();
+    }
+
+    pub fn is_shutdown(&self) -> bool {
+        self.state
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .shutdown
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admission_limit_and_fifo_drain() {
+        let q = ShutdownQueue::new();
+        assert_eq!(q.offer(1, 2), Admission::Admitted);
+        assert_eq!(q.offer(2, 2), Admission::Admitted);
+        assert_eq!(q.offer(3, 2), Admission::Overloaded);
+        assert_eq!(q.drain(10), Some(vec![1, 2]));
+    }
+
+    #[test]
+    fn drain_respects_batch_max() {
+        let q = ShutdownQueue::new();
+        for i in 0..5 {
+            assert_eq!(q.offer(i, 100), Admission::Admitted);
+        }
+        assert_eq!(q.drain(2), Some(vec![0, 1]));
+        assert_eq!(q.drain(0), Some(vec![2]), "batch max has a floor of 1");
+        assert_eq!(q.drain(10), Some(vec![3, 4]));
+    }
+
+    #[test]
+    fn shutdown_drains_admitted_work_then_stops() {
+        let q = ShutdownQueue::new();
+        assert_eq!(q.offer(7, 10), Admission::Admitted);
+        q.shutdown();
+        assert!(q.is_shutdown());
+        assert_eq!(q.offer(8, 10), Admission::ShuttingDown);
+        // Admitted work still completes before the consumer sees None.
+        assert_eq!(q.drain(10), Some(vec![7]));
+        assert_eq!(q.drain(10), None);
+    }
+
+    /// Regression smoke for the missed-wakeup fix (the exhaustive proof
+    /// is the loom model): a consumer parked in `drain` must terminate
+    /// once `shutdown` is called, under a real scheduler too.
+    #[test]
+    fn shutdown_wakes_parked_consumer() {
+        let q = std::sync::Arc::new(ShutdownQueue::<u32>::new());
+        let q2 = q.clone();
+        let consumer = std::thread::spawn(move || q2.drain(4));
+        // Give the consumer a chance to park before the flag flips.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.shutdown();
+        assert_eq!(consumer.join().unwrap(), None);
+    }
+}

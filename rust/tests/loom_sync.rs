@@ -1,0 +1,432 @@
+//! Exhaustive model checks of the `util::sync` primitives, run under the
+//! vendored loom-style checker (`util::sync::model`):
+//!
+//! ```text
+//! RUSTFLAGS="--cfg loom" cargo test --test loom_sync \
+//!     --features failpoints -- --test-threads 1
+//! ```
+//!
+//! Every test wraps a bounded scenario in `model(...)`, which re-runs the
+//! closure under **every** interleaving of the facade operations it
+//! performs (see the model module docs for the execution model and its
+//! documented approximations). The assertions therefore hold for all
+//! schedules, not just the ones an OS scheduler happens to produce; a
+//! deadlock (lost wakeup) on any schedule fails the test with the
+//! decision path that reaches it.
+//!
+//! Scenarios are deliberately small (2-3 threads, a handful of items):
+//! the checker has no partial-order reduction, so the schedule tree grows
+//! with every facade op where more than one thread is runnable, and
+//! `LOOMLITE_MAX_ITERS` fails loudly rather than truncating. Exhaustion
+//! of a small scenario is the point.
+#![cfg(loom)]
+
+use fastn2v::util::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
+use fastn2v::util::sync::barrier::{BarrierWait, PoisonBarrier};
+use fastn2v::util::sync::model::model;
+use fastn2v::util::sync::pipeline::StepPipeline;
+use fastn2v::util::sync::pool::WorkerPool;
+use fastn2v::util::sync::queue::BoundedQueue;
+use fastn2v::util::sync::service::{Admission, ShutdownQueue};
+use fastn2v::util::sync::{thread, Arc, Condvar, Mutex};
+
+// ---------------------------------------------------------------------------
+// BoundedQueue: FIFO and no lost wakeup on either side.
+// ---------------------------------------------------------------------------
+
+/// A producer pushes 0..3 through a capacity-1 queue while the consumer
+/// pops 3 items: every push but the first blocks on the full queue (the
+/// space wakeup must not be lost), every pop may block on the empty one
+/// (the item wakeup must not be lost), and order is FIFO. Any lost
+/// wakeup parks one side forever and is reported as a deadlock.
+#[test]
+fn bounded_queue_fifo_and_no_lost_wakeup() {
+    model(|| {
+        let q = Arc::new(BoundedQueue::new(1));
+        let qp = q.clone();
+        let producer = thread::spawn(move || {
+            for i in 0..3u32 {
+                qp.push(i);
+            }
+        });
+        for want in 0..3u32 {
+            assert_eq!(q.pop(), want, "bounded queue must deliver FIFO");
+        }
+        producer.join().unwrap();
+    });
+}
+
+/// `close()` racing a parked producer: a capacity-1 queue is full, the
+/// producer blocks in `push`, and the main thread closes. The producer
+/// must return (push-after-close is a documented no-op), never park
+/// forever.
+#[test]
+fn bounded_queue_close_releases_blocked_producer() {
+    model(|| {
+        let q = Arc::new(BoundedQueue::new(1));
+        q.push(1u32);
+        let qp = q.clone();
+        let producer = thread::spawn(move || {
+            qp.push(2); // full queue: blocks until close, then no-ops
+        });
+        q.close();
+        producer.join().unwrap();
+        // The buffered item still drains after close.
+        assert_eq!(q.pop(), 1);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// StepPipeline: in-order delivery and window enforcement.
+// ---------------------------------------------------------------------------
+
+/// Two producers race to insert steps 0 and 1 through a depth-1 window;
+/// the consumer takes 0 then 1. The window check means step 1 cannot
+/// even be inserted until step 0 is consumed, whatever the schedule —
+/// and producer B, parked in `await_window`, must be woken by that
+/// consumption (a lost window wakeup deadlocks B against the consumer's
+/// `take(1)`).
+#[test]
+fn step_pipeline_in_order_within_window() {
+    model(|| {
+        let p = Arc::new(StepPipeline::new(1));
+        let pa = p.clone();
+        let pb = p.clone();
+        let a = thread::spawn(move || {
+            assert!(pa.await_window(0), "pipeline closed under producer");
+            pa.insert(0, 0u32);
+        });
+        let b = thread::spawn(move || {
+            assert!(pb.await_window(1), "pipeline closed under producer");
+            pb.insert(1, 10u32);
+        });
+        for s in 0..2u32 {
+            assert_eq!(p.take(s), s * 10, "step {s} out of order");
+        }
+        a.join().unwrap();
+        b.join().unwrap();
+    });
+}
+
+// ---------------------------------------------------------------------------
+// PoisonBarrier: generation counting and poison release.
+// ---------------------------------------------------------------------------
+
+/// Two parties cross a reusable barrier twice. Generation counting must
+/// give exactly one leader per round, and no waiter may cross round 2's
+/// barrier before both finished round 1 — the classic reusable-barrier
+/// bug (a stale generation read letting one thread lap the other) shows
+/// up here as either a double leader or a deadlock.
+#[test]
+fn barrier_generation_counting_two_rounds() {
+    model(|| {
+        let b = Arc::new(PoisonBarrier::new(2));
+        let leaders = Arc::new(AtomicU32::new(0));
+        let b2 = b.clone();
+        let l2 = leaders.clone();
+        let peer = thread::spawn(move || {
+            for _ in 0..2 {
+                match b2.wait() {
+                    BarrierWait::Leader => {
+                        l2.fetch_add(1, Ordering::SeqCst);
+                    }
+                    BarrierWait::Member => {}
+                    BarrierWait::Poisoned => panic!("barrier poisoned"),
+                }
+            }
+        });
+        for round in 0..2u32 {
+            match b.wait() {
+                BarrierWait::Leader => {
+                    leaders.fetch_add(1, Ordering::SeqCst);
+                }
+                BarrierWait::Member => {}
+                BarrierWait::Poisoned => panic!("barrier poisoned"),
+            }
+            // Rounds complete in order: after this thread clears round
+            // `round`, at most rounds 0..=round can have elected leaders.
+            assert!(
+                leaders.load(Ordering::SeqCst) <= round + 1,
+                "a round produced two leaders"
+            );
+        }
+        peer.join().unwrap();
+        assert_eq!(
+            leaders.load(Ordering::SeqCst),
+            2,
+            "each round has exactly one leader"
+        );
+    });
+}
+
+/// Poison racing a waiter: one party waits, the other poisons instead of
+/// arriving. The waiter must drain with `Poisoned` — never `Member`
+/// (nobody completed the round) and never park forever; later waits
+/// observe the poison immediately.
+#[test]
+fn barrier_poison_releases_parked_waiter() {
+    model(|| {
+        let b = Arc::new(PoisonBarrier::new(2));
+        let b2 = b.clone();
+        let waiter = thread::spawn(move || b2.wait());
+        b.poison();
+        assert!(waiter.join().unwrap().poisoned());
+        assert!(b.wait().poisoned());
+    });
+}
+
+// ---------------------------------------------------------------------------
+// WorkerPool: fork-join completeness.
+// ---------------------------------------------------------------------------
+
+/// Fork-join completeness over every schedule of the go/done handshake,
+/// in two bounded scenarios: (a) two workers, one epoch — `run` must
+/// execute the task on *both* workers and return only after both
+/// decrements (no early return on the first `done` notify), then `drop`
+/// must win the shutdown handshake against workers re-parking in
+/// `go.wait`; (b) one worker, two epochs — the worker parked in
+/// `go.wait` after epoch 1 must see epoch 2's publication (a stale
+/// `seen` epoch or lost `go` notify deadlocks the second `run`).
+#[test]
+fn worker_pool_fork_join_completeness() {
+    model(|| {
+        let pool = WorkerPool::new(2);
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h = hits.clone();
+        pool.run(&move |_t| {
+            h.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(
+            hits.load(Ordering::SeqCst),
+            2,
+            "run returned before both workers executed the epoch"
+        );
+        // Drop joins the workers through the shutdown handshake; a lost
+        // shutdown wakeup would deadlock here.
+    });
+    model(|| {
+        let pool = WorkerPool::new(1);
+        for epoch in 1..=2usize {
+            let hits = Arc::new(AtomicUsize::new(0));
+            let h = hits.clone();
+            pool.run(&move |_t| {
+                h.fetch_add(1, Ordering::SeqCst);
+            });
+            assert_eq!(
+                hits.load(Ordering::SeqCst),
+                1,
+                "epoch {epoch} not dispatched exactly once"
+            );
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// ShutdownQueue: drain-then-stop shutdown with no missed wakeup.
+// ---------------------------------------------------------------------------
+
+/// The serve-daemon topology in miniature: a consumer drains until
+/// `None`, while the main thread offers one job and then flags shutdown.
+/// Across every interleaving the consumer must observe the admitted job
+/// and then terminate — the exact property the original daemon code
+/// (shutdown flag outside the queue mutex) violated.
+#[test]
+fn shutdown_queue_drains_then_stops_no_lost_wakeup() {
+    model(|| {
+        let q = Arc::new(ShutdownQueue::<u32>::new());
+        let qc = q.clone();
+        let consumer = thread::spawn(move || {
+            let mut got = Vec::new();
+            while let Some(batch) = qc.drain(4) {
+                got.extend(batch);
+            }
+            got
+        });
+        assert_eq!(q.offer(7, 4), Admission::Admitted);
+        q.shutdown();
+        assert_eq!(q.offer(8, 4), Admission::ShuttingDown);
+        let got = consumer.join().unwrap();
+        assert_eq!(got, vec![7], "admitted work completes before the stop");
+    });
+}
+
+/// Regression demonstration: the *original* daemon shape — shutdown flag
+/// stored and notified **without** the queue mutex — has a schedule
+/// where the store+notify land between the consumer's flag check and its
+/// park, so the wakeup hits an empty wait set and is lost, and the
+/// consumer waits forever. The checker must find that schedule and
+/// report the deadlock; this test asserts `model()` fails. (The fixed
+/// `ShutdownQueue` above passes the same scenario.)
+#[test]
+fn buggy_unlocked_shutdown_flag_is_caught_as_deadlock() {
+    use fastn2v::util::sync::atomic::AtomicBool;
+    use std::collections::VecDeque;
+
+    struct BuggyQueue {
+        q: Mutex<VecDeque<u32>>,
+        cv: Condvar,
+        // The bug under test: shutdown state outside the mutex.
+        shutdown: AtomicBool,
+    }
+
+    let outcome = std::panic::catch_unwind(|| {
+        model(|| {
+            let q = Arc::new(BuggyQueue {
+                q: Mutex::new(VecDeque::new()),
+                cv: Condvar::new(),
+                shutdown: AtomicBool::new(false),
+            });
+            let qc = q.clone();
+            let consumer = thread::spawn(move || {
+                let mut g = qc.q.lock().unwrap();
+                loop {
+                    if g.pop_front().is_some() {
+                        continue;
+                    }
+                    if qc.shutdown.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    // Window: a store+notify landing HERE (after the
+                    // check, before the park) is lost.
+                    g = qc.cv.wait(g).unwrap();
+                }
+            });
+            // The original Shutdown handler: flag + notify, no lock.
+            q.shutdown.store(true, Ordering::SeqCst);
+            q.cv.notify_all();
+            consumer.join().unwrap();
+        });
+    });
+    let err = outcome.expect_err(
+        "the checker failed to find the missed-wakeup schedule in the \
+         unlocked-shutdown-flag queue",
+    );
+    let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+    assert!(
+        msg.contains("deadlock"),
+        "expected a deadlock report, got: {msg}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Failpoints registry: one-shot arm/trigger handshake.
+// ---------------------------------------------------------------------------
+
+/// Two threads hitting `check` race one `arm(site, 0)`: whatever the
+/// schedule, the armed fault fires **at most once** (the hit that fires
+/// also disarms, atomically under the registry mutex) and every check —
+/// firing or not — bumps the hit counter. Two fires would mean the
+/// arm→trigger handshake leaked across the disarm; on schedules where
+/// the arm lands after both checks it legitimately fires zero times, so
+/// the trailing `clear_all` also disposes of the leftover arming.
+#[cfg(feature = "failpoints")]
+#[test]
+fn failpoints_one_shot_arm_fires_at_most_once_under_races() {
+    use fastn2v::util::failpoints;
+    model(|| {
+        // The registry is a process-global; reset it so every explored
+        // schedule starts from the same state (replay determinism).
+        failpoints::clear_all();
+        let fired = Arc::new(AtomicU32::new(0));
+        let f1 = fired.clone();
+        let t1 = thread::spawn(move || {
+            if failpoints::check("sink.flush").is_err() {
+                f1.fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        let f2 = fired.clone();
+        let t2 = thread::spawn(move || {
+            if failpoints::check("sink.flush").is_err() {
+                f2.fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        failpoints::arm("sink.flush", 0);
+        t1.join().unwrap();
+        t2.join().unwrap();
+        let n = fired.load(Ordering::SeqCst);
+        assert!(n <= 1, "one-shot site fired {n} times");
+        assert_eq!(
+            failpoints::hits("sink.flush"),
+            2,
+            "every check records a hit, armed or not"
+        );
+        failpoints::clear_all();
+    });
+}
+
+// ---------------------------------------------------------------------------
+// StreamingFileSink offset accounting (protocol model).
+// ---------------------------------------------------------------------------
+
+/// The sink's checkpoint-truncate discipline, modeled on a two-layer
+/// in-memory "file" (BufWriter buffer + flushed bytes) so the protocol —
+/// not the filesystem — is what gets exhausted: a writer thread appends
+/// whole lines; the checkpointer concurrently snapshots by *flush, then
+/// record the flushed length* in one critical section (exactly
+/// `StreamingFileSink::checkpoint_blob`); restore truncates to the
+/// recorded offset. For every interleaving, the restored file must be a
+/// line-aligned prefix of what was written — the recorded offset can
+/// never exceed durable bytes and never lands mid-line. (The real sink
+/// is driven from one thread at superstep barriers;
+/// `sink_restore_truncates_to_recorded_offset` in session.rs asserts the
+/// same contract against real files.)
+#[test]
+fn sink_offset_accounting_snapshot_is_line_aligned_prefix() {
+    struct FileModel {
+        /// BufWriter-resident bytes, not yet durable.
+        buffered: Vec<u8>,
+        /// Bytes the OS has (what truncate operates on).
+        flushed: Vec<u8>,
+    }
+    impl FileModel {
+        fn flush(&mut self) {
+            let b = std::mem::take(&mut self.buffered);
+            self.flushed.extend_from_slice(&b);
+        }
+    }
+
+    const LINES: [&[u8]; 3] = [b"0\t0 1\n", b"1\t1 2\n", b"2\t2 0\n"];
+
+    model(|| {
+        let file = Arc::new(Mutex::new(FileModel {
+            buffered: Vec::new(),
+            flushed: Vec::new(),
+        }));
+        let fw = file.clone();
+        let writer = thread::spawn(move || {
+            for line in LINES {
+                // on_walk: append to the writer buffer, bump file_bytes.
+                fw.lock().unwrap().buffered.extend_from_slice(line);
+            }
+        });
+        // checkpoint_blob: flush, then record the durable length — one
+        // critical section, racing the writer's appends.
+        let recorded = {
+            let mut f = file.lock().unwrap();
+            f.flush();
+            f.flushed.len()
+        };
+        writer.join().unwrap();
+        // Crash + restore: flush whatever was in flight, then truncate
+        // the durable bytes to the recorded offset (restore_blob's
+        // set_len), discarding post-snapshot work.
+        let restored = {
+            let mut f = file.lock().unwrap();
+            f.flush();
+            f.flushed.truncate(recorded);
+            std::mem::take(&mut f.flushed)
+        };
+        // The snapshot must be a line-aligned prefix: 0..=3 whole lines.
+        let mut expect: Vec<u8> = Vec::new();
+        let mut ok = restored == expect;
+        for line in LINES {
+            expect.extend_from_slice(line);
+            ok = ok || restored == expect;
+        }
+        assert!(
+            ok,
+            "restored bytes are not a line-aligned prefix: {:?}",
+            String::from_utf8_lossy(&restored)
+        );
+    });
+}
