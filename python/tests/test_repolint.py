@@ -267,6 +267,40 @@ def test_undocumented_registered_site_is_flagged(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# R5: robustness-sites
+# ---------------------------------------------------------------------------
+
+def robustness_fixture(tmp_path, with_respawn=True):
+    respawn = (
+        '    Site { name: "coordinator.respawn", kind: SiteKind::Io },\n'
+        if with_respawn
+        else ""
+    )
+    return make_tree(tmp_path, {
+        "rust/src/util/failpoints.rs": (
+            "pub const SITES: &[Site] = &[\n"
+            '    Site { name: "transport.heartbeat", kind: SiteKind::Io },\n'
+            f"{respawn}"
+            "];\n"
+        ),
+    })
+
+
+def test_registered_robustness_sites_pass(tmp_path):
+    root = robustness_fixture(tmp_path)
+    assert repolint.check_robustness_sites(root) == []
+
+
+def test_missing_robustness_site_is_flagged(tmp_path):
+    root = robustness_fixture(tmp_path, with_respawn=False)
+    findings = repolint.check_robustness_sites(root)
+    assert len(findings) == 1
+    assert findings[0].rule == "robustness-sites"
+    assert "coordinator.respawn" in findings[0].message
+    assert findings[0].path == "rust/src/util/failpoints.rs"
+
+
+# ---------------------------------------------------------------------------
 # Helpers and the real tree
 # ---------------------------------------------------------------------------
 

@@ -34,6 +34,12 @@ rustc, no third-party packages):
      every registered site must be documented in the EXPERIMENTS.md
      catalog (the sweep harness's contract).
 
+  R5 robustness-sites
+     The supervision-contract failpoint sites (heartbeat send, fleet
+     respawn) must stay registered in `failpoints::SITES`: the chaos
+     CI job and the recovery sweep arm them by name, so dropping one
+     silently un-tests the failover path it exercises.
+
 Usage:
     python3 python/tools/repolint.py [--root REPO_ROOT]
 
@@ -407,6 +413,33 @@ def check_failpoint_catalog(root: Path) -> list[Finding]:
 
 
 # ---------------------------------------------------------------------------
+# R5: the supervision failpoint sites stay registered
+# ---------------------------------------------------------------------------
+
+# The distributed supervision layer's contract sites. The recovery
+# sweep's exhaustive match and the chaos CI job arm these by name; a
+# site that vanishes from the registry never fires, so its failover
+# path would pass vacuously. Extend this pin when supervision grows a
+# new injection point.
+ROBUSTNESS_SITES = frozenset({"transport.heartbeat", "coordinator.respawn"})
+
+
+def check_robustness_sites(root: Path) -> list[Finding]:
+    sites = registered_sites(root)
+    return [
+        Finding(
+            "rust/src/util/failpoints.rs",
+            0,
+            "robustness-sites",
+            f"supervision failpoint site {name!r} is missing from "
+            "failpoints::SITES — the chaos CI job and the recovery "
+            "sweep arm it by name",
+        )
+        for name in sorted(ROBUSTNESS_SITES - sites)
+    ]
+
+
+# ---------------------------------------------------------------------------
 # Driver
 # ---------------------------------------------------------------------------
 
@@ -415,6 +448,7 @@ ALL_RULES = [
     check_sync_facade,
     check_magic_mirrors,
     check_failpoint_catalog,
+    check_robustness_sites,
 ]
 
 

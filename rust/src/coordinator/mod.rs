@@ -32,17 +32,37 @@
 //!    `WalkSession::resume` works across shard counts and transports) and
 //!    broadcasts the verdict.
 //!
-//! Failure of any shard — a worker panic surfacing as an `Error` frame, a
-//! dead process closing its socket, or a frame timeout — poisons the
-//! coordinator: the remaining shards get an `Abort` decision, the unit
-//! fails with [`EngineError::ShardFailed`], and recovery is a fresh
-//! [`Coordinator`] resuming from the latest checkpoint.
+//! The coordinator is also a **supervisor**. Failure of any shard — a
+//! worker panic surfacing as an `Error` frame, a dead process closing its
+//! socket, a poisoned frame stream (sequence or checksum mismatch), or a
+//! missed liveness deadline — no longer ends the query. Shards pump
+//! `Heartbeat` frames over their connections; the coordinator tracks a
+//! per-shard last-seen clock and, while it is *waiting on* a shard,
+//! enforces [`DistConfig::liveness_timeout`] against it (heartbeats keep a
+//! slow shard alive but deliberately do not reset the useful-frame
+//! [`DistConfig::frame_timeout`], so a wedged-but-alive fleet still
+//! fails over). On failure the coordinator aborts the unit, tears the
+//! whole fleet down, respawns it as a new *generation* (stale frames from
+//! the old fleet carry the old generation tag and are dropped), rehydrates
+//! from the newest FN2VCKP1 checkpoint of the *same unit* when one exists,
+//! and replays. [`DistConfig::restart_budget`] bounds the loop with capped
+//! exponential backoff between attempts; exhausting it surfaces the
+//! original typed [`EngineError::ShardFailed`]. Walks are bit-identical
+//! across any kill/respawn schedule because replay is deterministic
+//! (counter-based RNG) and checkpoints cut on superstep boundaries.
+//!
+//! The deterministic-chaos decorator ([`ChaosTransport`]) wraps every
+//! shard connection when [`DistConfig::chaos`] is set: the coordinator
+//! wraps its writer half of each connection (coordinator → shard) and the
+//! shard wraps its whole connection (shard → coordinator), so each
+//! direction runs one seeded fault schedule. The chaos soak tests drive
+//! kill-and-respawn cycles through exactly this supervision path.
 
 use std::io;
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::PathBuf;
 use std::process::{Child, Command};
-use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use crate::util::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use crate::util::sync::{Arc, Mutex};
 use crate::util::sync::thread::JoinHandle;
@@ -57,8 +77,8 @@ use crate::pregel::checkpoint::{
     self, ByteReader, CheckpointSpec, EncodedPart, EngineSnapshot, Persist,
 };
 use crate::pregel::transport::{
-    decode_walk_delta, encode_walk_delta, ChanTransport, Decision, Frame, FrameKind, ShardReport,
-    UdsTransport, COORD_ID,
+    decode_walk_delta, encode_walk_delta, ChanTransport, ChaosConfig, ChaosTransport, Decision,
+    Frame, FrameKind, ShardReport, UdsTransport, CHAOS_DIR_TO_COORD, CHAOS_DIR_TO_SHARD, COORD_ID,
 };
 use crate::pregel::{
     Engine, EngineError, EngineMetrics, EngineOpts, FrameError, RunResult, SuperstepMetrics,
@@ -69,15 +89,11 @@ use crate::pregel::{
 /// frame headers, and nobody needs more than 64 processes on one box).
 pub const MAX_SHARDS: usize = 64;
 
-/// How long the coordinator waits for *any* shard frame before declaring
-/// the fleet wedged and aborting the unit.
-const FRAME_TIMEOUT: Duration = Duration::from_secs(120);
-
-/// How long spawned shard processes get to connect back.
-const ACCEPT_TIMEOUT: Duration = Duration::from_secs(60);
-
-/// How long shutdown waits for a shard process to exit before killing it.
-const REAP_TIMEOUT: Duration = Duration::from_secs(5);
+/// Environment variable carrying the fleet generation to spawned shard
+/// processes (0 for the first launch, +1 per respawn). Failpoint specs are
+/// generation-scoped so a respawned shard does not deterministically
+/// re-die on the fault that killed its predecessor.
+pub const SHARD_GENERATION_ENV: &str = "FASTN2V_SHARD_GENERATION";
 
 /// Which transport shard connections use (the `--transport` knob).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -126,6 +142,35 @@ pub struct DistConfig {
     /// Extra environment for spawned shard processes (the kill-recovery
     /// tests arm a failpoint in one specific shard this way).
     pub shard_env: Vec<(String, String)>,
+    /// How long the coordinator waits for *any* useful shard frame before
+    /// declaring the fleet wedged and failing the attempt. Heartbeats do
+    /// not reset this clock — a fleet that is alive but making no progress
+    /// still fails over (the `--frame-timeout` knob).
+    pub frame_timeout: Duration,
+    /// How long spawned shard processes get to connect back (the
+    /// `--accept-timeout` knob).
+    pub accept_timeout: Duration,
+    /// How long shutdown waits for a shard process to exit before killing
+    /// it (the `--reap-timeout` knob).
+    pub reap_timeout: Duration,
+    /// Cadence of shard `Heartbeat` frames (the `--heartbeat-ms` knob).
+    pub heartbeat_interval: Duration,
+    /// A shard the coordinator is waiting on that has been silent — no
+    /// frame of *any* kind, heartbeats included — for this long is
+    /// declared dead and the fleet is respawned (the `--liveness-ms`
+    /// knob). Must comfortably exceed `heartbeat_interval`.
+    pub liveness_timeout: Duration,
+    /// Fleet respawns the supervisor attempts per unit before giving up
+    /// with a typed `ShardFailed` (the `--restart-budget` knob; 0 restores
+    /// the pre-supervision fail-fast behavior).
+    pub restart_budget: u32,
+    /// Backoff before the first respawn; doubles per consecutive failure.
+    pub backoff_base: Duration,
+    /// Upper bound on the respawn backoff.
+    pub backoff_cap: Duration,
+    /// Deterministic fault injection on every shard connection (soak
+    /// tests); `None` in production.
+    pub chaos: Option<ChaosConfig>,
 }
 
 impl DistConfig {
@@ -138,6 +183,15 @@ impl DistConfig {
             graph_file: None,
             mmap: false,
             shard_env: Vec::new(),
+            frame_timeout: Duration::from_secs(120),
+            accept_timeout: Duration::from_secs(60),
+            reap_timeout: Duration::from_secs(5),
+            heartbeat_interval: Duration::from_secs(2),
+            liveness_timeout: Duration::from_secs(15),
+            restart_budget: 3,
+            backoff_base: Duration::from_millis(200),
+            backoff_cap: Duration::from_secs(5),
+            chaos: None,
         }
     }
 
@@ -163,6 +217,47 @@ impl DistConfig {
 
     pub fn with_shard_env(mut self, key: impl Into<String>, val: impl Into<String>) -> Self {
         self.shard_env.push((key.into(), val.into()));
+        self
+    }
+
+    pub fn with_frame_timeout(mut self, t: Duration) -> Self {
+        self.frame_timeout = t;
+        self
+    }
+
+    pub fn with_accept_timeout(mut self, t: Duration) -> Self {
+        self.accept_timeout = t;
+        self
+    }
+
+    pub fn with_reap_timeout(mut self, t: Duration) -> Self {
+        self.reap_timeout = t;
+        self
+    }
+
+    pub fn with_heartbeat_interval(mut self, t: Duration) -> Self {
+        self.heartbeat_interval = t;
+        self
+    }
+
+    pub fn with_liveness_timeout(mut self, t: Duration) -> Self {
+        self.liveness_timeout = t;
+        self
+    }
+
+    pub fn with_restart_budget(mut self, budget: u32) -> Self {
+        self.restart_budget = budget;
+        self
+    }
+
+    pub fn with_backoff(mut self, base: Duration, cap: Duration) -> Self {
+        self.backoff_base = base;
+        self.backoff_cap = cap;
+        self
+    }
+
+    pub fn with_chaos(mut self, chaos: ChaosConfig) -> Self {
+        self.chaos = Some(chaos);
         self
     }
 }
@@ -222,6 +317,9 @@ type TransportHalves = (Box<dyn Transport>, Box<dyn Transport>);
 /// engine units (FN-Multi rounds, degradation splits) over the same
 /// fleet; dropping it shuts the fleet down.
 pub struct Coordinator {
+    /// Deployment shape, kept so the supervisor can respawn the fleet.
+    cfg: DistConfig,
+    graph: Arc<Graph>,
     shards: usize,
     wps: usize,
     n: usize,
@@ -229,15 +327,33 @@ pub struct Coordinator {
     /// `graph.resident_bytes()`.
     shares: Vec<u64>,
     writers: Vec<Sender<Frame>>,
-    events: Receiver<(usize, Event)>,
+    events: Receiver<(usize, u64, Event)>,
+    /// Kept so respawned fleets report into the same event queue; events
+    /// carry the generation they were produced under and stale ones are
+    /// dropped in [`Coordinator::next_frame`].
+    event_tx: Sender<(usize, u64, Event)>,
     reader_threads: Vec<JoinHandle<()>>,
     writer_threads: Vec<JoinHandle<()>>,
     serve_threads: Vec<JoinHandle<()>>,
     children: Vec<Child>,
     spilled: Option<PathBuf>,
     socket: Option<PathBuf>,
-    /// First failure; once set every subsequent unit is refused (the
-    /// session recovers by building a fresh coordinator and resuming).
+    /// Rendezvous listener, retained across respawns so a new generation
+    /// of shard processes can dial the same socket.
+    listener: Option<UnixListener>,
+    /// Resolved FN2VGRF2 path shard processes open (set on first UDS
+    /// launch; either `cfg.graph_file` or the spilled temp file).
+    graph_path: Option<PathBuf>,
+    /// Fleet generation: 0 for the launch fleet, +1 per respawn.
+    generation: u64,
+    /// Per-shard last-seen clocks (milliseconds since `epoch`), stored by
+    /// the reader threads on every received frame, heartbeats included.
+    last_seen: Vec<Arc<AtomicU64>>,
+    epoch: Instant,
+    respawns: u64,
+    heartbeat_misses: u64,
+    /// Terminal failure; once set every subsequent unit is refused (the
+    /// restart budget was exhausted or a respawn itself failed).
     failed: Option<String>,
 }
 
@@ -280,42 +396,65 @@ impl Coordinator {
         // Built incrementally so any launch failure drops a half-built
         // coordinator and `Drop` reaps whatever was already started.
         let mut coord = Coordinator {
+            cfg: dist.clone(),
+            graph: Arc::clone(graph),
             shards,
             wps,
             n: graph.num_vertices(),
             shares: shard_shares(graph, part, shards, wps),
             writers: Vec::new(),
             events,
+            event_tx,
             reader_threads: Vec::new(),
             writer_threads: Vec::new(),
             serve_threads: Vec::new(),
             children: Vec::new(),
             spilled: None,
             socket: None,
+            listener: None,
+            graph_path: None,
+            generation: 0,
+            last_seen: Vec::new(),
+            epoch: Instant::now(),
+            respawns: 0,
+            heartbeat_misses: 0,
             failed: None,
         };
         let conns = match dist.transport {
-            TransportKind::InProc => coord.launch_inproc(graph)?,
-            TransportKind::Uds => coord.launch_uds(graph, dist)?,
+            TransportKind::InProc => coord.launch_inproc()?,
+            TransportKind::Uds => {
+                coord.prepare_uds()?;
+                coord.spawn_and_accept()?
+            }
         };
-        coord.handshake(conns, graph.num_arcs() as u64, event_tx)?;
+        coord.handshake(conns)?;
         Ok(coord)
     }
 
     /// Spawn one serve-loop thread per shard over in-process channels.
-    fn launch_inproc(
-        &mut self,
-        graph: &Arc<Graph>,
-    ) -> Result<Vec<Box<dyn Transport>>, EngineError> {
+    /// Callable again after [`Coordinator::teardown_fleet`] to start the
+    /// next generation.
+    fn launch_inproc(&mut self) -> Result<Vec<Box<dyn Transport>>, EngineError> {
         let shards = self.shards;
         let mut conns: Vec<Box<dyn Transport>> = Vec::with_capacity(shards);
         for s in 0..shards {
             let (coord_end, shard_end) = ChanTransport::pair();
-            let g = Arc::clone(graph);
+            let mut shard_conn: Box<dyn Transport> = Box::new(shard_end);
+            if let Some(chaos) = self.cfg.chaos {
+                shard_conn = ChaosTransport::wrap(
+                    shard_conn,
+                    chaos,
+                    s as u8,
+                    CHAOS_DIR_TO_COORD,
+                    self.generation,
+                );
+            }
+            let g = Arc::clone(&self.graph);
+            let heartbeat = self.cfg.heartbeat_interval;
             let handle = crate::util::sync::thread::Builder::new()
                 .name(format!("fn2v-shard-{s}"))
                 .spawn(move || {
-                    let _ = shard_serve(&g, s, shards, Box::new(shard_end));
+                    let _ = shard_serve(&g, s, shards, shard_conn, heartbeat);
                 })
                 .map_err(|e| launch_err(format!("spawn shard thread {s}: {e}")))?;
             self.serve_threads.push(handle);
@@ -324,23 +463,20 @@ impl Coordinator {
         Ok(conns)
     }
 
-    /// Spill the graph if needed, bind the rendezvous socket, spawn one
-    /// `shard-worker` child per shard, and accept their connections.
-    fn launch_uds(
-        &mut self,
-        graph: &Arc<Graph>,
-        dist: &DistConfig,
-    ) -> Result<Vec<Box<dyn Transport>>, EngineError> {
-        let shards = self.shards;
-        let graph_path = match &dist.graph_file {
+    /// One-time UDS setup: spill the graph if needed and bind the
+    /// rendezvous socket. The listener is retained for the coordinator's
+    /// lifetime so respawned generations can dial the same address.
+    fn prepare_uds(&mut self) -> Result<(), EngineError> {
+        let graph_path = match &self.cfg.graph_file {
             Some(p) => p.clone(),
             None => {
-                let p = crate::graph::store::spill_v2_temp(graph, &std::env::temp_dir())
+                let p = crate::graph::store::spill_v2_temp(&self.graph, &std::env::temp_dir())
                     .map_err(|e| launch_err(format!("spill graph for shard processes: {e}")))?;
                 self.spilled = Some(p.clone());
                 p
             }
         };
+        self.graph_path = Some(graph_path);
         static SOCK_SEQ: AtomicU64 = AtomicU64::new(0);
         let sock = std::env::temp_dir().join(format!(
             "fn2v-coord-{}-{}.sock",
@@ -350,11 +486,24 @@ impl Coordinator {
         let _ = std::fs::remove_file(&sock);
         let listener = UnixListener::bind(&sock)
             .map_err(|e| launch_err(format!("bind {}: {e}", sock.display())))?;
-        self.socket = Some(sock.clone());
         listener
             .set_nonblocking(true)
             .map_err(|e| launch_err(format!("rendezvous socket: {e}")))?;
-        let bin = match &dist.shard_binary {
+        self.socket = Some(sock);
+        self.listener = Some(listener);
+        Ok(())
+    }
+
+    /// Spawn one `shard-worker` child per shard (tagged with the current
+    /// generation) and accept their connections on the retained listener.
+    fn spawn_and_accept(&mut self) -> Result<Vec<Box<dyn Transport>>, EngineError> {
+        let shards = self.shards;
+        let sock = self.socket.clone().expect("prepare_uds bound the socket");
+        let graph_path = self
+            .graph_path
+            .clone()
+            .expect("prepare_uds resolved the graph path");
+        let bin = match &self.cfg.shard_binary {
             Some(p) => p.clone(),
             None => std::env::current_exe()
                 .map_err(|e| launch_err(format!("locate shard-worker binary: {e}")))?,
@@ -369,11 +518,17 @@ impl Coordinator {
                 .arg("--shards")
                 .arg(shards.to_string())
                 .arg("--graph-file")
-                .arg(&graph_path);
-            if dist.mmap {
+                .arg(&graph_path)
+                .arg("--heartbeat-ms")
+                .arg(self.cfg.heartbeat_interval.as_millis().to_string());
+            if self.cfg.mmap {
                 cmd.arg("--mmap");
             }
-            for (k, v) in &dist.shard_env {
+            if let Some(chaos) = &self.cfg.chaos {
+                cmd.arg("--chaos").arg(encode_chaos_arg(chaos));
+            }
+            cmd.env(SHARD_GENERATION_ENV, self.generation.to_string());
+            for (k, v) in &self.cfg.shard_env {
                 cmd.env(k, v);
             }
             let child = cmd
@@ -381,7 +536,8 @@ impl Coordinator {
                 .map_err(|e| launch_err(format!("spawn shard {s} ({}): {e}", bin.display())))?;
             self.children.push(child);
         }
-        let deadline = Instant::now() + ACCEPT_TIMEOUT;
+        let deadline = Instant::now() + self.cfg.accept_timeout;
+        let listener = self.listener.as_ref().expect("prepare_uds bound the socket");
         let mut conns: Vec<Box<dyn Transport>> = Vec::with_capacity(shards);
         while conns.len() < shards {
             match listener.accept() {
@@ -415,17 +571,18 @@ impl Coordinator {
 
     /// Receive every shard's `Hello` (connections arrive in arbitrary
     /// order; `src` identifies the shard), validate the graph shape, and
-    /// split each connection into pump threads: a reader that forwards
-    /// `Data` frames straight to the destination shard's write queue and
-    /// surfaces everything else as an [`Event`], and a writer draining an
-    /// unbounded queue (so forwarding never blocks on a slow peer).
-    fn handshake(
-        &mut self,
-        conns: Vec<Box<dyn Transport>>,
-        arcs: u64,
-        event_tx: Sender<(usize, Event)>,
-    ) -> Result<(), EngineError> {
+    /// split each connection into pump threads: a reader that stamps the
+    /// shard's last-seen clock on every frame, swallows `Heartbeat`s,
+    /// forwards `Data` frames straight to the destination shard's write
+    /// queue, and surfaces everything else as a generation-tagged
+    /// [`Event`]; and a writer draining an unbounded queue (so forwarding
+    /// never blocks on a slow peer). When chaos is configured, the writer
+    /// half is wrapped so the coordinator → shard direction runs its own
+    /// seeded fault schedule.
+    fn handshake(&mut self, conns: Vec<Box<dyn Transport>>) -> Result<(), EngineError> {
         let shards = self.shards;
+        let arcs = self.graph.num_arcs() as u64;
+        let generation = self.generation;
         let mut writers = Vec::with_capacity(shards);
         let mut writer_rx = Vec::with_capacity(shards);
         for _ in 0..shards {
@@ -469,53 +626,78 @@ impl Coordinator {
                     .map_err(|e| launch_err(format!("split shard {s} connection: {e}")))?,
             );
         }
+        let now_ms = self.epoch.elapsed().as_millis() as u64;
+        self.last_seen = (0..shards)
+            .map(|_| Arc::new(AtomicU64::new(now_ms)))
+            .collect();
         for (s, half) in halves.into_iter().enumerate() {
             let (mut reader, mut writer) = half.expect("every slot filled by a unique hello");
+            if let Some(chaos) = self.cfg.chaos {
+                writer =
+                    ChaosTransport::wrap(writer, chaos, s as u8, CHAOS_DIR_TO_SHARD, generation);
+            }
             let rx = writer_rx[s].take().expect("one writer queue per shard");
-            let etx = event_tx.clone();
+            let etx = self.event_tx.clone();
             self.writer_threads.push(
                 crate::util::sync::thread::Builder::new()
                     .name(format!("fn2v-wr-{s}"))
                     .spawn(move || {
                         while let Ok(f) = rx.recv() {
                             if let Err(e) = writer.send(&f) {
-                                let _ = etx.send((s, Event::Closed(format!("write failed: {e}"))));
+                                let _ = etx.send((
+                                    s,
+                                    generation,
+                                    Event::Closed(format!("write failed: {e}")),
+                                ));
                                 break;
                             }
                         }
                     })
                     .map_err(|e| launch_err(format!("spawn writer thread: {e}")))?,
             );
-            let etx = event_tx.clone();
+            let etx = self.event_tx.clone();
             let fwd: Vec<Sender<Frame>> = writers.clone();
+            let seen = Arc::clone(&self.last_seen[s]);
+            let epoch = self.epoch;
             self.reader_threads.push(
                 crate::util::sync::thread::Builder::new()
                     .name(format!("fn2v-rd-{s}"))
                     .spawn(move || loop {
                         match reader.recv() {
-                            Ok(f) if f.kind == FrameKind::Data => {
-                                let dst = f.dst as usize;
-                                let ok = dst < fwd.len() && fwd[dst].send(f).is_ok();
-                                if !ok {
-                                    let detail =
-                                        "data frame for unknown or closed shard".to_string();
-                                    let _ = etx.send((s, Event::Closed(detail)));
-                                    break;
-                                }
-                            }
                             Ok(f) => {
-                                if etx.send((s, Event::Frame(f))).is_err() {
+                                seen.store(epoch.elapsed().as_millis() as u64, Ordering::Relaxed);
+                                if f.kind == FrameKind::Heartbeat {
+                                    // Liveness only; never surfaces as an
+                                    // event and never resets frame_timeout.
+                                    continue;
+                                }
+                                if f.kind == FrameKind::Data {
+                                    let dst = f.dst as usize;
+                                    let ok = dst < fwd.len() && fwd[dst].send(f).is_ok();
+                                    if !ok {
+                                        let detail =
+                                            "data frame for unknown or closed shard".to_string();
+                                        let _ = etx.send((s, generation, Event::Closed(detail)));
+                                        break;
+                                    }
+                                } else if etx.send((s, generation, Event::Frame(f))).is_err() {
                                     break;
                                 }
                             }
                             Err(FrameError::Closed) => {
-                                let _ =
-                                    etx.send((s, Event::Closed("connection closed".to_string())));
+                                let _ = etx.send((
+                                    s,
+                                    generation,
+                                    Event::Closed("connection closed".to_string()),
+                                ));
                                 break;
                             }
                             Err(e) => {
-                                let _ =
-                                    etx.send((s, Event::Closed(format!("transport error: {e}"))));
+                                let _ = etx.send((
+                                    s,
+                                    generation,
+                                    Event::Closed(format!("transport error: {e}")),
+                                ));
                                 break;
                             }
                         }
@@ -530,9 +712,17 @@ impl Coordinator {
     /// Run one engine unit across the fleet; the distributed analogue of
     /// one `Engine::run_on` / `run_on_checkpointed` / `run_on_resumed`
     /// call, with identical values, stats, and typed errors.
+    ///
+    /// This is the supervision loop: each attempt runs on the current
+    /// fleet generation; a `ShardFailed` attempt (dead process, poisoned
+    /// stream, liveness miss) is retried within
+    /// [`DistConfig::restart_budget`] after a full-fleet respawn, resuming
+    /// from the newest checkpoint this unit wrote. Coordinator-decided
+    /// verdicts (OOM, superstep cap, checkpoint write failure) are
+    /// deterministic and never retried.
     pub(crate) fn run_unit(
         &mut self,
-        params: UnitParams<'_>,
+        mut params: UnitParams<'_>,
     ) -> Result<(RunResult<FnValue>, WalkStats), EngineError> {
         if let Some(detail) = &self.failed {
             return Err(EngineError::ShardFailed {
@@ -540,9 +730,82 @@ impl Coordinator {
                 detail: detail.clone(),
             });
         }
+        let respawns_at_start = self.respawns;
+        let misses_at_start = self.heartbeat_misses;
+        let io_retries_at_start = crate::util::failpoints::io_retries();
+        let mut resume = params.resume.take();
+        let mut failures = 0u32;
+        loop {
+            match self.run_unit_once(&params, resume.as_ref()) {
+                Ok((mut out, stats)) => {
+                    out.metrics.respawns = self.respawns - respawns_at_start;
+                    out.metrics.heartbeat_misses = self.heartbeat_misses - misses_at_start;
+                    out.metrics.io_retries =
+                        crate::util::failpoints::io_retries().saturating_sub(io_retries_at_start);
+                    return Ok((out, stats));
+                }
+                // The coordinator itself decided these on a healthy fleet;
+                // a retry would reach the identical verdict.
+                Err(
+                    e @ (EngineError::OutOfMemory { .. }
+                    | EngineError::DidNotTerminate { .. }
+                    | EngineError::Checkpoint { .. }
+                    | EngineError::Config { .. }),
+                ) => return Err(e),
+                Err(EngineError::ShardFailed { shard, detail }) => {
+                    if failures >= self.cfg.restart_budget {
+                        self.failed = Some(detail.clone());
+                        return Err(EngineError::ShardFailed { shard, detail });
+                    }
+                    failures += 1;
+                    crate::log_warn!(
+                        "shard {shard} failed ({detail}); respawning fleet \
+                         (attempt {failures}/{})",
+                        self.cfg.restart_budget
+                    );
+                    let backoff = self
+                        .cfg
+                        .backoff_base
+                        .saturating_mul(1u32 << (failures - 1).min(16));
+                    crate::util::sync::thread::sleep(backoff.min(self.cfg.backoff_cap));
+                    // Rehydrate from the newest durable checkpoint *of this
+                    // unit*; a file left by an earlier unit must not hijack
+                    // the resume. With no usable checkpoint the unit
+                    // replays from its original snapshot (or scratch) —
+                    // bit-identical either way.
+                    if let Some(spec) = params.ckpt {
+                        if let Some(c) = checkpoint::latest_valid(
+                            &spec.dir,
+                            params.opts.max_supersteps,
+                            spec.fingerprint,
+                        ) {
+                            if c.meta.unit_seq == spec.meta.unit_seq {
+                                match c.snapshot::<FnProgram>() {
+                                    Ok(s) => resume = Some(s),
+                                    Err(e) => crate::log_warn!(
+                                        "checkpoint rehydration failed ({e}); \
+                                         replaying the unit from its start"
+                                    ),
+                                }
+                            }
+                        }
+                    }
+                    self.relaunch_fleet()?;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// One supervised attempt at a unit on the current fleet generation.
+    fn run_unit_once(
+        &mut self,
+        params: &UnitParams<'_>,
+        resume: Option<&EngineSnapshot<FnProgram>>,
+    ) -> Result<(RunResult<FnValue>, WalkStats), EngineError> {
         let opts = params.opts;
         let ckpt_active = params.ckpt.is_some();
-        let start_superstep = params.resume.as_ref().map_or(0, |s| s.superstep);
+        let start_superstep = resume.map_or(0, |s| s.superstep);
         let spec = UnitSpec {
             cfg: params.cfg,
             opts,
@@ -551,8 +814,14 @@ impl Coordinator {
             er_count: params.er_count,
             seeds: params.seeds.clone(),
             ckpt_active,
-            resume: params.resume.as_ref().map(snapshot_to_wire),
+            resume: resume.map(snapshot_to_wire),
         };
+        // A fresh attempt starts the liveness clocks from "now" so silence
+        // accrued before the broadcast is not charged to the new unit.
+        let now_ms = self.epoch.elapsed().as_millis() as u64;
+        for seen in &self.last_seen {
+            seen.store(now_ms, Ordering::Relaxed);
+        }
         self.broadcast(FrameKind::Run, start_superstep, &encode_run(&spec))?;
 
         let t_run = Instant::now();
@@ -650,6 +919,10 @@ impl Coordinator {
             peak_bytes: peak,
             checkpoints_written,
             checkpoint_secs,
+            // Patched by the supervision wrapper with per-unit deltas.
+            respawns: 0,
+            heartbeat_misses: 0,
+            io_retries: 0,
         };
         Ok((RunResult { values, metrics }, stats))
     }
@@ -658,7 +931,8 @@ impl Coordinator {
     fn collect_barrier(&mut self, superstep: u32) -> Result<Vec<ShardReport>, EngineError> {
         let mut reports: Vec<Option<ShardReport>> = (0..self.shards).map(|_| None).collect();
         while reports.iter().any(|r| r.is_none()) {
-            let (s, frame) = self.next_frame()?;
+            let pending: Vec<bool> = reports.iter().map(|r| r.is_none()).collect();
+            let (s, frame) = self.next_frame(&pending)?;
             if frame.kind != FrameKind::Barrier {
                 let kind = frame.kind;
                 return Err(self.abort(s, format!("unexpected {kind:?} frame at the barrier")));
@@ -694,7 +968,8 @@ impl Coordinator {
     ) -> Result<(), EngineError> {
         let mut parts: Vec<Option<EncodedPart>> = (0..self.shards).map(|_| None).collect();
         while parts.iter().any(|p| p.is_none()) {
-            let (s, frame) = self.next_frame()?;
+            let pending: Vec<bool> = parts.iter().map(|p| p.is_none()).collect();
+            let (s, frame) = self.next_frame(&pending)?;
             if frame.kind != FrameKind::CkptPart {
                 let kind = frame.kind;
                 return Err(self.abort(s, format!("unexpected {kind:?} frame, wanted CkptPart")));
@@ -731,7 +1006,8 @@ impl Coordinator {
         let mut stats = WalkStats::default();
         let mut got = vec![false; self.shards];
         while got.iter().any(|g| !g) {
-            let (s, frame) = self.next_frame()?;
+            let pending: Vec<bool> = got.iter().map(|g| !g).collect();
+            let (s, frame) = self.next_frame(&pending)?;
             if frame.kind != FrameKind::Values {
                 let kind = frame.kind;
                 return Err(self.abort(s, format!("unexpected {kind:?} frame, wanted Values")));
@@ -755,24 +1031,57 @@ impl Coordinator {
         Ok((values, stats))
     }
 
-    /// Next coordinator-bound frame; connection failures and `Error`
-    /// frames become an aborted unit.
-    fn next_frame(&mut self) -> Result<(usize, Frame), EngineError> {
-        match self.events.recv_timeout(FRAME_TIMEOUT) {
-            Ok((s, Event::Frame(f))) => {
-                if f.kind == FrameKind::Error {
-                    let detail = String::from_utf8_lossy(&f.payload).into_owned();
-                    Err(self.abort(s, detail))
-                } else {
-                    Ok((s, f))
+    /// Next coordinator-bound frame; connection failures, `Error` frames,
+    /// and a pending shard missing its liveness deadline become an
+    /// aborted unit (which the supervision loop may then retry). Events
+    /// tagged with an older generation are frames still draining out of a
+    /// torn-down fleet and are dropped. `pending[s]` marks the shards this
+    /// collection phase is still waiting on — only those are held to the
+    /// liveness deadline, because a shard that already reported may be
+    /// blocked sending heartbeats while it waits for the verdict.
+    fn next_frame(&mut self, pending: &[bool]) -> Result<(usize, Frame), EngineError> {
+        let deadline = Instant::now() + self.cfg.frame_timeout;
+        // Poll often enough to catch a liveness miss promptly without
+        // busy-waiting the event queue.
+        let poll = (self.cfg.liveness_timeout / 4)
+            .clamp(Duration::from_millis(5), Duration::from_millis(250));
+        loop {
+            match self.events.recv_timeout(poll) {
+                Ok((_, generation, _)) if generation != self.generation => continue,
+                Ok((s, _, Event::Frame(f))) => {
+                    if f.kind == FrameKind::Error {
+                        let detail = String::from_utf8_lossy(&f.payload).into_owned();
+                        return Err(self.abort(s, detail));
+                    }
+                    return Ok((s, f));
                 }
-            }
-            Ok((s, Event::Closed(detail))) => Err(self.abort(s, detail)),
-            Err(RecvTimeoutError::Timeout) => {
-                Err(self.abort_coord("timed out waiting for shard frames".to_string()))
-            }
-            Err(RecvTimeoutError::Disconnected) => {
-                Err(self.abort_coord("every shard connection is gone".to_string()))
+                Ok((s, _, Event::Closed(detail))) => return Err(self.abort(s, detail)),
+                Err(RecvTimeoutError::Timeout) => {
+                    let now_ms = self.epoch.elapsed().as_millis() as u64;
+                    let limit_ms = self.cfg.liveness_timeout.as_millis() as u64;
+                    for (s, &waiting) in pending.iter().enumerate() {
+                        let silent_ms =
+                            now_ms.saturating_sub(self.last_seen[s].load(Ordering::Relaxed));
+                        if waiting && silent_ms > limit_ms {
+                            self.heartbeat_misses += 1;
+                            return Err(self.abort(
+                                s,
+                                format!(
+                                    "missed liveness deadline: silent for {silent_ms} ms \
+                                     while the coordinator waits on it"
+                                ),
+                            ));
+                        }
+                    }
+                    if Instant::now() >= deadline {
+                        return Err(
+                            self.abort_coord("timed out waiting for shard frames".to_string())
+                        );
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(self.abort_coord("every shard connection is gone".to_string()));
+                }
             }
         }
     }
@@ -831,10 +1140,12 @@ impl Coordinator {
             ));
         }
     }
-}
 
-impl Drop for Coordinator {
-    fn drop(&mut self) {
+    /// Shut the current fleet down: ask every shard to exit, reap child
+    /// processes (killing stragglers after `reap_timeout`), and join every
+    /// pump thread. The rendezvous listener and spilled graph survive so
+    /// [`Coordinator::relaunch_fleet`] can start the next generation.
+    fn teardown_fleet(&mut self) {
         for (s, w) in self.writers.iter().enumerate() {
             let _ = w.send(Frame::new(
                 FrameKind::Shutdown,
@@ -850,7 +1161,7 @@ impl Drop for Coordinator {
         for h in self.serve_threads.drain(..) {
             let _ = h.join();
         }
-        let deadline = Instant::now() + REAP_TIMEOUT;
+        let deadline = Instant::now() + self.cfg.reap_timeout;
         for child in &mut self.children {
             loop {
                 match child.try_wait() {
@@ -873,6 +1184,40 @@ impl Drop for Coordinator {
         for h in self.writer_threads.drain(..) {
             let _ = h.join();
         }
+    }
+
+    /// Tear the fleet down and start a fresh one — the next generation —
+    /// over the same graph and rendezvous socket, re-running the `Hello`
+    /// handshake. The respawn itself is a retryable I/O site
+    /// (`coordinator.respawn`): a transient fault there is absorbed, a
+    /// fatal one fails the unit typed. Any respawn failure is terminal for
+    /// this coordinator — subsequent units are refused.
+    fn relaunch_fleet(&mut self) -> Result<(), EngineError> {
+        if let Err(e) = crate::util::failpoints::retry_io("coordinator.respawn", || Ok(())) {
+            let detail = format!("respawning shard fleet: {e}");
+            self.failed = Some(detail.clone());
+            return Err(launch_err(detail));
+        }
+        self.teardown_fleet();
+        self.failed = None;
+        self.generation += 1;
+        self.respawns += 1;
+        let conns = match self.cfg.transport {
+            TransportKind::InProc => self.launch_inproc(),
+            TransportKind::Uds => self.spawn_and_accept(),
+        };
+        let result = conns.and_then(|c| self.handshake(c));
+        if let Err(e) = &result {
+            self.failed = Some(format!("fleet respawn failed: {e}"));
+        }
+        result
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.teardown_fleet();
+        self.listener = None;
         if let Some(p) = self.socket.take() {
             let _ = std::fs::remove_file(p);
         }
@@ -1282,15 +1627,16 @@ fn decode_values(buf: &[u8]) -> Result<(WalkStats, Vec<(VertexId, Vec<VertexId>)
 // Shard side
 // ---------------------------------------------------------------------------
 
-/// A shard's serve loop: register with a `Hello`, then execute `Run`
-/// units until `Shutdown` (or the coordinator hangs up). Both the
-/// in-process shard threads and the `shard-worker` child processes run
-/// exactly this.
+/// A shard's serve loop: register with a `Hello`, start the heartbeat
+/// pump, then execute `Run` units until `Shutdown` (or the coordinator
+/// hangs up). Both the in-process shard threads and the `shard-worker`
+/// child processes run exactly this.
 pub fn shard_serve(
     graph: &Arc<Graph>,
     shard: usize,
     shards: usize,
     mut conn: Box<dyn Transport>,
+    heartbeat: Duration,
 ) -> Result<(), FrameError> {
     let mut hello = Vec::with_capacity(12);
     put_u32(&mut hello, graph.num_vertices() as u32);
@@ -1302,7 +1648,76 @@ pub fn shard_serve(
         0,
         hello,
     ))?;
-    let conn = Mutex::new(conn);
+    let conn = Arc::new(Mutex::new(conn));
+    let stop = Arc::new(AtomicBool::new(false));
+    let beats = {
+        let conn = Arc::clone(&conn);
+        let stop = Arc::clone(&stop);
+        crate::util::sync::thread::Builder::new()
+            .name(format!("fn2v-hb-{shard}"))
+            .spawn(move || heartbeat_loop(&conn, &stop, shard, heartbeat))
+            .ok()
+    };
+    let result = shard_serve_loop(graph, shard, shards, &conn);
+    stop.store(true, Ordering::Relaxed);
+    if let Some(h) = beats {
+        let _ = h.join();
+    }
+    result
+}
+
+/// Send one `Heartbeat` immediately — so a just-launched (or respawned)
+/// shard proves liveness before its first barrier, and the
+/// `transport.heartbeat` failpoint is exercised deterministically — then
+/// one per `interval` until `stop` is set or a send fails (a dead
+/// connection is the coordinator's problem to notice, not ours to
+/// report). The heartbeat shares the connection mutex with the unit
+/// leader, so beats pause exactly while the shard is itself blocked
+/// receiving a verdict — at which point the coordinator already holds
+/// this shard's report and is not waiting on it.
+fn heartbeat_loop(
+    conn: &Mutex<Box<dyn Transport>>,
+    stop: &AtomicBool,
+    shard: usize,
+    interval: Duration,
+) {
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        let sent = crate::util::failpoints::retry_io("transport.heartbeat", || {
+            let mut c = conn.lock().unwrap_or_else(|p| p.into_inner());
+            c.send(&Frame::new(
+                FrameKind::Heartbeat,
+                shard as u8,
+                COORD_ID,
+                0,
+                Vec::new(),
+            ))
+            .map_err(|e| io::Error::other(e.to_string()))
+        });
+        if sent.is_err() {
+            return;
+        }
+        // Sleep in short steps so shutdown never waits a full interval.
+        let mut slept = Duration::ZERO;
+        while slept < interval {
+            if stop.load(Ordering::Relaxed) {
+                return;
+            }
+            let step = Duration::from_millis(25).min(interval - slept);
+            crate::util::sync::thread::sleep(step);
+            slept += step;
+        }
+    }
+}
+
+fn shard_serve_loop(
+    graph: &Arc<Graph>,
+    shard: usize,
+    shards: usize,
+    conn: &Mutex<Box<dyn Transport>>,
+) -> Result<(), FrameError> {
     loop {
         let frame = {
             let mut c = conn.lock().unwrap_or_else(|p| p.into_inner());
@@ -1313,7 +1728,7 @@ pub fn shard_serve(
             }
         };
         match frame.kind {
-            FrameKind::Run => shard_run_unit(graph, shard, shards, &conn, &frame.payload)?,
+            FrameKind::Run => shard_run_unit(graph, shard, shards, conn, &frame.payload)?,
             FrameKind::Shutdown => return Ok(()),
             // Stale frames from an aborted unit (a late decision or data
             // frame already in flight) are dropped; the coordinator
@@ -1381,16 +1796,24 @@ fn shard_run_unit(
                 payload,
             ))
         }
-        // Coordinator-decided stops and aborts: it already holds the
-        // typed error; the shard just goes back to awaiting the next run.
+        // Coordinator-decided stops: it already holds the typed error and
+        // the fleet stays usable for the next unit (degradation splits),
+        // so an `Error` frame here would poison a healthy fleet.
         Err(
             EngineError::OutOfMemory { .. }
             | EngineError::DidNotTerminate { .. }
-            | EngineError::Checkpoint { .. }
-            | EngineError::ShardFailed { .. },
+            | EngineError::Checkpoint { .. },
         ) => Ok(()),
-        // Genuinely local failures (worker panic, bad config): tell the
-        // coordinator so it can abort the unit fleet-wide.
+        // The unit died under this shard: an abort decision, a poisoned
+        // frame stream, an unexpected frame. The coordinator usually knows
+        // already (it decided the abort, or its own reader hit the same
+        // stream fault) — but a shard-local fault such as a corrupted
+        // frame *to* this shard is invisible over there until a liveness
+        // deadline fires, so report it promptly. A duplicate report is
+        // harmless: the supervisor tears the whole generation down and
+        // drops stale events by generation tag.
+        // Genuinely local failures (worker panic, bad config) equally
+        // abort the unit fleet-wide.
         Err(e) => send_error(e.to_string()),
     }
 }
@@ -1403,6 +1826,8 @@ pub fn shard_worker_main(args: &[String]) -> Result<(), String> {
     let mut shards: Option<usize> = None;
     let mut graph_file: Option<PathBuf> = None;
     let mut mmap = false;
+    let mut heartbeat_ms: u64 = 2000;
+    let mut chaos: Option<ChaosConfig> = None;
     let mut it = args.iter();
     while let Some(a) = it.next() {
         match a.as_str() {
@@ -1425,6 +1850,16 @@ pub fn shard_worker_main(args: &[String]) -> Result<(), String> {
                 ));
             }
             "--mmap" => mmap = true,
+            "--heartbeat-ms" => {
+                let v = it.next().ok_or("--heartbeat-ms needs a number")?;
+                heartbeat_ms = v
+                    .parse()
+                    .map_err(|_| format!("bad --heartbeat-ms `{v}`"))?;
+            }
+            "--chaos" => {
+                let v = it.next().ok_or("--chaos needs a spec")?;
+                chaos = Some(parse_chaos_arg(v)?);
+            }
             other => return Err(format!("unknown shard-worker argument `{other}`")),
         }
     }
@@ -1432,7 +1867,13 @@ pub fn shard_worker_main(args: &[String]) -> Result<(), String> {
     let shard = shard.ok_or("shard-worker: missing --shard")?;
     let shards = shards.ok_or("shard-worker: missing --shards")?;
     let graph_file = graph_file.ok_or("shard-worker: missing --graph-file")?;
-    arm_failpoints_from_env(shard)?;
+    let generation: u64 = match std::env::var(SHARD_GENERATION_ENV) {
+        Ok(v) => v
+            .parse()
+            .map_err(|_| format!("bad {SHARD_GENERATION_ENV} `{v}`"))?,
+        Err(_) => 0,
+    };
+    arm_failpoints_from_env(shard, generation)?;
     let opts = if mmap {
         OpenOptions::mapped()
     } else {
@@ -1442,34 +1883,94 @@ pub fn shard_worker_main(args: &[String]) -> Result<(), String> {
         .map_err(|e| format!("open {}: {e}", graph_file.display()))?;
     let stream = UnixStream::connect(&socket)
         .map_err(|e| format!("connect {}: {e}", socket.display()))?;
+    let mut conn: Box<dyn Transport> = Box::new(UdsTransport::new(stream));
+    if let Some(c) = chaos {
+        conn = ChaosTransport::wrap(conn, c, shard as u8, CHAOS_DIR_TO_COORD, generation);
+    }
     shard_serve(
         &Arc::new(graph),
         shard,
         shards,
-        Box::new(UdsTransport::new(stream)),
+        conn,
+        Duration::from_millis(heartbeat_ms),
     )
     .map_err(|e| format!("shard {shard}: {e}"))
 }
 
-/// `FASTN2V_SHARD_FAILPOINT="<shard>:<site>:<nth>"` arms one failpoint in
-/// one specific shard process, with a panic hook that turns the trip into
-/// a hard process death — the kill-recovery tests need a genuinely dead
-/// shard (EOF on its socket), not the engine's caught-panic typed error.
+/// Serialize a [`ChaosConfig`] for the `shard-worker --chaos` flag:
+/// `seed,drop,dup,delay_pm,delay_ms,flip,trunc[,flip_data_nth]`.
+fn encode_chaos_arg(c: &ChaosConfig) -> String {
+    let mut s = format!(
+        "{},{},{},{},{},{},{}",
+        c.seed, c.drop_pm, c.dup_pm, c.delay_pm, c.delay_ms, c.flip_pm, c.trunc_pm
+    );
+    if let Some(nth) = c.flip_data_nth {
+        s.push(',');
+        s.push_str(&nth.to_string());
+    }
+    s
+}
+
+fn parse_chaos_arg(s: &str) -> Result<ChaosConfig, String> {
+    let parts: Vec<&str> = s.split(',').collect();
+    if parts.len() != 7 && parts.len() != 8 {
+        return Err(format!(
+            "bad --chaos `{s}` (want seed,drop,dup,delay_pm,delay_ms,flip,trunc[,nth])"
+        ));
+    }
+    let num = |i: usize| -> Result<u64, String> {
+        parts[i]
+            .parse()
+            .map_err(|_| format!("bad --chaos field `{}`", parts[i]))
+    };
+    let mut cfg = ChaosConfig::new(num(0)?);
+    cfg.drop_pm = num(1)? as u32;
+    cfg.dup_pm = num(2)? as u32;
+    cfg.delay_pm = num(3)? as u32;
+    cfg.delay_ms = num(4)?;
+    cfg.flip_pm = num(5)? as u32;
+    cfg.trunc_pm = num(6)? as u32;
+    if parts.len() == 8 {
+        cfg.flip_data_nth = Some(num(7)?);
+    }
+    Ok(cfg)
+}
+
+/// `FASTN2V_SHARD_FAILPOINT="<shard>:<site>:<nth>[:<gen>]"` arms one
+/// failpoint in one specific shard process, with a panic hook that turns
+/// the trip into a hard process death — the kill-recovery tests need a
+/// genuinely dead shard (EOF on its socket), not the engine's
+/// caught-panic typed error. The optional fourth field scopes the arm to
+/// one fleet generation (default `0`, i.e. only the launch fleet, so the
+/// respawned shard survives its replay); `*` arms every generation (the
+/// budget-exhaustion tests need the shard to keep dying).
 #[cfg(feature = "failpoints")]
-fn arm_failpoints_from_env(shard: usize) -> Result<(), String> {
+fn arm_failpoints_from_env(shard: usize, generation: u64) -> Result<(), String> {
     let Ok(spec) = std::env::var("FASTN2V_SHARD_FAILPOINT") else {
         return Ok(());
     };
     let parts: Vec<&str> = spec.split(':').collect();
-    if parts.len() != 3 {
+    if parts.len() != 3 && parts.len() != 4 {
         return Err(format!(
-            "bad FASTN2V_SHARD_FAILPOINT `{spec}` (want <shard>:<site>:<nth>)"
+            "bad FASTN2V_SHARD_FAILPOINT `{spec}` (want <shard>:<site>:<nth>[:<gen>|:*])"
         ));
     }
     let target: usize = parts[0]
         .parse()
         .map_err(|_| format!("bad failpoint shard `{}`", parts[0]))?;
     if target != shard {
+        return Ok(());
+    }
+    if parts.len() == 4 {
+        if parts[3] != "*" {
+            let g: u64 = parts[3]
+                .parse()
+                .map_err(|_| format!("bad failpoint generation `{}`", parts[3]))?;
+            if g != generation {
+                return Ok(());
+            }
+        }
+    } else if generation != 0 {
         return Ok(());
     }
     let site = crate::util::failpoints::SITES
@@ -1488,7 +1989,7 @@ fn arm_failpoints_from_env(shard: usize) -> Result<(), String> {
 }
 
 #[cfg(not(feature = "failpoints"))]
-fn arm_failpoints_from_env(_shard: usize) -> Result<(), String> {
+fn arm_failpoints_from_env(_shard: usize, _generation: u64) -> Result<(), String> {
     Ok(())
 }
 
@@ -1683,6 +2184,42 @@ mod tests {
         assert_eq!(back.messages[0].0, 3);
         // Wrong graph size is a decode error, not a truncated resume.
         assert!(wire_to_snapshot(&wire, n + 1).is_err());
+    }
+
+    #[test]
+    fn chaos_arg_roundtrips() {
+        let c = ChaosConfig::light(7).with_flip_data_nth(3);
+        assert_eq!(parse_chaos_arg(&encode_chaos_arg(&c)).unwrap(), c);
+        let plain = ChaosConfig::light(9);
+        assert_eq!(parse_chaos_arg(&encode_chaos_arg(&plain)).unwrap(), plain);
+        assert!(parse_chaos_arg("1,2,3").is_err());
+        assert!(parse_chaos_arg("a,2,3,4,5,6,7").is_err());
+    }
+
+    #[test]
+    fn dist_config_supervision_defaults_and_builders() {
+        let d = DistConfig::new(2, 2);
+        assert_eq!(d.frame_timeout, Duration::from_secs(120));
+        assert_eq!(d.accept_timeout, Duration::from_secs(60));
+        assert_eq!(d.reap_timeout, Duration::from_secs(5));
+        assert_eq!(d.heartbeat_interval, Duration::from_secs(2));
+        assert_eq!(d.liveness_timeout, Duration::from_secs(15));
+        assert_eq!(d.restart_budget, 3);
+        assert!(d.chaos.is_none());
+        let d = d
+            .with_frame_timeout(Duration::from_secs(2))
+            .with_heartbeat_interval(Duration::from_millis(50))
+            .with_liveness_timeout(Duration::from_millis(500))
+            .with_restart_budget(0)
+            .with_backoff(Duration::from_millis(1), Duration::from_millis(10))
+            .with_chaos(ChaosConfig::light(1));
+        assert_eq!(d.frame_timeout, Duration::from_secs(2));
+        assert_eq!(d.heartbeat_interval, Duration::from_millis(50));
+        assert_eq!(d.liveness_timeout, Duration::from_millis(500));
+        assert_eq!(d.restart_budget, 0);
+        assert_eq!(d.backoff_base, Duration::from_millis(1));
+        assert_eq!(d.backoff_cap, Duration::from_millis(10));
+        assert_eq!(d.chaos, Some(ChaosConfig::light(1)));
     }
 
     #[test]

@@ -30,6 +30,8 @@ COMMANDS:
                  [--stream-walks <path>] [--graph-file <path>] [--mmap]
                  [--checkpoint-dir <dir>] [--checkpoint-every <k>]
                  [--strict-memory] [--shards <n>] [--transport <inproc|uds>]
+                 [--frame-timeout <s>] [--accept-timeout <s>] [--reap-timeout <s>]
+                 [--heartbeat-ms <ms>] [--liveness-ms <ms>] [--restart-budget <n>]
     walk resume --checkpoint-dir <dir> [same flags as walk]
                                                 restart an interrupted walk
                                                 from its latest checkpoint
@@ -41,6 +43,7 @@ COMMANDS:
     serve --emb <path> [--graph <name>|--graph-file <path>] [--socket <p>]
                  [--index <p>] [--no-index] [--trusted] [--max-queue <n>]
                  [--batch <n>] [--ef <n>] [--hnsw-m <m>] [--hnsw-efc <n>]
+                 [--request-deadline <ms>]
                                                 query daemon over mmap'd
                                                 FN2VEMB1 embeddings (UDS)
     serve query --socket <p> [--nn <v> --k <k>] [--score <u,v>] [--walk <v>]
@@ -99,6 +102,25 @@ COMMON FLAGS:
     --hot-split-cross-shard  allow hot-vertex splitting to recruit workers
                        of other shards (shared-memory only; rejected with
                        an error when --shards > 1)
+    --frame-timeout <s> distributed: max seconds between useful shard
+                       frames before the run fails (default 120)
+    --accept-timeout <s> distributed (uds): max seconds to wait for shard
+                       processes to connect at launch (default 60)
+    --reap-timeout <s> distributed (uds): seconds to wait for a shard
+                       process to exit at shutdown before killing it
+                       (default 5)
+    --heartbeat-ms <ms> distributed: shard heartbeat interval (default
+                       2000). The coordinator declares a shard it is
+                       waiting on dead after --liveness-ms of silence
+                       (default 15000), respawns the fleet from the
+                       latest checkpoint, and retries the unit — up to
+                       --restart-budget times (default 3; 0 restores
+                       fail-fast, i.e. no supervision); see
+                       EXPERIMENTS.md §Robustness
+    --request-deadline <ms> serve: answer admitted queries still queued
+                       after <ms> with a typed deadline-exceeded
+                       rejection instead of a stale result (off when
+                       omitted)
     --train-threads <n> SGNS worker threads for embed/pipeline (default 1
                        = the serial oracle; >1 runs the parallel trainer
                        with a pre-sampling batch pipeline)
@@ -354,6 +376,26 @@ fn cli_inner(raw: Vec<String>) -> Result<(), String> {
                 let mut dist = crate::coordinator::DistConfig::new(shards, workers)
                     .with_transport(transport)
                     .with_mmap(args.has_switch("mmap"));
+                // Supervision knobs: absent flags keep DistConfig's
+                // defaults (the single source of truth for them).
+                if let Some(s) = args.get_opt_parsed::<u64>("frame-timeout")? {
+                    dist = dist.with_frame_timeout(std::time::Duration::from_secs(s));
+                }
+                if let Some(s) = args.get_opt_parsed::<u64>("accept-timeout")? {
+                    dist = dist.with_accept_timeout(std::time::Duration::from_secs(s));
+                }
+                if let Some(s) = args.get_opt_parsed::<u64>("reap-timeout")? {
+                    dist = dist.with_reap_timeout(std::time::Duration::from_secs(s));
+                }
+                if let Some(ms) = args.get_opt_parsed::<u64>("heartbeat-ms")? {
+                    dist = dist.with_heartbeat_interval(std::time::Duration::from_millis(ms));
+                }
+                if let Some(ms) = args.get_opt_parsed::<u64>("liveness-ms")? {
+                    dist = dist.with_liveness_timeout(std::time::Duration::from_millis(ms));
+                }
+                if let Some(n) = args.get_opt_parsed::<u32>("restart-budget")? {
+                    dist = dist.with_restart_budget(n);
+                }
                 // Shard processes reopen the graph themselves; hand them
                 // the user's file directly instead of spilling a copy.
                 if let Some(f) = args.get("graph-file") {
@@ -715,10 +757,18 @@ fn serve_daemon(args: &Args, scale: Scale, seed: u64) -> Result<(), String> {
         batch_max: args.get_parsed("batch", 64)?,
         ef_search,
         drain_delay: None,
+        request_deadline: args
+            .get_opt_parsed::<u64>("request-deadline")?
+            .map(std::time::Duration::from_millis),
     };
     println!(
-        "serving on {socket} (max-queue {}, batch {})",
-        opts.max_queue, opts.batch_max
+        "serving on {socket} (max-queue {}, batch {}{})",
+        opts.max_queue,
+        opts.batch_max,
+        match opts.request_deadline {
+            Some(d) => format!(", deadline {} ms", d.as_millis()),
+            None => String::new(),
+        }
     );
     let core = crate::serve::ServeCore::new(emb, index, walks, ef_search);
     let snap =
@@ -749,8 +799,8 @@ fn fmt_serve_response(resp: &crate::serve::ServeResponse) -> String {
 
 /// `fastn2v serve query`: the scripted client used by CI and smoke tests.
 /// Builds `--count` requests from one of `--nn/--score/--walk`, fans them
-/// over `--concurrency` pipelined connections, and reports ok/overloaded
-/// tallies a script can grep.
+/// over `--concurrency` pipelined connections, and reports
+/// ok/overloaded/expired tallies a script can grep.
 fn serve_query(args: &Args) -> Result<(), String> {
     let socket = args
         .get("socket")
@@ -807,7 +857,8 @@ fn serve_query(args: &Args) -> Result<(), String> {
             chunks[i % conc].push(r);
         }
         let t = std::time::Instant::now();
-        let (mut ok, mut overloaded, mut rejected) = (0usize, 0usize, 0usize);
+        let (mut ok, mut overloaded, mut expired, mut rejected) =
+            (0usize, 0usize, 0usize, 0usize);
         let mut first: Option<crate::serve::ServeResponse> = None;
         crate::util::sync::thread::scope(|s| -> Result<(), String> {
             let handles: Vec<_> = chunks
@@ -822,7 +873,8 @@ fn serve_query(args: &Args) -> Result<(), String> {
                         for r in &chunk {
                             c.send(r).map_err(|e| e.to_string())?;
                         }
-                        let (mut ok, mut over, mut rej) = (0usize, 0usize, 0usize);
+                        let (mut ok, mut over, mut exp, mut rej) =
+                            (0usize, 0usize, 0usize, 0usize);
                         let mut first = None;
                         for _ in 0..chunk.len() {
                             let (_id, res) = c.recv().map_err(|e| e.to_string())?;
@@ -834,18 +886,20 @@ fn serve_query(args: &Args) -> Result<(), String> {
                                     }
                                 }
                                 Err(r) if r.is_overload() => over += 1,
+                                Err(r) if r.is_deadline_exceeded() => exp += 1,
                                 Err(_) => rej += 1,
                             }
                         }
-                        Ok((ok, over, rej, first))
+                        Ok((ok, over, exp, rej, first))
                     })
                 })
                 .collect();
             for h in handles {
-                let (o, ov, rj, f) =
+                let (o, ov, ex, rj, f) =
                     h.join().map_err(|_| "query thread panicked".to_string())??;
                 ok += o;
                 overloaded += ov;
+                expired += ex;
                 rejected += rj;
                 if first.is_none() {
                     first = f;
@@ -858,10 +912,11 @@ fn serve_query(args: &Args) -> Result<(), String> {
             println!("first response: {}", fmt_serve_response(resp));
         }
         println!(
-            "queries: ok={ok} overloaded={overloaded} rejected={rejected} \
-             in {} ({:.0}/s, {conc} conns)",
+            "queries: ok={ok} overloaded={overloaded} expired={expired} \
+             rejected={rejected} in {} ({:.0}/s, {conc} conns, io-retries {})",
             crate::util::fmt_secs(secs),
             total as f64 / secs,
+            crate::util::failpoints::io_retries(),
         );
     }
 

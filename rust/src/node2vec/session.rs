@@ -1143,6 +1143,9 @@ fn deliver_unit(
     merged.wall_secs += out.metrics.wall_secs;
     merged.checkpoints_written += out.metrics.checkpoints_written;
     merged.checkpoint_secs += out.metrics.checkpoint_secs;
+    merged.respawns += out.metrics.respawns;
+    merged.heartbeat_misses += out.metrics.heartbeat_misses;
+    merged.io_retries += out.metrics.io_retries;
     merged.supersteps.extend(out.metrics.supersteps);
 }
 

@@ -732,6 +732,7 @@ impl<'g, P: VertexProgram> Engine<'g, P> {
             "worker plan built for a different graph"
         );
         let t_run = Instant::now();
+        let io_retries_at_start = crate::util::failpoints::io_retries();
         let start_superstep = resume.as_ref().map_or(0, |s| s.superstep);
 
         // In a sharded run only this shard's workers exist as threads, so
@@ -925,6 +926,10 @@ impl<'g, P: VertexProgram> Engine<'g, P> {
                 peak_bytes: shared.peak_bytes.load(Ordering::Relaxed),
                 checkpoints_written,
                 checkpoint_secs,
+                respawns: 0,
+                heartbeat_misses: 0,
+                io_retries: crate::util::failpoints::io_retries()
+                    .saturating_sub(io_retries_at_start),
             },
         })
     }

@@ -74,6 +74,17 @@ pub struct EngineMetrics {
     /// Wall time spent assembling + writing checkpoints (leader-side;
     /// the run pays it inside the checkpoint barriers).
     pub checkpoint_secs: f64,
+    /// Fleet respawns the coordinator performed to complete this run
+    /// (0 for in-process runs and healthy fleets). A nonzero value means
+    /// the run survived shard failures — degraded, not silent.
+    pub respawns: u64,
+    /// Liveness deadlines tripped by a pending shard going silent
+    /// (each one triggered a failure/respawn cycle).
+    pub heartbeat_misses: u64,
+    /// Transient I/O errors absorbed by `retry_io` in this process during
+    /// the run (coordinator-side for distributed runs; shard-process
+    /// retries are counted in their own processes).
+    pub io_retries: u64,
 }
 
 impl EngineMetrics {

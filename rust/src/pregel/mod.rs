@@ -30,7 +30,7 @@ pub use checkpoint::{
 };
 pub use engine::{Ctx, Engine, EngineError, EngineOpts, RunResult, VertexProgram, WorkerPlan};
 pub use metrics::{EngineMetrics, SuperstepMetrics};
-pub use transport::{Frame, FrameError, FrameKind, Transport, WireMsg};
+pub use transport::{ChaosConfig, ChaosTransport, Frame, FrameError, FrameKind, Transport, WireMsg};
 
 /// Messages must report their simulated wire size; the engine charges it to
 /// the per-superstep accounting that reproduces the paper's Figures 4/14.

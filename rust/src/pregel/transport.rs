@@ -22,7 +22,7 @@
 //! | 4      | kind ([`FrameKind`])                          |
 //! | 5      | source shard                                  |
 //! | 6      | destination shard                             |
-//! | 7      | reserved (0)                                  |
+//! | 7      | sequence number (per direction, mod 256)      |
 //! | 8..12  | superstep                                     |
 //! | 12..16 | payload length                                |
 //! | 16..24 | fxhash64 of the payload                       |
@@ -33,6 +33,31 @@
 //! in-process channel transport carries fully *encoded* frames through an
 //! `mpsc` pair, so checksums and decode paths are exercised identically
 //! whether shards are threads or processes.
+//!
+//! # Sequence numbers
+//!
+//! Byte 7 carries a per-connection, per-direction sequence number: the
+//! sender stamps frames 0, 1, 2, … (mod 256) in [`Transport::encode_outgoing`]
+//! and the receiver verifies the counter in `recv`, surfacing a gap or a
+//! replay as a typed [`FrameError::BadSeq`]. The checksum only proves a
+//! frame arrived *intact*; the sequence number proves the *stream* is
+//! intact — a silently dropped or duplicated `Data` frame would otherwise
+//! corrupt walks without tripping any check. The raw codec
+//! ([`encode_frame`] / [`decode_frame`]) is sequence-agnostic (it writes 0
+//! and ignores the byte on parse); stamping and verification live in the
+//! transports, next to the stream state they protect.
+//!
+//! # Chaos injection
+//!
+//! [`ChaosTransport`] decorates any [`Transport`] with a deterministic,
+//! seed-derived schedule of send-side faults — drops, duplicates, delays,
+//! payload/checksum flips, truncations — so every failure mode the static
+//! corrupt-frame matrix covers is also exercised *mid-run* against the
+//! live supervision layer in `coordinator/`. Mutations are applied after
+//! sequence stamping (a dropped frame leaves a hole the receiver can see)
+//! and never touch header bytes 0..16 (a flipped superstep could be
+//! accepted as valid routing and silently corrupt delivery; a flipped
+//! payload or checksum byte is always a typed `BadChecksum`).
 //!
 //! # Wire message entries
 //!
@@ -94,6 +119,8 @@ pub enum FrameKind {
     Error = 9,
     /// Coordinator → shard: exit the serve loop.
     Shutdown = 10,
+    /// Shard → coordinator: periodic liveness beacon (empty payload).
+    Heartbeat = 11,
 }
 
 impl FrameKind {
@@ -109,6 +136,7 @@ impl FrameKind {
             8 => FrameKind::Values,
             9 => FrameKind::Error,
             10 => FrameKind::Shutdown,
+            11 => FrameKind::Heartbeat,
             _ => return None,
         })
     }
@@ -155,6 +183,9 @@ pub enum FrameError {
     Truncated { needed: usize, got: usize },
     /// Payload checksum mismatch.
     BadChecksum { expected: u64, got: u64 },
+    /// Per-direction sequence counter mismatch: a frame was dropped,
+    /// duplicated, or reordered somewhere on the connection.
+    BadSeq { expected: u8, got: u8 },
     /// Underlying I/O failure.
     Io(String),
     /// Peer closed the connection at a frame boundary.
@@ -178,6 +209,10 @@ impl std::fmt::Display for FrameError {
                 f,
                 "frame payload checksum mismatch: header says {expected:#018x}, payload hashes to {got:#018x}"
             ),
+            FrameError::BadSeq { expected, got } => write!(
+                f,
+                "frame sequence mismatch: expected {expected}, got {got} (dropped, duplicated, or reordered frame)"
+            ),
             FrameError::Io(detail) => write!(f, "transport I/O error: {detail}"),
             FrameError::Closed => write!(f, "transport connection closed"),
         }
@@ -186,7 +221,9 @@ impl std::fmt::Display for FrameError {
 
 impl std::error::Error for FrameError {}
 
-/// Encode a frame (header + payload) into a fresh buffer.
+/// Encode a frame (header + payload) into a fresh buffer. The sequence
+/// byte is written as 0; [`Transport::encode_outgoing`] stamps the live
+/// counter on the actual send path.
 pub fn encode_frame(frame: &Frame) -> Vec<u8> {
     let mut out = Vec::with_capacity(FRAME_HEADER_BYTES + frame.payload.len());
     out.extend_from_slice(&FRAME_MAGIC.to_le_bytes());
@@ -252,12 +289,41 @@ pub fn decode_frame(buf: &[u8]) -> Result<Frame, FrameError> {
 
 /// A duplex frame connection. Implementations must preserve send order
 /// (the barrier protocol's correctness argument leans on FIFO delivery).
+///
+/// The send path is split into [`Transport::encode_outgoing`] (encode +
+/// stamp the next tx sequence number) and [`Transport::send_bytes`]
+/// (write pre-encoded bytes), with `send` as their composition. The
+/// split exists for [`ChaosTransport`]: a chaos-dropped frame must still
+/// consume a sequence number so the receiver can detect the hole.
 pub trait Transport: Send {
     fn send(&mut self, frame: &Frame) -> Result<(), FrameError>;
     fn recv(&mut self) -> Result<Frame, FrameError>;
+    /// Encode `frame` and stamp the next outgoing sequence number,
+    /// without sending anything.
+    fn encode_outgoing(&mut self, frame: &Frame) -> Vec<u8>;
+    /// Send bytes produced by [`Transport::encode_outgoing`].
+    fn send_bytes(&mut self, bytes: Vec<u8>) -> Result<(), FrameError>;
     /// Split into independent (reader, writer) halves so the coordinator
-    /// can pump each direction from its own thread.
+    /// can pump each direction from its own thread. The reader half
+    /// inherits the receive sequence counter, the writer half the send
+    /// counter, so the per-direction streams continue unbroken.
     fn split(self: Box<Self>) -> Result<(Box<dyn Transport>, Box<dyn Transport>), FrameError>;
+}
+
+/// Stamp the per-direction sequence counter into header byte 7.
+fn stamp_seq(bytes: &mut [u8], seq: &mut u8) {
+    bytes[7] = *seq;
+    *seq = seq.wrapping_add(1);
+}
+
+/// Verify a received frame's sequence byte against the expected counter.
+fn check_seq(got: u8, seq: &mut u8) -> Result<(), FrameError> {
+    let expected = *seq;
+    *seq = seq.wrapping_add(1);
+    if got != expected {
+        return Err(FrameError::BadSeq { expected, got });
+    }
+    Ok(())
 }
 
 /// In-process transport: an `mpsc` pair carrying fully encoded frames, so
@@ -265,6 +331,8 @@ pub trait Transport: Send {
 pub struct ChanTransport {
     tx: Option<Sender<Vec<u8>>>,
     rx: Option<Receiver<Vec<u8>>>,
+    tx_seq: u8,
+    rx_seq: u8,
 }
 
 impl ChanTransport {
@@ -276,10 +344,14 @@ impl ChanTransport {
             ChanTransport {
                 tx: Some(atx),
                 rx: Some(arx),
+                tx_seq: 0,
+                rx_seq: 0,
             },
             ChanTransport {
                 tx: Some(btx),
                 rx: Some(brx),
+                tx_seq: 0,
+                rx_seq: 0,
             },
         )
     }
@@ -287,10 +359,21 @@ impl ChanTransport {
 
 impl Transport for ChanTransport {
     fn send(&mut self, frame: &Frame) -> Result<(), FrameError> {
+        let bytes = self.encode_outgoing(frame);
+        self.send_bytes(bytes)
+    }
+
+    fn encode_outgoing(&mut self, frame: &Frame) -> Vec<u8> {
+        let mut bytes = encode_frame(frame);
+        stamp_seq(&mut bytes, &mut self.tx_seq);
+        bytes
+    }
+
+    fn send_bytes(&mut self, bytes: Vec<u8>) -> Result<(), FrameError> {
         failpoints::retry_io("transport.write", || failpoints::check("transport.write"))
             .map_err(|e| FrameError::Io(e.to_string()))?;
         let tx = self.tx.as_ref().ok_or(FrameError::Closed)?;
-        tx.send(encode_frame(frame)).map_err(|_| FrameError::Closed)
+        tx.send(bytes).map_err(|_| FrameError::Closed)
     }
 
     fn recv(&mut self) -> Result<Frame, FrameError> {
@@ -298,7 +381,9 @@ impl Transport for ChanTransport {
             .map_err(|e| FrameError::Io(e.to_string()))?;
         let rx = self.rx.as_ref().ok_or(FrameError::Closed)?;
         let bytes = rx.recv().map_err(|_| FrameError::Closed)?;
-        decode_frame(&bytes)
+        let frame = decode_frame(&bytes)?;
+        check_seq(bytes[7], &mut self.rx_seq)?;
+        Ok(frame)
     }
 
     fn split(self: Box<Self>) -> Result<(Box<dyn Transport>, Box<dyn Transport>), FrameError> {
@@ -306,10 +391,14 @@ impl Transport for ChanTransport {
             Box::new(ChanTransport {
                 tx: None,
                 rx: self.rx,
+                tx_seq: 0,
+                rx_seq: self.rx_seq,
             }),
             Box::new(ChanTransport {
                 tx: self.tx,
                 rx: None,
+                tx_seq: self.tx_seq,
+                rx_seq: 0,
             }),
         ))
     }
@@ -321,11 +410,17 @@ impl Transport for ChanTransport {
 /// drives the `transport.read` / `transport.write` sites.
 pub struct UdsTransport {
     stream: UnixStream,
+    tx_seq: u8,
+    rx_seq: u8,
 }
 
 impl UdsTransport {
     pub fn new(stream: UnixStream) -> UdsTransport {
-        UdsTransport { stream }
+        UdsTransport {
+            stream,
+            tx_seq: 0,
+            rx_seq: 0,
+        }
     }
 }
 
@@ -353,7 +448,17 @@ fn read_full(stream: &mut UnixStream, buf: &mut [u8], allow_eof: bool) -> Result
 
 impl Transport for UdsTransport {
     fn send(&mut self, frame: &Frame) -> Result<(), FrameError> {
-        let bytes = encode_frame(frame);
+        let bytes = self.encode_outgoing(frame);
+        self.send_bytes(bytes)
+    }
+
+    fn encode_outgoing(&mut self, frame: &Frame) -> Vec<u8> {
+        let mut bytes = encode_frame(frame);
+        stamp_seq(&mut bytes, &mut self.tx_seq);
+        bytes
+    }
+
+    fn send_bytes(&mut self, bytes: Vec<u8>) -> Result<(), FrameError> {
         failpoints::retry_io("transport.write", || self.stream.write_all(&bytes))
             .map_err(|e| FrameError::Io(e.to_string()))?;
         Ok(())
@@ -371,6 +476,7 @@ impl Transport for UdsTransport {
         if got != expected {
             return Err(FrameError::BadChecksum { expected, got });
         }
+        check_seq(header[7], &mut self.rx_seq)?;
         Ok(Frame {
             kind,
             src,
@@ -380,12 +486,259 @@ impl Transport for UdsTransport {
         })
     }
 
-    fn split(self: Box<Self>) -> Result<(Box<dyn Transport>, Box<dyn Transport>), FrameError> {
+    fn split(mut self: Box<Self>) -> Result<(Box<dyn Transport>, Box<dyn Transport>), FrameError> {
         let clone = self
             .stream
             .try_clone()
             .map_err(|e| FrameError::Io(format!("clone socket: {e}")))?;
-        Ok((Box::new(UdsTransport { stream: clone }), self))
+        let reader = UdsTransport {
+            stream: clone,
+            tx_seq: 0,
+            rx_seq: self.rx_seq,
+        };
+        self.rx_seq = 0;
+        Ok((Box::new(reader), self))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Chaos injection
+// ---------------------------------------------------------------------------
+
+/// Chaos stream salt (distinct from every other RNG stream salt in the
+/// tree so chaos draws can never collide with sampling draws).
+const CHAOS_SALT: u64 = 0xC4A0_5FA7;
+
+/// Direction tag for a coordinator → shard chaos stream.
+pub const CHAOS_DIR_TO_SHARD: u8 = 0;
+/// Direction tag for a shard → coordinator chaos stream.
+pub const CHAOS_DIR_TO_COORD: u8 = 1;
+
+/// A deterministic schedule of send-side transport faults. Rates are
+/// per-mille per eligible frame; the draw for frame `i` on a connection is
+/// a pure function of `(seed, shard, direction, generation, i)`, so a
+/// given config replays the same schedule every run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ChaosConfig {
+    pub seed: u64,
+    /// Per-mille probability that a frame is silently discarded (the
+    /// receiver sees the sequence hole on the next frame).
+    pub drop_pm: u32,
+    /// Per-mille probability that a frame is sent twice (the duplicate
+    /// carries a stale sequence number).
+    pub dup_pm: u32,
+    /// Per-mille probability that a frame is delayed by `delay_ms`.
+    pub delay_pm: u32,
+    /// Per-mille probability that one payload (or, for empty payloads,
+    /// checksum) byte is flipped.
+    pub flip_pm: u32,
+    /// Per-mille probability that the encoded frame is truncated to half
+    /// its length.
+    pub trunc_pm: u32,
+    /// Delay applied by a `delay` event, in milliseconds.
+    pub delay_ms: u64,
+    /// Flip a payload byte of exactly the n-th `Data` frame sent on a
+    /// generation-0 connection: the deterministic single-corruption used
+    /// by the mid-run corrupt-frame test (respawned fleets run clean).
+    pub flip_data_nth: Option<u64>,
+}
+
+impl ChaosConfig {
+    pub fn new(seed: u64) -> ChaosConfig {
+        ChaosConfig {
+            seed,
+            ..ChaosConfig::default()
+        }
+    }
+
+    /// The soak-test preset: every mutation class enabled at rates that
+    /// produce roughly one or two faults per small test run — enough to
+    /// force recovery without starving forward progress.
+    pub fn light(seed: u64) -> ChaosConfig {
+        ChaosConfig {
+            seed,
+            drop_pm: 4,
+            dup_pm: 4,
+            delay_pm: 4,
+            flip_pm: 4,
+            trunc_pm: 2,
+            delay_ms: 2,
+            flip_data_nth: None,
+        }
+    }
+
+    pub fn with_flip_data_nth(mut self, nth: u64) -> ChaosConfig {
+        self.flip_data_nth = Some(nth);
+        self
+    }
+}
+
+/// What chaos does to one outgoing frame.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Mutation {
+    Pass,
+    Drop,
+    Dup,
+    Delay,
+    Flip,
+    Trunc,
+}
+
+/// Seeded fault-injecting decorator over any [`Transport`].
+///
+/// Chaos applies on the *send* side only (wrap both endpoints to cover
+/// both directions) and always after sequence stamping, so a dropped or
+/// duplicated frame is detectable at the receiver as [`FrameError::BadSeq`].
+/// `Hello` and `Shutdown` frames are exempt: the handshake and teardown
+/// paths are supervised by timeouts, not by the respawn loop, and chaos
+/// there would only slow tests down without exercising new recovery code.
+pub struct ChaosTransport {
+    inner: Box<dyn Transport>,
+    cfg: ChaosConfig,
+    shard: u8,
+    dir: u8,
+    generation: u64,
+    /// Frames offered to chaos on this connection (exempt frames count,
+    /// so the schedule is independent of frame-kind mix).
+    sent: u64,
+    /// `Data` frames sent on this connection (for `flip_data_nth`).
+    data_sent: u64,
+}
+
+impl ChaosTransport {
+    /// Wrap `inner` with the chaos stream identified by
+    /// `(shard, dir, generation)` — `dir` is one of
+    /// [`CHAOS_DIR_TO_SHARD`] / [`CHAOS_DIR_TO_COORD`]. Generation feeds
+    /// the schedule so a respawned fleet draws a fresh schedule instead
+    /// of deterministically re-hitting the fault that killed it.
+    pub fn wrap(
+        inner: Box<dyn Transport>,
+        cfg: ChaosConfig,
+        shard: u8,
+        dir: u8,
+        generation: u64,
+    ) -> Box<dyn Transport> {
+        Box::new(ChaosTransport {
+            inner,
+            cfg,
+            shard,
+            dir,
+            generation,
+            sent: 0,
+            data_sent: 0,
+        })
+    }
+
+    fn stream_id(&self) -> u64 {
+        (self.generation << 16) | ((self.dir as u64) << 8) | self.shard as u64
+    }
+
+    fn mutation_for(&self, idx: u64) -> Mutation {
+        let c = &self.cfg;
+        let total = c.drop_pm + c.dup_pm + c.delay_pm + c.flip_pm + c.trunc_pm;
+        if total == 0 {
+            return Mutation::Pass;
+        }
+        let roll =
+            crate::util::rng::stream(c.seed, self.stream_id(), idx, CHAOS_SALT).next_bounded(1000);
+        let roll = roll as u32;
+        if roll < c.drop_pm {
+            Mutation::Drop
+        } else if roll < c.drop_pm + c.dup_pm {
+            Mutation::Dup
+        } else if roll < c.drop_pm + c.dup_pm + c.delay_pm {
+            Mutation::Delay
+        } else if roll < c.drop_pm + c.dup_pm + c.delay_pm + c.flip_pm {
+            Mutation::Flip
+        } else if roll < total {
+            Mutation::Trunc
+        } else {
+            Mutation::Pass
+        }
+    }
+
+    /// Flip one byte in the payload region (or a checksum byte when the
+    /// payload is empty) — never bytes 0..16, where a flip could survive
+    /// validation as plausible routing and corrupt delivery silently.
+    fn flip_byte(&self, bytes: &mut [u8], idx: u64) {
+        let mut draw =
+            crate::util::rng::stream(self.cfg.seed, self.stream_id(), idx, CHAOS_SALT ^ 1);
+        let offset = if bytes.len() > FRAME_HEADER_BYTES {
+            let span = (bytes.len() - FRAME_HEADER_BYTES) as u64;
+            FRAME_HEADER_BYTES + draw.next_bounded(span) as usize
+        } else {
+            16 + draw.next_bounded(8) as usize
+        };
+        bytes[offset] ^= 0x01;
+    }
+}
+
+impl Transport for ChaosTransport {
+    fn send(&mut self, frame: &Frame) -> Result<(), FrameError> {
+        let mut bytes = self.inner.encode_outgoing(frame);
+        let idx = self.sent;
+        self.sent += 1;
+        if matches!(frame.kind, FrameKind::Hello | FrameKind::Shutdown) {
+            return self.inner.send_bytes(bytes);
+        }
+        if frame.kind == FrameKind::Data {
+            let nth = self.data_sent;
+            self.data_sent += 1;
+            if self.generation == 0 && self.cfg.flip_data_nth == Some(nth) {
+                self.flip_byte(&mut bytes, idx);
+                return self.inner.send_bytes(bytes);
+            }
+        }
+        match self.mutation_for(idx) {
+            Mutation::Pass => self.inner.send_bytes(bytes),
+            Mutation::Drop => Ok(()),
+            Mutation::Dup => {
+                self.inner.send_bytes(bytes.clone())?;
+                self.inner.send_bytes(bytes)
+            }
+            Mutation::Delay => {
+                crate::util::sync::thread::sleep(std::time::Duration::from_millis(
+                    self.cfg.delay_ms,
+                ));
+                self.inner.send_bytes(bytes)
+            }
+            Mutation::Flip => {
+                self.flip_byte(&mut bytes, idx);
+                self.inner.send_bytes(bytes)
+            }
+            Mutation::Trunc => {
+                let half = bytes.len() / 2;
+                bytes.truncate(half);
+                self.inner.send_bytes(bytes)
+            }
+        }
+    }
+
+    fn recv(&mut self) -> Result<Frame, FrameError> {
+        self.inner.recv()
+    }
+
+    fn encode_outgoing(&mut self, frame: &Frame) -> Vec<u8> {
+        self.inner.encode_outgoing(frame)
+    }
+
+    fn send_bytes(&mut self, bytes: Vec<u8>) -> Result<(), FrameError> {
+        self.inner.send_bytes(bytes)
+    }
+
+    fn split(self: Box<Self>) -> Result<(Box<dyn Transport>, Box<dyn Transport>), FrameError> {
+        let me = *self;
+        let (reader, writer) = me.inner.split()?;
+        let chaos_writer = ChaosTransport {
+            inner: writer,
+            cfg: me.cfg,
+            shard: me.shard,
+            dir: me.dir,
+            generation: me.generation,
+            sent: me.sent,
+            data_sent: me.data_sent,
+        };
+        Ok((reader, Box::new(chaos_writer)))
     }
 }
 
@@ -832,6 +1185,165 @@ mod tests {
         };
         assert_eq!(ShardReport::decode(&rep.encode()).unwrap(), rep);
         assert!(ShardReport::decode(&rep.encode()[..10]).is_err());
+    }
+
+    #[test]
+    fn sequence_numbers_stamp_and_verify_per_direction() {
+        let (mut a, mut b) = ChanTransport::pair();
+        // Outgoing frames are stamped 0, 1, 2, ...
+        for expect in 0u8..3 {
+            let bytes = a.encode_outgoing(&frame());
+            assert_eq!(bytes[7], expect);
+            a.send_bytes(bytes).unwrap();
+            assert_eq!(b.recv().unwrap(), frame());
+        }
+        // The opposite direction counts independently.
+        let bytes = b.encode_outgoing(&frame());
+        assert_eq!(bytes[7], 0);
+    }
+
+    #[test]
+    fn dropped_frame_surfaces_as_bad_seq() {
+        let (mut a, mut b) = ChanTransport::pair();
+        // Encode (consuming seq 0) but never send: a silent drop.
+        let _lost = a.encode_outgoing(&frame());
+        a.send(&frame()).unwrap();
+        assert_eq!(b.recv(), Err(FrameError::BadSeq { expected: 0, got: 1 }));
+    }
+
+    #[test]
+    fn duplicated_frame_surfaces_as_bad_seq() {
+        let (mut a, mut b) = ChanTransport::pair();
+        let bytes = a.encode_outgoing(&frame());
+        a.send_bytes(bytes.clone()).unwrap();
+        a.send_bytes(bytes).unwrap();
+        assert_eq!(b.recv().unwrap(), frame());
+        assert_eq!(b.recv(), Err(FrameError::BadSeq { expected: 1, got: 0 }));
+    }
+
+    #[test]
+    fn uds_transport_verifies_sequence_numbers() {
+        let (s1, s2) = UnixStream::pair().unwrap();
+        let mut a = UdsTransport::new(s1);
+        let mut b = UdsTransport::new(s2);
+        // A duplicate on the socket: stamp seq 0 twice.
+        let bytes = a.encode_outgoing(&frame());
+        a.send_bytes(bytes.clone()).unwrap();
+        a.send_bytes(bytes).unwrap();
+        assert_eq!(b.recv().unwrap(), frame());
+        assert_eq!(b.recv(), Err(FrameError::BadSeq { expected: 1, got: 0 }));
+    }
+
+    #[test]
+    fn split_halves_continue_the_sequence_streams() {
+        let (mut a, b) = ChanTransport::pair();
+        let mut b: Box<dyn Transport> = Box::new(b);
+        a.send(&frame()).unwrap();
+        assert_eq!(b.recv().unwrap(), frame());
+        let (mut rd, mut wr) = b.split().unwrap();
+        // Writer half continues tx at 0 (b never sent); reader half
+        // expects a's next frame to carry seq 1.
+        a.send(&frame()).unwrap();
+        assert_eq!(rd.recv().unwrap(), frame());
+        wr.send(&frame()).unwrap();
+        assert_eq!(a.recv().unwrap(), frame());
+    }
+
+    #[test]
+    fn heartbeat_kind_roundtrips() {
+        assert_eq!(FrameKind::from_u8(11), Some(FrameKind::Heartbeat));
+        let hb = Frame::new(FrameKind::Heartbeat, 3, COORD_ID, 0, vec![]);
+        assert_eq!(decode_frame(&encode_frame(&hb)).unwrap(), hb);
+    }
+
+    fn chaos_pair(cfg: ChaosConfig) -> (Box<dyn Transport>, ChanTransport) {
+        let (a, b) = ChanTransport::pair();
+        let wrapped = ChaosTransport::wrap(Box::new(a), cfg, 0, CHAOS_DIR_TO_COORD, 0);
+        (wrapped, b)
+    }
+
+    #[test]
+    fn chaos_drop_leaves_a_detectable_sequence_hole() {
+        let mut cfg = ChaosConfig::new(7);
+        cfg.drop_pm = 1000;
+        let (mut a, mut b) = chaos_pair(cfg);
+        a.send(&frame()).unwrap(); // dropped, seq 0 consumed
+        // Hello frames are exempt from chaos and reveal the hole.
+        let hello = Frame::new(FrameKind::Hello, 0, COORD_ID, 0, vec![1]);
+        a.send(&hello).unwrap();
+        assert_eq!(b.recv(), Err(FrameError::BadSeq { expected: 0, got: 1 }));
+    }
+
+    #[test]
+    fn chaos_dup_flip_trunc_and_delay_are_typed_or_benign() {
+        // Duplicate: second copy replays a stale sequence number.
+        let mut cfg = ChaosConfig::new(7);
+        cfg.dup_pm = 1000;
+        let (mut a, mut b) = chaos_pair(cfg);
+        a.send(&frame()).unwrap();
+        assert_eq!(b.recv().unwrap(), frame());
+        assert_eq!(b.recv(), Err(FrameError::BadSeq { expected: 1, got: 0 }));
+
+        // Flip: restricted to payload bytes, always a checksum failure.
+        let mut cfg = ChaosConfig::new(7);
+        cfg.flip_pm = 1000;
+        let (mut a, mut b) = chaos_pair(cfg);
+        a.send(&frame()).unwrap();
+        assert!(matches!(b.recv(), Err(FrameError::BadChecksum { .. })));
+
+        // Truncation: typed, never a panic.
+        let mut cfg = ChaosConfig::new(7);
+        cfg.trunc_pm = 1000;
+        let (mut a, mut b) = chaos_pair(cfg);
+        a.send(&frame()).unwrap();
+        assert!(matches!(b.recv(), Err(FrameError::Truncated { .. })));
+
+        // Delay: benign, the frame still arrives intact and in sequence.
+        let mut cfg = ChaosConfig::new(7);
+        cfg.delay_pm = 1000;
+        cfg.delay_ms = 1;
+        let (mut a, mut b) = chaos_pair(cfg);
+        a.send(&frame()).unwrap();
+        assert_eq!(b.recv().unwrap(), frame());
+    }
+
+    #[test]
+    fn chaos_flip_data_nth_corrupts_exactly_one_data_frame() {
+        let cfg = ChaosConfig::new(7).with_flip_data_nth(1);
+        let (mut a, mut b) = chaos_pair(cfg);
+        a.send(&frame()).unwrap();
+        assert_eq!(b.recv().unwrap(), frame());
+        a.send(&frame()).unwrap(); // the 2nd Data frame: flipped
+        assert!(matches!(b.recv(), Err(FrameError::BadChecksum { .. })));
+        // A frame error poisons the stream: the corrupted frame never
+        // advanced the receive counter, so the connection must be torn
+        // down (which is exactly what the coordinator does).
+        let barrier = Frame::new(FrameKind::Barrier, 0, COORD_ID, 0, vec![2]);
+        a.send(&barrier).unwrap();
+        assert_eq!(b.recv(), Err(FrameError::BadSeq { expected: 1, got: 2 }));
+    }
+
+    #[test]
+    fn chaos_schedule_is_deterministic_per_seed() {
+        let schedule = |seed: u64| -> Vec<Mutation> {
+            let t = ChaosTransport {
+                inner: Box::new(ChanTransport::pair().0),
+                cfg: ChaosConfig::light(seed),
+                shard: 1,
+                dir: CHAOS_DIR_TO_COORD,
+                generation: 0,
+                sent: 0,
+                data_sent: 0,
+            };
+            (0..512).map(|i| t.mutation_for(i)).collect()
+        };
+        assert_eq!(schedule(42), schedule(42));
+        assert_ne!(schedule(42), schedule(43), "seeds share a schedule");
+        // The light preset actually fires within a few hundred frames.
+        assert!(
+            schedule(42).iter().any(|m| *m != Mutation::Pass),
+            "light chaos never fired in 512 frames"
+        );
     }
 
     #[test]

@@ -28,6 +28,13 @@
 //! is also the shutdown discipline). Overload sheds load; it never
 //! collapses the daemon.
 //!
+//! **Request deadlines.** With `--request-deadline` set, an admitted job
+//! that has already waited past the deadline when the batcher picks it
+//! up is answered with a typed `DeadlineExceeded` rejection instead of
+//! a stale result — the same shed-early discipline as overload, applied
+//! to queue *time* instead of queue *depth*. Expired jobs still record
+//! their queue latency, so p50/p99 reflect what clients actually waited.
+//!
 //! **Metrics.** Per query class (nearest / score / walk): served count
 //! and p50/p99 latency from admission to response write, plus rejected
 //! counts and batch-occupancy numbers.
@@ -63,6 +70,9 @@ pub mod reject_code {
     pub const SHUTTING_DOWN: u8 = 4;
     /// Query execution failed server-side.
     pub const INTERNAL: u8 = 5;
+    /// Admitted, but queued past the daemon's `--request-deadline`; the
+    /// answer would be stale, so it is shed instead of computed.
+    pub const DEADLINE_EXCEEDED: u8 = 6;
 }
 
 const OP_NEAREST: u8 = 1;
@@ -153,6 +163,9 @@ pub struct StatsSnapshot {
     pub score: ClassStats,
     pub walk: ClassStats,
     pub rejected: u64,
+    /// Admitted jobs shed at service time because they out-waited the
+    /// request deadline (0 when no deadline is configured).
+    pub expired: u64,
     pub batches: u64,
     pub batched_jobs: u64,
 }
@@ -183,8 +196,9 @@ impl std::fmt::Display for StatsSnapshot {
         }
         write!(
             f,
-            "  rejected {}  batches {}  mean batch {:.2}",
+            "  rejected {}  expired {}  batches {}  mean batch {:.2}",
             self.rejected,
+            self.expired,
             self.batches,
             self.mean_batch()
         )
@@ -233,6 +247,7 @@ impl ServeResponse {
                     out.extend_from_slice(&c.p99_us.to_le_bytes());
                 }
                 out.extend_from_slice(&s.rejected.to_le_bytes());
+                out.extend_from_slice(&s.expired.to_le_bytes());
                 out.extend_from_slice(&s.batches.to_le_bytes());
                 out.extend_from_slice(&s.batched_jobs.to_le_bytes());
             }
@@ -277,6 +292,7 @@ impl ServeResponse {
                     score,
                     walk,
                     rejected: r.u64()?,
+                    expired: r.u64()?,
                     batches: r.u64()?,
                     batched_jobs: r.u64()?,
                 })
@@ -310,6 +326,10 @@ impl ServeRejection {
         self.code == reject_code::OVERLOADED
     }
 
+    pub fn is_deadline_exceeded(&self) -> bool {
+        self.code == reject_code::DEADLINE_EXCEEDED
+    }
+
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(1 + self.message.len());
         out.push(self.code);
@@ -336,6 +356,7 @@ impl std::fmt::Display for ServeRejection {
             reject_code::UNSUPPORTED => "unsupported",
             reject_code::SHUTTING_DOWN => "shutting-down",
             reject_code::INTERNAL => "internal",
+            reject_code::DEADLINE_EXCEEDED => "deadline-exceeded",
             _ => "unknown",
         };
         write!(f, "{name}: {}", self.message)
@@ -471,6 +492,12 @@ struct ClassMetrics {
 impl ClassMetrics {
     fn record(&mut self, us: u64) {
         self.served += 1;
+        self.sample(us);
+    }
+
+    /// Latency sample without a served count — how deadline expiries
+    /// enter the percentiles (clients waited; nothing was answered).
+    fn sample(&mut self, us: u64) {
         if self.lat_us.len() < LATENCY_SAMPLES {
             self.lat_us.push(us);
         } else {
@@ -504,6 +531,7 @@ struct MetricsInner {
     score: ClassMetrics,
     walk: ClassMetrics,
     rejected: u64,
+    expired: u64,
     batches: u64,
     batched_jobs: u64,
 }
@@ -524,6 +552,7 @@ impl MetricsInner {
             score: self.score.snapshot(),
             walk: self.walk.snapshot(),
             rejected: self.rejected,
+            expired: self.expired,
             batches: self.batches,
             batched_jobs: self.batched_jobs,
         }
@@ -547,6 +576,11 @@ pub struct ServeOpts {
     /// Artificial per-batch service delay — a test/bench hook that makes
     /// overload deterministic to provoke. `None` in production.
     pub drain_delay: Option<Duration>,
+    /// Per-request queue deadline (`--request-deadline`, milliseconds on
+    /// the CLI). An admitted job that waited longer than this when the
+    /// batcher reaches it is rejected with
+    /// [`reject_code::DEADLINE_EXCEEDED`] instead of answered.
+    pub request_deadline: Option<Duration>,
 }
 
 impl Default for ServeOpts {
@@ -556,6 +590,7 @@ impl Default for ServeOpts {
             batch_max: 64,
             ef_search: 64,
             drain_delay: None,
+            request_deadline: None,
         }
     }
 }
@@ -775,14 +810,36 @@ fn batcher_loop(shared: &Arc<Shared>) {
             m.batched_jobs += batch.len() as u64;
         }
         for job in batch {
-            let frame = match shared.core.answer(&job.req) {
-                Ok(resp) => response_frame(job.id, &resp),
-                Err(rej) => rejection_frame(job.id, &rej),
+            let queued = job.admitted.elapsed();
+            let expired = shared
+                .opts
+                .request_deadline
+                .is_some_and(|deadline| queued > deadline);
+            let frame = if expired {
+                rejection_frame(
+                    job.id,
+                    &ServeRejection::new(
+                        reject_code::DEADLINE_EXCEEDED,
+                        format!("queued {} ms past admission; retry", queued.as_millis()),
+                    ),
+                )
+            } else {
+                match shared.core.answer(&job.req) {
+                    Ok(resp) => response_frame(job.id, &resp),
+                    Err(rej) => rejection_frame(job.id, &rej),
+                }
             };
             send_on(&job.writer, &frame);
+            // Expired jobs record latency too: the percentiles describe
+            // what clients waited, not just what the daemon computed.
             let us = job.admitted.elapsed().as_micros() as u64;
             let mut m = shared.metrics.lock().unwrap_or_else(|p| p.into_inner());
-            if let Some(c) = m.class_for(&job.req) {
+            if expired {
+                m.expired += 1;
+                if let Some(c) = m.class_for(&job.req) {
+                    c.sample(us);
+                }
+            } else if let Some(c) = m.class_for(&job.req) {
                 c.record(us);
             }
         }
@@ -1036,6 +1093,7 @@ mod tests {
                 p99_us: 90,
             },
             rejected: 3,
+            expired: 4,
             batches: 2,
             batched_jobs: 7,
             ..Default::default()
@@ -1058,6 +1116,10 @@ mod tests {
         assert_eq!(back, rej);
         assert!(back.is_overload());
         assert!(!ServeRejection::new(reject_code::BAD_REQUEST, "x").is_overload());
+        let late = ServeRejection::new(reject_code::DEADLINE_EXCEEDED, "late");
+        assert!(late.is_deadline_exceeded());
+        assert!(!late.is_overload());
+        assert_eq!(late.to_string(), "deadline-exceeded: late");
         assert!(ServeRejection::decode(&[]).is_err());
     }
 

@@ -63,6 +63,14 @@ pub const SITES: &[Site] = &[
     // the Unix-socket transport route through `retry_io` on these).
     Site { name: "transport.read", kind: SiteKind::Io },
     Site { name: "transport.write", kind: SiteKind::Io },
+    // Shard-side heartbeat sends (supervision liveness beacons): a
+    // transient fault is retried like any frame write; a fatal fault
+    // silences the shard and the coordinator's liveness deadline reaps it.
+    Site { name: "transport.heartbeat", kind: SiteKind::Io },
+    // Coordinator fleet respawn: armed faults make a respawn attempt fail,
+    // consuming restart budget — the lever for driving budget exhaustion
+    // to its typed `ShardFailed` terminal state without real processes.
+    Site { name: "coordinator.respawn", kind: SiteKind::Io },
     // FN2VEMB1 embedding store + FN2VIDX1 sidecar: temp-file writes,
     // fsync, atomic rename (`--emb-out` and index persistence share the
     // same atomic-write path, so a crash never leaves a partial file on
@@ -130,6 +138,21 @@ pub fn maybe_panic(site: &'static str) {
 /// Maximum attempts of [`retry_io`] (first try + retries).
 pub const RETRY_ATTEMPTS: u32 = 4;
 
+/// Process-wide count of transient I/O errors absorbed by [`retry_io`]
+/// (each retried attempt counts once). Always compiled in — one relaxed
+/// atomic increment on a path that just ate a syscall failure is free —
+/// so degraded runs are visible in metrics even without the `failpoints`
+/// feature.
+static IO_RETRIES: crate::util::sync::atomic::AtomicU64 =
+    crate::util::sync::atomic::AtomicU64::new(0);
+
+/// Total transient I/O errors retried by [`retry_io`] in this process
+/// since start. Surfaced in `EngineMetrics::io_retries` and the serve
+/// query tally as a visibility counter for silently-degraded runs.
+pub fn io_retries() -> u64 {
+    IO_RETRIES.load(crate::util::sync::atomic::Ordering::Relaxed)
+}
+
 /// Run `op`, retrying transient failures (`Interrupted` — e.g. EINTR —
 /// `WouldBlock`, `TimedOut`) with capped exponential backoff: 1 ms
 /// doubling to a 50 ms cap, [`RETRY_ATTEMPTS`] attempts total. The
@@ -150,6 +173,7 @@ pub fn retry_io<T>(site: &'static str, mut op: impl FnMut() -> io::Result<T>) ->
                         | io::ErrorKind::TimedOut
                 ) =>
             {
+                IO_RETRIES.fetch_add(1, crate::util::sync::atomic::Ordering::Relaxed);
                 if attempt + 1 < RETRY_ATTEMPTS {
                     crate::util::sync::thread::sleep(Duration::from_millis(delay_ms));
                     delay_ms = (delay_ms * 2).min(50);
@@ -283,6 +307,24 @@ mod tests {
         .unwrap();
         assert_eq!(out, 42);
         assert_eq!(calls.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn io_retries_counter_counts_absorbed_transients() {
+        let before = io_retries();
+        let calls = AtomicU32::new(0);
+        let out = retry_io("sink.flush", || {
+            if calls.fetch_add(1, Ordering::SeqCst) < 1 {
+                Err(io::Error::new(io::ErrorKind::Interrupted, "eintr"))
+            } else {
+                Ok(5)
+            }
+        })
+        .unwrap();
+        assert_eq!(out, 5);
+        // `>=`: tests in this binary run concurrently and the counter is
+        // process-wide.
+        assert!(io_retries() >= before + 1);
     }
 
     #[test]

@@ -10,15 +10,22 @@
 //!   OOM, same non-strict degradation to round splitting);
 //! - cross-shard hot splitting is rejected with a typed config error;
 //! - (`--features failpoints`) a shard process killed mid-query is
-//!   detected by the coordinator, and a fresh fleet resumes from the
-//!   latest checkpoint to the same bytes as an uninterrupted run.
+//!   detected by the coordinator, which respawns the fleet and replays
+//!   from the latest checkpoint *without operator action*, to the same
+//!   bytes as an uninterrupted run; a zero restart budget restores the
+//!   pre-supervision fail-fast behavior with a typed `ShardFailed`;
+//! - under a seeded chaos transport (frame drops, duplicates, delays,
+//!   flips, truncations) the supervised run still converges to walks
+//!   bit-identical to the fault-free run, across pinned seeds.
 //!
 //! CI runs this file single-threaded: the UDS tests spawn `fastn2v
 //! shard-worker` child processes and the failpoint registry is
-//! process-global.
+//! process-global. The `chaos_`-prefixed tests are additionally run by
+//! the dedicated `chaos` CI job.
 
 use std::path::PathBuf;
 use std::sync::Arc;
+use std::time::Duration;
 
 use fastn2v::coordinator::{DistConfig, TransportKind};
 use fastn2v::gen::{skew_graph, GenConfig};
@@ -26,7 +33,7 @@ use fastn2v::graph::{write_v2, Graph};
 use fastn2v::node2vec::{
     FnConfig, SamplerKind, Variant, WalkOutput, WalkRequest, WalkSession,
 };
-use fastn2v::pregel::{EngineError, EngineOpts};
+use fastn2v::pregel::{ChaosConfig, EngineError, EngineOpts};
 
 fn test_graph() -> Arc<Graph> {
     Arc::new(skew_graph(&GenConfig::new(384, 10, 29), 3.0))
@@ -291,14 +298,25 @@ fn checkpoints_cross_the_process_model_boundary() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
-/// The kill/resume round trip (`--features failpoints`): shard 1 of a
-/// 2-process UDS fleet aborts at its 4th superstep, the coordinator
-/// surfaces `ShardFailed`, and a fresh fleet *without* the failpoint
-/// resumes from the latest checkpoint to walks bit-identical to an
-/// uninterrupted run.
+/// Fast supervision timings so tests exercise failure paths without
+/// sitting out production-scale timeouts.
+fn fast_supervision(dist: DistConfig) -> DistConfig {
+    dist.with_heartbeat_interval(Duration::from_millis(200))
+        .with_liveness_timeout(Duration::from_millis(1_500))
+        .with_frame_timeout(Duration::from_secs(2))
+        .with_backoff(Duration::from_millis(10), Duration::from_millis(50))
+}
+
+/// The tentpole acceptance (`--features failpoints`): shard 1 of a
+/// 2-process UDS fleet aborts its whole OS process at its 4th superstep.
+/// The coordinator detects the death, respawns the fleet (the failpoint
+/// spec is generation-0-scoped, so the new generation runs clean),
+/// rehydrates from the latest FN2VCKP1 checkpoint, and the run completes
+/// **without operator action** — walks bit-identical to an uninterrupted
+/// run, the respawn visible in the metrics.
 #[cfg(feature = "failpoints")]
 #[test]
-fn killed_shard_process_is_detected_and_resume_completes_bit_identically() {
+fn killed_shard_process_is_respawned_and_the_run_completes_bit_identically() {
     let g = test_graph();
     let dir = tmp_dir("kill");
     let gpath = dir.join("g.fn2v");
@@ -308,47 +326,141 @@ fn killed_shard_process_is_detected_and_resume_completes_bit_identically() {
     let plain = plain_run(&g, cfg, 4, &req);
     let ckpt = fastn2v::node2vec::CheckpointCfg::new(dir.join("ckpt"), 1);
 
-    let uds = |env: bool| {
-        let mut d = DistConfig::new(2, 1)
+    // Shard 1 aborts on the 4th hit of the engine.superstep site — in
+    // generation 0 only (a bare spec defaults to generation 0), so the
+    // respawned fleet completes (see coordinator::shard_worker_main).
+    let dist = fast_supervision(
+        DistConfig::new(2, 1)
             .with_transport(TransportKind::Uds)
             .with_shard_binary(shard_binary())
-            .with_graph_file(gpath.clone());
-        if env {
-            // shard 1 aborts the whole process on the 4th hit of the
-            // engine.superstep site (see coordinator::shard_worker_main).
-            d = d.with_shard_env("FASTN2V_SHARD_FAILPOINT", "1:engine.superstep:3");
-        }
-        d
-    };
-
+            .with_graph_file(gpath.clone())
+            .with_shard_env("FASTN2V_SHARD_FAILPOINT", "1:engine.superstep:3"),
+    );
     let mut sink = fastn2v::node2vec::CollectSink::new(g.num_vertices());
-    let err = WalkSession::builder(g.clone(), cfg)
+    let out = WalkSession::builder(g.clone(), cfg)
         .workers(1)
-        .distributed(uds(true))
+        .distributed(dist)
         .build()
         .run_checkpointed(&req, &mut sink, &ckpt)
-        .expect_err("a killed shard process must fail the query");
+        .expect("supervision must complete the run across the shard kill");
     assert!(
-        matches!(err, EngineError::ShardFailed { .. }),
-        "expected ShardFailed, got {err:?}"
+        out.metrics.respawns >= 1,
+        "the run completed but no respawn was recorded — the failpoint never fired"
     );
-    // The fleet checkpointed at superstep barriers before the crash.
+    // The fleet checkpointed at superstep barriers before the crash, so
+    // the retry resumed mid-unit rather than replaying from scratch.
     assert!(
         dir.join("ckpt").read_dir().unwrap().next().is_some(),
         "no checkpoint survived the crash"
     );
-
-    let mut sink = fastn2v::node2vec::CollectSink::new(g.num_vertices());
-    WalkSession::builder(g.clone(), cfg)
-        .workers(1)
-        .distributed(uds(false))
-        .build()
-        .resume(&req, &mut sink, &ckpt)
-        .expect("resume after a shard kill failed");
     assert_eq!(
         sink.into_walks(),
         plain.walks,
-        "resume after a shard kill diverged from the uninterrupted run"
+        "supervised recovery diverged from the uninterrupted run"
     );
     std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Budget exhaustion (`--features failpoints`): a failpoint armed for
+/// *every* generation (`:*` suffix) kills each respawned fleet too, so a
+/// budget of 1 is spent and the query still fails with the typed
+/// `ShardFailed` the pre-supervision engine produced.
+#[cfg(feature = "failpoints")]
+#[test]
+fn restart_budget_exhaustion_still_fails_typed() {
+    let g = test_graph();
+    let dir = tmp_dir("budget");
+    let gpath = dir.join("g.fn2v");
+    write_v2(&g, &gpath).unwrap();
+    let cfg = base_cfg().with_variant(Variant::Cache);
+    let dist = fast_supervision(
+        DistConfig::new(2, 1)
+            .with_transport(TransportKind::Uds)
+            .with_shard_binary(shard_binary())
+            .with_graph_file(gpath.clone())
+            .with_shard_env("FASTN2V_SHARD_FAILPOINT", "1:engine.superstep:3:*")
+            .with_restart_budget(1),
+    );
+    let err = sharded_run(&g, cfg, dist, &WalkRequest::all())
+        .expect_err("a fleet that dies every generation must exhaust the budget");
+    assert!(
+        matches!(err, EngineError::ShardFailed { .. }),
+        "expected ShardFailed after budget exhaustion, got {err:?}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Satellite: a chaos-injected byte flip on a mid-run Data frame is
+/// caught by the codec (checksum/sequence validation — never silent
+/// corruption), surfaces as a shard failure, and supervision respawns
+/// the fleet to completion: walks bit-identical, the fault visible in
+/// the metrics. With the budget at 0 the same flip is a typed
+/// `ShardFailed`, proving the injected fault actually fired.
+#[test]
+fn chaos_flipped_data_frame_fails_typed_then_supervision_recovers() {
+    let g = test_graph();
+    let cfg = base_cfg().with_variant(Variant::Cache);
+    let req = WalkRequest::all();
+    let plain = plain_run(&g, cfg, 4, &req);
+    // Flip one payload byte of the 6th Data frame on a generation-0
+    // connection; no probabilistic faults (ChaosConfig::new is all-zero
+    // rates), so this is a single deterministic corruption.
+    let chaos = ChaosConfig::new(11).with_flip_data_nth(5);
+
+    // Budget 0 = pre-supervision behavior: the flip is a typed failure.
+    let err = sharded_run(
+        &g,
+        cfg,
+        fast_supervision(DistConfig::new(2, 2).with_chaos(chaos).with_restart_budget(0)),
+        &req,
+    )
+    .expect_err("a corrupted Data frame with no restart budget must fail the query");
+    assert!(
+        matches!(err, EngineError::ShardFailed { .. }),
+        "expected ShardFailed from a flipped Data frame, got {err:?}"
+    );
+
+    // With budget: generation 1 runs clean (flip_data_nth is
+    // generation-0-only) and the walks come out bit-identical.
+    let out = sharded_run(
+        &g,
+        cfg,
+        fast_supervision(DistConfig::new(2, 2).with_chaos(chaos)),
+        &req,
+    )
+    .expect("supervision must recover from a single corrupted frame");
+    assert!(
+        out.metrics.respawns >= 1,
+        "recovered run recorded no respawn — the flip never fired"
+    );
+    assert_eq!(
+        out.walks, plain.walks,
+        "recovery from a corrupted frame changed the walks"
+    );
+}
+
+/// The chaos soak: a seeded fault schedule (drops, duplicates, delays,
+/// flips, truncations at per-mille rates) over the in-process transport,
+/// across 8 pinned seeds. Every run must converge — through however many
+/// respawns the schedule provokes — to walks bit-identical to the
+/// fault-free run. The `chaos_` prefix is the CI job's test filter.
+#[test]
+fn chaos_soak_across_pinned_seeds_stays_bit_identical() {
+    let g = test_graph();
+    let cfg = base_cfg().with_variant(Variant::Cache);
+    let req = WalkRequest::all().with_rounds(2);
+    let plain = plain_run(&g, cfg, 4, &req);
+    for seed in 0..8u64 {
+        let dist = fast_supervision(
+            DistConfig::new(2, 2)
+                .with_chaos(ChaosConfig::light(seed))
+                .with_restart_budget(12),
+        );
+        let out = sharded_run(&g, cfg, dist, &req)
+            .unwrap_or_else(|e| panic!("chaos soak seed {seed} did not converge: {e:?}"));
+        assert_eq!(
+            out.walks, plain.walks,
+            "chaos soak seed {seed} diverged from the fault-free run"
+        );
+    }
 }

@@ -523,6 +523,24 @@ mod fault_injection {
                         .unwrap_or_else(|e| panic!("{} did not recover: {e}", site.name));
                     assert!(!nn.is_empty(), "{} returned no neighbors", site.name);
                 }
+                // Every shard connection fires an immediate first beat
+                // through the heartbeat retry wrapper, so the armed
+                // transient is absorbed before the first barrier.
+                "transport.heartbeat" => {
+                    let out = sharded_streaming_run(&base.join(site.name), 2)
+                        .unwrap_or_else(|e| panic!("{} did not recover: {e}", site.name));
+                    assert_eq!(out, reference, "{} changed the output", site.name);
+                }
+                // The respawn site is only reached after a fleet failure:
+                // pair the armed transient with a one-shot fatal transport
+                // fault so supervision relaunches (crossing the site) and
+                // the next generation runs clean.
+                "coordinator.respawn" => {
+                    arm_fatal("transport.read", 2);
+                    let out = sharded_streaming_run(&base.join(site.name), 2)
+                        .unwrap_or_else(|e| panic!("{} did not recover: {e}", site.name));
+                    assert_eq!(out, reference, "{} changed the output", site.name);
+                }
                 other => panic!("site `{other}` is not covered by this harness"),
             }
             assert!(hits(site.name) > 0, "{} was never exercised", site.name);
@@ -532,14 +550,17 @@ mod fault_injection {
     }
 
     /// A fatal (non-retryable) transport fault fails the fleet as a typed
-    /// `EngineError::ShardFailed` — never a hang or a process abort.
+    /// `EngineError::ShardFailed` — never a hang or a process abort. The
+    /// restart budget is zeroed to restore fail-fast: the failpoint is
+    /// one-shot, so a supervised respawn would otherwise run clean and
+    /// mask the fault.
     #[test]
     fn fatal_transport_fault_fails_the_fleet_typed() {
         clear_all();
         let g = test_graph();
         let s = WalkSession::builder(g.clone(), base_cfg())
             .workers(2)
-            .distributed(fastn2v::coordinator::DistConfig::new(2, 2))
+            .distributed(fastn2v::coordinator::DistConfig::new(2, 2).with_restart_budget(0))
             .build();
         // Skip the two handshake reads; the fault lands mid-query.
         arm_fatal("transport.read", 2);

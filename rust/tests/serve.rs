@@ -296,6 +296,7 @@ fn overload_rejects_typed_and_admitted_queries_complete() {
         // Slow the batcher deterministically so the flood below must
         // overflow the 4-deep queue.
         drain_delay: Some(Duration::from_millis(25)),
+        request_deadline: None,
     };
     let core = ServeCore::new(emb, None, None, 16);
     let sp = sock.clone();
@@ -336,6 +337,72 @@ fn overload_rejects_typed_and_admitted_queries_complete() {
     c.shutdown().unwrap();
     let snap = server.join().unwrap().unwrap();
     assert_eq!(snap.rejected as usize, overloaded);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// With `--request-deadline` set, an admitted job that out-waits the
+/// deadline in the queue is answered with a typed DEADLINE_EXCEEDED
+/// rejection (same discipline as overload), the expiry is counted in the
+/// stats, and the wait still lands in the latency percentiles.
+#[test]
+fn queued_past_deadline_rejects_typed_and_counts_expiries() {
+    let dir = tmp_dir("deadline");
+    let p = dir.join("g.emb");
+    let n = 64usize;
+    let dim = 8usize;
+    let flat: Vec<f32> = (0..n * dim).map(|i| ((i * 37) % 101) as f32 / 101.0).collect();
+    write_emb(&p, &flat, dim, 7).unwrap();
+    let emb = EmbStore::open(&p, &OpenOptions::owned()).unwrap();
+
+    let sock = dir.join("serve.sock");
+    let listener = std::os::unix::net::UnixListener::bind(&sock).unwrap();
+    let opts = ServeOpts {
+        max_queue: 64,
+        batch_max: 4,
+        ef_search: 16,
+        // Every drained batch sleeps 25 ms before answering, so every
+        // admitted job deterministically out-waits the 5 ms deadline.
+        drain_delay: Some(Duration::from_millis(25)),
+        request_deadline: Some(Duration::from_millis(5)),
+    };
+    let core = ServeCore::new(emb, None, None, 16);
+    let sp = sock.clone();
+    let server = std::thread::spawn(move || run_server(listener, &sp, core, opts));
+
+    let (mut c, _) = ServeClient::connect(&sock).unwrap();
+    let total = 12usize;
+    for i in 0..total {
+        c.send(&ServeRequest::Nearest {
+            v: (i % n) as u32,
+            k: 3,
+        })
+        .unwrap();
+    }
+    let mut expired = 0usize;
+    for _ in 0..total {
+        let (_id, res) = c.recv().unwrap();
+        match res {
+            Err(r) if r.is_deadline_exceeded() => expired += 1,
+            other => panic!("expected deadline rejection, got {other:?}"),
+        }
+    }
+    assert_eq!(expired, total);
+
+    let stats = c.stats().unwrap();
+    assert_eq!(stats.expired as usize, expired, "stats: {stats}");
+    // Nothing was answered, so nothing counts as served...
+    assert_eq!(stats.nearest.served, 0);
+    assert_eq!(stats.rejected, 0);
+    // ...but the waits clients actually paid are in the percentiles:
+    // every expired job sat through at least one 25 ms drain delay.
+    assert!(
+        stats.nearest.p99_us >= 5_000,
+        "expiries missing from latency percentiles: {stats}"
+    );
+
+    c.shutdown().unwrap();
+    let snap = server.join().unwrap().unwrap();
+    assert_eq!(snap.expired as usize, expired);
     std::fs::remove_dir_all(&dir).ok();
 }
 
